@@ -1,0 +1,30 @@
+
+use ftblas::blas::level3::{self, GemmParams};
+use ftblas::blas::blocked;
+use ftblas::util::matrix::Matrix;
+use ftblas::util::rng::Rng;
+fn main() {
+    let (m, n) = (768, 768);
+    let mut rng = Rng::new(9);
+    let l = Matrix::random_lower_triangular(m, &mut rng);
+    let b0 = Matrix::random(m, n, &mut rng);
+    let params = GemmParams::default();
+    for panel in [16usize, 32, 48, 64, 96, 128] {
+        let mut best = f64::INFINITY;
+        for _ in 0..6 {
+            let mut b = b0.data.clone();
+            let t0 = std::time::Instant::now();
+            level3::dtrsm_llnn(m, n, &l.data, &mut b, panel, &params);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        println!("tuned panel={panel}: {:.1}ms", best * 1e3);
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..6 {
+        let mut b = b0.data.clone();
+        let t0 = std::time::Instant::now();
+        blocked::dtrsm_llnn(m, n, &l.data, &mut b);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!("blocked(32, scalar diag): {:.1}ms", best * 1e3);
+}

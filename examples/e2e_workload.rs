@@ -1,0 +1,131 @@
+//! END-TO-END DRIVER (DESIGN.md §6): a mixed BLAS workload trace served
+//! by the threaded coordinator — Poisson arrivals over all three BLAS
+//! levels, fault injection at a configurable rate, every response
+//! verified against the oracle, and throughput/latency/FT metrics
+//! reported. This is the run recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example e2e_workload           # native backend
+//! cargo run --release --example e2e_workload -- --pjrt # artifact backend
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::executor::PjrtExecutor;
+use ftblas::coordinator::pjrt_backend::PjrtBackend;
+use ftblas::coordinator::request::{Backend, BlasResult};
+use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::coordinator::server::Server;
+use ftblas::coordinator::trace::{self, TraceConfig};
+use ftblas::ft::injector::InjectorConfig;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::matrix::allclose;
+
+fn main() -> Result<()> {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let profile = Profile::skylake_sim();
+    let requests = 400;
+    let cfg = TraceConfig {
+        requests,
+        vec_len: 65536,
+        mat_dim: 256,
+        rate: 500.0,
+        ..Default::default()
+    };
+    println!("generating a {requests}-request mixed trace (Poisson arrivals, \
+              L1 n={}, L2/L3 n={})", cfg.vec_len, cfg.mat_dim);
+    let entries = trace::generate(&cfg);
+
+    // precompute oracles for verification
+    println!("precomputing oracles...");
+    let oracles: Vec<BlasResult> = entries
+        .iter()
+        .map(|e| {
+            execute_native(&e.request, Impl::Naive, &profile, FtPolicy::None,
+                           None)
+            .result
+        })
+        .collect();
+
+    for policy in [FtPolicy::None, FtPolicy::Hybrid] {
+        let make_router = || -> Result<Router> {
+            if use_pjrt {
+                let dir = profile.artifact_path();
+                let exec = PjrtExecutor::spawn(dir.clone())?;
+                let pjrt = PjrtBackend::new(exec.handle.clone(), &dir)?;
+                pjrt.warmup_all()?;
+                std::mem::forget(exec); // keep the executor thread alive
+                Ok(Router::with_pjrt(profile.clone(), pjrt, Backend::Pjrt))
+            } else {
+                Ok(Router::native_only(profile.clone(), Backend::NativeTuned))
+            }
+        };
+        let injection = policy.protects().then(|| InjectorConfig {
+            count: requests / 4, // ~hundreds of errors/minute at this rate
+            seed: 0xE2E,
+            ..Default::default()
+        });
+        let server = Server::start(make_router()?, policy, profile.workers,
+                                   injection, requests);
+        let handle = server.handle();
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = entries
+            .iter()
+            .map(|e| handle.submit(e.request.clone()))
+            .collect();
+        let mut verified = 0;
+        let mut mismatched = 0;
+        for (rx, want) in rxs.into_iter().zip(&oracles) {
+            let resp = rx.recv()??;
+            if results_match(&resp.result, want) {
+                verified += 1;
+            } else {
+                mismatched += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        println!("\n--- policy={} backend={} ---", policy.name(),
+                 if use_pjrt { "pjrt" } else { "native-tuned" });
+        println!("completed {} requests in {:.2}s  ->  {:.1} req/s",
+                 m.completed, wall, m.completed as f64 / wall);
+        println!("errors: injected={} detected={} corrected={}",
+                 m.errors_injected, m.errors_detected, m.errors_corrected);
+        println!("verification vs oracle: {verified} ok, {mismatched} wrong");
+        let mut routines: Vec<_> = m.e2e_by_routine.iter().collect();
+        routines.sort_by(|a, b| a.0.cmp(b.0));
+        let mut tput: HashMap<&str, f64> = HashMap::new();
+        for (routine, s) in routines {
+            println!("  {:<8} n={:<4} p50={:>8.2}ms p99={:>8.2}ms mean-exec={:>8.2}ms",
+                     routine, s.n, s.p50 * 1e3, s.p99 * 1e3,
+                     m.exec_by_routine[routine].mean * 1e3);
+            tput.insert(routine.as_str(), s.mean);
+        }
+        assert_eq!(mismatched, 0, "corrupted results escaped the server!");
+        if policy.protects() {
+            assert_eq!(m.errors_detected, m.errors_injected,
+                       "every injected fault must be detected");
+        }
+    }
+    println!("\nE2E PASS: all responses bit-verified against the oracle under \
+              both policies");
+    Ok(())
+}
+
+fn results_match(a: &BlasResult, b: &BlasResult) -> bool {
+    match (a, b) {
+        (BlasResult::Scalar(x), BlasResult::Scalar(y)) => {
+            (x - y).abs() <= 1e-7 * (1.0 + y.abs())
+        }
+        (BlasResult::Vector(x), BlasResult::Vector(y)) => {
+            allclose(x, y, 1e-7, 1e-7)
+        }
+        (BlasResult::Matrix(x), BlasResult::Matrix(y)) => {
+            allclose(&x.data, &y.data, 1e-7, 1e-7)
+        }
+        _ => false,
+    }
+}

@@ -1,0 +1,100 @@
+//! Downstream-consumer demo: three solvers built entirely on FT-BLAS —
+//! a blocked Cholesky (dpotrf + triangular solves), a pivoted LU
+//! (dgetrf, driven by IDAMAX/DGER/DTRSM/DGEMM), and a Conjugate
+//! Gradient iteration — run both clean and under fault injection.
+//!
+//! The CG section demonstrates the paper's motivation for iterative
+//! methods: one undetected soft error silently poisons every subsequent
+//! iterate, while the DMR-protected solver converges identically to the
+//! clean run.
+//!
+//! ```bash
+//! cargo run --release --example solver
+//! ```
+
+use anyhow::Result;
+use ftblas::apps::{cg, cholesky, lu};
+use ftblas::blas::{naive, Impl};
+use ftblas::config::Profile;
+use ftblas::coordinator::request::BlasRequest;
+use ftblas::coordinator::router::execute_native;
+use ftblas::ft::injector::Fault;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::matrix::Matrix;
+use ftblas::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let profile = Profile::skylake_sim();
+    let mut rng = Rng::new(31);
+    let n = 512;
+    println!("building a random SPD system A x = b, n = {n}");
+    let a = Matrix::random_spd(n, &mut rng);
+    let b = rng.normal_vec(n);
+
+    // solve through the blocked Cholesky built on FT-BLAS L2/L3
+    let t0 = std::time::Instant::now();
+    let x = cholesky::solve_spd(&a, &b, 64, &profile.gemm)?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    // residual check
+    let mut r = vec![0.0; n];
+    naive::dgemv(n, n, 1.0, &a.data, &x, 0.0, &mut r);
+    let num: f64 = r.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum();
+    let den: f64 = b.iter().map(|v| v * v).sum();
+    let resid = (num / den).sqrt();
+    println!("cholesky solve: {:.1}ms, relative residual {resid:.2e}",
+             secs * 1e3);
+    assert!(resid < 1e-8, "solver lost accuracy");
+
+    // the same factorization's heavy kernel (DTRSM) under fault injection:
+    // downstream apps inherit FT-BLAS's protection transparently
+    let l = cholesky::dpotrf_lower(&a, 64, &profile.gemm)?;
+    let bm = Matrix::random(n, 64, &mut rng);
+    let req = BlasRequest::Dtrsm { a: l.clone(), b: bm.clone() };
+    let clean = execute_native(&req, Impl::Tuned, &profile,
+                               FtPolicy::None, None);
+    let fault = Fault { step: 3, i: 5, j: 17, delta: 1e8 };
+    let ft = execute_native(&req, Impl::Tuned, &profile,
+                            FtPolicy::Hybrid, Some(fault));
+    let diff = ft.result.as_matrix().unwrap()
+        .max_abs_diff(clean.result.as_matrix().unwrap());
+    println!("dtrsm panel solve under a 1e8 injected fault: detected={} \
+              corrected={} | max diff vs clean = {diff:.2e}",
+             ft.ft.errors_detected, ft.ft.errors_corrected);
+    assert!(ft.ft.errors_detected >= 1);
+    assert!(diff < 1e-6, "fault propagated into the solution!");
+    println!("downstream solver is protected end-to-end");
+
+    // ---- pivoted LU on a general (diagonally dominant) system
+    let g = Matrix::random_diag_dominant(n, &mut rng);
+    let t0 = std::time::Instant::now();
+    let xg = lu::solve(&g, &b, 64, &profile.gemm)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let mut r = vec![0.0; n];
+    naive::dgemv(n, n, 1.0, &g.data, &xg, 0.0, &mut r);
+    let num: f64 = r.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum();
+    let resid = (num / den).sqrt();
+    println!("lu solve (partial pivoting): {:.1}ms, relative residual \
+              {resid:.2e}", secs * 1e3);
+    assert!(resid < 1e-9, "lu solver lost accuracy");
+
+    // ---- conjugate gradient: clean vs poisoned vs protected
+    let clean = cg::solve(&a, &b, 1e-10, 4 * n)?;
+    println!("cg clean:      converged in {} iters (residual {:.1e})",
+             clean.iterations, clean.residual);
+    let fault = (1usize, 7usize, 1e8f64);
+    let poisoned = cg::solve_unprotected_faulty(&a, &b, 1e-10,
+                                                clean.iterations, fault)?;
+    println!("cg + 1 soft error, unprotected: converged={} residual {:.1e} \
+              (same iteration budget)", poisoned.converged, poisoned.residual);
+    let prot = cg::solve_protected(&a, &b, 1e-10, 4 * n, Some(fault))?;
+    println!("cg + 1 soft error, DMR-protected: converged in {} iters, \
+              detected={} corrected={}",
+             prot.iterations, prot.ft.errors_detected,
+             prot.ft.errors_corrected);
+    assert!(prot.converged && prot.iterations == clean.iterations);
+    assert!(prot.ft.errors_detected >= 1);
+    println!("iterative solver protected transparently — same trajectory \
+              as the clean run");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+"""FT-BLAS compile path (build-time only; never imported at runtime).
+
+Layer 1: kernels/ (Pallas), Layer 2: model.py (jax routine drivers),
+AOT bridge: aot.py (HLO text -> artifacts/ consumed by the Rust runtime).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

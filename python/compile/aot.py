@@ -1,0 +1,142 @@
+"""AOT bridge: lower every artifact spec to HLO *text* + a manifest.
+
+HLO text (NOT `lowered.compiler_ir("hlo")`-proto serialization) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the Rust `xla` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Run once at build time (`make artifacts`); the Rust runtime then consumes
+artifacts/<profile>/manifest.tsv + *.hlo.txt with no Python anywhere near
+the request path.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--profile skylake_sim]
+                        [--filter dgemm,dtrsv] [--list] [--dump-stats]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import specs as specs_mod  # noqa: E402
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(shape):
+    if len(shape) == 0:
+        return "scalar"
+    return "x".join(str(d) for d in shape)
+
+
+def lower_spec(spec):
+    args = spec.example_args()
+    lowered = jax.jit(spec.fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_shapes = [tuple(o.shape) for o in jax.eval_shape(spec.fn, *args)]
+    return text, out_shapes
+
+
+def manifest_line(spec, fname, out_shapes):
+    ins = " ".join(f"f64:{_shape_str(s)}" for s in spec.inputs)
+    outs = " ".join(f"f64:{_shape_str(s)}" for s in out_shapes)
+    meta = " ".join(f"{k}={v}" for k, v in sorted(spec.meta.items()))
+    return "\t".join(
+        [spec.name, fname, spec.routine, spec.variant, ins, outs, meta]
+    )
+
+
+def hlo_op_counts(text: str) -> dict:
+    """Histogram of HLO opcodes in a module's text (entry + fusions)."""
+    import re
+
+    counts = {}
+    for line in text.splitlines():
+        m = re.match(r"\s*(%?[\w.-]+)\s*=\s*\S+\s+(\w+)\(", line)
+        if m:
+            op = m.group(2)
+            counts[op] = counts.get(op, 0) + 1
+    return counts
+
+
+def dump_stats(all_specs) -> None:
+    """The L2 profiling pass: per-artifact HLO op counts, so redundant
+    recomputation or fusion barriers introduced by the checksum ops show
+    up as op-count inflation vs the unprotected variant."""
+    interesting = ["dot", "multiply", "add", "reduce", "fusion", "copy",
+                   "transpose", "broadcast", "while"]
+    print(f"{'artifact':<34} {'total':>6} " +
+          " ".join(f"{op:>9}" for op in interesting))
+    for spec in all_specs:
+        text, _ = lower_spec(spec)
+        counts = hlo_op_counts(text)
+        total = sum(counts.values())
+        print(f"{spec.name:<34} {total:>6} " +
+              " ".join(f"{counts.get(op, 0):>9}" for op in interesting))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="skylake_sim",
+                    choices=["skylake_sim", "cascade_sim"])
+    ap.add_argument("--filter", default="",
+                    help="comma-separated routine names to lower (default all)")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--dump-stats", action="store_true",
+                    help="print HLO op-count stats per artifact (the L2 "
+                         "no-redundant-recomputation check) instead of "
+                         "writing artifacts")
+    args = ap.parse_args()
+
+    all_specs = specs_mod.build_specs(args.profile)
+    if args.filter:
+        keep = set(args.filter.split(","))
+        all_specs = [s for s in all_specs if s.routine in keep]
+    if args.list:
+        for s in all_specs:
+            print(s.name)
+        return
+    if args.dump_stats:
+        dump_stats(all_specs)
+        return
+
+    out_dir = args.out_dir
+    if args.profile != "skylake_sim":
+        out_dir = os.path.join(out_dir, args.profile)
+    os.makedirs(out_dir, exist_ok=True)
+
+    lines = [f"# ftblas manifest v{MANIFEST_VERSION} profile={args.profile}"]
+    t0 = time.time()
+    for i, spec in enumerate(all_specs):
+        t1 = time.time()
+        text, out_shapes = lower_spec(spec)
+        fname = f"{spec.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        lines.append(manifest_line(spec, fname, out_shapes))
+        print(f"[{i + 1}/{len(all_specs)}] {spec.name}: "
+              f"{len(text)} chars in {time.time() - t1:.1f}s", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"lowered {len(all_specs)} artifacts to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

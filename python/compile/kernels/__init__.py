@@ -1,0 +1,8 @@
+"""FT-BLAS Pallas kernel library (Layer 1).
+
+Every kernel has a pure-jnp oracle in ref.py; pytest + hypothesis verify
+them block-size- and shape-parametrically. All kernels are lowered with
+interpret=True (mandatory for CPU PJRT on this image).
+"""
+
+from . import gemm, gemm_abft, gemv, level1, level1_dmr, ref  # noqa: F401

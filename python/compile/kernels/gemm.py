@@ -1,0 +1,66 @@
+"""Level-3 DGEMM Pallas kernel (paper §3.3.2).
+
+The paper's macro kernel updates an (M_C x N_C) block of C by iterating
+micro kernels over packed A (M_R x K_C) and B (K_C x N_R) panels. The
+Pallas adaptation: grid (i, j, k) with a (bm, bn) output tile accumulated
+over the k dimension inside VMEM; the BlockSpec index maps *are* the
+packing schedule (each A row-panel and B column-panel is staged into VMEM
+exactly when the macro-kernel loop would touch it), and the MXU systolic
+array plays the role of the AVX-512 FMA micro kernel.
+
+Block sizes are the tuning parameters the paper calls M_C/N_C/K_C; the
+runtime config (rust/src/config.rs) selects per-profile values.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+DEFAULT_BK = 64
+
+
+def _check(m, n, k, bm, bn, bk):
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shape ({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+
+
+def _dgemm_kernel(ab_ref, a_ref, b_ref, c_ref, o_ref):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+    @pl.when(kk == nk - 1)
+    def _():
+        o_ref[...] = ab_ref[0] * o_ref[...] + ab_ref[1] * c_ref[...]
+
+
+def dgemm(alpha, a, b, beta, c, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+          interpret=True):
+    """C := alpha * A @ B + beta * C. A is (m,k), B is (k,n), C is (m,n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (k, k2)
+    _check(m, n, k, bm, bn, bk)
+    ab = jnp.stack([alpha, beta]).reshape(2)
+    return pl.pallas_call(
+        _dgemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(ab, a, b, c)

@@ -1,0 +1,141 @@
+"""Fused online-ABFT DGEMM Pallas kernel (paper §5.2, Fig. 4 right side).
+
+One rank-K_c update C' = C + A_panel @ B_panel computed together with all
+four checksum vectors, reusing every A/B/C block already resident in VMEM —
+the paper's kernel fusion that turns the O(n^2) checksum work from a
+memory-bound extra pass into pure compute:
+
+  dCr_enc[i] += A(i,k) @ (B(k,j) @ e)     fused where B's block is loaded
+  dCc_enc[j] += (e^T @ A(i,k)) @ B(k,j)   fused where A's block is loaded
+  Cr_ref[i]   = C'(i,:) @ e               fused where C's block is written
+  Cc_ref[j]   = e^T @ C'(:,j)             fused where C's block is written
+
+The Rust coordinator (ft/abft.rs) maintains the running encoded checksums
+across rank-k steps (Cr_enc += dCr_enc), compares them to the reference
+checksums after every step (the paper's per-rank-k verification interval),
+locates (i_err, j_err) from the disagreeing row/column positions and
+corrects C[i,j] -= delta online — no checkpoint/rollback, exactly the
+paper's lightweight error model.
+
+Fault injection: operand [flag, i, j, delta]; when armed, C'(i,j) is
+perturbed *after* the accumulation and *before* the reference checksums
+read C' — so the reference checksums see the corruption (they are computed
+from the actual C) while the encoded checksums (derived from A and B) do
+not, which is precisely what makes the error detectable.
+
+NOTE on revisiting: the ref-checksum output blocks are revisited with
+other blocks interleaved (cc_ref[j] is touched for every i). This is legal
+in interpret mode (outputs are array-backed); on real TPU the kernel would
+be split per the Mosaic revisiting rule — see DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import DEFAULT_BM, DEFAULT_BN, DEFAULT_BK, _check
+
+
+def _abft_kernel(a_ref, b_ref, c_ref, inject_ref, o_ref, crr_ref, ccr_ref,
+                 cre_ref, cce_ref, *, bm, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    a_blk = a_ref[...]
+    b_blk = b_ref[...]
+
+    # ---- C accumulation (the original GEMM macro kernel) ----
+    @pl.when(kk == 0)
+    def _():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += a_blk @ b_blk
+
+    # ---- encoded checksums, fused with the blocks already in VMEM ----
+    # dCr_enc[i] += A(i,k) @ rowsum(B(k,j)) summed over j,k
+    @pl.when((j == 0) & (kk == 0))
+    def _():
+        cre_ref[...] = jnp.zeros_like(cre_ref)
+
+    cre_ref[...] += a_blk @ jnp.sum(b_blk, axis=1)
+
+    # dCc_enc[j] += colsum(A(i,k)) @ B(k,j) summed over i,k
+    @pl.when((i == 0) & (kk == 0))
+    def _():
+        cce_ref[...] = jnp.zeros_like(cce_ref)
+
+    cce_ref[...] += jnp.sum(a_blk, axis=0) @ b_blk
+
+    # ---- finalize C' block: inject, then reference checksums ----
+    @pl.when(kk == nk - 1)
+    def _():
+        inject = inject_ref[...]
+        flag, ei, ej, delta = inject[0], inject[1], inject[2], inject[3]
+        rows = (i * bm + jnp.arange(bm)).astype(flag.dtype)
+        cols = (j * bn + jnp.arange(bn)).astype(flag.dtype)
+        hit = (flag > 0) & (rows[:, None] == ei) & (cols[None, :] == ej)
+        o_ref[...] += jnp.where(hit, delta, 0.0).astype(o_ref.dtype)
+
+        final = o_ref[...]
+
+        @pl.when(j == 0)
+        def _():
+            crr_ref[...] = jnp.zeros_like(crr_ref)
+
+        crr_ref[...] += jnp.sum(final, axis=1)
+
+        @pl.when(i == 0)
+        def _():
+            ccr_ref[...] = jnp.zeros_like(ccr_ref)
+
+        ccr_ref[...] += jnp.sum(final, axis=0)
+
+
+def dgemm_abft(a, b, c, inject, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+               bk=DEFAULT_BK, interpret=True):
+    """Fused-ABFT rank-k update.
+
+    Computes C' = C + A @ B (A: (m,kc), B: (kc,n), C: (m,n)) and returns
+    (C', Cr_ref, Cc_ref, dCr_enc, dCc_enc):
+
+      Cr_ref  (m,)  row sums of C'           (from the computed C')
+      Cc_ref  (n,)  column sums of C'        (from the computed C')
+      dCr_enc (m,)  A @ (B @ e)              (this update's contribution)
+      dCc_enc (n,)  (e^T @ A) @ B            (this update's contribution)
+
+    With kc = K this is the full fused-ABFT GEMM (the offline variant).
+    """
+    m, kc = a.shape
+    kc2, n = b.shape
+    assert kc == kc2, (kc, kc2)
+    _check(m, n, kc, bm, bn, bk)
+    kern = lambda ar, br, cr, ir, o, crr, ccr, cre, cce: _abft_kernel(
+        ar, br, cr, ir, o, crr, ccr, cre, cce, bm=bm, bn=bn
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, kc // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((4,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((m,), a.dtype),
+            jax.ShapeDtypeStruct((n,), a.dtype),
+            jax.ShapeDtypeStruct((m,), a.dtype),
+            jax.ShapeDtypeStruct((n,), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, b, c, inject)

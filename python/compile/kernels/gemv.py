@@ -1,0 +1,134 @@
+"""Level-2 DGEMV Pallas kernels (paper §3.2.1) — plain and DMR-protected.
+
+The paper unrolls the i-loop R_i=4 times so each x_j load is reused from a
+register, and unrolls the j-loop 8 wide for AVX-512. The Pallas adaptation:
+a (bm, bn) block of A is staged into VMEM together with a (bn,) block of x;
+every x element is reused bm times from VMEM — the same register-reuse
+argument at block granularity. No cache blocking of A (the paper
+deliberately avoids it to keep A's accesses streaming): A's index map walks
+row-panels left to right, exactly once.
+
+Grid is (m/bm, n/bn); the y block accumulates across the j dimension and is
+finalized with alpha/beta on the last j step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+DEFAULT_BN = 256
+
+
+def _check(m, n, bm, bn):
+    if m % bm != 0 or n % bn != 0:
+        raise ValueError(f"shape ({m},{n}) not divisible by block ({bm},{bn})")
+
+
+# ------------------------------------------------------------------ plain
+
+def _dgemv_kernel(ab_ref, a_ref, x_ref, y_ref, o_ref):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+    @pl.when(j == nj - 1)
+    def _():
+        alpha = ab_ref[0]
+        beta = ab_ref[1]
+        o_ref[...] = alpha * o_ref[...] + beta * y_ref[...]
+
+
+def dgemv(alpha, a, x, beta, y, *, bm=DEFAULT_BM, bn=DEFAULT_BN, interpret=True):
+    """y := alpha * A @ x + beta * y for an (m, n) matrix A."""
+    m, n = a.shape
+    _check(m, n, bm, bn)
+    ab = jnp.stack([alpha, beta]).reshape(2)
+    return pl.pallas_call(
+        _dgemv_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=interpret,
+    )(ab, a, x, y)
+
+
+# -------------------------------------------------------------------- DMR
+
+def _dgemv_dmr_kernel(ab_ref, a_ref, x_ref, y_ref, inject_ref, o_ref, err_ref, *, bm):
+    """Duplicate the per-block matvec partials (the compute instructions);
+    loads are shared — the paper's sphere of replication. The injection
+    operand is [flag, row, jblk, delta]: the primary partial of row `row`
+    is perturbed by `delta` on j-step `jblk`."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    inject = inject_ref[...]
+    flag, row, jblk, delta = inject[0], inject[1], inject[2], inject[3]
+
+    p1 = a_ref[...] @ x_ref[...]
+    rows = (i * bm + jnp.arange(bm)).astype(p1.dtype)
+    hit = (flag > 0) & (jblk.astype(jnp.int32) == j) & (rows == row)
+    p1 = p1 + jnp.where(hit, delta, jnp.zeros_like(p1))
+    p2 = a_ref[...] @ x_ref[...]  # duplicated compute stream
+    mismatch = p1 != p2
+    p3 = a_ref[...] @ x_ref[...]  # recovery recomputation
+    verified = jnp.where(mismatch & (p3 == p2), p3, p1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += verified
+
+    @pl.when(j == nj - 1)
+    def _():
+        o_ref[...] = ab_ref[0] * o_ref[...] + ab_ref[1] * y_ref[...]
+
+    @pl.when((i == 0) & (j == 0))
+    def _():
+        err_ref[...] = jnp.zeros_like(err_ref)
+
+    err_ref[...] += jnp.sum(mismatch.astype(err_ref.dtype), keepdims=True)
+
+
+def dgemv_dmr(alpha, a, x, beta, y, inject, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+              interpret=True):
+    """Returns (y', errors_detected[1])."""
+    m, n = a.shape
+    _check(m, n, bm, bn)
+    ab = jnp.stack([alpha, beta]).reshape(2)
+    kern = lambda abr, ar, xr, yr, ir, o, e: _dgemv_dmr_kernel(
+        abr, ar, xr, yr, ir, o, e, bm=bm
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((4,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), a.dtype),
+            jax.ShapeDtypeStruct((1,), a.dtype),
+        ],
+        interpret=interpret,
+    )(ab, a, x, y, inject)

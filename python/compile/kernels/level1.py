@@ -1,0 +1,232 @@
+"""Level-1 BLAS Pallas kernels (the paper's §3.1).
+
+Memory-bound vector kernels. The AVX-512 adaptation: an AVX-512 register
+holding 8 doubles becomes a Pallas block of BLOCK doubles staged through
+VMEM; the BlockSpec index map is the explicit HBM->VMEM schedule the paper
+expressed with `prefetcht0`. Reductions (ddot, dnrm2, dasum) accumulate a
+(1,)-shaped output across a 1-D grid, the Pallas analog of the paper's
+"horizontal reduction after the j-loop".
+
+All kernels require the vector length to be a multiple of `block`; the L2
+drivers in model.py pad and mask. interpret=True is mandatory on this image
+(CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _grid1d(n, block):
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    return (n // block,)
+
+
+# ----------------------------------------------------------------- dscal
+
+def _dscal_kernel(alpha_ref, x_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...]
+
+
+def dscal(alpha, x, *, block=DEFAULT_BLOCK, interpret=True):
+    """x := alpha * x (returns the scaled vector)."""
+    (n,) = x.shape
+    return pl.pallas_call(
+        _dscal_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(alpha.reshape(1), x)
+
+
+# ----------------------------------------------------------------- daxpy
+
+def _daxpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def daxpy(alpha, x, y, *, block=DEFAULT_BLOCK, interpret=True):
+    """y := alpha * x + y."""
+    (n,) = x.shape
+    return pl.pallas_call(
+        _daxpy_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(alpha.reshape(1), x, y)
+
+
+# ------------------------------------------------------------------ ddot
+
+def _ddot_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...], keepdims=True)
+
+
+def ddot(x, y, *, block=DEFAULT_BLOCK, interpret=True):
+    """Returns (1,)-shaped dot(x, y)."""
+    (n,) = x.shape
+    return pl.pallas_call(
+        _ddot_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=interpret,
+    )(x, y)
+
+
+# ----------------------------------------------------------------- dnrm2
+
+def _sumsq_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = x_ref[...]
+    o_ref[...] += jnp.sum(blk * blk, keepdims=True)
+
+
+def dnrm2(x, *, block=DEFAULT_BLOCK, interpret=True):
+    """Returns (1,)-shaped unscaled 2-norm sqrt(sum(x^2)).
+
+    Overflow scaling lives in the L2 driver (model.py), mirroring the
+    paper's split between the hot AVX-512 kernel and the C driver.
+    """
+    (n,) = x.shape
+    ssq = pl.pallas_call(
+        _sumsq_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=interpret,
+    )(x)
+    return jnp.sqrt(ssq)
+
+
+# ----------------------------------------------------------------- dasum
+
+def _dasum_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(jnp.abs(x_ref[...]), keepdims=True)
+
+
+def dasum(x, *, block=DEFAULT_BLOCK, interpret=True):
+    (n,) = x.shape
+    return pl.pallas_call(
+        _dasum_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# ------------------------------------------------------------------ drot
+
+def _drot_kernel(cs_ref, x_ref, y_ref, ox_ref, oy_ref):
+    c = cs_ref[0]
+    s = cs_ref[1]
+    xb = x_ref[...]
+    yb = y_ref[...]
+    ox_ref[...] = c * xb + s * yb
+    oy_ref[...] = c * yb - s * xb
+
+
+def drot(x, y, c, s, *, block=DEFAULT_BLOCK, interpret=True):
+    """Apply a Givens rotation to (x, y)."""
+    (n,) = x.shape
+    cs = jnp.stack([c, s]).reshape(2)
+    return pl.pallas_call(
+        _drot_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=interpret,
+    )(cs, x, y)
+
+
+# ----------------------------------------------------------------- drotm
+
+def _drotm_kernel(h_ref, x_ref, y_ref, ox_ref, oy_ref):
+    # h_ref holds the *resolved* H entries [h11, h21, h12, h22] — the
+    # flag dispatch happens once in the driver, outside the grid (the
+    # paper hoists the flag branch out of the loop the same way).
+    h11, h21, h12, h22 = h_ref[0], h_ref[1], h_ref[2], h_ref[3]
+    xb = x_ref[...]
+    yb = y_ref[...]
+    ox_ref[...] = h11 * xb + h12 * yb
+    oy_ref[...] = h21 * xb + h22 * yb
+
+
+def drotm(x, y, param, *, block=DEFAULT_BLOCK, interpret=True):
+    """Modified Givens rotation; param = [flag, h11, h21, h12, h22]."""
+    (n,) = x.shape
+    flag = param[0]
+    h11 = jnp.where(flag == 0.0, 1.0, param[1])
+    h22 = jnp.where(flag == 0.0, 1.0, param[4])
+    h12 = jnp.where(flag == 1.0, 1.0, param[3])
+    h21 = jnp.where(flag == 1.0, -1.0, param[2])
+    # flag == -2 → identity H
+    ident = flag == -2.0
+    h11 = jnp.where(ident, 1.0, h11)
+    h22 = jnp.where(ident, 1.0, h22)
+    h12 = jnp.where(ident, 0.0, h12)
+    h21 = jnp.where(ident, 0.0, h21)
+    h = jnp.stack([h11, h21, h12, h22]).astype(x.dtype)
+    return pl.pallas_call(
+        _drotm_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=interpret,
+    )(h, x, y)

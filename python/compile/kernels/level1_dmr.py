@@ -1,0 +1,207 @@
+"""DMR-protected Level-1 kernels with in-kernel fault injection (paper §4).
+
+The paper duplicates computing instructions (not loads/stores) inside the
+assembly loop body, compares with `vpcmpeqd`+`kortestw`, and on mismatch
+recomputes the corrupted iteration (a third computation) before storing.
+
+Pallas adaptation (see DESIGN.md §1): both compute streams are expressed in
+the same kernel body over the same VMEM-resident block, so the duplicated
+stream reuses the single load — the sphere of replication is exactly
+"computing instructions only". Fault injection is an operand
+`inject = [flag, idx, delta]` (f64[3]): when flag > 0 the primary stream's
+element at global index `idx` is perturbed by `delta` *after* the primary
+compute and *before* verification — the model of a transient ALU flip.
+
+Recovery: disagreeing lanes are recomputed (third stream) and re-verified
+against the duplicate; the kernel additionally emits a (1,)-shaped count of
+detected faulty lanes which the Rust coordinator accumulates into metrics.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .level1 import DEFAULT_BLOCK, _grid1d
+
+
+def _gidx(block):
+    return pl.program_id(0) * block + jnp.arange(block)
+
+
+def _corrupt(vals, inject, block):
+    """Add inject[2] to the lane whose global index == inject[1] if armed."""
+    flag, idx, delta = inject[0], inject[1], inject[2]
+    hit = (flag > 0) & (_gidx(block).astype(vals.dtype) == idx)
+    return vals + jnp.where(hit, delta, jnp.zeros_like(vals))
+
+
+def _err_init(o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+# ------------------------------------------------------- elementwise DMR
+
+def _dmr_elementwise(compute, inject_ref, err_ref, out_ref, block):
+    """Shared duplicate/verify/recover skeleton for elementwise kernels."""
+    primary = _corrupt(compute(), inject_ref[...], block)
+    duplicate = compute()
+    mismatch = primary != duplicate
+    recomputed = compute()  # paper's recovery: recompute corrupted iteration
+    # re-verify the recomputation against the duplicate (consensus check)
+    consensus = recomputed == duplicate
+    out_ref[...] = jnp.where(mismatch & consensus, recomputed, primary)
+    _err_init(err_ref)
+    err_ref[...] += jnp.sum(mismatch.astype(err_ref.dtype), keepdims=True)
+
+
+def _dscal_dmr_kernel(alpha_ref, x_ref, inject_ref, o_ref, err_ref, *, block):
+    _dmr_elementwise(
+        lambda: alpha_ref[0] * x_ref[...], inject_ref, err_ref, o_ref, block
+    )
+
+
+def dscal_dmr(alpha, x, inject, *, block=DEFAULT_BLOCK, interpret=True):
+    """Returns (alpha * x corrected, errors_detected[1])."""
+    (n,) = x.shape
+    kern = lambda a, xr, ir, o, e: _dscal_dmr_kernel(a, xr, ir, o, e, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(alpha.reshape(1), x, inject)
+
+
+def _daxpy_dmr_kernel(alpha_ref, x_ref, y_ref, inject_ref, o_ref, err_ref, *, block):
+    _dmr_elementwise(
+        lambda: alpha_ref[0] * x_ref[...] + y_ref[...],
+        inject_ref,
+        err_ref,
+        o_ref,
+        block,
+    )
+
+
+def daxpy_dmr(alpha, x, y, inject, *, block=DEFAULT_BLOCK, interpret=True):
+    (n,) = x.shape
+    kern = lambda a, xr, yr, ir, o, e: _daxpy_dmr_kernel(a, xr, yr, ir, o, e, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(alpha.reshape(1), x, y, inject)
+
+
+# --------------------------------------------------------- reduction DMR
+
+def _reduction_dmr(partial, inject_ref, o_ref, err_ref):
+    """Duplicate the per-block partial reduction; corrupt the primary's
+    partial when this block owns the injected index."""
+    inject = inject_ref[...]
+    flag, idx, delta = inject[0], inject[1], inject[2]
+    p1 = partial()
+    block_owns = (flag > 0) & (pl.program_id(0) == idx.astype(jnp.int32))
+    p1 = p1 + jnp.where(block_owns, delta, jnp.zeros_like(p1))
+    p2 = partial()
+    mismatch = p1 != p2
+    p3 = partial()
+    verified = jnp.where(mismatch & (p3 == p2), p3, p1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += verified
+    _err_init(err_ref)
+    err_ref[...] += mismatch.astype(err_ref.dtype)
+
+
+def _ddot_dmr_kernel(x_ref, y_ref, inject_ref, o_ref, err_ref):
+    _reduction_dmr(
+        lambda: jnp.sum(x_ref[...] * y_ref[...], keepdims=True),
+        inject_ref,
+        o_ref,
+        err_ref,
+    )
+
+
+def ddot_dmr(x, y, inject, *, block=DEFAULT_BLOCK, interpret=True):
+    """Returns (dot[1], errors_detected[1]). inject idx is a *block* index."""
+    (n,) = x.shape
+    return pl.pallas_call(
+        _ddot_dmr_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, y, inject)
+
+
+def _sumsq_dmr_kernel(x_ref, inject_ref, o_ref, err_ref):
+    def partial():
+        blk = x_ref[...]
+        return jnp.sum(blk * blk, keepdims=True)
+
+    _reduction_dmr(partial, inject_ref, o_ref, err_ref)
+
+
+def dnrm2_dmr(x, inject, *, block=DEFAULT_BLOCK, interpret=True):
+    """Returns (unscaled nrm2[1], errors_detected[1])."""
+    (n,) = x.shape
+    ssq, err = pl.pallas_call(
+        _sumsq_dmr_kernel,
+        grid=_grid1d(n, block),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, inject)
+    return jnp.sqrt(ssq), err

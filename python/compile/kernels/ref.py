@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for every kernel and routine in FT-BLAS.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+native kernels — which are tested against the same math) are verified
+against. Everything is double precision, matching the paper's D-prefixed
+routines.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- Level 1
+
+def dscal(alpha, x):
+    return alpha * x
+
+
+def daxpy(alpha, x, y):
+    return alpha * x + y
+
+
+def ddot(x, y):
+    return jnp.dot(x, y)
+
+
+def dnrm2(x):
+    # Scaled to avoid overflow, like reference BLAS drivers.
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax, 1.0)
+    return scale * jnp.sqrt(jnp.sum((x / scale) ** 2))
+
+
+def dnrm2_unscaled(x):
+    # The Pallas kernel computes the unscaled sqrt(sum of squares); overflow
+    # scaling happens in the L2 driver, as in the paper's kernel split.
+    return jnp.sqrt(jnp.sum(x * x))
+
+
+def dasum(x):
+    return jnp.sum(jnp.abs(x))
+
+
+def dcopy(x):
+    return x
+
+
+def dswap(x, y):
+    return y, x
+
+
+def drot(x, y, c, s):
+    return c * x + s * y, c * y - s * x
+
+
+def drotm(x, y, param):
+    """Modified Givens rotation; param = [flag, h11, h21, h12, h22]
+    (reference-BLAS flag semantics)."""
+    flag, h11, h21, h12, h22 = (param[i] for i in range(5))
+    h11 = jnp.where(flag == 0.0, 1.0, h11)
+    h22 = jnp.where(flag == 0.0, 1.0, h22)
+    h12 = jnp.where(flag == 1.0, 1.0, h12)
+    h21 = jnp.where(flag == 1.0, -1.0, h21)
+    ox = h11 * x + h12 * y
+    oy = h21 * x + h22 * y
+    ident = flag == -2.0
+    return jnp.where(ident, x, ox), jnp.where(ident, y, oy)
+
+
+def idamax(x):
+    return jnp.argmax(jnp.abs(x))
+
+
+# ---------------------------------------------------------------- Level 2
+
+def dgemv(alpha, a, x, beta, y):
+    return alpha * (a @ x) + beta * y
+
+
+def dgemv_t(alpha, a, x, beta, y):
+    return alpha * (a.T @ x) + beta * y
+
+
+def dger(alpha, x, y, a):
+    return a + alpha * jnp.outer(x, y)
+
+
+def dtrmv_lower(a, x):
+    return jnp.tril(a) @ x
+
+
+def dsymv_lower(alpha, a, x, beta, y):
+    full = jnp.tril(a) + jnp.tril(a, -1).T
+    return alpha * (full @ x) + beta * y
+
+
+def dtrsv_lower(a, b):
+    """Solve L x = b with L = tril(a), non-unit diagonal."""
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    n = b.shape[0]
+    low = jnp.tril(a)
+
+    def body(i, x):
+        partial = jnp.dot(jnp.where(jnp.arange(n) < i, low[i, :], 0.0), x)
+        return x.at[i].set((b[i] - partial) / low[i, i])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+# ---------------------------------------------------------------- Level 3
+
+def dgemm(alpha, a, b, beta, c):
+    return alpha * (a @ b) + beta * c
+
+
+def dsymm_lower(alpha, a, b, beta, c):
+    full = jnp.tril(a) + jnp.tril(a, -1).T
+    return alpha * (full @ b) + beta * c
+
+
+def dtrmm_lower(alpha, a, b):
+    return alpha * (jnp.tril(a) @ b)
+
+
+def dsyrk_lower(alpha, a, beta, c):
+    """C := alpha*A*A^T + beta*C, only the lower triangle updated."""
+    upd = alpha * (a @ a.T) + beta * c
+    return jnp.tril(upd) + jnp.triu(c, 1)
+
+
+def dtrsm_llnn(a, b):
+    """Solve L X = B with L = tril(a), non-unit diag. B is m x n."""
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    m = b.shape[0]
+    low = jnp.tril(a)
+
+    def body(i, x):
+        mask = (jnp.arange(m) < i).astype(b.dtype)
+        partial = (mask * low[i, :]) @ x
+        return x.at[i, :].set((b[i, :] - partial) / low[i, i])
+
+    return jax.lax.fori_loop(0, m, body, jnp.zeros_like(b))
+
+
+# ------------------------------------------------------------ ABFT oracle
+
+def abft_encode(a, b):
+    """Encoded checksums for C = A @ B.
+
+    Cr_enc = A @ (B e)   — predicted row sums of C    (length M)
+    Cc_enc = (e^T A) @ B — predicted column sums of C (length N)
+    """
+    cr_enc = a @ jnp.sum(b, axis=1)
+    cc_enc = jnp.sum(a, axis=0) @ b
+    return cr_enc, cc_enc
+
+
+def abft_reference(c):
+    """Reference checksums computed from the actual C."""
+    return jnp.sum(c, axis=1), jnp.sum(c, axis=0)
+
+
+def gemm_with_checksums(a, b):
+    c = a @ b
+    cr_ref, cc_ref = abft_reference(c)
+    cr_enc, cc_enc = abft_encode(a, b)
+    return c, cr_ref, cc_ref, cr_enc, cc_enc

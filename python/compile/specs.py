@@ -1,0 +1,162 @@
+"""Artifact specifications: every routine x variant x shape lowered by aot.py.
+
+Each spec names a jax-traceable builder from model.py, its example input
+shapes (f64 everywhere), and metadata the Rust artifact registry uses for
+routing (routine name, FT variant, dimensions, tuning parameters).
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from . import model
+
+F64 = jnp.float64
+
+
+class Spec:
+    def __init__(self, name, fn, inputs, routine, variant, meta=None):
+        self.name = name
+        self.fn = fn  # callable taking jax arrays, returns array or tuple
+        self.inputs = inputs  # list of shape tuples
+        self.routine = routine
+        self.variant = variant  # ori | dmr | abft | abft_rankk | ft
+        self.meta = dict(meta or {})
+
+    def example_args(self):
+        import jax
+
+        return [jax.ShapeDtypeStruct(s, F64) for s in self.inputs]
+
+
+def _wrap_tuple(fn):
+    """Ensure the lowered function returns a flat tuple (stable interchange)."""
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        out = fn(*args)
+        if isinstance(out, (tuple, list)):
+            flat = []
+            for o in out:
+                flat.append(o)
+            return tuple(flat)
+        return (out,)
+
+    return wrapped
+
+
+def build_specs(profile="skylake_sim"):
+    """The full artifact set. `profile` selects tuning parameters
+    (DESIGN.md substitution #4: two machines -> two tuning profiles)."""
+    if profile == "skylake_sim":
+        l3 = dict(bm=64, bn=64, bk=64)
+        gv = dict(bm=64, bn=256)
+        blk = 1024
+        trsm_panel = 16
+    elif profile == "cascade_sim":
+        l3 = dict(bm=32, bn=128, bk=64)
+        gv = dict(bm=32, bn=128)
+        blk = 2048
+        trsm_panel = 32
+    else:
+        raise ValueError(profile)
+
+    S = []
+    add = S.append
+
+    # ----------------------------------------------------------- Level 1
+    for n in (65536, 262144):
+        add(Spec(f"dscal_ori_n{n}",
+                 _wrap_tuple(lambda a, x: model.dscal(a, x, block=blk)),
+                 [(), (n,)], "dscal", "ori", {"n": n, "block": blk}))
+        add(Spec(f"dscal_dmr_n{n}",
+                 _wrap_tuple(lambda a, x, i: model.dscal_dmr(a, x, i, block=blk)),
+                 [(), (n,), (3,)], "dscal", "dmr", {"n": n, "block": blk}))
+        add(Spec(f"daxpy_ori_n{n}",
+                 _wrap_tuple(lambda a, x, y: model.daxpy(a, x, y, block=blk)),
+                 [(), (n,), (n,)], "daxpy", "ori", {"n": n, "block": blk}))
+        add(Spec(f"daxpy_dmr_n{n}",
+                 _wrap_tuple(lambda a, x, y, i: model.daxpy_dmr(a, x, y, i, block=blk)),
+                 [(), (n,), (n,), (3,)], "daxpy", "dmr", {"n": n, "block": blk}))
+        add(Spec(f"ddot_ori_n{n}",
+                 _wrap_tuple(lambda x, y: model.ddot(x, y, block=blk)),
+                 [(n,), (n,)], "ddot", "ori", {"n": n, "block": blk}))
+        add(Spec(f"ddot_dmr_n{n}",
+                 _wrap_tuple(lambda x, y, i: model.ddot_dmr(x, y, i, block=blk)),
+                 [(n,), (n,), (3,)], "ddot", "dmr", {"n": n, "block": blk}))
+        add(Spec(f"dnrm2_ori_n{n}",
+                 _wrap_tuple(lambda x: model.dnrm2(x, block=blk)),
+                 [(n,)], "dnrm2", "ori", {"n": n, "block": blk}))
+        add(Spec(f"dnrm2_dmr_n{n}",
+                 _wrap_tuple(lambda x, i: model.dnrm2_dmr(x, i, block=blk)),
+                 [(n,), (3,)], "dnrm2", "dmr", {"n": n, "block": blk}))
+    add(Spec("dasum_ori_n65536",
+             _wrap_tuple(lambda x: model.dasum(x, block=blk)),
+             [(65536,)], "dasum", "ori", {"n": 65536, "block": blk}))
+    add(Spec("drot_ori_n65536",
+             _wrap_tuple(lambda x, y, c, s: model.drot(x, y, c, s, block=blk)),
+             [(65536,), (65536,), (), ()], "drot", "ori",
+             {"n": 65536, "block": blk}))
+
+    # ----------------------------------------------------------- Level 2
+    for n in (256, 512, 1024):
+        add(Spec(f"dgemv_ori_n{n}",
+                 _wrap_tuple(lambda al, a, x, be, y: model.dgemv(al, a, x, be, y, **gv)),
+                 [(), (n, n), (n,), (), (n,)], "dgemv", "ori",
+                 {"n": n, **gv}))
+        add(Spec(f"dgemv_dmr_n{n}",
+                 _wrap_tuple(lambda al, a, x, be, y, i: model.dgemv_dmr(al, a, x, be, y, i, **gv)),
+                 [(), (n, n), (n,), (), (n,), (4,)], "dgemv", "dmr",
+                 {"n": n, **gv}))
+    for n in (256, 512):
+        add(Spec(f"dtrsv_ori_n{n}",
+                 _wrap_tuple(lambda a, b: model.dtrsv(a, b, panel=4, bn=64)),
+                 [(n, n), (n,)], "dtrsv", "ori", {"n": n, "panel": 4}))
+        add(Spec(f"dtrsv_b64_n{n}",
+                 _wrap_tuple(lambda a, b: model.dtrsv(a, b, panel=64, bn=64)),
+                 [(n, n), (n,)], "dtrsv", "b64", {"n": n, "panel": 64}))
+        add(Spec(f"dtrsv_dmr_n{n}",
+                 _wrap_tuple(lambda a, b, i: model.dtrsv_dmr(a, b, i, panel=4, bn=64)),
+                 [(n, n), (n,), (4,)], "dtrsv", "dmr", {"n": n, "panel": 4}))
+
+    # ----------------------------------------------------------- Level 3
+    for n in (128, 256, 512):
+        add(Spec(f"dgemm_ori_n{n}",
+                 _wrap_tuple(lambda al, a, b, be, c: model.dgemm(al, a, b, be, c, **l3)),
+                 [(), (n, n), (n, n), (), (n, n)], "dgemm", "ori",
+                 {"n": n, **l3}))
+        add(Spec(f"dgemm_abft_n{n}",
+                 _wrap_tuple(lambda a, b, i: model.dgemm_abft_full(a, b, i, **l3)),
+                 [(n, n), (n, n), (4,)], "dgemm", "abft", {"n": n, **l3}))
+    for n, kc in ((256, 64), (512, 128)):
+        add(Spec(f"dgemm_abft_rankk_n{n}_kc{kc}",
+                 _wrap_tuple(lambda a, b, c, i: model.dgemm_abft(a, b, c, i, **l3)),
+                 [(n, kc), (kc, n), (n, n), (4,)], "dgemm", "abft_rankk",
+                 {"n": n, "kc": kc, **l3}))
+    for n in (256, 512):
+        add(Spec(f"dtrsm_ori_n{n}",
+                 _wrap_tuple(lambda a, b: model.dtrsm(a, b, panel=trsm_panel, bn=l3["bn"], bk=l3["bk"])),
+                 [(n, n), (n, n)], "dtrsm", "ori",
+                 {"n": n, "panel": trsm_panel}))
+        add(Spec(f"dtrsm_ft_n{n}",
+                 _wrap_tuple(lambda a, b, i: model.dtrsm_ft(a, b, i, panel=trsm_panel, bn=l3["bn"], bk=l3["bk"])),
+                 [(n, n), (n, n), (5,)], "dtrsm", "ft",
+                 {"n": n, "panel": trsm_panel}))
+    n = 256
+    add(Spec(f"dsymm_ori_n{n}",
+             _wrap_tuple(lambda al, a, b, be, c: model.dsymm(al, a, b, be, c, **l3)),
+             [(), (n, n), (n, n), (), (n, n)], "dsymm", "ori", {"n": n}))
+    add(Spec(f"dsymm_abft_n{n}",
+             _wrap_tuple(lambda a, b, c, i: model.dsymm_abft(a, b, c, i, **l3)),
+             [(n, n), (n, n), (n, n), (4,)], "dsymm", "abft", {"n": n}))
+    add(Spec(f"dtrmm_ori_n{n}",
+             _wrap_tuple(lambda al, a, b: model.dtrmm(al, a, b, **l3)),
+             [(), (n, n), (n, n)], "dtrmm", "ori", {"n": n}))
+    add(Spec(f"dtrmm_abft_n{n}",
+             _wrap_tuple(lambda a, b, i: model.dtrmm_abft(a, b, i, **l3)),
+             [(n, n), (n, n), (4,)], "dtrmm", "abft", {"n": n}))
+    add(Spec(f"dsyrk_ori_n{n}",
+             _wrap_tuple(lambda al, a, be, c: model.dsyrk(al, a, be, c, **l3)),
+             [(), (n, n), (), (n, n)], "dsyrk", "ori", {"n": n}))
+
+    return S

@@ -1,0 +1,20 @@
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xF7B1A5)
+
+
+def assert_close(a, b, rtol=1e-10, atol=1e-10):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)

@@ -1,0 +1,61 @@
+"""AOT pipeline: spec registry consistency and HLO-text lowering."""
+
+import jax
+import pytest
+
+from compile import aot, specs
+
+
+def test_spec_names_unique():
+    s = specs.build_specs("skylake_sim")
+    names = [x.name for x in s]
+    assert len(names) == len(set(names))
+
+
+def test_spec_registry_covers_paper_routines():
+    s = specs.build_specs("skylake_sim")
+    routines = {x.routine for x in s}
+    # the eight routines of paper Fig. 9 + the rest we ship
+    for r in ("dscal", "dnrm2", "dgemv", "dtrsv",
+              "dgemm", "dsymm", "dtrmm", "dtrsm"):
+        assert r in routines, r
+
+
+def test_every_dmr_or_ft_spec_has_inject_input():
+    for s in specs.build_specs("skylake_sim"):
+        if s.variant in ("dmr", "ft", "abft", "abft_rankk"):
+            # last input is the injection operand (rank-1, len 3..5)
+            assert len(s.inputs[-1]) == 1 and 3 <= s.inputs[-1][0] <= 5, s.name
+
+
+def test_cascade_profile_differs():
+    sky = {s.name: s.meta for s in specs.build_specs("skylake_sim")}
+    cas = {s.name: s.meta for s in specs.build_specs("cascade_sim")}
+    assert sky.keys() == cas.keys()
+    diffs = [n for n in sky if sky[n] != cas[n]]
+    assert diffs, "cascade_sim must use different tuning parameters"
+
+
+@pytest.mark.parametrize("name", ["dscal_ori_n65536", "dgemm_ori_n128",
+                                  "dgemm_abft_n128"])
+def test_lowering_produces_hlo_text(name):
+    s = [x for x in specs.build_specs("skylake_sim") if x.name == name][0]
+    text, out_shapes = aot.lower_spec(s)
+    assert "HloModule" in text
+    assert len(out_shapes) >= 1
+    line = aot.manifest_line(s, f"{s.name}.hlo.txt", out_shapes)
+    fields = line.split("\t")
+    assert len(fields) == 7
+    assert fields[0] == name
+
+
+def test_manifest_shape_grammar():
+    s = [x for x in specs.build_specs("skylake_sim")
+         if x.name == "dgemv_dmr_n256"][0]
+    out_shapes = [tuple(o.shape) for o in jax.eval_shape(
+        s.fn, *s.example_args())]
+    line = aot.manifest_line(s, "f", out_shapes)
+    ins = line.split("\t")[4].split(" ")
+    assert ins[0] == "f64:scalar"
+    assert ins[1] == "f64:256x256"
+    assert ins[-1] == "f64:4"

@@ -1,0 +1,229 @@
+"""Level-1 Pallas kernels vs pure-jnp oracles (paper §3.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import level1 as k1
+from compile.kernels import level1_dmr as k1d
+from compile.kernels import ref
+
+from conftest import assert_close
+
+
+def _vec(rng, n):
+    return rng.standard_normal(n)
+
+
+NOINJ = jnp.zeros(3)
+
+
+@pytest.mark.parametrize("n,block", [(256, 64), (1024, 128), (4096, 1024)])
+class TestPlainKernels:
+    def test_dscal(self, rng, n, block):
+        x = _vec(rng, n)
+        alpha = jnp.asarray(2.75)
+        assert_close(k1.dscal(alpha, jnp.asarray(x), block=block),
+                     ref.dscal(alpha, x))
+
+    def test_daxpy(self, rng, n, block):
+        x, y = _vec(rng, n), _vec(rng, n)
+        alpha = jnp.asarray(-0.5)
+        assert_close(k1.daxpy(alpha, jnp.asarray(x), jnp.asarray(y), block=block),
+                     ref.daxpy(alpha, x, y))
+
+    def test_ddot(self, rng, n, block):
+        x, y = _vec(rng, n), _vec(rng, n)
+        assert_close(k1.ddot(jnp.asarray(x), jnp.asarray(y), block=block)[0],
+                     ref.ddot(x, y), rtol=1e-9)
+
+    def test_dnrm2(self, rng, n, block):
+        x = _vec(rng, n)
+        assert_close(k1.dnrm2(jnp.asarray(x), block=block)[0],
+                     ref.dnrm2_unscaled(x))
+
+    def test_dasum(self, rng, n, block):
+        x = _vec(rng, n)
+        assert_close(k1.dasum(jnp.asarray(x), block=block)[0], ref.dasum(x))
+
+    def test_drot(self, rng, n, block):
+        x, y = _vec(rng, n), _vec(rng, n)
+        c, s = jnp.asarray(0.8), jnp.asarray(0.6)
+        ox, oy = k1.drot(jnp.asarray(x), jnp.asarray(y), c, s, block=block)
+        ex, ey = ref.drot(x, y, c, s)
+        assert_close(ox, ex)
+        assert_close(oy, ey)
+
+
+def test_block_must_divide(rng):
+    with pytest.raises(ValueError):
+        k1.dscal(jnp.asarray(1.0), jnp.asarray(_vec(rng, 100)), block=64)
+
+
+class TestDmrNoInjection:
+    """DMR kernels must be bit-identical to the oracle with no fault armed."""
+
+    def test_dscal_dmr(self, rng):
+        x = _vec(rng, 1024)
+        alpha = jnp.asarray(3.25)
+        out, err = k1d.dscal_dmr(alpha, jnp.asarray(x), NOINJ, block=128)
+        assert float(err[0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.dscal(alpha, x)))
+
+    def test_daxpy_dmr(self, rng):
+        x, y = _vec(rng, 1024), _vec(rng, 1024)
+        alpha = jnp.asarray(-1.5)
+        out, err = k1d.daxpy_dmr(alpha, jnp.asarray(x), jnp.asarray(y), NOINJ, block=128)
+        assert float(err[0]) == 0.0
+        # XLA may fuse the mul+add into an FMA differently than the oracle
+        # graph; results agree to one ulp.
+        assert_close(out, ref.daxpy(alpha, x, y), rtol=1e-15, atol=1e-14)
+
+    def test_ddot_dmr(self, rng):
+        x, y = _vec(rng, 1024), _vec(rng, 1024)
+        out, err = k1d.ddot_dmr(jnp.asarray(x), jnp.asarray(y), NOINJ, block=128)
+        assert float(err[0]) == 0.0
+        assert_close(out[0], ref.ddot(x, y), rtol=1e-9)
+
+    def test_dnrm2_dmr(self, rng):
+        x = _vec(rng, 1024)
+        out, err = k1d.dnrm2_dmr(jnp.asarray(x), NOINJ, block=128)
+        assert float(err[0]) == 0.0
+        assert_close(out[0], ref.dnrm2_unscaled(x))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    idx=st.integers(min_value=0, max_value=1023),
+    delta=st.floats(min_value=1e-6, max_value=1e12,
+                    allow_nan=False, allow_infinity=False),
+)
+def test_dscal_dmr_detects_and_corrects(idx, delta):
+    """Property (paper §4.2): any single injected perturbation of the
+    primary compute stream is detected (err count == 1) and the stored
+    result equals the fault-free result exactly."""
+    rng = np.random.default_rng(idx)
+    x = rng.standard_normal(1024)
+    alpha = jnp.asarray(1.7)
+    inject = jnp.asarray([1.0, float(idx), delta])
+    out, err = k1d.dscal_dmr(alpha, jnp.asarray(x), inject, block=128)
+    assert float(err[0]) == 1.0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.dscal(alpha, x)))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    blk=st.integers(min_value=0, max_value=7),
+    delta=st.floats(min_value=1e-6, max_value=1e9,
+                    allow_nan=False, allow_infinity=False),
+)
+def test_ddot_dmr_detects_and_corrects(blk, delta):
+    rng = np.random.default_rng(blk + 17)
+    x, y = rng.standard_normal(1024), rng.standard_normal(1024)
+    inject = jnp.asarray([1.0, float(blk), delta])
+    out, err = k1d.ddot_dmr(jnp.asarray(x), jnp.asarray(y), inject, block=128)
+    assert float(err[0]) == 1.0
+    assert_close(out[0], ref.ddot(x, y), rtol=1e-9)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    blk=st.integers(min_value=0, max_value=7),
+    delta=st.floats(min_value=1e-3, max_value=1e9,
+                    allow_nan=False, allow_infinity=False),
+)
+def test_dnrm2_dmr_detects_and_corrects(blk, delta):
+    rng = np.random.default_rng(blk)
+    x = rng.standard_normal(1024)
+    inject = jnp.asarray([1.0, float(blk), delta])
+    out, err = k1d.dnrm2_dmr(jnp.asarray(x), inject, block=128)
+    assert float(err[0]) == 1.0
+    assert_close(out[0], ref.dnrm2_unscaled(x))
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    n_log2=st.integers(min_value=8, max_value=13),
+    blk_log2=st.integers(min_value=5, max_value=8),
+    alpha=st.floats(min_value=-100, max_value=100,
+                    allow_nan=False, allow_infinity=False),
+)
+def test_dscal_shape_sweep(n_log2, blk_log2, alpha):
+    """Hypothesis sweep over sizes/blocks: kernel == oracle everywhere."""
+    n, block = 2 ** n_log2, 2 ** blk_log2
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n)
+    a = jnp.asarray(alpha)
+    out = k1.dscal(a, jnp.asarray(x), block=block)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.dscal(a, x)))
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    n_mult=st.integers(min_value=1, max_value=32),
+    blk_log2=st.integers(min_value=5, max_value=8),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_daxpy_shape_dtype_sweep(n_mult, blk_log2, dtype):
+    """Shapes x dtypes: daxpy kernel == oracle for any block-multiple
+    length in both precisions (the kernel is dtype-generic)."""
+    block = 2 ** blk_log2
+    n = n_mult * block
+    rng = np.random.default_rng(n + blk_log2)
+    x = rng.standard_normal(n).astype(dtype)
+    y = rng.standard_normal(n).astype(dtype)
+    alpha = jnp.asarray(dtype(1.375))  # exactly representable
+    out = k1.daxpy(alpha, jnp.asarray(x), jnp.asarray(y), block=block)
+    assert out.dtype == x.dtype
+    want = np.asarray(ref.daxpy(alpha, x, y))
+    # XLA may contract mul+add into a fused multiply-add (one rounding)
+    # in either precision — allow 1 ulp
+    tol = 2e-7 if dtype == np.float32 else 1e-15
+    np.testing.assert_allclose(np.asarray(out), want, rtol=tol, atol=tol)
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    n_mult=st.integers(min_value=1, max_value=16),
+    blk_log2=st.integers(min_value=5, max_value=8),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_ddot_shape_dtype_sweep(n_mult, blk_log2, dtype):
+    block = 2 ** blk_log2
+    n = n_mult * block
+    rng = np.random.default_rng(n * 3 + blk_log2)
+    x = rng.standard_normal(n).astype(dtype)
+    y = rng.standard_normal(n).astype(dtype)
+    out = k1.ddot(jnp.asarray(x), jnp.asarray(y), block=block)
+    rtol = 1e-4 if dtype == np.float32 else 1e-9
+    np.testing.assert_allclose(float(out[0]), float(ref.ddot(x, y)), rtol=rtol)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    flag=st.sampled_from([-2.0, -1.0, 0.0, 1.0]),
+    h=st.lists(st.floats(min_value=-3, max_value=3,
+                         allow_nan=False, allow_infinity=False),
+               min_size=4, max_size=4),
+    n_mult=st.integers(min_value=1, max_value=8),
+)
+def test_drotm_flag_sweep(flag, h, n_mult):
+    """DROTM kernel == oracle across every flag mode and H matrix."""
+    n = 128 * n_mult
+    rng = np.random.default_rng(n + int(flag) + 2)
+    x = rng.standard_normal(n)
+    y = rng.standard_normal(n)
+    param = jnp.asarray([flag] + h)
+    ox, oy = k1.drotm(jnp.asarray(x), jnp.asarray(y), param, block=128)
+    ex, ey = ref.drotm(x, y, param)
+    assert_close(ox, ex)
+    assert_close(oy, ey)
+
+
+def test_drotm_identity_flag(rng):
+    x, y = _vec(rng, 256), _vec(rng, 256)
+    param = jnp.asarray([-2.0, 9.0, 9.0, 9.0, 9.0])  # H entries ignored
+    ox, oy = k1.drotm(jnp.asarray(x), jnp.asarray(y), param, block=64)
+    np.testing.assert_array_equal(np.asarray(ox), x)
+    np.testing.assert_array_equal(np.asarray(oy), y)

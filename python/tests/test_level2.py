@@ -1,0 +1,130 @@
+"""Level-2 kernels/drivers vs oracles (paper §3.2): DGEMV, DTRSV."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gemv as kgemv
+from compile.kernels import ref
+
+from conftest import assert_close
+
+NOINJ4 = jnp.zeros(4)
+
+
+@pytest.mark.parametrize("m,n,bm,bn", [
+    (128, 128, 32, 64),
+    (256, 256, 64, 64),
+    (128, 512, 64, 128),
+    (512, 128, 64, 128),
+])
+def test_dgemv(rng, m, n, bm, bn):
+    a = rng.standard_normal((m, n))
+    x = rng.standard_normal(n)
+    y = rng.standard_normal(m)
+    alpha, beta = jnp.asarray(1.5), jnp.asarray(-0.25)
+    out = kgemv.dgemv(alpha, jnp.asarray(a), jnp.asarray(x), beta,
+                      jnp.asarray(y), bm=bm, bn=bn)
+    assert_close(out, ref.dgemv(alpha, a, x, beta, y), rtol=1e-9)
+
+
+def test_dgemv_alpha_beta_zero(rng):
+    a = rng.standard_normal((128, 128))
+    x = rng.standard_normal(128)
+    y = rng.standard_normal(128)
+    out = kgemv.dgemv(jnp.asarray(0.0), jnp.asarray(a), jnp.asarray(x),
+                      jnp.asarray(1.0), jnp.asarray(y), bm=32, bn=64)
+    assert_close(out, y)
+
+
+def test_dgemv_dmr_clean(rng):
+    a = rng.standard_normal((128, 128))
+    x = rng.standard_normal(128)
+    y = rng.standard_normal(128)
+    alpha, beta = jnp.asarray(2.0), jnp.asarray(1.0)
+    out, err = kgemv.dgemv_dmr(alpha, jnp.asarray(a), jnp.asarray(x), beta,
+                               jnp.asarray(y), NOINJ4, bm=32, bn=64)
+    assert float(err[0]) == 0.0
+    assert_close(out, ref.dgemv(alpha, a, x, beta, y), rtol=1e-9)
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    row=st.integers(min_value=0, max_value=127),
+    jblk=st.integers(min_value=0, max_value=1),
+    delta=st.floats(min_value=1e-4, max_value=1e10,
+                    allow_nan=False, allow_infinity=False),
+)
+def test_dgemv_dmr_detects_and_corrects(row, jblk, delta):
+    """Any single fault in a gemv partial is detected and corrected."""
+    rng = np.random.default_rng(row * 7 + jblk)
+    a = rng.standard_normal((128, 128))
+    x = rng.standard_normal(128)
+    y = rng.standard_normal(128)
+    alpha, beta = jnp.asarray(1.0), jnp.asarray(0.5)
+    inject = jnp.asarray([1.0, float(row), float(jblk), delta])
+    out, err = kgemv.dgemv_dmr(alpha, jnp.asarray(a), jnp.asarray(x), beta,
+                               jnp.asarray(y), inject, bm=32, bn=64)
+    assert float(err[0]) == 1.0
+    assert_close(out, ref.dgemv(alpha, a, x, beta, y), rtol=1e-9)
+
+
+def _lower_tri(rng, n, dom=4.0):
+    return np.tril(rng.standard_normal((n, n))) + dom * np.eye(n)
+
+
+@pytest.mark.parametrize("n,panel", [(64, 4), (256, 4), (256, 64), (128, 8)])
+def test_dtrsv(rng, n, panel):
+    a = _lower_tri(rng, n)
+    b = rng.standard_normal(n)
+    out = model.dtrsv(jnp.asarray(a), jnp.asarray(b), panel=panel, bn=64)
+    assert_close(out, ref.dtrsv_lower(a, b), rtol=1e-8)
+
+
+def test_dtrsv_panel4_matches_panel64(rng):
+    """The paper's tuning claim: block size changes performance, never
+    results (both solve the same system)."""
+    a = _lower_tri(rng, 256)
+    b = rng.standard_normal(256)
+    x4 = model.dtrsv(jnp.asarray(a), jnp.asarray(b), panel=4, bn=64)
+    x64 = model.dtrsv(jnp.asarray(a), jnp.asarray(b), panel=64, bn=64)
+    assert_close(x4, x64, rtol=1e-9)
+
+
+def test_dtrsv_residual(rng):
+    a = _lower_tri(rng, 256)
+    b = rng.standard_normal(256)
+    x = np.asarray(model.dtrsv(jnp.asarray(a), jnp.asarray(b), panel=4, bn=64))
+    resid = np.linalg.norm(np.tril(a) @ x - b) / np.linalg.norm(b)
+    assert resid < 1e-10
+
+
+def test_dtrsv_dmr_clean(rng):
+    a = _lower_tri(rng, 128)
+    b = rng.standard_normal(128)
+    out, err = model.dtrsv_dmr(jnp.asarray(a), jnp.asarray(b), NOINJ4,
+                               panel=4, bn=64)
+    assert float(err[0]) == 0.0
+    assert_close(out, ref.dtrsv_lower(a, b), rtol=1e-8)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    step=st.integers(min_value=1, max_value=31),
+    row=st.integers(min_value=0, max_value=3),
+    delta=st.floats(min_value=1e-3, max_value=1e6,
+                    allow_nan=False, allow_infinity=False),
+)
+def test_dtrsv_dmr_detects_and_corrects(step, row, delta):
+    """A fault injected into any panel's gemv update must be corrected
+    before it propagates into later panels (online correction)."""
+    rng = np.random.default_rng(step)
+    a = _lower_tri(rng, 128)
+    b = rng.standard_normal(128)
+    inject = jnp.asarray([1.0, float(step), float(row), delta])
+    out, err = model.dtrsv_dmr(jnp.asarray(a), jnp.asarray(b), inject,
+                               panel=4, bn=64)
+    assert float(err[0]) == 1.0
+    assert_close(out, ref.dtrsv_lower(a, b), rtol=1e-8)

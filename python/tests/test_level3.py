@@ -1,0 +1,118 @@
+"""Level-3 kernels/drivers vs oracles (paper §3.3): DGEMM, DTRSM, DSYMM,
+DTRMM, DSYRK."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+from conftest import assert_close
+
+
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (64, 64, 64, 32, 32, 32),
+    (128, 128, 128, 64, 64, 64),
+    (128, 64, 192, 32, 64, 64),
+    (64, 192, 128, 64, 64, 32),
+])
+def test_dgemm_rect(rng, m, n, k, bm, bn, bk):
+    a = rng.standard_normal((m, k))
+    b = rng.standard_normal((k, n))
+    c = rng.standard_normal((m, n))
+    alpha, beta = jnp.asarray(1.25), jnp.asarray(-0.75)
+    out = model.dgemm(alpha, jnp.asarray(a), jnp.asarray(b), beta,
+                      jnp.asarray(c), bm=bm, bn=bn, bk=bk)
+    assert_close(out, ref.dgemm(alpha, a, b, beta, c), rtol=1e-9)
+
+
+def test_dgemm_beta_zero(rng):
+    a = rng.standard_normal((64, 64))
+    b = rng.standard_normal((64, 64))
+    c = np.full((64, 64), np.nan)  # beta=0 must not propagate NaNs from C
+    out = model.dgemm(jnp.asarray(1.0), jnp.asarray(a), jnp.asarray(b),
+                      jnp.asarray(0.0), jnp.asarray(np.zeros((64, 64))),
+                      bm=32, bn=32, bk=32)
+    assert_close(out, a @ b, rtol=1e-9)
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    mi=st.integers(min_value=1, max_value=3),
+    ni=st.integers(min_value=1, max_value=3),
+    ki=st.integers(min_value=1, max_value=3),
+)
+def test_dgemm_block_sweep(mi, ni, ki):
+    """Block-shape sweep: result must not depend on the tiling."""
+    m, n, k = 32 * mi, 32 * ni, 32 * ki
+    rng = np.random.default_rng(m + n + k)
+    a = rng.standard_normal((m, k))
+    b = rng.standard_normal((k, n))
+    c = rng.standard_normal((m, n))
+    out = model.dgemm(jnp.asarray(1.0), jnp.asarray(a), jnp.asarray(b),
+                      jnp.asarray(1.0), jnp.asarray(c), bm=32, bn=32, bk=32)
+    assert_close(out, a @ b + c, rtol=1e-9)
+
+
+def test_dsymm(rng):
+    n = 128
+    a = rng.standard_normal((n, n))
+    b = rng.standard_normal((n, n))
+    c = rng.standard_normal((n, n))
+    alpha, beta = jnp.asarray(0.5), jnp.asarray(2.0)
+    out = model.dsymm(alpha, jnp.asarray(a), jnp.asarray(b), beta,
+                      jnp.asarray(c), bm=32, bn=32, bk=32)
+    assert_close(out, ref.dsymm_lower(alpha, a, b, beta, c), rtol=1e-9)
+
+
+def test_dtrmm(rng):
+    n = 128
+    a = rng.standard_normal((n, n))
+    b = rng.standard_normal((n, n))
+    out = model.dtrmm(jnp.asarray(1.5), jnp.asarray(a), jnp.asarray(b),
+                      bm=32, bn=32, bk=32)
+    assert_close(out, ref.dtrmm_lower(jnp.asarray(1.5), a, b), rtol=1e-9)
+
+
+def test_dsyrk(rng):
+    n = 128
+    a = rng.standard_normal((n, n))
+    c = rng.standard_normal((n, n))
+    alpha, beta = jnp.asarray(1.0), jnp.asarray(0.5)
+    out = model.dsyrk(alpha, jnp.asarray(a), beta, jnp.asarray(c),
+                      bm=32, bn=32, bk=32)
+    assert_close(out, ref.dsyrk_lower(alpha, a, beta, c), rtol=1e-9)
+
+
+def _lower_tri(rng, n, dom=4.0):
+    return np.tril(rng.standard_normal((n, n))) + dom * np.eye(n)
+
+
+@pytest.mark.parametrize("m,n,panel", [(64, 64, 16), (128, 128, 16),
+                                       (128, 64, 32), (256, 128, 16)])
+def test_dtrsm(rng, m, n, panel):
+    a = _lower_tri(rng, m)
+    b = rng.standard_normal((m, n))
+    out = model.dtrsm(jnp.asarray(a), jnp.asarray(b), panel=panel,
+                      bn=32, bk=32)
+    assert_close(out, ref.dtrsm_llnn(a, b), rtol=1e-8)
+
+
+def test_dtrsm_residual(rng):
+    m, n = 128, 128
+    a = _lower_tri(rng, m)
+    b = rng.standard_normal((m, n))
+    x = np.asarray(model.dtrsm(jnp.asarray(a), jnp.asarray(b), panel=16,
+                               bn=32, bk=32))
+    resid = np.linalg.norm(np.tril(a) @ x - b) / np.linalg.norm(b)
+    assert resid < 1e-10
+
+
+def test_dtrsm_panel_invariance(rng):
+    a = _lower_tri(rng, 128)
+    b = rng.standard_normal((128, 128))
+    x16 = model.dtrsm(jnp.asarray(a), jnp.asarray(b), panel=16, bn=32, bk=32)
+    x32 = model.dtrsm(jnp.asarray(a), jnp.asarray(b), panel=32, bn=32, bk=32)
+    assert_close(x16, x32, rtol=1e-9)

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig. 8 (a and b): fused vs unfused ABFT DGEMM.
+//! Run: `cargo bench --bench fig8_abft`.
+use ftblas::bench::{self, BenchCtx};
+use ftblas::config::Profile;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("FTBLAS_BENCH_QUICK").is_ok();
+    let mut ctx = BenchCtx::with_artifacts(Profile::skylake_sim(), quick);
+    bench::run("fig8a", &mut ctx)?;
+    bench::run("fig8b", &mut ctx)
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper experiment `fig9` (see DESIGN.md §5).
+//! Run: `cargo bench --bench fig9_ft_all` (add -- --quick for a fast pass).
+use ftblas::bench::{self, BenchCtx};
+use ftblas::config::Profile;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("FTBLAS_BENCH_QUICK").is_ok();
+    let mut ctx = BenchCtx::with_artifacts(Profile::skylake_sim(), quick);
+    bench::run("fig9", &mut ctx)
+}

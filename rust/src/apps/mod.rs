@@ -1,0 +1,6 @@
+//! Downstream applications built on the FT-BLAS public API — proof that
+//! the library composes (DESIGN.md S10).
+
+pub mod cg;
+pub mod cholesky;
+pub mod lu;

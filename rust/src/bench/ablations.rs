@@ -1,0 +1,174 @@
+//! Ablations of the design choices DESIGN.md calls out (not paper
+//! figures, but the knobs behind them):
+//!
+//! - **A1 — verification interval K_C**: the fused-ABFT overhead as a
+//!   function of the rank-k step size. Smaller intervals catch more
+//!   errors per run but pay more O(m+n) verifications and thinner
+//!   packing; the paper picks K_C = the GEMM's cache-blocking step.
+//! - **A2 — DTRSM panel width**: the diagonal-solve vs panel-GEMM split
+//!   (§3.2.2's "minimize B" argument inverts once the diagonal solve is
+//!   vectorized — measured, this is why the profile ships B = 64).
+//! - **A3 — thread scaling**: the parallel row-band GEMM, plain and
+//!   fused-ABFT, 1..=4 threads — FT protection is band-local so its
+//!   overhead must not grow with the thread count.
+
+use anyhow::Result;
+
+use crate::bench::harness::{self, header, print_rows, BenchCtx, Row};
+use crate::blas::level3::{self, GemmParams};
+use crate::blas::parallel;
+use crate::ft::abft_fused;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// A1: fused-ABFT overhead vs verification interval K_C.
+pub fn ablation_kc(ctx: &mut BenchCtx) -> Result<()> {
+    header("Ablation A1", "fused-ABFT overhead vs verification interval K_C");
+    let n = if ctx.quick { 256 } else { 384 };
+    let mut rng = Rng::new(0xA1);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let base_params = ctx.profile.gemm;
+
+    let mut table = Vec::new();
+    for kc in [16usize, 32, 64, 128, 256] {
+        let params = GemmParams { kc, ..base_params };
+        let mut c1 = vec![0.0; n * n];
+        let mut c2 = vec![0.0; n * n];
+        let (ori, ft) = ctx.time_pair(
+            || {
+                c1.fill(0.0);
+                level3::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c1,
+                              &params);
+            },
+            || {
+                c2.fill(0.0);
+                std::hint::black_box(abft_fused::dgemm_abft_fused(
+                    n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c2, &params,
+                    &[]));
+            },
+        );
+        let intervals = n.div_ceil(kc);
+        table.push((format!("kc={kc} ({intervals} intervals)"), ori, ft,
+                    None));
+    }
+    harness::print_overhead_table("interval", &table);
+    println!("(more intervals -> more correctable errors per run, more \
+              verification passes; the profile ships kc={} — the GEMM's \
+              own cache-blocking step)", base_params.kc);
+    Ok(())
+}
+
+/// A2: tuned DTRSM wallclock vs panel width.
+pub fn ablation_trsm_panel(ctx: &mut BenchCtx) -> Result<()> {
+    header("Ablation A2", "DTRSM panel width (diagonal solve vs GEMM split)");
+    let n = if ctx.quick { 384 } else { 768 };
+    let mut rng = Rng::new(0xA2);
+    let l = Matrix::random_lower_triangular(n, &mut rng);
+    let b0 = Matrix::random(n, n, &mut rng);
+    let params = ctx.profile.gemm;
+    let fl = (n * n * n) as f64;
+
+    let mut rows = Vec::new();
+    for panel in [8usize, 16, 32, 64, 128] {
+        let s = ctx.time(|| {
+            let mut b = b0.data.clone();
+            level3::dtrsm_llnn(n, n, &l.data, &mut b, panel, &params);
+            std::hint::black_box(&b);
+        });
+        rows.push(Row {
+            label: format!("dtrsm panel={panel}"),
+            gflops: stats::gflops(fl, s.mean),
+            seconds: s.mean,
+            note: if panel == ctx.profile.trsm_panel {
+                "<- profile default".into()
+            } else {
+                String::new()
+            },
+        });
+    }
+    print_rows(&rows);
+    Ok(())
+}
+
+/// A3: thread scaling of the row-band GEMM, plain vs fused-ABFT.
+pub fn ablation_threads(ctx: &mut BenchCtx) -> Result<()> {
+    header("Ablation A3", "parallel row-band GEMM scaling (plain vs FT)");
+    let n = if ctx.quick { 256 } else { 512 };
+    let mut rng = Rng::new(0xA3);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let params = ctx.profile.gemm;
+    let fl = 2.0 * (n * n * n) as f64;
+
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let s = ctx.time(|| {
+            let mut c = vec![0.0; n * n];
+            parallel::dgemm_mt(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c,
+                               &params, threads);
+            std::hint::black_box(&c);
+        });
+        rows.push(Row {
+            label: format!("dgemm_mt   t={threads}"),
+            gflops: stats::gflops(fl, s.mean),
+            seconds: s.mean,
+            note: String::new(),
+        });
+        let s = ctx.time(|| {
+            let mut c = vec![0.0; n * n];
+            std::hint::black_box(parallel::dgemm_abft_fused_mt(
+                n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c, &params,
+                threads, &[]));
+            std::hint::black_box(&c);
+        });
+        rows.push(Row {
+            label: format!("dgemm_ft_mt t={threads}"),
+            gflops: stats::gflops(fl, s.mean),
+            seconds: s.mean,
+            note: "band-local ABFT".into(),
+        });
+    }
+    print_rows(&rows);
+    println!("(FT state is band-local: the FT/plain gap must stay flat \
+              as threads grow)");
+    Ok(())
+}
+
+/// A4: weighted (double) checksum vs row+column locate — overhead of the
+/// two single-error location schemes (paper §2.1 cites both).
+pub fn ablation_weighted(ctx: &mut BenchCtx) -> Result<()> {
+    header("Ablation A4",
+           "error location scheme: row+column vs weighted double checksum");
+    let n = if ctx.quick { 256 } else { 384 };
+    let mut rng = Rng::new(0xA4);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let params = ctx.profile.gemm;
+
+    let mut c1 = vec![0.0; n * n];
+    let mut c2 = vec![0.0; n * n];
+    let (rc, wt) = ctx.time_pair(
+        || {
+            c1.fill(0.0);
+            std::hint::black_box(abft_fused::dgemm_abft_fused(
+                n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c1, &params, &[]));
+        },
+        || {
+            c2.fill(0.0);
+            std::hint::black_box(
+                crate::ft::abft_weighted::dgemm_abft_weighted(
+                    n, n, n, &a.data, &b.data, &mut c2, &params, &[]));
+        },
+    );
+    let table = vec![
+        ("row+column (fused §5.2)".to_string(), rc, rc, None),
+        ("weighted double checksum".to_string(), rc, wt, None),
+    ];
+    harness::print_overhead_table("scheme", &table);
+    println!("(the weighted scheme locates the row from the two row-space \
+              checksums alone — no column checksums at all — at the cost \
+              of one extra weighted encoding stream)");
+    Ok(())
+}

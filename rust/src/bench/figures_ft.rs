@@ -1,0 +1,380 @@
+//! Fault-tolerance figures: Fig. 8 (ABFT fusion), Fig. 9 (FT overhead for
+//! eight routines), Figs. 10/11 (performance under error injection).
+
+use anyhow::Result;
+use std::hint::black_box;
+
+use crate::bench::harness::{self, header, print_rows, row, BenchCtx, Row};
+use crate::blas::{level2, level3, naive, Impl};
+use crate::config::Profile;
+use crate::coordinator::request::{BlasRequest, BlasResult};
+use crate::coordinator::router::execute_native;
+use crate::ft::abft;
+use crate::ft::injector::Fault;
+use crate::ft::policy::FtPolicy;
+use crate::util::matrix::{allclose, Matrix};
+use crate::util::rng::Rng;
+
+fn n3(ctx: &BenchCtx) -> usize {
+    if ctx.quick { 256 } else { 512 }
+}
+
+/// Fig. 8a: fused ABFT vs ABFT-on-third-party, with and without errors.
+pub fn fig8a(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 8a", "ABFT DGEMM: fused vs third-party, w/ and w/o errors");
+    let mut rng = Rng::new(88);
+    let n = n3(ctx);
+    let params = ctx.profile.gemm;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let fl = 2.0 * (n * n * n) as f64;
+    let fault = Fault { step: 1, i: n / 3, j: n / 2, delta: 1e4 };
+
+    let mut rows = Vec::new();
+    // baseline: unprotected tuned GEMM
+    let mut c = vec![0.0; n * n];
+    rows.push(row(ctx, &format!("dgemm/tuned (no FT) n={n}"), fl, "baseline", || {
+        for v in c.iter_mut() { *v = 0.0; }
+        level3::dgemm(n, n, n, 1.0, &a.data, &b.data, 1.0, &mut c, &params);
+    }));
+    // unfused ABFT, no errors
+    let mut c = vec![0.0; n * n];
+    rows.push(row(ctx, "abft-unfused (3rd-party), clean", fl,
+                  "separate checksum passes", || {
+        for v in c.iter_mut() { *v = 0.0; }
+        black_box(abft::dgemm_abft_unfused(
+            n, n, n, params.kc, &a.data, &b.data, &mut c,
+            |ap, bp, cc, mm, kk| {
+                level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc, &params)
+            },
+            None));
+    }));
+    // unfused ABFT, with error (paper: extra column-checksum pass on error)
+    let mut c = vec![0.0; n * n];
+    rows.push(row(ctx, "abft-unfused (3rd-party), 1 error", fl, "", || {
+        for v in c.iter_mut() { *v = 0.0; }
+        black_box(abft::dgemm_abft_unfused(
+            n, n, n, params.kc, &a.data, &b.data, &mut c,
+            |ap, bp, cc, mm, kk| {
+                level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc, &params)
+            },
+            Some((fault.step, fault.i, fault.j, fault.delta))));
+    }));
+    print_rows(&rows);
+    let base = rows[0].seconds;
+    println!("unfused overhead: clean {:+.2}%  with-error {:+.2}%  \
+              (paper on AVX-512: ~9% clean, ~15% with errors)",
+             harness::overhead_pct(base, rows[1].seconds),
+             harness::overhead_pct(base, rows[2].seconds));
+
+    // fused path (PJRT artifact): ori vs fused-ABFT artifact
+    if ctx.pjrt.is_some() {
+        println!("-- fused (Pallas kernel, PJRT) --");
+        let mut rows = Vec::new();
+        for np in [256usize, 512] {
+            let a = Matrix::random(np, np, &mut rng);
+            let b = Matrix::random(np, np, &mut rng);
+            let flp = 2.0 * (np * np * np) as f64;
+            let req = BlasRequest::Dgemm {
+                alpha: 1.0, a: a.clone(), b: b.clone(), beta: 0.0,
+                c: Matrix::zeros(np, np),
+            };
+            let pj = ctx.pjrt.as_ref().unwrap();
+            if !pj.supports(&req, FtPolicy::None) {
+                continue;
+            }
+            pj.execute(&req, FtPolicy::None, None)?;
+            let s_ori = ctx.time(|| {
+                ctx.pjrt.as_ref().unwrap()
+                    .execute(&req, FtPolicy::None, None).unwrap();
+            });
+            rows.push(Row { label: format!("dgemm/pjrt ori n={np}"),
+                            gflops: flp / s_ori.mean / 1e9,
+                            seconds: s_ori.mean, note: "".into() });
+            ctx.pjrt.as_ref().unwrap().execute(&req, FtPolicy::Hybrid, None)?;
+            let s_ft = ctx.time(|| {
+                ctx.pjrt.as_ref().unwrap()
+                    .execute(&req, FtPolicy::Hybrid, None).unwrap();
+            });
+            rows.push(Row { label: format!("dgemm/pjrt fused-abft n={np}"),
+                            gflops: flp / s_ft.mean / 1e9,
+                            seconds: s_ft.mean,
+                            note: format!("ovhd {:+.2}% (paper: 2.9%)",
+                                harness::overhead_pct(s_ori.mean, s_ft.mean)) });
+        }
+        print_rows(&rows);
+    }
+    Ok(())
+}
+
+/// Fig. 8b: unfused-ABFT overhead as a function of the backing library.
+pub fn fig8b(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 8b", "ABFT overhead by backing library (unfused)");
+    let mut rng = Rng::new(89);
+    let n = n3(ctx);
+    let params = ctx.profile.gemm;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+
+    // baseline = the same kc-paneled GEMM loop WITHOUT checksums, so the
+    // difference is exactly the unfused checksum traffic the paper blames
+    let panel_gemm = |gemm: &mut dyn FnMut(&[f64], &[f64], &mut [f64], usize, usize),
+                      c: &mut [f64]| {
+        let mut p0 = 0;
+        while p0 < n {
+            let kcb = params.kc.min(n - p0);
+            let mut ap = vec![0.0; n * kcb];
+            for i in 0..n {
+                ap[i * kcb..(i + 1) * kcb]
+                    .copy_from_slice(&a.data[i * n + p0..i * n + p0 + kcb]);
+            }
+            let bp = &b.data[p0 * n..(p0 + kcb) * n];
+            gemm(&ap, bp, c, n, kcb);
+            p0 += kcb;
+        }
+    };
+    let mut table = Vec::new();
+    // naive backend
+    let mut c1 = vec![0.0; n * n];
+    let mut c2 = vec![0.0; n * n];
+    let (base, ft) = ctx.time_pair(
+        || {
+            for v in c1.iter_mut() { *v = 0.0; }
+            let mut g = |ap: &[f64], bp: &[f64], cc: &mut [f64], mm: usize, kk: usize|
+                naive::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc);
+            panel_gemm(&mut g, &mut c1);
+        },
+        || {
+            for v in c2.iter_mut() { *v = 0.0; }
+            black_box(abft::dgemm_abft_unfused(
+                n, n, n, params.kc, &a.data, &b.data, &mut c2,
+                |ap, bp, cc, mm, kk| naive::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc),
+                None));
+        },
+    );
+    table.push(("on-naive(LAPACK-sim)".to_string(), base, ft, None));
+    // tuned backend
+    let mut c1 = vec![0.0; n * n];
+    let mut c2 = vec![0.0; n * n];
+    let (base, ft) = ctx.time_pair(
+        || {
+            for v in c1.iter_mut() { *v = 0.0; }
+            let mut g = |ap: &[f64], bp: &[f64], cc: &mut [f64], mm: usize, kk: usize|
+                level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc, &params);
+            panel_gemm(&mut g, &mut c1);
+        },
+        || {
+            for v in c2.iter_mut() { *v = 0.0; }
+            black_box(abft::dgemm_abft_unfused(
+                n, n, n, params.kc, &a.data, &b.data, &mut c2,
+                |ap, bp, cc, mm, kk| {
+                    level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc, &params)
+                },
+                None));
+        },
+    );
+    table.push(("on-tuned(FT-BLAS Ori)".to_string(), base, ft, None));
+    harness::print_overhead_table("backend", &table);
+    println!("(paper Fig 8b: the faster the backing GEMM, the larger the \
+              relative cost of the memory-bound checksum passes — fusion \
+              removes it)");
+    let naive_ovhd = harness::overhead_pct(table[0].1, table[0].2);
+    let tuned_ovhd = harness::overhead_pct(table[1].1, table[1].2);
+    harness::expect(tuned_ovhd > naive_ovhd,
+                    "unfused overhead grows with backend speed")?;
+    Ok(())
+}
+
+/// Fig. 9: eight routines — Ori vs FT vs the references.
+pub fn fig9(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 9", "FT-BLAS: Ori vs FT across eight routines");
+    let profile = ctx.profile.clone();
+    let mut rng = Rng::new(99);
+    let n1 = if ctx.quick { 1 << 20 } else { 4 << 20 };
+    let n2 = if ctx.quick { 512 } else { 1024 };
+    let n3v = if ctx.quick { 256 } else { 512 };
+
+    let reqs: Vec<(BlasRequest, f64)> = {
+        let x = rng.normal_vec(n1);
+        let a2 = Matrix::random(n2, n2, &mut rng);
+        let l2m = Matrix::random_lower_triangular(n2, &mut rng);
+        let a3 = Matrix::random(n3v, n3v, &mut rng);
+        let b3 = Matrix::random(n3v, n3v, &mut rng);
+        let c3 = Matrix::random(n3v, n3v, &mut rng);
+        let l3m = Matrix::random_lower_triangular(n3v, &mut rng);
+        vec![
+            (BlasRequest::Dscal { alpha: 1.0000001, x: x.clone() }, n1 as f64),
+            (BlasRequest::Dnrm2 { x: x.clone() }, 2.0 * n1 as f64),
+            (BlasRequest::Dgemv { alpha: 1.0, a: a2.clone(),
+                                  x: rng.normal_vec(n2), beta: 0.0,
+                                  y: rng.normal_vec(n2) },
+             2.0 * (n2 * n2) as f64),
+            (BlasRequest::Dtrsv { a: l2m.clone(), b: rng.normal_vec(n2) },
+             (n2 * n2) as f64),
+            (BlasRequest::Dgemm { alpha: 1.0, a: a3.clone(), b: b3.clone(),
+                                  beta: 0.0, c: c3.clone() },
+             2.0 * (n3v * n3v * n3v) as f64),
+            (BlasRequest::Dsymm { alpha: 1.0, a: a3.clone(), b: b3.clone(),
+                                  beta: 0.0, c: c3.clone() },
+             2.0 * (n3v * n3v * n3v) as f64),
+            (BlasRequest::Dtrmm { alpha: 1.0, a: l3m.clone(), b: b3.clone() },
+             (n3v * n3v * n3v) as f64),
+            (BlasRequest::Dtrsm { a: l3m.clone(), b: b3.clone() },
+             (n3v * n3v * n3v) as f64),
+        ]
+    };
+
+    let mut table = Vec::new();
+    for (req, _fl) in &reqs {
+        let (ori, ft) = ctx.time_pair(
+            || {
+                black_box(execute_native(req, Impl::Tuned, &profile,
+                                         FtPolicy::None, None));
+            },
+            || {
+                black_box(execute_native(req, Impl::Tuned, &profile,
+                                         FtPolicy::Hybrid, None));
+            },
+        );
+        let paper = match req.routine() {
+            "dscal" => Some(0.36),
+            "dnrm2" => Some(0.97),
+            "dgemv" => Some(1.79),
+            "dtrsv" => Some(3.10),
+            "dgemm" => Some(2.94),
+            "dsymm" => Some(1.62),
+            "dtrmm" => Some(2.14),
+            "dtrsm" => Some(2.35),
+            _ => None,
+        };
+        table.push((format!("{} n={}", req.routine(), req.dim()),
+                    ori, ft, paper));
+    }
+    harness::print_overhead_table("routine", &table);
+    println!("(native L3 FT is the fused §5.2 scheme — ft/abft_fused.rs; \
+              the unfused §5.1 baseline is measured in fig8a/fig8b and the \
+              Pallas fused kernel on the PJRT backend in fig8a)");
+    Ok(())
+}
+
+/// The shared body of Figs. 10 and 11: inject 20 errors per run into
+/// DGEMV/DTRSV/DGEMM/DTRSM under the hybrid policy, verify the output
+/// against the unprotected oracle, and compare throughput.
+fn injection_figure(ctx: &mut BenchCtx, profile: &Profile) -> Result<()> {
+    let mut rng = Rng::new(1010);
+    let n2 = if ctx.quick { 512 } else { 1024 };
+    let n3v = if ctx.quick { 256 } else { 512 };
+    let a2 = Matrix::random(n2, n2, &mut rng);
+    let l2m = Matrix::random_lower_triangular(n2, &mut rng);
+    let a3 = Matrix::random(n3v, n3v, &mut rng);
+    let b3 = Matrix::random(n3v, n3v, &mut rng);
+    let l3m = Matrix::random_lower_triangular(n3v, &mut rng);
+
+    let reqs = vec![
+        BlasRequest::Dgemv { alpha: 1.0, a: a2.clone(), x: rng.normal_vec(n2),
+                             beta: 0.0, y: rng.normal_vec(n2) },
+        BlasRequest::Dtrsv { a: l2m.clone(), b: rng.normal_vec(n2) },
+        BlasRequest::Dgemm { alpha: 1.0, a: a3.clone(), b: b3.clone(),
+                             beta: 0.0, c: Matrix::zeros(n3v, n3v) },
+        BlasRequest::Dtrsm { a: l3m.clone(), b: b3.clone() },
+    ];
+
+    // 20 errors per run (the paper's §6.3 setup): we re-run the routine 20
+    // times, striking a different position each run — equivalent error
+    // rate, and each strike is verified corrected.
+    const ERRORS: usize = 20;
+    let mut table = Vec::new();
+    for req in &reqs {
+        let oracle = execute_native(req, Impl::Naive, profile,
+                                    FtPolicy::None, None);
+        // under injection: each timed call carries one planned fault
+        let dim = req.dim();
+        let mut strike = 0usize;
+        let mut detected = 0u64;
+        let mut all_correct = true;
+        let (ori, ft) = ctx.time_pair(
+            || {
+                black_box(execute_native(req, Impl::Tuned, profile,
+                                         FtPolicy::None, None));
+            },
+            || {
+                let fault = Fault {
+                    step: 1 + (strike % 3),
+                    i: (strike * 37) % dim.min(64),
+                    j: (strike * 61) % dim,
+                    delta: 1e4 + strike as f64,
+                };
+                strike = (strike + 1) % ERRORS;
+                let resp = execute_native(req, Impl::Tuned, profile,
+                                          FtPolicy::Hybrid, Some(fault));
+                detected += resp.ft.errors_detected;
+                all_correct &= results_match(&resp.result, &oracle.result, 1e-7);
+            },
+        );
+        harness::expect(detected > 0,
+                        &format!("{}: injected faults detected", req.routine()))?;
+        harness::expect(all_correct,
+                        &format!("{}: outputs equal oracle under injection",
+                                 req.routine()))?;
+        table.push((format!("{} n={} (+{} err)", req.routine(), req.dim(),
+                            ERRORS),
+                    ori, ft, Some(3.22)));
+    }
+    harness::print_overhead_table("routine", &table);
+    println!("(paper Figs 10/11: 2.47%-3.22% overhead under injection; all \
+              errors detected and corrected — verified against the oracle \
+              here)");
+    Ok(())
+}
+
+fn results_match(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
+    match (a, b) {
+        (BlasResult::Scalar(x), BlasResult::Scalar(y)) => {
+            (x - y).abs() <= tol * (1.0 + y.abs())
+        }
+        (BlasResult::Vector(x), BlasResult::Vector(y)) => allclose(x, y, tol, tol),
+        (BlasResult::Matrix(x), BlasResult::Matrix(y)) => {
+            allclose(&x.data, &y.data, tol, tol)
+        }
+        _ => false,
+    }
+}
+
+/// Fig. 10: performance under error injection (Skylake-sim profile).
+pub fn fig10(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 10", "Performance under error injection (skylake_sim)");
+    let profile = ctx.profile.clone();
+    injection_figure(ctx, &profile)
+}
+
+/// Fig. 11: the same experiment on the second machine profile
+/// (cascade_sim — DESIGN.md substitution #4).
+pub fn fig11(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 11", "Performance under error injection (cascade_sim)");
+    let profile = Profile::cascade_sim();
+    injection_figure(ctx, &profile)?;
+    // DTRSV ladder across sizes, as the paper plots ms-scale times
+    let mut rng = Rng::new(111);
+    let mut rows = Vec::new();
+    for n in [256usize, 512, 1024] {
+        if ctx.quick && n > 512 {
+            break;
+        }
+        let l = Matrix::random_lower_triangular(n, &mut rng);
+        let b = rng.normal_vec(n);
+        let fl = (n * n) as f64;
+        let mut x = b.clone();
+        rows.push(row(ctx, &format!("dtrsv/tuned+FT n={n}"), fl, "", || {
+            x.copy_from_slice(&b);
+            black_box(crate::ft::dmr::dtrsv_ft(n, &l.data, &mut x,
+                                               profile.trsv_panel, None));
+        }));
+        let mut x = b.clone();
+        rows.push(row(ctx, &format!("dtrsv/blocked(B=64) n={n}"), fl, "", || {
+            x.copy_from_slice(&b);
+            level2::dtrsv_lower(n, &l.data, &mut x, 64);
+        }));
+    }
+    print_rows(&rows);
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! Performance figures without fault injection: Table 1, Figs. 5-7.
+
+use anyhow::Result;
+use std::hint::black_box;
+
+use crate::bench::harness::{self, header, print_rows, row, BenchCtx, Row};
+use crate::blas::{blocked, level1, level2, level3, naive, stepwise};
+use crate::coordinator::request::BlasRequest;
+use crate::ft::policy::FtPolicy;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+fn l1_n(ctx: &BenchCtx) -> usize {
+    // paper: averaged over 5e6..7e6 elements
+    if ctx.quick { 1 << 20 } else { 6_000_000 }
+}
+
+fn l2_n(ctx: &BenchCtx) -> usize {
+    if ctx.quick { 512 } else { 2048 }
+}
+
+fn l3_n(ctx: &BenchCtx) -> usize {
+    if ctx.quick { 256 } else { 768 }
+}
+
+/// Table 1: the optimization-feature survey, reproduced as the feature
+/// matrix of our own variants plus microbench evidence per feature.
+pub fn table1(_ctx: &mut BenchCtx) -> Result<()> {
+    header("Table 1", "Level-1 routine optimization survey (our variants)");
+    println!("{:<10} {:<28} {:<28}", "routine", "blocked (OpenBLAS-sim)",
+             "tuned (FT-BLAS Ori)");
+    let rows = [
+        ("dscal", "SIMD-width, unroll, NO prefetch", "SIMD-width, unroll, prefetch"),
+        ("dnrm2", "SSE2-width (2 lanes)", "AVX512-width (8 lanes), prefetch"),
+        ("ddot", "single accumulator", "4 accumulator chains, prefetch"),
+        ("daxpy", "scalar loop", "SIMD-width, unroll, prefetch"),
+        ("dcopy", "memcpy", "memcpy"),
+    ];
+    for (r, b, t) in rows {
+        println!("{r:<10} {b:<28} {t:<28}");
+    }
+    println!("(paper Table 1: OpenBLAS ships DNRM2 as SSE-only and DSCAL \
+              without prefetch — the gaps FT-BLAS exploits)");
+    Ok(())
+}
+
+/// Fig. 5: selected Level-1/2 routines vs the baselines.
+pub fn fig5(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 5", "Level-1/2 BLAS: FT-BLAS Ori vs naive/blocked/XLA");
+    let mut rng = Rng::new(55);
+    let n1 = l1_n(ctx);
+
+    // ---- DSCAL
+    let x0 = rng.normal_vec(n1);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut x = x0.clone();
+    rows.push(row(ctx, "dscal/naive(LAPACK-sim)", n1 as f64, "", || {
+        naive::dscal(black_box(1.0000001), &mut x);
+    }));
+    let mut x = x0.clone();
+    rows.push(row(ctx, "dscal/blocked(OpenBLAS-sim, no prefetch)", n1 as f64,
+                  "", || {
+        blocked::dscal(black_box(1.0000001), &mut x);
+    }));
+    let mut x = x0.clone();
+    rows.push(row(ctx, "dscal/tuned(FT-BLAS Ori)", n1 as f64, "+prefetch", || {
+        level1::dscal(black_box(1.0000001), &mut x);
+    }));
+    print_rows(&rows);
+    harness::expect(rows[2].gflops >= rows[1].gflops * 0.97,
+                    "paper: tuned DSCAL >= blocked (+3.85%)")?;
+
+    // ---- DNRM2
+    let x = rng.normal_vec(n1);
+    let mut rows = Vec::new();
+    rows.push(row(ctx, "dnrm2/naive", 2.0 * n1 as f64, "scaled loop", || {
+        black_box(naive::dnrm2(black_box(&x)));
+    }));
+    rows.push(row(ctx, "dnrm2/blocked(SSE2-sim)", 2.0 * n1 as f64, "2 lanes", || {
+        black_box(blocked::dnrm2(black_box(&x)));
+    }));
+    rows.push(row(ctx, "dnrm2/tuned(AVX512-sim)", 2.0 * n1 as f64, "8 lanes", || {
+        black_box(level1::dnrm2(black_box(&x)));
+    }));
+    print_rows(&rows);
+    harness::expect(rows[2].gflops > rows[1].gflops,
+                    "paper: AVX-512 DNRM2 beats SSE2 (+17.89%)")?;
+
+    // ---- DGEMV
+    let n2 = l2_n(ctx);
+    let a = Matrix::random(n2, n2, &mut rng);
+    let xv = rng.normal_vec(n2);
+    let y0 = rng.normal_vec(n2);
+    let fl = 2.0 * (n2 * n2) as f64;
+    let mut rows = Vec::new();
+    let mut y = y0.clone();
+    rows.push(row(ctx, "dgemv/naive", fl, "", || {
+        naive::dgemv(n2, n2, 1.0, &a.data, &xv, 0.0, &mut y);
+    }));
+    let mut y = y0.clone();
+    rows.push(row(ctx, "dgemv/blocked(cache-blocked A)", fl, "", || {
+        blocked::dgemv(n2, n2, 1.0, &a.data, &xv, 0.0, &mut y);
+    }));
+    let mut y = y0.clone();
+    rows.push(row(ctx, "dgemv/tuned(Ri=4 reuse, streaming A)", fl, "", || {
+        level2::dgemv(n2, n2, 1.0, &a.data, &xv, 0.0, &mut y);
+    }));
+    print_rows(&rows);
+
+    // ---- DTRSV (panel ablation: the paper's B=4 vs OpenBLAS B=64)
+    let l = Matrix::random_lower_triangular(n2, &mut rng);
+    let b = rng.normal_vec(n2);
+    let fl = (n2 * n2) as f64;
+    let mut rows = Vec::new();
+    let mut xs = b.clone();
+    rows.push(row(ctx, "dtrsv/naive", fl, "", || {
+        xs.copy_from_slice(&b);
+        naive::dtrsv_lower(n2, &l.data, &mut xs);
+    }));
+    let mut xs = b.clone();
+    rows.push(row(ctx, "dtrsv/blocked(B=64, OpenBLAS default)", fl, "", || {
+        xs.copy_from_slice(&b);
+        level2::dtrsv_lower(n2, &l.data, &mut xs, 64);
+    }));
+    let mut xs = b.clone();
+    rows.push(row(ctx, "dtrsv/tuned(B=4, paper's choice)", fl, "", || {
+        xs.copy_from_slice(&b);
+        level2::dtrsv_lower(n2, &l.data, &mut xs, 4);
+    }));
+    print_rows(&rows);
+
+    // ---- PJRT (XLA / MKL-sim) columns where artifacts exist
+    if ctx.pjrt.is_some() {
+        pjrt_l12_rows(ctx)?;
+    }
+    Ok(())
+}
+
+fn pjrt_l12_rows(ctx: &mut BenchCtx) -> Result<()> {
+    let mut rng = Rng::new(56);
+    println!("-- PJRT artifact backend (XLA, closed-source-vendor stand-in) --");
+    let mut rows = Vec::new();
+    let n = 262144;
+    {
+        let pjrt = ctx.pjrt.as_ref().unwrap();
+        let req = BlasRequest::Dscal { alpha: 1.01, x: rng.normal_vec(n) };
+        if pjrt.supports(&req, FtPolicy::None) {
+            pjrt.execute(&req, FtPolicy::None, None)?; // warm compile
+            let s = ctx.time(|| {
+                ctx.pjrt.as_ref().unwrap()
+                    .execute(&req, FtPolicy::None, None).unwrap();
+            });
+            rows.push(Row {
+                label: format!("dscal/pjrt n={n}"),
+                gflops: n as f64 / s.mean / 1e9,
+                seconds: s.mean,
+                note: "incl. host<->device copies".into(),
+            });
+        }
+    }
+    for n2 in [256usize, 512, 1024] {
+        let a = Matrix::random(n2, n2, &mut rng);
+        let req = BlasRequest::Dgemv {
+            alpha: 1.0, a, x: rng.normal_vec(n2), beta: 0.0,
+            y: rng.normal_vec(n2),
+        };
+        let supported = ctx.pjrt.as_ref().unwrap().supports(&req, FtPolicy::None);
+        if supported {
+            ctx.pjrt.as_ref().unwrap().execute(&req, FtPolicy::None, None)?;
+            let s = ctx.time(|| {
+                ctx.pjrt.as_ref().unwrap()
+                    .execute(&req, FtPolicy::None, None).unwrap();
+            });
+            rows.push(Row {
+                label: format!("dgemv/pjrt n={n2}"),
+                gflops: 2.0 * (n2 * n2) as f64 / s.mean / 1e9,
+                seconds: s.mean,
+                note: "".into(),
+            });
+        }
+    }
+    print_rows(&rows);
+    Ok(())
+}
+
+/// Fig. 6: Level-3 routines vs baselines.
+pub fn fig6(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 6", "Level-3 BLAS: DGEMM / DTRSM vs baselines");
+    let mut rng = Rng::new(66);
+    let n = l3_n(ctx);
+    let params = ctx.profile.gemm;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let c0 = Matrix::random(n, n, &mut rng);
+    let fl = 2.0 * (n * n * n) as f64;
+
+    let mut rows = Vec::new();
+    if n <= 512 || !ctx.quick {
+        let mut c = c0.data.clone();
+        rows.push(row(ctx, &format!("dgemm/naive n={n}"), fl, "", || {
+            naive::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c);
+        }));
+    }
+    let mut c = c0.data.clone();
+    rows.push(row(ctx, &format!("dgemm/tuned packed+blocked n={n}"), fl,
+                  "mc/nc/kc blocking", || {
+        level3::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c, &params);
+    }));
+    print_rows(&rows);
+
+    // ---- DTRSM: scalar diagonal (blocked) vs tuned diagonal kernel
+    let l = Matrix::random_lower_triangular(n, &mut rng);
+    let fl = (n * n * n) as f64;
+    let mut rows = Vec::new();
+    let mut x = b.data.clone();
+    rows.push(row(ctx, &format!("dtrsm/naive n={n}"), fl, "", || {
+        x.copy_from_slice(&b.data);
+        naive::dtrsm_llnn(n, n, &l.data, &mut x);
+    }));
+    let mut x = b.data.clone();
+    rows.push(row(ctx, &format!("dtrsm/blocked(scalar diag) n={n}"), fl,
+                  "the 'unoptimized prototype'", || {
+        x.copy_from_slice(&b.data);
+        blocked::dtrsm_llnn(n, n, &l.data, &mut x);
+    }));
+    let mut x = b.data.clone();
+    rows.push(row(ctx, &format!("dtrsm/tuned(reciprocal diag) n={n}"), fl,
+                  "paper's macro_kernel_trsm", || {
+        x.copy_from_slice(&b.data);
+        level3::dtrsm_llnn(n, n, &l.data, &mut x, ctx.profile.trsm_panel,
+                           &params);
+    }));
+    print_rows(&rows);
+    harness::expect(
+        rows[2].gflops >= rows[1].gflops,
+        "paper: tuned DTRSM beats the scalar-diagonal prototype (+22.19%)")?;
+
+    // PJRT dgemm artifacts
+    if ctx.pjrt.is_some() {
+        println!("-- PJRT artifact backend --");
+        let mut rows = Vec::new();
+        for np in [128usize, 256, 512] {
+            let a = Matrix::random(np, np, &mut rng);
+            let b = Matrix::random(np, np, &mut rng);
+            let req = BlasRequest::Dgemm {
+                alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(np, np),
+            };
+            if ctx.pjrt.as_ref().unwrap().supports(&req, FtPolicy::None) {
+                ctx.pjrt.as_ref().unwrap().execute(&req, FtPolicy::None, None)?;
+                let s = ctx.time(|| {
+                    ctx.pjrt.as_ref().unwrap()
+                        .execute(&req, FtPolicy::None, None).unwrap();
+                });
+                rows.push(Row {
+                    label: format!("dgemm/pjrt n={np}"),
+                    gflops: 2.0 * (np * np * np) as f64 / s.mean / 1e9,
+                    seconds: s.mean,
+                    note: "".into(),
+                });
+            }
+        }
+        print_rows(&rows);
+    }
+    Ok(())
+}
+
+/// Fig. 7: the DSCAL DMR optimization ladder — FT overhead per step.
+pub fn fig7(ctx: &mut BenchCtx) -> Result<()> {
+    header("Fig 7", "DSCAL step-wise optimization, FT vs non-FT overhead");
+    let n = l1_n(ctx);
+    let mut rng = Rng::new(77);
+    let x0 = rng.normal_vec(n);
+    let alpha = 1.0000001; // keep values stable across many in-place reps
+
+    let mut table = Vec::new();
+    for step in stepwise::STEPS {
+        let mut xa = x0.clone();
+        let mut xb = x0.clone();
+        let (ori, ft) = ctx.time_pair(
+            || (step.ori)(black_box(alpha), &mut xa),
+            || {
+                black_box((step.ft)(black_box(alpha), &mut xb, None));
+            },
+        );
+        table.push((step.name.to_string(), ori, ft,
+                    Some(step.paper_overhead_pct)));
+    }
+    harness::print_overhead_table("step", &table);
+    let first = harness::overhead_pct(table[0].1, table[0].2);
+    let last = harness::overhead_pct(table[table.len() - 1].1,
+                                     table[table.len() - 1].2);
+    harness::expect(last < first,
+                    "paper: overhead falls monotonically 50.8% -> 0.36%")?;
+    Ok(())
+}

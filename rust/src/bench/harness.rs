@@ -1,0 +1,164 @@
+//! Measurement plumbing shared by all figure drivers.
+
+use anyhow::Result;
+
+use crate::config::Profile;
+use crate::coordinator::executor::PjrtExecutor;
+use crate::coordinator::pjrt_backend::PjrtBackend;
+use crate::util::stats::{self, Summary};
+
+/// Context for a bench run.
+pub struct BenchCtx {
+    pub profile: Profile,
+    /// Keep the executor alive for the PJRT backend's lifetime.
+    pub executor: Option<PjrtExecutor>,
+    pub pjrt: Option<PjrtBackend>,
+    /// Fewer reps / smaller sizes for CI-style runs.
+    pub quick: bool,
+    /// Measurement repetitions (the paper averages 20).
+    pub reps: usize,
+}
+
+impl BenchCtx {
+    /// Native-only context.
+    pub fn native(profile: Profile, quick: bool) -> BenchCtx {
+        let reps = if quick { 7 } else { 20 }; // paper: average of 20
+        BenchCtx { profile, executor: None, pjrt: None, quick, reps }
+    }
+
+    /// Context with the PJRT backend if artifacts exist.
+    pub fn with_artifacts(profile: Profile, quick: bool) -> BenchCtx {
+        let mut ctx = BenchCtx::native(profile, quick);
+        let dir = ctx.profile.artifact_path();
+        if dir.join("manifest.tsv").exists() {
+            match PjrtExecutor::spawn(dir.clone()) {
+                Ok(exec) => {
+                    match PjrtBackend::new(exec.handle.clone(), &dir) {
+                        Ok(backend) => {
+                            ctx.pjrt = Some(backend);
+                            ctx.executor = Some(exec);
+                        }
+                        Err(e) => eprintln!("[bench] no PJRT backend: {e}"),
+                    }
+                }
+                Err(e) => eprintln!("[bench] no PJRT executor: {e}"),
+            }
+        } else {
+            eprintln!("[bench] {} missing — PJRT columns skipped (run `make artifacts`)",
+                      dir.join("manifest.tsv").display());
+        }
+        ctx
+    }
+
+    /// Time a closure: warmup + reps, return summary of seconds.
+    pub fn time<F: FnMut()>(&self, f: F) -> Summary {
+        let warmup = if self.quick { 1 } else { 2 };
+        Summary::from_samples(&stats::time_reps(warmup, self.reps, f))
+    }
+
+    /// Time two closures with *interleaved* repetitions for overhead
+    /// comparisons (FT vs Ori). On a shared VM the machine's throughput
+    /// drifts on second scales, so independent minima of the two sides
+    /// can land in different throughput phases and invert a small
+    /// overhead. Back-to-back pairs share each phase, so the per-pair
+    /// time *ratio* is drift-immune: we report the best baseline time
+    /// and scale it by the median pair ratio.
+    pub fn time_pair<F: FnMut(), G: FnMut()>(&self, mut a: F, mut b: G)
+                                             -> (f64, f64) {
+        let warmup = if self.quick { 1 } else { 2 };
+        for _ in 0..warmup {
+            a();
+            b();
+        }
+        let reps = self.reps * 3; // overheads are small; oversample
+        let mut best_a = f64::INFINITY;
+        let mut ratios = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            a();
+            let ta = t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            b();
+            let tb = t0.elapsed().as_secs_f64();
+            best_a = best_a.min(ta);
+            ratios.push(tb / ta);
+        }
+        ratios.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let med = ratios[ratios.len() / 2];
+        (best_a, best_a * med)
+    }
+}
+
+/// A printed result row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub gflops: f64,
+    pub seconds: f64,
+    pub note: String,
+}
+
+/// Print a figure header.
+pub fn header(id: &str, title: &str) {
+    println!("\n=== {id}: {title} ===");
+}
+
+/// Print rows with a relative column against the first row.
+pub fn print_rows(rows: &[Row]) {
+    if rows.is_empty() {
+        return;
+    }
+    let base = rows[0].gflops;
+    println!("{:<38} {:>10} {:>12} {:>9}  {}", "impl", "GFLOPS", "time", "vs[0]",
+             "note");
+    for r in rows {
+        let rel = if base > 0.0 { r.gflops / base } else { 0.0 };
+        println!("{:<38} {:>10.3} {:>12} {:>8.3}x  {}",
+                 r.label, r.gflops,
+                 format!("{:.3}ms", r.seconds * 1e3), rel, r.note);
+    }
+}
+
+/// Convenience: measure a closure's mean seconds and build a row.
+pub fn row<F: FnMut()>(ctx: &BenchCtx, label: &str, flops: f64, note: &str,
+                       f: F) -> Row {
+    let s = ctx.time(f);
+    Row {
+        label: label.to_string(),
+        gflops: stats::gflops(flops, s.mean),
+        seconds: s.mean,
+        note: note.to_string(),
+    }
+}
+
+/// Percent overhead of the FT run relative to the baseline, in the
+/// paper's definition: the *performance drop* (P_ori − P_ft)/P_ori =
+/// 1 − t_ori/t_ft. (The paper's "50.8 %" step-0 overhead means the FT
+/// version runs at half the baseline's GFLOPS, i.e. 2× the time.)
+pub fn overhead_pct(base_secs: f64, ft_secs: f64) -> f64 {
+    if ft_secs <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - base_secs / ft_secs) * 100.0
+}
+
+pub fn print_overhead_table(title: &str,
+                            rows: &[(String, f64, f64, Option<f64>)]) {
+    // rows: (label, base_secs, ft_secs, paper_pct)
+    println!("{:<24} {:>12} {:>12} {:>10} {:>12}", title, "ori", "ft",
+             "ovhd%", "paper-ovhd%");
+    for (label, base, ft, paper) in rows {
+        println!("{:<24} {:>11.3}ms {:>11.3}ms {:>9.2}% {:>12}",
+                 label, base * 1e3, ft * 1e3, overhead_pct(*base, *ft),
+                 paper.map(|p| format!("{p:.2}%")).unwrap_or_else(|| "-".into()));
+    }
+}
+
+/// Assert-and-report helper used by benches that double as regression
+/// checks: warn loudly when a shape claim fails rather than panicking.
+pub fn expect(cond: bool, what: &str) -> Result<()> {
+    if !cond {
+        eprintln!("[bench][SHAPE-MISMATCH] {what}");
+    }
+    Ok(())
+}

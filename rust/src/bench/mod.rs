@@ -1,0 +1,45 @@
+//! Benchmark harness (deliverable (d)): regenerates every table and
+//! figure of the paper's evaluation section. criterion is not vendored in
+//! this offline image, so `rust/benches/*` are `harness = false` binaries
+//! that call into this module; `ftblas bench --exp <id>` reaches the same
+//! drivers directly.
+
+pub mod ablations;
+pub mod figures_ft;
+pub mod figures_perf;
+pub mod harness;
+
+pub use harness::{BenchCtx, Row};
+
+/// Run one experiment by id (table1, fig5..fig11).
+pub fn run(id: &str, ctx: &mut harness::BenchCtx) -> anyhow::Result<()> {
+    match id {
+        "table1" => figures_perf::table1(ctx),
+        "fig5" => figures_perf::fig5(ctx),
+        "fig6" => figures_perf::fig6(ctx),
+        "fig7" => figures_perf::fig7(ctx),
+        "fig8a" => figures_ft::fig8a(ctx),
+        "fig8b" => figures_ft::fig8b(ctx),
+        "fig9" => figures_ft::fig9(ctx),
+        "fig10" => figures_ft::fig10(ctx),
+        "fig11" => figures_ft::fig11(ctx),
+        "ablation-kc" => ablations::ablation_kc(ctx),
+        "ablation-trsm-panel" => ablations::ablation_trsm_panel(ctx),
+        "ablation-threads" => ablations::ablation_threads(ctx),
+        "ablation-weighted" => ablations::ablation_weighted(ctx),
+        "ablations" => {
+            ablations::ablation_kc(ctx)?;
+            ablations::ablation_trsm_panel(ctx)?;
+            ablations::ablation_threads(ctx)?;
+            ablations::ablation_weighted(ctx)
+        }
+        "all" => {
+            for id in ["table1", "fig5", "fig6", "fig7", "fig8a", "fig8b",
+                       "fig9", "fig10", "fig11"] {
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown experiment `{other}`")),
+    }
+}

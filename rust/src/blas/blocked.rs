@@ -1,0 +1,234 @@
+//! The "OpenBLAS/BLIS stand-in" (DESIGN.md substitution #2): competent
+//! cache-blocked kernels that deliberately carry the exact
+//! under-optimizations the paper's Table 1 and §3 call out, so the
+//! benches reproduce the paper's *relative* gaps:
+//!
+//! - `dscal`: vectorized chunks but **no software prefetch** (the paper's
+//!   3.85 % DSCAL gap).
+//! - `dnrm2`: narrow 2-lane chunks standing in for the legacy **SSE2**
+//!   path OpenBLAS ships (the paper's 17.89 % DNRM2 gap).
+//! - `dtrsv`: panel size **B = 64** (OpenBLAS's `common.h` default; the
+//!   paper tunes B = 4 for its 11.17 % gap).
+//! - `dtrsm`: GEMM frame for the panel update but a **scalar diagonal
+//!   solver** ("an under-optimized prototype", the paper's 22.19 % gap).
+//! - `dgemm`: the same packed/blocked frame as the tuned kernel (the
+//!   paper reports < ±0.5 % vs OpenBLAS DGEMM).
+
+use crate::blas::level3::{self, GemmParams};
+
+const SSE_LANES: usize = 2; // legacy 128-bit SSE2 = 2 doubles
+
+/// DSCAL without prefetch (otherwise the tuned chunked loop).
+pub fn dscal(alpha: f64, x: &mut [f64]) {
+    const STEP: usize = 8 * 4;
+    let n = x.len();
+    let main = n - n % STEP;
+    let mut i = 0;
+    while i < main {
+        for l in 0..STEP {
+            x[i + l] *= alpha;
+        }
+        i += STEP;
+    }
+    for v in &mut x[main..] {
+        *v *= alpha;
+    }
+}
+
+/// DAXPY, vectorized, no prefetch.
+pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// DDOT with a single accumulator chain (no ILP unrolling).
+pub fn ddot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// DNRM2 via narrow SSE2-width chunks (Table 1: OpenBLAS DNRM2 is
+/// "AVX or earlier").
+pub fn dnrm2(x: &[f64]) -> f64 {
+    let n = x.len();
+    let main = n - n % SSE_LANES;
+    let mut acc = [0.0f64; SSE_LANES];
+    let mut i = 0;
+    while i < main {
+        for (l, a) in acc.iter_mut().enumerate() {
+            let v = x[i + l];
+            *a += v * v;
+        }
+        i += SSE_LANES;
+    }
+    let mut ssq: f64 = acc.iter().sum();
+    for v in &x[main..] {
+        ssq += v * v;
+    }
+    if ssq.is_finite() && ssq > f64::MIN_POSITIVE {
+        ssq.sqrt()
+    } else {
+        crate::blas::naive::dnrm2(x)
+    }
+}
+
+/// DGEMV with cache blocking of A (the strategy the paper argues *against*
+/// for DGEMV — extra pointer bookkeeping, same loads).
+pub fn dgemv(m: usize, n: usize, alpha: f64, a: &[f64], x: &[f64],
+             beta: f64, y: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    const JBLK: usize = 512;
+    let mut tmp = vec![0.0; m];
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = JBLK.min(n - j0);
+        for i in 0..m {
+            let row = &a[i * n + j0..i * n + j0 + jb];
+            let xs = &x[j0..j0 + jb];
+            let mut acc = 0.0;
+            for (av, xv) in row.iter().zip(xs) {
+                acc += av * xv;
+            }
+            tmp[i] += acc;
+        }
+        j0 += JBLK;
+    }
+    for i in 0..m {
+        y[i] = alpha * tmp[i] + beta * y[i];
+    }
+}
+
+/// DTRSV with the OpenBLAS default panel B = 64.
+pub fn dtrsv_lower(n: usize, a: &[f64], x: &mut [f64]) {
+    crate::blas::level2::dtrsv_lower(n, a, x, 64);
+}
+
+/// DGEMM: same frame as tuned (paper: < ±0.5 % difference).
+pub fn dgemm(m: usize, n: usize, k: usize, alpha: f64, a: &[f64], b: &[f64],
+             beta: f64, c: &mut [f64]) {
+    level3::dgemm(m, n, k, alpha, a, b, beta, c, &GemmParams::default());
+}
+
+/// DSYMM via the same frame.
+pub fn dsymm_lower(m: usize, n: usize, alpha: f64, a: &[f64], b: &[f64],
+                   beta: f64, c: &mut [f64]) {
+    level3::dsymm_lower(m, n, alpha, a, b, beta, c, &GemmParams::default());
+}
+
+/// DTRMM via the same frame.
+pub fn dtrmm_lower(m: usize, n: usize, alpha: f64, a: &[f64], b: &mut [f64]) {
+    level3::dtrmm_lower(m, n, alpha, a, b, &GemmParams::default());
+}
+
+/// DTRSM: GEMM panel update + **scalar** diagonal solver (the
+/// "under-optimized prototype" the paper beats by 22.19 %).
+pub fn dtrsm_llnn(m: usize, n: usize, a: &[f64], b: &mut [f64]) {
+    const PANEL: usize = 32;
+    let params = GemmParams::default();
+    let mut i = 0;
+    while i < m {
+        let pb = PANEL.min(m - i);
+        if i > 0 {
+            let mut apanel = vec![0.0; pb * i];
+            for r in 0..pb {
+                apanel[r * i..(r + 1) * i]
+                    .copy_from_slice(&a[(i + r) * m..(i + r) * m + i]);
+            }
+            let xdone = b[..i * n].to_vec();
+            let (_, btail) = b.split_at_mut(i * n);
+            level3::dgemm(pb, n, i, -1.0, &apanel, &xdone, 1.0,
+                          &mut btail[..pb * n], &params);
+        }
+        // scalar diagonal solve: per-element divisions, no vectorization,
+        // column-major walk (pessimal stride) — the unoptimized prototype
+        for j in 0..n {
+            for r in 0..pb {
+                let gi = i + r;
+                let mut acc = b[gi * n + j];
+                for p in 0..r {
+                    acc -= a[gi * m + i + p] * b[(i + p) * n + j];
+                }
+                b[gi * n + j] = acc / a[gi * m + gi];
+            }
+        }
+        i += pb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::check::{check, ensure, ensure_close};
+    use crate::util::matrix::{allclose, Matrix};
+
+    #[test]
+    fn all_match_naive() {
+        check("blocked-matches-naive", 25, |g| {
+            let n = g.dim(1, 90);
+            let alpha = g.rng.range(-2.0, 2.0);
+            // dscal
+            let x0 = g.rng.normal_vec(n);
+            let mut a1 = x0.clone();
+            let mut a2 = x0.clone();
+            dscal(alpha, &mut a1);
+            naive::dscal(alpha, &mut a2);
+            ensure(a1 == a2, "dscal")?;
+            // ddot/dnrm2
+            let y0 = g.rng.normal_vec(n);
+            ensure_close(ddot(&x0, &y0), naive::ddot(&x0, &y0), 1e-12, "ddot")?;
+            ensure_close(dnrm2(&x0), naive::dnrm2(&x0), 1e-12, "dnrm2")
+        });
+    }
+
+    #[test]
+    fn dgemv_matches_naive() {
+        check("blocked-dgemv", 20, |g| {
+            let m = g.dim(1, 80);
+            let n = g.dim(1, 700);
+            let a = Matrix::random(m, n, &mut g.rng);
+            let x = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(m);
+            let mut y1 = y0.clone();
+            let mut y2 = y0;
+            dgemv(m, n, 1.2, &a.data, &x, -0.3, &mut y1);
+            naive::dgemv(m, n, 1.2, &a.data, &x, -0.3, &mut y2);
+            ensure(allclose(&y1, &y2, 1e-10, 1e-10), "blocked dgemv mismatch")
+        });
+    }
+
+    #[test]
+    fn dtrsm_matches_naive() {
+        check("blocked-dtrsm", 15, |g| {
+            let m = g.dim(1, 70);
+            let n = g.dim(1, 50);
+            let a = Matrix::random_lower_triangular(m, &mut g.rng);
+            let b0 = Matrix::random(m, n, &mut g.rng);
+            let mut x1 = b0.data.clone();
+            let mut x2 = b0.data;
+            dtrsm_llnn(m, n, &a.data, &mut x1);
+            naive::dtrsm_llnn(m, n, &a.data, &mut x2);
+            ensure(allclose(&x1, &x2, 1e-9, 1e-9), "blocked dtrsm mismatch")
+        });
+    }
+
+    #[test]
+    fn dtrsv_matches_naive() {
+        check("blocked-dtrsv", 15, |g| {
+            let n = g.dim(1, 150);
+            let a = Matrix::random_lower_triangular(n, &mut g.rng);
+            let b = g.rng.normal_vec(n);
+            let mut x1 = b.clone();
+            let mut x2 = b;
+            dtrsv_lower(n, &a.data, &mut x1);
+            naive::dtrsv_lower(n, &a.data, &mut x2);
+            ensure(allclose(&x1, &x2, 1e-9, 1e-9), "blocked dtrsv mismatch")
+        });
+    }
+}

@@ -1,0 +1,50 @@
+//! The pure-Rust BLAS substrate (paper §3).
+//!
+//! Three implementations of every routine, standing in for the paper's
+//! comparison libraries (DESIGN.md substitution #2):
+//!
+//! | variant   | stands in for       | character                           |
+//! |-----------|---------------------|-------------------------------------|
+//! | [`naive`] | LAPACK reference    | textbook triple loops               |
+//! | [`blocked`]| OpenBLAS / BLIS    | cache-blocked, but with the exact under-optimizations the paper calls out (TRSV B=64, scalar TRSM diagonal solver, no prefetch in SCAL) |
+//! | [`level1`]/[`level2`]/[`level3`] | FT-BLAS "Ori" | the tuned kernels: chunked+unrolled L1, register-reuse GEMV (R_i=4), B=4 TRSV, packed GEMM with an unrolled micro kernel, reciprocal-diagonal TRSM |
+//!
+//! [`stepwise`] holds the Fig. 7 DSCAL optimization ladder (six steps,
+//! FT and non-FT at each step).
+//!
+//! All matrices are dense row-major `&[f64]` with explicit dimensions;
+//! triangular routines read the lower triangle (the paper restricts its
+//! presentation to the same case).
+
+pub mod blocked;
+pub mod level1;
+pub mod level2;
+pub mod level3;
+pub mod naive;
+pub mod parallel;
+pub mod stepwise;
+
+/// Which implementation variant to dispatch to (coordinator backends and
+/// bench baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Impl {
+    /// Textbook loops — LAPACK-reference stand-in.
+    Naive,
+    /// Cache-blocked with the paper's called-out under-optimizations —
+    /// OpenBLAS/BLIS stand-in.
+    Blocked,
+    /// The tuned FT-BLAS kernels.
+    Tuned,
+}
+
+impl Impl {
+    pub const ALL: [Impl; 3] = [Impl::Naive, Impl::Blocked, Impl::Tuned];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Impl::Naive => "naive",
+            Impl::Blocked => "blocked",
+            Impl::Tuned => "tuned",
+        }
+    }
+}

@@ -1,0 +1,456 @@
+//! Naive reference implementations — the LAPACK-reference stand-in
+//! (DESIGN.md substitution #2) and the oracle every other Rust variant is
+//! tested against. Textbook loops, no blocking, no unrolling.
+
+/// x := alpha * x
+pub fn dscal(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// y := alpha * x + y
+pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// dot(x, y)
+pub fn ddot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// ||x||_2 with overflow-safe scaling (reference-BLAS style).
+pub fn dnrm2(x: &[f64]) -> f64 {
+    let amax = x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let ssq: f64 = x.iter().map(|v| (v / amax) * (v / amax)).sum();
+    amax * ssq.sqrt()
+}
+
+/// sum |x_i|
+pub fn dasum(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// y := x
+pub fn dcopy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// swap x and y
+pub fn dswap(x: &mut [f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        std::mem::swap(a, b);
+    }
+}
+
+/// Apply a Givens rotation: (x, y) := (c x + s y, c y - s x)
+pub fn drot(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        let (xa, yb) = (*a, *b);
+        *a = c * xa + s * yb;
+        *b = c * yb - s * xa;
+    }
+}
+
+/// Modified Givens rotation, BLAS DROTM. `param = [flag, h11, h21, h12,
+/// h22]`; the flag selects which H entries are implied (reference BLAS
+/// semantics: -2 identity, -1 full H, 0 unit diagonal, 1 unit
+/// off-diagonal).
+pub fn drotm(x: &mut [f64], y: &mut [f64], param: &[f64; 5]) {
+    assert_eq!(x.len(), y.len());
+    let flag = param[0];
+    let (h11, h21, h12, h22) = match flag {
+        f if f == -2.0 => return,
+        f if f == -1.0 => (param[1], param[2], param[3], param[4]),
+        f if f == 0.0 => (1.0, param[2], param[3], 1.0),
+        _ => (param[1], -1.0, 1.0, param[4]),
+    };
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        let (xa, yb) = (*a, *b);
+        *a = h11 * xa + h12 * yb;
+        *b = h21 * xa + h22 * yb;
+    }
+}
+
+/// Index of max |x_i| (first occurrence), BLAS IDAMAX.
+pub fn idamax(x: &[f64]) -> usize {
+    let mut best = 0;
+    let mut bv = 0.0f64;
+    for (i, v) in x.iter().enumerate() {
+        if v.abs() > bv {
+            bv = v.abs();
+            best = i;
+        }
+    }
+    best
+}
+
+/// y := alpha * A x + beta * y; A is (m x n) row-major.
+pub fn dgemv(m: usize, n: usize, alpha: f64, a: &[f64], x: &[f64],
+             beta: f64, y: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += a[i * n + j] * x[j];
+        }
+        y[i] = alpha * acc + beta * y[i];
+    }
+}
+
+/// y := alpha * A^T x + beta * y; A is (m x n) row-major, x len m, y len n.
+pub fn dgemv_t(m: usize, n: usize, alpha: f64, a: &[f64], x: &[f64],
+               beta: f64, y: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    for (yj, yv) in y.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for i in 0..m {
+            acc += a[i * n + yj] * x[i];
+        }
+        *yv = alpha * acc + beta * *yv;
+    }
+}
+
+/// A := alpha * x y^T + A; A is (m x n) row-major.
+pub fn dger(m: usize, n: usize, alpha: f64, x: &[f64], y: &[f64], a: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    for i in 0..m {
+        let axi = alpha * x[i];
+        for j in 0..n {
+            a[i * n + j] += axi * y[j];
+        }
+    }
+}
+
+/// x := tril(A) x (lower-triangular matrix-vector product).
+pub fn dtrmv_lower(n: usize, a: &[f64], x: &mut [f64]) {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(x.len(), n);
+    // walk rows bottom-up so x[j<i] are still the inputs
+    for i in (0..n).rev() {
+        let mut acc = 0.0;
+        for j in 0..=i {
+            acc += a[i * n + j] * x[j];
+        }
+        x[i] = acc;
+    }
+}
+
+/// y := alpha * sym(A) x + beta * y, A referenced by its lower triangle.
+pub fn dsymv_lower(n: usize, alpha: f64, a: &[f64], x: &[f64],
+                   beta: f64, y: &mut [f64]) {
+    for i in 0..n {
+        let mut acc = 0.0;
+        for j in 0..n {
+            let aij = if j <= i { a[i * n + j] } else { a[j * n + i] };
+            acc += aij * x[j];
+        }
+        y[i] = alpha * acc + beta * y[i];
+    }
+}
+
+/// Solve tril(A) x = b in place (x starts as b), non-unit diagonal.
+pub fn dtrsv_lower(n: usize, a: &[f64], x: &mut [f64]) {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(x.len(), n);
+    for i in 0..n {
+        let mut acc = x[i];
+        for j in 0..i {
+            acc -= a[i * n + j] * x[j];
+        }
+        x[i] = acc / a[i * n + i];
+    }
+}
+
+/// C := alpha * A B + beta * C; A (m x k), B (k x n), C (m x n), row-major.
+pub fn dgemm(m: usize, n: usize, k: usize, alpha: f64, a: &[f64], b: &[f64],
+             beta: f64, c: &mut [f64]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+/// C := alpha * sym(A) B + beta * C, A (n x n) referenced by lower triangle.
+pub fn dsymm_lower(m: usize, n: usize, alpha: f64, a: &[f64], b: &[f64],
+                   beta: f64, c: &mut [f64]) {
+    assert_eq!(a.len(), m * m);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..m {
+                let aip = if p <= i { a[i * m + p] } else { a[p * m + i] };
+                acc += aip * b[p * n + j];
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+/// B := alpha * tril(A) B; A (m x m), B (m x n).
+pub fn dtrmm_lower(m: usize, n: usize, alpha: f64, a: &[f64], b: &mut [f64]) {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m * n);
+    for i in (0..m).rev() {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..=i {
+                acc += a[i * m + p] * b[p * n + j];
+            }
+            b[i * n + j] = alpha * acc;
+        }
+    }
+}
+
+/// C := alpha * A A^T + beta * C (lower triangle updated); A (n x k).
+pub fn dsyrk_lower(n: usize, k: usize, alpha: f64, a: &[f64],
+                   beta: f64, c: &mut [f64]) {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(c.len(), n * n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * a[j * k + p];
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+/// Solve tril(A) X = B in place (X starts as B); A (m x m), B (m x n).
+pub fn dtrsm_llnn(m: usize, n: usize, a: &[f64], b: &mut [f64]) {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m * n);
+    for i in 0..m {
+        for p in 0..i {
+            let aip = a[i * m + p];
+            if aip != 0.0 {
+                for j in 0..n {
+                    b[i * n + j] -= aip * b[p * n + j];
+                }
+            }
+        }
+        let d = a[i * m + i];
+        for j in 0..n {
+            b[i * n + j] /= d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::matrix::{allclose, Matrix};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dscal_basic() {
+        let mut x = vec![1.0, -2.0, 3.0];
+        dscal(2.0, &mut x);
+        assert_eq!(x, vec![2.0, -4.0, 6.0]);
+    }
+
+    #[test]
+    fn daxpy_basic() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        daxpy(3.0, &x, &mut y);
+        assert_eq!(y, vec![13.0, 26.0]);
+    }
+
+    #[test]
+    fn ddot_basic() {
+        assert_eq!(ddot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn dnrm2_345() {
+        assert!((dnrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-14);
+        assert_eq!(dnrm2(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn dnrm2_overflow_safe() {
+        let big = 1e200;
+        let n = dnrm2(&[3.0 * big, 4.0 * big]);
+        assert!((n - 5.0 * big).abs() / (5.0 * big) < 1e-14);
+    }
+
+    #[test]
+    fn idamax_first_max() {
+        assert_eq!(idamax(&[1.0, -5.0, 5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn drot_orthogonal() {
+        let x0: Vec<f64> = vec![1.0, 0.0];
+        let y0: Vec<f64> = vec![0.0, 1.0];
+        let mut x = x0.clone();
+        let mut y = y0.clone();
+        let (c, s) = (0.6, 0.8);
+        drot(&mut x, &mut y, c, s);
+        // rotation preserves sum of squares per position
+        for i in 0..2 {
+            let before = x0[i] * x0[i] + y0[i] * y0[i];
+            let after = x[i] * x[i] + y[i] * y[i];
+            assert!((before - after).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn dgemv_identity() {
+        let n = 4;
+        let a = Matrix::identity(n);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; n];
+        dgemv(n, n, 1.0, &a.data, &x, 0.0, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn dgemv_t_matches_transposed_gemv() {
+        let mut rng = Rng::new(21);
+        let (m, n) = (13, 7);
+        let a = Matrix::random(m, n, &mut rng);
+        let x = rng.normal_vec(m);
+        let mut y1 = rng.normal_vec(n);
+        let mut y2 = y1.clone();
+        dgemv_t(m, n, 1.5, &a.data, &x, 0.5, &mut y1);
+        let at = a.transpose();
+        dgemv(n, m, 1.5, &at.data, &x, 0.5, &mut y2);
+        assert!(allclose(&y1, &y2, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn dtrsv_solves() {
+        let mut rng = Rng::new(3);
+        let n = 32;
+        let a = Matrix::random_lower_triangular(n, &mut rng);
+        let b = rng.normal_vec(n);
+        let mut x = b.clone();
+        dtrsv_lower(n, &a.data, &mut x);
+        // residual L x - b
+        let mut r = vec![0.0; n];
+        dgemv(n, n, 1.0, &a.data, &x, 0.0, &mut r);
+        assert!(allclose(&r, &b, 1e-10, 1e-10));
+    }
+
+    #[test]
+    fn dgemm_identity() {
+        let n = 8;
+        let id = Matrix::identity(n);
+        let mut rng = Rng::new(4);
+        let b = Matrix::random(n, n, &mut rng);
+        let mut c = vec![0.0; n * n];
+        dgemm(n, n, n, 1.0, &id.data, &b.data, 0.0, &mut c);
+        assert!(allclose(&c, &b.data, 1e-14, 1e-14));
+    }
+
+    #[test]
+    fn dsymm_matches_dense() {
+        let mut rng = Rng::new(5);
+        let n = 16;
+        let a = Matrix::random_symmetric(n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let mut c1 = rng.normal_vec(n * n);
+        let mut c2 = c1.clone();
+        dsymm_lower(n, n, 1.2, &a.data, &b.data, 0.3, &mut c1);
+        dgemm(n, n, n, 1.2, &a.data, &b.data, 0.3, &mut c2);
+        assert!(allclose(&c1, &c2, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn dtrmm_matches_gemm_on_tril() {
+        let mut rng = Rng::new(6);
+        let n = 16;
+        let a = Matrix::random_lower_triangular(n, &mut rng);
+        let b0 = Matrix::random(n, n, &mut rng);
+        let mut b = b0.data.clone();
+        dtrmm_lower(n, n, 1.5, &a.data, &mut b);
+        let mut c = vec![0.0; n * n];
+        dgemm(n, n, n, 1.5, &a.data, &b0.data, 0.0, &mut c);
+        assert!(allclose(&b, &c, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn dsyrk_matches_gemm() {
+        let mut rng = Rng::new(7);
+        let (n, k) = (12, 20);
+        let a = Matrix::random(n, k, &mut rng);
+        let c0 = Matrix::random(n, n, &mut rng);
+        let mut c1 = c0.data.clone();
+        dsyrk_lower(n, k, 2.0, &a.data, 0.5, &mut c1);
+        let at = a.transpose();
+        let mut c2 = c0.data.clone();
+        dgemm(n, n, k, 2.0, &a.data, &at.data, 0.5, &mut c2);
+        for i in 0..n {
+            for j in 0..=i {
+                assert!((c1[i * n + j] - c2[i * n + j]).abs() < 1e-12);
+            }
+            for j in (i + 1)..n {
+                assert_eq!(c1[i * n + j], c0.data[i * n + j]); // untouched
+            }
+        }
+    }
+
+    #[test]
+    fn dtrsm_solves() {
+        let mut rng = Rng::new(8);
+        let (m, n) = (24, 16);
+        let a = Matrix::random_lower_triangular(m, &mut rng);
+        let b = Matrix::random(m, n, &mut rng);
+        let mut x = b.data.clone();
+        dtrsm_llnn(m, n, &a.data, &mut x);
+        let mut r = vec![0.0; m * n];
+        dgemm(m, n, m, 1.0, &a.data, &x, 0.0, &mut r);
+        assert!(allclose(&r, &b.data, 1e-10, 1e-10));
+    }
+
+    #[test]
+    fn dtrmv_matches_gemv_on_tril() {
+        let mut rng = Rng::new(9);
+        let n = 16;
+        let a = Matrix::random_lower_triangular(n, &mut rng);
+        let x0 = rng.normal_vec(n);
+        let mut x = x0.clone();
+        dtrmv_lower(n, &a.data, &mut x);
+        let mut y = vec![0.0; n];
+        dgemv(n, n, 1.0, &a.data, &x0, 0.0, &mut y);
+        assert!(allclose(&x, &y, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn dsymv_matches_gemv_dense() {
+        let mut rng = Rng::new(10);
+        let n = 16;
+        let a = Matrix::random_symmetric(n, &mut rng);
+        let x = rng.normal_vec(n);
+        let mut y1 = rng.normal_vec(n);
+        let mut y2 = y1.clone();
+        dsymv_lower(n, 0.7, &a.data, &x, 1.3, &mut y1);
+        dgemv(n, n, 0.7, &a.data, &x, 1.3, &mut y2);
+        assert!(allclose(&y1, &y2, 1e-12, 1e-12));
+    }
+}

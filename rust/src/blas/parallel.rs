@@ -1,0 +1,271 @@
+//! Multi-threaded Level-3 kernels — the paper's stated future work
+//! ("extending FT-BLAS to more architectures with parallel support"),
+//! built so the FT machinery composes with parallelism for free.
+//!
+//! Partitioning choices keep every thread's FT state private:
+//!
+//! - **DGEMM**: C is split into row bands; each thread runs the serial
+//!   (or fused-ABFT) frame on `C[band] += α·A[band]·B`. Bands share only
+//!   read-only A/B, so the fused checksum vectors, verification intervals
+//!   and corrections are all band-local — a strike in one band is
+//!   detected and corrected by the thread that computed it, concurrently
+//!   with the others.
+//! - **DTRSM**: the solve is sequential in M but *independent per column
+//!   of B*, so threads take column stripes (gathered to contiguous
+//!   stripes, solved, scattered back — the copies are O(m·n) against the
+//!   O(m²·n/2) solve).
+//!
+//! `threads = 1` falls through to the serial kernels (no spawn, no copy).
+
+use crate::blas::level3::{self, GemmParams};
+use crate::ft::abft_fused::{self, Strike};
+use crate::ft::FtReport;
+
+/// Split `m` rows into at most `threads` contiguous bands, MR-aligned so
+/// no band starts mid micro-tile.
+fn row_bands(m: usize, threads: usize, mr: usize) -> Vec<(usize, usize)> {
+    let t = threads.max(1).min(m.div_ceil(mr).max(1));
+    let per = m.div_ceil(t).div_ceil(mr) * mr;
+    let mut bands = Vec::new();
+    let mut i = 0;
+    while i < m {
+        let hi = (i + per).min(m);
+        bands.push((i, hi));
+        i = hi;
+    }
+    bands
+}
+
+/// C := α·A·B + β·C across `threads` row bands.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_mt(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                b: &[f64], beta: f64, c: &mut [f64], params: &GemmParams,
+                threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if threads <= 1 || m < 2 * params.mr {
+        level3::dgemm(m, n, k, alpha, a, b, beta, c, params);
+        return;
+    }
+    let bands = row_bands(m, threads, params.mr);
+    std::thread::scope(|s| {
+        let mut rest = c;
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let a_band = &a[lo * k..hi * k];
+            s.spawn(move || {
+                level3::dgemm(hi - lo, n, k, alpha, a_band, b, beta, band,
+                              params);
+            });
+        }
+    });
+}
+
+/// Fused-ABFT DGEMM across row bands: each band carries its own checksum
+/// state and verification intervals, so protection is per-thread with no
+/// shared mutable state. Strikes are routed to the band owning their row.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_abft_fused_mt(m: usize, n: usize, k: usize, alpha: f64,
+                           a: &[f64], b: &[f64], beta: f64, c: &mut [f64],
+                           params: &GemmParams, threads: usize,
+                           inject: &[Strike]) -> FtReport {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if threads <= 1 || m < 2 * params.mr {
+        return abft_fused::dgemm_abft_fused(m, n, k, alpha, a, b, beta, c,
+                                            params, inject);
+    }
+    let bands = row_bands(m, threads, params.mr);
+    let mut reports: Vec<FtReport> = Vec::new();
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut handles = Vec::new();
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let a_band = &a[lo * k..hi * k];
+            // re-home strikes into band-local row coordinates
+            let band_inject: Vec<Strike> = inject
+                .iter()
+                .filter(|&&(_, i, _, _)| i >= lo && i < hi)
+                .map(|&(st, i, j, d)| (st, i - lo, j, d))
+                .collect();
+            handles.push(s.spawn(move || {
+                abft_fused::dgemm_abft_fused(hi - lo, n, k, alpha, a_band, b,
+                                             beta, band, params, &band_inject)
+            }));
+        }
+        for h in handles {
+            reports.push(h.join().expect("gemm band thread panicked"));
+        }
+    });
+    let mut total = FtReport::none();
+    for r in reports {
+        total.merge(r);
+    }
+    total
+}
+
+/// Solve tril(A)·X = B in place across `threads` column stripes (each
+/// stripe is an independent triangular solve).
+pub fn dtrsm_llnn_mt(m: usize, n: usize, a: &[f64], b: &mut [f64],
+                     panel: usize, params: &GemmParams, threads: usize) {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m * n);
+    let t = threads.max(1).min(n);
+    if t <= 1 {
+        level3::dtrsm_llnn(m, n, a, b, panel, params);
+        return;
+    }
+    let per = n.div_ceil(t);
+    // gather stripes (column-major hops), solve in parallel, scatter back
+    let mut stripes: Vec<(usize, usize, Vec<f64>)> = Vec::new();
+    let mut j = 0;
+    while j < n {
+        let w = per.min(n - j);
+        let mut s = vec![0.0; m * w];
+        for r in 0..m {
+            s[r * w..(r + 1) * w].copy_from_slice(&b[r * n + j..r * n + j + w]);
+        }
+        stripes.push((j, w, s));
+        j += per;
+    }
+    std::thread::scope(|sc| {
+        for (_, w, stripe) in stripes.iter_mut() {
+            let w = *w;
+            sc.spawn(move || {
+                level3::dtrsm_llnn(m, w, a, stripe, panel, params);
+            });
+        }
+    });
+    for (j, w, stripe) in &stripes {
+        for r in 0..m {
+            b[r * n + j..r * n + j + w].copy_from_slice(
+                &stripe[r * w..(r + 1) * w]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::check::{check, ensure};
+    use crate::util::matrix::{allclose, Matrix};
+
+    #[test]
+    fn row_bands_cover_and_align() {
+        check("mt-bands", 50, |g| {
+            let m = 1 + g.rng.below(500);
+            let threads = 1 + g.rng.below(8);
+            let mr = [2, 4, 8][g.rng.below(3)];
+            let bands = row_bands(m, threads, mr);
+            ensure(bands.len() <= threads, "too many bands")?;
+            ensure(bands[0].0 == 0 && bands.last().unwrap().1 == m,
+                   "bands do not cover")?;
+            for w in bands.windows(2) {
+                ensure(w[0].1 == w[1].0, "gap between bands")?;
+            }
+            for &(lo, _) in &bands {
+                ensure(lo % mr == 0, "band not MR-aligned")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dgemm_mt_matches_serial() {
+        check("mt-gemm", 12, |g| {
+            let m = g.dim(1, 100);
+            let n = g.dim(1, 80);
+            let k = g.dim(1, 60);
+            let threads = 1 + g.rng.below(5);
+            let params = GemmParams::default();
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = c0.data.clone();
+            naive::dgemm(m, n, k, 0.7, &a.data, &b.data, -0.4, &mut want);
+            let mut c = c0.data.clone();
+            dgemm_mt(m, n, k, 0.7, &a.data, &b.data, -0.4, &mut c, &params,
+                     threads);
+            ensure(allclose(&c, &want, 1e-9, 1e-9),
+                   format!("mt gemm wrong ({threads} threads)"))
+        });
+    }
+
+    #[test]
+    fn dgemm_abft_mt_clean_and_injected() {
+        check("mt-gemm-ft", 10, |g| {
+            let m = g.dim(8, 96);
+            let n = g.dim(8, 64);
+            let k = g.dim(8, 64);
+            let threads = 2 + g.rng.below(3);
+            let params = GemmParams { kc: 16, ..Default::default() };
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let mut want = vec![0.0; m * n];
+            naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused_mt(m, n, k, 1.0, &a.data, &b.data, 0.0,
+                                          &mut c, &params, threads, &[]);
+            ensure(rep == FtReport::none(), "clean mt flagged")?;
+            ensure(allclose(&c, &want, 1e-9, 1e-9), "clean mt wrong")?;
+            // one strike per band-disjoint row region
+            let steps = k.div_ceil(params.kc);
+            let strikes: Vec<Strike> = vec![
+                (g.rng.below(steps), g.rng.below(m), g.rng.below(n), 4e4),
+            ];
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused_mt(m, n, k, 1.0, &a.data, &b.data, 0.0,
+                                          &mut c, &params, threads, &strikes);
+            ensure(rep.errors_corrected == 1,
+                   format!("mt inject not corrected: {rep:?}"))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8), "mt inject wrong")
+        });
+    }
+
+    #[test]
+    fn dgemm_abft_mt_concurrent_strikes_all_bands() {
+        // one strike per band, all corrected concurrently
+        let mut rng = crate::util::rng::Rng::new(0xBEEF);
+        let (m, n, k) = (128, 64, 64);
+        let threads = 4;
+        let params = GemmParams { kc: 32, ..Default::default() };
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let mut want = vec![0.0; m * n];
+        naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+        let bands = row_bands(m, threads, params.mr);
+        let strikes: Vec<Strike> = bands
+            .iter()
+            .map(|&(lo, hi)| (0, lo + (hi - lo) / 2, 7, 1e5))
+            .collect();
+        let mut c = vec![0.0; m * n];
+        let rep = dgemm_abft_fused_mt(m, n, k, 1.0, &a.data, &b.data, 0.0,
+                                      &mut c, &params, threads, &strikes);
+        assert_eq!(rep.errors_corrected, strikes.len() as u64);
+        assert!(allclose(&c, &want, 1e-8, 1e-8));
+    }
+
+    #[test]
+    fn dtrsm_mt_matches_serial() {
+        check("mt-trsm", 10, |g| {
+            let m = g.dim(4, 120);
+            let n = g.dim(1, 90);
+            let threads = 1 + g.rng.below(5);
+            let params = GemmParams::default();
+            let l = Matrix::random_lower_triangular(m, &mut g.rng);
+            let b0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = b0.data.clone();
+            naive::dtrsm_llnn(m, n, &l.data, &mut want);
+            let mut b = b0.data.clone();
+            dtrsm_llnn_mt(m, n, &l.data, &mut b, 32, &params, threads);
+            ensure(allclose(&b, &want, 1e-7, 1e-7),
+                   format!("mt trsm wrong ({threads} threads)"))
+        });
+    }
+}

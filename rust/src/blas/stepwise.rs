@@ -1,0 +1,478 @@
+//! The Fig. 7 optimization ladder: DSCAL with and without DMR at each of
+//! the paper's six assembly-optimization steps (§4.2-§4.4).
+//!
+//! | step | paper                         | this adaptation                     |
+//! |------|-------------------------------|-------------------------------------|
+//! | 0    | scalar mulsd + ucomisd + jne  | per-element dup + compare + branch  |
+//! | 1    | AVX-512 vmulpd + vpcmpeqd     | 8-wide chunk dup + chunk compare    |
+//! | 2    | + 4x loop unrolling           | + 4 chunks per iteration            |
+//! | 3    | + opmask kandw reduction      | + mismatch flags ANDed, 1 branch/32 |
+//! | 4    | + software pipelining + in-register checkpoint | + verification deferred one iteration, checkpoint kept in a register array |
+//! | 5    | + prefetcht0                  | + `_mm_prefetch` hints              |
+//!
+//! The duplicated stream multiplies by a `black_box`-laundered copy of
+//! alpha so the compiler cannot CSE the two streams into one — the Rust
+//! analog of really issuing the second vmulpd.
+//!
+//! Injection: `Some((idx, delta))` perturbs the *primary* stream's element
+//! `idx` by `delta` exactly once — the transient-ALU-flip model. Every FT
+//! step returns the number of detected errors; recovery recomputes the
+//! corrupted lane (the paper's third computation) and re-verifies.
+
+use std::hint::black_box;
+
+use crate::blas::level1::prefetch;
+
+pub const LANES: usize = 8;
+pub const UNROLL: usize = 4;
+
+/// One ladder step: paired FT / non-FT implementations.
+#[derive(Clone, Copy)]
+pub struct Step {
+    pub name: &'static str,
+    /// paper's measured FT overhead at this step, for EXPERIMENTS.md
+    pub paper_overhead_pct: f64,
+    pub ori: fn(f64, &mut [f64]),
+    pub ft: fn(f64, &mut [f64], Option<(usize, f64)>) -> usize,
+}
+
+pub const STEPS: [Step; 6] = [
+    Step { name: "scalar", paper_overhead_pct: 50.8, ori: v0_scalar, ft: v0_scalar_ft },
+    Step { name: "vectorized", paper_overhead_pct: 5.2, ori: v1_vec, ft: v1_vec_ft },
+    Step { name: "vec-unroll", paper_overhead_pct: 4.9, ori: v2_unroll, ft: v2_unroll_ft },
+    Step { name: "cmp-reduction", paper_overhead_pct: 2.7, ori: v2_unroll, ft: v3_cmpred_ft },
+    Step { name: "sw-pipelined", paper_overhead_pct: 0.67, ori: v4_pipe, ft: v4_pipe_ft },
+    Step { name: "prefetch", paper_overhead_pct: 0.36, ori: v5_prefetch, ft: v5_prefetch_ft },
+];
+
+#[cold]
+#[inline(never)]
+fn unrecoverable() -> ! {
+    panic!("FT-BLAS: duplicated streams disagree after recomputation — unrecoverable");
+}
+
+/// Recover one lane: recompute (third stream) and verify consensus with
+/// the duplicate (paper §4.4.2).
+#[inline(never)]
+#[cold]
+fn recover_lane(alpha: f64, xv: f64, dup: f64) -> f64 {
+    let third = black_box(alpha) * black_box(xv);
+    if third != dup {
+        unrecoverable();
+    }
+    third
+}
+
+// ---------------------------------------------------------- step 0 scalar
+
+/// A single scalar mulsd, pinned: the call boundary stops LLVM from
+/// auto-vectorizing the "scalar" baseline into vmulpd (which would
+/// misrepresent the paper's step 0) while still costing exactly one
+/// scalar multiply issue per element — so duplicating the instruction in
+/// the FT version really doubles the compute stream, which is what
+/// produces the paper's ~50 % step-0 overhead.
+#[inline(never)]
+fn mulsd(a: f64, b: f64) -> f64 {
+    a * b
+}
+
+pub fn v0_scalar(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = mulsd(alpha, *v); // mulsd
+    }
+}
+
+pub fn v0_scalar_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
+    let mut errs = 0;
+    let a2 = black_box(alpha);
+    for (i, v) in x.iter_mut().enumerate() {
+        let xv = *v;
+        let mut primary = mulsd(alpha, xv); // mulsd
+        if let Some((idx, delta)) = inject {
+            if idx == i {
+                primary += delta;
+            }
+        }
+        let dup = mulsd(a2, xv); // duplicated mulsd
+        if primary != dup {
+            // jne ERROR_HANDLER
+            errs += 1;
+            primary = recover_lane(alpha, xv, dup);
+        }
+        *v = primary;
+    }
+    errs
+}
+
+// ------------------------------------------------------ step 1 vectorized
+
+pub fn v1_vec(alpha: f64, x: &mut [f64]) {
+    let mut chunks = x.chunks_exact_mut(LANES);
+    for c in &mut chunks {
+        for v in c.iter_mut() {
+            *v *= alpha; // vmulpd
+        }
+    }
+    for v in chunks.into_remainder() {
+        *v *= alpha;
+    }
+}
+
+#[inline(always)]
+fn chunk_ft(alpha: f64, a2: f64, x: &mut [f64], base: usize,
+            inject: Option<(usize, f64)>) -> u32 {
+    // One DMR chunk, immediate verification interval: compute both
+    // streams, compare (kortestw analog), recover the lanes on the cold
+    // path while x still holds the inputs, then store once. `a2` is a
+    // black_box-laundered copy of alpha made ONCE by the caller: the
+    // compiler cannot prove a2 == alpha, so the dup stream really issues
+    // a second vmulpd, yet both streams vectorize — the paper's
+    // duplicated multiplies on ports 0/1.
+    // fixed-size array view: bound-check-free, so both multiply streams
+    // compile to one vmulpd each over a single loaded register
+    let xs: [f64; LANES] = x[base..base + LANES].try_into().unwrap();
+    let mut primary = [0.0f64; LANES];
+    let mut dup = [0.0f64; LANES];
+    for l in 0..LANES {
+        primary[l] = alpha * xs[l]; // vmulpd (stream 1)
+        dup[l] = a2 * xs[l]; // vmulpd (stream 2)
+    }
+    if let Some((idx, delta)) = inject {
+        if idx >= base && idx < base + LANES {
+            primary[idx - base] += delta;
+        }
+    }
+    let mut mask = 0u32;
+    if chunk_mismatch(&primary, &dup) {
+        mask = recover_chunk(alpha, x, base, &mut primary, &dup);
+    }
+    x[base..base + LANES].copy_from_slice(&primary); // single store site
+    mask
+}
+
+/// Bitwise chunk comparison (the vpcmpeqd + kortestw of §4.2.2): an XOR
+/// fold over the lane bit patterns — vectorizes to SIMD xor + or, one
+/// scalar test per chunk (NaN-safe: bit equality, not f64 equality).
+#[inline(always)]
+fn chunk_mismatch(primary: &[f64; LANES], dup: &[f64; LANES]) -> bool {
+    let mut diff = 0u64;
+    for l in 0..LANES {
+        diff |= primary[l].to_bits() ^ dup[l].to_bits();
+    }
+    diff != 0
+}
+
+/// Cold path: per-lane mask + third-stream recovery + consensus check.
+/// `x` still holds the original inputs when this runs.
+#[cold]
+#[inline(never)]
+fn recover_chunk(alpha: f64, x: &[f64], base: usize,
+                 primary: &mut [f64; LANES], dup: &[f64; LANES]) -> u32 {
+    let mask = lane_mask(primary, dup);
+    for l in 0..LANES {
+        if mask & (1 << l) != 0 {
+            primary[l] = recover_lane(alpha, x[base + l], dup[l]);
+        }
+    }
+    mask
+}
+
+#[cold]
+#[inline(never)]
+fn lane_mask(primary: &[f64; LANES], dup: &[f64; LANES]) -> u32 {
+    let mut mask = 0u32;
+    for l in 0..LANES {
+        mask |= ((primary[l] != dup[l]) as u32) << l;
+    }
+    mask
+}
+
+pub fn v1_vec_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
+    let n = x.len();
+    let main = n - n % LANES;
+    let a2 = black_box(alpha);
+    let mut errs = 0;
+    let mut i = 0;
+    while i < main {
+        // kortestw + jnc — one branch per chunk (8:1 ratio), recovery
+        // inside chunk_ft's cold path
+        errs += chunk_ft(alpha, a2, x, i, inject).count_ones() as usize;
+        i += LANES;
+    }
+    errs += v0_scalar_ft(alpha, &mut x[main..],
+                         inject.and_then(|(idx, d)| {
+                             (idx >= main).then(|| (idx - main, d))
+                         }));
+    errs
+}
+
+// -------------------------------------------------- step 2 + 4x unrolling
+
+pub fn v2_unroll(alpha: f64, x: &mut [f64]) {
+    const STEP: usize = LANES * UNROLL;
+    let mut chunks = x.chunks_exact_mut(STEP);
+    for c in &mut chunks {
+        for v in c.iter_mut() {
+            *v *= alpha; // 4x vmulpd per iteration
+        }
+    }
+    v1_vec(alpha, chunks.into_remainder());
+}
+
+pub fn v2_unroll_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
+    const STEP: usize = LANES * UNROLL;
+    let n = x.len();
+    let main = n - n % STEP;
+    let a2 = black_box(alpha);
+    let mut errs = 0;
+    let mut i = 0;
+    while i < main {
+        for u in 0..UNROLL {
+            // still one verification branch per chunk at this step
+            errs += chunk_ft(alpha, a2, x, i + u * LANES, inject)
+                .count_ones() as usize;
+        }
+        i += STEP;
+    }
+    errs += v1_vec_ft(alpha, &mut x[main..],
+                      inject.and_then(|(idx, d)| {
+                          (idx >= main).then(|| (idx - main, d))
+                      }));
+    errs
+}
+
+// --------------------------------------- step 3 + comparison reduction
+
+pub fn v3_cmpred_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
+    const STEP: usize = LANES * UNROLL;
+    let n = x.len();
+    let main = n - n % STEP;
+    let a2 = black_box(alpha);
+    let mut errs = 0;
+    let mut i = 0;
+    while i < main {
+        let mut reduced = 0u32; // kandw-accumulated opmask
+        let mut masks = [0u32; UNROLL];
+        for u in 0..UNROLL {
+            masks[u] = chunk_ft(alpha, a2, x, i + u * LANES, inject);
+            reduced |= masks[u]; // kandw reduction (inverted-sense OR here)
+        }
+        if reduced != 0 {
+            // single accounting branch per 4 chunks (32 elements);
+            // the lanes were already recovered inside chunk_ft
+            for m in masks {
+                errs += m.count_ones() as usize;
+            }
+        }
+        i += STEP;
+    }
+    errs += v1_vec_ft(alpha, &mut x[main..],
+                      inject.and_then(|(idx, d)| {
+                          (idx >= main).then(|| (idx - main, d))
+                      }));
+    errs
+}
+
+// ------------------------- step 4 + software pipelining + checkpointing
+
+pub fn v4_pipe(alpha: f64, x: &mut [f64]) {
+    // non-FT pipelined version: same instructions as v2_unroll — LLVM
+    // already performs the modulo scheduling the paper does by hand, so
+    // the ori side of this step is the unrolled kernel.
+    v2_unroll(alpha, x);
+}
+
+/// Pipelined FT (paper Fig. 3): iteration k's results are *stored before
+/// verification*; the original inputs are checkpointed in a register
+/// array (BS stage) and iteration k is verified while k+1 computes. On a
+/// detected error the checkpoint replays the corrupted iteration (R).
+pub fn v4_pipe_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
+    pipelined_ft::<false>(alpha, x, inject)
+}
+
+// ------------------------------------------------- step 5 + prefetching
+
+pub fn v5_prefetch(alpha: f64, x: &mut [f64]) {
+    const STEP: usize = LANES * UNROLL;
+    const DIST: usize = 128; // the paper's 1024-bit / 128-element distance
+    let mut chunks = x.chunks_exact_mut(STEP);
+    for c in &mut chunks {
+        prefetch(c.as_ptr().wrapping_add(DIST));
+        prefetch(c.as_ptr().wrapping_add(DIST + 16));
+        for v in c.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    v1_vec(alpha, chunks.into_remainder());
+}
+
+pub fn v5_prefetch_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
+    pipelined_ft::<true>(alpha, x, inject)
+}
+
+/// The shared pipelined DMR loop (steps 4-5; PREFETCH selects step 5).
+///
+/// Per 32-element iteration: load (L), both multiply streams (M1, M2),
+/// store the primary immediately (S — the store retires *before* the
+/// verification branch resolves, the paper's Fig. 3 S-before-C order),
+/// fold the comparison into one u64 (C), and only then branch. The
+/// loaded inputs `xs` are the in-register checkpoint (B): they are still
+/// live when the cold path runs, so recovery (R) replays the iteration
+/// with a third computation + consensus without any clean-path
+/// checkpoint traffic — the Rust analog of the paper's "unused register"
+/// checkpoint. Compared to step 3 this removes the per-chunk mask
+/// bookkeeping and lets every store issue without waiting on any
+/// comparison in program order.
+#[inline(always)]
+fn pipelined_ft<const PREFETCH: bool>(alpha: f64, x: &mut [f64],
+                                      inject: Option<(usize, f64)>) -> usize {
+    const STEP: usize = LANES * UNROLL;
+    const DIST: usize = 128;
+    let n = x.len();
+    let main = n - n % STEP;
+    let a2 = black_box(alpha);
+    let mut errs = 0;
+
+    let (inj_idx, inj_delta) = inject.unwrap_or((usize::MAX, 0.0));
+    let mut i = 0;
+    while i < main {
+        if PREFETCH {
+            prefetch(x.as_ptr().wrapping_add(i + DIST));
+            prefetch(x.as_ptr().wrapping_add(i + DIST + 16));
+        }
+        // the injected iteration takes the cold instantiation so the hot
+        // loop body carries no per-lane injection checks at all
+        if inj_idx >= i && inj_idx < i + STEP {
+            errs += pipelined_iter::<true>(alpha, a2, x, i,
+                                           (inj_idx, inj_delta));
+        } else {
+            errs += pipelined_iter::<false>(alpha, a2, x, i, (0, 0.0));
+        }
+        i += STEP;
+    }
+    errs += v1_vec_ft(alpha, &mut x[main..],
+                      inject.and_then(|(idx, d)| {
+                          (idx >= main).then(|| (idx - main, d))
+                      }));
+    errs
+}
+
+/// One 32-element pipelined iteration: L, M1+M2+C fused in one pass
+/// (both multiply streams and the comparison fold consume the loaded
+/// lane while it is live — no intermediate dup array), S before the
+/// branch resolves, and the loaded `xs` doubling as the in-register
+/// checkpoint for the cold replay path.
+#[inline(always)]
+fn pipelined_iter<const INJ: bool>(alpha: f64, a2: f64, x: &mut [f64],
+                                   i: usize, inj: (usize, f64)) -> usize {
+    const STEP: usize = LANES * UNROLL;
+    let xs: [f64; STEP] = x[i..i + STEP].try_into().unwrap(); // L (+B)
+    let mut out = [0.0f64; STEP];
+    let mut diff = 0u64;
+    for l in 0..STEP {
+        let mut p = alpha * xs[l]; // M1
+        let d = a2 * xs[l]; // M2
+        if INJ {
+            if i + l == inj.0 {
+                p += inj.1;
+            }
+        }
+        out[l] = p;
+        diff |= p.to_bits() ^ d.to_bits(); // C (folded)
+    }
+    x[i..i + STEP].copy_from_slice(&out); // S (before the branch)
+    if diff != 0 {
+        // R: replay from the in-register checkpoint (cold)
+        replay_iteration(alpha, x, i, &xs)
+    } else {
+        0
+    }
+}
+
+/// Cold path (R): replay a corrupted iteration from its checkpoint with
+/// a third computation + consensus check, fixing x in place. Returns the
+/// number of corrupted lanes.
+#[cold]
+#[inline(never)]
+fn replay_iteration(alpha: f64, x: &mut [f64], base: usize,
+                    ckpt: &[f64; LANES * UNROLL]) -> usize {
+    let mut errs = 0;
+    for (l, &orig) in ckpt.iter().enumerate() {
+        let r1 = black_box(alpha) * black_box(orig);
+        let r2 = black_box(alpha) * black_box(orig);
+        if r1 != r2 {
+            unrecoverable();
+        }
+        if x[base + l].to_bits() != r1.to_bits() {
+            errs += 1;
+            x[base + l] = r1;
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, ensure};
+
+    fn expected(alpha: f64, x: &[f64]) -> Vec<f64> {
+        x.iter().map(|v| alpha * v).collect()
+    }
+
+    #[test]
+    fn all_steps_match_without_injection() {
+        check("stepwise-clean", 30, |g| {
+            let n = g.dim(1, 300);
+            let alpha = g.rng.range(-3.0, 3.0);
+            let x0 = g.rng.normal_vec(n);
+            let want = expected(alpha, &x0);
+            for step in STEPS {
+                let mut a = x0.clone();
+                (step.ori)(alpha, &mut a);
+                ensure(a == want, format!("{} ori mismatch", step.name))?;
+                let mut b = x0.clone();
+                let errs = (step.ft)(alpha, &mut b, None);
+                ensure(errs == 0, format!("{} spurious errors", step.name))?;
+                ensure(b == want, format!("{} ft mismatch", step.name))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_steps_detect_and_correct_injection() {
+        check("stepwise-inject", 40, |g| {
+            let n = g.dim(2, 400);
+            let alpha = g.rng.range(0.5, 3.0);
+            let x0: Vec<f64> = (0..n).map(|_| g.rng.range(0.5, 2.0)).collect();
+            let idx = g.rng.below(n);
+            let delta = g.rng.range(1.0, 1e6);
+            let want = expected(alpha, &x0);
+            for step in STEPS {
+                let mut b = x0.clone();
+                let errs = (step.ft)(alpha, &mut b, Some((idx, delta)));
+                ensure(errs == 1,
+                       format!("{}: detected {errs} errors (idx={idx})", step.name))?;
+                ensure(b == want, format!("{} did not correct", step.name))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn injection_at_boundaries() {
+        let alpha = 2.0;
+        let n = 97; // forces scalar remainder paths
+        let x0: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let want = expected(alpha, &x0);
+        for idx in [0, 31, 32, 63, 95, 96] {
+            for step in STEPS {
+                let mut b = x0.clone();
+                let errs = (step.ft)(alpha, &mut b, Some((idx, 5.0)));
+                assert_eq!(errs, 1, "{} idx={idx}", step.name);
+                assert_eq!(b, want, "{} idx={idx}", step.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Runtime tuning profiles — the simulation substitute for the paper's two
+//! machines (Skylake Gold 5122 / Cascade Lake W-2255; DESIGN.md
+//! substitution #4). A profile fixes the native kernel block parameters,
+//! the artifact directory, and the coordinator's worker count.
+
+use crate::blas::level3::GemmParams;
+
+/// A machine tuning profile.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: &'static str,
+    pub gemm: GemmParams,
+    /// DTRSV panel size for the tuned kernel (paper: B = 4).
+    pub trsv_panel: usize,
+    /// DTRSM panel size for the tuned kernel.
+    pub trsm_panel: usize,
+    /// Coordinator worker threads.
+    pub workers: usize,
+    /// Artifact directory relative to the repo root.
+    pub artifact_dir: &'static str,
+}
+
+impl Profile {
+    /// Skylake-sim: the paper's primary testbed (Gold 5122).
+    pub fn skylake_sim() -> Profile {
+        Profile {
+            name: "skylake_sim",
+            gemm: GemmParams { mc: 128, nc: 256, kc: 128, mr: 4, nr: 8 },
+            trsv_panel: 4,
+            // swept in EXPERIMENTS.md §Perf: 64 balances the (vectorized)
+            // diagonal solve against per-panel GEMM packing overhead
+            trsm_panel: 64,
+            workers: 4,
+            artifact_dir: "artifacts",
+        }
+    }
+
+    /// Cascade-sim: the paper's second testbed (W-2255) — different cache
+    /// blocking and wider parallelism.
+    pub fn cascade_sim() -> Profile {
+        Profile {
+            name: "cascade_sim",
+            gemm: GemmParams { mc: 96, nc: 512, kc: 192, mr: 4, nr: 8 },
+            trsv_panel: 4,
+            trsm_panel: 64,
+            workers: 8,
+            artifact_dir: "artifacts/cascade_sim",
+        }
+    }
+
+    /// Resolve the artifact directory: the working directory first, then
+    /// the crate root (so examples/benches work from any cwd).
+    pub fn artifact_path(&self) -> std::path::PathBuf {
+        let rel = std::path::PathBuf::from(self.artifact_dir);
+        if rel.join("manifest.tsv").exists() {
+            return rel;
+        }
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(self.artifact_dir)
+    }
+
+    pub fn by_name(name: &str) -> Option<Profile> {
+        match name {
+            "skylake_sim" => Some(Profile::skylake_sim()),
+            "cascade_sim" => Some(Profile::cascade_sim()),
+            _ => None,
+        }
+    }
+}
+
+impl Default for Profile {
+    fn default() -> Self {
+        Profile::skylake_sim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_differ() {
+        let a = Profile::skylake_sim();
+        let b = Profile::cascade_sim();
+        assert_ne!(a.gemm.nc, b.gemm.nc);
+        assert_ne!(a.artifact_dir, b.artifact_dir);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(Profile::by_name("skylake_sim").unwrap().name, "skylake_sim");
+        assert_eq!(Profile::by_name("cascade_sim").unwrap().name, "cascade_sim");
+        assert!(Profile::by_name("epyc").is_none());
+    }
+}

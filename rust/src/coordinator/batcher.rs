@@ -1,0 +1,124 @@
+//! Batching queue: groups pending requests that share a (routine, shape)
+//! key so a worker drains a whole group in one pass (amortizing dispatch
+//! and, on the PJRT path, keeping one hot executable in the instruction
+//! cache — the serving analog of the paper's kernel locality argument).
+//!
+//! FIFO fairness is preserved across groups: groups are served in the
+//! arrival order of their oldest member.
+
+use std::collections::VecDeque;
+
+/// A queued item: an opaque payload plus its batch key.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub key: (&'static str, usize),
+    pub seq: u64,
+    pub item: T,
+}
+
+/// The batcher. Not thread-safe by itself; the server wraps it in a
+/// Mutex+Condvar.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<Pending<T>>,
+    next_seq: u64,
+    /// max items drained per batch
+    pub max_batch: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize) -> Batcher<T> {
+        Batcher { queue: VecDeque::new(), next_seq: 0, max_batch: max_batch.max(1) }
+    }
+
+    pub fn push(&mut self, key: (&'static str, usize), item: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Pending { key, seq, item });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Drain the next batch: the oldest request's group, up to max_batch
+    /// items, preserving arrival order within the group.
+    pub fn next_batch(&mut self) -> Vec<Pending<T>> {
+        let Some(front) = self.queue.front() else {
+            return Vec::new();
+        };
+        let key = front.key;
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some(p) = self.queue.pop_front() {
+            if p.key == key && batch.len() < self.max_batch {
+                batch.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.queue = rest;
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_group_by_key() {
+        let mut b = Batcher::new(8);
+        b.push(("dgemm", 256), 1);
+        b.push(("dscal", 1024), 2);
+        b.push(("dgemm", 256), 3);
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].item, 1);
+        assert_eq!(batch[1].item, 3);
+        assert_eq!(b.len(), 1);
+        let batch = b.next_batch();
+        assert_eq!(batch[0].item, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.push(("dscal", 64), i);
+        }
+        assert_eq!(b.next_batch().len(), 2);
+        assert_eq!(b.next_batch().len(), 2);
+        assert_eq!(b.next_batch().len(), 1);
+    }
+
+    #[test]
+    fn different_shapes_do_not_batch() {
+        let mut b = Batcher::new(8);
+        b.push(("dgemm", 128), 0);
+        b.push(("dgemm", 256), 1);
+        assert_eq!(b.next_batch().len(), 1);
+        assert_eq!(b.next_batch().len(), 1);
+    }
+
+    #[test]
+    fn fifo_across_groups() {
+        let mut b = Batcher::new(8);
+        b.push(("a", 1), 0);
+        b.push(("b", 1), 1);
+        b.push(("a", 1), 2);
+        b.push(("c", 1), 3);
+        let order: Vec<&'static str> = std::iter::from_fn(|| {
+            let batch = b.next_batch();
+            batch.first().map(|p| p.key.0)
+        })
+        .take(3)
+        .collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Dedicated PJRT executor thread.
+//!
+//! `runtime::Engine` is not `Send` (the xla crate's client is Rc-backed),
+//! so one thread owns it and serves artifact calls over channels. The
+//! handle is cheap to clone and `Send`, so native workers and the router
+//! can all submit work.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::{ArgView, Engine};
+
+/// Owned argument crossing the channel to the executor thread.
+#[derive(Clone, Debug)]
+pub enum OwnedArg {
+    Scalar(f64),
+    Vec1(Vec<f64>),
+    Mat(Vec<f64>, usize, usize),
+}
+
+impl OwnedArg {
+    fn view(&self) -> ArgView<'_> {
+        match self {
+            OwnedArg::Scalar(v) => ArgView::Scalar(*v),
+            OwnedArg::Vec1(v) => ArgView::Vec1(v),
+            OwnedArg::Mat(d, r, c) => ArgView::Mat(d, *r, *c),
+        }
+    }
+}
+
+enum Msg {
+    Call {
+        artifact: String,
+        args: Vec<OwnedArg>,
+        reply: Sender<Result<Vec<Vec<f64>>>>,
+    },
+    Warmup {
+        artifact: String,
+        reply: Sender<Result<()>>,
+    },
+    ListArtifacts {
+        reply: Sender<Vec<String>>,
+    },
+    Stats {
+        reply: Sender<(u64, u64)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the executor thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Msg>,
+}
+
+// Sender<T> is Send+Sync for Send T; Msg is Send.
+impl PjrtHandle {
+    /// Execute an artifact; blocks until the result crosses back.
+    pub fn call(&self, artifact: &str, args: Vec<OwnedArg>) -> Result<Vec<Vec<f64>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Call { artifact: artifact.to_string(), args, reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Pre-compile an artifact (moves compile cost off the request path).
+    pub fn warmup(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warmup { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    pub fn artifacts(&self) -> Result<Vec<String>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::ListArtifacts { reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))
+    }
+
+    /// (compiles, executions)
+    pub fn stats(&self) -> Result<(u64, u64)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Stats { reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// The executor: spawn with the artifact directory; join on drop of the
+/// last handle + shutdown.
+pub struct PjrtExecutor {
+    pub handle: PjrtHandle,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl PjrtExecutor {
+    pub fn spawn(artifact_dir: PathBuf) -> Result<PjrtExecutor> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || run_loop(artifact_dir, rx, ready_tx))
+            .expect("spawn pjrt executor");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor died during startup"))??;
+        Ok(PjrtExecutor { handle: PjrtHandle { tx }, thread: Some(thread) })
+    }
+}
+
+impl Drop for PjrtExecutor {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn run_loop(dir: PathBuf, rx: Receiver<Msg>, ready: Sender<Result<()>>) {
+    let mut engine = match Engine::new(&dir) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Call { artifact, args, reply } => {
+                let views: Vec<ArgView> = args.iter().map(|a| a.view()).collect();
+                let _ = reply.send(engine.call(&artifact, &views));
+            }
+            Msg::Warmup { artifact, reply } => {
+                let _ = reply.send(engine.ensure_compiled(&artifact));
+            }
+            Msg::ListArtifacts { reply } => {
+                let names = engine
+                    .manifest()
+                    .specs
+                    .iter()
+                    .map(|s| s.name.clone())
+                    .collect();
+                let _ = reply.send(names);
+            }
+            Msg::Stats { reply } => {
+                let _ = reply.send((engine.compiles, engine.executions));
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: typed BLAS requests routed to native or PJRT
+//! backends under an FT policy, with batching, a threaded server,
+//! metrics, and workload traces.
+//!
+//! Topology (the paper's contribution is the kernels; the coordinator is
+//! the serving shell around them — DESIGN.md §3):
+//!
+//! ```text
+//!   clients ──> server queue ──> batcher ──> router
+//!                                   │            ├─> native worker pool
+//!                                   │            └─> PJRT executor thread
+//!                                   └─< responses (+ FtReport, metrics)
+//! ```
+//!
+//! The PJRT engine is not `Send`, so exactly one executor thread owns it
+//! and serves artifact calls over channels ([`executor`]).
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+pub mod pjrt_backend;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod trace;
+
+pub use request::{BlasRequest, BlasResponse, Backend};

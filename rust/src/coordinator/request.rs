@@ -1,0 +1,254 @@
+//! Typed BLAS requests and responses — the coordinator's wire format.
+
+use crate::ft::FtReport;
+use crate::util::matrix::Matrix;
+
+/// Which backend executed (or should execute) a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Naive native loops (LAPACK-reference stand-in).
+    NativeNaive,
+    /// Blocked native kernels (OpenBLAS/BLIS stand-in).
+    NativeBlocked,
+    /// Tuned native kernels (FT-BLAS Ori native).
+    NativeTuned,
+    /// AOT Pallas/XLA artifact via PJRT.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::NativeNaive => "naive",
+            Backend::NativeBlocked => "blocked",
+            Backend::NativeTuned => "tuned",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Backend> {
+        match s {
+            "naive" => Some(Backend::NativeNaive),
+            "blocked" => Some(Backend::NativeBlocked),
+            "tuned" => Some(Backend::NativeTuned),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// A BLAS call. Matrices are dense row-major; triangular routines read
+/// the lower triangle (the case the paper presents).
+#[derive(Clone, Debug)]
+pub enum BlasRequest {
+    // ---- Level 1
+    Dscal { alpha: f64, x: Vec<f64> },
+    Daxpy { alpha: f64, x: Vec<f64>, y: Vec<f64> },
+    Ddot { x: Vec<f64>, y: Vec<f64> },
+    Dnrm2 { x: Vec<f64> },
+    Dasum { x: Vec<f64> },
+    Drot { x: Vec<f64>, y: Vec<f64>, c: f64, s: f64 },
+    Drotm { x: Vec<f64>, y: Vec<f64>, param: [f64; 5] },
+    Idamax { x: Vec<f64> },
+    // ---- Level 2
+    Dgemv { alpha: f64, a: Matrix, x: Vec<f64>, beta: f64, y: Vec<f64> },
+    Dtrsv { a: Matrix, b: Vec<f64> },
+    Dger { alpha: f64, x: Vec<f64>, y: Vec<f64>, a: Matrix },
+    Dsymv { alpha: f64, a: Matrix, x: Vec<f64>, beta: f64, y: Vec<f64> },
+    Dtrmv { a: Matrix, x: Vec<f64> },
+    // ---- Level 3
+    Dgemm { alpha: f64, a: Matrix, b: Matrix, beta: f64, c: Matrix },
+    Dsymm { alpha: f64, a: Matrix, b: Matrix, beta: f64, c: Matrix },
+    Dtrmm { alpha: f64, a: Matrix, b: Matrix },
+    Dtrsm { a: Matrix, b: Matrix },
+    Dsyrk { alpha: f64, a: Matrix, beta: f64, c: Matrix },
+}
+
+/// BLAS level of a request (selects the FT scheme under the hybrid
+/// policy: DMR for 1/2, ABFT for 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+}
+
+impl BlasRequest {
+    pub fn routine(&self) -> &'static str {
+        match self {
+            BlasRequest::Dscal { .. } => "dscal",
+            BlasRequest::Daxpy { .. } => "daxpy",
+            BlasRequest::Ddot { .. } => "ddot",
+            BlasRequest::Dnrm2 { .. } => "dnrm2",
+            BlasRequest::Dasum { .. } => "dasum",
+            BlasRequest::Drot { .. } => "drot",
+            BlasRequest::Drotm { .. } => "drotm",
+            BlasRequest::Idamax { .. } => "idamax",
+            BlasRequest::Dgemv { .. } => "dgemv",
+            BlasRequest::Dtrsv { .. } => "dtrsv",
+            BlasRequest::Dger { .. } => "dger",
+            BlasRequest::Dsymv { .. } => "dsymv",
+            BlasRequest::Dtrmv { .. } => "dtrmv",
+            BlasRequest::Dgemm { .. } => "dgemm",
+            BlasRequest::Dsymm { .. } => "dsymm",
+            BlasRequest::Dtrmm { .. } => "dtrmm",
+            BlasRequest::Dtrsm { .. } => "dtrsm",
+            BlasRequest::Dsyrk { .. } => "dsyrk",
+        }
+    }
+
+    pub fn level(&self) -> Level {
+        match self {
+            BlasRequest::Dscal { .. }
+            | BlasRequest::Daxpy { .. }
+            | BlasRequest::Ddot { .. }
+            | BlasRequest::Dnrm2 { .. }
+            | BlasRequest::Dasum { .. }
+            | BlasRequest::Drot { .. }
+            | BlasRequest::Drotm { .. }
+            | BlasRequest::Idamax { .. } => Level::L1,
+            BlasRequest::Dgemv { .. }
+            | BlasRequest::Dtrsv { .. }
+            | BlasRequest::Dger { .. }
+            | BlasRequest::Dsymv { .. }
+            | BlasRequest::Dtrmv { .. } => Level::L2,
+            _ => Level::L3,
+        }
+    }
+
+    /// Principal problem size (vector length / matrix dimension) — the
+    /// batching and artifact-matching key.
+    pub fn dim(&self) -> usize {
+        match self {
+            BlasRequest::Dscal { x, .. }
+            | BlasRequest::Dnrm2 { x }
+            | BlasRequest::Dasum { x }
+            | BlasRequest::Ddot { x, .. }
+            | BlasRequest::Daxpy { x, .. }
+            | BlasRequest::Drot { x, .. }
+            | BlasRequest::Drotm { x, .. }
+            | BlasRequest::Idamax { x } => x.len(),
+            BlasRequest::Dger { a, .. } => a.rows,
+            BlasRequest::Dgemv { a, .. }
+            | BlasRequest::Dgemm { a, .. }
+            | BlasRequest::Dsymm { a, .. }
+            | BlasRequest::Dtrmm { a, .. }
+            | BlasRequest::Dtrsm { a, .. }
+            | BlasRequest::Dsyrk { a, .. }
+            | BlasRequest::Dtrsv { a, .. }
+            | BlasRequest::Dsymv { a, .. }
+            | BlasRequest::Dtrmv { a, .. } => a.rows,
+        }
+    }
+
+    /// Floating-point operation count (for GFLOPS reporting).
+    pub fn flops(&self) -> f64 {
+        let n = self.dim() as f64;
+        match self {
+            BlasRequest::Dscal { .. } => n,
+            BlasRequest::Daxpy { .. } => 2.0 * n,
+            BlasRequest::Ddot { .. } => 2.0 * n,
+            BlasRequest::Dnrm2 { .. } => 2.0 * n,
+            BlasRequest::Dasum { .. } => n,
+            BlasRequest::Drot { .. } => 6.0 * n,
+            BlasRequest::Drotm { .. } => 6.0 * n,
+            BlasRequest::Idamax { .. } => n,
+            BlasRequest::Dgemv { a, .. } => 2.0 * (a.rows * a.cols) as f64,
+            BlasRequest::Dtrsv { .. } => n * n,
+            BlasRequest::Dger { a, .. } => 2.0 * (a.rows * a.cols) as f64,
+            BlasRequest::Dsymv { a, .. } => 2.0 * (a.rows * a.cols) as f64,
+            BlasRequest::Dtrmv { .. } => n * n,
+            BlasRequest::Dgemm { a, b, .. } => {
+                2.0 * (a.rows * a.cols * b.cols) as f64
+            }
+            BlasRequest::Dsymm { a, b, .. } => {
+                2.0 * (a.rows * a.cols * b.cols) as f64
+            }
+            BlasRequest::Dtrmm { a, b, .. } => (a.rows * a.cols * b.cols) as f64,
+            BlasRequest::Dtrsm { a, b } => (a.rows * a.rows * b.cols) as f64,
+            BlasRequest::Dsyrk { a, .. } => (a.rows * a.rows * a.cols) as f64,
+        }
+    }
+
+    /// Batching key: same routine + same shape can share a batch window.
+    pub fn batch_key(&self) -> (&'static str, usize) {
+        (self.routine(), self.dim())
+    }
+}
+
+/// Response payload: scalar or tensor result(s).
+#[derive(Clone, Debug)]
+pub enum BlasResult {
+    Scalar(f64),
+    Vector(Vec<f64>),
+    Matrix(Matrix),
+}
+
+impl BlasResult {
+    pub fn as_scalar(&self) -> Option<f64> {
+        match self {
+            BlasResult::Scalar(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_vector(&self) -> Option<&[f64]> {
+        match self {
+            BlasResult::Vector(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_matrix(&self) -> Option<&Matrix> {
+        match self {
+            BlasResult::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct BlasResponse {
+    pub result: BlasResult,
+    pub ft: FtReport,
+    pub backend: Backend,
+    /// Kernel-only execution seconds (excludes queueing).
+    pub exec_seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn levels_and_routines() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(4, 4, &mut rng);
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: a.clone(),
+            beta: 0.0,
+            c: Matrix::zeros(4, 4),
+        };
+        assert_eq!(req.routine(), "dgemm");
+        assert_eq!(req.level(), Level::L3);
+        assert_eq!(req.dim(), 4);
+        assert_eq!(req.flops(), 128.0);
+        assert_eq!(req.batch_key(), ("dgemm", 4));
+
+        let req = BlasRequest::Dscal { alpha: 2.0, x: vec![0.0; 10] };
+        assert_eq!(req.level(), Level::L1);
+        assert_eq!(req.flops(), 10.0);
+    }
+
+    #[test]
+    fn backend_names() {
+        for b in [Backend::NativeNaive, Backend::NativeBlocked,
+                  Backend::NativeTuned, Backend::Pjrt] {
+            assert_eq!(Backend::by_name(b.name()), Some(b));
+        }
+    }
+}

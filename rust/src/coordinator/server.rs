@@ -1,0 +1,258 @@
+//! The threaded serving loop: clients submit [`BlasRequest`]s and receive
+//! [`BlasResponse`]s over per-request channels; a worker pool drains the
+//! batching queue through the router; an optional injector arms planned
+//! faults (the error-injection experiments of paper §6.3 run through
+//! exactly this path).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::{BlasRequest, BlasResponse};
+use crate::coordinator::router::Router;
+use crate::ft::injector::{Injector, InjectorConfig};
+use crate::ft::policy::FtPolicy;
+
+struct Job {
+    req: BlasRequest,
+    enqueued: Instant,
+    reply: Sender<Result<BlasResponse>>,
+}
+
+struct Shared {
+    batcher: Mutex<Batcher<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    metrics: Metrics,
+    injector: Mutex<Injector>,
+    steps: AtomicU64,
+}
+
+/// Handle for submitting requests; cheap to clone.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: BlasRequest) -> Receiver<Result<BlasResponse>> {
+        let (reply, rx) = channel();
+        let key = req.batch_key();
+        {
+            let mut b = self.shared.batcher.lock().unwrap();
+            b.push(key, Job { req, enqueued: Instant::now(), reply });
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: BlasRequest) -> Result<BlasResponse> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+}
+
+/// The server: a worker pool over one shared router.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start with `workers` native worker threads. The router (and its
+    /// PJRT handle, which is Send) is shared read-only.
+    pub fn start(router: Router, policy: FtPolicy, workers: usize,
+                 injection: Option<InjectorConfig>,
+                 expected_requests: usize) -> Server {
+        let injector = match injection {
+            Some(cfg) => {
+                // plan faults across the expected request stream; positions
+                // are interpreted per-routine inside the router
+                Injector::plan(&cfg, expected_requests.max(1), 64, 64)
+            }
+            None => Injector::empty(),
+        };
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(16)),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            metrics: Metrics::new(),
+            injector: Mutex::new(injector),
+            steps: AtomicU64::new(0),
+        });
+        let router = Arc::new(router);
+        let workers = (0..workers.max(1))
+            .map(|w| {
+                let shared = shared.clone();
+                let router = router.clone();
+                std::thread::Builder::new()
+                    .name(format!("ftblas-worker-{w}"))
+                    .spawn(move || worker_loop(shared, router, policy))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Server { shared, workers }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: self.shared.clone() }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stop accepting work and join the workers (pending jobs finish).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, router: Arc<Router>, policy: FtPolicy) {
+    loop {
+        let batch = {
+            let mut b = shared.batcher.lock().unwrap();
+            loop {
+                if !b.is_empty() {
+                    break b.next_batch();
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(b, std::time::Duration::from_millis(50))
+                    .unwrap();
+                b = guard;
+            }
+        };
+        for pending in batch {
+            let job = pending.item;
+            let step = shared.steps.fetch_add(1, Ordering::SeqCst) as usize;
+            let fault = {
+                let mut inj = shared.injector.lock().unwrap();
+                inj.take(step).map(|mut f| {
+                    // clamp the planned position into this request's range
+                    let dim = job.req.dim();
+                    f.i %= dim.max(1);
+                    f.j %= dim.max(1);
+                    f.step = 1; // strike the second panel/chunk when stepped
+                    f
+                })
+            };
+            let injected = fault.is_some() as u64;
+            match router.execute(&job.req, policy, fault) {
+                Ok(resp) => {
+                    shared.metrics.record_completion(
+                        job.req.routine(),
+                        resp.exec_seconds,
+                        job.enqueued.elapsed().as_secs_f64(),
+                        resp.ft.errors_detected,
+                        resp.ft.errors_corrected,
+                        injected,
+                    );
+                    let _ = job.reply.send(Ok(resp));
+                }
+                Err(e) => {
+                    shared.metrics.record_failure();
+                    let _ = job.reply.send(Err(e));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Profile;
+    use crate::coordinator::request::Backend;
+    use crate::util::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn native_server(policy: FtPolicy, inj: Option<InjectorConfig>) -> Server {
+        let router = Router::native_only(Profile::default(), Backend::NativeTuned);
+        Server::start(router, policy, 3, inj, 64)
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let server = native_server(FtPolicy::None, None);
+        let handle = server.handle();
+        let mut rng = Rng::new(5);
+        let reqs: Vec<BlasRequest> = (0..24)
+            .map(|i| {
+                if i % 2 == 0 {
+                    BlasRequest::Ddot { x: rng.normal_vec(256), y: rng.normal_vec(256) }
+                } else {
+                    BlasRequest::Dscal { alpha: 2.0, x: rng.normal_vec(128) }
+                }
+            })
+            .collect();
+        let rxs: Vec<_> = reqs.iter().cloned().map(|r| handle.submit(r)).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.ft.errors_detected, 0);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 24);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn injection_is_detected_and_corrected() {
+        let cfg = InjectorConfig { count: 8, ..Default::default() };
+        let server = native_server(FtPolicy::Hybrid, Some(cfg));
+        let handle = server.handle();
+        let mut rng = Rng::new(6);
+        let l = Matrix::random_lower_triangular(64, &mut rng);
+        let mut oracle = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..32 {
+            let b = rng.normal_vec(64);
+            let mut want = b.clone();
+            crate::blas::naive::dtrsv_lower(64, &l.data, &mut want);
+            oracle.push(want);
+            rxs.push(handle.submit(BlasRequest::Dtrsv { a: l.clone(), b }));
+        }
+        for (rx, want) in rxs.into_iter().zip(oracle) {
+            let resp = rx.recv().unwrap().unwrap();
+            let got = resp.result.as_vector().unwrap();
+            assert!(crate::util::matrix::allclose(got, &want, 1e-8, 1e-8));
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 32);
+        assert!(m.errors_injected >= 1, "planned faults should fire");
+        assert_eq!(m.errors_detected, m.errors_injected,
+                   "every injected fault must be detected");
+        assert_eq!(m.errors_corrected, m.errors_detected);
+    }
+}

@@ -1,0 +1,158 @@
+//! Workload traces: Poisson-arrival mixed-routine request streams for the
+//! end-to-end driver and the serving benches (DESIGN.md §6).
+
+use crate::coordinator::request::BlasRequest;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Mix weights over routine families (normalized internally).
+#[derive(Clone, Debug)]
+pub struct Mix {
+    pub dscal: f64,
+    pub ddot: f64,
+    pub dnrm2: f64,
+    pub dgemv: f64,
+    pub dtrsv: f64,
+    pub dgemm: f64,
+    pub dtrsm: f64,
+}
+
+impl Default for Mix {
+    fn default() -> Self {
+        // a solver-ish mix: mostly L1/L2 with periodic L3 heavy hitters
+        Mix { dscal: 0.2, ddot: 0.2, dnrm2: 0.1, dgemv: 0.2, dtrsv: 0.1,
+              dgemm: 0.15, dtrsm: 0.05 }
+    }
+}
+
+/// Trace generation config.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub requests: usize,
+    /// mean arrival rate (requests/second) for the Poisson process
+    pub rate: f64,
+    pub mix: Mix,
+    /// vector length for L1 routines
+    pub vec_len: usize,
+    /// matrix dimension for L2/L3 routines
+    pub mat_dim: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0x7ACE,
+            requests: 200,
+            rate: 200.0,
+            mix: Mix::default(),
+            vec_len: 65536,
+            mat_dim: 256,
+        }
+    }
+}
+
+/// One trace entry: the request plus its arrival offset from t=0.
+pub struct TraceEntry {
+    pub at_seconds: f64,
+    pub request: BlasRequest,
+}
+
+/// Generate a deterministic trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
+    let mut rng = Rng::new(cfg.seed);
+    let m = &cfg.mix;
+    let weights = [m.dscal, m.ddot, m.dnrm2, m.dgemv, m.dtrsv, m.dgemm, m.dtrsm];
+    let total: f64 = weights.iter().sum();
+    // pre-generate shared operands so trace generation stays cheap
+    let a = Matrix::random(cfg.mat_dim, cfg.mat_dim, &mut rng);
+    let b = Matrix::random(cfg.mat_dim, cfg.mat_dim, &mut rng);
+    let c = Matrix::random(cfg.mat_dim, cfg.mat_dim, &mut rng);
+    let l = Matrix::random_lower_triangular(cfg.mat_dim, &mut rng);
+
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        t += rng.exponential(cfg.rate);
+        let mut pick = rng.uniform() * total;
+        let mut idx = 0;
+        for (i, w) in weights.iter().enumerate() {
+            if pick < *w {
+                idx = i;
+                break;
+            }
+            pick -= w;
+            idx = i;
+        }
+        let request = match idx {
+            0 => BlasRequest::Dscal {
+                alpha: rng.range(0.5, 2.0),
+                x: rng.normal_vec(cfg.vec_len),
+            },
+            1 => BlasRequest::Ddot {
+                x: rng.normal_vec(cfg.vec_len),
+                y: rng.normal_vec(cfg.vec_len),
+            },
+            2 => BlasRequest::Dnrm2 { x: rng.normal_vec(cfg.vec_len) },
+            3 => BlasRequest::Dgemv {
+                alpha: 1.0,
+                a: a.clone(),
+                x: rng.normal_vec(cfg.mat_dim),
+                beta: rng.range(0.0, 1.0),
+                y: rng.normal_vec(cfg.mat_dim),
+            },
+            4 => BlasRequest::Dtrsv { a: l.clone(), b: rng.normal_vec(cfg.mat_dim) },
+            5 => BlasRequest::Dgemm {
+                alpha: 1.0,
+                a: a.clone(),
+                b: b.clone(),
+                beta: 0.0,
+                c: c.clone(),
+            },
+            _ => BlasRequest::Dtrsm { a: l.clone(), b: b.clone() },
+        };
+        out.push(TraceEntry { at_seconds: t, request });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = TraceConfig { requests: 50, vec_len: 64, mat_dim: 16,
+                                ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_seconds, y.at_seconds);
+            assert_eq!(x.request.routine(), y.request.routine());
+        }
+    }
+
+    #[test]
+    fn arrival_times_increase() {
+        let cfg = TraceConfig { requests: 100, vec_len: 32, mat_dim: 8,
+                                ..Default::default() };
+        let t = generate(&cfg);
+        assert!(t.windows(2).all(|w| w[0].at_seconds <= w[1].at_seconds));
+    }
+
+    #[test]
+    fn mix_respected_roughly() {
+        let cfg = TraceConfig {
+            requests: 2000,
+            vec_len: 8,
+            mat_dim: 8,
+            mix: Mix { dscal: 1.0, ddot: 0.0, dnrm2: 0.0, dgemv: 0.0,
+                       dtrsv: 0.0, dgemm: 1.0, dtrsm: 0.0 },
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        let gemm = t.iter().filter(|e| e.request.routine() == "dgemm").count();
+        assert!((800..1200).contains(&gemm), "gemm count {gemm}");
+    }
+}

@@ -1,0 +1,641 @@
+//! Native *fused* online ABFT for Level-3 BLAS (paper §5.2, Fig. 4 right).
+//!
+//! The §5.1 unfused scheme (`abft::dgemm_abft_unfused`) pays separate
+//! O(n²) memory passes per rank-k interval: encoding GEMVs over the A/B
+//! panels and reference-checksum passes over all of C. On machines where
+//! GEMM throughput dwarfs memory bandwidth that extra traffic costs ~15 %.
+//! The paper's fix is to *fuse* every checksum access into loads the GEMM
+//! already performs:
+//!
+//! - `C = β·C` scaling pass → also seeds the encoded and reference
+//!   checksums (each C element is read exactly once anyway);
+//! - packing `B` into `B̃` → also accumulates `B_panel·e` (row sums of the
+//!   panel, the `B^c` of the paper) for this column block;
+//! - packing `A` into `Ã` → also accumulates the encoded row checksum
+//!   contribution `dC^r = α·A_panel·(B_panel·e)` and the panel column
+//!   sums `e^T·A_panel`, whose product with the packed B̃ (cache-hot, about
+//!   to be streamed by the macro kernel anyway) yields `dC^c`;
+//! - the macro kernel's register-resident `acc` tile → reused at
+//!   write-back to update the *reference* checksums `C^r_ref`, `C^c_ref`.
+//!
+//! After the fusion the FT overhead is purely computational — no memory
+//! access happens that the unprotected GEMM would not also perform.
+//!
+//! Loop nest: unlike `blas::level3::dgemm` (j outermost), the rank-k loop
+//! `p` is outermost so each `K_C` step is a verification interval — the
+//! online error model corrects one error per interval (paper §2.1), so a
+//! multi-error run is tolerated as long as strikes land in distinct
+//! intervals.
+//!
+//! Injection model: `(step, i, j, delta)` perturbs the *computed tile
+//! value* for global element (i, j) during rank-step `step`, before both
+//! the store to C and the fused reference-checksum update — exactly where
+//! a transient fault in the FMA pipeline would land. The corrupted value
+//! therefore pollutes `C` and `C^r_ref`/`C^c_ref` coherently while the
+//! encoded checksums (derived from A and B) still predict the true sums,
+//! which is what makes detection possible.
+
+use crate::blas::level3::GemmParams;
+use crate::ft::abft::{self, LocatedError};
+use crate::ft::FtReport;
+
+/// One planned strike: (rank-k step, global row, global col, magnitude).
+pub type Strike = (usize, usize, usize, f64);
+
+/// Pack a (mcb × kcb) block of A into MR-row micro panels, fused with
+/// checksum work (paper: "each element of A loaded for packing is reused
+/// to update the column checksum"):
+/// - `dcr[i]` += α · A[i][p] · be[p]  (encoded row-checksum contribution)
+/// - `eta[p]` += A[i][p]              (panel column sums, for dC^c)
+/// - running max|A| for the round-off threshold.
+#[allow(clippy::too_many_arguments)]
+fn pack_a_fused(a: &[f64], lda: usize, i0: usize, p0: usize, mcb: usize,
+                kcb: usize, mr: usize, alpha: f64, be: &[f64],
+                out: &mut [f64], dcr: &mut [f64], eta: &mut [f64]) {
+    let mut w = 0;
+    let mut i = 0;
+    while i < mcb {
+        let rows = mr.min(mcb - i);
+        for p in 0..kcb {
+            let bev = be[p];
+            let mut col_sum = 0.0;
+            for r in 0..rows {
+                let v = a[(i0 + i + r) * lda + p0 + p];
+                out[w] = v;
+                w += 1;
+                // fused checksum accumulation (block-local index) — same
+                // loaded value
+                dcr[i + r] += alpha * v * bev;
+                col_sum += v;
+            }
+            eta[p] += col_sum;
+            for _ in rows..mr {
+                out[w] = 0.0;
+                w += 1;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Pack a (kcb × ncb) block of B into NR-col micro panels, fused with the
+/// panel row-sum accumulation `be[p] += Σ_j B[p][j]` (the paper's B^c
+/// computed "simultaneously by reusing B") and the running max|B|.
+fn pack_b_fused(b: &[f64], ldb: usize, p0: usize, j0: usize, kcb: usize,
+                ncb: usize, nr: usize, out: &mut [f64], be: &mut [f64]) {
+    let mut w = 0;
+    let mut j = 0;
+    while j < ncb {
+        let cols = nr.min(ncb - j);
+        for p in 0..kcb {
+            let mut rsum = 0.0;
+            for cdx in 0..cols {
+                let v = b[(p0 + p) * ldb + j0 + j + cdx];
+                out[w] = v;
+                w += 1;
+                rsum += v;
+            }
+            be[p] += rsum;
+            for _ in cols..nr {
+                out[w] = 0.0;
+                w += 1;
+            }
+        }
+        j += nr;
+    }
+}
+
+/// MR×NR micro kernel — identical compute to `level3`'s, duplicated here
+/// so the fused write-back can consume the register tile directly.
+#[inline(always)]
+fn micro_kernel(kc: usize, ap: &[f64], bp: &[f64], mr: usize, nr: usize,
+                acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), mr * nr);
+    if mr == 4 && nr == 8 {
+        // const-shape fast path: with MR/NR fixed the 4x8 accumulator
+        // tile is fully register-allocated (4 zmm under AVX-512) and the
+        // inner body is 4 broadcast-FMA rows per k step — the paper's
+        // hand-picked micro-kernel parameters (§3.3.2)
+        let tile: &mut [f64; 32] = (&mut acc[..32]).try_into().unwrap();
+        micro_kernel_4x8(kc, ap, bp, tile);
+        return;
+    }
+    for v in acc.iter_mut() {
+        *v = 0.0;
+    }
+    for p in 0..kc {
+        let arow = &ap[p * mr..(p + 1) * mr];
+        let brow = &bp[p * nr..(p + 1) * nr];
+        for r in 0..mr {
+            let av = arow[r];
+            let dst = &mut acc[r * nr..(r + 1) * nr];
+            for (d, bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+}
+
+/// The 4x8 micro kernel with a compile-time-shaped accumulator tile.
+#[inline(always)]
+fn micro_kernel_4x8(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; 32]) {
+    let mut tile = [0.0f64; 32];
+    for p in 0..kc {
+        let arow: &[f64; 4] = ap[p * 4..p * 4 + 4].try_into().unwrap();
+        let brow: &[f64; 8] = bp[p * 8..p * 8 + 8].try_into().unwrap();
+        for r in 0..4 {
+            let av = arow[r];
+            for l in 0..8 {
+                tile[r * 8 + l] += av * brow[l];
+            }
+        }
+    }
+    *acc = tile;
+}
+
+/// Vectorized max|v| over a packed (cache-hot) buffer: 8 independent
+/// per-lane max chains, folded once — keeps the round-off-threshold
+/// bookkeeping out of the packing routines' inner loops, where a single
+/// running-max accumulator would serialize them at fmax latency.
+pub(crate) fn max_abs(v: &[f64]) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    let mut chunks = v.chunks_exact(8);
+    for c in &mut chunks {
+        for (m, x) in lanes.iter_mut().zip(c) {
+            *m = m.max(x.abs());
+        }
+    }
+    let mut mx = lanes.iter().fold(0.0f64, |a, &b| a.max(b));
+    for x in chunks.remainder() {
+        mx = mx.max(x.abs());
+    }
+    mx
+}
+
+/// Pairwise (tree) sum of a tile row delta — three add levels instead of
+/// a serial seven-add chain on the reference-checksum update path.
+#[inline(always)]
+fn row_sum(d: &[f64]) -> f64 {
+    if d.len() == 8 {
+        ((d[0] + d[1]) + (d[2] + d[3])) + ((d[4] + d[5]) + (d[6] + d[7]))
+    } else {
+        d.iter().sum()
+    }
+}
+
+/// C := α·A·B + β·C with fused online ABFT (paper §5.2).
+///
+/// Corrects at most one error per rank-K_C verification interval; strikes
+/// in `inject` landing in distinct steps are all corrected. Returns the
+/// detected/corrected counts.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                        b: &[f64], beta: f64, c: &mut [f64],
+                        params: &GemmParams, inject: &[Strike]) -> FtReport {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let mut report = FtReport::none();
+    if m == 0 || n == 0 {
+        return report;
+    }
+    let &GemmParams { mc, nc, kc, mr, nr } = params;
+
+    // ---- fused β-scaling + checksum seeding (paper: "the encoding of
+    // C^c and C^r is fused with the matrix scaling routine C = βC")
+    let mut cr_enc = vec![0.0; m];
+    let mut cc_enc = vec![0.0; n];
+    for i in 0..m {
+        let row = &mut c[i * n..(i + 1) * n];
+        let mut rsum = 0.0;
+        for (j, v) in row.iter_mut().enumerate() {
+            *v *= beta;
+            rsum += *v;
+            cc_enc[j] += *v;
+        }
+        cr_enc[i] = rsum;
+    }
+    // reference checksums start in agreement and are maintained at tile
+    // write-back from the register acc values
+    let mut cr_ref = cr_enc.clone();
+    let mut cc_ref = cc_enc.clone();
+
+    if k == 0 || alpha == 0.0 {
+        return report;
+    }
+
+    let mut apack = vec![0.0; mc.div_ceil(mr) * mr * kc];
+    let mut bpack = vec![0.0; nc.div_ceil(nr) * nr * kc];
+    let mut acc = vec![0.0; mr * nr];
+    let mut be = vec![0.0; kc];
+    let mut eta = vec![0.0; kc];
+    // Block-local checksum accumulators: the macro-kernel write-back and
+    // the packing routines scatter read-modify-writes across the full
+    // m/n-length checksum vectors otherwise, which (depending on heap
+    // layout) can alias the streaming C rows in the same cache sets —
+    // bimodal 20% swings across process runs. Compact locals stay in L1
+    // and are flushed once per block.
+    let mut crenc_loc = vec![0.0; mc];
+    let mut crref_loc = vec![0.0; mc];
+    let mut ccref_loc = vec![0.0; nc];
+    let mut ccenc_loc = vec![0.0; nc];
+    let (mut max_a, mut max_b) = (0.0f64, 0.0f64);
+
+    // Correcting an error of magnitude M cannot restore C below ~eps·|M|
+    // accuracy (the large delta is absorbed into and subtracted from much
+    // smaller sums), so each correction widens later intervals' round-off
+    // threshold accordingly — otherwise the residual re-triggers forever.
+    let mut corrected_tol = 0.0f64;
+
+    // rank-k loop outermost: each K_C step is one verification interval
+    let mut p0 = 0;
+    let mut step = 0;
+    while p0 < k {
+        let kcb = kc.min(k - p0);
+        let mut j0 = 0;
+        while j0 < n {
+            let ncb = nc.min(n - j0);
+            be[..kcb].fill(0.0);
+            pack_b_fused(b, n, p0, j0, kcb, ncb, nr, &mut bpack,
+                         &mut be[..kcb]);
+            // threshold bookkeeping over the packed (cache-hot) buffer —
+            // one vectorized pass, instead of a serialized running max in
+            // the packing inner loop
+            max_b = max_b.max(max_abs(&bpack[..ncb.div_ceil(nr) * nr * kcb]));
+            let mut i0 = 0;
+            while i0 < m {
+                let mcb = mc.min(m - i0);
+                eta[..kcb].fill(0.0);
+                crenc_loc[..mcb].fill(0.0);
+                crref_loc[..mcb].fill(0.0);
+                ccenc_loc[..ncb].fill(0.0);
+                ccref_loc[..ncb].fill(0.0);
+                pack_a_fused(a, k, i0, p0, mcb, kcb, mr, alpha, &be[..kcb],
+                             &mut apack, &mut crenc_loc, &mut eta[..kcb]);
+                if j0 == 0 {
+                    max_a = max_a.max(max_abs(
+                        &apack[..mcb.div_ceil(mr) * mr * kcb]));
+                }
+                // dC^c contribution of this (i-block, j-block) pair:
+                // (e^T A_block) · B̃ — B̃ is the packed, cache-hot buffer
+                // the macro kernel is about to stream anyway
+                {
+                    let mut jj = 0;
+                    while jj < ncb {
+                        let cols = nr.min(ncb - jj);
+                        let bp = &bpack[(jj / nr) * (nr * kcb)..][..nr * kcb];
+                        for p in 0..kcb {
+                            let ep = alpha * eta[p];
+                            let brow = &bp[p * nr..p * nr + cols];
+                            let dst = &mut ccenc_loc[jj..jj + cols];
+                            for (d, bv) in dst.iter_mut().zip(brow) {
+                                *d += ep * bv;
+                            }
+                        }
+                        jj += nr;
+                    }
+                }
+                // ---- macro kernel with fused reference-checksum update
+                let mut jj = 0;
+                while jj < ncb {
+                    let nrb = nr.min(ncb - jj);
+                    let bp = &bpack[(jj / nr) * (nr * kcb)..][..nr * kcb];
+                    let mut ii = 0;
+                    while ii < mcb {
+                        let mrb = mr.min(mcb - ii);
+                        let ap = &apack[(ii / mr) * (mr * kcb)..][..mr * kcb];
+                        micro_kernel(kcb, ap, bp, mr, nr, &mut acc);
+                        // transient-fault injection: corrupt the computed
+                        // register value before it is consumed anywhere
+                        for &(s, fi, fj, delta) in inject {
+                            if s == step
+                                && fi >= i0 + ii && fi < i0 + ii + mrb
+                                && fj >= j0 + jj && fj < j0 + jj + nrb
+                            {
+                                acc[(fi - i0 - ii) * nr + (fj - j0 - jj)] +=
+                                    delta / alpha;
+                            }
+                        }
+                        // write-back reusing the register tile for the
+                        // reference checksums (paper: "we reuse the
+                        // computed C elements at register level"). The
+                        // delta row is staged in registers so the store,
+                        // the column-checksum update, and the (pairwise)
+                        // row-checksum sum are three independent
+                        // vectorizable streams — no serial rsum chain.
+                        for r in 0..mrb {
+                            let gi = i0 + ii + r;
+                            let crow = &mut c[gi * n + j0 + jj..][..nrb];
+                            let arow = &acc[r * nr..r * nr + nrb];
+                            let ccref = &mut ccref_loc[jj..jj + nrb];
+                            let mut drow = [0.0f64; 16];
+                            let drow = &mut drow[..nrb];
+                            for (dv, av) in drow.iter_mut().zip(arow) {
+                                *dv = alpha * av;
+                            }
+                            for (cv, dv) in crow.iter_mut().zip(drow.iter()) {
+                                *cv += dv;
+                            }
+                            for (cc, dv) in ccref.iter_mut().zip(drow.iter()) {
+                                *cc += dv;
+                            }
+                            crref_loc[ii + r] += row_sum(drow);
+                        }
+                        ii += mr;
+                    }
+                    jj += nr;
+                }
+                // flush the block-local checksum accumulators
+                for (g, l) in cr_enc[i0..i0 + mcb].iter_mut()
+                    .zip(&crenc_loc[..mcb])
+                {
+                    *g += l;
+                }
+                for (g, l) in cr_ref[i0..i0 + mcb].iter_mut()
+                    .zip(&crref_loc[..mcb])
+                {
+                    *g += l;
+                }
+                for (g, l) in cc_enc[j0..j0 + ncb].iter_mut()
+                    .zip(&ccenc_loc[..ncb])
+                {
+                    *g += l;
+                }
+                for (g, l) in cc_ref[j0..j0 + ncb].iter_mut()
+                    .zip(&ccref_loc[..ncb])
+                {
+                    *g += l;
+                }
+                i0 += mc;
+            }
+            j0 += nc;
+        }
+        // ---- end of verification interval: O(m+n) compare / locate /
+        // correct (the only non-fused work — negligible)
+        let tol = abft::round_off_threshold(
+            alpha.abs().max(1.0) * max_a * max_b, k, n.max(m)) + corrected_tol;
+        if let Some(err) = verify_refs(&cr_enc, &cc_enc, &cr_ref, &cc_ref, tol) {
+            c[err.i * n + err.j] -= err.magnitude;
+            // bring the maintained reference sums back in line with the
+            // corrected C so later intervals verify against truth
+            cr_ref[err.i] -= err.magnitude;
+            cc_ref[err.j] -= err.magnitude;
+            corrected_tol += err.magnitude.abs() * f64::EPSILON * 64.0;
+            report.errors_detected += 1;
+            report.errors_corrected += 1;
+        }
+        p0 += kc;
+        step += 1;
+    }
+    report
+}
+
+/// Compare maintained reference sums against encoded predictions; locate
+/// a single error (row checksum first, column only on disagreement —
+/// paper §5.1's short-circuit).
+fn verify_refs(cr_enc: &[f64], cc_enc: &[f64], cr_ref: &[f64], cc_ref: &[f64],
+               tol: f64) -> Option<LocatedError> {
+    let mut i_err = None;
+    let mut worst = tol;
+    for (i, (r, e)) in cr_ref.iter().zip(cr_enc).enumerate() {
+        let d = (r - e).abs();
+        if d > worst {
+            worst = d;
+            i_err = Some(i);
+        }
+    }
+    let i = i_err?;
+    let mut j_err = 0;
+    let mut worst_c = 0.0;
+    for (j, (r, e)) in cc_ref.iter().zip(cc_enc).enumerate() {
+        let d = (r - e).abs();
+        if d > worst_c {
+            worst_c = d;
+            j_err = j;
+        }
+    }
+    Some(LocatedError { i, j: j_err, magnitude: cr_ref[i] - cr_enc[i] })
+}
+
+/// C := α·sym(A)·B + β·C with fused ABFT. The symmetrization is the
+/// packing-routine modification of §6.2.3 — materialized once, then the
+/// fused GEMM frame runs unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn dsymm_abft_fused(m: usize, n: usize, alpha: f64, a: &[f64], b: &[f64],
+                        beta: f64, c: &mut [f64], params: &GemmParams,
+                        inject: &[Strike]) -> FtReport {
+    let mut full = vec![0.0; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            let v = a[i * m + j];
+            full[i * m + j] = v;
+            full[j * m + i] = v;
+        }
+    }
+    dgemm_abft_fused(m, n, m, alpha, &full, b, beta, c, params, inject)
+}
+
+/// B := α·tril(A)·B with fused ABFT (the §6.2.3 DTRMM kernel
+/// modification: the packed A reads only the lower triangle).
+pub fn dtrmm_abft_fused(m: usize, n: usize, alpha: f64, a: &[f64],
+                        b: &mut [f64], params: &GemmParams,
+                        inject: &[Strike]) -> FtReport {
+    let mut low = vec![0.0; m * m];
+    for i in 0..m {
+        low[i * m..i * m + i + 1].copy_from_slice(&a[i * m..i * m + i + 1]);
+    }
+    let b0 = b.to_vec();
+    b.fill(0.0);
+    dgemm_abft_fused(m, n, m, alpha, &low, &b0, 0.0, b, params, inject)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::check::{check, ensure};
+    use crate::util::matrix::{allclose, Matrix};
+
+    fn small_params(g: &mut crate::util::check::Gen) -> GemmParams {
+        GemmParams {
+            mc: [8, 16, 32][g.rng.below(3)],
+            nc: [8, 16, 32][g.rng.below(3)],
+            kc: [4, 8, 16][g.rng.below(3)],
+            mr: [2, 4][g.rng.below(2)],
+            nr: [4, 8][g.rng.below(2)],
+        }
+    }
+
+    #[test]
+    fn fused_matches_naive_clean() {
+        check("abft-fused-clean", 25, |g| {
+            let m = g.dim(1, 48);
+            let n = g.dim(1, 48);
+            let k = g.dim(1, 48);
+            let params = small_params(g);
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let (alpha, beta) = (g.rng.range(-2.0, 2.0), g.rng.range(-1.0, 1.0));
+            let mut want = c0.data.clone();
+            naive::dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut want);
+            let mut c = c0.data.clone();
+            let rep = dgemm_abft_fused(m, n, k, alpha, &a.data, &b.data, beta,
+                                       &mut c, &params, &[]);
+            ensure(rep == FtReport::none(),
+                   format!("false positive on clean fused gemm: {rep:?}"))?;
+            ensure(allclose(&c, &want, 1e-9, 1e-9), "fused gemm wrong value")
+        });
+    }
+
+    #[test]
+    fn fused_corrects_single_injection() {
+        check("abft-fused-inject", 30, |g| {
+            let m = g.dim(4, 48);
+            let n = g.dim(4, 48);
+            let k = g.dim(4, 64);
+            let params = small_params(g);
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let alpha = g.rng.range(0.5, 2.0);
+            let beta = g.rng.range(-1.0, 1.0);
+            let mut want = c0.data.clone();
+            naive::dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut want);
+            let steps = k.div_ceil(params.kc);
+            let strike = (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                          g.rng.range(1.0, 1e5));
+            let mut c = c0.data.clone();
+            let rep = dgemm_abft_fused(m, n, k, alpha, &a.data, &b.data, beta,
+                                       &mut c, &params, &[strike]);
+            ensure(rep.errors_detected == 1 && rep.errors_corrected == 1,
+                   format!("report {rep:?} for strike {strike:?}"))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8),
+                   "fused abft did not restore C")
+        });
+    }
+
+    #[test]
+    fn fused_corrects_one_error_per_interval() {
+        check("abft-fused-multi", 15, |g| {
+            let m = g.dim(8, 40);
+            let n = g.dim(8, 40);
+            let k = g.dim(32, 96);
+            let params = GemmParams { kc: 8, ..small_params(g) };
+            let steps = k.div_ceil(params.kc);
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let mut want = vec![0.0; m * n];
+            naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+            // one strike in every other interval — all distinct steps
+            let strikes: Vec<Strike> = (0..steps)
+                .step_by(2)
+                .map(|s| (s, g.rng.below(m), g.rng.below(n),
+                          g.rng.range(10.0, 1e4)))
+                .collect();
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused(m, n, k, 1.0, &a.data, &b.data, 0.0,
+                                       &mut c, &params, &strikes);
+            ensure(rep.errors_corrected == strikes.len() as u64,
+                   format!("{rep:?}, wanted {} corrections", strikes.len()))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8),
+                   "multi-interval correction failed")
+        });
+    }
+
+    #[test]
+    fn fused_and_unfused_agree_under_injection() {
+        check("abft-fused-vs-unfused", 15, |g| {
+            let m = g.dim(8, 32);
+            let n = g.dim(8, 32);
+            let k = g.dim(16, 48);
+            let params = GemmParams { kc: 8, ..Default::default() };
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let steps = k.div_ceil(params.kc);
+            let strike = (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                          g.rng.range(1.0, 1e4));
+            let mut c_f = vec![0.0; m * n];
+            let rep_f = dgemm_abft_fused(m, n, k, 1.0, &a.data, &b.data, 0.0,
+                                         &mut c_f, &params, &[strike]);
+            let mut c_u = vec![0.0; m * n];
+            let rep_u = abft::dgemm_abft_unfused(
+                m, n, k, params.kc, &a.data, &b.data, &mut c_u,
+                |ap, bp, cc, mm, kk| {
+                    naive::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc);
+                },
+                Some(strike),
+            );
+            ensure(rep_f == rep_u, format!("fused {rep_f:?} unfused {rep_u:?}"))?;
+            ensure(allclose(&c_f, &c_u, 1e-8, 1e-8),
+                   "fused and unfused results diverge")
+        });
+    }
+
+    #[test]
+    fn dsymm_fused_clean_and_injected() {
+        check("abft-fused-symm", 15, |g| {
+            let m = g.dim(4, 40);
+            let n = g.dim(4, 40);
+            let params = small_params(g);
+            let a = Matrix::random(m, m, &mut g.rng);
+            let b = Matrix::random(m, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = c0.data.clone();
+            naive::dsymm_lower(m, n, 1.2, &a.data, &b.data, 0.3, &mut want);
+            let mut c = c0.data.clone();
+            let rep = dsymm_abft_fused(m, n, 1.2, &a.data, &b.data, 0.3,
+                                       &mut c, &params, &[]);
+            ensure(rep == FtReport::none(), "symm clean flagged")?;
+            ensure(allclose(&c, &want, 1e-9, 1e-9), "symm clean value")?;
+            let steps = m.div_ceil(params.kc);
+            let strike = (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                          5e4);
+            let mut c = c0.data.clone();
+            let rep = dsymm_abft_fused(m, n, 1.2, &a.data, &b.data, 0.3,
+                                       &mut c, &params, &[strike]);
+            ensure(rep.errors_corrected == 1, format!("symm inject {rep:?}"))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8), "symm not corrected")
+        });
+    }
+
+    #[test]
+    fn dtrmm_fused_clean_and_injected() {
+        check("abft-fused-trmm", 15, |g| {
+            let m = g.dim(4, 40);
+            let n = g.dim(4, 40);
+            let params = small_params(g);
+            let a = Matrix::random(m, m, &mut g.rng);
+            let b0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = b0.data.clone();
+            naive::dtrmm_lower(m, n, 0.9, &a.data, &mut want);
+            let mut b = b0.data.clone();
+            let rep = dtrmm_abft_fused(m, n, 0.9, &a.data, &mut b, &params, &[]);
+            ensure(rep == FtReport::none(), "trmm clean flagged")?;
+            ensure(allclose(&b, &want, 1e-9, 1e-9), "trmm clean value")?;
+            let steps = m.div_ceil(params.kc);
+            let strike = (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                          -3e4);
+            let mut b = b0.data.clone();
+            let rep = dtrmm_abft_fused(m, n, 0.9, &a.data, &mut b, &params,
+                                       &[strike]);
+            ensure(rep.errors_corrected == 1, format!("trmm inject {rep:?}"))?;
+            ensure(allclose(&b, &want, 1e-8, 1e-8), "trmm not corrected")
+        });
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let params = GemmParams::default();
+        let mut c: Vec<f64> = vec![];
+        let rep = dgemm_abft_fused(0, 0, 4, 1.0, &[], &[], 1.0, &mut c,
+                                   &params, &[]);
+        assert_eq!(rep, FtReport::none());
+        // k = 0: pure beta scaling, checksums still consistent
+        let mut c = vec![1.0, 2.0, 3.0, 4.0];
+        let rep = dgemm_abft_fused(2, 2, 0, 1.0, &[], &[], 0.5, &mut c,
+                                   &params, &[]);
+        assert_eq!(rep, FtReport::none());
+        assert_eq!(c, vec![0.5, 1.0, 1.5, 2.0]);
+    }
+}

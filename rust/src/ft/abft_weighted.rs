@@ -1,0 +1,375 @@
+//! Weighted (double) checksum ABFT — the alternative single-error
+//! location scheme the paper's §2.1 cites (Chen & Dongarra's online
+//! double-checksum encoding): instead of a row checksum *and* a column
+//! checksum, encode **two column-space checksums**,
+//!
+//! ```text
+//!   s1 = eᵀ·C          (plain column sums,   e = [1, 1, …, 1])
+//!   s2 = wᵀ·C          (weighted column sums, w = [1, 2, …, m])
+//! ```
+//!
+//! A single error of magnitude δ at (i, j) shifts `s1[j]` by δ and
+//! `s2[j]` by (i+1)·δ, so the column comes from the s1 scan and the row
+//! decodes as `round(Δs2/Δs1) − 1` — no row-side checksums at all. The
+//! trade: one extra weighted encoding stream (`wᵀA` next to `eᵀA` in the
+//! packing), against dropping the `A·(B·e)` row-checksum stream; the
+//! ablation bench (A4) measures the difference against the §5.2
+//! row+column scheme.
+//!
+//! Restricted to C := A·B (α=1, β=0) — the shape the ablation and the
+//! error-model tests exercise; the general frame lives in `abft_fused`.
+
+use crate::blas::level3::GemmParams;
+use crate::ft::abft_fused::Strike;
+use crate::ft::FtReport;
+
+/// Pack an (mcb × kcb) block of A into MR-row micro panels, fused with
+/// the two column-sum streams: `eta1[p] += A[gi][p]` and
+/// `eta2[p] += (gi+1)·A[gi][p]` (gi = global row).
+#[allow(clippy::too_many_arguments)]
+fn pack_a_weighted(a: &[f64], lda: usize, i0: usize, p0: usize, mcb: usize,
+                   kcb: usize, mr: usize, out: &mut [f64],
+                   eta1: &mut [f64], eta2: &mut [f64]) {
+    let mut w = 0;
+    let mut i = 0;
+    while i < mcb {
+        let rows = mr.min(mcb - i);
+        for p in 0..kcb {
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for r in 0..rows {
+                let gi = i0 + i + r;
+                let v = a[gi * lda + p0 + p];
+                out[w] = v;
+                w += 1;
+                s1 += v;
+                s2 += (gi + 1) as f64 * v;
+            }
+            eta1[p] += s1;
+            eta2[p] += s2;
+            for _ in rows..mr {
+                out[w] = 0.0;
+                w += 1;
+            }
+        }
+        i += mr;
+    }
+}
+
+fn pack_b_plain(b: &[f64], ldb: usize, p0: usize, j0: usize, kcb: usize,
+                ncb: usize, nr: usize, out: &mut [f64]) {
+    let mut w = 0;
+    let mut j = 0;
+    while j < ncb {
+        let cols = nr.min(ncb - j);
+        for p in 0..kcb {
+            for cdx in 0..cols {
+                out[w] = b[(p0 + p) * ldb + j0 + j + cdx];
+                w += 1;
+            }
+            for _ in cols..nr {
+                out[w] = 0.0;
+                w += 1;
+            }
+        }
+        j += nr;
+    }
+}
+
+#[inline(always)]
+fn micro_kernel_4x8(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; 32]) {
+    let mut tile = [0.0f64; 32];
+    for p in 0..kc {
+        let arow: &[f64; 4] = ap[p * 4..p * 4 + 4].try_into().unwrap();
+        let brow: &[f64; 8] = bp[p * 8..p * 8 + 8].try_into().unwrap();
+        for r in 0..4 {
+            let av = arow[r];
+            for l in 0..8 {
+                tile[r * 8 + l] += av * brow[l];
+            }
+        }
+    }
+    *acc = tile;
+}
+
+#[inline(always)]
+fn micro_kernel(kc: usize, ap: &[f64], bp: &[f64], mr: usize, nr: usize,
+                acc: &mut [f64]) {
+    if mr == 4 && nr == 8 {
+        let tile: &mut [f64; 32] = (&mut acc[..32]).try_into().unwrap();
+        micro_kernel_4x8(kc, ap, bp, tile);
+        return;
+    }
+    for v in acc.iter_mut() {
+        *v = 0.0;
+    }
+    for p in 0..kc {
+        let arow = &ap[p * mr..(p + 1) * mr];
+        let brow = &bp[p * nr..(p + 1) * nr];
+        for r in 0..mr {
+            let av = arow[r];
+            let dst = &mut acc[r * nr..(r + 1) * nr];
+            for (d, bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+}
+
+/// C := A·B with fused weighted-double-checksum online ABFT. One error
+/// per rank-K_C interval is located from the two column-space checksum
+/// scans and corrected in place.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_abft_weighted(m: usize, n: usize, k: usize, a: &[f64],
+                           b: &[f64], c: &mut [f64], params: &GemmParams,
+                           inject: &[Strike]) -> FtReport {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let mut report = FtReport::none();
+    if m == 0 || n == 0 {
+        return report;
+    }
+    c.fill(0.0);
+    let &GemmParams { mc, nc, kc, mr, nr } = params;
+
+    let mut s1_enc = vec![0.0; n];
+    let mut s2_enc = vec![0.0; n];
+    let mut s1_ref = vec![0.0; n];
+    let mut s2_ref = vec![0.0; n];
+
+    let mut apack = vec![0.0; mc.div_ceil(mr) * mr * kc];
+    let mut bpack = vec![0.0; nc.div_ceil(nr) * nr * kc];
+    let mut acc = vec![0.0; mr * nr];
+    let mut eta1 = vec![0.0; kc];
+    let mut eta2 = vec![0.0; kc];
+    // block-local accumulators (same cache-aliasing rationale as
+    // abft_fused)
+    let mut enc1_loc = vec![0.0; nc];
+    let mut enc2_loc = vec![0.0; nc];
+    let mut ref1_loc = vec![0.0; nc];
+    let mut ref2_loc = vec![0.0; nc];
+    let (mut max_a, mut max_b) = (0.0f64, 0.0f64);
+    let mut corrected_tol = 0.0f64;
+
+    let mut p0 = 0;
+    let mut step = 0;
+    while p0 < k {
+        let kcb = kc.min(k - p0);
+        let mut j0 = 0;
+        while j0 < n {
+            let ncb = nc.min(n - j0);
+            pack_b_plain(b, n, p0, j0, kcb, ncb, nr, &mut bpack);
+            max_b = max_b.max(super::abft_fused::max_abs(
+                &bpack[..ncb.div_ceil(nr) * nr * kcb]));
+            let mut i0 = 0;
+            while i0 < m {
+                let mcb = mc.min(m - i0);
+                eta1[..kcb].fill(0.0);
+                eta2[..kcb].fill(0.0);
+                enc1_loc[..ncb].fill(0.0);
+                enc2_loc[..ncb].fill(0.0);
+                ref1_loc[..ncb].fill(0.0);
+                ref2_loc[..ncb].fill(0.0);
+                pack_a_weighted(a, k, i0, p0, mcb, kcb, mr, &mut apack,
+                                &mut eta1[..kcb], &mut eta2[..kcb]);
+                if j0 == 0 {
+                    max_a = max_a.max(super::abft_fused::max_abs(
+                        &apack[..mcb.div_ceil(mr) * mr * kcb]));
+                }
+                // encoded contributions: eta1·B̃ and eta2·B̃ over the
+                // cache-hot packed buffer
+                let mut jj = 0;
+                while jj < ncb {
+                    let cols = nr.min(ncb - jj);
+                    let bp = &bpack[(jj / nr) * (nr * kcb)..][..nr * kcb];
+                    for p in 0..kcb {
+                        let e1 = eta1[p];
+                        let e2 = eta2[p];
+                        let brow = &bp[p * nr..p * nr + cols];
+                        let d1 = &mut enc1_loc[jj..jj + cols];
+                        for (d, bv) in d1.iter_mut().zip(brow) {
+                            *d += e1 * bv;
+                        }
+                        let d2 = &mut enc2_loc[jj..jj + cols];
+                        for (d, bv) in d2.iter_mut().zip(brow) {
+                            *d += e2 * bv;
+                        }
+                    }
+                    jj += nr;
+                }
+                // macro kernel + fused reference checksums
+                let mut jj = 0;
+                while jj < ncb {
+                    let nrb = nr.min(ncb - jj);
+                    let bp = &bpack[(jj / nr) * (nr * kcb)..][..nr * kcb];
+                    let mut ii = 0;
+                    while ii < mcb {
+                        let mrb = mr.min(mcb - ii);
+                        let ap = &apack[(ii / mr) * (mr * kcb)..][..mr * kcb];
+                        micro_kernel(kcb, ap, bp, mr, nr, &mut acc);
+                        for &(s, fi, fj, delta) in inject {
+                            if s == step
+                                && fi >= i0 + ii && fi < i0 + ii + mrb
+                                && fj >= j0 + jj && fj < j0 + jj + nrb
+                            {
+                                acc[(fi - i0 - ii) * nr + (fj - j0 - jj)] +=
+                                    delta;
+                            }
+                        }
+                        for r in 0..mrb {
+                            let gi = i0 + ii + r;
+                            let wrow = (gi + 1) as f64;
+                            let crow = &mut c[gi * n + j0 + jj..][..nrb];
+                            let arow = &acc[r * nr..r * nr + nrb];
+                            let r1 = &mut ref1_loc[jj..jj + nrb];
+                            let r2 = &mut ref2_loc[jj..jj + nrb];
+                            for (((cv, av), v1), v2) in crow
+                                .iter_mut()
+                                .zip(arow)
+                                .zip(r1.iter_mut())
+                                .zip(r2.iter_mut())
+                            {
+                                *cv += av;
+                                *v1 += av;
+                                *v2 += wrow * av;
+                            }
+                        }
+                        ii += mr;
+                    }
+                    jj += nr;
+                }
+                for (g, l) in s1_enc[j0..j0 + ncb].iter_mut()
+                    .zip(&enc1_loc[..ncb])
+                {
+                    *g += l;
+                }
+                for (g, l) in s2_enc[j0..j0 + ncb].iter_mut()
+                    .zip(&enc2_loc[..ncb])
+                {
+                    *g += l;
+                }
+                for (g, l) in s1_ref[j0..j0 + ncb].iter_mut()
+                    .zip(&ref1_loc[..ncb])
+                {
+                    *g += l;
+                }
+                for (g, l) in s2_ref[j0..j0 + ncb].iter_mut()
+                    .zip(&ref2_loc[..ncb])
+                {
+                    *g += l;
+                }
+                i0 += mc;
+            }
+            j0 += nc;
+        }
+        // verification: scan s1; decode the row from Δs2/Δs1
+        let tol = crate::ft::abft::round_off_threshold(
+            max_a * max_b, k, n.max(m)) + corrected_tol;
+        let mut j_err = None;
+        let mut worst = tol;
+        for j in 0..n {
+            let d = (s1_ref[j] - s1_enc[j]).abs();
+            if d > worst {
+                worst = d;
+                j_err = Some(j);
+            }
+        }
+        if let Some(j) = j_err {
+            let d1 = s1_ref[j] - s1_enc[j];
+            let d2 = s2_ref[j] - s2_enc[j];
+            let row = (d2 / d1).round() as isize - 1;
+            if row >= 0 && (row as usize) < m {
+                let i = row as usize;
+                c[i * n + j] -= d1;
+                s1_ref[j] -= d1;
+                s2_ref[j] -= (i + 1) as f64 * d1;
+                corrected_tol += d1.abs() * f64::EPSILON * 64.0
+                    * (m as f64).max(1.0);
+                report.errors_detected += 1;
+                report.errors_corrected += 1;
+            } else {
+                // decoded row out of range: detected but uncorrectable
+                // under the single-error model
+                report.errors_detected += 1;
+            }
+        }
+        p0 += kc;
+        step += 1;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::check::{check, ensure};
+    use crate::util::matrix::{allclose, Matrix};
+
+    #[test]
+    fn weighted_matches_naive_clean() {
+        check("abft-weighted-clean", 20, |g| {
+            let m = g.dim(1, 48);
+            let n = g.dim(1, 48);
+            let k = g.dim(1, 48);
+            let params = GemmParams {
+                kc: [4, 8, 16][g.rng.below(3)],
+                ..Default::default()
+            };
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let mut want = vec![0.0; m * n];
+            naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_weighted(m, n, k, &a.data, &b.data, &mut c,
+                                          &params, &[]);
+            ensure(rep == FtReport::none(),
+                   format!("weighted clean flagged: {rep:?}"))?;
+            ensure(allclose(&c, &want, 1e-9, 1e-9), "weighted clean wrong")
+        });
+    }
+
+    #[test]
+    fn weighted_locates_and_corrects() {
+        check("abft-weighted-inject", 25, |g| {
+            let m = g.dim(4, 64);
+            let n = g.dim(4, 48);
+            let k = g.dim(4, 64);
+            let params = GemmParams { kc: 16, ..Default::default() };
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let mut want = vec![0.0; m * n];
+            naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+            let steps = k.div_ceil(params.kc);
+            let strike = (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                          g.rng.range(10.0, 1e5));
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_weighted(m, n, k, &a.data, &b.data, &mut c,
+                                          &params, &[strike]);
+            ensure(rep.errors_corrected == 1,
+                   format!("weighted {rep:?} for {strike:?}"))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8), "weighted not corrected")
+        });
+    }
+
+    #[test]
+    fn weighted_multi_interval() {
+        let mut rng = crate::util::rng::Rng::new(0xD0);
+        let (m, n, k) = (48, 40, 96);
+        let params = GemmParams { kc: 16, ..Default::default() };
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let mut want = vec![0.0; m * n];
+        naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+        let strikes: Vec<Strike> = (0..k.div_ceil(16))
+            .step_by(2)
+            .map(|s| (s, (s * 7) % m, (s * 11) % n, 5e4))
+            .collect();
+        let mut c = vec![0.0; m * n];
+        let rep = dgemm_abft_weighted(m, n, k, &a.data, &b.data, &mut c,
+                                      &params, &strikes);
+        assert_eq!(rep.errors_corrected, strikes.len() as u64);
+        assert!(allclose(&c, &want, 1e-8, 1e-8));
+    }
+}

@@ -1,0 +1,1020 @@
+//! DMR protection for the *native* Level-1/2 routines (paper §4).
+//!
+//! Sphere of replication: computing instructions only — operands are
+//! loaded once, both compute streams read the same loaded values, the
+//! duplicate stream's constants are laundered through `black_box` so the
+//! optimizer cannot collapse the two streams (the Rust analog of really
+//! issuing the duplicated vmulpd). Verification is chunk-wise with
+//! comparison reduction; recovery recomputes the disagreeing lanes and
+//! re-verifies (the paper's third computation + consensus check).
+//!
+//! The fully-laddered DSCAL lives in `blas::stepwise` (Fig. 7); this
+//! module applies the final-step scheme (pipelined + reduced comparisons)
+//! to the rest of the L1/L2 routines.
+//!
+//! Injection: `Option<(usize, f64)>` — perturb the primary stream's
+//! element/partial at the given output index by delta, exactly once.
+
+use std::hint::black_box;
+
+use crate::blas::level1::LANES;
+use crate::blas::level2::RI;
+use crate::ft::FtReport;
+
+#[cold]
+#[inline(never)]
+fn unrecoverable() -> ! {
+    panic!("FT-BLAS DMR: streams disagree after recomputation — unrecoverable");
+}
+
+/// DSCAL with DMR — the top rung of the Fig. 7 ladder.
+pub fn dscal_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> FtReport {
+    let errs = crate::blas::stepwise::v5_prefetch_ft(alpha, x, inject) as u64;
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// DAXPY with DMR: chunked duplicate FMA streams.
+pub fn daxpy_ft(alpha: f64, x: &[f64], y: &mut [f64],
+                inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let a2 = black_box(alpha);
+    let mut errs = 0u64;
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let mut prim = [0.0f64; LANES];
+        let mut orig = [0.0f64; LANES];
+        let mut mask = 0u32;
+        for l in 0..LANES {
+            orig[l] = y[i + l];
+            prim[l] = alpha * x[i + l] + orig[l];
+        }
+        if let Some((idx, d)) = inject {
+            if idx >= i && idx < i + LANES {
+                prim[idx - i] += d;
+            }
+        }
+        // duplicate FMA stream: a2 is the once-laundered alpha, so both
+        // streams vectorize but cannot be CSE'd into one
+        let mut dup = [0.0f64; LANES];
+        for l in 0..LANES {
+            dup[l] = a2 * x[i + l] + orig[l];
+        }
+        for l in 0..LANES {
+            mask |= ((prim[l] != dup[l]) as u32) << l;
+            y[i + l] = prim[l];
+        }
+        if mask != 0 {
+            errs += mask.count_ones() as u64;
+            for l in 0..LANES {
+                if mask & (1 << l) != 0 {
+                    let r1 = black_box(alpha) * black_box(x[i + l]) + orig[l];
+                    let r2 = black_box(alpha) * black_box(x[i + l]) + orig[l];
+                    if r1 != r2 {
+                        unrecoverable();
+                    }
+                    y[i + l] = r1;
+                }
+            }
+        }
+        i += LANES;
+    }
+    for l in main..n {
+        let orig = y[l];
+        let mut prim = alpha * x[l] + orig;
+        if let Some((idx, d)) = inject {
+            if idx == l {
+                prim += d;
+            }
+        }
+        let dup = a2 * x[l] + orig;
+        if prim != dup {
+            errs += 1;
+            prim = dup;
+        }
+        y[l] = prim;
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// DDOT with DMR: two fully duplicated accumulator-chain sets, verified
+/// bitwise at the horizontal-reduce point (the paper's verification
+/// interval for reductions). The clean path carries no per-chunk
+/// compare/branch — just the duplicated FMA chains, which hide entirely
+/// under the two input streams' memory traffic. On a mismatch the cold
+/// path recomputes a third chain and takes the dup/third consensus.
+/// Injection: `(chunk, delta)` perturbs the primary chain's partial.
+pub fn ddot_ft(x: &[f64], y: &[f64], inject: Option<(usize, f64)>)
+               -> (f64, FtReport) {
+    assert_eq!(x.len(), y.len());
+    let one = black_box(1.0); // laundered multiplier for the dup stream
+    // primary + duplicate per-lane accumulator chains (identical op
+    // order, so clean runs agree bitwise)
+    let mut a1 = [0.0f64; LANES];
+    let mut a2 = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            a1[l] += xs[l] * ys[l];
+            a2[l] += (one * xs[l]) * ys[l];
+        }
+    }
+    let mut t1 = 0.0f64;
+    let mut t2 = 0.0f64;
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        t1 += xi * yi;
+        t2 += (one * xi) * yi;
+    }
+    if let Some((_, d)) = inject {
+        // the strike lands on the primary chain's running partial; it is
+        // carried to the verification point like any transient ALU flip
+        a1[0] += d;
+    }
+    let mut diff = 0u64;
+    for l in 0..LANES {
+        diff |= a1[l].to_bits() ^ a2[l].to_bits();
+    }
+    diff |= t1.to_bits() ^ t2.to_bits();
+    if diff == 0 {
+        return (a1.iter().sum::<f64>() + t1, FtReport::none());
+    }
+    // cold: third chain + consensus with the duplicate
+    let (a3, t3) = ddot_third(x, y);
+    if a3 != a2 || t3 != t2 {
+        unrecoverable();
+    }
+    (a3.iter().sum::<f64>() + t3,
+     FtReport { errors_detected: 1, errors_corrected: 1 })
+}
+
+/// Third computation for the DDOT consensus (cold path).
+#[cold]
+#[inline(never)]
+fn ddot_third(x: &[f64], y: &[f64]) -> ([f64; LANES], f64) {
+    let lau = black_box(1.0);
+    let mut acc = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += (lau * xs[l]) * ys[l];
+        }
+    }
+    let mut tail = 0.0f64;
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += (lau * xi) * yi;
+    }
+    (acc, tail)
+}
+
+/// DNRM2 with DMR (duplicated sum-of-squares chains).
+pub fn dnrm2_ft(x: &[f64], inject: Option<(usize, f64)>) -> (f64, FtReport) {
+    let (ssq, rep) = ddot_ft(x, x, inject);
+    if ssq.is_finite() && ssq > f64::MIN_POSITIVE {
+        (ssq.sqrt(), rep)
+    } else {
+        (crate::blas::naive::dnrm2(x), rep)
+    }
+}
+
+/// DGEMV with DMR: the per-row accumulations are duplicated; comparison
+/// is per RI-row group (the paper's verification interval over the
+/// register-blocked i-loop). Injection: output row index.
+pub fn dgemv_ft(m: usize, n: usize, alpha: f64, a: &[f64], x: &[f64],
+                beta: f64, y: &mut [f64], inject: Option<(usize, f64)>)
+                -> FtReport {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    let mut errs = 0u64;
+    let alpha2 = black_box(alpha);
+    let one = black_box(1.0); // laundered multiplier for the dup streams
+    let mi = m - m % RI;
+    let nj = n - n % LANES;
+    let mut i = 0;
+    while i < mi {
+        // primary + duplicate accumulator tiles: RI rows x LANES lanes,
+        // both streams vectorize (the paper's vr_0..3 plus their shadows)
+        let mut t1 = [[0.0f64; LANES]; RI];
+        let mut t2 = [[0.0f64; LANES]; RI];
+        let mut j = 0;
+        while j < nj {
+            for r in 0..RI {
+                let row = &a[(i + r) * n + j..(i + r) * n + j + LANES];
+                let xs = &x[j..j + LANES];
+                for l in 0..LANES {
+                    let xv2 = one * xs[l];
+                    t1[r][l] += row[l] * xs[l];
+                    t2[r][l] += row[l] * xv2;
+                }
+            }
+            j += LANES;
+        }
+        let mut acc1 = [0.0f64; RI];
+        let mut acc2 = [0.0f64; RI];
+        for r in 0..RI {
+            acc1[r] = t1[r].iter().sum();
+            acc2[r] = t2[r].iter().sum();
+            // identical op order in both tails keeps streams comparable
+            for jj in nj..n {
+                let av = a[(i + r) * n + jj];
+                acc1[r] += av * x[jj];
+                acc2[r] += av * (one * x[jj]);
+            }
+        }
+        if let Some((idx, d)) = inject {
+            if idx >= i && idx < i + RI {
+                acc1[idx - i] += d;
+            }
+        }
+        let mut mask = 0u32;
+        for r in 0..RI {
+            mask |= ((acc1[r] != acc2[r]) as u32) << r;
+        }
+        if mask != 0 {
+            errs += mask.count_ones() as u64;
+            for r in 0..RI {
+                if mask & (1 << r) != 0 {
+                    // recompute the corrupted row (third stream), with the
+                    // same tile summation order so consensus is bitwise
+                    let mut t3 = [0.0f64; LANES];
+                    let mut j = 0;
+                    while j < nj {
+                        let row = &a[(i + r) * n + j..(i + r) * n + j + LANES];
+                        for l in 0..LANES {
+                            t3[l] += black_box(row[l]) * x[j + l];
+                        }
+                        j += LANES;
+                    }
+                    let mut p3: f64 = t3.iter().sum();
+                    for jj in nj..n {
+                        p3 += black_box(a[(i + r) * n + jj]) * x[jj];
+                    }
+                    if p3 != acc2[r] {
+                        unrecoverable();
+                    }
+                    acc1[r] = p3;
+                }
+            }
+        }
+        for r in 0..RI {
+            y[i + r] = alpha * acc1[r] + beta * y[i + r];
+        }
+        i += RI;
+    }
+    while i < m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut p1 = 0.0;
+        let mut p2 = 0.0;
+        for j in 0..n {
+            p1 += row[j] * x[j];
+            p2 += row[j] * (one * x[j]);
+        }
+        if let Some((idx, d)) = inject {
+            if idx == i {
+                p1 += d;
+            }
+        }
+        if p1 != p2 {
+            errs += 1;
+            p1 = p2;
+        }
+        y[i] = alpha * p1 + beta * y[i];
+        i += 1;
+    }
+    // verify alpha stream too (cheap scalar check)
+    if alpha != alpha2 {
+        unrecoverable();
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// DTRSV with DMR: panel updates through `dgemv_ft`, diagonal forward
+/// substitution duplicated and verified (paper's scheme for the Level-1
+/// diagonal section). Injection: (panel step, delta) perturbs that
+/// step's gemv partial at its first row.
+pub fn dtrsv_ft(n: usize, a: &[f64], x: &mut [f64], panel: usize,
+                inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(x.len(), n);
+    let mut report = FtReport::none();
+    let mut i = 0;
+    let mut step = 0;
+    while i < n {
+        let b = panel.min(n - i);
+        if i > 0 {
+            let mut panel_rows = vec![0.0; b * i];
+            for r in 0..b {
+                panel_rows[r * i..(r + 1) * i]
+                    .copy_from_slice(&a[(i + r) * n..(i + r) * n + i]);
+            }
+            let mut upd = vec![0.0; b];
+            let inj = inject.and_then(|(s, d)| (s == step).then_some((0usize, d)));
+            report.merge(dgemv_ft(b, i, 1.0, &panel_rows, &x[..i], 0.0,
+                                  &mut upd, inj));
+            for r in 0..b {
+                x[i + r] -= upd[r];
+            }
+        }
+        // diagonal block: duplicated forward substitution
+        let solve = |x: &[f64], out: &mut [f64]| {
+            for r in 0..b {
+                let row = &a[(i + r) * n + i..(i + r) * n + i + r];
+                let mut acc = x[i + r];
+                for (j, &v) in row.iter().enumerate() {
+                    acc -= v * out[j];
+                }
+                out[r] = acc / a[(i + r) * n + i + r];
+            }
+        };
+        let mut s1 = vec![0.0; b];
+        let mut s2 = vec![0.0; b];
+        solve(x, &mut s1);
+        solve(x, &mut s2);
+        if s1 != s2 {
+            report.errors_detected += 1;
+            let mut s3 = vec![0.0; b];
+            solve(x, &mut s3);
+            if s3 != s2 {
+                unrecoverable();
+            }
+            s1 = s3;
+            report.errors_corrected += 1;
+        }
+        x[i..i + b].copy_from_slice(&s1);
+        i += b;
+        step += 1;
+    }
+    report
+}
+
+/// DASUM with DMR: duplicated |x| accumulation chains, verified bitwise
+/// at the horizontal-reduce point (same scheme as [`ddot_ft`]).
+pub fn dasum_ft(x: &[f64], inject: Option<(usize, f64)>) -> (f64, FtReport) {
+    let one = black_box(1.0);
+    let mut a1 = [0.0f64; LANES];
+    let mut a2 = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    for xs in &mut xc {
+        for l in 0..LANES {
+            a1[l] += xs[l].abs();
+            a2[l] += (one * xs[l]).abs();
+        }
+    }
+    let mut t1 = 0.0f64;
+    let mut t2 = 0.0f64;
+    for v in xc.remainder() {
+        t1 += v.abs();
+        t2 += (one * v).abs();
+    }
+    if let Some((_, d)) = inject {
+        a1[0] += d;
+    }
+    let mut diff = 0u64;
+    for l in 0..LANES {
+        diff |= a1[l].to_bits() ^ a2[l].to_bits();
+    }
+    diff |= t1.to_bits() ^ t2.to_bits();
+    if diff == 0 {
+        return (a1.iter().sum::<f64>() + t1, FtReport::none());
+    }
+    // cold: third chain + consensus with the duplicate
+    let (a3, t3) = dasum_third(x);
+    if a3 != a2 || t3 != t2 {
+        unrecoverable();
+    }
+    (a3.iter().sum::<f64>() + t3,
+     FtReport { errors_detected: 1, errors_corrected: 1 })
+}
+
+/// Third computation for the DASUM consensus (cold path).
+#[cold]
+#[inline(never)]
+fn dasum_third(x: &[f64]) -> ([f64; LANES], f64) {
+    let lau = black_box(1.0);
+    let mut acc = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    for xs in &mut xc {
+        for l in 0..LANES {
+            acc[l] += (lau * xs[l]).abs();
+        }
+    }
+    let mut tail = 0.0f64;
+    for v in xc.remainder() {
+        tail += (lau * v).abs();
+    }
+    (acc, tail)
+}
+
+/// DROT with DMR: both rotation streams computed from the same loaded
+/// (x, y) pair; per-chunk comparison reduction. Injection: element index
+/// perturbs the primary x-stream.
+pub fn drot_ft(x: &mut [f64], y: &mut [f64], c: f64, s: f64,
+               inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let (c2, s2) = (black_box(c), black_box(s));
+    let mut errs = 0u64;
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let mut px = [0.0f64; LANES];
+        let mut py = [0.0f64; LANES];
+        let mut dx = [0.0f64; LANES];
+        let mut dy = [0.0f64; LANES];
+        for l in 0..LANES {
+            let (xa, yb) = (x[i + l], y[i + l]);
+            px[l] = c * xa + s * yb;
+            py[l] = c * yb - s * xa;
+            dx[l] = c2 * xa + s2 * yb;
+            dy[l] = c2 * yb - s2 * xa;
+        }
+        if let Some((idx, d)) = inject {
+            if idx >= i && idx < i + LANES {
+                px[idx - i] += d;
+            }
+        }
+        let mut diff = 0u64;
+        for l in 0..LANES {
+            diff |= (px[l].to_bits() ^ dx[l].to_bits())
+                | (py[l].to_bits() ^ dy[l].to_bits());
+        }
+        if diff != 0 {
+            errs += 1;
+            // third computation + consensus, then in-register restore
+            for l in 0..LANES {
+                let (xa, yb) = (x[i + l], y[i + l]);
+                let tx = black_box(c) * xa + black_box(s) * yb;
+                let ty = black_box(c) * yb - black_box(s) * xa;
+                if (px[l] != dx[l] && tx != dx[l])
+                    || (py[l] != dy[l] && ty != dy[l])
+                {
+                    unrecoverable();
+                }
+                px[l] = tx;
+                py[l] = ty;
+            }
+        }
+        for l in 0..LANES {
+            x[i + l] = px[l];
+            y[i + l] = py[l];
+        }
+        i += LANES;
+    }
+    for l in main..n {
+        let (xa, yb) = (x[l], y[l]);
+        let (mut p, mut q) = (c * xa + s * yb, c * yb - s * xa);
+        let (p2, q2) = (c2 * xa + s2 * yb, c2 * yb - s2 * xa);
+        if p != p2 || q != q2 {
+            errs += 1;
+            p = p2;
+            q = q2;
+        }
+        x[l] = p;
+        y[l] = q;
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// DROTM with DMR. The flag dispatch happens once; the duplicated
+/// streams use laundered H entries.
+pub fn drotm_ft(x: &mut [f64], y: &mut [f64], param: &[f64; 5],
+                inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(x.len(), y.len());
+    let flag = param[0];
+    let (h11, h21, h12, h22) = match flag {
+        f if f == -2.0 => return FtReport::none(),
+        f if f == -1.0 => (param[1], param[2], param[3], param[4]),
+        f if f == 0.0 => (1.0, param[2], param[3], 1.0),
+        _ => (param[1], -1.0, 1.0, param[4]),
+    };
+    let (g11, g21, g12, g22) = (black_box(h11), black_box(h21),
+                                black_box(h12), black_box(h22));
+    let n = x.len();
+    let mut errs = 0u64;
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let mut px = [0.0f64; LANES];
+        let mut py = [0.0f64; LANES];
+        let mut dx = [0.0f64; LANES];
+        let mut dy = [0.0f64; LANES];
+        for l in 0..LANES {
+            let (xa, yb) = (x[i + l], y[i + l]);
+            px[l] = h11 * xa + h12 * yb;
+            py[l] = h21 * xa + h22 * yb;
+            dx[l] = g11 * xa + g12 * yb;
+            dy[l] = g21 * xa + g22 * yb;
+        }
+        if let Some((idx, d)) = inject {
+            if idx >= i && idx < i + LANES {
+                py[idx - i] += d;
+            }
+        }
+        let mut diff = 0u64;
+        for l in 0..LANES {
+            diff |= (px[l].to_bits() ^ dx[l].to_bits())
+                | (py[l].to_bits() ^ dy[l].to_bits());
+        }
+        if diff != 0 {
+            errs += 1;
+            for l in 0..LANES {
+                let (xa, yb) = (x[i + l], y[i + l]);
+                let tx = black_box(h11) * xa + black_box(h12) * yb;
+                let ty = black_box(h21) * xa + black_box(h22) * yb;
+                if (px[l] != dx[l] && tx != dx[l])
+                    || (py[l] != dy[l] && ty != dy[l])
+                {
+                    unrecoverable();
+                }
+                px[l] = tx;
+                py[l] = ty;
+            }
+        }
+        for l in 0..LANES {
+            x[i + l] = px[l];
+            y[i + l] = py[l];
+        }
+        i += LANES;
+    }
+    for l in main..n {
+        let (xa, yb) = (x[l], y[l]);
+        let (mut p, mut q) = (h11 * xa + h12 * yb, h21 * xa + h22 * yb);
+        let (p2, q2) = (g11 * xa + g12 * yb, g21 * xa + g22 * yb);
+        if p != p2 || q != q2 {
+            errs += 1;
+            p = p2;
+            q = q2;
+        }
+        x[l] = p;
+        y[l] = q;
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// IDAMAX with DMR: the comparison instructions *are* the compute here,
+/// so the scan itself is duplicated; the two winners must agree.
+/// Injection: (chunk, _) forces the primary stream to a wrong candidate
+/// within that chunk.
+pub fn idamax_ft(x: &[f64], inject: Option<(usize, f64)>) -> (usize, FtReport) {
+    let n = x.len();
+    if n == 0 {
+        return (0, FtReport::none());
+    }
+    let scan = |corrupt: Option<usize>| -> usize {
+        let mut best = 0usize;
+        let mut bv = 0.0f64;
+        let mut i = 0;
+        let mut chunk = 0usize;
+        while i < n {
+            let end = (i + LANES).min(n);
+            for l in i..end {
+                let v = black_box(x[l]).abs();
+                if v > bv {
+                    bv = v;
+                    best = l;
+                }
+            }
+            if corrupt == Some(chunk) {
+                // a flipped comparison result: the faulty stream adopts
+                // this chunk's last element as the running winner
+                best = end - 1;
+                bv = x[end - 1].abs() + 1.0;
+            }
+            i = end;
+            chunk += 1;
+        }
+        best
+    };
+    let p = scan(inject.map(|(c, _)| c % n.div_ceil(LANES)));
+    let d = scan(None);
+    if p == d {
+        return (p, FtReport::none());
+    }
+    // third scan + consensus
+    let t = scan(None);
+    if t != d {
+        unrecoverable();
+    }
+    (t, FtReport { errors_detected: 1, errors_corrected: 1 })
+}
+
+/// DGER with DMR: A += alpha x yᵀ with duplicated FMA streams per row
+/// chunk. Injection: flat element index into A.
+pub fn dger_ft(m: usize, n: usize, alpha: f64, x: &[f64], y: &[f64],
+               a: &mut [f64], inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    let one = black_box(1.0);
+    let mut errs = 0u64;
+    for i in 0..m {
+        let axi = alpha * x[i];
+        let axi2 = (one * alpha) * x[i];
+        let row = &mut a[i * n..(i + 1) * n];
+        let main = n - n % LANES;
+        let mut j = 0;
+        while j < main {
+            let mut prim = [0.0f64; LANES];
+            let mut dup = [0.0f64; LANES];
+            let mut orig = [0.0f64; LANES];
+            for l in 0..LANES {
+                orig[l] = row[j + l];
+                prim[l] = axi * y[j + l] + orig[l];
+                dup[l] = axi2 * y[j + l] + orig[l];
+            }
+            if let Some((idx, d)) = inject {
+                if idx >= i * n + j && idx < i * n + j + LANES {
+                    prim[idx - i * n - j] += d;
+                }
+            }
+            let mut mask = 0u32;
+            for l in 0..LANES {
+                mask |= ((prim[l] != dup[l]) as u32) << l;
+            }
+            if mask != 0 {
+                errs += mask.count_ones() as u64;
+                for l in 0..LANES {
+                    if mask & (1 << l) != 0 {
+                        let r1 = black_box(axi) * black_box(y[j + l]) + orig[l];
+                        let r2 = black_box(axi) * black_box(y[j + l]) + orig[l];
+                        if r1 != r2 {
+                            unrecoverable();
+                        }
+                        prim[l] = r1;
+                    }
+                }
+            }
+            for l in 0..LANES {
+                row[j + l] = prim[l];
+            }
+            j += LANES;
+        }
+        for l in main..n {
+            let orig = row[l];
+            let mut p = axi * y[l] + orig;
+            if let Some((idx, d)) = inject {
+                if idx == i * n + l {
+                    p += d;
+                }
+            }
+            let q = axi2 * y[l] + orig;
+            if p != q {
+                errs += 1;
+                p = q;
+            }
+            row[l] = p;
+        }
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// DSYMV with DMR: per-row duplicated accumulation over the symmetric
+/// read pattern (tril stored). Injection: output row index.
+pub fn dsymv_ft(n: usize, alpha: f64, a: &[f64], x: &[f64], beta: f64,
+                y: &mut [f64], inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), n);
+    let one = black_box(1.0);
+    let mut errs = 0u64;
+    for i in 0..n {
+        let mut p1 = 0.0f64;
+        let mut p2 = 0.0f64;
+        for j in 0..n {
+            let aij = if j <= i { a[i * n + j] } else { a[j * n + i] };
+            p1 += aij * x[j];
+            p2 += aij * (one * x[j]);
+        }
+        if let Some((idx, d)) = inject {
+            if idx == i {
+                p1 += d;
+            }
+        }
+        if p1 != p2 {
+            errs += 1;
+            let mut p3 = 0.0f64;
+            for j in 0..n {
+                let aij = if j <= i { a[i * n + j] } else { a[j * n + i] };
+                p3 += black_box(aij) * x[j];
+            }
+            if p3 != p2 {
+                unrecoverable();
+            }
+            p1 = p3;
+        }
+        y[i] = alpha * p1 + beta * y[i];
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+/// DTRMV with DMR: x := tril(A)·x, rows walked bottom-up with duplicated
+/// accumulator chains. Injection: output row index.
+pub fn dtrmv_ft(n: usize, a: &[f64], x: &mut [f64],
+                inject: Option<(usize, f64)>) -> FtReport {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(x.len(), n);
+    let one = black_box(1.0);
+    let mut errs = 0u64;
+    for i in (0..n).rev() {
+        let row = &a[i * n..i * n + i + 1];
+        let mut p1 = 0.0f64;
+        let mut p2 = 0.0f64;
+        for (j, &aij) in row.iter().enumerate() {
+            p1 += aij * x[j];
+            p2 += aij * (one * x[j]);
+        }
+        if let Some((idx, d)) = inject {
+            if idx == i {
+                p1 += d;
+            }
+        }
+        if p1 != p2 {
+            errs += 1;
+            let mut p3 = 0.0f64;
+            for (j, &aij) in row.iter().enumerate() {
+                p3 += black_box(aij) * x[j];
+            }
+            if p3 != p2 {
+                unrecoverable();
+            }
+            p1 = p3;
+        }
+        x[i] = p1;
+    }
+    FtReport { errors_detected: errs, errors_corrected: errs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::check::{check, ensure, ensure_close};
+    use crate::util::matrix::{allclose, Matrix};
+
+    #[test]
+    fn dscal_ft_clean_and_injected() {
+        check("dmr-dscal", 25, |g| {
+            let n = g.dim(1, 400);
+            let alpha = g.rng.range(0.5, 2.0);
+            let x0: Vec<f64> = (0..n).map(|_| g.rng.range(0.5, 2.0)).collect();
+            let want: Vec<f64> = x0.iter().map(|v| alpha * v).collect();
+            let mut x = x0.clone();
+            let rep = dscal_ft(alpha, &mut x, None);
+            ensure(rep.errors_detected == 0 && x == want, "clean run")?;
+            let idx = g.rng.below(n);
+            let mut x = x0.clone();
+            let rep = dscal_ft(alpha, &mut x, Some((idx, 3.5)));
+            ensure(rep.errors_detected == 1 && rep.errors_corrected == 1,
+                   format!("inject rep {rep:?}"))?;
+            ensure(x == want, "injected value not corrected")
+        });
+    }
+
+    #[test]
+    fn daxpy_ft_clean_and_injected() {
+        check("dmr-daxpy", 25, |g| {
+            let n = g.dim(1, 300);
+            let alpha = g.rng.range(-2.0, 2.0);
+            let x = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(n);
+            let mut want = y0.clone();
+            naive::daxpy(alpha, &x, &mut want);
+            let mut y = y0.clone();
+            let rep = daxpy_ft(alpha, &x, &mut y, None);
+            ensure(rep.errors_detected == 0 && y == want, "clean daxpy")?;
+            let idx = g.rng.below(n);
+            let mut y = y0.clone();
+            let rep = daxpy_ft(alpha, &x, &mut y, Some((idx, 9.0)));
+            ensure(rep.errors_corrected == 1 && y == want, "injected daxpy")
+        });
+    }
+
+    #[test]
+    fn ddot_ft_clean_and_injected() {
+        check("dmr-ddot", 25, |g| {
+            let n = g.dim(8, 500);
+            let x = g.rng.normal_vec(n);
+            let y = g.rng.normal_vec(n);
+            let want = naive::ddot(&x, &y);
+            let (d, rep) = ddot_ft(&x, &y, None);
+            ensure(rep.errors_detected == 0, "clean ddot flagged")?;
+            ensure_close(d, want, 1e-12, "clean ddot value")?;
+            let chunk = g.rng.below(n / 8);
+            let (d, rep) = ddot_ft(&x, &y, Some((chunk, 1e3)));
+            ensure(rep.errors_corrected == 1, "injected ddot not corrected")?;
+            ensure_close(d, want, 1e-12, "injected ddot value")
+        });
+    }
+
+    #[test]
+    fn dgemv_ft_clean_and_injected() {
+        check("dmr-dgemv", 20, |g| {
+            let m = g.dim(1, 60);
+            let n = g.dim(1, 60);
+            let a = Matrix::random(m, n, &mut g.rng);
+            let x = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(m);
+            let mut want = y0.clone();
+            naive::dgemv(m, n, 1.3, &a.data, &x, 0.4, &mut want);
+            let mut y = y0.clone();
+            let rep = dgemv_ft(m, n, 1.3, &a.data, &x, 0.4, &mut y, None);
+            ensure(rep.errors_detected == 0, "clean gemv flagged")?;
+            ensure(allclose(&y, &want, 1e-11, 1e-11), "clean gemv value")?;
+            let idx = g.rng.below(m);
+            let mut y = y0.clone();
+            let rep = dgemv_ft(m, n, 1.3, &a.data, &x, 0.4, &mut y,
+                               Some((idx, 2e4)));
+            ensure(rep.errors_corrected == 1, format!("gemv inject {rep:?}"))?;
+            ensure(allclose(&y, &want, 1e-11, 1e-11), "gemv not corrected")
+        });
+    }
+
+    #[test]
+    fn dtrsv_ft_clean_and_injected() {
+        check("dmr-dtrsv", 20, |g| {
+            let n = g.dim(8, 120);
+            let a = Matrix::random_lower_triangular(n, &mut g.rng);
+            let b = g.rng.normal_vec(n);
+            let mut want = b.clone();
+            naive::dtrsv_lower(n, &a.data, &mut want);
+            let mut x = b.clone();
+            let rep = dtrsv_ft(n, &a.data, &mut x, 4, None);
+            ensure(rep.errors_detected == 0, "clean trsv flagged")?;
+            ensure(allclose(&x, &want, 1e-9, 1e-9), "clean trsv value")?;
+            let steps = n.div_ceil(4);
+            let step = 1 + g.rng.below((steps - 1).max(1));
+            let mut x = b.clone();
+            let rep = dtrsv_ft(n, &a.data, &mut x, 4, Some((step, 5e3)));
+            ensure(rep.errors_corrected >= 1, format!("trsv inject {rep:?}"))?;
+            ensure(allclose(&x, &want, 1e-9, 1e-9), "trsv not corrected")
+        });
+    }
+
+    #[test]
+    fn dnrm2_ft_matches() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x = rng.normal_vec(333);
+        let (v, rep) = dnrm2_ft(&x, None);
+        assert_eq!(rep.errors_detected, 0);
+        assert!((v - naive::dnrm2(&x)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dasum_ft_clean_and_injected() {
+        check("dmr-dasum", 25, |g| {
+            let n = g.dim(8, 500);
+            let x = g.rng.normal_vec(n);
+            let want = naive::dasum(&x);
+            let (v, rep) = dasum_ft(&x, None);
+            ensure(rep.errors_detected == 0, "clean dasum flagged")?;
+            ensure_close(v, want, 1e-12, "clean dasum value")?;
+            let chunk = g.rng.below(n / 8);
+            let (v, rep) = dasum_ft(&x, Some((chunk, 7.0)));
+            ensure(rep.errors_corrected == 1, "injected dasum not corrected")?;
+            ensure_close(v, want, 1e-12, "injected dasum value")
+        });
+    }
+
+    #[test]
+    fn drot_ft_clean_and_injected() {
+        check("dmr-drot", 25, |g| {
+            let n = g.dim(1, 300);
+            let (c, s) = (0.6, 0.8);
+            let x0 = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(n);
+            let (mut wx, mut wy) = (x0.clone(), y0.clone());
+            naive::drot(&mut wx, &mut wy, c, s);
+            let (mut x, mut y) = (x0.clone(), y0.clone());
+            let rep = drot_ft(&mut x, &mut y, c, s, None);
+            ensure(rep.errors_detected == 0 && x == wx && y == wy,
+                   "clean drot")?;
+            let idx = g.rng.below(n);
+            let (mut x, mut y) = (x0, y0);
+            let rep = drot_ft(&mut x, &mut y, c, s, Some((idx, 4.0)));
+            // tail injections (idx >= main) are not applied — only
+            // require correction when the strike landed in a chunk
+            if idx < n - n % crate::blas::level1::LANES {
+                ensure(rep.errors_corrected == 1,
+                       format!("drot inject {rep:?}"))?;
+            }
+            ensure(x == wx && y == wy, "drot not corrected")
+        });
+    }
+
+    #[test]
+    fn drotm_ft_all_flags() {
+        check("dmr-drotm", 30, |g| {
+            let n = g.dim(1, 200);
+            let flag = [-2.0, -1.0, 0.0, 1.0][g.rng.below(4)];
+            let param = [flag, g.rng.range(-2.0, 2.0), g.rng.range(-2.0, 2.0),
+                         g.rng.range(-2.0, 2.0), g.rng.range(-2.0, 2.0)];
+            let x0 = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(n);
+            let (mut wx, mut wy) = (x0.clone(), y0.clone());
+            naive::drotm(&mut wx, &mut wy, &param);
+            let (mut x, mut y) = (x0.clone(), y0.clone());
+            let rep = drotm_ft(&mut x, &mut y, &param, None);
+            ensure(rep.errors_detected == 0 && x == wx && y == wy,
+                   format!("clean drotm flag {flag}"))?;
+            if flag != -2.0 {
+                let idx = g.rng.below(n);
+                let (mut x, mut y) = (x0, y0);
+                let rep = drotm_ft(&mut x, &mut y, &param, Some((idx, -3.0)));
+                if idx < n - n % crate::blas::level1::LANES {
+                    ensure(rep.errors_corrected == 1,
+                           format!("drotm inject {rep:?}"))?;
+                }
+                ensure(x == wx && y == wy, "drotm not corrected")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn idamax_ft_clean_and_injected() {
+        check("dmr-idamax", 30, |g| {
+            let n = g.dim(1, 400);
+            let x = g.rng.normal_vec(n);
+            let want = naive::idamax(&x);
+            let (i, rep) = idamax_ft(&x, None);
+            ensure(rep.errors_detected == 0 && i == want, "clean idamax")?;
+            let chunk = g.rng.below(n.div_ceil(8));
+            let (i, rep) = idamax_ft(&x, Some((chunk, 0.0)));
+            ensure(i == want, "idamax index not recovered")?;
+            // the corrupted scan may coincidentally agree when the strike
+            // lands on the true winner's chunk-end — only require
+            // detection when the answers differed
+            if rep.errors_detected > 0 {
+                ensure(rep.errors_corrected == 1, format!("idamax {rep:?}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dger_ft_clean_and_injected() {
+        check("dmr-dger", 20, |g| {
+            let m = g.dim(1, 50);
+            let n = g.dim(1, 50);
+            let alpha = g.rng.range(-2.0, 2.0);
+            let x = g.rng.normal_vec(m);
+            let y = g.rng.normal_vec(n);
+            let a0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = a0.data.clone();
+            naive::dger(m, n, alpha, &x, &y, &mut want);
+            let mut a = a0.data.clone();
+            let rep = dger_ft(m, n, alpha, &x, &y, &mut a, None);
+            ensure(rep.errors_detected == 0 && a == want, "clean dger")?;
+            let idx = g.rng.below(m * n);
+            let mut a = a0.data.clone();
+            let rep = dger_ft(m, n, alpha, &x, &y, &mut a, Some((idx, 11.0)));
+            ensure(rep.errors_corrected == 1 && a == want,
+                   format!("dger inject {rep:?}"))
+        });
+    }
+
+    #[test]
+    fn dsymv_ft_clean_and_injected() {
+        check("dmr-dsymv", 20, |g| {
+            let n = g.dim(1, 60);
+            let a = Matrix::random(n, n, &mut g.rng);
+            let x = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(n);
+            let mut want = y0.clone();
+            naive::dsymv_lower(n, 1.1, &a.data, &x, 0.7, &mut want);
+            let mut y = y0.clone();
+            let rep = dsymv_ft(n, 1.1, &a.data, &x, 0.7, &mut y, None);
+            ensure(rep.errors_detected == 0, "clean dsymv flagged")?;
+            ensure(allclose(&y, &want, 1e-11, 1e-11), "clean dsymv value")?;
+            let idx = g.rng.below(n);
+            let mut y = y0;
+            let rep = dsymv_ft(n, 1.1, &a.data, &x, 0.7, &mut y,
+                               Some((idx, 6e3)));
+            ensure(rep.errors_corrected == 1, format!("dsymv inject {rep:?}"))?;
+            ensure(allclose(&y, &want, 1e-11, 1e-11), "dsymv not corrected")
+        });
+    }
+
+    #[test]
+    fn dtrmv_ft_clean_and_injected() {
+        check("dmr-dtrmv", 20, |g| {
+            let n = g.dim(1, 80);
+            let a = Matrix::random(n, n, &mut g.rng);
+            let x0 = g.rng.normal_vec(n);
+            let mut want = x0.clone();
+            naive::dtrmv_lower(n, &a.data, &mut want);
+            let mut x = x0.clone();
+            let rep = dtrmv_ft(n, &a.data, &mut x, None);
+            ensure(rep.errors_detected == 0, "clean dtrmv flagged")?;
+            ensure(allclose(&x, &want, 1e-12, 1e-12), "clean dtrmv value")?;
+            let idx = g.rng.below(n);
+            let mut x = x0;
+            let rep = dtrmv_ft(n, &a.data, &mut x, Some((idx, -8e2)));
+            ensure(rep.errors_corrected == 1, format!("dtrmv inject {rep:?}"))?;
+            ensure(allclose(&x, &want, 1e-12, 1e-12), "dtrmv not corrected")
+        });
+    }
+}

@@ -1,0 +1,190 @@
+//! Deterministic fault-injection substrate (DESIGN.md substitution #3).
+//!
+//! The paper injects errors "from a source code level to minimize the
+//! performance impact" — one error every k iterations, 20 per routine
+//! run, with positions/magnitudes chosen per run. This module generates
+//! those injection plans deterministically from a seed so experiments are
+//! reproducible, and converts them to the operand format the AOT kernels
+//! expect ([flag, idx..., delta] f64 vectors).
+
+use crate::util::rng::Rng;
+
+/// One planned fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fault {
+    /// Which call (or rank-k step / panel step) the fault strikes.
+    pub step: usize,
+    /// Position within the output (row for vectors, (i, j) for matrices).
+    pub i: usize,
+    pub j: usize,
+    /// Additive magnitude — the flipped-bit value delta.
+    pub delta: f64,
+}
+
+/// Injection configuration for an experiment run.
+#[derive(Clone, Debug)]
+pub struct InjectorConfig {
+    pub seed: u64,
+    /// Total faults to inject across the run (paper: 20 per routine).
+    pub count: usize,
+    /// Magnitude range (log-uniform).
+    pub min_magnitude: f64,
+    pub max_magnitude: f64,
+}
+
+impl Default for InjectorConfig {
+    fn default() -> Self {
+        InjectorConfig {
+            seed: 0xF417,
+            count: 20,
+            min_magnitude: 1.0,
+            max_magnitude: 1e6,
+        }
+    }
+}
+
+/// Plans and serves faults for a run of `total_steps` kernel invocations
+/// over an (m x n) output (n = 1 for vector routines).
+#[derive(Clone, Debug)]
+pub struct Injector {
+    plan: Vec<Fault>,
+    cursor: usize,
+}
+
+impl Injector {
+    /// Evenly spread `config.count` faults over `total_steps` (the paper's
+    /// "one error every k iterations"), with randomized positions and
+    /// log-uniform magnitudes.
+    pub fn plan(config: &InjectorConfig, total_steps: usize, m: usize,
+                n: usize) -> Self {
+        let mut rng = Rng::new(config.seed);
+        let count = config.count.min(total_steps);
+        let stride = if count == 0 { 1 } else { total_steps / count.max(1) };
+        let lo = config.min_magnitude.ln();
+        let hi = config.max_magnitude.ln();
+        let plan = (0..count)
+            .map(|f| Fault {
+                step: (f * stride.max(1)).min(total_steps.saturating_sub(1)),
+                i: rng.below(m.max(1)),
+                j: rng.below(n.max(1)),
+                delta: rng.range(lo, hi).exp()
+                    * if rng.uniform() < 0.5 { -1.0 } else { 1.0 },
+            })
+            .collect();
+        Injector { plan, cursor: 0 }
+    }
+
+    pub fn empty() -> Self {
+        Injector { plan: Vec::new(), cursor: 0 }
+    }
+
+    pub fn planned(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// The fault striking `step`, if any (consumes it).
+    pub fn take(&mut self, step: usize) -> Option<Fault> {
+        if self.cursor < self.plan.len() && self.plan[self.cursor].step == step {
+            let f = self.plan[self.cursor];
+            self.cursor += 1;
+            Some(f)
+        } else {
+            None
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.plan.len() - self.cursor
+    }
+}
+
+/// Serialize a fault to the 3-operand format of the L1 DMR kernels:
+/// [flag, idx, delta].
+pub fn to_inject3(fault: Option<Fault>) -> [f64; 3] {
+    match fault {
+        Some(f) => [1.0, f.i as f64, f.delta],
+        None => [0.0, 0.0, 0.0],
+    }
+}
+
+/// Serialize to the 4-operand format of the GEMV-DMR / ABFT kernels:
+/// [flag, i, j, delta].
+pub fn to_inject4(fault: Option<Fault>) -> [f64; 4] {
+    match fault {
+        Some(f) => [1.0, f.i as f64, f.j as f64, f.delta],
+        None => [0.0, 0.0, 0.0, 0.0],
+    }
+}
+
+/// Serialize to the 5-operand format of the FT-TRSM kernel:
+/// [flag, step, i, j, delta].
+pub fn to_inject5(fault: Option<Fault>) -> [f64; 5] {
+    match fault {
+        Some(f) => [1.0, f.step as f64, f.i as f64, f.j as f64, f.delta],
+        None => [0.0; 5],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic() {
+        let cfg = InjectorConfig::default();
+        let a = Injector::plan(&cfg, 100, 64, 64);
+        let b = Injector::plan(&cfg, 100, 64, 64);
+        assert_eq!(a.plan, b.plan);
+    }
+
+    #[test]
+    fn plan_spreads_steps() {
+        let cfg = InjectorConfig { count: 10, ..Default::default() };
+        let inj = Injector::plan(&cfg, 100, 8, 8);
+        assert_eq!(inj.planned(), 10);
+        let steps: Vec<usize> = inj.plan.iter().map(|f| f.step).collect();
+        assert!(steps.windows(2).all(|w| w[0] < w[1]), "{steps:?}");
+        assert!(*steps.last().unwrap() < 100);
+    }
+
+    #[test]
+    fn take_consumes_in_order() {
+        let cfg = InjectorConfig { count: 4, ..Default::default() };
+        let mut inj = Injector::plan(&cfg, 8, 4, 4);
+        let mut hits = 0;
+        for step in 0..8 {
+            if inj.take(step).is_some() {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 4);
+        assert_eq!(inj.remaining(), 0);
+    }
+
+    #[test]
+    fn positions_in_range() {
+        let cfg = InjectorConfig { count: 50, ..Default::default() };
+        let inj = Injector::plan(&cfg, 50, 13, 7);
+        for f in &inj.plan {
+            assert!(f.i < 13 && f.j < 7);
+            let mag = f.delta.abs();
+            assert!((1.0..=1e6).contains(&mag), "delta={}", f.delta);
+        }
+    }
+
+    #[test]
+    fn count_capped_by_steps() {
+        let cfg = InjectorConfig { count: 100, ..Default::default() };
+        let inj = Injector::plan(&cfg, 5, 4, 4);
+        assert_eq!(inj.planned(), 5);
+    }
+
+    #[test]
+    fn serializers() {
+        let f = Fault { step: 3, i: 2, j: 5, delta: -7.5 };
+        assert_eq!(to_inject3(Some(f)), [1.0, 2.0, -7.5]);
+        assert_eq!(to_inject4(Some(f)), [1.0, 2.0, 5.0, -7.5]);
+        assert_eq!(to_inject5(Some(f)), [1.0, 3.0, 2.0, 5.0, -7.5]);
+        assert_eq!(to_inject3(None)[0], 0.0);
+    }
+}

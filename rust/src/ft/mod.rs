@@ -1,0 +1,42 @@
+//! The fault-tolerance engine (paper §4-§5).
+//!
+//! - [`dmr`] — duplicate-and-verify wrappers for the memory-bound
+//!   Level-1/2 native routines (the paper's §4 scheme; the Pallas-side
+//!   DMR lives inside the AOT kernels).
+//! - [`abft`] — checksum-based online ABFT primitives for the
+//!   compute-bound Level-3 routines: encode / verify / locate / correct,
+//!   plus the unfused "ABFT-on-third-party" path the paper's Fig. 8
+//!   compares against.
+//! - [`abft_fused`] — the paper's §5.2 contribution: the native GEMM
+//!   frame with every checksum access fused into the packing routines,
+//!   the β-scaling pass, and the macro kernel's register tile. (The
+//!   Pallas-side fused kernel is `python/compile/kernels/gemm_abft.py`.)
+//! - [`injector`] — the deterministic fault-injection substrate standing
+//!   in for physical transient faults (DESIGN.md substitution #3).
+//! - [`policy`] — which protection scheme a request runs under.
+
+pub mod abft;
+pub mod abft_fused;
+pub mod abft_weighted;
+pub mod dmr;
+pub mod injector;
+pub mod policy;
+
+/// Outcome counters a protected execution reports back to the metrics
+/// layer (paper §6.3 validates against these).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FtReport {
+    pub errors_detected: u64,
+    pub errors_corrected: u64,
+}
+
+impl FtReport {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn merge(&mut self, other: FtReport) {
+        self.errors_detected += other.errors_detected;
+        self.errors_corrected += other.errors_corrected;
+    }
+}

@@ -1,0 +1,54 @@
+//! FT policy: which protection scheme the coordinator applies to a
+//! request. The paper's hybrid strategy (§1): DMR for memory-bound
+//! Level-1/2, fused online ABFT for compute-bound Level-3.
+
+/// Protection scheme selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FtPolicy {
+    /// No protection (the "Ori" baseline and all reference libraries).
+    None,
+    /// The paper's hybrid: DMR for L1/L2 routines, fused ABFT for L3.
+    /// This is "FT-BLAS: FT".
+    Hybrid,
+    /// Unfused ABFT built on top of an unprotected backend (the paper's
+    /// §5.1 "ABFT on a third-party library" — Fig. 8's slow baseline).
+    /// Applies to L3 routines only; L1/L2 fall back to DMR.
+    AbftUnfused,
+}
+
+impl FtPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FtPolicy::None => "none",
+            FtPolicy::Hybrid => "hybrid",
+            FtPolicy::AbftUnfused => "abft-unfused",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<FtPolicy> {
+        match s {
+            "none" | "off" => Some(FtPolicy::None),
+            "hybrid" | "on" | "ft" => Some(FtPolicy::Hybrid),
+            "abft-unfused" | "unfused" => Some(FtPolicy::AbftUnfused),
+            _ => None,
+        }
+    }
+
+    pub fn protects(&self) -> bool {
+        !matches!(self, FtPolicy::None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for p in [FtPolicy::None, FtPolicy::Hybrid, FtPolicy::AbftUnfused] {
+            assert_eq!(FtPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(FtPolicy::by_name("on"), Some(FtPolicy::Hybrid));
+        assert!(FtPolicy::by_name("bogus").is_none());
+    }
+}

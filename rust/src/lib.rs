@@ -1,0 +1,36 @@
+//! # FT-BLAS
+//!
+//! A reproduction of *"FT-BLAS: A High Performance BLAS Implementation With
+//! Online Fault Tolerance"* (Zhai et al., ICS '21) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! - [`blas`] — the pure-Rust BLAS substrate: naive (LAPACK-reference
+//!   stand-in), blocked (OpenBLAS stand-in) and tuned kernels for all three
+//!   BLAS levels, plus the step-wise DSCAL optimization ladder of the
+//!   paper's Fig. 7.
+//! - [`ft`] — the fault-tolerance engine: DMR wrappers for Level-1/2,
+//!   checksum-based online ABFT for Level-3, and the fault-injection
+//!   substrate used by the error-injection experiments (Figs. 10/11).
+//! - [`runtime`] — the PJRT runtime: loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them on
+//!   the CPU PJRT client. Python never runs on this path.
+//! - [`coordinator`] — typed BLAS requests, the router that dispatches to
+//!   native or PJRT backends under an FT policy, a batching threaded
+//!   server, metrics, and workload traces.
+//! - [`bench`] — the harness that regenerates every table and figure of
+//!   the paper's evaluation section.
+//! - [`apps`] — downstream consumers (blocked Cholesky) exercising the
+//!   public API end to end.
+
+pub mod apps;
+pub mod bench;
+pub mod blas;
+pub mod config;
+pub mod coordinator;
+pub mod ft;
+pub mod runtime;
+pub mod util;
+
+pub use config::Profile;
+pub use coordinator::request::{BlasRequest, BlasResponse};
+pub use ft::policy::FtPolicy;

@@ -1,0 +1,308 @@
+//! `ftblas` — CLI for the FT-BLAS reproduction.
+//!
+//! ```text
+//! ftblas artifacts                         list AOT artifacts
+//! ftblas verify [--profile P]              cross-check artifacts vs native
+//! ftblas run --routine R --n N [...]       execute one routine
+//! ftblas bench --exp ID [--quick]          regenerate a paper table/figure
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use ftblas::bench::{self, BenchCtx};
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::executor::PjrtExecutor;
+use ftblas::coordinator::pjrt_backend::PjrtBackend;
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
+use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::ft::injector::Fault;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::matrix::Matrix;
+use ftblas::util::rng::Rng;
+
+/// Minimal flag parser (clap is not vendored in this offline image).
+struct Args {
+    flags: HashMap<String, String>,
+    #[allow(dead_code)]
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "ftblas — FT-BLAS reproduction (Zhai et al., ICS '21)
+
+USAGE:
+  ftblas artifacts [--profile skylake_sim|cascade_sim]
+  ftblas verify    [--profile P] [--quick]
+  ftblas run --routine dgemm --n 256 [--backend tuned|naive|blocked|pjrt]
+             [--ft none|hybrid|abft-unfused] [--inject] [--profile P]
+  ftblas bench --exp table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
+             [--quick] [--profile P]
+  ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
+             ablation-threads|ablation-weighted)"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let profile = Profile::by_name(&args.get("profile", "skylake_sim"))
+        .ok_or_else(|| anyhow!("unknown profile"))?;
+
+    match cmd.as_str() {
+        "artifacts" => cmd_artifacts(&profile),
+        "verify" => cmd_verify(&profile, args.has("quick")),
+        "run" => cmd_run(&args, profile),
+        "bench" => {
+            let exp = args.get("exp", "all");
+            let mut ctx = BenchCtx::with_artifacts(profile, args.has("quick"));
+            bench::run(&exp, &mut ctx)
+        }
+        _ => usage(),
+    }
+}
+
+fn cmd_artifacts(profile: &Profile) -> Result<()> {
+    let dir = profile.artifact_path();
+    let manifest = ftblas::runtime::manifest::Manifest::load(&dir)?;
+    println!("profile: {} ({} artifacts)", manifest.profile,
+             manifest.specs.len());
+    for s in &manifest.specs {
+        println!("{:<32} {:<8} {:<10} in:{} out:{}", s.name, s.routine,
+                 s.variant, s.inputs.len(), s.outputs.len());
+    }
+    Ok(())
+}
+
+/// Cross-check every artifact family against the native oracle.
+fn cmd_verify(profile: &Profile, quick: bool) -> Result<()> {
+    let dir = profile.artifact_path();
+    let exec = PjrtExecutor::spawn(dir.clone())?;
+    let backend = PjrtBackend::new(exec.handle.clone(), &dir)?;
+    let router = Router::with_pjrt(profile.clone(), backend, Backend::Pjrt);
+    let mut rng = Rng::new(42);
+    let mut pass = 0;
+    let mut total = 0;
+
+    let n1 = 65536;
+    let n2 = 256;
+    let n3 = if quick { 128 } else { 256 };
+    let a2 = Matrix::random(n2, n2, &mut rng);
+    let l2 = Matrix::random_lower_triangular(n2, &mut rng);
+    let a3 = Matrix::random(n3, n3, &mut rng);
+    let b3 = Matrix::random(n3, n3, &mut rng);
+    let c3 = Matrix::random(n3, n3, &mut rng);
+    let l3 = Matrix::random_lower_triangular(n3, &mut rng);
+    let reqs = vec![
+        BlasRequest::Dscal { alpha: 1.5, x: rng.normal_vec(n1) },
+        BlasRequest::Daxpy { alpha: -0.5, x: rng.normal_vec(n1),
+                             y: rng.normal_vec(n1) },
+        BlasRequest::Ddot { x: rng.normal_vec(n1), y: rng.normal_vec(n1) },
+        BlasRequest::Dnrm2 { x: rng.normal_vec(n1) },
+        BlasRequest::Dasum { x: rng.normal_vec(n1) },
+        BlasRequest::Dgemv { alpha: 1.1, a: a2.clone(), x: rng.normal_vec(n2),
+                             beta: 0.4, y: rng.normal_vec(n2) },
+        BlasRequest::Dtrsv { a: l2.clone(), b: rng.normal_vec(n2) },
+        BlasRequest::Dgemm { alpha: 1.0, a: a3.clone(), b: b3.clone(),
+                             beta: 0.0, c: Matrix::zeros(n3, n3) },
+        BlasRequest::Dsymm { alpha: 1.0, a: a3.clone(), b: b3.clone(),
+                             beta: 0.0, c: c3.clone() },
+        BlasRequest::Dtrmm { alpha: 1.0, a: l3.clone(), b: b3.clone() },
+        BlasRequest::Dtrsm { a: l3.clone(), b: b3.clone() },
+        BlasRequest::Dsyrk { alpha: 1.0, a: a3.clone(), beta: 0.0,
+                             c: c3.clone() },
+    ];
+
+    for policy in [FtPolicy::None, FtPolicy::Hybrid] {
+        for req in &reqs {
+            let backend = router.resolve(req, policy);
+            if backend != Backend::Pjrt {
+                continue; // no artifact for this shape/policy
+            }
+            total += 1;
+            let want = execute_native(req, Impl::Naive, profile,
+                                      FtPolicy::None, None);
+            let fault = (policy.protects()
+                && !matches!(req, BlasRequest::Dasum { .. }
+                             | BlasRequest::Dsyrk { .. }))
+                .then_some(Fault { step: 1, i: 7, j: 11, delta: 1e4 });
+            let got = router.execute(req, policy, fault)?;
+            let injected = fault.is_some();
+            let ok = results_close(&got.result, &want.result, 1e-6)
+                && (!injected || got.ft.errors_detected >= 1);
+            println!("{:<8} policy={:<8} inject={:<5} detected={} ... {}",
+                     req.routine(), policy.name(), injected,
+                     got.ft.errors_detected, if ok { "OK" } else { "FAIL" });
+            if ok {
+                pass += 1;
+            }
+        }
+    }
+    println!("verify: {pass}/{total} checks passed");
+    if pass != total {
+        bail!("artifact verification failed");
+    }
+    Ok(())
+}
+
+fn results_close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
+    use ftblas::util::matrix::allclose;
+    match (a, b) {
+        (BlasResult::Scalar(x), BlasResult::Scalar(y)) => {
+            (x - y).abs() <= tol * (1.0 + y.abs())
+        }
+        (BlasResult::Vector(x), BlasResult::Vector(y)) => allclose(x, y, tol, tol),
+        (BlasResult::Matrix(x), BlasResult::Matrix(y)) => {
+            allclose(&x.data, &y.data, tol, tol)
+        }
+        _ => false,
+    }
+}
+
+fn cmd_run(args: &Args, profile: Profile) -> Result<()> {
+    let routine = args.get("routine", "dgemm");
+    let n = args.get_usize("n", 256)?;
+    let policy = FtPolicy::by_name(&args.get("ft", "none"))
+        .ok_or_else(|| anyhow!("bad --ft"))?;
+    let backend = Backend::by_name(&args.get("backend", "tuned"))
+        .ok_or_else(|| anyhow!("bad --backend"))?;
+    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+
+    let req = match routine.as_str() {
+        "dscal" => BlasRequest::Dscal { alpha: 1.5, x: rng.normal_vec(n) },
+        "daxpy" => BlasRequest::Daxpy { alpha: 0.5, x: rng.normal_vec(n),
+                                        y: rng.normal_vec(n) },
+        "ddot" => BlasRequest::Ddot { x: rng.normal_vec(n), y: rng.normal_vec(n) },
+        "dnrm2" => BlasRequest::Dnrm2 { x: rng.normal_vec(n) },
+        "dasum" => BlasRequest::Dasum { x: rng.normal_vec(n) },
+        "dgemv" => BlasRequest::Dgemv {
+            alpha: 1.0, a: Matrix::random(n, n, &mut rng),
+            x: rng.normal_vec(n), beta: 0.0, y: rng.normal_vec(n),
+        },
+        "dtrsv" => BlasRequest::Dtrsv {
+            a: Matrix::random_lower_triangular(n, &mut rng),
+            b: rng.normal_vec(n),
+        },
+        "dgemm" => BlasRequest::Dgemm {
+            alpha: 1.0, a: Matrix::random(n, n, &mut rng),
+            b: Matrix::random(n, n, &mut rng), beta: 0.0,
+            c: Matrix::zeros(n, n),
+        },
+        "dsymm" => BlasRequest::Dsymm {
+            alpha: 1.0, a: Matrix::random_symmetric(n, &mut rng),
+            b: Matrix::random(n, n, &mut rng), beta: 0.0,
+            c: Matrix::zeros(n, n),
+        },
+        "dtrmm" => BlasRequest::Dtrmm {
+            alpha: 1.0, a: Matrix::random_lower_triangular(n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+        },
+        "dtrsm" => BlasRequest::Dtrsm {
+            a: Matrix::random_lower_triangular(n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+        },
+        "dsyrk" => BlasRequest::Dsyrk {
+            alpha: 1.0, a: Matrix::random(n, n, &mut rng), beta: 0.0,
+            c: Matrix::zeros(n, n),
+        },
+        "drot" => BlasRequest::Drot {
+            x: rng.normal_vec(n), y: rng.normal_vec(n), c: 0.6, s: 0.8,
+        },
+        "drotm" => BlasRequest::Drotm {
+            x: rng.normal_vec(n), y: rng.normal_vec(n),
+            param: [-1.0, 0.9, -0.2, 0.3, 1.1],
+        },
+        "idamax" => BlasRequest::Idamax { x: rng.normal_vec(n) },
+        "dger" => BlasRequest::Dger {
+            alpha: 1.0, x: rng.normal_vec(n), y: rng.normal_vec(n),
+            a: Matrix::random(n, n, &mut rng),
+        },
+        "dsymv" => BlasRequest::Dsymv {
+            alpha: 1.0, a: Matrix::random_symmetric(n, &mut rng),
+            x: rng.normal_vec(n), beta: 0.0, y: rng.normal_vec(n),
+        },
+        "dtrmv" => BlasRequest::Dtrmv {
+            a: Matrix::random_lower_triangular(n, &mut rng),
+            x: rng.normal_vec(n),
+        },
+        other => bail!("unknown routine `{other}`"),
+    };
+
+    let fault = args.has("inject").then_some(Fault {
+        step: 1, i: 3.min(n - 1), j: 5 % n, delta: 1e4,
+    });
+
+    let router = if backend == Backend::Pjrt {
+        let dir = profile.artifact_path();
+        let exec = PjrtExecutor::spawn(dir.clone())?;
+        let pjrt = PjrtBackend::new(exec.handle.clone(), &dir)?;
+        // leak the executor so the router can use it for the process life
+        std::mem::forget(exec);
+        Router::with_pjrt(profile, pjrt, Backend::Pjrt)
+    } else {
+        Router::native_only(profile, backend)
+    };
+
+    let resp = router.execute(&req, policy, fault)?;
+    println!("routine={} n={n} backend={} policy={} took={:.3}ms",
+             routine, resp.backend.name(), policy.name(),
+             resp.exec_seconds * 1e3);
+    println!("ft: detected={} corrected={}", resp.ft.errors_detected,
+             resp.ft.errors_corrected);
+    match &resp.result {
+        BlasResult::Scalar(v) => println!("result: {v}"),
+        BlasResult::Vector(v) => {
+            println!("result[0..4]: {:?}", &v[..v.len().min(4)])
+        }
+        BlasResult::Matrix(m) => {
+            println!("result[0][0..4]: {:?}", &m.data[..m.cols.min(4)])
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! The PJRT execution engine: compile-on-first-use cache over the
+//! artifact manifest, with typed f64 helpers.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per artifact,
+//! cached for the life of the engine (the request path never recompiles).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// A borrowed argument for an artifact call. All artifacts are f64 and
+/// rank <= 2 (BLAS), which keeps this simple.
+#[derive(Clone, Copy, Debug)]
+pub enum ArgView<'a> {
+    Scalar(f64),
+    Vec1(&'a [f64]),
+    /// Row-major (rows, cols).
+    Mat(&'a [f64], usize, usize),
+}
+
+impl ArgView<'_> {
+    fn elements(&self) -> usize {
+        match self {
+            ArgView::Scalar(_) => 1,
+            ArgView::Vec1(d) => d.len(),
+            ArgView::Mat(d, _, _) => d.len(),
+        }
+    }
+}
+
+/// The engine. NOT `Send` (PjRtClient is Rc-backed): own it on one
+/// thread; the coordinator gives it a dedicated executor thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// compile + execute counters for metrics
+    pub compiles: u64,
+    pub executions: u64,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and connect the CPU PJRT client.
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            compiles: 0,
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let file = self.spec(name)?.file.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            file.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        self.compiles += 1;
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `args`; returns one Vec<f64> per
+    /// output (row-major), in manifest output order.
+    pub fn call(&mut self, name: &str, args: &[ArgView]) -> Result<Vec<Vec<f64>>> {
+        // validate against the manifest before touching PJRT
+        {
+            let spec = self.spec(name)?;
+            if spec.inputs.len() != args.len() {
+                return Err(anyhow!(
+                    "{name}: expected {} args, got {}",
+                    spec.inputs.len(),
+                    args.len()
+                ));
+            }
+            for (i, (shape, arg)) in spec.inputs.iter().zip(args).enumerate() {
+                if shape.elements() != arg.elements() {
+                    return Err(anyhow!(
+                        "{name} arg {i}: expected {} elements, got {}",
+                        shape.elements(),
+                        arg.elements()
+                    ));
+                }
+            }
+        }
+        self.ensure_compiled(name)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(to_literal).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        self.executions += 1;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        let spec = self.spec(name)?;
+        if outs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: manifest promises {} outputs, got {}",
+                spec.outputs.len(),
+                outs.len()
+            ));
+        }
+        outs.into_iter()
+            .map(|l| {
+                l.to_vec::<f64>()
+                    .map_err(|e| anyhow!("output of {name}: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+fn to_literal(arg: &ArgView) -> Result<xla::Literal> {
+    match arg {
+        ArgView::Scalar(v) => Ok(xla::Literal::scalar(*v)),
+        ArgView::Vec1(data) => Ok(xla::Literal::vec1(data)),
+        ArgView::Mat(data, r, c) => xla::Literal::vec1(data)
+            .reshape(&[*r as i64, *c as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}")),
+    }
+}

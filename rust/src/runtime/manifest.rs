@@ -1,0 +1,203 @@
+//! Manifest parser for `artifacts/<profile>/manifest.tsv`.
+//!
+//! serde is not vendored in this offline image (DESIGN.md §9), so the
+//! manifest is a line-oriented TSV with a tiny grammar:
+//!
+//! ```text
+//! # ftblas manifest v1 profile=skylake_sim
+//! name \t file \t routine \t variant \t inputs \t outputs \t meta
+//! ```
+//!
+//! where `inputs`/`outputs` are space-separated `f64:SHAPE` with SHAPE
+//! either `scalar` or `D1xD2x...`, and `meta` is space-separated `k=v`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A tensor shape in the manifest (f64 only; the paper is all double).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Shape {
+        Shape(vec![])
+    }
+
+    pub fn elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn parse(s: &str) -> Result<Shape> {
+        let body = s
+            .strip_prefix("f64:")
+            .with_context(|| format!("shape `{s}` missing f64: prefix"))?;
+        if body == "scalar" {
+            return Ok(Shape::scalar());
+        }
+        let dims = body
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("bad shape `{s}`"))?;
+        Ok(Shape(dims))
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub routine: String,
+    pub variant: String,
+    pub inputs: Vec<Shape>,
+    pub outputs: Vec<Shape>,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Numeric metadata accessor (`n`, `kc`, `panel`, ...).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// The parsed manifest: ordered specs + indices.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub profile: String,
+    pub specs: Vec<ArtifactSpec>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('#') {
+                if let Some(p) = line.split("profile=").nth(1) {
+                    m.profile = p.trim().to_string();
+                }
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 7 {
+                bail!("manifest line {}: expected 7 fields, got {}",
+                      lineno + 1, fields.len());
+            }
+            let inputs = fields[4]
+                .split(' ')
+                .filter(|s| !s.is_empty())
+                .map(Shape::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = fields[5]
+                .split(' ')
+                .filter(|s| !s.is_empty())
+                .map(Shape::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = fields[6]
+                .split(' ')
+                .filter(|s| !s.is_empty())
+                .filter_map(|kv| {
+                    kv.split_once('=')
+                        .map(|(k, v)| (k.to_string(), v.to_string()))
+                })
+                .collect();
+            let spec = ArtifactSpec {
+                name: fields[0].to_string(),
+                file: dir.join(fields[1]),
+                routine: fields[2].to_string(),
+                variant: fields[3].to_string(),
+                inputs,
+                outputs,
+                meta,
+            };
+            m.by_name.insert(spec.name.clone(), m.specs.len());
+            m.specs.push(spec);
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name).map(|&i| &self.specs[i])
+    }
+
+    /// All specs for a routine/variant pair.
+    pub fn find(&self, routine: &str, variant: &str) -> Vec<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.routine == routine && s.variant == variant)
+            .collect()
+    }
+
+    /// The spec for routine/variant whose `n` metadata matches.
+    pub fn find_n(&self, routine: &str, variant: &str, n: usize)
+                  -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| {
+            s.routine == routine && s.variant == variant
+                && s.meta_usize("n") == Some(n)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# ftblas manifest v1 profile=skylake_sim
+dscal_ori_n65536\tdscal_ori_n65536.hlo.txt\tdscal\tori\tf64:scalar f64:65536\tf64:65536\tblock=1024 n=65536
+dgemm_abft_n128\tdgemm_abft_n128.hlo.txt\tdgemm\tabft\tf64:128x128 f64:128x128 f64:4\tf64:128x128 f64:128 f64:128 f64:128 f64:128\tbk=64 bm=64 bn=64 n=128
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.profile, "skylake_sim");
+        assert_eq!(m.specs.len(), 2);
+        let s = m.get("dscal_ori_n65536").unwrap();
+        assert_eq!(s.routine, "dscal");
+        assert_eq!(s.inputs[0], Shape::scalar());
+        assert_eq!(s.inputs[1], Shape(vec![65536]));
+        assert_eq!(s.meta_usize("block"), Some(1024));
+        assert_eq!(s.file, Path::new("/tmp/a/dscal_ori_n65536.hlo.txt"));
+    }
+
+    #[test]
+    fn find_n_matches() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.find_n("dgemm", "abft", 128).is_some());
+        assert!(m.find_n("dgemm", "abft", 256).is_none());
+        assert!(m.find_n("dgemm", "ori", 128).is_none());
+        assert_eq!(m.find("dgemm", "abft").len(), 1);
+    }
+
+    #[test]
+    fn shape_parse_errors() {
+        assert!(Shape::parse("f32:4").is_err());
+        assert!(Shape::parse("f64:4xq").is_err());
+        assert_eq!(Shape::parse("f64:2x3").unwrap().elements(), 6);
+    }
+
+    #[test]
+    fn bad_line_rejected() {
+        assert!(Manifest::parse("a\tb\tc", Path::new(".")).is_err());
+    }
+}

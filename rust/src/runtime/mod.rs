@@ -1,0 +1,19 @@
+//! PJRT runtime (Layer 3's bridge to the AOT artifacts).
+//!
+//! `python/compile/aot.py` lowers every routine x variant x shape to HLO
+//! *text* plus a manifest; this module loads the manifest
+//! ([`manifest`]), compiles artifacts on the CPU PJRT client on first
+//! use, caches the executables, and provides typed f64 execute calls
+//! ([`engine`]). HLO text — not serialized protos — is the interchange
+//! format because xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit
+//! instruction ids; the text parser reassigns them.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so the
+//! engine is owned by a single thread; the coordinator gives it a
+//! dedicated executor thread and talks to it over channels.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{ArgView, Engine};
+pub use manifest::{Manifest, ArtifactSpec, Shape};

@@ -1,0 +1,101 @@
+//! Mini property-testing harness (quickcheck-lite).
+//!
+//! proptest is not vendored in this offline image (DESIGN.md §9), so the
+//! repository's property tests use this small, seeded harness: a property
+//! is a closure over a `Gen`; `check` runs it for `cases` seeds and
+//! reports the first failing seed so failures are reproducible with
+//! `check_seed`.
+
+use crate::util::rng::Rng;
+
+/// Generator handed to properties: a seeded RNG plus sizing helpers.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Matrix dimension that grows with the case index (small cases first,
+    /// like proptest's sizing).
+    pub fn dim(&mut self, lo: usize, hi: usize) -> usize {
+        let span = hi - lo + 1;
+        lo + self.rng.below(span)
+    }
+
+    /// A dimension rounded up to a multiple of `m`.
+    pub fn dim_multiple_of(&mut self, m: usize, lo: usize, hi: usize) -> usize {
+        let d = self.dim(lo, hi);
+        d.div_ceil(m) * m
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics with the failing seed on
+/// the first failure.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut prop: F,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed at case {case} (seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_seed<F: FnMut(&mut Gen) -> Result<(), String>>(
+    name: &str,
+    seed: u64,
+    mut prop: F,
+) {
+    let mut g = Gen { rng: Rng::new(seed), case: 0 };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property `{name}` failed (seed={seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond { Ok(()) } else { Err(msg.into()) }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + b.abs()) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |g| {
+            let a = g.rng.normal();
+            let b = g.rng.normal();
+            ensure(a + b == b + a, "not commutative")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn failing_property_reports() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn dims_in_range() {
+        check("dims", 100, |g| {
+            let d = g.dim(3, 9);
+            ensure((3..=9).contains(&d), format!("dim {d} out of range"))?;
+            let m = g.dim_multiple_of(4, 5, 20);
+            ensure(m % 4 == 0 && (5..=24).contains(&m), format!("bad multiple {m}"))
+        });
+    }
+}

@@ -1,0 +1,231 @@
+//! Dense row-major f64 matrix — the value type flowing through the
+//! coordinator, the native kernels, and the PJRT literal conversions.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f64 (the paper's D-precision).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    /// Random lower-triangular with a dominant diagonal (well conditioned
+    /// for the TRSV/TRSM benches, like the paper's test matrices).
+    pub fn random_lower_triangular(n: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                m.data[i * n + j] = rng.normal();
+            }
+            m.data[i * n + i] += 4.0;
+        }
+        m
+    }
+
+    /// Random symmetric (stored dense; routines read the lower triangle).
+    pub fn random_symmetric(n: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::random(n, n, rng);
+        for i in 0..n {
+            for j in 0..i {
+                m.data[j * n + i] = m.data[i * n + j];
+            }
+        }
+        m
+    }
+
+    /// Random symmetric positive definite: A = L L^T + n·I.
+    pub fn random_spd(n: usize, rng: &mut Rng) -> Self {
+        let l = Self::random_lower_triangular(n, rng);
+        let mut a = Self::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..=j.min(i) {
+                    s += l.data[i * n + k] * l.data[j * n + k];
+                }
+                a.data[i * n + j] = s;
+            }
+            a.data[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    /// Random strictly diagonally dominant matrix (always nonsingular and
+    /// well-conditioned — the natural LU test input).
+    pub fn random_diag_dominant(n: usize, rng: &mut Rng) -> Self {
+        let mut a = Self::random(n, n, rng);
+        for i in 0..n {
+            let rsum: f64 = a.data[i * n..(i + 1) * n]
+                .iter()
+                .map(|v| v.abs())
+                .sum();
+            a.data[i * n + i] = rsum + 1.0;
+        }
+        a
+    }
+
+    /// Swap two rows in place (the DSWAP of a pivoting factorization).
+    pub fn swap_rows(&mut self, r1: usize, r2: usize) {
+        if r1 == r2 {
+            return;
+        }
+        let c = self.cols;
+        let (lo, hi) = (r1.min(r2), r1.max(r2));
+        let (head, tail) = self.data.split_at_mut(hi * c);
+        head[lo * c..(lo + 1) * c].swap_with_slice(&mut tail[..c]);
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.data[i * self.cols..(i + 1) * self.cols].iter().sum())
+            .collect()
+    }
+
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, sj) in s.iter_mut().enumerate() {
+                *sj += self.data[i * self.cols + j];
+            }
+        }
+        s
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Relative Frobenius-norm difference, for residual checks.
+    pub fn rel_fro_diff(&self, other: &Matrix) -> f64 {
+        let num: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = other.data.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if den == 0.0 { num } else { num / den }
+    }
+}
+
+/// Max-abs difference between two vectors.
+pub fn vec_max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0.0, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// allclose with both relative and absolute tolerance (numpy semantics).
+pub fn allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_at() {
+        let m = Matrix::identity(4);
+        assert_eq!(m.at(2, 2), 1.0);
+        assert_eq!(m.at(2, 3), 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::random(7, 3, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row_sums(), vec![6., 15.]);
+        assert_eq!(m.col_sums(), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn lower_triangular_is_lower() {
+        let mut rng = Rng::new(6);
+        let m = Matrix::random_lower_triangular(16, &mut rng);
+        for i in 0..16 {
+            for j in (i + 1)..16 {
+                assert_eq!(m.at(i, j), 0.0);
+            }
+            assert!(m.at(i, i).abs() > 0.5);
+        }
+    }
+
+    #[test]
+    fn spd_is_symmetric() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::random_spd(12, &mut rng);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(allclose(&[1.0 + 1e-12], &[1.0], 1e-9, 0.0));
+        assert!(!allclose(&[1.1], &[1.0], 1e-9, 1e-9));
+    }
+}

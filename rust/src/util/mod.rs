@@ -1,0 +1,8 @@
+//! Shared utilities: matrices, deterministic RNG, stats, and the mini
+//! property-testing harness (proptest is not vendored in this offline
+//! image — see DESIGN.md §9).
+
+pub mod check;
+pub mod matrix;
+pub mod rng;
+pub mod stats;

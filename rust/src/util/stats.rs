@@ -1,0 +1,118 @@
+//! Timing statistics for the bench harness: the paper reports the average
+//! of 20 repeated measurements; we also keep percentiles for the serving
+//! metrics.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of measurements (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((n as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: pct(0.5),
+            p99: pct(0.99),
+        }
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` runs; returns per-rep
+/// seconds. The paper repeats each measurement 20 times and averages.
+pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// GFLOPS for an op count and a duration in seconds.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    if secs <= 0.0 { 0.0 } else { flops / secs / 1e9 }
+}
+
+/// Pretty duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::from_samples(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&xs);
+        assert!(s.p50 <= s.p99);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn gflops_sane() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(gflops(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let mut calls = 0;
+        let t = time_reps(2, 5, || calls += 1);
+        assert_eq!(t.len(), 5);
+        assert_eq!(calls, 7);
+    }
+}

@@ -1,0 +1,214 @@
+//! Integration tests over the native path: router x policy x backend
+//! matrix, FT invariants under randomized injection, and the Cholesky
+//! downstream consumer.
+
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::request::{BlasRequest, BlasResult};
+use ftblas::coordinator::router::execute_native;
+use ftblas::ft::injector::{Fault, Injector, InjectorConfig};
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::check::{check, ensure};
+use ftblas::util::matrix::{allclose, Matrix};
+use ftblas::util::rng::Rng;
+
+fn results_match(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
+    match (a, b) {
+        (BlasResult::Scalar(x), BlasResult::Scalar(y)) => {
+            (x - y).abs() <= tol * (1.0 + y.abs())
+        }
+        (BlasResult::Vector(x), BlasResult::Vector(y)) => allclose(x, y, tol, tol),
+        (BlasResult::Matrix(x), BlasResult::Matrix(y)) => {
+            allclose(&x.data, &y.data, tol, tol)
+        }
+        _ => false,
+    }
+}
+
+/// The paper's central FT claim, as a property over all protected
+/// routines: for ANY single fault (position x magnitude x step), the
+/// protected run detects it and returns the fault-free answer.
+#[test]
+fn any_single_fault_is_transparent() {
+    let profile = Profile::default();
+    check("e2e-single-fault", 25, |g| {
+        let n = 64 + 32 * g.rng.below(3);
+        let a = Matrix::random(n, n, &mut g.rng);
+        let b = Matrix::random(n, n, &mut g.rng);
+        let l = Matrix::random_lower_triangular(n, &mut g.rng);
+        let reqs = vec![
+            BlasRequest::Dscal { alpha: 1.5, x: g.rng.normal_vec(n * 8) },
+            BlasRequest::Ddot { x: g.rng.normal_vec(n * 8),
+                                y: g.rng.normal_vec(n * 8) },
+            BlasRequest::Dgemv { alpha: 1.0, a: a.clone(),
+                                 x: g.rng.normal_vec(n), beta: 0.5,
+                                 y: g.rng.normal_vec(n) },
+            BlasRequest::Dtrsv { a: l.clone(), b: g.rng.normal_vec(n) },
+            BlasRequest::Dgemm { alpha: 1.0, a: a.clone(), b: b.clone(),
+                                 beta: 0.0, c: Matrix::zeros(n, n) },
+            BlasRequest::Dtrsm { a: l.clone(), b: b.clone() },
+            BlasRequest::Dasum { x: g.rng.normal_vec(n * 8) },
+            BlasRequest::Drot { x: g.rng.normal_vec(n * 8),
+                                y: g.rng.normal_vec(n * 8), c: 0.6, s: 0.8 },
+            BlasRequest::Dger { alpha: 0.7, x: g.rng.normal_vec(n),
+                                y: g.rng.normal_vec(n), a: a.clone() },
+            BlasRequest::Dsymv { alpha: 1.0, a: a.clone(),
+                                 x: g.rng.normal_vec(n), beta: 0.2,
+                                 y: g.rng.normal_vec(n) },
+            BlasRequest::Dtrmv { a: l.clone(), x: g.rng.normal_vec(n) },
+            BlasRequest::Dsymm { alpha: 1.0, a: a.clone(), b: b.clone(),
+                                 beta: 0.3, c: Matrix::random(n, n, &mut g.rng) },
+            BlasRequest::Dtrmm { alpha: 0.9, a: l.clone(), b: b.clone() },
+        ];
+        let fault = Fault {
+            step: g.rng.below(8),
+            i: g.rng.below(n),
+            j: g.rng.below(n),
+            delta: g.rng.range(1.0, 1e8),
+        };
+        for req in reqs {
+            let want = execute_native(&req, Impl::Naive, &profile,
+                                      FtPolicy::None, None);
+            let got = execute_native(&req, Impl::Tuned, &profile,
+                                     FtPolicy::Hybrid, Some(fault));
+            ensure(got.ft.errors_detected >= 1,
+                   format!("{}: undetected fault {fault:?}", req.routine()))?;
+            ensure(results_match(&got.result, &want.result, 1e-6),
+                   format!("{}: wrong answer escaped under {fault:?}",
+                           req.routine()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Clean protected runs must be bit-identical across repeated executions
+/// (determinism of the FT machinery).
+#[test]
+fn protected_runs_are_deterministic() {
+    let profile = Profile::default();
+    let mut rng = Rng::new(0xD5);
+    let n = 96;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
+    };
+    let r1 = execute_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
+    let r2 = execute_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
+    assert_eq!(r1.result.as_matrix().unwrap().data,
+               r2.result.as_matrix().unwrap().data);
+}
+
+/// Injector plans drive a full 20-error experiment (the paper's setup):
+/// all 20 strikes across 20 runs are detected and corrected.
+#[test]
+fn twenty_errors_per_routine_all_corrected() {
+    let profile = Profile::default();
+    let mut rng = Rng::new(0x20);
+    let n = 128;
+    let l = Matrix::random_lower_triangular(n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let req = BlasRequest::Dtrsm { a: l, b };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+
+    let cfg = InjectorConfig { count: 20, ..Default::default() };
+    let mut inj = Injector::plan(&cfg, 20, 16, n);
+    let mut detected = 0;
+    for step in 0..20 {
+        let fault = inj.take(step);
+        assert!(fault.is_some(), "plan must strike every run");
+        let got = execute_native(&req, Impl::Tuned, &profile,
+                                 FtPolicy::Hybrid, fault);
+        detected += got.ft.errors_detected;
+        assert!(results_match(&got.result, &want.result, 1e-6),
+                "run {step}: wrong answer");
+    }
+    assert_eq!(detected, 20, "all 20 injected errors must be detected");
+}
+
+/// The three native variants agree on every routine (blocked and tuned
+/// vs the naive oracle) at a non-trivial size.
+#[test]
+fn variant_agreement_matrix() {
+    let profile = Profile::default();
+    let mut rng = Rng::new(0xA9);
+    let n = 160;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let c = Matrix::random(n, n, &mut rng);
+    let l = Matrix::random_lower_triangular(n, &mut rng);
+    let reqs = vec![
+        BlasRequest::Dscal { alpha: -2.5, x: rng.normal_vec(1000) },
+        BlasRequest::Daxpy { alpha: 0.3, x: rng.normal_vec(1000),
+                             y: rng.normal_vec(1000) },
+        BlasRequest::Ddot { x: rng.normal_vec(1000), y: rng.normal_vec(1000) },
+        BlasRequest::Dnrm2 { x: rng.normal_vec(1000) },
+        BlasRequest::Dasum { x: rng.normal_vec(1000) },
+        BlasRequest::Dgemv { alpha: 1.0, a: a.clone(), x: rng.normal_vec(n),
+                             beta: 0.1, y: rng.normal_vec(n) },
+        BlasRequest::Dtrsv { a: l.clone(), b: rng.normal_vec(n) },
+        BlasRequest::Dgemm { alpha: 0.8, a: a.clone(), b: b.clone(),
+                             beta: 0.2, c: c.clone() },
+        BlasRequest::Dsymm { alpha: 1.0, a: a.clone(), b: b.clone(),
+                             beta: 0.0, c: c.clone() },
+        BlasRequest::Dtrmm { alpha: 1.0, a: l.clone(), b: b.clone() },
+        BlasRequest::Dtrsm { a: l.clone(), b: b.clone() },
+        BlasRequest::Dsyrk { alpha: 1.0, a: a.clone(), beta: 0.4,
+                             c: c.clone() },
+        BlasRequest::Drot { x: rng.normal_vec(1000), y: rng.normal_vec(1000),
+                            c: 0.28, s: 0.96 },
+        BlasRequest::Drotm { x: rng.normal_vec(1000), y: rng.normal_vec(1000),
+                             param: [-1.0, 0.4, -0.3, 0.7, 1.1] },
+        BlasRequest::Idamax { x: rng.normal_vec(1000) },
+        BlasRequest::Dger { alpha: -0.6, x: rng.normal_vec(n),
+                            y: rng.normal_vec(n), a: a.clone() },
+        BlasRequest::Dsymv { alpha: 0.9, a: a.clone(), x: rng.normal_vec(n),
+                             beta: -0.2, y: rng.normal_vec(n) },
+        BlasRequest::Dtrmv { a: l.clone(), x: rng.normal_vec(n) },
+    ];
+    for req in reqs {
+        let want = execute_native(&req, Impl::Naive, &profile,
+                                  FtPolicy::None, None);
+        for v in [Impl::Blocked, Impl::Tuned] {
+            let got = execute_native(&req, v, &profile, FtPolicy::None, None);
+            assert!(results_match(&got.result, &want.result, 1e-7),
+                    "{} differs under {:?}", req.routine(), v);
+        }
+    }
+}
+
+/// Downstream consumer: Cholesky built on the library solves correctly.
+#[test]
+fn cholesky_downstream() {
+    let profile = Profile::default();
+    let mut rng = Rng::new(0xC4);
+    let n = 192;
+    let a = Matrix::random_spd(n, &mut rng);
+    let b = rng.normal_vec(n);
+    let x = ftblas::apps::cholesky::solve_spd(&a, &b, 48, &profile.gemm)
+        .expect("solvable");
+    let mut r = vec![0.0; n];
+    ftblas::blas::naive::dgemv(n, n, 1.0, &a.data, &x, 0.0, &mut r);
+    let num: f64 = r.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum();
+    let den: f64 = b.iter().map(|v| v * v).sum();
+    assert!((num / den).sqrt() < 1e-8);
+}
+
+/// The unfused-ABFT policy also yields correct, protected results.
+#[test]
+fn unfused_policy_corrects() {
+    let profile = Profile::default();
+    let mut rng = Rng::new(0xAB);
+    let n = 128;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
+    };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let fault = Fault { step: 0, i: 31, j: 77, delta: 4.2e5 };
+    let got = execute_native(&req, Impl::Tuned, &profile,
+                             FtPolicy::AbftUnfused, Some(fault));
+    assert!(got.ft.errors_detected >= 1);
+    assert!(results_match(&got.result, &want.result, 1e-6));
+}

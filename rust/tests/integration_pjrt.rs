@@ -1,0 +1,176 @@
+//! Integration tests over the PJRT artifact path: manifest loading,
+//! artifact execution vs the native oracle, fused-ABFT online correction,
+//! and the DMR kernels' error reporting.
+//!
+//! These tests require `make artifacts`; they skip (pass trivially) when
+//! the manifest is absent so `cargo test` works on a fresh checkout.
+
+use std::path::PathBuf;
+
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::executor::PjrtExecutor;
+use ftblas::coordinator::pjrt_backend::PjrtBackend;
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
+use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::ft::injector::Fault;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::matrix::{allclose, Matrix};
+use ftblas::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Profile::skylake_sim().artifact_path();
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+fn router() -> Option<Router> {
+    let dir = artifacts_dir()?;
+    let exec = PjrtExecutor::spawn(dir.clone()).ok()?;
+    let pjrt = PjrtBackend::new(exec.handle.clone(), &dir).ok()?;
+    std::mem::forget(exec); // keep the executor thread for the test binary
+    Some(Router::with_pjrt(Profile::skylake_sim(), pjrt, Backend::Pjrt))
+}
+
+fn results_match(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
+    match (a, b) {
+        (BlasResult::Scalar(x), BlasResult::Scalar(y)) => {
+            (x - y).abs() <= tol * (1.0 + y.abs())
+        }
+        (BlasResult::Vector(x), BlasResult::Vector(y)) => allclose(x, y, tol, tol),
+        (BlasResult::Matrix(x), BlasResult::Matrix(y)) => {
+            allclose(&x.data, &y.data, tol, tol)
+        }
+        _ => false,
+    }
+}
+
+#[test]
+fn manifest_covers_the_paper_routines() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let m = ftblas::runtime::manifest::Manifest::load(&dir).unwrap();
+    for routine in ["dscal", "dnrm2", "dgemv", "dtrsv", "dgemm", "dsymm",
+                    "dtrmm", "dtrsm"] {
+        assert!(m.specs.iter().any(|s| s.routine == routine),
+                "missing artifacts for {routine}");
+    }
+    // every FT variant carries an injection operand as its last input
+    for s in &m.specs {
+        if ["dmr", "abft", "abft_rankk", "ft"].contains(&s.variant.as_str()) {
+            let last = s.inputs.last().unwrap();
+            assert_eq!(last.rank(), 1, "{}", s.name);
+            assert!((3..=5).contains(&last.0[0]), "{}", s.name);
+        }
+    }
+}
+
+#[test]
+fn artifacts_match_native_oracle() {
+    let Some(router) = router() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let profile = Profile::skylake_sim();
+    let mut rng = Rng::new(0x77);
+    let n = 256;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let l = Matrix::random_lower_triangular(n, &mut rng);
+    let reqs = vec![
+        BlasRequest::Dscal { alpha: 2.25, x: rng.normal_vec(65536) },
+        BlasRequest::Ddot { x: rng.normal_vec(65536), y: rng.normal_vec(65536) },
+        BlasRequest::Dgemv { alpha: 1.5, a: a.clone(), x: rng.normal_vec(n),
+                             beta: -0.5, y: rng.normal_vec(n) },
+        BlasRequest::Dtrsv { a: l.clone(), b: rng.normal_vec(n) },
+        BlasRequest::Dgemm { alpha: 1.0, a: a.clone(), b: b.clone(),
+                             beta: 0.0, c: Matrix::zeros(n, n) },
+        BlasRequest::Dtrsm { a: l.clone(), b: b.clone() },
+    ];
+    for req in reqs {
+        assert_eq!(router.resolve(&req, FtPolicy::None), Backend::Pjrt,
+                   "{} should route to PJRT", req.routine());
+        let want = execute_native(&req, Impl::Naive, &profile,
+                                  FtPolicy::None, None);
+        let got = router.execute(&req, FtPolicy::None, None).unwrap();
+        assert!(results_match(&got.result, &want.result, 1e-6),
+                "{} artifact diverges from the oracle", req.routine());
+    }
+}
+
+#[test]
+fn fused_abft_corrects_online() {
+    let Some(router) = router() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let profile = Profile::skylake_sim();
+    let mut rng = Rng::new(0x78);
+    let n = 256; // has an abft_rankk artifact (kc=64): 4 online steps
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
+    };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    for step in 0..4 {
+        let fault = Fault { step, i: 11 + step, j: 200 - step, delta: 3e5 };
+        let got = router.execute(&req, FtPolicy::Hybrid, Some(fault)).unwrap();
+        assert_eq!(got.ft.errors_detected, 1, "step {step}");
+        assert_eq!(got.ft.errors_corrected, 1, "step {step}");
+        assert!(results_match(&got.result, &want.result, 1e-6),
+                "online correction failed at rank-k step {step}");
+    }
+}
+
+#[test]
+fn dmr_artifacts_report_and_correct() {
+    let Some(router) = router() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let profile = Profile::skylake_sim();
+    let mut rng = Rng::new(0x79);
+    let x = rng.normal_vec(65536);
+    let req = BlasRequest::Dscal { alpha: 3.5, x: x.clone() };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let fault = Fault { step: 0, i: 12345, j: 0, delta: 7e6 };
+    let got = router.execute(&req, FtPolicy::Hybrid, Some(fault)).unwrap();
+    assert_eq!(got.ft.errors_detected, 1);
+    assert!(results_match(&got.result, &want.result, 1e-9));
+}
+
+#[test]
+fn unfused_policy_on_pjrt() {
+    let Some(router) = router() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let profile = Profile::skylake_sim();
+    let mut rng = Rng::new(0x7A);
+    let n = 256;
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
+    };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let fault = Fault { step: 0, i: 100, j: 50, delta: 9e4 };
+    let got = router.execute(&req, FtPolicy::AbftUnfused, Some(fault)).unwrap();
+    assert_eq!(got.ft.errors_detected, 1);
+    assert!(results_match(&got.result, &want.result, 1e-6));
+}
+
+#[test]
+fn cascade_profile_artifacts() {
+    let dir = Profile::cascade_sim().artifact_path();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    }
+    let m = ftblas::runtime::manifest::Manifest::load(&dir).unwrap();
+    assert_eq!(m.profile, "cascade_sim");
+    assert!(m.find("dtrsv", "dmr").len() >= 1);
+    assert!(m.find("dgemm", "abft").len() >= 1);
+}

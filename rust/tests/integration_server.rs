@@ -1,0 +1,93 @@
+//! Integration tests over the threaded coordinator: concurrency,
+//! batching fairness, metrics accounting, and end-to-end injection
+//! through the server loop.
+
+use ftblas::config::Profile;
+use ftblas::coordinator::request::{Backend, BlasRequest};
+use ftblas::coordinator::router::Router;
+use ftblas::coordinator::server::Server;
+use ftblas::coordinator::trace::{self, TraceConfig};
+use ftblas::ft::injector::InjectorConfig;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::rng::Rng;
+
+fn native_server(policy: FtPolicy, workers: usize,
+                 inj: Option<InjectorConfig>, expected: usize) -> Server {
+    let router = Router::native_only(Profile::default(), Backend::NativeTuned);
+    Server::start(router, policy, workers, inj, expected)
+}
+
+#[test]
+fn high_concurrency_mixed_trace() {
+    let cfg = TraceConfig {
+        requests: 120,
+        vec_len: 4096,
+        mat_dim: 64,
+        ..Default::default()
+    };
+    let entries = trace::generate(&cfg);
+    let server = native_server(FtPolicy::None, 6, None, entries.len());
+    let handle = server.handle();
+    let rxs: Vec<_> = entries
+        .iter()
+        .map(|e| handle.submit(e.request.clone()))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 120);
+    assert_eq!(m.failed, 0);
+    // every routine in the mix got latency records
+    assert!(m.e2e_by_routine.len() >= 4);
+}
+
+#[test]
+fn metrics_account_for_every_injection() {
+    let cfg = InjectorConfig { count: 10, ..Default::default() };
+    let server = native_server(FtPolicy::Hybrid, 4, Some(cfg), 40);
+    let handle = server.handle();
+    let mut rng = Rng::new(3);
+    let rxs: Vec<_> = (0..40)
+        .map(|_| {
+            handle.submit(BlasRequest::Dscal {
+                alpha: 1.25,
+                x: rng.normal_vec(2048),
+            })
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 40);
+    assert_eq!(m.errors_injected, 10);
+    assert_eq!(m.errors_detected, 10);
+    assert_eq!(m.errors_corrected, 10);
+}
+
+#[test]
+fn call_is_synchronous_sugar() {
+    let server = native_server(FtPolicy::None, 2, None, 4);
+    let handle = server.handle();
+    let resp = handle
+        .call(BlasRequest::Ddot { x: vec![1.0, 2.0, 3.0, 4.0],
+                                  y: vec![1.0; 4] })
+        .unwrap();
+    assert_eq!(resp.result.as_scalar().unwrap(), 10.0);
+}
+
+#[test]
+fn unprotected_server_does_not_report_errors() {
+    let server = native_server(FtPolicy::None, 2, None, 8);
+    let handle = server.handle();
+    let mut rng = Rng::new(9);
+    for _ in 0..8 {
+        handle
+            .call(BlasRequest::Dnrm2 { x: rng.normal_vec(1024) })
+            .unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.errors_detected, 0);
+    assert_eq!(m.errors_injected, 0);
+}

@@ -1,0 +1,330 @@
+//! Property tests on the coordinator's invariants: batching (grouping,
+//! FIFO fairness, conservation), routing (fallback totality, policy
+//! monotonicity), request metadata consistency, server state under
+//! concurrent load, and injector plan accounting.
+//!
+//! Uses the repo's seeded check harness (`util::check`) — proptest is not
+//! vendored in this offline image; see DESIGN.md §9.
+
+use std::collections::HashMap;
+
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::batcher::Batcher;
+use ftblas::coordinator::request::{Backend, BlasRequest, Level};
+use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::coordinator::server::Server;
+use ftblas::ft::injector::{Injector, InjectorConfig};
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::check::{check, ensure};
+use ftblas::util::matrix::Matrix;
+use ftblas::util::rng::Rng;
+
+const ROUTINES: [&str; 5] = ["dscal", "ddot", "dgemv", "dgemm", "dtrsm"];
+
+/// Random (routine, shape) key stream for the batcher.
+fn rand_key(rng: &mut Rng) -> (&'static str, usize) {
+    let r = ROUTINES[rng.below(ROUTINES.len())];
+    let n = [64usize, 128, 256][rng.below(3)];
+    (r, n)
+}
+
+// ------------------------------------------------------------- batcher
+
+/// Conservation: every pushed item is drained exactly once, no dupes,
+/// no losses, regardless of the push pattern and max_batch.
+#[test]
+fn batcher_conserves_items() {
+    check("batcher-conservation", 50, |g| {
+        let n = g.dim(0, 200);
+        let max_batch = 1 + g.rng.below(16);
+        let mut b: Batcher<usize> = Batcher::new(max_batch);
+        for i in 0..n {
+            let key = rand_key(&mut g.rng);
+            b.push(key, i);
+        }
+        let mut seen = vec![false; n];
+        while !b.is_empty() {
+            let batch = b.next_batch();
+            ensure(!batch.is_empty(), "empty batch from non-empty queue")?;
+            ensure(batch.len() <= max_batch, "batch exceeds max_batch")?;
+            for p in &batch {
+                ensure(!seen[p.item], format!("item {} drained twice", p.item))?;
+                seen[p.item] = true;
+            }
+        }
+        ensure(seen.iter().all(|&s| s), "some item was lost")
+    });
+}
+
+/// Homogeneity: every batch holds exactly one (routine, shape) key.
+#[test]
+fn batcher_batches_are_homogeneous() {
+    check("batcher-homogeneous", 40, |g| {
+        let n = g.dim(1, 150);
+        let mut b: Batcher<usize> = Batcher::new(1 + g.rng.below(8));
+        for i in 0..n {
+            b.push(rand_key(&mut g.rng), i);
+        }
+        while !b.is_empty() {
+            let batch = b.next_batch();
+            let key = batch[0].key;
+            ensure(batch.iter().all(|p| p.key == key),
+                   "mixed keys in one batch")?;
+        }
+        Ok(())
+    });
+}
+
+/// Order: within a batch, seq numbers are strictly increasing (arrival
+/// order preserved), and the head of each successive batch is the oldest
+/// remaining request (FIFO fairness across groups).
+#[test]
+fn batcher_preserves_order() {
+    check("batcher-order", 40, |g| {
+        let n = g.dim(1, 150);
+        let mut b: Batcher<usize> = Batcher::new(1 + g.rng.below(8));
+        for i in 0..n {
+            b.push(rand_key(&mut g.rng), i);
+        }
+        let mut min_head_seq = 0u64;
+        while !b.is_empty() {
+            let batch = b.next_batch();
+            for w in batch.windows(2) {
+                ensure(w[0].seq < w[1].seq, "within-batch order broken")?;
+            }
+            // the head must be the oldest remaining request overall
+            ensure(batch[0].seq >= min_head_seq, "head went backwards")?;
+            min_head_seq = batch[0].seq + 1;
+            // every other remaining request with the same key and room in
+            // the batch must have been included up to max_batch
+            Ok::<(), String>(())?;
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- router
+
+/// Fallback totality: a router preferring PJRT with no backend resolves
+/// every request to the tuned native kernels — requests never fail for
+/// shape reasons.
+#[test]
+fn router_fallback_is_total() {
+    check("router-fallback", 20, |g| {
+        let n = 8 + 8 * g.rng.below(8);
+        let router = Router::native_only(Profile::default(), Backend::Pjrt);
+        let a = Matrix::random(n, n, &mut g.rng);
+        let reqs = [
+            BlasRequest::Dscal { alpha: 1.1, x: g.rng.normal_vec(n) },
+            BlasRequest::Idamax { x: g.rng.normal_vec(n) },
+            BlasRequest::Dgemm { alpha: 1.0, a: a.clone(), b: a.clone(),
+                                 beta: 0.0, c: Matrix::zeros(n, n) },
+        ];
+        for req in reqs {
+            for policy in [FtPolicy::None, FtPolicy::Hybrid] {
+                ensure(router.resolve(&req, policy) == Backend::NativeTuned,
+                       "pjrt-less router must fall back to tuned")?;
+                let resp = router.execute(&req, policy, None)
+                    .map_err(|e| e.to_string())?;
+                ensure(resp.backend == Backend::NativeTuned,
+                       "executed on unexpected backend")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Policy monotonicity: protection never changes the mathematical result
+/// beyond round-off — for any request and any variant, protected ==
+/// unprotected within tolerance, and clean runs never report errors.
+#[test]
+fn protection_is_transparent_when_clean() {
+    let profile = Profile::default();
+    check("policy-transparent", 15, |g| {
+        let n = 32 + 16 * g.rng.below(6);
+        let a = Matrix::random(n, n, &mut g.rng);
+        let l = Matrix::random_lower_triangular(n, &mut g.rng);
+        let reqs = [
+            BlasRequest::Daxpy { alpha: -0.7, x: g.rng.normal_vec(n * 4),
+                                 y: g.rng.normal_vec(n * 4) },
+            BlasRequest::Dsymv { alpha: 1.0, a: a.clone(),
+                                 x: g.rng.normal_vec(n), beta: 0.0,
+                                 y: vec![0.0; n] },
+            BlasRequest::Dtrmm { alpha: 1.0, a: l.clone(),
+                                 b: Matrix::random(n, n, &mut g.rng) },
+        ];
+        for req in reqs {
+            let plain = execute_native(&req, Impl::Tuned, &profile,
+                                       FtPolicy::None, None);
+            let prot = execute_native(&req, Impl::Tuned, &profile,
+                                      FtPolicy::Hybrid, None);
+            ensure(prot.ft.errors_detected == 0,
+                   format!("{}: false positive", req.routine()))?;
+            let close = match (&plain.result, &prot.result) {
+                (ftblas::coordinator::request::BlasResult::Vector(x),
+                 ftblas::coordinator::request::BlasResult::Vector(y)) => {
+                    ftblas::util::matrix::allclose(x, y, 1e-9, 1e-9)
+                }
+                (ftblas::coordinator::request::BlasResult::Matrix(x),
+                 ftblas::coordinator::request::BlasResult::Matrix(y)) => {
+                    ftblas::util::matrix::allclose(&x.data, &y.data, 1e-9, 1e-9)
+                }
+                _ => false,
+            };
+            ensure(close, format!("{}: protected diverged", req.routine()))?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------ request metadata
+
+/// flops() and dim() are consistent: positive for non-empty inputs,
+/// batch_key round-trips the routine name, level matches the routine
+/// family.
+#[test]
+fn request_metadata_consistent() {
+    check("request-metadata", 25, |g| {
+        let n = 4 + g.rng.below(60);
+        let a = Matrix::random(n, n, &mut g.rng);
+        let reqs = [
+            (BlasRequest::Dscal { alpha: 2.0, x: g.rng.normal_vec(n) },
+             Level::L1),
+            (BlasRequest::Drotm { x: g.rng.normal_vec(n),
+                                  y: g.rng.normal_vec(n),
+                                  param: [-1.0, 1.0, 0.0, 0.0, 1.0] },
+             Level::L1),
+            (BlasRequest::Dger { alpha: 1.0, x: g.rng.normal_vec(n),
+                                 y: g.rng.normal_vec(n), a: a.clone() },
+             Level::L2),
+            (BlasRequest::Dtrmv { a: a.clone(), x: g.rng.normal_vec(n) },
+             Level::L2),
+            (BlasRequest::Dsyrk { alpha: 1.0, a: a.clone(), beta: 0.0,
+                                  c: Matrix::zeros(n, n) },
+             Level::L3),
+        ];
+        for (req, lvl) in reqs {
+            ensure(req.level() == lvl,
+                   format!("{}: wrong level", req.routine()))?;
+            ensure(req.flops() > 0.0, "flops must be positive")?;
+            ensure(req.dim() == n, "dim mismatch")?;
+            ensure(req.batch_key() == (req.routine(), n), "batch key")?;
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- server
+
+/// Server state invariant: across a random concurrent workload, the
+/// metrics ledger balances — completed + failed == submitted, and with a
+/// clean (no-injection) run no errors are ever reported.
+#[test]
+fn server_ledger_balances() {
+    check("server-ledger", 5, |g| {
+        let n = 48;
+        let router = Router::native_only(Profile::default(),
+                                         Backend::NativeTuned);
+        let server = Server::start(router, FtPolicy::Hybrid,
+                                   2 + g.rng.below(3), None, 0);
+        let handle = server.handle();
+        let total = 20 + g.rng.below(30);
+        let mut rxs = Vec::new();
+        for _ in 0..total {
+            let req = match g.rng.below(3) {
+                0 => BlasRequest::Dscal { alpha: 1.5,
+                                          x: g.rng.normal_vec(256) },
+                1 => BlasRequest::Ddot { x: g.rng.normal_vec(256),
+                                         y: g.rng.normal_vec(256) },
+                _ => BlasRequest::Dgemv {
+                    alpha: 1.0,
+                    a: Matrix::random(n, n, &mut g.rng),
+                    x: g.rng.normal_vec(n),
+                    beta: 0.0,
+                    y: vec![0.0; n],
+                },
+            };
+            rxs.push(handle.submit(req));
+        }
+        for rx in rxs {
+            let resp = rx.recv().map_err(|e| e.to_string())?
+                .map_err(|e| e.to_string())?;
+            ensure(resp.ft.errors_detected == 0, "clean run flagged")?;
+        }
+        let snap = server.shutdown();
+        ensure(snap.completed + snap.failed == total as u64,
+               format!("ledger off: {} + {} != {}", snap.completed,
+                       snap.failed, total))?;
+        ensure(snap.errors_detected == 0 && snap.errors_corrected == 0,
+               "phantom errors in ledger")
+    });
+}
+
+// ------------------------------------------------------------ injector
+
+/// Plan accounting: an injector plan holds min(count, steps) strikes,
+/// each within its configured bounds, and `take` consumes each strike
+/// exactly once when the step stream is walked in order.
+#[test]
+fn injector_plan_accounting() {
+    check("injector-plan", 40, |g| {
+        let steps = 1 + g.rng.below(60);
+        let count = g.rng.below(40);
+        let m = 4 + g.rng.below(200);
+        let n = 4 + g.rng.below(200);
+        let cfg = InjectorConfig { count, seed: 7 + g.case as u64,
+                                   ..Default::default() };
+        let mut inj = Injector::plan(&cfg, steps, m, n);
+        ensure(inj.planned() == count.min(steps),
+               "plan must hold min(count, steps) strikes")?;
+        let mut taken = 0;
+        for step in 0..steps {
+            if let Some(f) = inj.take(step) {
+                ensure(f.step == step, "strike served at wrong step")?;
+                ensure(f.i < m && f.j < n, "position out of bounds")?;
+                let mag = f.delta.abs();
+                ensure((cfg.min_magnitude..=cfg.max_magnitude).contains(&mag),
+                       format!("delta {} out of range", f.delta))?;
+                taken += 1;
+            }
+        }
+        ensure(taken == inj.planned(),
+               format!("took {taken}, planned {}", inj.planned()))?;
+        ensure(inj.remaining() == 0, "strikes left after drain")
+    });
+}
+
+// ------------------------------------------------- per-key batch stats
+
+/// Driving the batcher with a realistic mixed workload: the number of
+/// batches per key is ceil(count_key / max_batch) when the key's requests
+/// arrive contiguously.
+#[test]
+fn batcher_contiguous_batch_count() {
+    check("batcher-count", 30, |g| {
+        let max_batch = 1 + g.rng.below(8);
+        let mut b: Batcher<u32> = Batcher::new(max_batch);
+        let mut counts: HashMap<(&'static str, usize), usize> = HashMap::new();
+        // contiguous runs per key
+        for _ in 0..g.dim(1, 6) {
+            let key = rand_key(&mut g.rng);
+            let k = 1 + g.rng.below(20);
+            for _ in 0..k {
+                b.push(key, 0);
+            }
+            *counts.entry(key).or_default() += k;
+        }
+        let mut batches: HashMap<(&'static str, usize), usize> = HashMap::new();
+        while !b.is_empty() {
+            let batch = b.next_batch();
+            *batches.entry(batch[0].key).or_default() += 1;
+        }
+        for (key, cnt) in counts {
+            let got = batches.get(&key).copied().unwrap_or(0);
+            ensure(got == cnt.div_ceil(max_batch),
+                   format!("{key:?}: {got} batches for {cnt} items"))?;
+        }
+        Ok(())
+    });
+}
