@@ -16,8 +16,10 @@ use anyhow::Result;
 
 use crate::bench::harness::{self, header, print_rows, BenchCtx, Row};
 use crate::blas::level3::{self, GemmParams};
-use crate::blas::parallel;
+use crate::coordinator::registry::{ExecCtx, KernelRegistry, Scheme};
+use crate::coordinator::request::BlasRequest;
 use crate::ft::abft_fused;
+use crate::ft::policy::FtPolicy;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -92,43 +94,46 @@ pub fn ablation_trsm_panel(ctx: &mut BenchCtx) -> Result<()> {
     Ok(())
 }
 
-/// A3: thread scaling of the row-band GEMM, plain vs fused-ABFT.
+/// A3: thread scaling of the registered threaded GEMM kernels, plain vs
+/// fused-ABFT — the kernel list comes from the registry.
 pub fn ablation_threads(ctx: &mut BenchCtx) -> Result<()> {
     header("Ablation A3", "parallel row-band GEMM scaling (plain vs FT)");
     let n = if ctx.quick { 256 } else { 512 };
     let mut rng = Rng::new(0xA3);
-    let a = Matrix::random(n, n, &mut rng);
-    let b = Matrix::random(n, n, &mut rng);
-    let params = ctx.profile.gemm;
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0,
+        a: Matrix::random(n, n, &mut rng),
+        b: Matrix::random(n, n, &mut rng),
+        beta: 0.0,
+        c: Matrix::zeros(n, n),
+    };
     let fl = 2.0 * (n * n * n) as f64;
 
     let mut rows = Vec::new();
-    for threads in [1usize, 2, 4] {
-        let s = ctx.time(|| {
-            let mut c = vec![0.0; n * n];
-            parallel::dgemm_mt(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c,
-                               &params, threads);
-            std::hint::black_box(&c);
-        });
-        rows.push(Row {
-            label: format!("dgemm_mt   t={threads}"),
-            gflops: stats::gflops(fl, s.mean),
-            seconds: s.mean,
-            note: String::new(),
-        });
-        let s = ctx.time(|| {
-            let mut c = vec![0.0; n * n];
-            std::hint::black_box(parallel::dgemm_abft_fused_mt(
-                n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c, &params,
-                threads, &[]));
-            std::hint::black_box(&c);
-        });
-        rows.push(Row {
-            label: format!("dgemm_ft_mt t={threads}"),
-            gflops: stats::gflops(fl, s.mean),
-            seconds: s.mean,
-            note: "band-local ABFT".into(),
-        });
+    for entry in KernelRegistry::global()
+        .for_routine("dgemm")
+        .into_iter()
+        .filter(|e| e.threaded)
+    {
+        for threads in [1usize, 2, 4] {
+            let ectx = ExecCtx {
+                req: &req,
+                profile: &ctx.profile,
+                policy: entry.policies[0],
+                faults: &[],
+                threads,
+            };
+            let s = ctx.time(|| {
+                std::hint::black_box((entry.execute)(&ectx));
+            });
+            rows.push(Row {
+                label: format!("{:<22} t={threads}", entry.name),
+                gflops: stats::gflops(fl, s.mean),
+                seconds: s.mean,
+                note: if threads == 1 { entry.summary.into() }
+                      else { String::new() },
+            });
+        }
     }
     print_rows(&rows);
     println!("(FT state is band-local: the FT/plain gap must stay flat \
@@ -137,34 +142,49 @@ pub fn ablation_threads(ctx: &mut BenchCtx) -> Result<()> {
 }
 
 /// A4: weighted (double) checksum vs row+column locate — overhead of the
-/// two single-error location schemes (paper §2.1 cites both).
+/// two single-error location schemes (paper §2.1 cites both), pulled
+/// from the registry by scheme tag.
 pub fn ablation_weighted(ctx: &mut BenchCtx) -> Result<()> {
     header("Ablation A4",
            "error location scheme: row+column vs weighted double checksum");
     let n = if ctx.quick { 256 } else { 384 };
     let mut rng = Rng::new(0xA4);
-    let a = Matrix::random(n, n, &mut rng);
-    let b = Matrix::random(n, n, &mut rng);
-    let params = ctx.profile.gemm;
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0,
+        a: Matrix::random(n, n, &mut rng),
+        b: Matrix::random(n, n, &mut rng),
+        beta: 0.0,
+        c: Matrix::zeros(n, n),
+    };
 
-    let mut c1 = vec![0.0; n * n];
-    let mut c2 = vec![0.0; n * n];
+    let reg = KernelRegistry::global();
+    let find_scheme = |s: Scheme| {
+        reg.for_routine("dgemm")
+            .into_iter()
+            .find(|e| !e.threaded && e.scheme == s)
+            .unwrap_or_else(|| panic!("no dgemm kernel with scheme {s:?}"))
+    };
+    let fused = find_scheme(Scheme::AbftFused);
+    let weighted = find_scheme(Scheme::AbftWeighted);
+    let fctx = ExecCtx {
+        req: &req, profile: &ctx.profile, policy: FtPolicy::Hybrid,
+        faults: &[], threads: 1,
+    };
+    let wctx = ExecCtx {
+        req: &req, profile: &ctx.profile, policy: FtPolicy::AbftWeighted,
+        faults: &[], threads: 1,
+    };
     let (rc, wt) = ctx.time_pair(
         || {
-            c1.fill(0.0);
-            std::hint::black_box(abft_fused::dgemm_abft_fused(
-                n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c1, &params, &[]));
+            std::hint::black_box((fused.execute)(&fctx));
         },
         || {
-            c2.fill(0.0);
-            std::hint::black_box(
-                crate::ft::abft_weighted::dgemm_abft_weighted(
-                    n, n, n, &a.data, &b.data, &mut c2, &params, &[]));
+            std::hint::black_box((weighted.execute)(&wctx));
         },
     );
     let table = vec![
-        ("row+column (fused §5.2)".to_string(), rc, rc, None),
-        ("weighted double checksum".to_string(), rc, wt, None),
+        (format!("{} (row+column §5.2)", fused.name), rc, rc, None),
+        (format!("{} (double checksum)", weighted.name), rc, wt, None),
     ];
     harness::print_overhead_table("scheme", &table);
     println!("(the weighted scheme locates the row from the two row-space \

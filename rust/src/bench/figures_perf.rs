@@ -1,10 +1,16 @@
 //! Performance figures without fault injection: Table 1, Figs. 5-7.
+//!
+//! Variant ladders (naive / blocked / tuned) are enumerated from the
+//! kernel registry — adding a variant to the registry adds its bench
+//! row; the figures keep no hand-maintained kernel lists.
 
 use anyhow::Result;
 use std::hint::black_box;
 
-use crate::bench::harness::{self, header, print_rows, row, BenchCtx, Row};
-use crate::blas::{blocked, level1, level2, level3, naive, stepwise};
+use crate::bench::harness::{
+    self, header, print_rows, registry_variant_rows, row, BenchCtx, Row,
+};
+use crate::blas::{level2, stepwise};
 use crate::coordinator::request::BlasRequest;
 use crate::ft::policy::FtPolicy;
 use crate::util::matrix::Matrix;
@@ -44,88 +50,51 @@ pub fn table1(_ctx: &mut BenchCtx) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 5: selected Level-1/2 routines vs the baselines.
+/// Fig. 5: selected Level-1/2 routines vs the baselines, one registry
+/// ladder per routine.
 pub fn fig5(ctx: &mut BenchCtx) -> Result<()> {
     header("Fig 5", "Level-1/2 BLAS: FT-BLAS Ori vs naive/blocked/XLA");
     let mut rng = Rng::new(55);
     let n1 = l1_n(ctx);
 
     // ---- DSCAL
-    let x0 = rng.normal_vec(n1);
-    let mut rows: Vec<Row> = Vec::new();
-    let mut x = x0.clone();
-    rows.push(row(ctx, "dscal/naive(LAPACK-sim)", n1 as f64, "", || {
-        naive::dscal(black_box(1.0000001), &mut x);
-    }));
-    let mut x = x0.clone();
-    rows.push(row(ctx, "dscal/blocked(OpenBLAS-sim, no prefetch)", n1 as f64,
-                  "", || {
-        blocked::dscal(black_box(1.0000001), &mut x);
-    }));
-    let mut x = x0.clone();
-    rows.push(row(ctx, "dscal/tuned(FT-BLAS Ori)", n1 as f64, "+prefetch", || {
-        level1::dscal(black_box(1.0000001), &mut x);
-    }));
+    let req = BlasRequest::Dscal { alpha: 1.0000001, x: rng.normal_vec(n1) };
+    let rows = registry_variant_rows(ctx, &req, n1 as f64);
     print_rows(&rows);
     harness::expect(rows[2].gflops >= rows[1].gflops * 0.97,
                     "paper: tuned DSCAL >= blocked (+3.85%)")?;
 
     // ---- DNRM2
-    let x = rng.normal_vec(n1);
-    let mut rows = Vec::new();
-    rows.push(row(ctx, "dnrm2/naive", 2.0 * n1 as f64, "scaled loop", || {
-        black_box(naive::dnrm2(black_box(&x)));
-    }));
-    rows.push(row(ctx, "dnrm2/blocked(SSE2-sim)", 2.0 * n1 as f64, "2 lanes", || {
-        black_box(blocked::dnrm2(black_box(&x)));
-    }));
-    rows.push(row(ctx, "dnrm2/tuned(AVX512-sim)", 2.0 * n1 as f64, "8 lanes", || {
-        black_box(level1::dnrm2(black_box(&x)));
-    }));
+    let req = BlasRequest::Dnrm2 { x: rng.normal_vec(n1) };
+    let rows = registry_variant_rows(ctx, &req, 2.0 * n1 as f64);
     print_rows(&rows);
     harness::expect(rows[2].gflops > rows[1].gflops,
                     "paper: AVX-512 DNRM2 beats SSE2 (+17.89%)")?;
 
     // ---- DGEMV
     let n2 = l2_n(ctx);
-    let a = Matrix::random(n2, n2, &mut rng);
-    let xv = rng.normal_vec(n2);
-    let y0 = rng.normal_vec(n2);
-    let fl = 2.0 * (n2 * n2) as f64;
-    let mut rows = Vec::new();
-    let mut y = y0.clone();
-    rows.push(row(ctx, "dgemv/naive", fl, "", || {
-        naive::dgemv(n2, n2, 1.0, &a.data, &xv, 0.0, &mut y);
-    }));
-    let mut y = y0.clone();
-    rows.push(row(ctx, "dgemv/blocked(cache-blocked A)", fl, "", || {
-        blocked::dgemv(n2, n2, 1.0, &a.data, &xv, 0.0, &mut y);
-    }));
-    let mut y = y0.clone();
-    rows.push(row(ctx, "dgemv/tuned(Ri=4 reuse, streaming A)", fl, "", || {
-        level2::dgemv(n2, n2, 1.0, &a.data, &xv, 0.0, &mut y);
-    }));
+    let req = BlasRequest::Dgemv {
+        alpha: 1.0,
+        a: Matrix::random(n2, n2, &mut rng),
+        x: rng.normal_vec(n2),
+        beta: 0.0,
+        y: rng.normal_vec(n2),
+    };
+    let rows = registry_variant_rows(ctx, &req, 2.0 * (n2 * n2) as f64);
     print_rows(&rows);
 
-    // ---- DTRSV (panel ablation: the paper's B=4 vs OpenBLAS B=64)
+    // ---- DTRSV: the registry ladder (blocked = B=64 OpenBLAS default,
+    // tuned = the paper's B=4) plus the explicit panel ablation row
     let l = Matrix::random_lower_triangular(n2, &mut rng);
     let b = rng.normal_vec(n2);
+    let req = BlasRequest::Dtrsv { a: l.clone(), b: b.clone() };
     let fl = (n2 * n2) as f64;
-    let mut rows = Vec::new();
+    let mut rows = registry_variant_rows(ctx, &req, fl);
     let mut xs = b.clone();
-    rows.push(row(ctx, "dtrsv/naive", fl, "", || {
-        xs.copy_from_slice(&b);
-        naive::dtrsv_lower(n2, &l.data, &mut xs);
-    }));
-    let mut xs = b.clone();
-    rows.push(row(ctx, "dtrsv/blocked(B=64, OpenBLAS default)", fl, "", || {
+    rows.push(row(ctx, "dtrsv/tuned(B=64 ablation)", fl,
+                  "tuned kernel forced to the OpenBLAS panel", || {
         xs.copy_from_slice(&b);
         level2::dtrsv_lower(n2, &l.data, &mut xs, 64);
-    }));
-    let mut xs = b.clone();
-    rows.push(row(ctx, "dtrsv/tuned(B=4, paper's choice)", fl, "", || {
-        xs.copy_from_slice(&b);
-        level2::dtrsv_lower(n2, &l.data, &mut xs, 4);
     }));
     print_rows(&rows);
 
@@ -183,53 +152,25 @@ fn pjrt_l12_rows(ctx: &mut BenchCtx) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 6: Level-3 routines vs baselines.
+/// Fig. 6: Level-3 routines vs baselines, enumerated from the registry.
 pub fn fig6(ctx: &mut BenchCtx) -> Result<()> {
     header("Fig 6", "Level-3 BLAS: DGEMM / DTRSM vs baselines");
     let mut rng = Rng::new(66);
     let n = l3_n(ctx);
-    let params = ctx.profile.gemm;
     let a = Matrix::random(n, n, &mut rng);
     let b = Matrix::random(n, n, &mut rng);
     let c0 = Matrix::random(n, n, &mut rng);
-    let fl = 2.0 * (n * n * n) as f64;
 
-    let mut rows = Vec::new();
-    if n <= 512 || !ctx.quick {
-        let mut c = c0.data.clone();
-        rows.push(row(ctx, &format!("dgemm/naive n={n}"), fl, "", || {
-            naive::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c);
-        }));
-    }
-    let mut c = c0.data.clone();
-    rows.push(row(ctx, &format!("dgemm/tuned packed+blocked n={n}"), fl,
-                  "mc/nc/kc blocking", || {
-        level3::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut c, &params);
-    }));
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0, a: a.clone(), b: b.clone(), beta: 0.0, c: c0.clone(),
+    };
+    let rows = registry_variant_rows(ctx, &req, 2.0 * (n * n * n) as f64);
     print_rows(&rows);
 
     // ---- DTRSM: scalar diagonal (blocked) vs tuned diagonal kernel
     let l = Matrix::random_lower_triangular(n, &mut rng);
-    let fl = (n * n * n) as f64;
-    let mut rows = Vec::new();
-    let mut x = b.data.clone();
-    rows.push(row(ctx, &format!("dtrsm/naive n={n}"), fl, "", || {
-        x.copy_from_slice(&b.data);
-        naive::dtrsm_llnn(n, n, &l.data, &mut x);
-    }));
-    let mut x = b.data.clone();
-    rows.push(row(ctx, &format!("dtrsm/blocked(scalar diag) n={n}"), fl,
-                  "the 'unoptimized prototype'", || {
-        x.copy_from_slice(&b.data);
-        blocked::dtrsm_llnn(n, n, &l.data, &mut x);
-    }));
-    let mut x = b.data.clone();
-    rows.push(row(ctx, &format!("dtrsm/tuned(reciprocal diag) n={n}"), fl,
-                  "paper's macro_kernel_trsm", || {
-        x.copy_from_slice(&b.data);
-        level3::dtrsm_llnn(n, n, &l.data, &mut x, ctx.profile.trsm_panel,
-                           &params);
-    }));
+    let req = BlasRequest::Dtrsm { a: l, b: b.clone() };
+    let rows = registry_variant_rows(ctx, &req, (n * n * n) as f64);
     print_rows(&rows);
     harness::expect(
         rows[2].gflops >= rows[1].gflops,

@@ -5,6 +5,9 @@ use anyhow::Result;
 use crate::config::Profile;
 use crate::coordinator::executor::PjrtExecutor;
 use crate::coordinator::pjrt_backend::PjrtBackend;
+use crate::coordinator::registry::{ExecCtx, KernelRegistry};
+use crate::coordinator::request::BlasRequest;
+use crate::ft::policy::FtPolicy;
 use crate::util::stats::{self, Summary};
 
 /// Context for a bench run.
@@ -129,6 +132,45 @@ pub fn row<F: FnMut()>(ctx: &BenchCtx, label: &str, flops: f64, note: &str,
         seconds: s.mean,
         note: note.to_string(),
     }
+}
+
+/// Time the serial unprotected variant ladder of one routine straight
+/// off the kernel registry (naive → blocked → tuned, in registration
+/// order) — the figure drivers enumerate descriptors instead of
+/// hand-maintaining variant lists.
+///
+/// The uniform `execute` entry clones the request's output buffer, so
+/// every row carries the same clone cost and the `vs[0]` column (the
+/// within-routine ratio) is the meaningful figure. For Level-1 routines
+/// — where one O(n) clone is commensurate with the O(n) kernel — an
+/// extra `(request-clone floor)` row makes that shared cost visible.
+pub fn registry_variant_rows(ctx: &BenchCtx, req: &BlasRequest, flops: f64)
+                             -> Vec<Row> {
+    let mut rows = Vec::new();
+    for entry in KernelRegistry::global().serial_variants(req.routine()) {
+        let ectx = ExecCtx {
+            req,
+            profile: &ctx.profile,
+            policy: FtPolicy::None,
+            faults: &[],
+            threads: 1,
+        };
+        rows.push(row(ctx, entry.name, flops, entry.summary, || {
+            std::hint::black_box((entry.execute)(&ectx));
+        }));
+    }
+    if req.level() == crate::coordinator::request::Level::L1 {
+        let s = ctx.time(|| {
+            std::hint::black_box(req.clone());
+        });
+        rows.push(Row {
+            label: format!("({}: request-clone floor)", req.routine()),
+            gflops: 0.0,
+            seconds: s.mean,
+            note: "shared by every row above".into(),
+        });
+    }
+    rows
 }
 
 /// Percent overhead of the FT run relative to the baseline, in the

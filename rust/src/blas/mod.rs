@@ -47,4 +47,29 @@ impl Impl {
             Impl::Tuned => "tuned",
         }
     }
+
+    /// Parse a variant name — the symmetric counterpart of
+    /// `Backend::by_name` and `FtPolicy::by_name`, used by the CLI and
+    /// bench harness argument paths.
+    pub fn by_name(s: &str) -> Option<Impl> {
+        match s {
+            "naive" => Some(Impl::Naive),
+            "blocked" => Some(Impl::Blocked),
+            "tuned" => Some(Impl::Tuned),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn impl_names_roundtrip() {
+        for v in Impl::ALL {
+            assert_eq!(Impl::by_name(v.name()), Some(v));
+        }
+        assert!(Impl::by_name("pjrt").is_none());
+    }
 }

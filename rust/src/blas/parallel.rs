@@ -251,6 +251,34 @@ mod tests {
         assert!(allclose(&c, &want, 1e-8, 1e-8));
     }
 
+    /// Requests too small for banding (m < 2·MR) fall through to the
+    /// serial fused-ABFT kernel — and MUST surface that kernel's
+    /// FtReport, not a default, or error counters would silently drop
+    /// on small requests routed through the MT entry.
+    #[test]
+    fn serial_fallthrough_preserves_ft_report() {
+        let mut rng = crate::util::rng::Rng::new(0x5F);
+        let params = GemmParams { kc: 16, ..Default::default() };
+        let (m, n, k) = (params.mr * 2 - 1, 24, 32); // below the band floor
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let mut want = vec![0.0; m * n];
+        naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+        for threads in [1usize, 4] {
+            let strikes: Vec<Strike> = vec![(0, m / 2, n / 3, 9e4)];
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused_mt(m, n, k, 1.0, &a.data, &b.data,
+                                          0.0, &mut c, &params, threads,
+                                          &strikes);
+            assert_eq!(rep.errors_detected, 1,
+                       "t={threads}: serial fall-through dropped detection");
+            assert_eq!(rep.errors_corrected, 1,
+                       "t={threads}: serial fall-through dropped correction");
+            assert!(allclose(&c, &want, 1e-8, 1e-8),
+                    "t={threads}: fall-through result wrong");
+        }
+    }
+
     #[test]
     fn dtrsm_mt_matches_serial() {
         check("mt-trsm", 10, |g| {

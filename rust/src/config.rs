@@ -16,6 +16,10 @@ pub struct Profile {
     pub trsm_panel: usize,
     /// Coordinator worker threads.
     pub workers: usize,
+    /// Kernel-level threads for the parallel Level-3 kernels
+    /// (`blas::parallel`). 1 = serial; above 1 the planner selects the
+    /// MT kernels for requests clearing the MR-aligned size threshold.
+    pub threads: usize,
     /// Artifact directory relative to the repo root.
     pub artifact_dir: &'static str,
 }
@@ -31,6 +35,7 @@ impl Profile {
             // diagonal solve against per-panel GEMM packing overhead
             trsm_panel: 64,
             workers: 4,
+            threads: 1,
             artifact_dir: "artifacts",
         }
     }
@@ -44,8 +49,15 @@ impl Profile {
             trsv_panel: 4,
             trsm_panel: 64,
             workers: 8,
+            threads: 4,
             artifact_dir: "artifacts/cascade_sim",
         }
+    }
+
+    /// Same profile with a different kernel-level thread count.
+    pub fn with_threads(mut self, threads: usize) -> Profile {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Resolve the artifact directory: the working directory first, then

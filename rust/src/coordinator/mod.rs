@@ -3,13 +3,24 @@
 //! metrics, and workload traces.
 //!
 //! Topology (the paper's contribution is the kernels; the coordinator is
-//! the serving shell around them — DESIGN.md §3):
+//! the serving shell around them — DESIGN.md §3). Dispatch is data, not
+//! control flow: every native kernel registers a descriptor in the
+//! [`registry`] and the [`plan::Planner`] resolves each request into an
+//! execution plan (kernel, thread grant, protection scheme) that the
+//! router, batcher, and server all consume:
 //!
 //! ```text
-//!   clients ──> server queue ──> batcher ──> router
-//!                                   │            ├─> native worker pool
-//!                                   │            └─> PJRT executor thread
-//!                                   └─< responses (+ FtReport, metrics)
+//!   clients ──> server queue ──> batcher ──> router ──┬─> PJRT executor thread
+//!                   │      (groups by routine×shape)  │
+//!                   │                                 └─> planner ──> kernel registry
+//!                   │                                        │    (descriptor table:
+//!                   │                                        │     serial / MT / DMR /
+//!                   │                                        │     ABFT kernels per
+//!                   │                                        │     routine × policy)
+//!                   │                                        └─> ExecutionPlan
+//!                   │                                            (kernel, threads,
+//!                   │                                             protection scheme)
+//!                   └─< responses (+ FtReport, executed-kernel name, metrics)
 //! ```
 //!
 //! The PJRT engine is not `Send`, so exactly one executor thread owns it
@@ -19,9 +30,13 @@ pub mod batcher;
 pub mod executor;
 pub mod metrics;
 pub mod pjrt_backend;
+pub mod plan;
+pub mod registry;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod trace;
 
+pub use plan::{ExecutionPlan, Planner};
+pub use registry::{KernelDescriptor, KernelRegistry};
 pub use request::{BlasRequest, BlasResponse, Backend};

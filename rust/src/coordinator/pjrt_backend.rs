@@ -68,6 +68,11 @@ impl PjrtBackend {
 
     /// Can this request be served by an artifact (shape-specialized)?
     pub fn supports(&self, req: &BlasRequest, policy: FtPolicy) -> bool {
+        // no artifact implements the weighted-checksum encoding; the
+        // router falls back to the native registry kernel for it
+        if policy == FtPolicy::AbftWeighted && req.level() == Level::L3 {
+            return false;
+        }
         let variant = self.variant_for(req, policy);
         self.manifest.find_n(req.routine(), variant, req.dim()).is_some()
     }
@@ -89,6 +94,7 @@ impl PjrtBackend {
             result,
             ft,
             backend: Backend::Pjrt,
+            kernel: "pjrt",
             exec_seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -273,7 +279,10 @@ impl PjrtBackend {
             BlasRequest::Dgemm { alpha, a, b, beta, c } => {
                 match policy {
                     FtPolicy::None => self.dgemm_ori(*alpha, a, b, *beta, c),
-                    FtPolicy::Hybrid => {
+                    // weighted requests are rejected by supports(); if one
+                    // arrives anyway, the fused-ABFT artifact still
+                    // protects it
+                    FtPolicy::Hybrid | FtPolicy::AbftWeighted => {
                         self.dgemm_abft(*alpha, a, b, *beta, c, fault)
                     }
                     FtPolicy::AbftUnfused => {

@@ -1,0 +1,175 @@
+//! Execution planning: resolve a request + policy + profile into the
+//! registered kernel that should run it.
+//!
+//! The [`Planner`] is the single place routing decisions live. Given a
+//! [`BlasRequest`], a preferred [`Impl`] variant, and an [`FtPolicy`],
+//! it filters the [`KernelRegistry`] by capability and size, decides the
+//! thread grant, and returns an [`ExecutionPlan`] that the router (and
+//! through it the server's worker pool and the bench harnesses) execute
+//! uniformly.
+
+use crate::blas::Impl;
+use crate::config::Profile;
+use crate::coordinator::registry::{KernelDescriptor, KernelRegistry};
+use crate::coordinator::request::BlasRequest;
+use crate::ft::policy::FtPolicy;
+
+/// A resolved execution: which kernel, how many threads, which policy.
+#[derive(Clone, Copy)]
+pub struct ExecutionPlan {
+    pub kernel: &'static KernelDescriptor,
+    /// Threads granted to the kernel (1 for serial kernels).
+    pub threads: usize,
+    pub policy: FtPolicy,
+}
+
+impl ExecutionPlan {
+    pub fn describe(&self) -> String {
+        format!("{} (threads={}, policy={})", self.kernel.name, self.threads,
+                self.policy.name())
+    }
+}
+
+/// Resolves requests against the kernel registry for one profile.
+pub struct Planner<'p> {
+    profile: &'p Profile,
+    registry: &'static KernelRegistry,
+}
+
+impl<'p> Planner<'p> {
+    pub fn new(profile: &'p Profile) -> Planner<'p> {
+        Planner { profile, registry: KernelRegistry::global() }
+    }
+
+    /// Plan a request. Selection order:
+    ///
+    /// 1. a threaded kernel of the requested variant, when the profile
+    ///    grants more than one thread and the request clears the
+    ///    kernel's MR-aligned size floor;
+    /// 2. a serial kernel of the requested variant;
+    /// 3. any serial kernel serving the policy — protected kernels
+    ///    register under the tuned variant, so a protected request
+    ///    carrying a naive/blocked variant preference still gets
+    ///    protection (the pre-registry router behaved the same way).
+    ///
+    /// Returns `None` only if no registered kernel serves the routine
+    /// under the policy; the registry's totality test guarantees this
+    /// cannot happen for shipped routines.
+    pub fn plan(&self, req: &BlasRequest, variant: Impl, policy: FtPolicy)
+                -> Option<ExecutionPlan> {
+        self.plan_dims(req.routine(), req.dim(), variant, policy)
+    }
+
+    /// Shape-only planning (the batcher groups by `(routine, dim)`, so
+    /// a whole batch shares one plan).
+    pub fn plan_dims(&self, routine: &str, dim: usize, variant: Impl,
+                     policy: FtPolicy) -> Option<ExecutionPlan> {
+        let mr = self.profile.gemm.mr;
+        let threads = self.profile.threads.max(1);
+        let supported: Vec<&'static KernelDescriptor> = self
+            .registry
+            .for_routine(routine)
+            .into_iter()
+            .filter(|k| k.supports(policy))
+            .collect();
+        if threads > 1 {
+            if let Some(k) = supported.iter().copied().find(|k| {
+                k.threaded && k.variant == variant && k.admits_dim(dim, mr)
+            }) {
+                return Some(ExecutionPlan { kernel: k, threads, policy });
+            }
+        }
+        if let Some(k) = supported
+            .iter()
+            .copied()
+            .find(|k| !k.threaded && k.variant == variant)
+        {
+            return Some(ExecutionPlan { kernel: k, threads: 1, policy });
+        }
+        supported
+            .iter()
+            .copied()
+            .find(|k| !k.threaded)
+            .map(|k| ExecutionPlan { kernel: k, threads: 1, policy })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::Scheme;
+    use crate::util::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn dgemm_req(n: usize) -> BlasRequest {
+        let mut rng = Rng::new(0x91A);
+        BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::random(n, n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        }
+    }
+
+    #[test]
+    fn serial_profile_plans_serial_kernels() {
+        let profile = Profile::skylake_sim();
+        assert_eq!(profile.threads, 1);
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(64);
+        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/tuned");
+        assert_eq!(plan.threads, 1);
+        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/abft-fused");
+    }
+
+    #[test]
+    fn threaded_profile_selects_mt_kernels_above_floor() {
+        let profile = Profile::skylake_sim().with_threads(4);
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(64);
+        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/tuned-mt");
+        assert_eq!(plan.threads, 4);
+        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/abft-fused-mt");
+        assert!(plan.kernel.threaded);
+        // below the MR-aligned floor the serial kernels stay in charge
+        let small = dgemm_req(profile.gemm.mr);
+        let plan = planner.plan(&small, Impl::Tuned, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/abft-fused");
+        assert_eq!(plan.threads, 1);
+    }
+
+    #[test]
+    fn naive_variant_never_rides_the_thread_pool() {
+        let profile = Profile::skylake_sim().with_threads(4);
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(128);
+        let plan = planner.plan(&req, Impl::Naive, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/naive");
+        assert_eq!(plan.threads, 1);
+    }
+
+    #[test]
+    fn protected_request_with_naive_variant_still_protected() {
+        let profile = Profile::skylake_sim();
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(48);
+        let plan = planner.plan(&req, Impl::Naive, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.scheme, Scheme::AbftFused);
+    }
+
+    #[test]
+    fn weighted_policy_routes_dgemm_to_weighted_kernel() {
+        let profile = Profile::skylake_sim();
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(48);
+        let plan = planner
+            .plan(&req, Impl::Tuned, FtPolicy::AbftWeighted)
+            .unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/abft-weighted");
+    }
+}

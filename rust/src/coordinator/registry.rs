@@ -1,0 +1,1382 @@
+//! Kernel registry: dispatch as data, not control flow.
+//!
+//! Every native kernel registers a [`KernelDescriptor`] — routine, BLAS
+//! level, [`Impl`] variant, the [`FtPolicy`] capabilities it can serve,
+//! the backend it reports as, whether it runs on the profile's thread
+//! pool, and its MR-aligned minimum-size floor — plus a uniform
+//! [`KernelFn`] entry point. The [`crate::coordinator::plan::Planner`]
+//! resolves a request + policy + profile into one of these entries; the
+//! router, server, and bench harnesses all enumerate the same table
+//! instead of hand-maintaining per-routine × per-variant match arms.
+
+use crate::blas::level3::GemmParams;
+use crate::blas::{blocked, level1, level2, level3, naive, parallel, Impl};
+use crate::config::Profile;
+use crate::coordinator::request::{
+    Backend, BlasRequest, BlasResult, Level,
+};
+use crate::ft::abft_fused::Strike;
+use crate::ft::injector::Fault;
+use crate::ft::policy::FtPolicy;
+use crate::ft::{abft, abft_fused, abft_weighted, dmr, FtReport};
+use crate::util::matrix::Matrix;
+
+/// Everything a registered kernel sees at execution time.
+pub struct ExecCtx<'a> {
+    pub req: &'a BlasRequest,
+    pub profile: &'a Profile,
+    pub policy: FtPolicy,
+    /// Planned faults to inject (empty on clean runs). Serial DMR/ABFT
+    /// schemes consume the first; the banded MT kernels route each
+    /// strike to the thread band owning its row.
+    pub faults: &'a [Fault],
+    /// Thread count granted by the plan (1 for serial kernels).
+    pub threads: usize,
+}
+
+impl ExecCtx<'_> {
+    fn fault(&self) -> Option<Fault> {
+        self.faults.first().copied()
+    }
+
+    fn inj_elem(&self) -> Option<(usize, f64)> {
+        self.faults.first().map(|f| (f.i, f.delta))
+    }
+}
+
+/// Uniform kernel entry point.
+pub type KernelFn = fn(&ExecCtx) -> (BlasResult, FtReport);
+
+type KernelOut = (BlasResult, FtReport);
+
+/// Protection scheme a registered kernel implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Unprotected.
+    None,
+    /// Duplicate-and-verify (paper §4, memory-bound L1/L2).
+    Dmr,
+    /// Fused online ABFT (paper §5.2).
+    AbftFused,
+    /// ABFT around a third-party GEMM (paper §5.1).
+    AbftUnfused,
+    /// Weighted double-checksum ABFT (paper §2.1 citation).
+    AbftWeighted,
+    /// FT-TRSM: panel ABFT + checksum-verified diagonal solves.
+    FtTrsm,
+}
+
+/// A registered kernel.
+pub struct KernelDescriptor {
+    /// Registry name, `"<routine>/<flavor>"` (e.g. `"dgemm/abft-fused-mt"`).
+    pub name: &'static str,
+    pub routine: &'static str,
+    pub level: Level,
+    /// Variant family the kernel belongs to (protected kernels are
+    /// built on the tuned substrate and register as [`Impl::Tuned`]).
+    pub variant: Impl,
+    pub backend: Backend,
+    pub scheme: Scheme,
+    /// FT policies this kernel can serve.
+    pub policies: &'static [FtPolicy],
+    /// Runs on the profile's kernel thread pool when granted threads.
+    pub threaded: bool,
+    /// Minimum principal dimension in units of `GemmParams.mr` (banded
+    /// kernels need at least two MR-aligned bands; 0 = no floor).
+    pub min_mr_multiple: usize,
+    /// One-line human description (bench row notes).
+    pub summary: &'static str,
+    pub execute: KernelFn,
+}
+
+impl KernelDescriptor {
+    pub fn supports(&self, policy: FtPolicy) -> bool {
+        self.policies.contains(&policy)
+    }
+
+    /// Does a request of principal dimension `dim` clear this kernel's
+    /// MR-aligned floor?
+    pub fn admits_dim(&self, dim: usize, mr: usize) -> bool {
+        dim >= self.min_mr_multiple * mr
+    }
+}
+
+/// The registry: a static table of every native kernel.
+pub struct KernelRegistry {
+    entries: &'static [KernelDescriptor],
+}
+
+static REGISTRY: KernelRegistry = KernelRegistry { entries: ENTRIES };
+
+impl KernelRegistry {
+    pub fn global() -> &'static KernelRegistry {
+        &REGISTRY
+    }
+
+    pub fn entries(&self) -> &'static [KernelDescriptor] {
+        self.entries
+    }
+
+    /// All entries for one routine, in registration order.
+    pub fn for_routine(&self, routine: &str) -> Vec<&'static KernelDescriptor> {
+        self.entries.iter().filter(|e| e.routine == routine).collect()
+    }
+
+    /// Look up an entry by registry name.
+    pub fn find(&self, name: &str) -> Option<&'static KernelDescriptor> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The serial unprotected variant ladder for one routine
+    /// (naive → blocked → tuned), as the bench figures enumerate it.
+    pub fn serial_variants(&self, routine: &str)
+                           -> Vec<&'static KernelDescriptor> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.routine == routine && !e.threaded && e.scheme == Scheme::None
+            })
+            .collect()
+    }
+
+    /// Unique routine names, in registration order.
+    pub fn routines(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for e in self.entries {
+            if !out.contains(&e.routine) {
+                out.push(e.routine);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------- policies
+
+const UNPROTECTED: &[FtPolicy] = &[FtPolicy::None];
+/// Protected policies a DMR kernel serves (every non-None policy falls
+/// back to DMR on L1/L2 — the hybrid strategy's memory-bound half).
+const PROTECTED_ALL: &[FtPolicy] =
+    &[FtPolicy::Hybrid, FtPolicy::AbftUnfused, FtPolicy::AbftWeighted];
+const HYBRID_ONLY: &[FtPolicy] = &[FtPolicy::Hybrid];
+/// Fused-ABFT kernels also serve the weighted policy for routines the
+/// weighted frame does not cover (DSYMM/DTRMM).
+const HYBRID_OR_WEIGHTED: &[FtPolicy] =
+    &[FtPolicy::Hybrid, FtPolicy::AbftWeighted];
+const UNFUSED_ONLY: &[FtPolicy] = &[FtPolicy::AbftUnfused];
+const WEIGHTED_ONLY: &[FtPolicy] = &[FtPolicy::AbftWeighted];
+/// DSYRK has no FT path (the paper does not protect it): its plain
+/// kernels serve every policy with a clean report.
+const ANY_POLICY: &[FtPolicy] = &[
+    FtPolicy::None,
+    FtPolicy::Hybrid,
+    FtPolicy::AbftUnfused,
+    FtPolicy::AbftWeighted,
+];
+
+// ------------------------------------------------------------ constructors
+
+const fn serial_with(name: &'static str, routine: &'static str, level: Level,
+                     variant: Impl, policies: &'static [FtPolicy],
+                     summary: &'static str, execute: KernelFn)
+                     -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine,
+        level,
+        variant,
+        backend: Backend::for_variant(variant),
+        scheme: Scheme::None,
+        policies,
+        threaded: false,
+        min_mr_multiple: 0,
+        summary,
+        execute,
+    }
+}
+
+const fn serial(name: &'static str, routine: &'static str, level: Level,
+                variant: Impl, summary: &'static str, execute: KernelFn)
+                -> KernelDescriptor {
+    serial_with(name, routine, level, variant, UNPROTECTED, summary, execute)
+}
+
+const fn protected(name: &'static str, routine: &'static str, level: Level,
+                   scheme: Scheme, policies: &'static [FtPolicy],
+                   summary: &'static str, execute: KernelFn)
+                   -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine,
+        level,
+        variant: Impl::Tuned,
+        backend: Backend::NativeTuned,
+        scheme,
+        policies,
+        threaded: false,
+        min_mr_multiple: 0,
+        summary,
+        execute,
+    }
+}
+
+const fn threaded(name: &'static str, routine: &'static str, scheme: Scheme,
+                  policies: &'static [FtPolicy], summary: &'static str,
+                  execute: KernelFn) -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine,
+        level: Level::L3,
+        variant: Impl::Tuned,
+        backend: Backend::NativeTuned,
+        scheme,
+        policies,
+        threaded: true,
+        // at least two MR-aligned row bands, else the MT frame falls
+        // through to the serial kernel anyway
+        min_mr_multiple: 2,
+        summary,
+        execute,
+    }
+}
+
+// ------------------------------------------------------- Level 1 kernels
+
+fn dscal_with(c: &ExecCtx, k: fn(f64, &mut [f64])) -> KernelOut {
+    let BlasRequest::Dscal { alpha, x } = c.req else {
+        unreachable!("dscal kernel planned for {}", c.req.routine())
+    };
+    let mut x = x.clone();
+    k(*alpha, &mut x);
+    (BlasResult::Vector(x), FtReport::none())
+}
+
+fn dscal_naive(c: &ExecCtx) -> KernelOut {
+    dscal_with(c, naive::dscal)
+}
+
+fn dscal_blocked(c: &ExecCtx) -> KernelOut {
+    dscal_with(c, blocked::dscal)
+}
+
+fn dscal_tuned(c: &ExecCtx) -> KernelOut {
+    dscal_with(c, level1::dscal)
+}
+
+fn dscal_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dscal { alpha, x } = c.req else {
+        unreachable!("dscal kernel planned for {}", c.req.routine())
+    };
+    let mut x = x.clone();
+    let ft = dmr::dscal_ft(*alpha, &mut x, c.inj_elem());
+    (BlasResult::Vector(x), ft)
+}
+
+fn daxpy_with(c: &ExecCtx, k: fn(f64, &[f64], &mut [f64])) -> KernelOut {
+    let BlasRequest::Daxpy { alpha, x, y } = c.req else {
+        unreachable!("daxpy kernel planned for {}", c.req.routine())
+    };
+    let mut y = y.clone();
+    k(*alpha, x, &mut y);
+    (BlasResult::Vector(y), FtReport::none())
+}
+
+fn daxpy_naive(c: &ExecCtx) -> KernelOut {
+    daxpy_with(c, naive::daxpy)
+}
+
+fn daxpy_blocked(c: &ExecCtx) -> KernelOut {
+    daxpy_with(c, blocked::daxpy)
+}
+
+fn daxpy_tuned(c: &ExecCtx) -> KernelOut {
+    daxpy_with(c, level1::daxpy)
+}
+
+fn daxpy_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Daxpy { alpha, x, y } = c.req else {
+        unreachable!("daxpy kernel planned for {}", c.req.routine())
+    };
+    let mut y = y.clone();
+    let ft = dmr::daxpy_ft(*alpha, x, &mut y, c.inj_elem());
+    (BlasResult::Vector(y), ft)
+}
+
+/// Reduction DMR injects per chunk: clamp the strike to the chunk range.
+fn chunk_inj(c: &ExecCtx, len: usize) -> Option<(usize, f64)> {
+    c.inj_elem().map(|(i, d)| (i % (len / 8).max(1), d))
+}
+
+fn ddot_with(c: &ExecCtx, k: fn(&[f64], &[f64]) -> f64) -> KernelOut {
+    let BlasRequest::Ddot { x, y } = c.req else {
+        unreachable!("ddot kernel planned for {}", c.req.routine())
+    };
+    (BlasResult::Scalar(k(x, y)), FtReport::none())
+}
+
+fn ddot_naive(c: &ExecCtx) -> KernelOut {
+    ddot_with(c, naive::ddot)
+}
+
+fn ddot_blocked(c: &ExecCtx) -> KernelOut {
+    ddot_with(c, blocked::ddot)
+}
+
+fn ddot_tuned(c: &ExecCtx) -> KernelOut {
+    ddot_with(c, level1::ddot)
+}
+
+fn ddot_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Ddot { x, y } = c.req else {
+        unreachable!("ddot kernel planned for {}", c.req.routine())
+    };
+    let (d, ft) = dmr::ddot_ft(x, y, chunk_inj(c, x.len()));
+    (BlasResult::Scalar(d), ft)
+}
+
+fn dnrm2_with(c: &ExecCtx, k: fn(&[f64]) -> f64) -> KernelOut {
+    let BlasRequest::Dnrm2 { x } = c.req else {
+        unreachable!("dnrm2 kernel planned for {}", c.req.routine())
+    };
+    (BlasResult::Scalar(k(x)), FtReport::none())
+}
+
+fn dnrm2_naive(c: &ExecCtx) -> KernelOut {
+    dnrm2_with(c, naive::dnrm2)
+}
+
+fn dnrm2_blocked(c: &ExecCtx) -> KernelOut {
+    dnrm2_with(c, blocked::dnrm2)
+}
+
+fn dnrm2_tuned(c: &ExecCtx) -> KernelOut {
+    dnrm2_with(c, level1::dnrm2)
+}
+
+fn dnrm2_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dnrm2 { x } = c.req else {
+        unreachable!("dnrm2 kernel planned for {}", c.req.routine())
+    };
+    let (d, ft) = dmr::dnrm2_ft(x, chunk_inj(c, x.len()));
+    (BlasResult::Scalar(d), ft)
+}
+
+fn dasum_with(c: &ExecCtx, k: fn(&[f64]) -> f64) -> KernelOut {
+    let BlasRequest::Dasum { x } = c.req else {
+        unreachable!("dasum kernel planned for {}", c.req.routine())
+    };
+    (BlasResult::Scalar(k(x)), FtReport::none())
+}
+
+fn dasum_naive(c: &ExecCtx) -> KernelOut {
+    dasum_with(c, naive::dasum)
+}
+
+fn dasum_tuned(c: &ExecCtx) -> KernelOut {
+    dasum_with(c, level1::dasum)
+}
+
+fn dasum_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dasum { x } = c.req else {
+        unreachable!("dasum kernel planned for {}", c.req.routine())
+    };
+    let (d, ft) = dmr::dasum_ft(x, chunk_inj(c, x.len()));
+    (BlasResult::Scalar(d), ft)
+}
+
+fn drot_with(c: &ExecCtx,
+             k: fn(&mut [f64], &mut [f64], f64, f64)) -> KernelOut {
+    let BlasRequest::Drot { x, y, c: co, s } = c.req else {
+        unreachable!("drot kernel planned for {}", c.req.routine())
+    };
+    let (mut x, mut y) = (x.clone(), y.clone());
+    k(&mut x, &mut y, *co, *s);
+    let mut out = x;
+    out.extend_from_slice(&y);
+    (BlasResult::Vector(out), FtReport::none())
+}
+
+fn drot_naive(c: &ExecCtx) -> KernelOut {
+    drot_with(c, naive::drot)
+}
+
+fn drot_tuned(c: &ExecCtx) -> KernelOut {
+    drot_with(c, level1::drot)
+}
+
+fn drot_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Drot { x, y, c: co, s } = c.req else {
+        unreachable!("drot kernel planned for {}", c.req.routine())
+    };
+    let (mut x, mut y) = (x.clone(), y.clone());
+    let ft = dmr::drot_ft(&mut x, &mut y, *co, *s, c.inj_elem());
+    let mut out = x;
+    out.extend_from_slice(&y);
+    (BlasResult::Vector(out), ft)
+}
+
+fn drotm_with(c: &ExecCtx,
+              k: fn(&mut [f64], &mut [f64], &[f64; 5])) -> KernelOut {
+    let BlasRequest::Drotm { x, y, param } = c.req else {
+        unreachable!("drotm kernel planned for {}", c.req.routine())
+    };
+    let (mut x, mut y) = (x.clone(), y.clone());
+    k(&mut x, &mut y, param);
+    let mut out = x;
+    out.extend_from_slice(&y);
+    (BlasResult::Vector(out), FtReport::none())
+}
+
+fn drotm_naive(c: &ExecCtx) -> KernelOut {
+    drotm_with(c, naive::drotm)
+}
+
+fn drotm_tuned(c: &ExecCtx) -> KernelOut {
+    drotm_with(c, level1::drotm)
+}
+
+fn drotm_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Drotm { x, y, param } = c.req else {
+        unreachable!("drotm kernel planned for {}", c.req.routine())
+    };
+    let (mut x, mut y) = (x.clone(), y.clone());
+    let ft = dmr::drotm_ft(&mut x, &mut y, param, c.inj_elem());
+    let mut out = x;
+    out.extend_from_slice(&y);
+    (BlasResult::Vector(out), ft)
+}
+
+fn idamax_with(c: &ExecCtx, k: fn(&[f64]) -> usize) -> KernelOut {
+    let BlasRequest::Idamax { x } = c.req else {
+        unreachable!("idamax kernel planned for {}", c.req.routine())
+    };
+    (BlasResult::Scalar(k(x) as f64), FtReport::none())
+}
+
+fn idamax_naive(c: &ExecCtx) -> KernelOut {
+    idamax_with(c, naive::idamax)
+}
+
+fn idamax_tuned(c: &ExecCtx) -> KernelOut {
+    idamax_with(c, level1::idamax)
+}
+
+fn idamax_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Idamax { x } = c.req else {
+        unreachable!("idamax kernel planned for {}", c.req.routine())
+    };
+    let (i, ft) = dmr::idamax_ft(x, c.inj_elem());
+    (BlasResult::Scalar(i as f64), ft)
+}
+
+// ------------------------------------------------------- Level 2 kernels
+
+fn dgemv_with(c: &ExecCtx,
+              k: fn(usize, usize, f64, &[f64], &[f64], f64, &mut [f64]))
+              -> KernelOut {
+    let BlasRequest::Dgemv { alpha, a, x, beta, y } = c.req else {
+        unreachable!("dgemv kernel planned for {}", c.req.routine())
+    };
+    let mut y = y.clone();
+    k(a.rows, a.cols, *alpha, &a.data, x, *beta, &mut y);
+    (BlasResult::Vector(y), FtReport::none())
+}
+
+fn dgemv_naive(c: &ExecCtx) -> KernelOut {
+    dgemv_with(c, naive::dgemv)
+}
+
+fn dgemv_blocked(c: &ExecCtx) -> KernelOut {
+    dgemv_with(c, blocked::dgemv)
+}
+
+fn dgemv_tuned(c: &ExecCtx) -> KernelOut {
+    dgemv_with(c, level2::dgemv)
+}
+
+fn dgemv_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemv { alpha, a, x, beta, y } = c.req else {
+        unreachable!("dgemv kernel planned for {}", c.req.routine())
+    };
+    let mut y = y.clone();
+    let ft = dmr::dgemv_ft(a.rows, a.cols, *alpha, &a.data, x, *beta, &mut y,
+                           c.inj_elem());
+    (BlasResult::Vector(y), ft)
+}
+
+fn dtrsv_with(c: &ExecCtx, k: fn(usize, &[f64], &mut [f64])) -> KernelOut {
+    let BlasRequest::Dtrsv { a, b } = c.req else {
+        unreachable!("dtrsv kernel planned for {}", c.req.routine())
+    };
+    let mut x = b.clone();
+    k(a.rows, &a.data, &mut x);
+    (BlasResult::Vector(x), FtReport::none())
+}
+
+fn dtrsv_naive(c: &ExecCtx) -> KernelOut {
+    dtrsv_with(c, naive::dtrsv_lower)
+}
+
+fn dtrsv_blocked(c: &ExecCtx) -> KernelOut {
+    dtrsv_with(c, blocked::dtrsv_lower)
+}
+
+fn dtrsv_tuned(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrsv { a, b } = c.req else {
+        unreachable!("dtrsv kernel planned for {}", c.req.routine())
+    };
+    let mut x = b.clone();
+    level2::dtrsv_lower(a.rows, &a.data, &mut x, c.profile.trsv_panel);
+    (BlasResult::Vector(x), FtReport::none())
+}
+
+fn dtrsv_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrsv { a, b } = c.req else {
+        unreachable!("dtrsv kernel planned for {}", c.req.routine())
+    };
+    let mut x = b.clone();
+    let n = a.rows;
+    // panel step 0 has no gemv update: clamp strikes to >= 1
+    let nsteps = n.div_ceil(c.profile.trsv_panel);
+    let inj = c.fault().map(|f| {
+        let s = if nsteps > 1 { 1 + f.step % (nsteps - 1) } else { 0 };
+        (s, f.delta)
+    });
+    let ft = dmr::dtrsv_ft(n, &a.data, &mut x, c.profile.trsv_panel, inj);
+    (BlasResult::Vector(x), ft)
+}
+
+fn dger_with(c: &ExecCtx,
+             k: fn(usize, usize, f64, &[f64], &[f64], &mut [f64]))
+             -> KernelOut {
+    let BlasRequest::Dger { alpha, x, y, a } = c.req else {
+        unreachable!("dger kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, a.cols);
+    let mut ad = a.data.clone();
+    k(m, n, *alpha, x, y, &mut ad);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, ad)), FtReport::none())
+}
+
+fn dger_naive(c: &ExecCtx) -> KernelOut {
+    dger_with(c, naive::dger)
+}
+
+fn dger_tuned(c: &ExecCtx) -> KernelOut {
+    dger_with(c, level2::dger)
+}
+
+fn dger_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dger { alpha, x, y, a } = c.req else {
+        unreachable!("dger kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, a.cols);
+    let mut ad = a.data.clone();
+    let inj = c.inj_elem().map(|(i, d)| (i % (m * n), d));
+    let ft = dmr::dger_ft(m, n, *alpha, x, y, &mut ad, inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, ad)), ft)
+}
+
+fn dsymv_with(c: &ExecCtx,
+              k: fn(usize, f64, &[f64], &[f64], f64, &mut [f64]))
+              -> KernelOut {
+    let BlasRequest::Dsymv { alpha, a, x, beta, y } = c.req else {
+        unreachable!("dsymv kernel planned for {}", c.req.routine())
+    };
+    let mut y = y.clone();
+    k(a.rows, *alpha, &a.data, x, *beta, &mut y);
+    (BlasResult::Vector(y), FtReport::none())
+}
+
+fn dsymv_naive(c: &ExecCtx) -> KernelOut {
+    dsymv_with(c, naive::dsymv_lower)
+}
+
+fn dsymv_tuned(c: &ExecCtx) -> KernelOut {
+    dsymv_with(c, level2::dsymv_lower)
+}
+
+fn dsymv_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dsymv { alpha, a, x, beta, y } = c.req else {
+        unreachable!("dsymv kernel planned for {}", c.req.routine())
+    };
+    let n = a.rows;
+    let mut y = y.clone();
+    let inj = c.inj_elem().map(|(i, d)| (i % n, d));
+    let ft = dmr::dsymv_ft(n, *alpha, &a.data, x, *beta, &mut y, inj);
+    (BlasResult::Vector(y), ft)
+}
+
+fn dtrmv_with(c: &ExecCtx, k: fn(usize, &[f64], &mut [f64])) -> KernelOut {
+    let BlasRequest::Dtrmv { a, x } = c.req else {
+        unreachable!("dtrmv kernel planned for {}", c.req.routine())
+    };
+    let mut x = x.clone();
+    k(a.rows, &a.data, &mut x);
+    (BlasResult::Vector(x), FtReport::none())
+}
+
+fn dtrmv_naive(c: &ExecCtx) -> KernelOut {
+    dtrmv_with(c, naive::dtrmv_lower)
+}
+
+fn dtrmv_tuned(c: &ExecCtx) -> KernelOut {
+    dtrmv_with(c, level2::dtrmv_lower)
+}
+
+fn dtrmv_dmr(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrmv { a, x } = c.req else {
+        unreachable!("dtrmv kernel planned for {}", c.req.routine())
+    };
+    let n = a.rows;
+    let mut x = x.clone();
+    let inj = c.inj_elem().map(|(i, d)| (i % n, d));
+    let ft = dmr::dtrmv_ft(n, &a.data, &mut x, inj);
+    (BlasResult::Vector(x), ft)
+}
+
+// ------------------------------------------------------- Level 3 kernels
+
+/// Translate planned faults into rank-K_C strikes for an m×n ABFT frame.
+fn strikes(faults: &[Fault], nsteps: usize, m: usize, n: usize) -> Vec<Strike> {
+    let nsteps = nsteps.max(1);
+    faults
+        .iter()
+        .map(|f| (f.step % nsteps, f.i % m, f.j % n, f.delta))
+        .collect()
+}
+
+fn dgemm_with(c: &ExecCtx,
+              k: fn(usize, usize, usize, f64, &[f64], &[f64], f64, &mut [f64]))
+              -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let mut cd = c0.data.clone();
+    k(m, n, kk, *alpha, &a.data, &b.data, *beta, &mut cd);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dgemm_naive(c: &ExecCtx) -> KernelOut {
+    dgemm_with(c, naive::dgemm)
+}
+
+fn dgemm_blocked(c: &ExecCtx) -> KernelOut {
+    dgemm_with(c, blocked::dgemm)
+}
+
+fn dgemm_tuned(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let mut cd = c0.data.clone();
+    level3::dgemm(m, n, kk, *alpha, &a.data, &b.data, *beta, &mut cd,
+                  &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dgemm_tuned_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let mut cd = c0.data.clone();
+    parallel::dgemm_mt(m, n, kk, *alpha, &a.data, &b.data, *beta, &mut cd,
+                       &c.profile.gemm, c.threads);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dgemm_fused(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    let mut cd = c0.data.clone();
+    let ft = abft_fused::dgemm_abft_fused(m, n, kk, *alpha, &a.data, &b.data,
+                                          *beta, &mut cd, params, &inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dgemm_fused_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    let mut cd = c0.data.clone();
+    let ft = parallel::dgemm_abft_fused_mt(m, n, kk, *alpha, &a.data, &b.data,
+                                           *beta, &mut cd, params, c.threads,
+                                           &inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dgemm_unfused(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    // the §5.1 baseline scales α into A and β into C up front, then
+    // wraps the unprotected tuned GEMM in separate checksum passes
+    let ascaled: Vec<f64> = a.data.iter().map(|v| alpha * v).collect();
+    let mut cd = c0.data.clone();
+    for v in cd.iter_mut() {
+        *v *= beta;
+    }
+    let ft = abft::dgemm_abft_unfused(
+        m, n, kk, params.kc, &ascaled, &b.data, &mut cd,
+        |ap, bp, cc, mm, kp| {
+            level3::dgemm(mm, n, kp, 1.0, ap, bp, 1.0, cc, params)
+        },
+        inj.first().copied(),
+    );
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dgemm_weighted(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    // the weighted frame is specialized to C := A·B: fold α into A and
+    // apply the β accumulation after the checksummed multiply
+    let ascaled: Vec<f64> = a.data.iter().map(|v| alpha * v).collect();
+    let mut t = vec![0.0; m * n];
+    let ft = abft_weighted::dgemm_abft_weighted(m, n, kk, &ascaled, &b.data,
+                                                &mut t, params, &inj);
+    let mut cd = c0.data.clone();
+    for (cv, tv) in cd.iter_mut().zip(&t) {
+        *cv = beta * *cv + tv;
+    }
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dsymm_with(c: &ExecCtx,
+              k: fn(usize, usize, f64, &[f64], &[f64], f64, &mut [f64]))
+              -> KernelOut {
+    let BlasRequest::Dsymm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dsymm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut cd = c0.data.clone();
+    k(m, n, *alpha, &a.data, &b.data, *beta, &mut cd);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dsymm_naive(c: &ExecCtx) -> KernelOut {
+    dsymm_with(c, naive::dsymm_lower)
+}
+
+fn dsymm_blocked(c: &ExecCtx) -> KernelOut {
+    dsymm_with(c, blocked::dsymm_lower)
+}
+
+fn dsymm_tuned(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dsymm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dsymm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut cd = c0.data.clone();
+    level3::dsymm_lower(m, n, *alpha, &a.data, &b.data, *beta, &mut cd,
+                        &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dsymm_fused(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dsymm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dsymm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, m.div_ceil(params.kc), m, n);
+    let mut cd = c0.data.clone();
+    let ft = abft_fused::dsymm_abft_fused(m, n, *alpha, &a.data, &b.data,
+                                          *beta, &mut cd, params, &inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dsymm_unfused(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dsymm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dsymm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, m.div_ceil(params.kc), m, n);
+    // symmetrize (packing analog) then unfused-ABFT GEMM
+    let mut full = vec![0.0; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            let v = alpha * a.data[i * m + j];
+            full[i * m + j] = v;
+            full[j * m + i] = v;
+        }
+    }
+    let mut cd = c0.data.clone();
+    for v in cd.iter_mut() {
+        *v *= beta;
+    }
+    let ft = abft::dgemm_abft_unfused(
+        m, n, m, params.kc, &full, &b.data, &mut cd,
+        |ap, bp, cc, mm, kp| {
+            level3::dgemm(mm, n, kp, 1.0, ap, bp, 1.0, cc, params)
+        },
+        inj.first().copied(),
+    );
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dtrmm_with(c: &ExecCtx,
+              k: fn(usize, usize, f64, &[f64], &mut [f64])) -> KernelOut {
+    let BlasRequest::Dtrmm { alpha, a, b } = c.req else {
+        unreachable!("dtrmm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    k(m, n, *alpha, &a.data, &mut bd);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
+}
+
+fn dtrmm_naive(c: &ExecCtx) -> KernelOut {
+    dtrmm_with(c, naive::dtrmm_lower)
+}
+
+fn dtrmm_blocked(c: &ExecCtx) -> KernelOut {
+    dtrmm_with(c, blocked::dtrmm_lower)
+}
+
+fn dtrmm_tuned(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrmm { alpha, a, b } = c.req else {
+        unreachable!("dtrmm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    level3::dtrmm_lower(m, n, *alpha, &a.data, &mut bd, &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
+}
+
+fn dtrmm_fused(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrmm { alpha, a, b } = c.req else {
+        unreachable!("dtrmm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, m.div_ceil(params.kc), m, n);
+    let mut bd = b.data.clone();
+    let ft = abft_fused::dtrmm_abft_fused(m, n, *alpha, &a.data, &mut bd,
+                                          params, &inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), ft)
+}
+
+fn dtrmm_unfused(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrmm { alpha, a, b } = c.req else {
+        unreachable!("dtrmm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, m.div_ceil(params.kc), m, n);
+    let mut low = vec![0.0; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            low[i * m + j] = alpha * a.data[i * m + j];
+        }
+    }
+    let mut bd = b.data.clone();
+    let b0 = bd.clone();
+    for v in bd.iter_mut() {
+        *v = 0.0;
+    }
+    let ft = abft::dgemm_abft_unfused(
+        m, n, m, params.kc, &low, &b0, &mut bd,
+        |ap, bp, cc, mm, kp| {
+            level3::dgemm(mm, n, kp, 1.0, ap, bp, 1.0, cc, params)
+        },
+        inj.first().copied(),
+    );
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), ft)
+}
+
+fn dtrsm_with(c: &ExecCtx, k: fn(usize, usize, &[f64], &mut [f64]))
+              -> KernelOut {
+    let BlasRequest::Dtrsm { a, b } = c.req else {
+        unreachable!("dtrsm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    k(m, n, &a.data, &mut bd);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
+}
+
+fn dtrsm_naive(c: &ExecCtx) -> KernelOut {
+    dtrsm_with(c, naive::dtrsm_llnn)
+}
+
+fn dtrsm_blocked(c: &ExecCtx) -> KernelOut {
+    dtrsm_with(c, blocked::dtrsm_llnn)
+}
+
+fn dtrsm_tuned(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrsm { a, b } = c.req else {
+        unreachable!("dtrsm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    level3::dtrsm_llnn(m, n, &a.data, &mut bd, c.profile.trsm_panel,
+                       &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
+}
+
+fn dtrsm_tuned_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrsm { a, b } = c.req else {
+        unreachable!("dtrsm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    parallel::dtrsm_llnn_mt(m, n, &a.data, &mut bd, c.profile.trsm_panel,
+                            &c.profile.gemm, c.threads);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
+}
+
+fn dtrsm_ft(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrsm { a, b } = c.req else {
+        unreachable!("dtrsm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    let ft = dtrsm_ft_native(m, n, &a.data, &mut bd, c.profile.trsm_panel,
+                             &c.profile.gemm, c.fault());
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), ft)
+}
+
+fn dsyrk_with(c: &ExecCtx,
+              k: fn(usize, usize, f64, &[f64], f64, &mut [f64])) -> KernelOut {
+    let BlasRequest::Dsyrk { alpha, a, beta, c: c0 } = c.req else {
+        unreachable!("dsyrk kernel planned for {}", c.req.routine())
+    };
+    let (n, kk) = (a.rows, a.cols);
+    let mut cd = c0.data.clone();
+    k(n, kk, *alpha, &a.data, *beta, &mut cd);
+    (BlasResult::Matrix(Matrix::from_vec(n, n, cd)), FtReport::none())
+}
+
+fn dsyrk_naive(c: &ExecCtx) -> KernelOut {
+    dsyrk_with(c, naive::dsyrk_lower)
+}
+
+fn dsyrk_tuned(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dsyrk { alpha, a, beta, c: c0 } = c.req else {
+        unreachable!("dsyrk kernel planned for {}", c.req.routine())
+    };
+    let (n, kk) = (a.rows, a.cols);
+    let mut cd = c0.data.clone();
+    level3::dsyrk_lower(n, kk, *alpha, &a.data, *beta, &mut cd,
+                        &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(n, n, cd)), FtReport::none())
+}
+
+/// Native FT-TRSM: each panel's GEMM update is checksum-verified and
+/// corrected online; diagonal solves are checksum-verified with a DMR
+/// re-solve on the cold path (paper's FT-TRSM hybrid).
+fn dtrsm_ft_native(m: usize, n: usize, a: &[f64], b: &mut [f64], panel: usize,
+                   params: &GemmParams, fault: Option<Fault>) -> FtReport {
+    let mut report = FtReport::none();
+    let nsteps = m.div_ceil(panel);
+    // step 0 has no off-diagonal panel; clamp planned strikes to [1, nsteps)
+    let fault = fault.map(|mut f| {
+        if nsteps > 1 {
+            f.step = 1 + f.step % (nsteps - 1);
+        } else {
+            f.step = 0;
+        }
+        f.i %= panel; // panel-local strike position
+        f.j %= n;
+        f
+    });
+    let mut i = 0;
+    let mut step = 0;
+    while i < m {
+        let pb = panel.min(m - i);
+        if i > 0 {
+            let mut apanel = vec![0.0; pb * i];
+            for r in 0..pb {
+                apanel[r * i..(r + 1) * i]
+                    .copy_from_slice(&a[(i + r) * m..(i + r) * m + i]);
+            }
+            let (xdone, btail) = b.split_at_mut(i * n);
+            let bblk = &mut btail[..pb * n];
+            // B_block -= A_panel · X_done, in place through the fused-ABFT
+            // GEMM frame (paper §5.2): the checksum traffic shares the
+            // packing loads and the β=1 accumulation seeds the checksums
+            // from B_block itself — no staging buffer, no extra subtract
+            // pass over memory.
+            let usteps = i.div_ceil(params.kc);
+            let inj: Vec<_> = fault
+                .filter(|f| f.step == step)
+                // clamp the strike into this step's pb×n update (the last
+                // panel can be narrower than the configured width)
+                .map(|f| (f.step % usteps, f.i % pb, f.j % n, f.delta))
+                .into_iter()
+                .collect();
+            report.merge(abft_fused::dgemm_abft_fused(
+                pb, n, i, -1.0, &apanel, &xdone[..i * n], 1.0, bblk, params,
+                &inj));
+        }
+        // Checksum-protected diagonal solve (the ABFT identity for a
+        // triangular solve T·X = B: with w = Tᵀ·e, any computed X must
+        // satisfy wᵀ·X = eᵀ·B column-wise). Verification costs one
+        // O(pb·n) pass instead of duplicating the O(pb²·n/2) solve — the
+        // L3 analog of the paper's "cast the cost into checksums, not
+        // duplication" argument. A flagged column is re-solved twice on
+        // the cold path (third computation + consensus).
+        let binit: Vec<f64> = b[i * n..(i + pb) * n].to_vec();
+        // column sums of the incoming rhs (eᵀ·B) — fused with the copy
+        let mut sb = vec![0.0; n];
+        for r in 0..pb {
+            let row = &binit[r * n..(r + 1) * n];
+            for (s, v) in sb.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        // w = Tᵀ·e: column sums of the pb×pb lower-triangular block
+        let mut w = vec![0.0; pb];
+        let mut max_t = 0.0f64;
+        for r in 0..pb {
+            let gi = i + r;
+            for (p, wv) in w.iter_mut().enumerate().take(r + 1) {
+                let t = a[gi * m + i + p];
+                *wv += t;
+                max_t = max_t.max(t.abs());
+            }
+        }
+        // the (single) vectorized forward solve
+        {
+            let (done, cur) = b.split_at_mut(i * n);
+            let _ = done;
+            let blk = &mut cur[..pb * n];
+            for r in 0..pb {
+                let gi = i + r;
+                let (solved, rest) = blk.split_at_mut(r * n);
+                let row = &mut rest[..n];
+                for p in 0..r {
+                    let aip = a[gi * m + i + p];
+                    let prow = &solved[p * n..(p + 1) * n];
+                    for (o, s) in row.iter_mut().zip(prow) {
+                        *o -= aip * s;
+                    }
+                }
+                let rd = 1.0 / a[gi * m + gi];
+                for o in row.iter_mut() {
+                    *o *= rd;
+                }
+            }
+        }
+        // single-panel matrices have no GEMM update to strike — the
+        // planned fault lands on the diagonal solve output instead
+        // (before verification reads it), exercising the checksum path
+        if let Some(f) = fault {
+            if f.step == step && i == 0 && m <= panel {
+                b[(f.i % pb) * n + f.j % n] += f.delta;
+            }
+        }
+        // verify wᵀ·X against eᵀ·B per column
+        let x = &b[i * n..(i + pb) * n];
+        let mut sx = vec![0.0; n];
+        let mut max_x = 0.0f64;
+        for r in 0..pb {
+            let wr = w[r];
+            let row = &x[r * n..(r + 1) * n];
+            for (s, v) in sx.iter_mut().zip(row) {
+                *s += wr * v;
+            }
+        }
+        for v in x {
+            max_x = max_x.max(v.abs());
+        }
+        let tol = crate::ft::abft::round_off_threshold(
+            max_t.max(1.0) * max_x.max(1.0), pb, n);
+        let bad: Vec<usize> = (0..n)
+            .filter(|&cx| (sx[cx] - sb[cx]).abs() > tol)
+            .collect();
+        if !bad.is_empty() {
+            // cold path: re-solve the flagged columns twice + consensus
+            for &cx in &bad {
+                let resolve = || -> Vec<f64> {
+                    let mut col = vec![0.0; pb];
+                    for r in 0..pb {
+                        let gi = i + r;
+                        let mut acc =
+                            std::hint::black_box(binit[r * n + cx]);
+                        for p in 0..r {
+                            acc -= a[gi * m + i + p] * col[p];
+                        }
+                        col[r] = acc / a[gi * m + gi];
+                    }
+                    col
+                };
+                let c1 = resolve();
+                let c2 = resolve();
+                if c1 != c2 {
+                    panic!("FT-BLAS DTRSM: diagonal re-solve disagrees — \
+                            unrecoverable");
+                }
+                for r in 0..pb {
+                    b[(i + r) * n + cx] = c1[r];
+                }
+            }
+            report.errors_detected += 1;
+            report.errors_corrected += 1;
+        }
+        i += pb;
+        step += 1;
+    }
+    report
+}
+
+// ---------------------------------------------------------------- table
+
+/// The full native kernel table. Registration order matters twice:
+/// `serial_variants` reports the naive → blocked → tuned ladder in this
+/// order, and the planner's any-variant fallback takes the first
+/// supporting entry.
+static ENTRIES: &[KernelDescriptor] = &[
+    // -------------------------------------------------------- Level 1
+    serial("dscal/naive", "dscal", Level::L1, Impl::Naive,
+           "textbook loop (LAPACK-sim)", dscal_naive),
+    serial("dscal/blocked", "dscal", Level::L1, Impl::Blocked,
+           "SIMD-width, unroll, NO prefetch (OpenBLAS-sim)", dscal_blocked),
+    serial("dscal/tuned", "dscal", Level::L1, Impl::Tuned,
+           "+prefetch (FT-BLAS Ori)", dscal_tuned),
+    protected("dscal/dmr", "dscal", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated SIMD streams", dscal_dmr),
+    serial("daxpy/naive", "daxpy", Level::L1, Impl::Naive,
+           "scalar loop", daxpy_naive),
+    serial("daxpy/blocked", "daxpy", Level::L1, Impl::Blocked,
+           "blocked loop (OpenBLAS-sim)", daxpy_blocked),
+    serial("daxpy/tuned", "daxpy", Level::L1, Impl::Tuned,
+           "SIMD-width, unroll, prefetch", daxpy_tuned),
+    protected("daxpy/dmr", "daxpy", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated SIMD streams", daxpy_dmr),
+    serial("ddot/naive", "ddot", Level::L1, Impl::Naive,
+           "single accumulator", ddot_naive),
+    serial("ddot/blocked", "ddot", Level::L1, Impl::Blocked,
+           "single accumulator, blocked", ddot_blocked),
+    serial("ddot/tuned", "ddot", Level::L1, Impl::Tuned,
+           "4 accumulator chains, prefetch", ddot_tuned),
+    protected("ddot/dmr", "ddot", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "per-chunk duplicated reduction", ddot_dmr),
+    serial("dnrm2/naive", "dnrm2", Level::L1, Impl::Naive,
+           "scaled loop", dnrm2_naive),
+    serial("dnrm2/blocked", "dnrm2", Level::L1, Impl::Blocked,
+           "SSE2-width (2 lanes)", dnrm2_blocked),
+    serial("dnrm2/tuned", "dnrm2", Level::L1, Impl::Tuned,
+           "AVX512-width (8 lanes), prefetch", dnrm2_tuned),
+    protected("dnrm2/dmr", "dnrm2", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "per-chunk duplicated reduction", dnrm2_dmr),
+    serial("dasum/naive", "dasum", Level::L1, Impl::Naive,
+           "textbook loop", dasum_naive),
+    serial("dasum/blocked", "dasum", Level::L1, Impl::Blocked,
+           "shares the tuned kernel", dasum_tuned),
+    serial("dasum/tuned", "dasum", Level::L1, Impl::Tuned,
+           "chunked + unrolled", dasum_tuned),
+    protected("dasum/dmr", "dasum", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "per-chunk duplicated reduction", dasum_dmr),
+    serial("drot/naive", "drot", Level::L1, Impl::Naive,
+           "textbook loop", drot_naive),
+    serial("drot/blocked", "drot", Level::L1, Impl::Blocked,
+           "shares the tuned kernel", drot_tuned),
+    serial("drot/tuned", "drot", Level::L1, Impl::Tuned,
+           "chunked + unrolled", drot_tuned),
+    protected("drot/dmr", "drot", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated rotation streams", drot_dmr),
+    serial("drotm/naive", "drotm", Level::L1, Impl::Naive,
+           "textbook loop", drotm_naive),
+    serial("drotm/blocked", "drotm", Level::L1, Impl::Blocked,
+           "shares the tuned kernel", drotm_tuned),
+    serial("drotm/tuned", "drotm", Level::L1, Impl::Tuned,
+           "flag-specialized, unrolled", drotm_tuned),
+    protected("drotm/dmr", "drotm", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated rotation streams", drotm_dmr),
+    serial("idamax/naive", "idamax", Level::L1, Impl::Naive,
+           "textbook scan", idamax_naive),
+    serial("idamax/blocked", "idamax", Level::L1, Impl::Blocked,
+           "shares the tuned kernel", idamax_tuned),
+    serial("idamax/tuned", "idamax", Level::L1, Impl::Tuned,
+           "chunked scan", idamax_tuned),
+    protected("idamax/dmr", "idamax", Level::L1, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated scan", idamax_dmr),
+    // -------------------------------------------------------- Level 2
+    serial("dgemv/naive", "dgemv", Level::L2, Impl::Naive,
+           "textbook loops", dgemv_naive),
+    serial("dgemv/blocked", "dgemv", Level::L2, Impl::Blocked,
+           "cache-blocked A (OpenBLAS-sim)", dgemv_blocked),
+    serial("dgemv/tuned", "dgemv", Level::L2, Impl::Tuned,
+           "Ri=4 register reuse, streaming A", dgemv_tuned),
+    protected("dgemv/dmr", "dgemv", Level::L2, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated row streams", dgemv_dmr),
+    serial("dtrsv/naive", "dtrsv", Level::L2, Impl::Naive,
+           "textbook forward solve", dtrsv_naive),
+    serial("dtrsv/blocked", "dtrsv", Level::L2, Impl::Blocked,
+           "B=64 panels (OpenBLAS default)", dtrsv_blocked),
+    serial("dtrsv/tuned", "dtrsv", Level::L2, Impl::Tuned,
+           "B=4 panels (paper's choice)", dtrsv_tuned),
+    protected("dtrsv/dmr", "dtrsv", Level::L2, Scheme::Dmr, PROTECTED_ALL,
+              "DMR panel solves + gemv updates", dtrsv_dmr),
+    serial("dger/naive", "dger", Level::L2, Impl::Naive,
+           "textbook loops", dger_naive),
+    serial("dger/blocked", "dger", Level::L2, Impl::Blocked,
+           "shares the tuned kernel", dger_tuned),
+    serial("dger/tuned", "dger", Level::L2, Impl::Tuned,
+           "unrolled rank-1 update", dger_tuned),
+    protected("dger/dmr", "dger", Level::L2, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated update streams", dger_dmr),
+    serial("dsymv/naive", "dsymv", Level::L2, Impl::Naive,
+           "textbook loops", dsymv_naive),
+    serial("dsymv/blocked", "dsymv", Level::L2, Impl::Blocked,
+           "shares the tuned kernel", dsymv_tuned),
+    serial("dsymv/tuned", "dsymv", Level::L2, Impl::Tuned,
+           "symmetric register reuse", dsymv_tuned),
+    protected("dsymv/dmr", "dsymv", Level::L2, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated row streams", dsymv_dmr),
+    serial("dtrmv/naive", "dtrmv", Level::L2, Impl::Naive,
+           "textbook loops", dtrmv_naive),
+    serial("dtrmv/blocked", "dtrmv", Level::L2, Impl::Blocked,
+           "shares the tuned kernel", dtrmv_tuned),
+    serial("dtrmv/tuned", "dtrmv", Level::L2, Impl::Tuned,
+           "triangular register reuse", dtrmv_tuned),
+    protected("dtrmv/dmr", "dtrmv", Level::L2, Scheme::Dmr, PROTECTED_ALL,
+              "duplicated row streams", dtrmv_dmr),
+    // -------------------------------------------------------- Level 3
+    serial("dgemm/naive", "dgemm", Level::L3, Impl::Naive,
+           "textbook triple loop", dgemm_naive),
+    serial("dgemm/blocked", "dgemm", Level::L3, Impl::Blocked,
+           "default-parameter blocking (OpenBLAS-sim)", dgemm_blocked),
+    serial("dgemm/tuned", "dgemm", Level::L3, Impl::Tuned,
+           "packed mc/nc/kc blocking, unrolled micro kernel", dgemm_tuned),
+    threaded("dgemm/tuned-mt", "dgemm", Scheme::None, UNPROTECTED,
+             "row-band parallel tuned GEMM", dgemm_tuned_mt),
+    protected("dgemm/abft-fused", "dgemm", Level::L3, Scheme::AbftFused,
+              HYBRID_ONLY, "checksums fused into packing + write-back (§5.2)",
+              dgemm_fused),
+    threaded("dgemm/abft-fused-mt", "dgemm", Scheme::AbftFused, HYBRID_ONLY,
+             "band-local fused ABFT across threads", dgemm_fused_mt),
+    protected("dgemm/abft-unfused", "dgemm", Level::L3, Scheme::AbftUnfused,
+              UNFUSED_ONLY, "ABFT around a third-party GEMM (§5.1)",
+              dgemm_unfused),
+    protected("dgemm/abft-weighted", "dgemm", Level::L3, Scheme::AbftWeighted,
+              WEIGHTED_ONLY, "weighted double-checksum encoding (§2.1)",
+              dgemm_weighted),
+    serial("dsymm/naive", "dsymm", Level::L3, Impl::Naive,
+           "textbook triple loop", dsymm_naive),
+    serial("dsymm/blocked", "dsymm", Level::L3, Impl::Blocked,
+           "default-parameter blocking", dsymm_blocked),
+    serial("dsymm/tuned", "dsymm", Level::L3, Impl::Tuned,
+           "packed symmetric frame", dsymm_tuned),
+    protected("dsymm/abft-fused", "dsymm", Level::L3, Scheme::AbftFused,
+              HYBRID_OR_WEIGHTED, "fused checksums in the symmetric frame",
+              dsymm_fused),
+    protected("dsymm/abft-unfused", "dsymm", Level::L3, Scheme::AbftUnfused,
+              UNFUSED_ONLY, "symmetrize + third-party ABFT", dsymm_unfused),
+    serial("dtrmm/naive", "dtrmm", Level::L3, Impl::Naive,
+           "textbook triple loop", dtrmm_naive),
+    serial("dtrmm/blocked", "dtrmm", Level::L3, Impl::Blocked,
+           "default-parameter blocking", dtrmm_blocked),
+    serial("dtrmm/tuned", "dtrmm", Level::L3, Impl::Tuned,
+           "packed triangular frame", dtrmm_tuned),
+    protected("dtrmm/abft-fused", "dtrmm", Level::L3, Scheme::AbftFused,
+              HYBRID_OR_WEIGHTED, "fused checksums in the triangular frame",
+              dtrmm_fused),
+    protected("dtrmm/abft-unfused", "dtrmm", Level::L3, Scheme::AbftUnfused,
+              UNFUSED_ONLY, "lower-fill + third-party ABFT", dtrmm_unfused),
+    serial("dtrsm/naive", "dtrsm", Level::L3, Impl::Naive,
+           "textbook forward solve", dtrsm_naive),
+    serial("dtrsm/blocked", "dtrsm", Level::L3, Impl::Blocked,
+           "scalar diagonal solver (the under-optimized prototype)",
+           dtrsm_blocked),
+    serial("dtrsm/tuned", "dtrsm", Level::L3, Impl::Tuned,
+           "reciprocal-diagonal macro kernel", dtrsm_tuned),
+    threaded("dtrsm/tuned-mt", "dtrsm", Scheme::None, UNPROTECTED,
+             "column-stripe parallel solve", dtrsm_tuned_mt),
+    protected("dtrsm/ft", "dtrsm", Level::L3, Scheme::FtTrsm, PROTECTED_ALL,
+              "panel ABFT + checksum-verified diagonal solves", dtrsm_ft),
+    serial_with("dsyrk/naive", "dsyrk", Level::L3, Impl::Naive, ANY_POLICY,
+                "textbook triple loop (no FT path)", dsyrk_naive),
+    serial_with("dsyrk/blocked", "dsyrk", Level::L3, Impl::Blocked, ANY_POLICY,
+                "shares the tuned kernel (no FT path)", dsyrk_tuned),
+    serial_with("dsyrk/tuned", "dsyrk", Level::L3, Impl::Tuned, ANY_POLICY,
+                "packed rank-k frame (no FT path)", dsyrk_tuned),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Totality: every routine serves every policy through at least one
+    /// registered kernel — the planner can never come up empty.
+    #[test]
+    fn every_routine_serves_every_policy() {
+        let reg = KernelRegistry::global();
+        let routines = reg.routines();
+        assert_eq!(routines.len(), 18, "routine count drifted");
+        for r in routines {
+            for p in FtPolicy::ALL {
+                assert!(
+                    reg.for_routine(r).iter().any(|e| e.supports(p)),
+                    "{r} has no kernel for {}", p.name()
+                );
+            }
+        }
+    }
+
+    /// Every routine exposes the serial naive → tuned ladder the oracle
+    /// comparisons and bench figures rely on.
+    #[test]
+    fn every_routine_has_naive_and_tuned_serial() {
+        let reg = KernelRegistry::global();
+        for r in reg.routines() {
+            let ladder = reg.serial_variants(r);
+            assert!(ladder.iter().any(|e| e.variant == Impl::Naive),
+                    "{r}: no naive serial kernel");
+            assert!(ladder.iter().any(|e| e.variant == Impl::Tuned),
+                    "{r}: no tuned serial kernel");
+        }
+    }
+
+    /// Registry names are unique and follow `routine/flavor`.
+    #[test]
+    fn names_unique_and_well_formed() {
+        let reg = KernelRegistry::global();
+        let mut seen = std::collections::HashSet::new();
+        for e in reg.entries() {
+            assert!(seen.insert(e.name), "duplicate kernel name {}", e.name);
+            assert!(e.name.starts_with(e.routine),
+                    "{}: name not prefixed by routine {}", e.name, e.routine);
+            assert_eq!(reg.find(e.name).unwrap().name, e.name);
+        }
+    }
+
+    /// Threaded kernels are L3-only, carry an MR floor, and have a
+    /// serial sibling serving the same policies (the fall-back path).
+    #[test]
+    fn threaded_kernels_have_serial_siblings() {
+        let reg = KernelRegistry::global();
+        for e in reg.entries().iter().filter(|e| e.threaded) {
+            assert_eq!(e.level, Level::L3, "{}: threaded non-L3", e.name);
+            assert!(e.min_mr_multiple > 0, "{}: no MR floor", e.name);
+            for p in e.policies {
+                assert!(
+                    reg.for_routine(e.routine)
+                        .iter()
+                        .any(|s| !s.threaded && s.supports(*p)),
+                    "{}: no serial sibling for {}", e.name, p.name()
+                );
+            }
+        }
+    }
+}

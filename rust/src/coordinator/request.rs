@@ -35,6 +35,25 @@ impl Backend {
             _ => None,
         }
     }
+
+    /// The native backend a kernel variant reports as.
+    pub const fn for_variant(v: crate::blas::Impl) -> Backend {
+        match v {
+            crate::blas::Impl::Naive => Backend::NativeNaive,
+            crate::blas::Impl::Blocked => Backend::NativeBlocked,
+            crate::blas::Impl::Tuned => Backend::NativeTuned,
+        }
+    }
+
+    /// The kernel variant a native backend requests (PJRT has none).
+    pub fn variant(&self) -> Option<crate::blas::Impl> {
+        match self {
+            Backend::NativeNaive => Some(crate::blas::Impl::Naive),
+            Backend::NativeBlocked => Some(crate::blas::Impl::Blocked),
+            Backend::NativeTuned => Some(crate::blas::Impl::Tuned),
+            Backend::Pjrt => None,
+        }
+    }
 }
 
 /// A BLAS call. Matrices are dense row-major; triangular routines read
@@ -213,6 +232,9 @@ pub struct BlasResponse {
     pub result: BlasResult,
     pub ft: FtReport,
     pub backend: Backend,
+    /// Registry name of the kernel that executed the request
+    /// (e.g. `"dgemm/abft-fused-mt"`; `"pjrt"` on the artifact path).
+    pub kernel: &'static str,
     /// Kernel-only execution seconds (excludes queueing).
     pub exec_seconds: f64,
 }

@@ -5,19 +5,25 @@
 //! the preferred backend cannot serve a request (PJRT artifacts are
 //! shape-specialized), the router falls back to the tuned native kernels
 //! — requests never fail for shape reasons.
+//!
+//! Native dispatch is a thin lookup: the [`Planner`] resolves the
+//! request against the [`crate::coordinator::registry`] kernel table and
+//! the router executes whatever descriptor comes back. Adding a kernel,
+//! a policy, or a threaded variant means registering a descriptor — not
+//! threading a new arm through per-routine match statements.
 
 use anyhow::Result;
 
-use crate::blas::{blocked, level1, level2, level3, naive, Impl};
+use crate::blas::Impl;
 use crate::config::Profile;
 use crate::coordinator::pjrt_backend::PjrtBackend;
+use crate::coordinator::plan::{ExecutionPlan, Planner};
+use crate::coordinator::registry::ExecCtx;
 use crate::coordinator::request::{
-    Backend, BlasRequest, BlasResponse, BlasResult,
+    Backend, BlasRequest, BlasResponse,
 };
 use crate::ft::injector::Fault;
 use crate::ft::policy::FtPolicy;
-use crate::ft::{abft, abft_fused, dmr, FtReport};
-use crate::util::matrix::Matrix;
 
 /// The router. `pjrt` is optional so the native path works without
 /// artifacts on disk (e.g. unit tests).
@@ -47,6 +53,21 @@ impl Router {
         }
     }
 
+    /// The native execution plan this request would get (None on the
+    /// PJRT path, which plans per-artifact instead). Because the batcher
+    /// groups by `(routine, dim)`, one call describes a whole batch —
+    /// the CLI prints it before executing, and batch-aware scheduling
+    /// can hook in here.
+    pub fn plan(&self, req: &BlasRequest, policy: FtPolicy)
+                -> Option<ExecutionPlan> {
+        match self.resolve(req, policy).variant() {
+            Some(variant) => {
+                Planner::new(&self.profile).plan(req, variant, policy)
+            }
+            None => None,
+        }
+    }
+
     /// Execute a request under a policy with an optional planned fault.
     pub fn execute(&self, req: &BlasRequest, policy: FtPolicy,
                    fault: Option<Fault>) -> Result<BlasResponse> {
@@ -56,584 +77,58 @@ impl Router {
                 .as_ref()
                 .expect("resolve() returned Pjrt without a backend")
                 .execute(req, policy, fault),
-            Backend::NativeNaive => {
-                Ok(execute_native(req, Impl::Naive, &self.profile, policy, fault))
-            }
-            Backend::NativeBlocked => {
-                Ok(execute_native(req, Impl::Blocked, &self.profile, policy, fault))
-            }
-            Backend::NativeTuned => {
-                Ok(execute_native(req, Impl::Tuned, &self.profile, policy, fault))
+            native => {
+                let variant = native
+                    .variant()
+                    .expect("native backend without a kernel variant");
+                Ok(execute_native(req, variant, &self.profile, policy, fault))
             }
         }
     }
 }
 
-/// Execute on the native kernels. Protection per the hybrid strategy:
-/// DMR for Level-1/2, online ABFT (kc-paneled, around the tuned GEMM) for
-/// Level-3. The fault is translated to each scheme's injection point.
+/// Execute on the native kernels: plan against the registry, then run
+/// the planned kernel. Protection follows the hybrid strategy encoded
+/// in the descriptors' capability lists — DMR for Level-1/2, online
+/// ABFT (kc-paneled, fused into the tuned GEMM frame) for Level-3 —
+/// and the planned fault is translated to each scheme's injection
+/// point inside the registered kernel.
 pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
                       policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
     let t0 = std::time::Instant::now();
-    let protected = policy.protects();
-    let params = &profile.gemm;
-    let inj_elem = fault.map(|f| (f.i, f.delta));
-    let backend = match variant {
-        Impl::Naive => Backend::NativeNaive,
-        Impl::Blocked => Backend::NativeBlocked,
-        Impl::Tuned => Backend::NativeTuned,
+    let plan = Planner::new(profile)
+        .plan(req, variant, policy)
+        .unwrap_or_else(|| {
+            panic!("no registered kernel serves {}/{} under {}",
+                   req.routine(), variant.name(), policy.name())
+        });
+    let faults: &[Fault] = match &fault {
+        Some(f) => std::slice::from_ref(f),
+        None => &[],
     };
-
-    let (result, ft) = match req {
-        // -------------------------------------------------- Level 1
-        BlasRequest::Dscal { alpha, x } => {
-            let mut x = x.clone();
-            let ft = if protected {
-                dmr::dscal_ft(*alpha, &mut x, inj_elem)
-            } else {
-                match variant {
-                    Impl::Naive => naive::dscal(*alpha, &mut x),
-                    Impl::Blocked => blocked::dscal(*alpha, &mut x),
-                    Impl::Tuned => level1::dscal(*alpha, &mut x),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Vector(x), ft)
-        }
-        BlasRequest::Daxpy { alpha, x, y } => {
-            let mut y = y.clone();
-            let ft = if protected {
-                dmr::daxpy_ft(*alpha, x, &mut y, inj_elem)
-            } else {
-                match variant {
-                    Impl::Naive => naive::daxpy(*alpha, x, &mut y),
-                    Impl::Blocked => blocked::daxpy(*alpha, x, &mut y),
-                    Impl::Tuned => level1::daxpy(*alpha, x, &mut y),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Vector(y), ft)
-        }
-        BlasRequest::Ddot { x, y } => {
-            if protected {
-                // reduction DMR injects per chunk: clamp to chunk range
-                let inj = inj_elem.map(|(i, d)| (i % (x.len() / 8).max(1), d));
-                let (d, ft) = dmr::ddot_ft(x, y, inj);
-                (BlasResult::Scalar(d), ft)
-            } else {
-                let d = match variant {
-                    Impl::Naive => naive::ddot(x, y),
-                    Impl::Blocked => blocked::ddot(x, y),
-                    Impl::Tuned => level1::ddot(x, y),
-                };
-                (BlasResult::Scalar(d), FtReport::none())
-            }
-        }
-        BlasRequest::Dnrm2 { x } => {
-            if protected {
-                let inj = inj_elem.map(|(i, d)| (i % (x.len() / 8).max(1), d));
-                let (d, ft) = dmr::dnrm2_ft(x, inj);
-                (BlasResult::Scalar(d), ft)
-            } else {
-                let d = match variant {
-                    Impl::Naive => naive::dnrm2(x),
-                    Impl::Blocked => blocked::dnrm2(x),
-                    Impl::Tuned => level1::dnrm2(x),
-                };
-                (BlasResult::Scalar(d), FtReport::none())
-            }
-        }
-        BlasRequest::Dasum { x } => {
-            if protected {
-                let inj = inj_elem.map(|(i, d)| (i % (x.len() / 8).max(1), d));
-                let (d, ft) = dmr::dasum_ft(x, inj);
-                (BlasResult::Scalar(d), ft)
-            } else {
-                let d = match variant {
-                    Impl::Naive => naive::dasum(x),
-                    _ => level1::dasum(x),
-                };
-                (BlasResult::Scalar(d), FtReport::none())
-            }
-        }
-        BlasRequest::Drot { x, y, c, s } => {
-            let (mut x, mut y) = (x.clone(), y.clone());
-            let ft = if protected {
-                dmr::drot_ft(&mut x, &mut y, *c, *s, inj_elem)
-            } else {
-                match variant {
-                    Impl::Naive => naive::drot(&mut x, &mut y, *c, *s),
-                    _ => level1::drot(&mut x, &mut y, *c, *s),
-                }
-                FtReport::none()
-            };
-            let mut out = x;
-            out.extend_from_slice(&y);
-            (BlasResult::Vector(out), ft)
-        }
-        BlasRequest::Drotm { x, y, param } => {
-            let (mut x, mut y) = (x.clone(), y.clone());
-            let ft = if protected {
-                dmr::drotm_ft(&mut x, &mut y, param, inj_elem)
-            } else {
-                match variant {
-                    Impl::Naive => naive::drotm(&mut x, &mut y, param),
-                    _ => level1::drotm(&mut x, &mut y, param),
-                }
-                FtReport::none()
-            };
-            let mut out = x;
-            out.extend_from_slice(&y);
-            (BlasResult::Vector(out), ft)
-        }
-        BlasRequest::Idamax { x } => {
-            if protected {
-                let inj = inj_elem.map(|(i, d)| (i, d));
-                let (i, ft) = dmr::idamax_ft(x, inj);
-                (BlasResult::Scalar(i as f64), ft)
-            } else {
-                let i = match variant {
-                    Impl::Naive => naive::idamax(x),
-                    _ => level1::idamax(x),
-                };
-                (BlasResult::Scalar(i as f64), FtReport::none())
-            }
-        }
-        // -------------------------------------------------- Level 2
-        BlasRequest::Dgemv { alpha, a, x, beta, y } => {
-            let mut y = y.clone();
-            let ft = if protected {
-                dmr::dgemv_ft(a.rows, a.cols, *alpha, &a.data, x, *beta,
-                              &mut y, inj_elem)
-            } else {
-                match variant {
-                    Impl::Naive => {
-                        naive::dgemv(a.rows, a.cols, *alpha, &a.data, x,
-                                     *beta, &mut y)
-                    }
-                    Impl::Blocked => {
-                        blocked::dgemv(a.rows, a.cols, *alpha, &a.data, x,
-                                       *beta, &mut y)
-                    }
-                    Impl::Tuned => {
-                        level2::dgemv(a.rows, a.cols, *alpha, &a.data, x,
-                                      *beta, &mut y)
-                    }
-                }
-                FtReport::none()
-            };
-            (BlasResult::Vector(y), ft)
-        }
-        BlasRequest::Dtrsv { a, b } => {
-            let mut x = b.clone();
-            let n = a.rows;
-            let ft = if protected {
-                // panel step 0 has no gemv update: clamp strikes to >= 1
-                let nsteps = n.div_ceil(profile.trsv_panel);
-                let inj = fault.map(|f| {
-                    let s = if nsteps > 1 { 1 + f.step % (nsteps - 1) } else { 0 };
-                    (s, f.delta)
-                });
-                dmr::dtrsv_ft(n, &a.data, &mut x, profile.trsv_panel, inj)
-            } else {
-                match variant {
-                    Impl::Naive => naive::dtrsv_lower(n, &a.data, &mut x),
-                    Impl::Blocked => blocked::dtrsv_lower(n, &a.data, &mut x),
-                    Impl::Tuned => {
-                        level2::dtrsv_lower(n, &a.data, &mut x, profile.trsv_panel)
-                    }
-                }
-                FtReport::none()
-            };
-            (BlasResult::Vector(x), ft)
-        }
-        BlasRequest::Dger { alpha, x, y, a } => {
-            let (m, n) = (a.rows, a.cols);
-            let mut ad = a.data.clone();
-            let ft = if protected {
-                let inj = inj_elem.map(|(i, d)| (i % (m * n), d));
-                dmr::dger_ft(m, n, *alpha, x, y, &mut ad, inj)
-            } else {
-                match variant {
-                    Impl::Naive => naive::dger(m, n, *alpha, x, y, &mut ad),
-                    _ => level2::dger(m, n, *alpha, x, y, &mut ad),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Matrix(Matrix::from_vec(m, n, ad)), ft)
-        }
-        BlasRequest::Dsymv { alpha, a, x, beta, y } => {
-            let n = a.rows;
-            let mut y = y.clone();
-            let ft = if protected {
-                let inj = inj_elem.map(|(i, d)| (i % n, d));
-                dmr::dsymv_ft(n, *alpha, &a.data, x, *beta, &mut y, inj)
-            } else {
-                match variant {
-                    Impl::Naive => {
-                        naive::dsymv_lower(n, *alpha, &a.data, x, *beta, &mut y)
-                    }
-                    _ => level2::dsymv_lower(n, *alpha, &a.data, x, *beta,
-                                             &mut y),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Vector(y), ft)
-        }
-        BlasRequest::Dtrmv { a, x } => {
-            let n = a.rows;
-            let mut x = x.clone();
-            let ft = if protected {
-                let inj = inj_elem.map(|(i, d)| (i % n, d));
-                dmr::dtrmv_ft(n, &a.data, &mut x, inj)
-            } else {
-                match variant {
-                    Impl::Naive => naive::dtrmv_lower(n, &a.data, &mut x),
-                    _ => level2::dtrmv_lower(n, &a.data, &mut x),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Vector(x), ft)
-        }
-        // -------------------------------------------------- Level 3
-        BlasRequest::Dgemm { alpha, a, b, beta, c } => {
-            let (m, n, k) = (a.rows, b.cols, a.cols);
-            let mut cd = c.data.clone();
-            let ft = if protected {
-                // Hybrid → native fused online ABFT (paper §5.2):
-                // checksums ride the packing routines + macro-kernel
-                // write-back. AbftUnfused → the §5.1 "ABFT on a
-                // third-party library" baseline for Fig. 8.
-                let nsteps = k.div_ceil(params.kc);
-                let inj: Vec<_> = fault
-                    .map(|f| (f.step % nsteps, f.i % m, f.j % n, f.delta))
-                    .into_iter()
-                    .collect();
-                if policy == FtPolicy::AbftUnfused {
-                    let ascaled: Vec<f64> =
-                        a.data.iter().map(|v| alpha * v).collect();
-                    for v in cd.iter_mut() {
-                        *v *= beta;
-                    }
-                    abft::dgemm_abft_unfused(
-                        m, n, k, params.kc, &ascaled, &b.data, &mut cd,
-                        |ap, bp, cc, mm, kk| {
-                            level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc,
-                                          params)
-                        },
-                        inj.first().copied(),
-                    )
-                } else {
-                    abft_fused::dgemm_abft_fused(
-                        m, n, k, *alpha, &a.data, &b.data, *beta, &mut cd,
-                        params, &inj)
-                }
-            } else {
-                match variant {
-                    Impl::Naive => {
-                        naive::dgemm(m, n, k, *alpha, &a.data, &b.data, *beta,
-                                     &mut cd)
-                    }
-                    _ => level3::dgemm(m, n, k, *alpha, &a.data, &b.data,
-                                       *beta, &mut cd, params),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
-        }
-        BlasRequest::Dsymm { alpha, a, b, beta, c } => {
-            let (m, n) = (a.rows, b.cols);
-            let mut cd = c.data.clone();
-            let ft = if protected {
-                let nsteps = m.div_ceil(params.kc);
-                let inj: Vec<_> = fault
-                    .map(|f| (f.step % nsteps, f.i % m, f.j % n, f.delta))
-                    .into_iter()
-                    .collect();
-                if policy == FtPolicy::AbftUnfused {
-                    // symmetrize (packing analog) then unfused-ABFT GEMM
-                    let mut full = vec![0.0; m * m];
-                    for i in 0..m {
-                        for j in 0..=i {
-                            let v = alpha * a.data[i * m + j];
-                            full[i * m + j] = v;
-                            full[j * m + i] = v;
-                        }
-                    }
-                    for v in cd.iter_mut() {
-                        *v *= beta;
-                    }
-                    abft::dgemm_abft_unfused(
-                        m, n, m, params.kc, &full, &b.data, &mut cd,
-                        |ap, bp, cc, mm, kk| {
-                            level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc,
-                                          params)
-                        },
-                        inj.first().copied(),
-                    )
-                } else {
-                    abft_fused::dsymm_abft_fused(
-                        m, n, *alpha, &a.data, &b.data, *beta, &mut cd,
-                        params, &inj)
-                }
-            } else {
-                match variant {
-                    Impl::Naive => {
-                        naive::dsymm_lower(m, n, *alpha, &a.data, &b.data,
-                                           *beta, &mut cd)
-                    }
-                    _ => level3::dsymm_lower(m, n, *alpha, &a.data, &b.data,
-                                             *beta, &mut cd, params),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
-        }
-        BlasRequest::Dtrmm { alpha, a, b } => {
-            let (m, n) = (a.rows, b.cols);
-            let mut bd = b.data.clone();
-            let ft = if protected {
-                let nsteps = m.div_ceil(params.kc);
-                let inj: Vec<_> = fault
-                    .map(|f| (f.step % nsteps, f.i % m, f.j % n, f.delta))
-                    .into_iter()
-                    .collect();
-                if policy == FtPolicy::AbftUnfused {
-                    let mut low = vec![0.0; m * m];
-                    for i in 0..m {
-                        for j in 0..=i {
-                            low[i * m + j] = alpha * a.data[i * m + j];
-                        }
-                    }
-                    let b0 = bd.clone();
-                    for v in bd.iter_mut() {
-                        *v = 0.0;
-                    }
-                    abft::dgemm_abft_unfused(
-                        m, n, m, params.kc, &low, &b0, &mut bd,
-                        |ap, bp, cc, mm, kk| {
-                            level3::dgemm(mm, n, kk, 1.0, ap, bp, 1.0, cc,
-                                          params)
-                        },
-                        inj.first().copied(),
-                    )
-                } else {
-                    abft_fused::dtrmm_abft_fused(
-                        m, n, *alpha, &a.data, &mut bd, params, &inj)
-                }
-            } else {
-                match variant {
-                    Impl::Naive => {
-                        naive::dtrmm_lower(m, n, *alpha, &a.data, &mut bd)
-                    }
-                    _ => level3::dtrmm_lower(m, n, *alpha, &a.data, &mut bd,
-                                             params),
-                }
-                FtReport::none()
-            };
-            (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), ft)
-        }
-        BlasRequest::Dtrsm { a, b } => {
-            let (m, n) = (a.rows, b.cols);
-            let mut bd = b.data.clone();
-            let mut ft = FtReport::none();
-            if protected {
-                // paper's FT-TRSM: ABFT on the panel GEMM updates, DMR on
-                // the diagonal solves
-                ft = dtrsm_ft_native(m, n, &a.data, &mut bd,
-                                     profile.trsm_panel, params, fault);
-            } else {
-                match variant {
-                    Impl::Naive => naive::dtrsm_llnn(m, n, &a.data, &mut bd),
-                    Impl::Blocked => blocked::dtrsm_llnn(m, n, &a.data, &mut bd),
-                    Impl::Tuned => {
-                        level3::dtrsm_llnn(m, n, &a.data, &mut bd,
-                                           profile.trsm_panel, params)
-                    }
-                }
-            }
-            (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), ft)
-        }
-        BlasRequest::Dsyrk { alpha, a, beta, c } => {
-            let (n, k) = (a.rows, a.cols);
-            let mut cd = c.data.clone();
-            match variant {
-                Impl::Naive => {
-                    naive::dsyrk_lower(n, k, *alpha, &a.data, *beta, &mut cd)
-                }
-                _ => level3::dsyrk_lower(n, k, *alpha, &a.data, *beta, &mut cd,
-                                         params),
-            }
-            (BlasResult::Matrix(Matrix::from_vec(n, n, cd)), FtReport::none())
-        }
+    let ctx = ExecCtx {
+        req,
+        profile,
+        policy,
+        faults,
+        threads: plan.threads,
     };
-
-    BlasResponse { result, ft, backend, exec_seconds: t0.elapsed().as_secs_f64() }
-}
-
-/// Native FT-TRSM: each panel's GEMM update is checksum-verified and
-/// corrected online; diagonal solves are DMR-duplicated.
-fn dtrsm_ft_native(m: usize, n: usize, a: &[f64], b: &mut [f64], panel: usize,
-                   params: &crate::blas::level3::GemmParams,
-                   fault: Option<Fault>) -> FtReport {
-    let mut report = FtReport::none();
-    let nsteps = m.div_ceil(panel);
-    // step 0 has no off-diagonal panel; clamp planned strikes to [1, nsteps)
-    let fault = fault.map(|mut f| {
-        if nsteps > 1 {
-            f.step = 1 + f.step % (nsteps - 1);
-        } else {
-            f.step = 0;
-        }
-        f.i %= panel; // panel-local strike position
-        f.j %= n;
-        f
-    });
-    let mut i = 0;
-    let mut step = 0;
-    while i < m {
-        let pb = panel.min(m - i);
-        if i > 0 {
-            let mut apanel = vec![0.0; pb * i];
-            for r in 0..pb {
-                apanel[r * i..(r + 1) * i]
-                    .copy_from_slice(&a[(i + r) * m..(i + r) * m + i]);
-            }
-            let (xdone, btail) = b.split_at_mut(i * n);
-            let bblk = &mut btail[..pb * n];
-            // B_block -= A_panel · X_done, in place through the fused-ABFT
-            // GEMM frame (paper §5.2): the checksum traffic shares the
-            // packing loads and the β=1 accumulation seeds the checksums
-            // from B_block itself — no staging buffer, no extra subtract
-            // pass over memory.
-            let usteps = i.div_ceil(params.kc);
-            let inj: Vec<_> = fault
-                .filter(|f| f.step == step)
-                // clamp the strike into this step's pb×n update (the last
-                // panel can be narrower than the configured width)
-                .map(|f| (f.step % usteps, f.i % pb, f.j % n, f.delta))
-                .into_iter()
-                .collect();
-            report.merge(abft_fused::dgemm_abft_fused(
-                pb, n, i, -1.0, &apanel, &xdone[..i * n], 1.0, bblk, params,
-                &inj));
-        }
-        // Checksum-protected diagonal solve (the ABFT identity for a
-        // triangular solve T·X = B: with w = Tᵀ·e, any computed X must
-        // satisfy wᵀ·X = eᵀ·B column-wise). Verification costs one
-        // O(pb·n) pass instead of duplicating the O(pb²·n/2) solve — the
-        // L3 analog of the paper's "cast the cost into checksums, not
-        // duplication" argument. A flagged column is re-solved twice on
-        // the cold path (third computation + consensus).
-        let binit: Vec<f64> = b[i * n..(i + pb) * n].to_vec();
-        // column sums of the incoming rhs (eᵀ·B) — fused with the copy
-        let mut sb = vec![0.0; n];
-        for r in 0..pb {
-            let row = &binit[r * n..(r + 1) * n];
-            for (s, v) in sb.iter_mut().zip(row) {
-                *s += v;
-            }
-        }
-        // w = Tᵀ·e: column sums of the pb×pb lower-triangular block
-        let mut w = vec![0.0; pb];
-        let mut max_t = 0.0f64;
-        for r in 0..pb {
-            let gi = i + r;
-            for (p, wv) in w.iter_mut().enumerate().take(r + 1) {
-                let t = a[gi * m + i + p];
-                *wv += t;
-                max_t = max_t.max(t.abs());
-            }
-        }
-        // the (single) vectorized forward solve
-        {
-            let (done, cur) = b.split_at_mut(i * n);
-            let _ = done;
-            let blk = &mut cur[..pb * n];
-            for r in 0..pb {
-                let gi = i + r;
-                let (solved, rest) = blk.split_at_mut(r * n);
-                let row = &mut rest[..n];
-                for p in 0..r {
-                    let aip = a[gi * m + i + p];
-                    let prow = &solved[p * n..(p + 1) * n];
-                    for (o, s) in row.iter_mut().zip(prow) {
-                        *o -= aip * s;
-                    }
-                }
-                let rd = 1.0 / a[gi * m + gi];
-                for o in row.iter_mut() {
-                    *o *= rd;
-                }
-            }
-        }
-        // single-panel matrices have no GEMM update to strike — the
-        // planned fault lands on the diagonal solve output instead
-        // (before verification reads it), exercising the checksum path
-        if let Some(f) = fault {
-            if f.step == step && i == 0 && m <= panel {
-                b[(f.i % pb) * n + f.j % n] += f.delta;
-            }
-        }
-        // verify wᵀ·X against eᵀ·B per column
-        let x = &b[i * n..(i + pb) * n];
-        let mut sx = vec![0.0; n];
-        let mut max_x = 0.0f64;
-        for r in 0..pb {
-            let wr = w[r];
-            let row = &x[r * n..(r + 1) * n];
-            for (s, v) in sx.iter_mut().zip(row) {
-                *s += wr * v;
-            }
-        }
-        for v in x {
-            max_x = max_x.max(v.abs());
-        }
-        let tol = crate::ft::abft::round_off_threshold(
-            max_t.max(1.0) * max_x.max(1.0), pb, n);
-        let bad: Vec<usize> = (0..n)
-            .filter(|&cx| (sx[cx] - sb[cx]).abs() > tol)
-            .collect();
-        if !bad.is_empty() {
-            // cold path: re-solve the flagged columns twice + consensus
-            for &cx in &bad {
-                let resolve = || -> Vec<f64> {
-                    let mut col = vec![0.0; pb];
-                    for r in 0..pb {
-                        let gi = i + r;
-                        let mut acc =
-                            std::hint::black_box(binit[r * n + cx]);
-                        for p in 0..r {
-                            acc -= a[gi * m + i + p] * col[p];
-                        }
-                        col[r] = acc / a[gi * m + gi];
-                    }
-                    col
-                };
-                let c1 = resolve();
-                let c2 = resolve();
-                if c1 != c2 {
-                    panic!("FT-BLAS DTRSM: diagonal re-solve disagrees — \
-                            unrecoverable");
-                }
-                for r in 0..pb {
-                    b[(i + r) * n + cx] = c1[r];
-                }
-            }
-            report.errors_detected += 1;
-            report.errors_corrected += 1;
-        }
-        i += pb;
-        step += 1;
+    let (result, ft) = (plan.kernel.execute)(&ctx);
+    BlasResponse {
+        result,
+        ft,
+        backend: Backend::for_variant(variant),
+        kernel: plan.kernel.name,
+        exec_seconds: t0.elapsed().as_secs_f64(),
     }
-    report
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::BlasResult;
     use crate::util::check::{check, ensure};
-    use crate::util::matrix::allclose;
+    use crate::util::matrix::{allclose, Matrix};
     use crate::util::rng::Rng;
 
     fn oracle(req: &BlasRequest) -> BlasResponse {
@@ -742,5 +237,64 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The response reports the registry kernel that actually ran.
+    #[test]
+    fn response_names_the_planned_kernel() {
+        let mut rng = Rng::new(0x7E57);
+        let n = 24;
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::random(n, n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        };
+        let profile = Profile::default();
+        let got = execute_native(&req, Impl::Tuned, &profile,
+                                 FtPolicy::None, None);
+        assert_eq!(got.kernel, "dgemm/tuned");
+        let got = execute_native(&req, Impl::Tuned, &profile,
+                                 FtPolicy::Hybrid, None);
+        assert_eq!(got.kernel, "dgemm/abft-fused");
+        let got = execute_native(&req, Impl::Tuned,
+                                 &profile.clone().with_threads(4),
+                                 FtPolicy::Hybrid, None);
+        assert_eq!(got.kernel, "dgemm/abft-fused-mt");
+        // Router::plan describes a request (and, since batches share a
+        // (routine, dim) key, a whole batch) without executing it
+        let router = Router::native_only(profile, Backend::NativeTuned);
+        let plan = router.plan(&req, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/abft-fused");
+        assert!(plan.describe().contains("dgemm/abft-fused"));
+    }
+
+    /// The weighted-checksum policy is reachable end to end and corrects
+    /// a planned strike on DGEMM.
+    #[test]
+    fn weighted_policy_end_to_end() {
+        let mut rng = Rng::new(0x3E1);
+        let n = 48;
+        let req = BlasRequest::Dgemm {
+            alpha: 0.9,
+            a: Matrix::random(n, n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+            beta: 0.4,
+            c: Matrix::random(n, n, &mut rng),
+        };
+        let want = oracle(&req);
+        let profile = Profile::default();
+        let clean = execute_native(&req, Impl::Tuned, &profile,
+                                   FtPolicy::AbftWeighted, None);
+        assert_eq!(clean.kernel, "dgemm/abft-weighted");
+        assert_eq!(clean.ft.errors_detected, 0);
+        assert!(close(&clean.result, &want.result, 1e-8));
+        let fault = Fault { step: 0, i: 17, j: 31, delta: 7.5e4 };
+        let got = execute_native(&req, Impl::Tuned, &profile,
+                                 FtPolicy::AbftWeighted, Some(fault));
+        assert!(got.ft.errors_detected >= 1);
+        assert_eq!(got.ft.errors_detected, got.ft.errors_corrected);
+        assert!(close(&got.result, &want.result, 1e-7));
     }
 }

@@ -1,6 +1,11 @@
 //! FT policy: which protection scheme the coordinator applies to a
 //! request. The paper's hybrid strategy (§1): DMR for memory-bound
 //! Level-1/2, fused online ABFT for compute-bound Level-3.
+//!
+//! A policy names the protection the *caller* wants; which kernel
+//! implements it for a given routine is resolved by the kernel registry
+//! ([`crate::coordinator::registry`]) via each descriptor's capability
+//! list.
 
 /// Protection scheme selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -14,14 +19,27 @@ pub enum FtPolicy {
     /// §5.1 "ABFT on a third-party library" — Fig. 8's slow baseline).
     /// Applies to L3 routines only; L1/L2 fall back to DMR.
     AbftUnfused,
+    /// Weighted (double) checksum ABFT — the Chen & Dongarra encoding
+    /// the paper's §2.1 cites, fused into the GEMM frame
+    /// (`ft::abft_weighted`). Applies to DGEMM; other L3 routines fall
+    /// back to the §5.2 fused scheme and L1/L2 to DMR.
+    AbftWeighted,
 }
 
 impl FtPolicy {
+    pub const ALL: [FtPolicy; 4] = [
+        FtPolicy::None,
+        FtPolicy::Hybrid,
+        FtPolicy::AbftUnfused,
+        FtPolicy::AbftWeighted,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             FtPolicy::None => "none",
             FtPolicy::Hybrid => "hybrid",
             FtPolicy::AbftUnfused => "abft-unfused",
+            FtPolicy::AbftWeighted => "abft-weighted",
         }
     }
 
@@ -30,6 +48,7 @@ impl FtPolicy {
             "none" | "off" => Some(FtPolicy::None),
             "hybrid" | "on" | "ft" => Some(FtPolicy::Hybrid),
             "abft-unfused" | "unfused" => Some(FtPolicy::AbftUnfused),
+            "abft-weighted" | "weighted" => Some(FtPolicy::AbftWeighted),
             _ => None,
         }
     }
@@ -45,10 +64,18 @@ mod tests {
 
     #[test]
     fn names_roundtrip() {
-        for p in [FtPolicy::None, FtPolicy::Hybrid, FtPolicy::AbftUnfused] {
+        for p in FtPolicy::ALL {
             assert_eq!(FtPolicy::by_name(p.name()), Some(p));
         }
         assert_eq!(FtPolicy::by_name("on"), Some(FtPolicy::Hybrid));
+        assert_eq!(FtPolicy::by_name("weighted"), Some(FtPolicy::AbftWeighted));
         assert!(FtPolicy::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn all_protect_except_none() {
+        for p in FtPolicy::ALL {
+            assert_eq!(p.protects(), p != FtPolicy::None);
+        }
     }
 }

@@ -14,9 +14,14 @@
 //! - [`runtime`] — the PJRT runtime: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them on
 //!   the CPU PJRT client. Python never runs on this path.
-//! - [`coordinator`] — typed BLAS requests, the router that dispatches to
-//!   native or PJRT backends under an FT policy, a batching threaded
-//!   server, metrics, and workload traces.
+//! - [`coordinator`] — typed BLAS requests and the serving shell: every
+//!   native kernel (serial, multithreaded, DMR, fused/unfused/weighted
+//!   ABFT) registers a descriptor in the kernel *registry*; a *planner*
+//!   resolves request × FT policy × profile into an execution plan
+//!   (kernel, thread grant, protection scheme); the router, batching
+//!   threaded server, metrics, and workload traces all consume that
+//!   plan. Dispatch is data — a descriptor table — not nested match
+//!   arms.
 //! - [`bench`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //! - [`apps`] — downstream consumers (blocked Cholesky) exercising the
@@ -32,5 +37,7 @@ pub mod runtime;
 pub mod util;
 
 pub use config::Profile;
+pub use coordinator::plan::{ExecutionPlan, Planner};
+pub use coordinator::registry::KernelRegistry;
 pub use coordinator::request::{BlasRequest, BlasResponse};
 pub use ft::policy::FtPolicy;

@@ -76,7 +76,9 @@ USAGE:
   ftblas artifacts [--profile skylake_sim|cascade_sim]
   ftblas verify    [--profile P] [--quick]
   ftblas run --routine dgemm --n 256 [--backend tuned|naive|blocked|pjrt]
-             [--ft none|hybrid|abft-unfused] [--inject] [--profile P]
+             [--variant naive|blocked|tuned] [--threads T]
+             [--ft none|hybrid|abft-unfused|abft-weighted] [--inject]
+             [--profile P]
   ftblas bench --exp table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
   ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
@@ -205,13 +207,20 @@ fn results_close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
     }
 }
 
-fn cmd_run(args: &Args, profile: Profile) -> Result<()> {
+fn cmd_run(args: &Args, mut profile: Profile) -> Result<()> {
     let routine = args.get("routine", "dgemm");
     let n = args.get_usize("n", 256)?;
     let policy = FtPolicy::by_name(&args.get("ft", "none"))
         .ok_or_else(|| anyhow!("bad --ft"))?;
-    let backend = Backend::by_name(&args.get("backend", "tuned"))
-        .ok_or_else(|| anyhow!("bad --backend"))?;
+    // --variant parses through Impl::by_name (symmetric with
+    // Backend::by_name / FtPolicy::by_name) and overrides --backend
+    let backend = match args.flags.get("variant") {
+        Some(v) => Backend::for_variant(
+            Impl::by_name(v).ok_or_else(|| anyhow!("bad --variant"))?),
+        None => Backend::by_name(&args.get("backend", "tuned"))
+            .ok_or_else(|| anyhow!("bad --backend"))?,
+    };
+    profile.threads = args.get_usize("threads", profile.threads)?.max(1);
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
 
     let req = match routine.as_str() {
@@ -289,9 +298,12 @@ fn cmd_run(args: &Args, profile: Profile) -> Result<()> {
         Router::native_only(profile, backend)
     };
 
+    if let Some(plan) = router.plan(&req, policy) {
+        println!("plan: {}", plan.describe());
+    }
     let resp = router.execute(&req, policy, fault)?;
-    println!("routine={} n={n} backend={} policy={} took={:.3}ms",
-             routine, resp.backend.name(), policy.name(),
+    println!("routine={} n={n} backend={} kernel={} policy={} took={:.3}ms",
+             routine, resp.backend.name(), resp.kernel, policy.name(),
              resp.exec_seconds * 1e3);
     println!("ft: detected={} corrected={}", resp.ft.errors_detected,
              resp.ft.errors_corrected);

@@ -1,0 +1,246 @@
+//! Property tests on the kernel-registry/planner subsystem:
+//!
+//! - every registry entry (routine × variant × policy × threads ∈ {1,4})
+//!   matches the naive oracle on random requests;
+//! - the planner never selects a kernel whose capability list excludes
+//!   the requested policy, and only grants threads to threaded kernels;
+//! - the MT fused-ABFT DGEMM is reachable from the serving path when the
+//!   profile grants threads, and merges band-local FtReports (one
+//!   injected fault per thread band, all corrected).
+//!
+//! Uses the repo's seeded check harness (`util::check`) — proptest is
+//! not vendored in this offline image; see DESIGN.md §9.
+
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::plan::Planner;
+use ftblas::coordinator::registry::{ExecCtx, KernelRegistry};
+use ftblas::coordinator::request::{BlasRequest, BlasResult};
+use ftblas::coordinator::router::execute_native;
+use ftblas::ft::injector::Fault;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::check::{check, ensure};
+use ftblas::util::matrix::{allclose, Matrix};
+use ftblas::util::rng::Rng;
+
+fn results_match(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
+    match (a, b) {
+        (BlasResult::Scalar(x), BlasResult::Scalar(y)) => {
+            (x - y).abs() <= tol * (1.0 + y.abs())
+        }
+        (BlasResult::Vector(x), BlasResult::Vector(y)) => allclose(x, y, tol, tol),
+        (BlasResult::Matrix(x), BlasResult::Matrix(y)) => {
+            allclose(&x.data, &y.data, tol, tol)
+        }
+        _ => false,
+    }
+}
+
+/// Build a random request for one routine at principal dimension n.
+fn request_for(routine: &str, n: usize, rng: &mut Rng) -> BlasRequest {
+    match routine {
+        "dscal" => BlasRequest::Dscal { alpha: 1.3, x: rng.normal_vec(n * 8) },
+        "daxpy" => BlasRequest::Daxpy {
+            alpha: -0.7, x: rng.normal_vec(n * 8), y: rng.normal_vec(n * 8),
+        },
+        "ddot" => BlasRequest::Ddot {
+            x: rng.normal_vec(n * 8), y: rng.normal_vec(n * 8),
+        },
+        "dnrm2" => BlasRequest::Dnrm2 { x: rng.normal_vec(n * 8) },
+        "dasum" => BlasRequest::Dasum { x: rng.normal_vec(n * 8) },
+        "drot" => BlasRequest::Drot {
+            x: rng.normal_vec(n * 8), y: rng.normal_vec(n * 8),
+            c: 0.6, s: 0.8,
+        },
+        "drotm" => BlasRequest::Drotm {
+            x: rng.normal_vec(n * 8), y: rng.normal_vec(n * 8),
+            param: [-1.0, 0.9, -0.2, 0.3, 1.1],
+        },
+        "idamax" => BlasRequest::Idamax { x: rng.normal_vec(n * 8) },
+        "dgemv" => BlasRequest::Dgemv {
+            alpha: 1.1, a: Matrix::random(n, n, rng), x: rng.normal_vec(n),
+            beta: 0.4, y: rng.normal_vec(n),
+        },
+        "dtrsv" => BlasRequest::Dtrsv {
+            a: Matrix::random_lower_triangular(n, rng), b: rng.normal_vec(n),
+        },
+        "dger" => BlasRequest::Dger {
+            alpha: 0.9, x: rng.normal_vec(n), y: rng.normal_vec(n),
+            a: Matrix::random(n, n, rng),
+        },
+        "dsymv" => BlasRequest::Dsymv {
+            alpha: 1.0, a: Matrix::random_symmetric(n, rng),
+            x: rng.normal_vec(n), beta: 0.2, y: rng.normal_vec(n),
+        },
+        "dtrmv" => BlasRequest::Dtrmv {
+            a: Matrix::random_lower_triangular(n, rng), x: rng.normal_vec(n),
+        },
+        "dgemm" => BlasRequest::Dgemm {
+            alpha: 0.9, a: Matrix::random(n, n, rng),
+            b: Matrix::random(n, n, rng), beta: 0.5,
+            c: Matrix::random(n, n, rng),
+        },
+        "dsymm" => BlasRequest::Dsymm {
+            alpha: 1.2, a: Matrix::random(n, n, rng),
+            b: Matrix::random(n, n, rng), beta: 0.4,
+            c: Matrix::random(n, n, rng),
+        },
+        "dtrmm" => BlasRequest::Dtrmm {
+            alpha: 0.7, a: Matrix::random_lower_triangular(n, rng),
+            b: Matrix::random(n, n, rng),
+        },
+        "dtrsm" => BlasRequest::Dtrsm {
+            a: Matrix::random_lower_triangular(n, rng),
+            b: Matrix::random(n, n, rng),
+        },
+        "dsyrk" => BlasRequest::Dsyrk {
+            alpha: 1.0, a: Matrix::random(n, n, rng), beta: 0.2,
+            c: Matrix::random(n, n, rng),
+        },
+        other => panic!("no request builder for routine `{other}`"),
+    }
+}
+
+/// Every registry entry, under every policy it claims and with thread
+/// grants of 1 and 4, agrees with the naive oracle on clean runs.
+#[test]
+fn every_entry_matches_oracle_under_claimed_policies() {
+    let reg = KernelRegistry::global();
+    check("registry-oracle-matrix", 4, |g| {
+        let n = 16 + 8 * g.rng.below(4);
+        let profile = Profile::default();
+        for entry in reg.entries() {
+            let req = request_for(entry.routine, n, &mut g.rng);
+            let want = execute_native(&req, Impl::Naive, &profile,
+                                      FtPolicy::None, None);
+            for &policy in entry.policies {
+                for threads in [1usize, 4] {
+                    let ctx = ExecCtx {
+                        req: &req,
+                        profile: &profile,
+                        policy,
+                        faults: &[],
+                        threads,
+                    };
+                    let (result, ft) = (entry.execute)(&ctx);
+                    ensure(ft.errors_detected == 0,
+                           format!("{}: clean run flagged under {}",
+                                   entry.name, policy.name()))?;
+                    ensure(results_match(&result, &want.result, 1e-7),
+                           format!("{}: diverged from oracle under {} (t={})",
+                                   entry.name, policy.name(), threads))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The planner never selects a kernel whose capabilities exclude the
+/// requested policy, always plans something, and only grants threads to
+/// threaded kernels above their MR floor.
+#[test]
+fn planner_respects_capabilities() {
+    let reg = KernelRegistry::global();
+    check("planner-capabilities", 30, |g| {
+        let routines = reg.routines();
+        let routine = routines[g.rng.below(routines.len())];
+        let n = 4 + g.rng.below(128);
+        let threads = 1 + g.rng.below(8);
+        let variant = Impl::ALL[g.rng.below(3)];
+        let policy = FtPolicy::ALL[g.rng.below(4)];
+        let profile = Profile::default().with_threads(threads);
+        let planner = Planner::new(&profile);
+        let plan = planner.plan_dims(routine, n, variant, policy);
+        let plan = plan.ok_or_else(|| {
+            format!("planner came up empty for {routine}/{} under {}",
+                    variant.name(), policy.name())
+        })?;
+        ensure(plan.kernel.routine == routine, "planned foreign routine")?;
+        ensure(plan.kernel.supports(policy),
+               format!("{} does not serve {}", plan.kernel.name,
+                       policy.name()))?;
+        if plan.kernel.threaded {
+            ensure(threads > 1, "threaded kernel on a serial profile")?;
+            ensure(plan.threads == threads, "thread grant mismatch")?;
+            ensure(plan.kernel.admits_dim(n, profile.gemm.mr),
+                   "threaded kernel below its MR floor")?;
+        } else {
+            ensure(plan.threads == 1, "serial kernel granted threads")?;
+        }
+        Ok(())
+    });
+}
+
+/// Serving-path acceptance: a DGEMM request on a profile with
+/// `threads > 1` and a dimension above the MR-aligned floor executes
+/// via `dgemm_abft_fused_mt` under the ABFT (hybrid) policy, and a
+/// single injected fault is detected, corrected, and reported.
+#[test]
+fn mt_fused_gemm_serves_threaded_profiles() {
+    let mut rng = Rng::new(0x4D54);
+    let n = 96;
+    let profile = Profile::default().with_threads(4);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0,
+        a: Matrix::random(n, n, &mut rng),
+        b: Matrix::random(n, n, &mut rng),
+        beta: 0.0,
+        c: Matrix::zeros(n, n),
+    };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None,
+                              None);
+    let fault = Fault { step: 0, i: n / 2, j: n / 3, delta: 6e4 };
+    let resp = execute_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid,
+                              Some(fault));
+    assert_eq!(resp.kernel, "dgemm/abft-fused-mt",
+               "threaded profile must route to the MT fused kernel");
+    assert!(resp.ft.errors_detected >= 1, "injected fault undetected");
+    assert_eq!(resp.ft.errors_detected, resp.ft.errors_corrected);
+    assert!(results_match(&resp.result, &want.result, 1e-7));
+}
+
+/// One fault per thread band through the registry entry: every band's
+/// report is merged into the response (the band-local FT argument).
+#[test]
+fn mt_fused_gemm_merges_band_reports() {
+    let mut rng = Rng::new(0xBA2D);
+    let (n, threads) = (128usize, 4usize);
+    let profile = Profile::default().with_threads(threads);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0,
+        a: Matrix::random(n, n, &mut rng),
+        b: Matrix::random(n, n, &mut rng),
+        beta: 0.0,
+        c: Matrix::zeros(n, n),
+    };
+    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None,
+                              None);
+    // one strike in each thread band's row range (bands are contiguous
+    // MR-aligned row slabs of ~n/threads rows)
+    let band = n / threads;
+    let faults: Vec<Fault> = (0..threads)
+        .map(|t| Fault {
+            step: 0,
+            i: t * band + band / 2,
+            j: (7 * t + 3) % n,
+            delta: 5e4,
+        })
+        .collect();
+    let entry = KernelRegistry::global()
+        .find("dgemm/abft-fused-mt")
+        .expect("MT fused kernel registered");
+    let ctx = ExecCtx {
+        req: &req,
+        profile: &profile,
+        policy: FtPolicy::Hybrid,
+        faults: &faults,
+        threads,
+    };
+    let (result, ft) = (entry.execute)(&ctx);
+    assert_eq!(ft.errors_corrected, threads as u64,
+               "merged report must count one correction per band: {ft:?}");
+    assert_eq!(ft.errors_detected, ft.errors_corrected);
+    assert!(results_match(&result, &want.result, 1e-7),
+            "band corrections must restore the oracle result");
+}
