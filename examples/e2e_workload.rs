@@ -32,6 +32,9 @@ fn main() -> Result<()> {
         requests,
         vec_len: 65536,
         mat_dim: 256,
+        // a second DGEMM shape: both resolve to the same kernel, so the
+        // server's planned-kernel batching merges them into one group
+        mat_dim_alt: Some(128),
         rate: 500.0,
         ..Default::default()
     };
@@ -104,11 +107,26 @@ fn main() -> Result<()> {
                      m.exec_by_routine[routine].mean * 1e3);
             tput.insert(routine.as_str(), s.mean);
         }
+        println!("\nper-kernel serving ledger:");
+        ftblas::bench::harness::print_ledger(&m);
         assert_eq!(mismatched, 0, "corrupted results escaped the server!");
         if policy.protects() {
             assert_eq!(m.errors_detected, m.errors_injected,
                        "every injected fault must be detected");
         }
+        if !use_pjrt {
+            // every native request was planned at admission; after the
+            // first occurrence of each (routine, dim, policy) key the
+            // cache serves hits
+            assert_eq!(m.plan_cache_hits + m.plan_cache_misses,
+                       requests as u64,
+                       "every request must resolve through the plan cache");
+            assert!(m.plan_cache_hits > m.plan_cache_misses,
+                    "a mixed trace re-uses shapes: hits should dominate");
+        }
+        assert!(m.max_in_flight_threads <= m.thread_budget,
+                "ledger oversubscribed: {} > {}", m.max_in_flight_threads,
+                m.thread_budget);
     }
     println!("\nE2E PASS: all responses bit-verified against the oracle under \
               both policies");

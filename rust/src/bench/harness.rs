@@ -4,6 +4,7 @@ use anyhow::Result;
 
 use crate::config::Profile;
 use crate::coordinator::executor::PjrtExecutor;
+use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::pjrt_backend::PjrtBackend;
 use crate::coordinator::registry::{ExecCtx, KernelRegistry};
 use crate::coordinator::request::BlasRequest;
@@ -171,6 +172,40 @@ pub fn registry_variant_rows(ctx: &BenchCtx, req: &BlasRequest, flops: f64)
         });
     }
     rows
+}
+
+/// Print a server metrics snapshot as the per-kernel serving ledger:
+/// one row per executed kernel (exec / e2e / queue-wait latencies, FT
+/// counters) plus the scheduling counters (plan-cache hit rate, thread
+/// budget, deferrals). Shared by `ftblas serve` and the e2e example.
+pub fn print_ledger(snap: &MetricsSnapshot) {
+    println!("{:<26} {:>6} {:>10} {:>10} {:>10} {:>5} {:>5}",
+             "kernel", "n", "exec-mean", "e2e-p99", "queue-mean", "det",
+             "corr");
+    let mut kernels: Vec<_> = snap.kernels.iter().collect();
+    kernels.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, k) in kernels {
+        println!("{:<26} {:>6} {:>8.2}ms {:>8.2}ms {:>8.2}ms {:>5} {:>5}",
+                 name, k.completed, k.exec.mean * 1e3, k.e2e.p99 * 1e3,
+                 k.queue.mean * 1e3, k.errors_detected, k.errors_corrected);
+    }
+    let overall = snap.overall_e2e();
+    println!("overall: {} completed, {} failed | e2e p50={:.2}ms p99={:.2}ms",
+             snap.completed, snap.failed, overall.p50 * 1e3,
+             overall.p99 * 1e3);
+    let resolutions = snap.plan_cache_hits + snap.plan_cache_misses;
+    let hit_pct = if resolutions > 0 {
+        100.0 * snap.plan_cache_hits as f64 / resolutions as f64
+    } else {
+        0.0
+    };
+    println!("plan cache: {} hits / {} misses ({hit_pct:.1}% hit)",
+             snap.plan_cache_hits, snap.plan_cache_misses);
+    println!("thread budget: {} (max in-flight {}, {} deferrals)",
+             snap.thread_budget, snap.max_in_flight_threads, snap.deferrals);
+    println!("errors: injected={} detected={} corrected={}",
+             snap.errors_injected, snap.errors_detected,
+             snap.errors_corrected);
 }
 
 /// Percent overhead of the FT run relative to the baseline, in the

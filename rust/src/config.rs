@@ -20,6 +20,15 @@ pub struct Profile {
     /// (`blas::parallel`). 1 = serial; above 1 the planner selects the
     /// MT kernels for requests clearing the MR-aligned size threshold.
     pub threads: usize,
+    /// Max requests the server drains per batch window.
+    pub max_batch: usize,
+    /// Total thread capacity the server's budget ledger schedules
+    /// against. `None` defaults to `threads × workers` (every worker
+    /// can hold a full MT grant); set it lower to force the scheduler
+    /// to defer MT batches instead of oversubscribing. The server
+    /// clamps it to at least `threads` (one full MT grant), so the
+    /// in-flight watermark can never exceed the effective budget.
+    pub thread_budget: Option<usize>,
     /// Artifact directory relative to the repo root.
     pub artifact_dir: &'static str,
 }
@@ -36,6 +45,8 @@ impl Profile {
             trsm_panel: 64,
             workers: 4,
             threads: 1,
+            max_batch: 16,
+            thread_budget: None,
             artifact_dir: "artifacts",
         }
     }
@@ -50,6 +61,10 @@ impl Profile {
             trsm_panel: 64,
             workers: 8,
             threads: 4,
+            // wider machine: a larger batch window amortizes dispatch
+            // across the MT kernels' bigger problems
+            max_batch: 32,
+            thread_budget: None,
             artifact_dir: "artifacts/cascade_sim",
         }
     }
@@ -57,6 +72,19 @@ impl Profile {
     /// Same profile with a different kernel-level thread count.
     pub fn with_threads(mut self, threads: usize) -> Profile {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Same profile with a different batch window.
+    pub fn with_max_batch(mut self, max_batch: usize) -> Profile {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Same profile with an explicit thread budget for the server's
+    /// scheduling ledger.
+    pub fn with_thread_budget(mut self, budget: usize) -> Profile {
+        self.thread_budget = Some(budget.max(1));
         self
     }
 
@@ -95,6 +123,15 @@ mod tests {
         let b = Profile::cascade_sim();
         assert_ne!(a.gemm.nc, b.gemm.nc);
         assert_ne!(a.artifact_dir, b.artifact_dir);
+        assert_ne!(a.max_batch, b.max_batch);
+    }
+
+    #[test]
+    fn scheduling_knobs_clamp() {
+        let p = Profile::skylake_sim().with_max_batch(0).with_thread_budget(0);
+        assert_eq!(p.max_batch, 1);
+        assert_eq!(p.thread_budget, Some(1));
+        assert!(Profile::cascade_sim().thread_budget.is_none());
     }
 
     #[test]

@@ -1,68 +1,137 @@
-//! Batching queue: groups pending requests that share a (routine, shape)
-//! key so a worker drains a whole group in one pass (amortizing dispatch
+//! Batching queue: groups pending requests that share a scheduling key
+//! so a worker drains a whole group in one pass (amortizing dispatch
 //! and, on the PJRT path, keeping one hot executable in the instruction
 //! cache — the serving analog of the paper's kernel locality argument).
 //!
+//! The key is opaque to the batcher. The server keys by **planned
+//! kernel id** (admission-time plans from the
+//! [`crate::coordinator::plan::PlanCache`]), so two shapes that resolve
+//! to the same registered kernel share a batch window; unplanned (PJRT)
+//! requests fall back to a `(routine, dim)` key.
+//!
 //! FIFO fairness is preserved across groups: groups are served in the
-//! arrival order of their oldest member.
+//! arrival order of their oldest member. Internally each key owns a
+//! sub-queue and the groups are indexed by their head sequence number,
+//! so a drain costs O(batch + log groups) instead of rebuilding the
+//! whole queue.
+//!
+//! [`Batcher::next_batch_where`] makes draining cost-aware: the caller
+//! passes an admission predicate (the server's thread-budget check) and
+//! the oldest *admissible* group is drained while deferred groups keep
+//! their place in line.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::hash::Hash;
 
 /// A queued item: an opaque payload plus its batch key.
 #[derive(Debug)]
-pub struct Pending<T> {
-    pub key: (&'static str, usize),
+pub struct Pending<K, T> {
+    pub key: K,
     pub seq: u64,
     pub item: T,
+}
+
+/// Result of a cost-aware drain: the batch (empty when no group passed
+/// the admission predicate) plus how many older groups were deferred —
+/// skipped by the predicate — before the drained group was found.
+#[derive(Debug)]
+pub struct Drain<K, T> {
+    pub batch: Vec<Pending<K, T>>,
+    pub deferred: usize,
 }
 
 /// The batcher. Not thread-safe by itself; the server wraps it in a
 /// Mutex+Condvar.
 #[derive(Debug)]
-pub struct Batcher<T> {
-    queue: VecDeque<Pending<T>>,
+pub struct Batcher<K, T> {
+    /// Per-key sub-queues; a key present here always has ≥ 1 item.
+    queues: HashMap<K, VecDeque<Pending<K, T>>>,
+    /// Non-empty groups indexed by their oldest member's seq — the
+    /// cross-group FIFO. Seqs are globally unique, so this is a total
+    /// order.
+    order: BTreeMap<u64, K>,
+    len: usize,
     next_seq: u64,
     /// max items drained per batch
     pub max_batch: usize,
 }
 
-impl<T> Batcher<T> {
-    pub fn new(max_batch: usize) -> Batcher<T> {
-        Batcher { queue: VecDeque::new(), next_seq: 0, max_batch: max_batch.max(1) }
+impl<K: Copy + Eq + Hash, T> Batcher<K, T> {
+    pub fn new(max_batch: usize) -> Batcher<K, T> {
+        Batcher {
+            queues: HashMap::new(),
+            order: BTreeMap::new(),
+            len: 0,
+            next_seq: 0,
+            max_batch: max_batch.max(1),
+        }
     }
 
-    pub fn push(&mut self, key: (&'static str, usize), item: T) {
+    pub fn push(&mut self, key: K, item: T) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.queue.push_back(Pending { key, seq, item });
+        let q = self.queues.entry(key).or_default();
+        if q.is_empty() {
+            self.order.insert(seq, key);
+        }
+        q.push_back(Pending { key, seq, item });
+        self.len += 1;
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
+    }
+
+    /// Number of distinct pending groups.
+    pub fn groups(&self) -> usize {
+        self.order.len()
     }
 
     /// Drain the next batch: the oldest request's group, up to max_batch
     /// items, preserving arrival order within the group.
-    pub fn next_batch(&mut self) -> Vec<Pending<T>> {
-        let Some(front) = self.queue.front() else {
-            return Vec::new();
+    pub fn next_batch(&mut self) -> Vec<Pending<K, T>> {
+        self.next_batch_where(|_| true).batch
+    }
+
+    /// Drain the oldest group whose key passes `admit`, up to max_batch
+    /// items. Groups that fail the predicate stay queued (and keep
+    /// their FIFO position) — their count is reported as `deferred` so
+    /// the server's metrics ledger can record scheduling pressure.
+    pub fn next_batch_where<F: FnMut(&K) -> bool>(&mut self, mut admit: F)
+                                                  -> Drain<K, T> {
+        let mut deferred = 0;
+        let mut chosen = None;
+        for (&seq, key) in self.order.iter() {
+            if admit(key) {
+                chosen = Some((seq, *key));
+                break;
+            }
+            deferred += 1;
+        }
+        let Some((seq, key)) = chosen else {
+            return Drain { batch: Vec::new(), deferred };
         };
-        let key = front.key;
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::new();
-        while let Some(p) = self.queue.pop_front() {
-            if p.key == key && batch.len() < self.max_batch {
-                batch.push(p);
-            } else {
-                rest.push_back(p);
+        self.order.remove(&seq);
+        let q = self.queues.get_mut(&key).expect("ordered group lost its queue");
+        let take = self.max_batch.min(q.len());
+        let batch: Vec<Pending<K, T>> = q.drain(..take).collect();
+        self.len -= batch.len();
+        match q.front() {
+            Some(head) => {
+                // partial drain: the group re-queues at its new head's
+                // arrival position
+                let head_seq = head.seq;
+                self.order.insert(head_seq, key);
+            }
+            None => {
+                self.queues.remove(&key);
             }
         }
-        self.queue = rest;
-        batch
+        Drain { batch, deferred }
     }
 }
 
@@ -76,6 +145,7 @@ mod tests {
         b.push(("dgemm", 256), 1);
         b.push(("dscal", 1024), 2);
         b.push(("dgemm", 256), 3);
+        assert_eq!(b.groups(), 2);
         let batch = b.next_batch();
         assert_eq!(batch.len(), 2);
         assert_eq!(batch[0].item, 1);
@@ -98,7 +168,7 @@ mod tests {
     }
 
     #[test]
-    fn different_shapes_do_not_batch() {
+    fn different_keys_do_not_batch() {
         let mut b = Batcher::new(8);
         b.push(("dgemm", 128), 0);
         b.push(("dgemm", 256), 1);
@@ -120,5 +190,45 @@ mod tests {
         .take(3)
         .collect();
         assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn partial_drain_requeues_at_new_head_position() {
+        // A(0), A(1), A(2), B(3) with max_batch=2: after draining
+        // [0, 1], A's remainder (head seq 2) is still older than B.
+        let mut b = Batcher::new(2);
+        b.push(("a", 1), 0);
+        b.push(("a", 1), 1);
+        b.push(("a", 1), 2);
+        b.push(("b", 1), 3);
+        assert_eq!(b.next_batch().iter().map(|p| p.item).collect::<Vec<_>>(),
+                   vec![0, 1]);
+        assert_eq!(b.next_batch()[0].item, 2, "A's tail outranks B");
+        assert_eq!(b.next_batch()[0].item, 3);
+    }
+
+    #[test]
+    fn deferred_groups_keep_their_place() {
+        // "mt" is inadmissible: serial groups flow past it, and it is
+        // drained first once admitted again.
+        let mut b = Batcher::new(8);
+        b.push(("mt", 4), 0);
+        b.push(("s1", 1), 1);
+        b.push(("s2", 1), 2);
+        let d = b.next_batch_where(|k| k.0 != "mt");
+        assert_eq!(d.deferred, 1);
+        assert_eq!(d.batch[0].item, 1);
+        let d = b.next_batch_where(|k| k.0 != "mt");
+        assert_eq!(d.deferred, 1);
+        assert_eq!(d.batch[0].item, 2);
+        // nothing admissible: empty drain, deferral reported
+        let d = b.next_batch_where(|k| k.0 != "mt");
+        assert!(d.batch.is_empty());
+        assert_eq!(d.deferred, 1);
+        assert_eq!(b.len(), 1);
+        let d = b.next_batch_where(|_| true);
+        assert_eq!(d.batch[0].item, 0);
+        assert_eq!(d.deferred, 0);
+        assert!(b.is_empty());
     }
 }

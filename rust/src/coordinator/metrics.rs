@@ -1,5 +1,16 @@
-//! Serving metrics: request/latency counters, per-routine breakdowns,
-//! FT counters (errors injected / detected / corrected).
+//! Serving metrics: a per-kernel completion ledger.
+//!
+//! Every completion is recorded against the **executed kernel's registry
+//! name** (from [`crate::coordinator::request::BlasResponse::kernel`]),
+//! carrying kernel-exec, end-to-end, and queue-wait latencies plus FT
+//! counters. Scheduling counters — plan-cache hits/misses, thread-budget
+//! deferrals, the configured budget and its in-flight high-watermark —
+//! live beside them, so one snapshot answers both "what ran" and "how
+//! the admission/scheduling pipeline behaved".
+//!
+//! [`MetricsSnapshot`] still exposes the per-routine views
+//! (`exec_by_routine`, `e2e_by_routine`) existing callers consume; they
+//! are exact rollups of the per-kernel ledgers sharing a routine.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -12,6 +23,22 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// Raw per-kernel ledger: retained samples + counters.
+#[derive(Default)]
+struct KernelLedger {
+    routine: &'static str,
+    completed: u64,
+    errors_injected: u64,
+    errors_detected: u64,
+    errors_corrected: u64,
+    /// kernel-exec latencies (seconds)
+    exec: Vec<f64>,
+    /// end-to-end latencies (queue + exec, seconds)
+    e2e: Vec<f64>,
+    /// queue-wait latencies (admission → execution start, seconds)
+    queue: Vec<f64>,
+}
+
 #[derive(Default)]
 struct Inner {
     completed: u64,
@@ -19,10 +46,25 @@ struct Inner {
     errors_injected: u64,
     errors_detected: u64,
     errors_corrected: u64,
-    /// per-routine kernel-exec latencies (seconds)
-    exec: HashMap<String, Vec<f64>>,
-    /// per-routine end-to-end latencies (queue + exec, seconds)
-    e2e: HashMap<String, Vec<f64>>,
+    deferrals: u64,
+    thread_budget: u64,
+    max_in_flight_threads: u64,
+    /// ledgers keyed by executed kernel registry name
+    kernels: HashMap<&'static str, KernelLedger>,
+}
+
+/// Per-kernel summary in a snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct KernelStats {
+    /// Routine the kernel serves (rollup key for the per-routine views).
+    pub routine: String,
+    pub completed: u64,
+    pub errors_injected: u64,
+    pub errors_detected: u64,
+    pub errors_corrected: u64,
+    pub exec: Summary,
+    pub e2e: Summary,
+    pub queue: Summary,
 }
 
 /// A snapshot for reporting.
@@ -33,8 +75,26 @@ pub struct MetricsSnapshot {
     pub errors_injected: u64,
     pub errors_detected: u64,
     pub errors_corrected: u64,
+    /// Admission-time plan-cache counters (filled by the server).
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    /// Times a drained batch bypassed an older group whose thread grant
+    /// did not fit the remaining budget (counted per bypassed group on
+    /// successful drains only, so idle re-polling does not inflate it).
+    pub deferrals: u64,
+    /// Configured thread budget (0 when no server is involved).
+    pub thread_budget: u64,
+    /// High-watermark of in-flight thread grants.
+    pub max_in_flight_threads: u64,
+    /// Per-kernel ledger, keyed by executed kernel registry name.
+    pub kernels: HashMap<String, KernelStats>,
+    /// Per-routine rollups (exact: aggregated from the retained
+    /// per-kernel samples) for callers that don't care which kernel ran.
     pub exec_by_routine: HashMap<String, Summary>,
     pub e2e_by_routine: HashMap<String, Summary>,
+    /// Exact all-kernel end-to-end summary (computed from every retained
+    /// sample at snapshot time, not from per-group means).
+    pub e2e_overall: Summary,
 }
 
 impl Metrics {
@@ -42,54 +102,109 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_completion(&self, routine: &str, exec_s: f64, e2e_s: f64,
-                             detected: u64, corrected: u64, injected: u64) {
+    /// Record one completion against the kernel that executed it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_completion(&self, kernel: &'static str,
+                             routine: &'static str, exec_s: f64, e2e_s: f64,
+                             queue_s: f64, detected: u64, corrected: u64,
+                             injected: u64) {
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
         m.errors_detected += detected;
         m.errors_corrected += corrected;
         m.errors_injected += injected;
-        m.exec.entry(routine.to_string()).or_default().push(exec_s);
-        m.e2e.entry(routine.to_string()).or_default().push(e2e_s);
+        let k = m.kernels.entry(kernel).or_default();
+        k.routine = routine;
+        k.completed += 1;
+        k.errors_detected += detected;
+        k.errors_corrected += corrected;
+        k.errors_injected += injected;
+        k.exec.push(exec_s);
+        k.e2e.push(e2e_s);
+        k.queue.push(queue_s);
     }
 
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failed += 1;
     }
 
+    /// Count groups a drained batch bypassed on budget grounds.
+    pub fn record_deferrals(&self, n: u64) {
+        if n > 0 {
+            self.inner.lock().unwrap().deferrals += n;
+        }
+    }
+
+    /// Record the ledger level after an admission (keeps the
+    /// high-watermark the oversubscription test asserts on).
+    pub fn record_in_flight(&self, in_flight_threads: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.max_in_flight_threads = m.max_in_flight_threads.max(in_flight_threads);
+    }
+
+    pub fn set_thread_budget(&self, budget: u64) {
+        self.inner.lock().unwrap().thread_budget = budget;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
+        let mut kernels = HashMap::new();
+        let mut exec_by_routine: HashMap<String, Vec<f64>> = HashMap::new();
+        let mut e2e_by_routine: HashMap<String, Vec<f64>> = HashMap::new();
+        let mut e2e_all = Vec::new();
+        for (name, k) in &m.kernels {
+            kernels.insert(name.to_string(), KernelStats {
+                routine: k.routine.to_string(),
+                completed: k.completed,
+                errors_injected: k.errors_injected,
+                errors_detected: k.errors_detected,
+                errors_corrected: k.errors_corrected,
+                exec: Summary::from_samples(&k.exec),
+                e2e: Summary::from_samples(&k.e2e),
+                queue: Summary::from_samples(&k.queue),
+            });
+            exec_by_routine
+                .entry(k.routine.to_string())
+                .or_default()
+                .extend_from_slice(&k.exec);
+            e2e_by_routine
+                .entry(k.routine.to_string())
+                .or_default()
+                .extend_from_slice(&k.e2e);
+            e2e_all.extend_from_slice(&k.e2e);
+        }
         MetricsSnapshot {
             completed: m.completed,
             failed: m.failed,
             errors_injected: m.errors_injected,
             errors_detected: m.errors_detected,
             errors_corrected: m.errors_corrected,
-            exec_by_routine: m
-                .exec
-                .iter()
-                .map(|(k, v)| (k.clone(), Summary::from_samples(v)))
+            plan_cache_hits: 0,
+            plan_cache_misses: 0,
+            deferrals: m.deferrals,
+            thread_budget: m.thread_budget,
+            max_in_flight_threads: m.max_in_flight_threads,
+            kernels,
+            exec_by_routine: exec_by_routine
+                .into_iter()
+                .map(|(k, v)| (k, Summary::from_samples(&v)))
                 .collect(),
-            e2e_by_routine: m
-                .e2e
-                .iter()
-                .map(|(k, v)| (k.clone(), Summary::from_samples(v)))
+            e2e_by_routine: e2e_by_routine
+                .into_iter()
+                .map(|(k, v)| (k, Summary::from_samples(&v)))
                 .collect(),
+            e2e_overall: Summary::from_samples(&e2e_all),
         }
     }
 }
 
 impl MetricsSnapshot {
-    /// All-routine end-to-end latency summary.
+    /// All-kernel end-to-end latency summary — exact (computed from
+    /// every retained sample at snapshot time; the old implementation
+    /// averaged per-routine means, biasing the mean toward sparse
+    /// routines and fabricating percentiles).
     pub fn overall_e2e(&self) -> Summary {
-        let mut all = Vec::new();
-        for s in self.e2e_by_routine.values() {
-            // approximate: reconstruct from means isn't possible; keep the
-            // per-routine path as the primary interface. This method is
-            // only used when a single routine is in play.
-            all.push(s.mean);
-        }
-        Summary::from_samples(&all)
+        self.e2e_overall.clone()
     }
 }
 
@@ -98,18 +213,55 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counters_accumulate() {
+    fn counters_accumulate_per_kernel() {
         let m = Metrics::new();
-        m.record_completion("dgemm", 0.1, 0.2, 1, 1, 1);
-        m.record_completion("dgemm", 0.3, 0.4, 0, 0, 0);
+        m.record_completion("dgemm/abft-fused", "dgemm", 0.1, 0.2, 0.05, 1, 1, 1);
+        m.record_completion("dgemm/tuned", "dgemm", 0.3, 0.4, 0.0, 0, 0, 0);
         m.record_failure();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
         assert_eq!(s.failed, 1);
         assert_eq!(s.errors_detected, 1);
         assert_eq!(s.errors_corrected, 1);
+        // per-kernel ledger entries
+        let k = &s.kernels["dgemm/abft-fused"];
+        assert_eq!(k.routine, "dgemm");
+        assert_eq!(k.completed, 1);
+        assert_eq!(k.errors_detected, 1);
+        assert!((k.queue.mean - 0.05).abs() < 1e-12);
+        // routine rollup merges both kernels
         let g = &s.exec_by_routine["dgemm"];
         assert_eq!(g.n, 2);
         assert!((g.mean - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overall_e2e_is_an_exact_weighted_rollup() {
+        let m = Metrics::new();
+        // 3 fast dscal completions vs 1 slow dgemm: a mean-of-means
+        // would report (0.1 + 0.9) / 2 = 0.5; the exact mean is 0.3.
+        for _ in 0..3 {
+            m.record_completion("dscal/tuned", "dscal", 0.1, 0.1, 0.0, 0, 0, 0);
+        }
+        m.record_completion("dgemm/tuned", "dgemm", 0.9, 0.9, 0.0, 0, 0, 0);
+        let s = m.snapshot().overall_e2e();
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 0.3).abs() < 1e-12, "mean {} not exact", s.mean);
+        assert_eq!(s.max, 0.9);
+        assert_eq!(s.min, 0.1);
+    }
+
+    #[test]
+    fn scheduling_counters_track_budget_pressure() {
+        let m = Metrics::new();
+        m.set_thread_budget(8);
+        m.record_in_flight(5);
+        m.record_in_flight(3);
+        m.record_deferrals(2);
+        m.record_deferrals(0);
+        let s = m.snapshot();
+        assert_eq!(s.thread_budget, 8);
+        assert_eq!(s.max_in_flight_threads, 5);
+        assert_eq!(s.deferrals, 2);
     }
 }

@@ -4,27 +4,43 @@
 //!
 //! Topology (the paper's contribution is the kernels; the coordinator is
 //! the serving shell around them — DESIGN.md §3). Dispatch is data, not
-//! control flow: every native kernel registers a descriptor in the
-//! [`registry`] and the [`plan::Planner`] resolves each request into an
-//! execution plan (kernel, thread grant, protection scheme) that the
-//! router, batcher, and server all consume:
+//! control flow: every native kernel registers a descriptor (with a
+//! stable [`registry::KernelId`]) in the [`registry`], and the request
+//! path is organized as an **admission → schedule → execute** pipeline
+//! around the resolved [`plan::ExecutionPlan`]:
 //!
 //! ```text
-//!   clients ──> server queue ──> batcher ──> router ──┬─> PJRT executor thread
-//!                   │      (groups by routine×shape)  │
-//!                   │                                 └─> planner ──> kernel registry
-//!                   │                                        │    (descriptor table:
-//!                   │                                        │     serial / MT / DMR /
-//!                   │                                        │     ABFT kernels per
-//!                   │                                        │     routine × policy)
-//!                   │                                        └─> ExecutionPlan
-//!                   │                                            (kernel, threads,
-//!                   │                                             protection scheme)
-//!                   └─< responses (+ FtReport, executed-kernel name, metrics)
+//!   clients ──> submit = ADMISSION ───> batcher = SCHEDULE ──> workers = EXECUTE
+//!               │  plan cache             │  sub-queues keyed      │
+//!               │  (routine×dim×          │  by planned kernel     ├─> execute_planned
+//!               │   policy×backend        │  id; thread-budget     │   (pre-resolved
+//!               │   → ExecutionPlan,      │  ledger defers MT      │    native kernel,
+//!               │   memoized, planner     │  batches that would    │    no lookup)
+//!               │   runs once per key)    │  oversubscribe,        └─> PJRT executor
+//!               │                         │  serial flows past         (unplanned jobs)
+//!               └─< responses (+ FtReport, executed-kernel name,
+//!                   per-kernel metrics ledger: exec/e2e/queue-wait,
+//!                   plan-cache hits/misses, deferrals, FT counters)
 //! ```
 //!
+//! - **Admission** ([`server::ServerHandle::submit`]): the request is
+//!   resolved once through the [`plan::PlanCache`]; its batch key is the
+//!   planned kernel's id, so shapes that run the same registered kernel
+//!   share a batch window.
+//! - **Schedule** ([`batcher`]): per-key sub-queues with groups ordered
+//!   by oldest member — a drain is O(batch), and the cost-aware drain
+//!   lets the server's thread-budget ledger defer an MT batch (its
+//!   whole thread grant is debited while in flight) without blocking
+//!   serial traffic behind it.
+//! - **Execute** ([`router::Router::execute_planned`]): workers run the
+//!   pre-resolved plan; the per-request planner lookup survives only in
+//!   the [`router::Router::execute`] compatibility shim used by the
+//!   CLI, benches, and examples.
+//!
 //! The PJRT engine is not `Send`, so exactly one executor thread owns it
-//! and serves artifact calls over channels ([`executor`]).
+//! and serves artifact calls over channels ([`executor`]); PJRT jobs are
+//! admitted unplanned (the executor plans per-artifact) and batch by
+//! `(routine, dim)`.
 
 pub mod batcher;
 pub mod executor;
@@ -37,6 +53,7 @@ pub mod router;
 pub mod server;
 pub mod trace;
 
-pub use plan::{ExecutionPlan, Planner};
-pub use registry::{KernelDescriptor, KernelRegistry};
+pub use metrics::{KernelStats, MetricsSnapshot};
+pub use plan::{ExecutionPlan, PlanCache, Planner};
+pub use registry::{KernelDescriptor, KernelId, KernelRegistry};
 pub use request::{BlasRequest, BlasResponse, Backend};

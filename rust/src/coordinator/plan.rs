@@ -7,17 +7,28 @@
 //! thread grant, and returns an [`ExecutionPlan`] that the router (and
 //! through it the server's worker pool and the bench harnesses) execute
 //! uniformly.
+//!
+//! The [`PlanCache`] memoizes resolutions by `(routine, dim, policy,
+//! backend)` so the server plans each distinct shape **once at admission
+//! time**: the hot serving path never touches the planner again, and the
+//! cache's hit/miss counters flow into the metrics ledger.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::blas::Impl;
 use crate::config::Profile;
-use crate::coordinator::registry::{KernelDescriptor, KernelRegistry};
-use crate::coordinator::request::BlasRequest;
+use crate::coordinator::registry::{KernelDescriptor, KernelId, KernelRegistry};
+use crate::coordinator::request::{Backend, BlasRequest};
 use crate::ft::policy::FtPolicy;
 
 /// A resolved execution: which kernel, how many threads, which policy.
 #[derive(Clone, Copy)]
 pub struct ExecutionPlan {
     pub kernel: &'static KernelDescriptor,
+    /// Stable registry id of `kernel` — the batcher's scheduling key.
+    pub kernel_id: KernelId,
     /// Threads granted to the kernel (1 for serial kernels).
     pub threads: usize,
     pub policy: FtPolicy,
@@ -27,6 +38,12 @@ impl ExecutionPlan {
     pub fn describe(&self) -> String {
         format!("{} (threads={}, policy={})", self.kernel.name, self.threads,
                 self.policy.name())
+    }
+
+    /// Pool threads an in-flight batch of this plan occupies — what the
+    /// server's thread-budget ledger debits while the batch executes.
+    pub fn thread_cost(&self) -> usize {
+        self.kernel.thread_cost(self.threads)
     }
 }
 
@@ -60,8 +77,9 @@ impl<'p> Planner<'p> {
         self.plan_dims(req.routine(), req.dim(), variant, policy)
     }
 
-    /// Shape-only planning (the batcher groups by `(routine, dim)`, so
-    /// a whole batch shares one plan).
+    /// Shape-only planning — the admission path's entry: the plan cache
+    /// memoizes these resolutions, and since the server batches by the
+    /// resulting kernel id a whole batch shares one plan.
     pub fn plan_dims(&self, routine: &str, dim: usize, variant: Impl,
                      policy: FtPolicy) -> Option<ExecutionPlan> {
         let mr = self.profile.gemm.mr;
@@ -72,11 +90,18 @@ impl<'p> Planner<'p> {
             .into_iter()
             .filter(|k| k.supports(policy))
             .collect();
+        let resolved = |k: &'static KernelDescriptor, threads: usize| {
+            let kernel_id = self
+                .registry
+                .id_of(k)
+                .expect("planner selected a descriptor outside the registry");
+            ExecutionPlan { kernel: k, kernel_id, threads, policy }
+        };
         if threads > 1 {
             if let Some(k) = supported.iter().copied().find(|k| {
                 k.threaded && k.variant == variant && k.admits_dim(dim, mr)
             }) {
-                return Some(ExecutionPlan { kernel: k, threads, policy });
+                return Some(resolved(k, threads));
             }
         }
         if let Some(k) = supported
@@ -84,13 +109,77 @@ impl<'p> Planner<'p> {
             .copied()
             .find(|k| !k.threaded && k.variant == variant)
         {
-            return Some(ExecutionPlan { kernel: k, threads: 1, policy });
+            return Some(resolved(k, 1));
         }
         supported
             .iter()
             .copied()
             .find(|k| !k.threaded)
-            .map(|k| ExecutionPlan { kernel: k, threads: 1, policy })
+            .map(|k| resolved(k, 1))
+    }
+}
+
+/// Memoized admission-time planning.
+///
+/// Keyed by `(routine, dim, policy, backend)`: everything the
+/// [`Planner`] reads from a request, for one fixed profile. The server
+/// resolves each request against this cache when it is *submitted*, so
+/// workers only ever execute pre-resolved plans — the planner's
+/// registry scan runs once per distinct shape, not once per request.
+///
+/// Backends without a native kernel variant (PJRT) are not planned
+/// here; `resolve` returns `None` for them without touching the
+/// counters (the PJRT executor plans per-artifact instead).
+pub struct PlanCache {
+    profile: Profile,
+    plans: Mutex<HashMap<PlanKey, Option<ExecutionPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+type PlanKey = (&'static str, usize, FtPolicy, Backend);
+
+impl PlanCache {
+    pub fn new(profile: Profile) -> PlanCache {
+        PlanCache {
+            profile,
+            plans: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    /// Resolve a `(routine, dim, policy, backend)` key, memoizing the
+    /// planner's answer. A cached entry is returned verbatim — the
+    /// proptests assert it always equals a fresh planner resolution.
+    pub fn resolve(&self, routine: &'static str, dim: usize,
+                   policy: FtPolicy, backend: Backend)
+                   -> Option<ExecutionPlan> {
+        let variant = backend.variant()?;
+        let key = (routine, dim, policy, backend);
+        let mut plans = self.plans.lock().unwrap();
+        match plans.get(&key) {
+            Some(plan) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                *plan
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let plan = Planner::new(&self.profile)
+                    .plan_dims(routine, dim, variant, policy);
+                plans.insert(key, plan);
+                plan
+            }
+        }
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 }
 
@@ -160,6 +249,46 @@ mod tests {
         let req = dgemm_req(48);
         let plan = planner.plan(&req, Impl::Naive, FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.scheme, Scheme::AbftFused);
+    }
+
+    #[test]
+    fn plan_cache_memoizes_and_counts() {
+        let cache = PlanCache::new(Profile::skylake_sim().with_threads(4));
+        let first = cache
+            .resolve("dgemm", 64, FtPolicy::Hybrid, Backend::NativeTuned)
+            .unwrap();
+        assert_eq!(first.kernel.name, "dgemm/abft-fused-mt");
+        assert_eq!(cache.stats(), (0, 1));
+        let again = cache
+            .resolve("dgemm", 64, FtPolicy::Hybrid, Backend::NativeTuned)
+            .unwrap();
+        assert_eq!(again.kernel_id, first.kernel_id);
+        assert_eq!(again.threads, first.threads);
+        assert_eq!(cache.stats(), (1, 1));
+        // a different shape is a distinct key (below the MT floor here)
+        let small = cache
+            .resolve("dgemm", 4, FtPolicy::Hybrid, Backend::NativeTuned)
+            .unwrap();
+        assert_eq!(small.kernel.name, "dgemm/abft-fused");
+        assert_eq!(cache.stats(), (1, 2));
+        // PJRT has no native variant: unplanned and uncounted
+        assert!(cache
+            .resolve("dgemm", 64, FtPolicy::Hybrid, Backend::Pjrt)
+            .is_none());
+        assert_eq!(cache.stats(), (1, 2));
+    }
+
+    #[test]
+    fn plans_carry_stable_ids_and_costs() {
+        let profile = Profile::skylake_sim().with_threads(4);
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(64);
+        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::None).unwrap();
+        let reg = crate::coordinator::registry::KernelRegistry::global();
+        assert!(std::ptr::eq(reg.by_id(plan.kernel_id).unwrap(), plan.kernel));
+        assert_eq!(plan.thread_cost(), 4, "MT batch debits its whole grant");
+        let serial = planner.plan(&req, Impl::Naive, FtPolicy::None).unwrap();
+        assert_eq!(serial.thread_cost(), 1);
     }
 
     #[test]

@@ -66,6 +66,15 @@ pub enum Scheme {
     FtTrsm,
 }
 
+/// Stable identity of a registered kernel: its index in the global
+/// registry table. Registration order is append-only (new kernels go at
+/// the end of their routine's block or the table's end), so an id is
+/// stable for the life of a process and cheap to hash — the batcher
+/// keys its sub-queues by it and the plan cache stores it in every
+/// [`crate::coordinator::plan::ExecutionPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelId(pub u16);
+
 /// A registered kernel.
 pub struct KernelDescriptor {
     /// Registry name, `"<routine>/<flavor>"` (e.g. `"dgemm/abft-fused-mt"`).
@@ -99,6 +108,14 @@ impl KernelDescriptor {
     pub fn admits_dim(&self, dim: usize, mr: usize) -> bool {
         dim >= self.min_mr_multiple * mr
     }
+
+    /// How many pool threads a batch of this kernel occupies when
+    /// granted `grant` threads — the server's thread-budget ledger
+    /// debits this amount per in-flight batch. Serial kernels cost the
+    /// worker thread itself; threaded kernels cost their whole grant.
+    pub fn thread_cost(&self, grant: usize) -> usize {
+        if self.threaded { grant.max(1) } else { 1 }
+    }
 }
 
 /// The registry: a static table of every native kernel.
@@ -125,6 +142,21 @@ impl KernelRegistry {
     /// Look up an entry by registry name.
     pub fn find(&self, name: &str) -> Option<&'static KernelDescriptor> {
         self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The stable id of a descriptor from this table (its index in
+    /// registration order). Returns `None` for a descriptor that does
+    /// not live in the table.
+    pub fn id_of(&self, k: &'static KernelDescriptor) -> Option<KernelId> {
+        self.entries
+            .iter()
+            .position(|e| std::ptr::eq(e, k))
+            .map(|i| KernelId(i as u16))
+    }
+
+    /// Resolve a stable id back to its descriptor.
+    pub fn by_id(&self, id: KernelId) -> Option<&'static KernelDescriptor> {
+        self.entries.get(id.0 as usize)
     }
 
     /// The serial unprotected variant ladder for one routine
@@ -1359,6 +1391,25 @@ mod tests {
                     "{}: name not prefixed by routine {}", e.name, e.routine);
             assert_eq!(reg.find(e.name).unwrap().name, e.name);
         }
+    }
+
+    /// Stable ids round-trip through the table and thread costs match
+    /// the descriptor's threading class.
+    #[test]
+    fn ids_round_trip_and_costs_follow_threading() {
+        let reg = KernelRegistry::global();
+        for (i, e) in reg.entries().iter().enumerate() {
+            let id = reg.id_of(e).expect("table entry must have an id");
+            assert_eq!(id, KernelId(i as u16));
+            assert!(std::ptr::eq(reg.by_id(id).unwrap(), e));
+            if e.threaded {
+                assert_eq!(e.thread_cost(4), 4, "{}", e.name);
+            } else {
+                assert_eq!(e.thread_cost(4), 1, "{}", e.name);
+            }
+            assert_eq!(e.thread_cost(0), 1, "{}: zero grant clamps", e.name);
+        }
+        assert!(reg.by_id(KernelId(reg.entries().len() as u16)).is_none());
     }
 
     /// Threaded kernels are L3-only, carry an MR floor, and have a

@@ -189,7 +189,11 @@ impl BlasRequest {
         }
     }
 
-    /// Batching key: same routine + same shape can share a batch window.
+    /// Shape-level batching key: same routine + same shape can share a
+    /// batch window. The server batches *planned* jobs by resolved
+    /// kernel id instead (strictly coarser: shapes with the same plan
+    /// merge); this key remains the fallback for unplanned (PJRT) jobs,
+    /// whose shape-specialized artifacts want exact-shape groups.
     pub fn batch_key(&self) -> (&'static str, usize) {
         (self.routine(), self.dim())
     }

@@ -68,7 +68,21 @@ impl Router {
         }
     }
 
+    /// Execute a **pre-resolved** plan — the server's hot path. Workers
+    /// receive admission-time plans from the
+    /// [`crate::coordinator::plan::PlanCache`] and come here directly:
+    /// no planner lookup, no registry scan, just the planned kernel.
+    pub fn execute_planned(&self, plan: &ExecutionPlan, req: &BlasRequest,
+                           fault: Option<Fault>) -> Result<BlasResponse> {
+        Ok(execute_plan(req, plan, &self.profile, fault))
+    }
+
     /// Execute a request under a policy with an optional planned fault.
+    ///
+    /// Compatibility shim: plans per request before executing. The
+    /// serving pipeline resolves plans at admission instead
+    /// ([`Router::execute_planned`]); this entry remains for the CLI,
+    /// examples, and benches that execute outside a server.
     pub fn execute(&self, req: &BlasRequest, policy: FtPolicy,
                    fault: Option<Fault>) -> Result<BlasResponse> {
         match self.resolve(req, policy) {
@@ -87,21 +101,14 @@ impl Router {
     }
 }
 
-/// Execute on the native kernels: plan against the registry, then run
-/// the planned kernel. Protection follows the hybrid strategy encoded
-/// in the descriptors' capability lists — DMR for Level-1/2, online
-/// ABFT (kc-paneled, fused into the tuned GEMM frame) for Level-3 —
-/// and the planned fault is translated to each scheme's injection
-/// point inside the registered kernel.
-pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
-                      policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+/// Run a resolved plan's kernel. Protection follows the hybrid strategy
+/// encoded in the descriptors' capability lists — DMR for Level-1/2,
+/// online ABFT (kc-paneled, fused into the tuned GEMM frame) for
+/// Level-3 — and the planned fault is translated to each scheme's
+/// injection point inside the registered kernel.
+pub fn execute_plan(req: &BlasRequest, plan: &ExecutionPlan,
+                    profile: &Profile, fault: Option<Fault>) -> BlasResponse {
     let t0 = std::time::Instant::now();
-    let plan = Planner::new(profile)
-        .plan(req, variant, policy)
-        .unwrap_or_else(|| {
-            panic!("no registered kernel serves {}/{} under {}",
-                   req.routine(), variant.name(), policy.name())
-        });
     let faults: &[Fault] = match &fault {
         Some(f) => std::slice::from_ref(f),
         None => &[],
@@ -109,7 +116,7 @@ pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
     let ctx = ExecCtx {
         req,
         profile,
-        policy,
+        policy: plan.policy,
         faults,
         threads: plan.threads,
     };
@@ -117,10 +124,31 @@ pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
     BlasResponse {
         result,
         ft,
-        backend: Backend::for_variant(variant),
+        backend: Backend::for_variant(plan.kernel.variant),
         kernel: plan.kernel.name,
         exec_seconds: t0.elapsed().as_secs_f64(),
     }
+}
+
+/// Plan-then-execute on the native kernels: resolve the request against
+/// the registry and run the planned kernel. The per-request planner
+/// lookup survives here as the compatibility entry for benches,
+/// examples, and oracle comparisons; the serving path plans once at
+/// admission and calls [`execute_plan`] through
+/// [`Router::execute_planned`].
+pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+                      policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, variant, policy)
+        .unwrap_or_else(|| {
+            panic!("no registered kernel serves {}/{} under {}",
+                   req.routine(), variant.name(), policy.name())
+        });
+    let mut resp = execute_plan(req, &plan, profile, fault);
+    // report the caller's requested variant family (protected kernels
+    // register under the tuned substrate, as before)
+    resp.backend = Backend::for_variant(variant);
+    resp
 }
 
 #[cfg(test)]

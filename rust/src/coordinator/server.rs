@@ -3,6 +3,24 @@
 //! batching queue through the router; an optional injector arms planned
 //! faults (the error-injection experiments of paper §6.3 run through
 //! exactly this path).
+//!
+//! The pipeline is plan-aware end to end:
+//!
+//! 1. **Admission** — `submit` resolves the request's [`ExecutionPlan`]
+//!    through the shared [`PlanCache`] (memoized by routine × dim ×
+//!    policy × backend) and enqueues the job keyed by **planned kernel
+//!    id**, so requests that run the same registered kernel batch
+//!    together regardless of shape.
+//! 2. **Scheduling** — workers drain the oldest *admissible* group: a
+//!    thread-budget ledger debits each in-flight batch's thread grant
+//!    against the configured budget, deferring MT-kernel batches that
+//!    would oversubscribe it while serial batches flow past.
+//! 3. **Execution** — workers run the pre-resolved plan via
+//!    [`Router::execute_planned`]; no planner lookup happens on the hot
+//!    path. Unplanned (PJRT) jobs fall back to `Router::execute`.
+//!
+//! Completions land in the per-kernel metrics ledger together with the
+//! plan-cache and deferral counters.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -12,26 +30,105 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, Pending};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::{BlasRequest, BlasResponse};
+use crate::coordinator::plan::{ExecutionPlan, PlanCache};
+use crate::coordinator::registry::KernelId;
+use crate::coordinator::request::{Backend, BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
 use crate::ft::injector::{Injector, InjectorConfig};
 use crate::ft::policy::FtPolicy;
 
+/// Scheduling key of a queued job. Planned (native) jobs group by the
+/// kernel the admission-time planner chose, and carry the plan's thread
+/// grant so the budget check needs no job inspection; unplanned (PJRT)
+/// jobs keep the `(routine, dim)` grouping that matches their
+/// shape-specialized artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum BatchKey {
+    Planned { kernel: KernelId, threads: u16 },
+    Direct { routine: &'static str, dim: usize },
+}
+
+impl BatchKey {
+    /// Pool threads a batch with this key occupies while in flight.
+    fn thread_cost(&self) -> usize {
+        match self {
+            BatchKey::Planned { threads, .. } => (*threads).max(1) as usize,
+            BatchKey::Direct { .. } => 1,
+        }
+    }
+}
+
 struct Job {
     req: BlasRequest,
+    /// Admission-time plan (None on the PJRT path).
+    plan: Option<ExecutionPlan>,
     enqueued: Instant,
     reply: Sender<Result<BlasResponse>>,
 }
 
+/// A drained batch of jobs.
+type Batch = Vec<Pending<BatchKey, Job>>;
+
+/// Scheduler state guarded by one mutex: the queue plus the
+/// thread-budget ledger (checked and debited atomically).
+struct Sched {
+    batcher: Batcher<BatchKey, Job>,
+    /// Sum of thread costs of in-flight batches.
+    in_flight_threads: usize,
+}
+
+impl Sched {
+    /// Drain the oldest batch whose thread cost fits the remaining
+    /// budget, debiting the ledger. An empty ledger admits any batch
+    /// (a grant larger than the whole budget runs alone rather than
+    /// starving). Returns the batch and its debited cost.
+    ///
+    /// Deferrals are recorded only when a younger batch actually
+    /// bypassed an over-budget group — a real scheduling decision. A
+    /// fruitless pass (nothing admissible, worker goes back to waiting)
+    /// is not counted, so the metric reflects contention rather than
+    /// how often idle workers re-poll.
+    fn pop_admissible(&mut self, budget: usize, metrics: &Metrics)
+                      -> Option<(Batch, usize)> {
+        let in_flight = self.in_flight_threads;
+        let drain = self.batcher.next_batch_where(|k| {
+            in_flight == 0 || in_flight + k.thread_cost() <= budget
+        });
+        if !drain.batch.is_empty() {
+            metrics.record_deferrals(drain.deferred as u64);
+        }
+        let first = drain.batch.first()?;
+        let cost = first.key.thread_cost();
+        self.in_flight_threads += cost;
+        metrics.record_in_flight(self.in_flight_threads as u64);
+        Some((drain.batch, cost))
+    }
+}
+
 struct Shared {
-    batcher: Mutex<Batcher<Job>>,
+    sched: Mutex<Sched>,
     cv: Condvar,
     shutdown: AtomicBool,
     metrics: Metrics,
+    plans: PlanCache,
+    router: Arc<Router>,
+    policy: FtPolicy,
+    thread_budget: usize,
     injector: Mutex<Injector>,
     steps: AtomicU64,
+}
+
+impl Shared {
+    /// Snapshot with the plan-cache counters folded in.
+    fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        let (hits, misses) = self.plans.stats();
+        snap.plan_cache_hits = hits;
+        snap.plan_cache_misses = misses;
+        snap
+    }
 }
 
 /// Handle for submitting requests; cheap to clone.
@@ -42,12 +139,33 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Submit a request; returns a receiver for the response.
+    ///
+    /// Admission does the planning: the request is resolved through the
+    /// memoized plan cache and queued under its planned kernel id, so
+    /// the worker that drains it executes the plan without another
+    /// lookup.
     pub fn submit(&self, req: BlasRequest) -> Receiver<Result<BlasResponse>> {
         let (reply, rx) = channel();
-        let key = req.batch_key();
+        let policy = self.shared.policy;
+        let backend = self.shared.router.resolve(&req, policy);
+        let plan = self
+            .shared
+            .plans
+            .resolve(req.routine(), req.dim(), policy, backend);
+        let key = match &plan {
+            Some(p) => BatchKey::Planned {
+                kernel: p.kernel_id,
+                threads: p.thread_cost() as u16,
+            },
+            None => {
+                let (routine, dim) = req.batch_key();
+                BatchKey::Direct { routine, dim }
+            }
+        };
         {
-            let mut b = self.shared.batcher.lock().unwrap();
-            b.push(key, Job { req, enqueued: Instant::now(), reply });
+            let mut s = self.shared.sched.lock().unwrap();
+            s.batcher
+                .push(key, Job { req, plan, enqueued: Instant::now(), reply });
         }
         self.shared.cv.notify_one();
         rx
@@ -61,7 +179,7 @@ impl ServerHandle {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared.snapshot()
     }
 }
 
@@ -74,6 +192,13 @@ pub struct Server {
 impl Server {
     /// Start with `workers` native worker threads. The router (and its
     /// PJRT handle, which is Send) is shared read-only.
+    ///
+    /// The batch window comes from `Profile.max_batch` and the thread
+    /// budget from `Profile.thread_budget` (defaulting to
+    /// `Profile.threads × workers` — the capacity the profile's machine
+    /// dedicates to this pool). The budget is clamped to at least one
+    /// full MT grant (`Profile.threads`), so in-flight grants never
+    /// exceed it.
     pub fn start(router: Router, policy: FtPolicy, workers: usize,
                  injection: Option<InjectorConfig>,
                  expected_requests: usize) -> Server {
@@ -85,22 +210,38 @@ impl Server {
             }
             None => Injector::empty(),
         };
+        let workers = workers.max(1);
+        let profile = router.profile.clone();
+        // clamp to one full MT grant: a planned grant cannot shrink, so
+        // a smaller budget could never admit an MT batch — this keeps
+        // `max_in_flight_threads <= thread_budget` an unconditional
+        // invariant instead of one the empty-ledger escape can break
+        let thread_budget = profile
+            .thread_budget
+            .unwrap_or_else(|| profile.threads.max(1) * workers)
+            .max(profile.threads.max(1));
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(16)),
+            sched: Mutex::new(Sched {
+                batcher: Batcher::new(profile.max_batch),
+                in_flight_threads: 0,
+            }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             metrics: Metrics::new(),
+            plans: PlanCache::new(profile),
+            router: Arc::new(router),
+            policy,
+            thread_budget,
             injector: Mutex::new(injector),
             steps: AtomicU64::new(0),
         });
-        let router = Arc::new(router);
-        let workers = (0..workers.max(1))
+        shared.metrics.set_thread_budget(thread_budget as u64);
+        let workers = (0..workers)
             .map(|w| {
                 let shared = shared.clone();
-                let router = router.clone();
                 std::thread::Builder::new()
                     .name(format!("ftblas-worker-{w}"))
-                    .spawn(move || worker_loop(shared, router, policy))
+                    .spawn(move || worker_loop(shared))
                     .expect("spawn worker")
             })
             .collect();
@@ -112,7 +253,7 @@ impl Server {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared.snapshot()
     }
 
     /// Stop accepting work and join the workers (pending jobs finish).
@@ -122,7 +263,7 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.shared.metrics.snapshot()
+        self.shared.snapshot()
     }
 }
 
@@ -136,26 +277,57 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, router: Arc<Router>, policy: FtPolicy) {
+/// Credits a batch's thread cost back to the ledger on drop — also on
+/// panic, so a kernel that unwinds mid-batch cannot leak its debit and
+/// permanently defer MT batches (or hang shutdown).
+struct CostCredit<'a> {
+    shared: &'a Shared,
+    cost: usize,
+}
+
+impl Drop for CostCredit<'_> {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.sched.lock().unwrap();
+            s.in_flight_threads -= self.cost;
+        }
+        // an admission slot opened: every waiter re-checks the budget
+        self.shared.cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let router = shared.router.clone();
+    let policy = shared.policy;
     loop {
-        let batch = {
-            let mut b = shared.batcher.lock().unwrap();
+        let (batch, cost) = {
+            let mut s = shared.sched.lock().unwrap();
             loop {
-                if !b.is_empty() {
-                    break b.next_batch();
+                if !s.batcher.is_empty() {
+                    if let Some(got) =
+                        s.pop_admissible(shared.thread_budget, &shared.metrics)
+                    {
+                        break got;
+                    }
+                    // nothing admissible right now: wait for an
+                    // in-flight batch to credit the ledger back
                 }
-                if shared.shutdown.load(Ordering::SeqCst) {
+                if shared.shutdown.load(Ordering::SeqCst) && s.batcher.is_empty()
+                {
                     return;
                 }
                 let (guard, _) = shared
                     .cv
-                    .wait_timeout(b, std::time::Duration::from_millis(50))
+                    .wait_timeout(s, std::time::Duration::from_millis(50))
                     .unwrap();
-                b = guard;
+                s = guard;
             }
         };
+        let _credit = CostCredit { shared: shared.as_ref(), cost };
         for pending in batch {
             let job = pending.item;
+            let started = Instant::now();
+            let queue_s = started.duration_since(job.enqueued).as_secs_f64();
             let step = shared.steps.fetch_add(1, Ordering::SeqCst) as usize;
             let fault = {
                 let mut inj = shared.injector.lock().unwrap();
@@ -169,12 +341,21 @@ fn worker_loop(shared: Arc<Shared>, router: Arc<Router>, policy: FtPolicy) {
                 })
             };
             let injected = fault.is_some() as u64;
-            match router.execute(&job.req, policy, fault) {
+            // the hot path: pre-resolved plans execute directly; only
+            // unplanned (PJRT) jobs go through the router's per-request
+            // resolution shim
+            let result = match &job.plan {
+                Some(plan) => router.execute_planned(plan, &job.req, fault),
+                None => router.execute(&job.req, policy, fault),
+            };
+            match result {
                 Ok(resp) => {
                     shared.metrics.record_completion(
+                        resp.kernel,
                         job.req.routine(),
                         resp.exec_seconds,
                         job.enqueued.elapsed().as_secs_f64(),
+                        queue_s,
                         resp.ft.errors_detected,
                         resp.ft.errors_corrected,
                         injected,
@@ -187,6 +368,7 @@ fn worker_loop(shared: Arc<Shared>, router: Arc<Router>, policy: FtPolicy) {
                 }
             }
         }
+        // _credit drops here: ledger credited back, waiters notified
     }
 }
 
@@ -194,7 +376,7 @@ fn worker_loop(shared: Arc<Shared>, router: Arc<Router>, policy: FtPolicy) {
 mod tests {
     use super::*;
     use crate::config::Profile;
-    use crate::coordinator::request::Backend;
+    use crate::coordinator::plan::PlanCache;
     use crate::util::matrix::Matrix;
     use crate::util::rng::Rng;
 
@@ -225,6 +407,14 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.completed, 24);
         assert_eq!(m.failed, 0);
+        // admission planned every request: one miss per distinct
+        // (routine, dim) key, hits for the rest
+        assert_eq!(m.plan_cache_misses, 2);
+        assert_eq!(m.plan_cache_hits, 22);
+        // per-kernel ledger entries carry the executed kernel names
+        assert!(m.kernels.contains_key("ddot/tuned"), "{:?}", m.kernels.keys());
+        assert!(m.kernels.contains_key("dscal/tuned"));
+        assert_eq!(m.kernels["ddot/tuned"].completed, 12);
     }
 
     #[test]
@@ -254,5 +444,84 @@ mod tests {
         assert_eq!(m.errors_detected, m.errors_injected,
                    "every injected fault must be detected");
         assert_eq!(m.errors_corrected, m.errors_detected);
+        // FT counters attributed to the kernel that actually ran
+        let k = &m.kernels["dtrsv/dmr"];
+        assert_eq!(k.errors_detected, m.errors_detected);
+    }
+
+    /// Deterministic scheduler check: with an MT group at the head of
+    /// the queue and the ledger nearly full, the serial group flows
+    /// past (one deferral) and the MT group drains once the ledger is
+    /// credited back.
+    #[test]
+    fn scheduler_defers_mt_batches_over_budget() {
+        let profile = Profile::cascade_sim(); // threads = 4
+        let cache = PlanCache::new(profile.clone());
+        let mt = cache
+            .resolve("dgemm", 96, FtPolicy::None, Backend::NativeTuned)
+            .unwrap();
+        assert_eq!(mt.kernel.name, "dgemm/tuned-mt");
+        let serial = cache
+            .resolve("ddot", 256, FtPolicy::None, Backend::NativeTuned)
+            .unwrap();
+        let metrics = Metrics::new();
+        let mut sched = Sched {
+            batcher: Batcher::new(8),
+            // one MT batch already executing
+            in_flight_threads: mt.thread_cost(),
+        };
+        let job = |plan: &ExecutionPlan, req: BlasRequest| {
+            let key = BatchKey::Planned {
+                kernel: plan.kernel_id,
+                threads: plan.thread_cost() as u16,
+            };
+            let (reply, _rx) = channel();
+            std::mem::forget(_rx); // keep the send side alive for the test
+            (key, Job { req, plan: Some(*plan), enqueued: Instant::now(), reply })
+        };
+        let mut rng = Rng::new(0xBEEF);
+        let gemm = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::random(96, 96, &mut rng),
+            b: Matrix::random(96, 96, &mut rng),
+            beta: 0.0,
+            c: Matrix::zeros(96, 96),
+        };
+        let dot = BlasRequest::Ddot {
+            x: rng.normal_vec(256),
+            y: rng.normal_vec(256),
+        };
+        let (k1, j1) = job(&mt, gemm);
+        sched.batcher.push(k1, j1);
+        let (k2, j2) = job(&serial, dot);
+        sched.batcher.push(k2, j2);
+        // budget 6: in-flight 4 + MT 4 > 6 defers, + serial 1 = 5 fits
+        let (batch, cost) = sched.pop_admissible(6, &metrics).unwrap();
+        assert_eq!(cost, 1, "serial batch must flow past the deferred MT");
+        assert!(matches!(batch[0].key, BatchKey::Planned { threads: 1, .. }));
+        assert_eq!(sched.in_flight_threads, 5);
+        // nothing admissible for the MT batch until the ledger drains
+        assert!(sched.pop_admissible(6, &metrics).is_none());
+        sched.in_flight_threads = 0;
+        let (batch, cost) = sched.pop_admissible(6, &metrics).unwrap();
+        assert_eq!(cost, 4);
+        assert!(matches!(batch[0].key, BatchKey::Planned { threads: 4, .. }));
+        let snap = metrics.snapshot();
+        // exactly one real bypass: the serial batch jumping the MT
+        // group; the fruitless pass in between is not counted
+        assert_eq!(snap.deferrals, 1);
+        assert_eq!(snap.max_in_flight_threads, 5);
+    }
+
+    /// A budget below one full MT grant could never admit an MT batch,
+    /// so `Server::start` clamps it up — keeping the oversubscription
+    /// invariant (`max_in_flight_threads <= thread_budget`) absolute.
+    #[test]
+    fn thread_budget_clamps_to_one_full_grant() {
+        let profile = Profile::cascade_sim().with_thread_budget(1);
+        let router = Router::native_only(profile, Backend::NativeTuned);
+        let server = Server::start(router, FtPolicy::None, 2, None, 0);
+        let m = server.shutdown();
+        assert_eq!(m.thread_budget, 4, "clamped to cascade's MT grant");
     }
 }

@@ -37,6 +37,11 @@ pub struct TraceConfig {
     pub vec_len: usize,
     /// matrix dimension for L2/L3 routines
     pub mat_dim: usize,
+    /// Optional second DGEMM dimension, alternated with `mat_dim`.
+    /// Two shapes that clear the planner's MT floor resolve to the same
+    /// kernel, so this exercises the server's planned-kernel batching
+    /// (shapes share a batch window when their plans agree).
+    pub mat_dim_alt: Option<usize>,
 }
 
 impl Default for TraceConfig {
@@ -48,6 +53,7 @@ impl Default for TraceConfig {
             mix: Mix::default(),
             vec_len: 65536,
             mat_dim: 256,
+            mat_dim_alt: None,
         }
     }
 }
@@ -69,6 +75,10 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
     let b = Matrix::random(cfg.mat_dim, cfg.mat_dim, &mut rng);
     let c = Matrix::random(cfg.mat_dim, cfg.mat_dim, &mut rng);
     let l = Matrix::random_lower_triangular(cfg.mat_dim, &mut rng);
+    let alt = cfg.mat_dim_alt.map(|d| {
+        (Matrix::random(d, d, &mut rng), Matrix::random(d, d, &mut rng),
+         Matrix::random(d, d, &mut rng))
+    });
 
     let mut t = 0.0;
     let mut out = Vec::with_capacity(cfg.requests);
@@ -102,12 +112,23 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
                 y: rng.normal_vec(cfg.mat_dim),
             },
             4 => BlasRequest::Dtrsv { a: l.clone(), b: rng.normal_vec(cfg.mat_dim) },
-            5 => BlasRequest::Dgemm {
-                alpha: 1.0,
-                a: a.clone(),
-                b: b.clone(),
-                beta: 0.0,
-                c: c.clone(),
+            5 => match &alt {
+                Some((aa, ab, ac)) if rng.uniform() < 0.5 => {
+                    BlasRequest::Dgemm {
+                        alpha: 1.0,
+                        a: aa.clone(),
+                        b: ab.clone(),
+                        beta: 0.0,
+                        c: ac.clone(),
+                    }
+                }
+                _ => BlasRequest::Dgemm {
+                    alpha: 1.0,
+                    a: a.clone(),
+                    b: b.clone(),
+                    beta: 0.0,
+                    c: c.clone(),
+                },
             },
             _ => BlasRequest::Dtrsm { a: l.clone(), b: b.clone() },
         };
@@ -139,6 +160,24 @@ mod tests {
                                 ..Default::default() };
         let t = generate(&cfg);
         assert!(t.windows(2).all(|w| w[0].at_seconds <= w[1].at_seconds));
+    }
+
+    #[test]
+    fn alt_dim_splits_dgemm_shapes() {
+        let cfg = TraceConfig {
+            requests: 400,
+            vec_len: 8,
+            mat_dim: 16,
+            mat_dim_alt: Some(32),
+            mix: Mix { dscal: 0.0, ddot: 0.0, dnrm2: 0.0, dgemv: 0.0,
+                       dtrsv: 0.0, dgemm: 1.0, dtrsm: 0.0 },
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        let alt = t.iter().filter(|e| e.request.dim() == 32).count();
+        let base = t.iter().filter(|e| e.request.dim() == 16).count();
+        assert_eq!(alt + base, 400);
+        assert!(alt > 100 && base > 100, "both shapes present: {alt}/{base}");
     }
 
     #[test]

@@ -18,10 +18,11 @@
 //!   native kernel (serial, multithreaded, DMR, fused/unfused/weighted
 //!   ABFT) registers a descriptor in the kernel *registry*; a *planner*
 //!   resolves request × FT policy × profile into an execution plan
-//!   (kernel, thread grant, protection scheme); the router, batching
-//!   threaded server, metrics, and workload traces all consume that
-//!   plan. Dispatch is data — a descriptor table — not nested match
-//!   arms.
+//!   (kernel, thread grant, protection scheme) once at admission, via a
+//!   memoized plan cache; the batcher schedules by planned kernel id
+//!   under a thread-budget ledger, and workers execute pre-resolved
+//!   plans. Completions land in a per-kernel metrics ledger. Dispatch
+//!   is data — a descriptor table — not nested match arms.
 //! - [`bench`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //! - [`apps`] — downstream consumers (blocked Cholesky) exercising the
@@ -37,7 +38,8 @@ pub mod runtime;
 pub mod util;
 
 pub use config::Profile;
-pub use coordinator::plan::{ExecutionPlan, Planner};
-pub use coordinator::registry::KernelRegistry;
+pub use coordinator::metrics::MetricsSnapshot;
+pub use coordinator::plan::{ExecutionPlan, PlanCache, Planner};
+pub use coordinator::registry::{KernelId, KernelRegistry};
 pub use coordinator::request::{BlasRequest, BlasResponse};
 pub use ft::policy::FtPolicy;

@@ -4,6 +4,7 @@
 //! ftblas artifacts                         list AOT artifacts
 //! ftblas verify [--profile P]              cross-check artifacts vs native
 //! ftblas run --routine R --n N [...]       execute one routine
+//! ftblas serve --requests N [...]          drive the plan-aware server
 //! ftblas bench --exp ID [--quick]          regenerate a paper table/figure
 //! ```
 
@@ -18,7 +19,9 @@ use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
 use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
 use ftblas::coordinator::router::{execute_native, Router};
-use ftblas::ft::injector::Fault;
+use ftblas::coordinator::server::Server;
+use ftblas::coordinator::trace::{self, TraceConfig};
+use ftblas::ft::injector::{Fault, InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::Matrix;
 use ftblas::util::rng::Rng;
@@ -79,6 +82,9 @@ USAGE:
              [--variant naive|blocked|tuned] [--threads T]
              [--ft none|hybrid|abft-unfused|abft-weighted] [--inject]
              [--profile P]
+  ftblas serve [--requests N] [--ft P] [--workers W] [--max-batch B]
+             [--thread-budget T] [--threads T] [--vec-len N] [--mat-dim N]
+             [--inject] [--profile P]
   ftblas bench --exp table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
   ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
@@ -101,6 +107,7 @@ fn main() -> Result<()> {
         "artifacts" => cmd_artifacts(&profile),
         "verify" => cmd_verify(&profile, args.has("quick")),
         "run" => cmd_run(&args, profile),
+        "serve" => cmd_serve(&args, profile),
         "bench" => {
             let exp = args.get("exp", "all");
             let mut ctx = BenchCtx::with_artifacts(profile, args.has("quick"));
@@ -205,6 +212,59 @@ fn results_close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
         }
         _ => false,
     }
+}
+
+/// Drive the plan-aware serving pipeline with a mixed trace and print
+/// the per-kernel metrics ledger: admission-time plans, kernel-keyed
+/// batches, the thread-budget ledger, plan-cache hit rates.
+fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
+    let requests = args.get_usize("requests", 200)?.max(1);
+    let policy = FtPolicy::by_name(&args.get("ft", "hybrid"))
+        .ok_or_else(|| anyhow!("bad --ft"))?;
+    profile.threads = args.get_usize("threads", profile.threads)?.max(1);
+    profile.workers = args.get_usize("workers", profile.workers)?.max(1);
+    profile.max_batch = args.get_usize("max-batch", profile.max_batch)?.max(1);
+    if args.has("thread-budget") {
+        profile.thread_budget =
+            Some(args.get_usize("thread-budget", 0)?.max(1));
+    }
+    let mat_dim = args.get_usize("mat-dim", 128)?;
+    let cfg = TraceConfig {
+        requests,
+        vec_len: args.get_usize("vec-len", 16384)?,
+        mat_dim,
+        // a second MT-eligible DGEMM shape shows kernel-keyed batching
+        mat_dim_alt: Some((mat_dim / 2).max(profile.gemm.mr * 2)),
+        seed: args.get_usize("seed", 0x5E12)? as u64,
+        ..Default::default()
+    };
+    println!("serve: {} requests on {} (workers={}, threads={}, \
+              max_batch={}, policy={})",
+             requests, profile.name, profile.workers, profile.threads,
+             profile.max_batch, policy.name());
+    let entries = trace::generate(&cfg);
+    let injection = args.has("inject").then(|| InjectorConfig {
+        count: (requests / 8).max(1),
+        ..Default::default()
+    });
+    let workers = profile.workers;
+    let router = Router::native_only(profile, Backend::NativeTuned);
+    let server = Server::start(router, policy, workers, injection, requests);
+    let handle = server.handle();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = entries
+        .iter()
+        .map(|e| handle.submit(e.request.clone()))
+        .collect();
+    for rx in rxs {
+        rx.recv()??;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+    println!("completed {} requests in {:.2}s -> {:.1} req/s\n",
+             snap.completed, wall, snap.completed as f64 / wall);
+    ftblas::bench::harness::print_ledger(&snap);
+    Ok(())
 }
 
 fn cmd_run(args: &Args, mut profile: Profile) -> Result<()> {

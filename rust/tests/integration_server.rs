@@ -1,6 +1,7 @@
 //! Integration tests over the threaded coordinator: concurrency,
-//! batching fairness, metrics accounting, and end-to-end injection
-//! through the server loop.
+//! batching fairness, metrics accounting, end-to-end injection through
+//! the server loop, and the plan-aware pipeline (admission-time
+//! planning, kernel-keyed batching, the thread-budget ledger).
 
 use ftblas::config::Profile;
 use ftblas::coordinator::request::{Backend, BlasRequest};
@@ -9,6 +10,7 @@ use ftblas::coordinator::server::Server;
 use ftblas::coordinator::trace::{self, TraceConfig};
 use ftblas::ft::injector::InjectorConfig;
 use ftblas::ft::policy::FtPolicy;
+use ftblas::util::matrix::Matrix;
 use ftblas::util::rng::Rng;
 
 fn native_server(policy: FtPolicy, workers: usize,
@@ -40,6 +42,109 @@ fn high_concurrency_mixed_trace() {
     assert_eq!(m.failed, 0);
     // every routine in the mix got latency records
     assert!(m.e2e_by_routine.len() >= 4);
+    // the per-kernel ledger names the executed kernels and its
+    // completion counts roll up exactly
+    let ledger_total: u64 = m.kernels.values().map(|k| k.completed).sum();
+    assert_eq!(ledger_total, 120);
+    assert!(m.kernels.keys().all(|k| k.contains('/')),
+            "ledger keys are registry kernel names: {:?}", m.kernels.keys());
+    // admission planned every native request exactly once per shape
+    assert_eq!(m.plan_cache_hits + m.plan_cache_misses, 120);
+    assert!(m.plan_cache_hits > m.plan_cache_misses);
+}
+
+/// The oversubscription gate: on a cascade_sim-style profile with a
+/// constrained thread budget, eligible DGEMMs ride the MT kernel while
+/// the in-flight thread ledger never exceeds the budget.
+#[test]
+fn mt_dgemm_respects_thread_budget() {
+    // cascade grants 4 kernel threads; budget 6 admits one MT batch
+    // plus serial traffic, never two MT batches at once
+    let profile = Profile::cascade_sim().with_thread_budget(6).with_max_batch(2);
+    let workers = 3;
+    let router = Router::native_only(profile, Backend::NativeTuned);
+    let server = Server::start(router, FtPolicy::None, workers, None, 0);
+    let handle = server.handle();
+    let mut rng = Rng::new(0x0B5);
+    let a = Matrix::random(96, 96, &mut rng);
+    let b = Matrix::random(96, 96, &mut rng);
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        let rx = if i % 2 == 0 {
+            handle.submit(BlasRequest::Dgemm {
+                alpha: 1.0,
+                a: a.clone(),
+                b: b.clone(),
+                beta: 0.0,
+                c: Matrix::zeros(96, 96),
+            })
+        } else {
+            handle.submit(BlasRequest::Ddot {
+                x: rng.normal_vec(4096),
+                y: rng.normal_vec(4096),
+            })
+        };
+        rxs.push((i % 2 == 0, rx));
+    }
+    for (is_gemm, rx) in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        if is_gemm {
+            assert_eq!(resp.kernel, "dgemm/tuned-mt",
+                       "eligible DGEMM must ride the MT kernel");
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.thread_budget, 6);
+    assert!(m.max_in_flight_threads >= 4,
+            "an MT batch was admitted (max in-flight {})",
+            m.max_in_flight_threads);
+    assert!(m.max_in_flight_threads <= m.thread_budget,
+            "thread ledger oversubscribed: {} > {}",
+            m.max_in_flight_threads, m.thread_budget);
+    // the ledger attributes completions to the executed kernels
+    assert_eq!(m.kernels["dgemm/tuned-mt"].completed, 12);
+    assert_eq!(m.kernels["ddot/tuned"].completed, 12);
+    // two distinct admission keys, planned once each
+    assert_eq!(m.plan_cache_misses, 2);
+    assert_eq!(m.plan_cache_hits, 22);
+}
+
+/// Kernel-keyed batching: two DGEMM shapes whose plans resolve to the
+/// same kernel land in one ledger entry (and one batch group), while a
+/// shape planning to a different kernel stays separate.
+#[test]
+fn shapes_sharing_a_plan_share_a_ledger_entry() {
+    let router = Router::native_only(Profile::default(), Backend::NativeTuned);
+    let server = Server::start(router, FtPolicy::Hybrid, 2, None, 0);
+    let handle = server.handle();
+    let mut rng = Rng::new(0x51A);
+    let mut submit_gemm = |n: usize| {
+        handle.submit(BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::random(n, n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        })
+    };
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        rxs.push(submit_gemm(48)); // serial fused-ABFT kernel
+        rxs.push(submit_gemm(64)); // same plan, different shape
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.kernel, "dgemm/abft-fused");
+    }
+    let m = server.shutdown();
+    // one ledger entry absorbs both shapes
+    assert_eq!(m.kernels["dgemm/abft-fused"].completed, 8);
+    assert_eq!(m.kernels.len(), 1);
+    // two shapes -> two plan-cache keys, each planned once
+    assert_eq!(m.plan_cache_misses, 2);
+    assert_eq!(m.plan_cache_hits, 6);
 }
 
 #[test]

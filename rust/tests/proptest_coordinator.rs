@@ -38,7 +38,7 @@ fn batcher_conserves_items() {
     check("batcher-conservation", 50, |g| {
         let n = g.dim(0, 200);
         let max_batch = 1 + g.rng.below(16);
-        let mut b: Batcher<usize> = Batcher::new(max_batch);
+        let mut b: Batcher<(&'static str, usize), usize> = Batcher::new(max_batch);
         for i in 0..n {
             let key = rand_key(&mut g.rng);
             b.push(key, i);
@@ -62,7 +62,8 @@ fn batcher_conserves_items() {
 fn batcher_batches_are_homogeneous() {
     check("batcher-homogeneous", 40, |g| {
         let n = g.dim(1, 150);
-        let mut b: Batcher<usize> = Batcher::new(1 + g.rng.below(8));
+        let mut b: Batcher<(&'static str, usize), usize> =
+            Batcher::new(1 + g.rng.below(8));
         for i in 0..n {
             b.push(rand_key(&mut g.rng), i);
         }
@@ -83,7 +84,8 @@ fn batcher_batches_are_homogeneous() {
 fn batcher_preserves_order() {
     check("batcher-order", 40, |g| {
         let n = g.dim(1, 150);
-        let mut b: Batcher<usize> = Batcher::new(1 + g.rng.below(8));
+        let mut b: Batcher<(&'static str, usize), usize> =
+            Batcher::new(1 + g.rng.below(8));
         for i in 0..n {
             b.push(rand_key(&mut g.rng), i);
         }
@@ -101,6 +103,45 @@ fn batcher_preserves_order() {
             Ok::<(), String>(())?;
         }
         Ok(())
+    });
+}
+
+/// Cost-aware drains conserve items too: under a random admission
+/// predicate that flips each round, every item still drains exactly
+/// once, deferred groups are never lost, and an all-pass predicate
+/// matches plain `next_batch`.
+#[test]
+fn batcher_conserves_under_admission_filters() {
+    check("batcher-admission", 40, |g| {
+        let n = g.dim(0, 150);
+        let max_batch = 1 + g.rng.below(8);
+        let mut b: Batcher<(&'static str, usize), usize> =
+            Batcher::new(max_batch);
+        for i in 0..n {
+            b.push(rand_key(&mut g.rng), i);
+        }
+        let mut seen = vec![false; n];
+        let mut stuck = 0;
+        while !b.is_empty() {
+            // randomly reject one routine per round; always admit after
+            // a fruitless round so the drain terminates
+            let blocked = ROUTINES[g.rng.below(ROUTINES.len())];
+            let admit_all = stuck > 0;
+            let d = b.next_batch_where(|k| admit_all || k.0 != blocked);
+            ensure(d.batch.len() <= max_batch, "batch exceeds max_batch")?;
+            if d.batch.is_empty() {
+                ensure(d.deferred > 0,
+                       "empty drain from non-empty queue must defer")?;
+                stuck += 1;
+                continue;
+            }
+            stuck = 0;
+            for p in &d.batch {
+                ensure(!seen[p.item], format!("item {} drained twice", p.item))?;
+                seen[p.item] = true;
+            }
+        }
+        ensure(seen.iter().all(|&s| s), "some item was lost")
     });
 }
 
@@ -304,7 +345,7 @@ fn injector_plan_accounting() {
 fn batcher_contiguous_batch_count() {
     check("batcher-count", 30, |g| {
         let max_batch = 1 + g.rng.below(8);
-        let mut b: Batcher<u32> = Batcher::new(max_batch);
+        let mut b: Batcher<(&'static str, usize), u32> = Batcher::new(max_batch);
         let mut counts: HashMap<(&'static str, usize), usize> = HashMap::new();
         // contiguous runs per key
         for _ in 0..g.dim(1, 6) {

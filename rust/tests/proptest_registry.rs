@@ -13,9 +13,9 @@
 
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
-use ftblas::coordinator::plan::Planner;
+use ftblas::coordinator::plan::{PlanCache, Planner};
 use ftblas::coordinator::registry::{ExecCtx, KernelRegistry};
-use ftblas::coordinator::request::{BlasRequest, BlasResult};
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
 use ftblas::coordinator::router::execute_native;
 use ftblas::ft::injector::Fault;
 use ftblas::ft::policy::FtPolicy;
@@ -169,6 +169,59 @@ fn planner_respects_capabilities() {
             ensure(plan.threads == 1, "serial kernel granted threads")?;
         }
         Ok(())
+    });
+}
+
+/// Admission-time memoization is transparent: for any random
+/// `(routine, dim, policy, backend)` key, a plan-cache hit returns
+/// exactly what a fresh planner resolution would — same kernel id,
+/// same thread grant — and the hit/miss counters account for every
+/// resolution.
+#[test]
+fn plan_cache_hits_equal_fresh_planner_resolutions() {
+    let reg = KernelRegistry::global();
+    check("plan-cache-transparent", 40, |g| {
+        let threads = 1 + g.rng.below(8);
+        let profile = Profile::default().with_threads(threads);
+        let cache = PlanCache::new(profile.clone());
+        let routines = reg.routines();
+        let mut resolutions = 0u64;
+        for round in 0..3 {
+            for _ in 0..8 {
+                let routine = routines[g.rng.below(routines.len())];
+                // a handful of dims so later rounds re-hit cached keys
+                let dim = 8 * (1 + g.rng.below(4));
+                let policy = FtPolicy::ALL[g.rng.below(4)];
+                let backend = [Backend::NativeNaive, Backend::NativeBlocked,
+                               Backend::NativeTuned][g.rng.below(3)];
+                let cached = cache.resolve(routine, dim, policy, backend);
+                resolutions += 1;
+                let fresh = Planner::new(&profile).plan_dims(
+                    routine, dim, backend.variant().unwrap(), policy);
+                match (cached, fresh) {
+                    (Some(c), Some(f)) => {
+                        ensure(c.kernel_id == f.kernel_id,
+                               format!("{routine}/{dim} round {round}: \
+                                        cached {} != fresh {}",
+                                       c.kernel.name, f.kernel.name))?;
+                        ensure(c.threads == f.threads,
+                               "thread grant drifted through the cache")?;
+                        ensure(c.thread_cost() == f.thread_cost(),
+                               "ledger cost drifted through the cache")?;
+                    }
+                    (None, None) => {}
+                    _ => {
+                        return Err(format!(
+                            "{routine}/{dim}: cache and planner disagree \
+                             on plannability"));
+                    }
+                }
+            }
+        }
+        let (hits, misses) = cache.stats();
+        ensure(hits + misses == resolutions,
+               format!("counters leak: {hits}+{misses} != {resolutions}"))?;
+        ensure(misses <= resolutions, "miss overcount")
     });
 }
 
