@@ -50,6 +50,31 @@ pub fn table1(_ctx: &mut BenchCtx) -> Result<()> {
     Ok(())
 }
 
+/// CI smoke: one registry-driven row set at tiny dims. Exercises the
+/// descriptor-table bench path (registry enumeration → `ExecCtx` →
+/// kernel → Row) end to end in well under a second, so the bench
+/// plumbing cannot silently rot between full runs.
+pub fn smoke(ctx: &mut BenchCtx) -> Result<()> {
+    header("smoke", "registry bench path at tiny dims");
+    let n = 32;
+    let mut rng = Rng::new(0x5304E);
+    let req = BlasRequest::Dgemm {
+        alpha: 1.0,
+        a: Matrix::random(n, n, &mut rng),
+        b: Matrix::random(n, n, &mut rng),
+        beta: 0.0,
+        c: Matrix::zeros(n, n),
+    };
+    let rows = registry_variant_rows(ctx, &req, 2.0 * (n * n * n) as f64);
+    // a hard failure, not harness::expect's warning: this row set going
+    // empty is exactly the rot the CI smoke step exists to catch
+    if rows.is_empty() {
+        anyhow::bail!("bench smoke: registry produced no dgemm rows");
+    }
+    print_rows(&rows);
+    Ok(())
+}
+
 /// Fig. 5: selected Level-1/2 routines vs the baselines, one registry
 /// ladder per routine.
 pub fn fig5(ctx: &mut BenchCtx) -> Result<()> {

@@ -179,20 +179,26 @@ pub fn registry_variant_rows(ctx: &BenchCtx, req: &BlasRequest, flops: f64)
 /// counters) plus the scheduling counters (plan-cache hit rate, thread
 /// budget, deferrals). Shared by `ftblas serve` and the e2e example.
 pub fn print_ledger(snap: &MetricsSnapshot) {
-    println!("{:<26} {:>6} {:>10} {:>10} {:>10} {:>5} {:>5}",
-             "kernel", "n", "exec-mean", "e2e-p99", "queue-mean", "det",
-             "corr");
+    println!("{:<26} {:>6} {:>10} {:>10} {:>10} {:>9} {:>5} {:>5} {:>5}",
+             "kernel", "n", "exec-mean", "e2e-p99", "queue-mean", "slo",
+             "burn", "det", "corr");
     let mut kernels: Vec<_> = snap.kernels.iter().collect();
     kernels.sort_by(|a, b| a.0.cmp(b.0));
     for (name, k) in kernels {
-        println!("{:<26} {:>6} {:>8.2}ms {:>8.2}ms {:>8.2}ms {:>5} {:>5}",
+        println!("{:<26} {:>6} {:>8.2}ms {:>8.2}ms {:>8.2}ms {:>7.1}ms \
+                  {:>5} {:>5} {:>5}",
                  name, k.completed, k.exec.mean * 1e3, k.e2e.p99 * 1e3,
-                 k.queue.mean * 1e3, k.errors_detected, k.errors_corrected);
+                 k.queue.mean * 1e3, k.slo_target * 1e3, k.slo_burns,
+                 k.errors_detected, k.errors_corrected);
     }
     let overall = snap.overall_e2e();
     println!("overall: {} completed, {} failed | e2e p50={:.2}ms p99={:.2}ms",
              snap.completed, snap.failed, overall.p50 * 1e3,
              overall.p99 * 1e3);
+    println!("slo: {} of {} completions over target",
+             snap.slo_burns(), snap.completed);
+    println!("admission: {} shed (max queue depth {})", snap.shed,
+             snap.max_queue_depth);
     let resolutions = snap.plan_cache_hits + snap.plan_cache_misses;
     let hit_pct = if resolutions > 0 {
         100.0 * snap.plan_cache_hits as f64 / resolutions as f64

@@ -14,6 +14,7 @@ pub use harness::{BenchCtx, Row};
 /// Run one experiment by id (table1, fig5..fig11).
 pub fn run(id: &str, ctx: &mut harness::BenchCtx) -> anyhow::Result<()> {
     match id {
+        "smoke" => figures_perf::smoke(ctx),
         "table1" => figures_perf::table1(ctx),
         "fig5" => figures_perf::fig5(ctx),
         "fig6" => figures_perf::fig6(ctx),

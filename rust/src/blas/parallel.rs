@@ -109,6 +109,81 @@ pub fn dgemm_abft_fused_mt(m: usize, n: usize, k: usize, alpha: f64,
     total
 }
 
+/// C := α·sym(A)·B + β·C across `threads` row bands (A symmetric, lower
+/// triangle stored). The symmetrization buffer is built once and shared
+/// read-only — the packing-routine analog — then each band runs the
+/// serial GEMM frame on its own rows of C, so bands share no mutable
+/// state.
+#[allow(clippy::too_many_arguments)]
+pub fn dsymm_lower_mt(m: usize, n: usize, alpha: f64, a: &[f64], b: &[f64],
+                      beta: f64, c: &mut [f64], params: &GemmParams,
+                      threads: usize) {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), m * n);
+    if threads <= 1 || m < 2 * params.mr {
+        level3::dsymm_lower(m, n, alpha, a, b, beta, c, params);
+        return;
+    }
+    let mut full = vec![0.0; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            let v = a[i * m + j];
+            full[i * m + j] = v;
+            full[j * m + i] = v;
+        }
+    }
+    let bands = row_bands(m, threads, params.mr);
+    std::thread::scope(|s| {
+        let mut rest = c;
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let a_band = &full[lo * m..hi * m];
+            s.spawn(move || {
+                level3::dgemm(hi - lo, n, m, alpha, a_band, b, beta, band,
+                              params);
+            });
+        }
+    });
+}
+
+/// B := α·tril(A)·B across `threads` row bands. Output row `i` only
+/// reads input rows `0..=i`, so each band multiplies its rows of the
+/// (zero-filled above the diagonal) triangle against a snapshot of B —
+/// the k-extent per band stops at the band's last row, keeping the work
+/// O(m²·n/2) overall like the serial frame.
+pub fn dtrmm_lower_mt(m: usize, n: usize, alpha: f64, a: &[f64],
+                      b: &mut [f64], params: &GemmParams, threads: usize) {
+    assert_eq!(a.len(), m * m);
+    assert_eq!(b.len(), m * n);
+    if threads <= 1 || m < 2 * params.mr {
+        level3::dtrmm_lower(m, n, alpha, a, b, params);
+        return;
+    }
+    let b0 = b.to_vec();
+    let bands = row_bands(m, threads, params.mr);
+    std::thread::scope(|s| {
+        let mut rest = b;
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let b0 = &b0;
+            s.spawn(move || {
+                // pack this band's rows of the triangle, zero-filled
+                // above the diagonal, truncated to k = hi columns
+                let mut apanel = vec![0.0; (hi - lo) * hi];
+                for (r, row) in apanel.chunks_exact_mut(hi).enumerate() {
+                    let gi = lo + r;
+                    row[..=gi].copy_from_slice(&a[gi * m..gi * m + gi + 1]);
+                }
+                level3::dgemm(hi - lo, n, hi, alpha, &apanel, &b0[..hi * n],
+                              0.0, band, params);
+            });
+        }
+    });
+}
+
 /// Solve tril(A)·X = B in place across `threads` column stripes (each
 /// stripe is an independent triangular solve).
 pub fn dtrsm_llnn_mt(m: usize, n: usize, a: &[f64], b: &mut [f64],
@@ -277,6 +352,44 @@ mod tests {
             assert!(allclose(&c, &want, 1e-8, 1e-8),
                     "t={threads}: fall-through result wrong");
         }
+    }
+
+    #[test]
+    fn dsymm_mt_matches_serial() {
+        check("mt-symm", 12, |g| {
+            let m = g.dim(1, 100);
+            let n = g.dim(1, 80);
+            let threads = 1 + g.rng.below(5);
+            let params = GemmParams::default();
+            let a = Matrix::random_symmetric(m, &mut g.rng);
+            let b = Matrix::random(m, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = c0.data.clone();
+            naive::dsymm_lower(m, n, 1.3, &a.data, &b.data, -0.6, &mut want);
+            let mut c = c0.data.clone();
+            dsymm_lower_mt(m, n, 1.3, &a.data, &b.data, -0.6, &mut c, &params,
+                           threads);
+            ensure(allclose(&c, &want, 1e-9, 1e-9),
+                   format!("mt symm wrong ({threads} threads)"))
+        });
+    }
+
+    #[test]
+    fn dtrmm_mt_matches_serial() {
+        check("mt-trmm", 12, |g| {
+            let m = g.dim(1, 100);
+            let n = g.dim(1, 80);
+            let threads = 1 + g.rng.below(5);
+            let params = GemmParams::default();
+            let l = Matrix::random_lower_triangular(m, &mut g.rng);
+            let b0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = b0.data.clone();
+            naive::dtrmm_lower(m, n, 0.8, &l.data, &mut want);
+            let mut b = b0.data.clone();
+            dtrmm_lower_mt(m, n, 0.8, &l.data, &mut b, &params, threads);
+            ensure(allclose(&b, &want, 1e-9, 1e-9),
+                   format!("mt trmm wrong ({threads} threads)"))
+        });
     }
 
     #[test]

@@ -1,9 +1,66 @@
 //! Runtime tuning profiles — the simulation substitute for the paper's two
 //! machines (Skylake Gold 5122 / Cascade Lake W-2255; DESIGN.md
 //! substitution #4). A profile fixes the native kernel block parameters,
-//! the artifact directory, and the coordinator's worker count.
+//! the artifact directory, and the coordinator's worker count, plus the
+//! serving tier's sizing knobs: shard count, admission watermark, and
+//! the per-kernel latency SLO table.
 
 use crate::blas::level3::GemmParams;
+use crate::coordinator::request::Level;
+
+/// Per-kernel end-to-end latency targets (seconds). Defaults derive
+/// from the BLAS level — memory-bound L1 calls should turn around far
+/// faster than an L3 GEMM — and individual registry kernels can be
+/// pinned tighter or looser by name. The serving ledger counts a
+/// **burn** for every completion whose end-to-end latency exceeds its
+/// target ([`crate::coordinator::metrics::KernelStats::slo_burns`]).
+#[derive(Clone, Debug)]
+pub struct SloTable {
+    /// Level-1 default target (seconds, end-to-end).
+    pub l1: f64,
+    /// Level-2 default target.
+    pub l2: f64,
+    /// Level-3 default target.
+    pub l3: f64,
+    /// Per-kernel overrides by registry name (e.g. `"dgemm/abft-fused"`).
+    pub per_kernel: Vec<(&'static str, f64)>,
+}
+
+impl SloTable {
+    pub fn by_level(l1: f64, l2: f64, l3: f64) -> SloTable {
+        SloTable { l1, l2, l3, per_kernel: Vec::new() }
+    }
+
+    /// Pin one kernel's target, overriding its level default.
+    pub fn with_kernel(mut self, kernel: &'static str, target: f64) -> SloTable {
+        self.per_kernel.push((kernel, target));
+        self
+    }
+
+    /// Target for a kernel: its override if pinned, else the level
+    /// default. The latest pin wins, so re-pinning a kernel overrides
+    /// an earlier `with_kernel`.
+    pub fn target(&self, kernel: &str, level: Level) -> f64 {
+        self.per_kernel
+            .iter()
+            .rev()
+            .find(|(k, _)| *k == kernel)
+            .map(|(_, t)| *t)
+            .unwrap_or(match level {
+                Level::L1 => self.l1,
+                Level::L2 => self.l2,
+                Level::L3 => self.l3,
+            })
+    }
+}
+
+impl Default for SloTable {
+    fn default() -> SloTable {
+        // serving-sim scale: L1 calls are sub-millisecond on both
+        // profiles, L3 requests queue behind multi-millisecond kernels
+        SloTable::by_level(2e-3, 10e-3, 50e-3)
+    }
+}
 
 /// A machine tuning profile.
 #[derive(Clone, Debug)]
@@ -29,6 +86,17 @@ pub struct Profile {
     /// clamps it to at least `threads` (one full MT grant), so the
     /// in-flight watermark can never exceed the effective budget.
     pub thread_budget: Option<usize>,
+    /// Shards the serving cluster splits into (each shard is a full
+    /// worker-pool + batcher + thread-budget engine). 1 = the single
+    /// monolithic server.
+    pub shards: usize,
+    /// Per-shard queue-depth watermark: submissions arriving while a
+    /// shard's queue holds this many pending requests are shed with a
+    /// typed `Overloaded` error instead of growing the queue without
+    /// bound. `None` = unbounded admission.
+    pub admission_depth: Option<usize>,
+    /// Per-kernel latency SLO targets for the serving ledger.
+    pub slo: SloTable,
     /// Artifact directory relative to the repo root.
     pub artifact_dir: &'static str,
 }
@@ -47,6 +115,9 @@ impl Profile {
             threads: 1,
             max_batch: 16,
             thread_budget: None,
+            shards: 1,
+            admission_depth: None,
+            slo: SloTable::default(),
             artifact_dir: "artifacts",
         }
     }
@@ -65,6 +136,10 @@ impl Profile {
             // across the MT kernels' bigger problems
             max_batch: 32,
             thread_budget: None,
+            // the wider machine serves as a two-shard cluster by default
+            shards: 2,
+            admission_depth: None,
+            slo: SloTable::default(),
             artifact_dir: "artifacts/cascade_sim",
         }
     }
@@ -85,6 +160,24 @@ impl Profile {
     /// scheduling ledger.
     pub fn with_thread_budget(mut self, budget: usize) -> Profile {
         self.thread_budget = Some(budget.max(1));
+        self
+    }
+
+    /// Same profile with a different serving-cluster shard count.
+    pub fn with_shards(mut self, shards: usize) -> Profile {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Same profile with a per-shard queue-depth admission watermark.
+    pub fn with_admission_depth(mut self, depth: usize) -> Profile {
+        self.admission_depth = Some(depth.max(1));
+        self
+    }
+
+    /// Same profile with a different SLO table.
+    pub fn with_slo(mut self, slo: SloTable) -> Profile {
+        self.slo = slo;
         self
     }
 
@@ -132,6 +225,27 @@ mod tests {
         assert_eq!(p.max_batch, 1);
         assert_eq!(p.thread_budget, Some(1));
         assert!(Profile::cascade_sim().thread_budget.is_none());
+        let p = Profile::skylake_sim().with_shards(0).with_admission_depth(0);
+        assert_eq!(p.shards, 1);
+        assert_eq!(p.admission_depth, Some(1));
+        assert!(Profile::skylake_sim().admission_depth.is_none());
+        assert_eq!(Profile::cascade_sim().shards, 2);
+    }
+
+    #[test]
+    fn slo_targets_derive_from_level_with_overrides() {
+        let slo = SloTable::default();
+        assert!(slo.target("ddot/dmr", Level::L1)
+                < slo.target("dgemv/dmr", Level::L2));
+        assert!(slo.target("dgemv/dmr", Level::L2)
+                < slo.target("dgemm/abft-fused", Level::L3));
+        let slo = SloTable::by_level(1e-3, 2e-3, 3e-3)
+            .with_kernel("dgemm/abft-fused", 9e-3);
+        assert_eq!(slo.target("dgemm/abft-fused", Level::L3), 9e-3);
+        assert_eq!(slo.target("dgemm/tuned", Level::L3), 3e-3);
+        // re-pinning the same kernel: the latest override wins
+        let slo = slo.with_kernel("dgemm/abft-fused", 4e-3);
+        assert_eq!(slo.target("dgemm/abft-fused", Level::L3), 4e-3);
     }
 
     #[test]

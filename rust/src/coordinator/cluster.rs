@@ -1,0 +1,385 @@
+//! Sharded serving tier: a cluster of per-shard [`Server`] engines
+//! behind one admission front-end.
+//!
+//! [`ClusterHandle::submit`] is the cluster's admission point. Each
+//! request is planned once through the cluster's shared [`PlanCache`]
+//! and routed to a shard by **rendezvous hashing on the planned kernel
+//! id**, so one kernel's traffic always lands on one shard and the
+//! shard-local kernel-keyed batching stays effective. Rendezvous scores
+//! are deliberately coarse (16-bit): score ties are where the live
+//! least-loaded tiebreak — fed by each shard's current queue depth —
+//! gets to act, while routing stays deterministic per key at a fixed
+//! shard count.
+//!
+//! Each shard is a full engine (worker pool, batcher, thread-budget
+//! ledger, per-shard metrics) and enforces its own queue-depth
+//! admission watermark, shedding excess submissions as typed
+//! [`Error::Overloaded`] instead of queueing without bound. Per-shard
+//! fault accounting stays independent while serving — the shape FT-GEMM
+//! (arXiv:2305.02444) uses for per-stream ABFT state — and ledgers are
+//! merged exactly at read time via [`MetricsSnapshot::merge`]: counters
+//! sum, latency summaries are recomputed from every retained sample,
+//! never from per-shard means.
+
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use crate::config::Profile;
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::plan::{ExecutionPlan, PlanCache};
+use crate::coordinator::request::{BlasRequest, BlasResponse};
+use crate::coordinator::router::Router;
+use crate::coordinator::server::{Admitted, Server, ServerHandle};
+use crate::ft::injector::InjectorConfig;
+use crate::ft::policy::FtPolicy;
+
+pub use crate::coordinator::server::Error;
+
+/// Cluster sizing. Routing and admission knobs (`shards` here is the
+/// instance count; the per-shard `admission_depth` watermark and the
+/// SLO table) live on [`Profile`], so one profile describes the whole
+/// tier.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Shard (engine) count; clamped to at least 1.
+    pub shards: usize,
+    /// Native worker threads per shard.
+    pub workers_per_shard: usize,
+    /// Fault-injection config, split across shards (independent
+    /// per-shard plans with derived seeds).
+    pub injection: Option<InjectorConfig>,
+    /// Expected request volume (sizes each shard's injection plan).
+    pub expected_requests: usize,
+}
+
+impl ClusterConfig {
+    pub fn from_profile(p: &Profile) -> ClusterConfig {
+        ClusterConfig {
+            shards: p.shards,
+            workers_per_shard: p.workers,
+            injection: None,
+            expected_requests: 0,
+        }
+    }
+}
+
+/// Salt for the rendezvous hash (chosen so the registry's kernel-id key
+/// space spreads across small shard counts; see the coverage proptest).
+const ROUTE_SALT: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// SplitMix64 finalizer — the avalanche step behind the rendezvous
+/// scores.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// 16-bit rendezvous score of `(key, shard)`. Coarse on purpose: equal
+/// scores are rare but reachable, and they are exactly where the live
+/// least-loaded tiebreak acts.
+pub fn rendezvous_score(key: u64, shard: usize) -> u64 {
+    mix64(key ^ mix64(ROUTE_SALT ^ shard as u64)) >> 48
+}
+
+/// Pick the shard for a routing key: highest rendezvous score wins;
+/// equal scores fall to the shallower live queue, then the lower shard
+/// index. `depth_of` is only called on score ties (~2⁻¹⁶ of key pairs),
+/// so the hot path never touches shard state — the cluster passes a
+/// closure that locks a shard's scheduler only when the tiebreak
+/// actually needs its queue depth. Deterministic for fixed depths, and
+/// since depths only matter on ties, a key's shard is stable at a
+/// fixed shard count in steady state.
+pub fn route_with<F: FnMut(usize) -> usize>(key: u64, shards: usize,
+                                            mut depth_of: F) -> usize {
+    assert!(shards > 0, "route needs at least one shard");
+    // pass 1: pure rendezvous argmax (lowest index on equal scores)
+    let mut best = 0;
+    let mut best_score = rendezvous_score(key, 0);
+    let mut tied = false;
+    for s in 1..shards {
+        let score = rendezvous_score(key, s);
+        if score > best_score {
+            best = s;
+            best_score = score;
+            tied = false;
+        } else if score == best_score {
+            tied = true;
+        }
+    }
+    if !tied {
+        return best;
+    }
+    // pass 2 (rare): the tie falls to the shallowest queue; a strict
+    // comparison keeps the lower index on equal depths
+    let mut best_depth = depth_of(best);
+    for s in (best + 1)..shards {
+        if rendezvous_score(key, s) == best_score {
+            let depth = depth_of(s);
+            if depth < best_depth {
+                best = s;
+                best_depth = depth;
+            }
+        }
+    }
+    best
+}
+
+/// [`route_with`] over a pre-collected depth slice (tests, simulation).
+pub fn route(key: u64, depths: &[usize]) -> usize {
+    route_with(key, depths.len(), |s| depths[s])
+}
+
+/// Routing key of a request: planned jobs key by kernel id (one
+/// kernel's batches stay on one shard); unplanned (PJRT) jobs fall back
+/// to an FNV-1a hash of `(routine, dim)` — their batches group by shape
+/// anyway — tagged in bit 63 so the two key spaces cannot collide.
+pub fn route_key(plan: Option<&ExecutionPlan>, routine: &str, dim: usize)
+                 -> u64 {
+    match plan {
+        Some(p) => p.kernel_id.0 as u64,
+        None => {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for b in routine.bytes().chain(dim.to_le_bytes()) {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0100_0000_01b3);
+            }
+            h | (1 << 63)
+        }
+    }
+}
+
+struct ClusterShared {
+    plans: PlanCache,
+    router: Arc<Router>,
+    policy: FtPolicy,
+    handles: Vec<ServerHandle>,
+}
+
+/// Handle for submitting requests to the cluster; cheap to clone.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    shared: Arc<ClusterShared>,
+}
+
+impl ClusterHandle {
+    /// The shared admission front half: plan once (shared cache), then
+    /// route — depths are fetched lazily, only on rendezvous ties.
+    fn plan_and_route(&self, req: &BlasRequest)
+                      -> (Option<ExecutionPlan>, usize) {
+        let policy = self.shared.policy;
+        let backend = self.shared.router.resolve(req, policy);
+        let plan = self
+            .shared
+            .plans
+            .resolve(req.routine(), req.dim(), policy, backend);
+        let key = route_key(plan.as_ref(), req.routine(), req.dim());
+        let handles = &self.shared.handles;
+        let shard =
+            route_with(key, handles.len(), |s| handles[s].queue_depth());
+        (plan, shard)
+    }
+
+    /// Admit a request: plan it once (shared cache), route it to its
+    /// shard, enqueue it there. Returns the typed [`Error::Overloaded`]
+    /// when the target shard's queue is at its admission watermark.
+    pub fn submit(&self, req: BlasRequest) -> Admitted {
+        let (plan, shard) = self.plan_and_route(&req);
+        self.shared.handles[shard].submit_planned(req, plan)
+    }
+
+    /// The shard `submit` would route this request to right now.
+    pub fn shard_for(&self, req: &BlasRequest) -> usize {
+        self.plan_and_route(req).1
+    }
+
+    /// Submit and wait (sheds surface as errors).
+    pub fn call(&self, req: BlasRequest) -> anyhow::Result<BlasResponse> {
+        self.submit(req)
+            .map_err(anyhow::Error::new)?
+            .recv()
+            .map_err(|_| anyhow!("cluster dropped the request"))?
+    }
+
+    /// Exact cluster-wide snapshot: per-shard ledgers merged plus the
+    /// shared plan-cache counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let snaps: Vec<MetricsSnapshot> =
+            self.shared.handles.iter().map(|h| h.metrics()).collect();
+        merge_with_plans(&snaps, &self.shared.plans)
+    }
+}
+
+fn merge_with_plans(shards: &[MetricsSnapshot], plans: &PlanCache)
+                    -> MetricsSnapshot {
+    let mut merged = MetricsSnapshot::merge(shards);
+    let (hits, misses) = plans.stats();
+    merged.plan_cache_hits += hits;
+    merged.plan_cache_misses += misses;
+    merged
+}
+
+/// The cluster: `shards` independent [`Server`] engines over one shared
+/// read-only router.
+pub struct Cluster {
+    shards: Vec<Server>,
+    shared: Arc<ClusterShared>,
+}
+
+impl Cluster {
+    /// Start `cfg.shards` engines sharing one router. Injection plans
+    /// are split across shards (independent seeds, counts divided with
+    /// the remainder on the low shards). Note the split assumes roughly
+    /// balanced traffic: each shard plans its share over its own
+    /// expected stream, so a shard that routing starves of requests
+    /// fires fewer of its planned faults — cluster totals are an upper
+    /// bound, not a guarantee (the ledger's `errors_injected` reports
+    /// what actually fired).
+    pub fn start(router: Router, policy: FtPolicy, cfg: ClusterConfig)
+                 -> Cluster {
+        let n = cfg.shards.max(1);
+        let router = Arc::new(router);
+        let profile = router.profile.clone();
+        let expected_per_shard = cfg.expected_requests.div_ceil(n);
+        let shards: Vec<Server> = (0..n)
+            .map(|s| {
+                let injection = cfg.injection.clone().map(|mut c| {
+                    c.seed = c.seed.wrapping_add(s as u64);
+                    c.count = c.count / n + usize::from(s < c.count % n);
+                    c
+                });
+                Server::start_shard(s, router.clone(), policy,
+                                    cfg.workers_per_shard.max(1), injection,
+                                    expected_per_shard)
+            })
+            .collect();
+        let handles = shards.iter().map(|s| s.handle()).collect();
+        let shared = Arc::new(ClusterShared {
+            plans: PlanCache::new(profile),
+            router,
+            policy,
+            handles,
+        });
+        Cluster { shards, shared }
+    }
+
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle { shared: self.shared.clone() }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard snapshots, in shard order (each shard's plan-cache
+    /// counters are zero in cluster mode — planning happens in the
+    /// cluster's shared cache).
+    pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|s| s.metrics()).collect()
+    }
+
+    /// Exact cluster-wide snapshot (see [`MetricsSnapshot::merge`]).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        merge_with_plans(&self.shard_metrics(), &self.shared.plans)
+    }
+
+    /// Stop accepting work, drain every shard, and return the exact
+    /// merged snapshot.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        let Cluster { shards, shared } = self;
+        let snaps: Vec<MetricsSnapshot> =
+            shards.into_iter().map(|s| s.shutdown()).collect();
+        merge_with_plans(&snaps, &shared.plans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Profile;
+    use crate::coordinator::request::Backend;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routing_is_deterministic_per_key() {
+        for key in [0u64, 1, 42, 1 << 63, u64::MAX] {
+            for shards in 1..=6 {
+                let depths = vec![0; shards];
+                assert_eq!(route(key, &depths), route(key, &depths));
+                assert!(route(key, &depths) < shards);
+            }
+        }
+    }
+
+    /// Equal rendezvous scores are where the live queue depths act: the
+    /// tie falls to the shallower queue, then the lower shard index.
+    #[test]
+    fn score_ties_fall_to_the_shallower_queue() {
+        // the 16-bit scores make ties reachable by scan (~2^16 keys)
+        let key = (0u64..)
+            .find(|&k| rendezvous_score(k, 0) == rendezvous_score(k, 1))
+            .unwrap();
+        assert_eq!(route(key, &[5, 0]), 1, "tie goes to the shallow shard");
+        assert_eq!(route(key, &[0, 5]), 0);
+        assert_eq!(route(key, &[3, 3]), 0, "equal depth falls to the index");
+    }
+
+    /// Planned and unplanned key spaces cannot collide (bit-63 tag).
+    #[test]
+    fn route_keys_partition_planned_and_direct() {
+        let cache = PlanCache::new(Profile::skylake_sim());
+        let plan = cache
+            .resolve("dgemm", 64, FtPolicy::None, Backend::NativeTuned)
+            .unwrap();
+        let planned = route_key(Some(&plan), "dgemm", 64);
+        let direct = route_key(None, "dgemm", 64);
+        assert_eq!(planned, plan.kernel_id.0 as u64);
+        assert_ne!(planned, direct);
+        assert_eq!(direct >> 63, 1);
+        // direct keys separate by shape and routine
+        assert_ne!(route_key(None, "dgemm", 64), route_key(None, "dgemm", 65));
+        assert_ne!(route_key(None, "dgemm", 64), route_key(None, "dsymm", 64));
+    }
+
+    /// A single-shard cluster behaves like the plain server: requests
+    /// complete, and the merged snapshot carries the shared plan-cache
+    /// counters (the shard-local caches are bypassed).
+    #[test]
+    fn single_shard_cluster_serves_and_counts_plans() {
+        let router =
+            Router::native_only(Profile::default(), Backend::NativeTuned);
+        let cfg = ClusterConfig {
+            shards: 1,
+            workers_per_shard: 2,
+            injection: None,
+            expected_requests: 0,
+        };
+        let cluster = Cluster::start(router, FtPolicy::None, cfg);
+        let handle = cluster.handle();
+        let mut rng = Rng::new(0xC0);
+        for _ in 0..6 {
+            let resp = handle
+                .call(BlasRequest::Ddot {
+                    x: rng.normal_vec(128),
+                    y: rng.normal_vec(128),
+                })
+                .unwrap();
+            assert_eq!(resp.kernel, "ddot/tuned");
+        }
+        let shard_snaps = cluster.shard_metrics();
+        assert_eq!(shard_snaps.len(), 1);
+        assert_eq!(shard_snaps[0].plan_cache_misses, 0,
+                   "shard-local caches are bypassed in cluster mode");
+        let m = cluster.shutdown();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.shed, 0);
+        // one shape, planned once in the cluster's shared cache
+        assert_eq!(m.plan_cache_misses, 1);
+        assert_eq!(m.plan_cache_hits, 5);
+    }
+}

@@ -3,14 +3,18 @@
 //! Every completion is recorded against the **executed kernel's registry
 //! name** (from [`crate::coordinator::request::BlasResponse::kernel`]),
 //! carrying kernel-exec, end-to-end, and queue-wait latencies plus FT
-//! counters. Scheduling counters — plan-cache hits/misses, thread-budget
-//! deferrals, the configured budget and its in-flight high-watermark —
-//! live beside them, so one snapshot answers both "what ran" and "how
-//! the admission/scheduling pipeline behaved".
+//! counters and the kernel's latency-SLO target (a completion whose
+//! end-to-end latency exceeds the target counts one **burn**).
+//! Scheduling counters — plan-cache hits/misses, thread-budget
+//! deferrals, admission sheds, the configured budget and the queue /
+//! in-flight high-watermarks — live beside them, so one snapshot answers
+//! both "what ran" and "how the admission/scheduling pipeline behaved".
 //!
-//! [`MetricsSnapshot`] still exposes the per-routine views
-//! (`exec_by_routine`, `e2e_by_routine`) existing callers consume; they
-//! are exact rollups of the per-kernel ledgers sharing a routine.
+//! Snapshots retain the raw latency samples, which is what lets a
+//! cluster merge its per-shard ledgers **exactly**:
+//! [`MetricsSnapshot::merge`] sums counters and recomputes every summary
+//! (per-kernel, per-routine, overall) from the concatenated samples —
+//! never from per-shard means.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -31,6 +35,11 @@ struct KernelLedger {
     errors_injected: u64,
     errors_detected: u64,
     errors_corrected: u64,
+    /// SLO target (seconds, end-to-end; 0 = untracked, or mixed —
+    /// completions recorded under differing targets).
+    slo_target: f64,
+    /// Completions whose end-to-end latency exceeded the target.
+    slo_burns: u64,
     /// kernel-exec latencies (seconds)
     exec: Vec<f64>,
     /// end-to-end latencies (queue + exec, seconds)
@@ -43,17 +52,21 @@ struct KernelLedger {
 struct Inner {
     completed: u64,
     failed: u64,
+    shed: u64,
     errors_injected: u64,
     errors_detected: u64,
     errors_corrected: u64,
     deferrals: u64,
     thread_budget: u64,
     max_in_flight_threads: u64,
+    max_queue_depth: u64,
     /// ledgers keyed by executed kernel registry name
     kernels: HashMap<&'static str, KernelLedger>,
 }
 
-/// Per-kernel summary in a snapshot.
+/// Per-kernel summary in a snapshot. Carries both the computed
+/// summaries and the raw samples they were computed from — the samples
+/// are what make cross-shard merges exact.
 #[derive(Clone, Debug, Default)]
 pub struct KernelStats {
     /// Routine the kernel serves (rollup key for the per-routine views).
@@ -62,9 +75,28 @@ pub struct KernelStats {
     pub errors_injected: u64,
     pub errors_detected: u64,
     pub errors_corrected: u64,
+    /// End-to-end latency SLO target (seconds; 0 = untracked, or mixed
+    /// — completions under differing targets share this ledger entry).
+    pub slo_target: f64,
+    /// Completions that missed the target.
+    pub slo_burns: u64,
     pub exec: Summary,
     pub e2e: Summary,
     pub queue: Summary,
+    /// Raw retained samples behind the summaries above.
+    pub exec_samples: Vec<f64>,
+    pub e2e_samples: Vec<f64>,
+    pub queue_samples: Vec<f64>,
+}
+
+impl KernelStats {
+    /// Recompute the summaries from the retained samples (after a merge
+    /// extended them).
+    fn resummarize(&mut self) {
+        self.exec = Summary::from_samples(&self.exec_samples);
+        self.e2e = Summary::from_samples(&self.e2e_samples);
+        self.queue = Summary::from_samples(&self.queue_samples);
+    }
 }
 
 /// A snapshot for reporting.
@@ -72,20 +104,28 @@ pub struct KernelStats {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub failed: u64,
+    /// Submissions rejected at the admission watermark (`Overloaded`).
+    pub shed: u64,
     pub errors_injected: u64,
     pub errors_detected: u64,
     pub errors_corrected: u64,
-    /// Admission-time plan-cache counters (filled by the server).
+    /// Admission-time plan-cache counters (filled by the server, or by
+    /// the cluster for its shared cache).
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
     /// Times a drained batch bypassed an older group whose thread grant
     /// did not fit the remaining budget (counted per bypassed group on
     /// successful drains only, so idle re-polling does not inflate it).
     pub deferrals: u64,
-    /// Configured thread budget (0 when no server is involved).
+    /// Configured thread budget (0 when no server is involved; summed
+    /// across shards in a merged snapshot — total cluster capacity).
     pub thread_budget: u64,
-    /// High-watermark of in-flight thread grants.
+    /// High-watermark of in-flight thread grants (max across shards in
+    /// a merged snapshot — the watermarks are not simultaneous, so a
+    /// sum would overstate).
     pub max_in_flight_threads: u64,
+    /// High-watermark of the pending-queue depth (max across shards).
+    pub max_queue_depth: u64,
     /// Per-kernel ledger, keyed by executed kernel registry name.
     pub kernels: HashMap<String, KernelStats>,
     /// Per-routine rollups (exact: aggregated from the retained
@@ -103,11 +143,13 @@ impl Metrics {
     }
 
     /// Record one completion against the kernel that executed it.
+    /// `slo_target` is the kernel's end-to-end latency target in
+    /// seconds (0 = untracked); a completion over target burns it.
     #[allow(clippy::too_many_arguments)]
     pub fn record_completion(&self, kernel: &'static str,
                              routine: &'static str, exec_s: f64, e2e_s: f64,
                              queue_s: f64, detected: u64, corrected: u64,
-                             injected: u64) {
+                             injected: u64, slo_target: f64) {
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
         m.errors_detected += detected;
@@ -119,6 +161,19 @@ impl Metrics {
         k.errors_detected += detected;
         k.errors_corrected += corrected;
         k.errors_injected += injected;
+        // burns are judged per completion against that completion's
+        // target; the ledger's *displayed* target stays stable only
+        // while every completion shares one target and degrades to 0
+        // ("mixed/untracked") otherwise — e.g. the single "pjrt" ledger
+        // entry spans BLAS levels with different level-derived targets
+        if k.completed == 1 {
+            k.slo_target = slo_target;
+        } else if k.slo_target != slo_target {
+            k.slo_target = 0.0;
+        }
+        if slo_target > 0.0 && e2e_s > slo_target {
+            k.slo_burns += 1;
+        }
         k.exec.push(exec_s);
         k.e2e.push(e2e_s);
         k.queue.push(queue_s);
@@ -126,6 +181,11 @@ impl Metrics {
 
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failed += 1;
+    }
+
+    /// Count a submission shed at the admission watermark.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
     }
 
     /// Count groups a drained batch bypassed on budget grounds.
@@ -142,40 +202,23 @@ impl Metrics {
         m.max_in_flight_threads = m.max_in_flight_threads.max(in_flight_threads);
     }
 
+    /// Record the pending-queue depth after an enqueue (keeps the
+    /// high-watermark the admission-control test asserts on).
+    pub fn record_queue_depth(&self, depth: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.max_queue_depth = m.max_queue_depth.max(depth);
+    }
+
     pub fn set_thread_budget(&self, budget: u64) {
         self.inner.lock().unwrap().thread_budget = budget;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        let mut kernels = HashMap::new();
-        let mut exec_by_routine: HashMap<String, Vec<f64>> = HashMap::new();
-        let mut e2e_by_routine: HashMap<String, Vec<f64>> = HashMap::new();
-        let mut e2e_all = Vec::new();
-        for (name, k) in &m.kernels {
-            kernels.insert(name.to_string(), KernelStats {
-                routine: k.routine.to_string(),
-                completed: k.completed,
-                errors_injected: k.errors_injected,
-                errors_detected: k.errors_detected,
-                errors_corrected: k.errors_corrected,
-                exec: Summary::from_samples(&k.exec),
-                e2e: Summary::from_samples(&k.e2e),
-                queue: Summary::from_samples(&k.queue),
-            });
-            exec_by_routine
-                .entry(k.routine.to_string())
-                .or_default()
-                .extend_from_slice(&k.exec);
-            e2e_by_routine
-                .entry(k.routine.to_string())
-                .or_default()
-                .extend_from_slice(&k.e2e);
-            e2e_all.extend_from_slice(&k.e2e);
-        }
-        MetricsSnapshot {
+        let mut snap = MetricsSnapshot {
             completed: m.completed,
             failed: m.failed,
+            shed: m.shed,
             errors_injected: m.errors_injected,
             errors_detected: m.errors_detected,
             errors_corrected: m.errors_corrected,
@@ -184,27 +227,122 @@ impl Metrics {
             deferrals: m.deferrals,
             thread_budget: m.thread_budget,
             max_in_flight_threads: m.max_in_flight_threads,
-            kernels,
-            exec_by_routine: exec_by_routine
-                .into_iter()
-                .map(|(k, v)| (k, Summary::from_samples(&v)))
-                .collect(),
-            e2e_by_routine: e2e_by_routine
-                .into_iter()
-                .map(|(k, v)| (k, Summary::from_samples(&v)))
-                .collect(),
-            e2e_overall: Summary::from_samples(&e2e_all),
+            max_queue_depth: m.max_queue_depth,
+            ..Default::default()
+        };
+        for (name, k) in &m.kernels {
+            snap.kernels.insert(name.to_string(), KernelStats {
+                routine: k.routine.to_string(),
+                completed: k.completed,
+                errors_injected: k.errors_injected,
+                errors_detected: k.errors_detected,
+                errors_corrected: k.errors_corrected,
+                slo_target: k.slo_target,
+                slo_burns: k.slo_burns,
+                exec: Summary::from_samples(&k.exec),
+                e2e: Summary::from_samples(&k.e2e),
+                queue: Summary::from_samples(&k.queue),
+                exec_samples: k.exec.clone(),
+                e2e_samples: k.e2e.clone(),
+                queue_samples: k.queue.clone(),
+            });
         }
+        snap.recompute_rollups();
+        snap
     }
 }
 
 impl MetricsSnapshot {
     /// All-kernel end-to-end latency summary — exact (computed from
-    /// every retained sample at snapshot time; the old implementation
-    /// averaged per-routine means, biasing the mean toward sparse
-    /// routines and fabricating percentiles).
+    /// every retained sample, not from per-group means).
     pub fn overall_e2e(&self) -> Summary {
         self.e2e_overall.clone()
+    }
+
+    /// Total SLO burns across the per-kernel ledger.
+    pub fn slo_burns(&self) -> u64 {
+        self.kernels.values().map(|k| k.slo_burns).sum()
+    }
+
+    /// Rebuild the per-routine and overall views from the per-kernel
+    /// retained samples.
+    fn recompute_rollups(&mut self) {
+        let mut exec_by_routine: HashMap<String, Vec<f64>> = HashMap::new();
+        let mut e2e_by_routine: HashMap<String, Vec<f64>> = HashMap::new();
+        let mut e2e_all = Vec::new();
+        for k in self.kernels.values() {
+            exec_by_routine
+                .entry(k.routine.clone())
+                .or_default()
+                .extend_from_slice(&k.exec_samples);
+            e2e_by_routine
+                .entry(k.routine.clone())
+                .or_default()
+                .extend_from_slice(&k.e2e_samples);
+            e2e_all.extend_from_slice(&k.e2e_samples);
+        }
+        self.exec_by_routine = exec_by_routine
+            .into_iter()
+            .map(|(k, v)| (k, Summary::from_samples(&v)))
+            .collect();
+        self.e2e_by_routine = e2e_by_routine
+            .into_iter()
+            .map(|(k, v)| (k, Summary::from_samples(&v)))
+            .collect();
+        self.e2e_overall = Summary::from_samples(&e2e_all);
+    }
+
+    /// Aggregate per-shard snapshots **exactly**: counters sum, kernel
+    /// ledgers concatenate their retained samples, and every latency
+    /// summary (per-kernel, per-routine, overall) is recomputed from
+    /// the merged samples — a merged mean/percentile is what a single
+    /// ledger over all completions would have reported, never a
+    /// mean-of-means. Capacity fields follow their semantics: thread
+    /// budgets sum (total cluster capacity) while the in-flight and
+    /// queue-depth watermarks take the max (per-shard peaks are not
+    /// simultaneous).
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::default();
+        for p in parts {
+            out.completed += p.completed;
+            out.failed += p.failed;
+            out.shed += p.shed;
+            out.errors_injected += p.errors_injected;
+            out.errors_detected += p.errors_detected;
+            out.errors_corrected += p.errors_corrected;
+            out.plan_cache_hits += p.plan_cache_hits;
+            out.plan_cache_misses += p.plan_cache_misses;
+            out.deferrals += p.deferrals;
+            out.thread_budget += p.thread_budget;
+            out.max_in_flight_threads =
+                out.max_in_flight_threads.max(p.max_in_flight_threads);
+            out.max_queue_depth = out.max_queue_depth.max(p.max_queue_depth);
+            for (name, k) in &p.kernels {
+                let dst = out.kernels.entry(name.clone()).or_default();
+                let first_part = dst.completed == 0;
+                dst.routine = k.routine.clone();
+                dst.completed += k.completed;
+                dst.errors_injected += k.errors_injected;
+                dst.errors_detected += k.errors_detected;
+                dst.errors_corrected += k.errors_corrected;
+                // same mixed-target rule as recording: shards that
+                // disagree on a kernel's target merge to 0 (untracked)
+                if first_part {
+                    dst.slo_target = k.slo_target;
+                } else if dst.slo_target != k.slo_target {
+                    dst.slo_target = 0.0;
+                }
+                dst.slo_burns += k.slo_burns;
+                dst.exec_samples.extend_from_slice(&k.exec_samples);
+                dst.e2e_samples.extend_from_slice(&k.e2e_samples);
+                dst.queue_samples.extend_from_slice(&k.queue_samples);
+            }
+        }
+        for k in out.kernels.values_mut() {
+            k.resummarize();
+        }
+        out.recompute_rollups();
+        out
     }
 }
 
@@ -215,8 +353,10 @@ mod tests {
     #[test]
     fn counters_accumulate_per_kernel() {
         let m = Metrics::new();
-        m.record_completion("dgemm/abft-fused", "dgemm", 0.1, 0.2, 0.05, 1, 1, 1);
-        m.record_completion("dgemm/tuned", "dgemm", 0.3, 0.4, 0.0, 0, 0, 0);
+        m.record_completion("dgemm/abft-fused", "dgemm", 0.1, 0.2, 0.05, 1, 1,
+                            1, 0.0);
+        m.record_completion("dgemm/tuned", "dgemm", 0.3, 0.4, 0.0, 0, 0, 0,
+                            0.0);
         m.record_failure();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
@@ -241,9 +381,11 @@ mod tests {
         // 3 fast dscal completions vs 1 slow dgemm: a mean-of-means
         // would report (0.1 + 0.9) / 2 = 0.5; the exact mean is 0.3.
         for _ in 0..3 {
-            m.record_completion("dscal/tuned", "dscal", 0.1, 0.1, 0.0, 0, 0, 0);
+            m.record_completion("dscal/tuned", "dscal", 0.1, 0.1, 0.0, 0, 0,
+                                0, 0.0);
         }
-        m.record_completion("dgemm/tuned", "dgemm", 0.9, 0.9, 0.0, 0, 0, 0);
+        m.record_completion("dgemm/tuned", "dgemm", 0.9, 0.9, 0.0, 0, 0, 0,
+                            0.0);
         let s = m.snapshot().overall_e2e();
         assert_eq!(s.n, 4);
         assert!((s.mean - 0.3).abs() < 1e-12, "mean {} not exact", s.mean);
@@ -259,9 +401,92 @@ mod tests {
         m.record_in_flight(3);
         m.record_deferrals(2);
         m.record_deferrals(0);
+        m.record_queue_depth(4);
+        m.record_queue_depth(2);
+        m.record_shed();
         let s = m.snapshot();
         assert_eq!(s.thread_budget, 8);
         assert_eq!(s.max_in_flight_threads, 5);
         assert_eq!(s.deferrals, 2);
+        assert_eq!(s.max_queue_depth, 4);
+        assert_eq!(s.shed, 1);
+    }
+
+    #[test]
+    fn slo_burns_count_completions_over_target() {
+        let m = Metrics::new();
+        // target 0.2s: one on-target, two over, one untracked (0 target)
+        m.record_completion("ddot/dmr", "ddot", 0.1, 0.1, 0.0, 0, 0, 0, 0.2);
+        m.record_completion("ddot/dmr", "ddot", 0.3, 0.3, 0.0, 0, 0, 0, 0.2);
+        m.record_completion("ddot/dmr", "ddot", 0.5, 0.5, 0.2, 0, 0, 0, 0.2);
+        m.record_completion("dgemm/tuned", "dgemm", 9.0, 9.0, 0.0, 0, 0, 0,
+                            0.0);
+        let s = m.snapshot();
+        let k = &s.kernels["ddot/dmr"];
+        assert_eq!(k.slo_target, 0.2);
+        assert_eq!(k.slo_burns, 2);
+        assert_eq!(s.kernels["dgemm/tuned"].slo_burns, 0);
+        assert_eq!(s.slo_burns(), 2);
+        // one ledger entry recorded under differing targets (the PJRT
+        // path spans BLAS levels): burns stay per-completion-correct,
+        // the displayed target degrades to 0 rather than lying
+        m.record_completion("pjrt", "dscal", 0.1, 0.1, 0.0, 0, 0, 0, 0.05);
+        m.record_completion("pjrt", "dgemm", 0.1, 0.1, 0.0, 0, 0, 0, 0.5);
+        let s = m.snapshot();
+        assert_eq!(s.kernels["pjrt"].slo_target, 0.0, "mixed targets");
+        assert_eq!(s.kernels["pjrt"].slo_burns, 1, "0.1 burns only 0.05");
+    }
+
+    /// The cluster-merge invariant: merging two shard snapshots is
+    /// indistinguishable from one ledger having recorded everything.
+    #[test]
+    fn merge_is_exact_not_mean_of_means() {
+        let shard0 = Metrics::new();
+        for _ in 0..3 {
+            shard0.record_completion("dscal/tuned", "dscal", 0.1, 0.1, 0.0,
+                                     0, 0, 0, 0.05);
+        }
+        shard0.record_shed();
+        shard0.set_thread_budget(4);
+        let shard1 = Metrics::new();
+        shard1.record_completion("dgemm/tuned", "dgemm", 0.9, 0.9, 0.0, 1, 1,
+                                 1, 0.05);
+        shard1.record_completion("dscal/tuned", "dscal", 0.2, 0.2, 0.0, 0, 0,
+                                 0, 0.05);
+        shard1.set_thread_budget(4);
+        let one = Metrics::new();
+        for _ in 0..3 {
+            one.record_completion("dscal/tuned", "dscal", 0.1, 0.1, 0.0, 0, 0,
+                                  0, 0.05);
+        }
+        one.record_completion("dgemm/tuned", "dgemm", 0.9, 0.9, 0.0, 1, 1, 1,
+                              0.05);
+        one.record_completion("dscal/tuned", "dscal", 0.2, 0.2, 0.0, 0, 0, 0,
+                              0.05);
+        let merged =
+            MetricsSnapshot::merge(&[shard0.snapshot(), shard1.snapshot()]);
+        let want = one.snapshot();
+        assert_eq!(merged.completed, want.completed);
+        assert_eq!(merged.shed, 1);
+        assert_eq!(merged.errors_detected, want.errors_detected);
+        assert_eq!(merged.thread_budget, 8, "budgets sum to cluster capacity");
+        // per-kernel ledgers merged sample-exactly
+        for name in ["dscal/tuned", "dgemm/tuned"] {
+            let (a, b) = (&merged.kernels[name], &want.kernels[name]);
+            assert_eq!(a.completed, b.completed, "{name}");
+            assert_eq!(a.slo_burns, b.slo_burns, "{name}");
+            assert!((a.e2e.mean - b.e2e.mean).abs() < 1e-12, "{name}");
+            assert_eq!(a.e2e.n, b.e2e.n, "{name}");
+        }
+        // the overall summary is sample-exact (0.28), not the
+        // mean-of-shard-means ((0.1 + 0.55) / 2 = 0.325)
+        assert_eq!(merged.e2e_overall.n, 5);
+        assert!((merged.e2e_overall.mean - want.e2e_overall.mean).abs()
+                < 1e-12);
+        assert!((merged.e2e_overall.mean - 0.28).abs() < 1e-12);
+        assert_eq!(merged.e2e_overall.max, 0.9);
+        // per-routine rollups survive the merge exactly
+        assert_eq!(merged.e2e_by_routine["dscal"].n, 4);
+        assert!((merged.e2e_by_routine["dscal"].mean - 0.125).abs() < 1e-12);
     }
 }

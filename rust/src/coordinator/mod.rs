@@ -6,43 +6,53 @@
 //! the serving shell around them — DESIGN.md §3). Dispatch is data, not
 //! control flow: every native kernel registers a descriptor (with a
 //! stable [`registry::KernelId`]) in the [`registry`], and the request
-//! path is organized as an **admission → schedule → execute** pipeline
-//! around the resolved [`plan::ExecutionPlan`]:
+//! path is organized as an **admission → route → schedule → execute**
+//! pipeline around the resolved [`plan::ExecutionPlan`]:
 //!
 //! ```text
-//!   clients ──> submit = ADMISSION ───> batcher = SCHEDULE ──> workers = EXECUTE
-//!               │  plan cache             │  sub-queues keyed      │
-//!               │  (routine×dim×          │  by planned kernel     ├─> execute_planned
-//!               │   policy×backend        │  id; thread-budget     │   (pre-resolved
-//!               │   → ExecutionPlan,      │  ledger defers MT      │    native kernel,
-//!               │   memoized, planner     │  batches that would    │    no lookup)
-//!               │   runs once per key)    │  oversubscribe,        └─> PJRT executor
-//!               │                         │  serial flows past         (unplanned jobs)
-//!               └─< responses (+ FtReport, executed-kernel name,
-//!                   per-kernel metrics ledger: exec/e2e/queue-wait,
-//!                   plan-cache hits/misses, deferrals, FT counters)
+//!   clients ──> submit = ADMISSION ──> ROUTE ────> batcher = SCHEDULE ──> workers = EXECUTE
+//!               │  plan cache            │  rendezvous   │  sub-queues keyed   │
+//!               │  (routine×dim×         │  hash on      │  by planned kernel  ├─> execute_planned
+//!               │   policy×backend       │  kernel id;   │  id; thread-budget  │   (pre-resolved
+//!               │   → ExecutionPlan,     │  queue-depth  │  ledger defers MT   │    native kernel,
+//!               │   memoized); depth     │  tiebreak     │  batches that would │    no lookup)
+//!               │   watermark sheds      │  over the     │  oversubscribe,     └─> PJRT executor
+//!               │   `Overloaded`         │  shards       │  serial flows past      (unplanned jobs)
+//!               └─< responses (+ FtReport, executed-kernel name, per-kernel
+//!                   metrics ledger: exec/e2e/queue-wait, SLO burns, plan-cache
+//!                   hits/misses, deferrals, sheds, FT counters — per shard,
+//!                   merged exactly by MetricsSnapshot::merge)
 //! ```
 //!
-//! - **Admission** ([`server::ServerHandle::submit`]): the request is
-//!   resolved once through the [`plan::PlanCache`]; its batch key is the
-//!   planned kernel's id, so shapes that run the same registered kernel
-//!   share a batch window.
+//! - **Admission** ([`cluster::ClusterHandle::submit`], or
+//!   [`server::ServerHandle::submit`] for a standalone shard): the
+//!   request is resolved once through the [`plan::PlanCache`]; its
+//!   batch key is the planned kernel's id, so shapes that run the same
+//!   registered kernel share a batch window. A shard at its
+//!   `admission_depth` watermark sheds the submission with a typed
+//!   [`server::Error::Overloaded`] instead of queueing unboundedly.
+//! - **Route** ([`cluster`]): deterministic rendezvous hashing on the
+//!   planned kernel id pins each kernel's traffic to one shard (keeping
+//!   kernel-keyed batching effective there); score ties fall to the
+//!   shard with the shallower live queue.
 //! - **Schedule** ([`batcher`]): per-key sub-queues with groups ordered
 //!   by oldest member — a drain is O(batch), and the cost-aware drain
-//!   lets the server's thread-budget ledger defer an MT batch (its
+//!   lets the shard's thread-budget ledger defer an MT batch (its
 //!   whole thread grant is debited while in flight) without blocking
 //!   serial traffic behind it.
 //! - **Execute** ([`router::Router::execute_planned`]): workers run the
 //!   pre-resolved plan; the per-request planner lookup survives only in
 //!   the [`router::Router::execute`] compatibility shim used by the
-//!   CLI, benches, and examples.
+//!   CLI, benches, and examples — itself a thin delegate to the planned
+//!   path.
 //!
 //! The PJRT engine is not `Send`, so exactly one executor thread owns it
 //! and serves artifact calls over channels ([`executor`]); PJRT jobs are
-//! admitted unplanned (the executor plans per-artifact) and batch by
-//! `(routine, dim)`.
+//! admitted unplanned (the executor plans per-artifact), batch by
+//! `(routine, dim)`, and route by a hash of the same key.
 
 pub mod batcher;
+pub mod cluster;
 pub mod executor;
 pub mod metrics;
 pub mod pjrt_backend;
@@ -53,7 +63,9 @@ pub mod router;
 pub mod server;
 pub mod trace;
 
+pub use cluster::{Cluster, ClusterConfig, ClusterHandle};
 pub use metrics::{KernelStats, MetricsSnapshot};
 pub use plan::{ExecutionPlan, PlanCache, Planner};
 pub use registry::{KernelDescriptor, KernelId, KernelRegistry};
 pub use request::{BlasRequest, BlasResponse, Backend};
+pub use server::{Error, Server, ServerHandle};

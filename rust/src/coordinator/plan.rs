@@ -123,9 +123,11 @@ impl<'p> Planner<'p> {
 ///
 /// Keyed by `(routine, dim, policy, backend)`: everything the
 /// [`Planner`] reads from a request, for one fixed profile. The server
-/// resolves each request against this cache when it is *submitted*, so
-/// workers only ever execute pre-resolved plans — the planner's
-/// registry scan runs once per distinct shape, not once per request.
+/// — or, in sharded mode, the cluster front-end, which owns one shared
+/// cache and also routes on the resulting kernel id — resolves each
+/// request against this cache when it is *submitted*, so workers only
+/// ever execute pre-resolved plans — the planner's registry scan runs
+/// once per distinct shape, not once per request.
 ///
 /// Backends without a native kernel variant (PJRT) are not planned
 /// here; `resolve` returns `None` for them without touching the

@@ -822,6 +822,17 @@ fn dsymm_tuned(c: &ExecCtx) -> KernelOut {
     (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
 }
 
+fn dsymm_tuned_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dsymm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dsymm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut cd = c0.data.clone();
+    parallel::dsymm_lower_mt(m, n, *alpha, &a.data, &b.data, *beta, &mut cd,
+                             &c.profile.gemm, c.threads);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
 fn dsymm_fused(c: &ExecCtx) -> KernelOut {
     let BlasRequest::Dsymm { alpha, a, b, beta, c: c0 } = c.req else {
         unreachable!("dsymm kernel planned for {}", c.req.routine())
@@ -891,6 +902,17 @@ fn dtrmm_tuned(c: &ExecCtx) -> KernelOut {
     let (m, n) = (a.rows, b.cols);
     let mut bd = b.data.clone();
     level3::dtrmm_lower(m, n, *alpha, &a.data, &mut bd, &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
+}
+
+fn dtrmm_tuned_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dtrmm { alpha, a, b } = c.req else {
+        unreachable!("dtrmm kernel planned for {}", c.req.routine())
+    };
+    let (m, n) = (a.rows, b.cols);
+    let mut bd = b.data.clone();
+    parallel::dtrmm_lower_mt(m, n, *alpha, &a.data, &mut bd, &c.profile.gemm,
+                             c.threads);
     (BlasResult::Matrix(Matrix::from_vec(m, n, bd)), FtReport::none())
 }
 
@@ -1310,6 +1332,8 @@ static ENTRIES: &[KernelDescriptor] = &[
            "default-parameter blocking", dsymm_blocked),
     serial("dsymm/tuned", "dsymm", Level::L3, Impl::Tuned,
            "packed symmetric frame", dsymm_tuned),
+    threaded("dsymm/tuned-mt", "dsymm", Scheme::None, UNPROTECTED,
+             "row-band parallel symmetric frame", dsymm_tuned_mt),
     protected("dsymm/abft-fused", "dsymm", Level::L3, Scheme::AbftFused,
               HYBRID_OR_WEIGHTED, "fused checksums in the symmetric frame",
               dsymm_fused),
@@ -1321,6 +1345,8 @@ static ENTRIES: &[KernelDescriptor] = &[
            "default-parameter blocking", dtrmm_blocked),
     serial("dtrmm/tuned", "dtrmm", Level::L3, Impl::Tuned,
            "packed triangular frame", dtrmm_tuned),
+    threaded("dtrmm/tuned-mt", "dtrmm", Scheme::None, UNPROTECTED,
+             "row-band parallel triangular frame", dtrmm_tuned_mt),
     protected("dtrmm/abft-fused", "dtrmm", Level::L3, Scheme::AbftFused,
               HYBRID_OR_WEIGHTED, "fused checksums in the triangular frame",
               dtrmm_fused),

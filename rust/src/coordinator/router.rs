@@ -79,10 +79,12 @@ impl Router {
 
     /// Execute a request under a policy with an optional planned fault.
     ///
-    /// Compatibility shim: plans per request before executing. The
-    /// serving pipeline resolves plans at admission instead
-    /// ([`Router::execute_planned`]); this entry remains for the CLI,
-    /// examples, and benches that execute outside a server.
+    /// Compatibility shim: plans per request, then delegates to the
+    /// same [`Router::execute_planned`] hot path the server's workers
+    /// use — there is one native execution code path. The serving
+    /// pipeline resolves plans at admission instead; this entry remains
+    /// for the CLI, examples, and benches that execute outside a
+    /// server.
     pub fn execute(&self, req: &BlasRequest, policy: FtPolicy,
                    fault: Option<Fault>) -> Result<BlasResponse> {
         match self.resolve(req, policy) {
@@ -95,10 +97,24 @@ impl Router {
                 let variant = native
                     .variant()
                     .expect("native backend without a kernel variant");
+                // one execution code path: execute_native is the thin
+                // planner wrapper over the same execute_plan hot path
+                // the server's workers use
                 Ok(execute_native(req, variant, &self.profile, policy, fault))
             }
         }
     }
+}
+
+/// Resolve a request against the registry, panicking on the impossible
+/// (the registry's totality test guarantees every shipped routine has a
+/// kernel for every policy).
+fn plan_or_panic(req: &BlasRequest, variant: Impl, profile: &Profile,
+                 policy: FtPolicy) -> ExecutionPlan {
+    Planner::new(profile).plan(req, variant, policy).unwrap_or_else(|| {
+        panic!("no registered kernel serves {}/{} under {}", req.routine(),
+               variant.name(), policy.name())
+    })
 }
 
 /// Run a resolved plan's kernel. Protection follows the hybrid strategy
@@ -130,20 +146,13 @@ pub fn execute_plan(req: &BlasRequest, plan: &ExecutionPlan,
     }
 }
 
-/// Plan-then-execute on the native kernels: resolve the request against
-/// the registry and run the planned kernel. The per-request planner
-/// lookup survives here as the compatibility entry for benches,
-/// examples, and oracle comparisons; the serving path plans once at
-/// admission and calls [`execute_plan`] through
-/// [`Router::execute_planned`].
+/// Thin compat wrapper over the planned path for callers without a
+/// [`Router`] (benches, examples, oracle comparisons): resolve the
+/// request against the registry and run the planned kernel through the
+/// same [`execute_plan`] entry the serving pipeline uses.
 pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
                       policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
-    let plan = Planner::new(profile)
-        .plan(req, variant, policy)
-        .unwrap_or_else(|| {
-            panic!("no registered kernel serves {}/{} under {}",
-                   req.routine(), variant.name(), policy.name())
-        });
+    let plan = plan_or_panic(req, variant, profile, policy);
     let mut resp = execute_plan(req, &plan, profile, fault);
     // report the caller's requested variant family (protected kernels
     // register under the tuned substrate, as before)

@@ -1,8 +1,12 @@
-//! The threaded serving loop: clients submit [`BlasRequest`]s and receive
-//! [`BlasResponse`]s over per-request channels; a worker pool drains the
-//! batching queue through the router; an optional injector arms planned
-//! faults (the error-injection experiments of paper §6.3 run through
-//! exactly this path).
+//! The per-shard serving engine: clients submit [`BlasRequest`]s and
+//! receive [`BlasResponse`]s over per-request channels; a worker pool
+//! drains the batching queue through the router; an optional injector
+//! arms planned faults (the error-injection experiments of paper §6.3
+//! run through exactly this path). A [`Server`] is one self-contained
+//! shard — worker pool, kernel-keyed batcher, thread-budget ledger,
+//! admission watermark, metrics ledger — and
+//! [`crate::coordinator::cluster::Cluster`] composes several of them
+//! behind a rendezvous-routing front-end.
 //!
 //! The pipeline is plan-aware end to end:
 //!
@@ -10,7 +14,10 @@
 //!    through the shared [`PlanCache`] (memoized by routine × dim ×
 //!    policy × backend) and enqueues the job keyed by **planned kernel
 //!    id**, so requests that run the same registered kernel batch
-//!    together regardless of shape.
+//!    together regardless of shape. When the profile sets an
+//!    `admission_depth`, a submission arriving at a full queue is shed
+//!    with a typed [`Error::Overloaded`] (and a `shed` count in the
+//!    ledger) instead of growing the queue without bound.
 //! 2. **Scheduling** — workers drain the oldest *admissible* group: a
 //!    thread-budget ledger debits each in-flight batch's thread grant
 //!    against the configured budget, deferring MT-kernel batches that
@@ -19,8 +26,9 @@
 //!    [`Router::execute_planned`]; no planner lookup happens on the hot
 //!    path. Unplanned (PJRT) jobs fall back to `Router::execute`.
 //!
-//! Completions land in the per-kernel metrics ledger together with the
-//! plan-cache and deferral counters.
+//! Completions land in the per-kernel metrics ledger — tagged with the
+//! profile's latency-SLO target for the executed kernel — together with
+//! the plan-cache, deferral, and shed counters.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -30,6 +38,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::config::SloTable;
 use crate::coordinator::batcher::{Batcher, Pending};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::plan::{ExecutionPlan, PlanCache};
@@ -38,6 +47,42 @@ use crate::coordinator::request::{Backend, BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
 use crate::ft::injector::{Injector, InjectorConfig};
 use crate::ft::policy::FtPolicy;
+
+/// Typed admission failures — distinguishable from kernel errors so
+/// clients can back off and retry instead of treating a shed as a
+/// computation failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// The target shard's pending queue is at its admission watermark;
+    /// the submission was shed (counted in the ledger) rather than
+    /// queued.
+    Overloaded { shard: usize, depth: usize, limit: usize },
+    /// The shard is shutting down: its workers are draining out, so a
+    /// queued job could never execute — reject instead of letting the
+    /// client's `recv` hang on a reply that will never come.
+    ShuttingDown { shard: usize },
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Overloaded { shard, depth, limit } => write!(
+                f,
+                "shard {shard} overloaded: queue depth {depth} at admission \
+                 limit {limit}"
+            ),
+            Error::ShuttingDown { shard } => {
+                write!(f, "shard {shard} is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result of an admission attempt: a receiver for the (eventual)
+/// response, or the typed admission rejection.
+pub type Admitted = std::result::Result<Receiver<Result<BlasResponse>>, Error>;
 
 /// Scheduling key of a queued job. Planned (native) jobs group by the
 /// kernel the admission-time planner chose, and carry the plan's thread
@@ -116,6 +161,12 @@ struct Shared {
     router: Arc<Router>,
     policy: FtPolicy,
     thread_budget: usize,
+    /// This engine's shard index (0 for a standalone server).
+    shard: usize,
+    /// Queue-depth watermark; `None` = unbounded admission.
+    admission_depth: Option<usize>,
+    /// Latency-SLO targets from the profile.
+    slo: SloTable,
     injector: Mutex<Injector>,
     steps: AtomicU64,
 }
@@ -143,15 +194,43 @@ impl ServerHandle {
     /// Admission does the planning: the request is resolved through the
     /// memoized plan cache and queued under its planned kernel id, so
     /// the worker that drains it executes the plan without another
-    /// lookup.
+    /// lookup. A shed submission ([`Error::Overloaded`]) surfaces as an
+    /// error on the returned receiver; use [`ServerHandle::try_submit`]
+    /// to get the typed rejection synchronously.
     pub fn submit(&self, req: BlasRequest) -> Receiver<Result<BlasResponse>> {
-        let (reply, rx) = channel();
+        match self.try_submit(req) {
+            Ok(rx) => rx,
+            Err(e) => {
+                let (reply, rx) = channel();
+                let _ = reply.send(Err(anyhow::Error::new(e)));
+                rx
+            }
+        }
+    }
+
+    /// Submit with typed admission control: plans the request, then
+    /// enqueues it unless the queue is at the admission watermark.
+    pub fn try_submit(&self, req: BlasRequest) -> Admitted {
         let policy = self.shared.policy;
         let backend = self.shared.router.resolve(&req, policy);
         let plan = self
             .shared
             .plans
             .resolve(req.routine(), req.dim(), policy, backend);
+        self.enqueue(req, plan)
+    }
+
+    /// Cluster entry: enqueue a request whose plan was already resolved
+    /// by the cluster's shared cache (no shard-local planning).
+    pub(crate) fn submit_planned(&self, req: BlasRequest,
+                                 plan: Option<ExecutionPlan>) -> Admitted {
+        self.enqueue(req, plan)
+    }
+
+    /// The single enqueue path: admission watermark, batch-key
+    /// derivation, push, wake.
+    fn enqueue(&self, req: BlasRequest, plan: Option<ExecutionPlan>)
+               -> Admitted {
         let key = match &plan {
             Some(p) => BatchKey::Planned {
                 kernel: p.kernel_id,
@@ -162,13 +241,34 @@ impl ServerHandle {
                 BatchKey::Direct { routine, dim }
             }
         };
+        let (reply, rx) = channel();
         {
             let mut s = self.shared.sched.lock().unwrap();
+            // checked under the scheduler lock: the last worker decides
+            // to exit while holding it (shutdown && empty queue), so a
+            // push racing shutdown either lands before that decision —
+            // and is drained — or is rejected here, never orphaned
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return Err(Error::ShuttingDown { shard: self.shared.shard });
+            }
+            if let Some(limit) = self.shared.admission_depth {
+                let depth = s.batcher.len();
+                if depth >= limit {
+                    drop(s);
+                    self.shared.metrics.record_shed();
+                    return Err(Error::Overloaded {
+                        shard: self.shared.shard,
+                        depth,
+                        limit,
+                    });
+                }
+            }
             s.batcher
                 .push(key, Job { req, plan, enqueued: Instant::now(), reply });
+            self.shared.metrics.record_queue_depth(s.batcher.len() as u64);
         }
         self.shared.cv.notify_one();
-        rx
+        Ok(rx)
     }
 
     /// Submit and wait.
@@ -176,6 +276,12 @@ impl ServerHandle {
         self.submit(req)
             .recv()
             .map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    /// Live pending-queue depth — the cluster's least-loaded routing
+    /// tiebreak reads this.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.sched.lock().unwrap().batcher.len()
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -202,6 +308,17 @@ impl Server {
     pub fn start(router: Router, policy: FtPolicy, workers: usize,
                  injection: Option<InjectorConfig>,
                  expected_requests: usize) -> Server {
+        Server::start_shard(0, Arc::new(router), policy, workers, injection,
+                            expected_requests)
+    }
+
+    /// Start one shard of a cluster: same engine, but sharing the
+    /// (read-only) router with its sibling shards and tagged with a
+    /// shard index for typed overload errors. The admission watermark
+    /// and SLO table come from the router's profile.
+    pub fn start_shard(shard: usize, router: Arc<Router>, policy: FtPolicy,
+                       workers: usize, injection: Option<InjectorConfig>,
+                       expected_requests: usize) -> Server {
         let injector = match injection {
             Some(cfg) => {
                 // plan faults across the expected request stream; positions
@@ -228,8 +345,11 @@ impl Server {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             metrics: Metrics::new(),
+            shard,
+            admission_depth: profile.admission_depth,
+            slo: profile.slo.clone(),
             plans: PlanCache::new(profile),
-            router: Arc::new(router),
+            router,
             policy,
             thread_budget,
             injector: Mutex::new(injector),
@@ -341,6 +461,13 @@ fn worker_loop(shared: Arc<Shared>) {
                 })
             };
             let injected = fault.is_some() as u64;
+            // SLO targets key off the executed kernel's BLAS level
+            // (plans know it; unplanned PJRT jobs fall back to the
+            // request's own level)
+            let level = match &job.plan {
+                Some(plan) => plan.kernel.level,
+                None => job.req.level(),
+            };
             // the hot path: pre-resolved plans execute directly; only
             // unplanned (PJRT) jobs go through the router's per-request
             // resolution shim
@@ -359,6 +486,7 @@ fn worker_loop(shared: Arc<Shared>) {
                         resp.ft.errors_detected,
                         resp.ft.errors_corrected,
                         injected,
+                        shared.slo.target(resp.kernel, level),
                     );
                     let _ = job.reply.send(Ok(resp));
                 }
@@ -511,6 +639,37 @@ mod tests {
         // group; the fruitless pass in between is not counted
         assert_eq!(snap.deferrals, 1);
         assert_eq!(snap.max_in_flight_threads, 5);
+    }
+
+    /// The admission error is typed (clients match on it to back off)
+    /// and survives an anyhow round-trip, which is how `submit`'s
+    /// receiver surfaces it.
+    #[test]
+    fn overloaded_error_is_typed_and_printable() {
+        let e = Error::Overloaded { shard: 1, depth: 8, limit: 8 };
+        assert_eq!(e.to_string(),
+                   "shard 1 overloaded: queue depth 8 at admission limit 8");
+        let any = anyhow::Error::new(e.clone());
+        assert_eq!(any.downcast_ref::<Error>(), Some(&e));
+        assert_eq!(Error::ShuttingDown { shard: 0 }.to_string(),
+                   "shard 0 is shutting down");
+    }
+
+    /// A submission racing shutdown is rejected with the typed error
+    /// instead of being queued behind workers that already exited
+    /// (which would hang the client's recv forever).
+    #[test]
+    fn submissions_after_shutdown_are_rejected_not_orphaned() {
+        let server = native_server(FtPolicy::None, None);
+        let handle = server.handle();
+        drop(server); // sets the shutdown flag and joins the workers
+        let req = BlasRequest::Ddot { x: vec![1.0; 8], y: vec![1.0; 8] };
+        assert!(matches!(handle.try_submit(req.clone()),
+                         Err(Error::ShuttingDown { shard: 0 })));
+        // the infallible entry surfaces it through the receiver
+        let err = handle.submit(req).recv().unwrap().unwrap_err();
+        assert_eq!(err.downcast_ref::<Error>(),
+                   Some(&Error::ShuttingDown { shard: 0 }));
     }
 
     /// A budget below one full MT grant could never admit an MT batch,

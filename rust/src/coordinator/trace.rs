@@ -1,5 +1,8 @@
 //! Workload traces: Poisson-arrival mixed-routine request streams for the
-//! end-to-end driver and the serving benches (DESIGN.md §6).
+//! end-to-end driver and the serving benches (DESIGN.md §6). An optional
+//! [`Burst`] overlay makes arrivals bursty (an on/off modulated Poisson
+//! process) to exercise the serving tier's queue-depth admission control
+//! — shedding only shows up when arrivals outrun the drain rate.
 
 use crate::coordinator::request::BlasRequest;
 use crate::util::matrix::Matrix;
@@ -25,6 +28,28 @@ impl Default for Mix {
     }
 }
 
+/// Bursty-arrival overlay: every `period` requests, the first `len`
+/// arrive at `factor × rate` (the on phase), the rest at the base rate.
+/// A deterministic on/off modulated Poisson process — the serving tier
+/// sees recurring arrival spikes that saturate a low admission
+/// watermark while the average rate stays moderate.
+#[derive(Clone, Debug)]
+pub struct Burst {
+    /// Requests per on/off cycle.
+    pub period: usize,
+    /// Leading requests of each cycle that arrive at the burst rate.
+    pub len: usize,
+    /// Arrival-rate multiplier during the on phase (> 1 = burstier).
+    pub factor: f64,
+}
+
+impl Default for Burst {
+    fn default() -> Self {
+        // half of each cycle arrives ~50× faster than the base rate
+        Burst { period: 16, len: 8, factor: 50.0 }
+    }
+}
+
 /// Trace generation config.
 #[derive(Clone, Debug)]
 pub struct TraceConfig {
@@ -42,6 +67,8 @@ pub struct TraceConfig {
     /// kernel, so this exercises the server's planned-kernel batching
     /// (shapes share a batch window when their plans agree).
     pub mat_dim_alt: Option<usize>,
+    /// Optional bursty-arrival overlay (None = plain Poisson arrivals).
+    pub burst: Option<Burst>,
 }
 
 impl Default for TraceConfig {
@@ -54,6 +81,7 @@ impl Default for TraceConfig {
             vec_len: 65536,
             mat_dim: 256,
             mat_dim_alt: None,
+            burst: None,
         }
     }
 }
@@ -82,8 +110,14 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
 
     let mut t = 0.0;
     let mut out = Vec::with_capacity(cfg.requests);
-    for _ in 0..cfg.requests {
-        t += rng.exponential(cfg.rate);
+    for i in 0..cfg.requests {
+        let rate = match &cfg.burst {
+            Some(b) if b.period > 0 && i % b.period < b.len => {
+                cfg.rate * b.factor.max(f64::MIN_POSITIVE)
+            }
+            _ => cfg.rate,
+        };
+        t += rng.exponential(rate);
         let mut pick = rng.uniform() * total;
         let mut idx = 0;
         for (i, w) in weights.iter().enumerate() {
@@ -178,6 +212,40 @@ mod tests {
         let base = t.iter().filter(|e| e.request.dim() == 16).count();
         assert_eq!(alt + base, 400);
         assert!(alt > 100 && base > 100, "both shapes present: {alt}/{base}");
+    }
+
+    #[test]
+    fn burst_overlay_compresses_on_phase_gaps() {
+        let base = TraceConfig { requests: 400, vec_len: 8, mat_dim: 8,
+                                 rate: 100.0, ..Default::default() };
+        let burst = Burst { period: 10, len: 5, factor: 100.0 };
+        let cfg = TraceConfig { burst: Some(burst.clone()), ..base.clone() };
+        let t = generate(&cfg);
+        // request i's arrival gap was drawn at the rate phase i selects
+        let mut on = Vec::new();
+        let mut off = Vec::new();
+        let mut prev = 0.0;
+        for (i, e) in t.iter().enumerate() {
+            let gap = e.at_seconds - prev;
+            prev = e.at_seconds;
+            if i % burst.period < burst.len {
+                on.push(gap);
+            } else {
+                off.push(gap);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert_eq!(on.len(), 200);
+        assert_eq!(off.len(), 200);
+        // 100× rate ⇒ ~100× tighter gaps; 10× leaves generous slack
+        assert!(mean(&on) * 10.0 < mean(&off),
+                "burst gaps not compressed: on={} off={}", mean(&on),
+                mean(&off));
+        // the overlay only modulates arrival times, never the mix
+        let plain = generate(&base);
+        for (a, b) in t.iter().zip(&plain) {
+            assert_eq!(a.request.routine(), b.request.routine());
+        }
     }
 
     #[test]

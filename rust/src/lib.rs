@@ -19,9 +19,13 @@
 //!   ABFT) registers a descriptor in the kernel *registry*; a *planner*
 //!   resolves request × FT policy × profile into an execution plan
 //!   (kernel, thread grant, protection scheme) once at admission, via a
-//!   memoized plan cache; the batcher schedules by planned kernel id
+//!   memoized plan cache; a *cluster* front-end routes each admitted
+//!   request to a shard by rendezvous hashing on the planned kernel id
+//!   (shedding typed `Overloaded` errors at a per-shard queue-depth
+//!   watermark); each shard's batcher schedules by planned kernel id
 //!   under a thread-budget ledger, and workers execute pre-resolved
-//!   plans. Completions land in a per-kernel metrics ledger. Dispatch
+//!   plans. Completions land in per-shard, per-kernel metrics ledgers
+//!   (latencies, SLO burns, FT counters) that merge exactly. Dispatch
 //!   is data — a descriptor table — not nested match arms.
 //! - [`bench`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.

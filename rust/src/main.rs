@@ -15,12 +15,12 @@ use anyhow::{anyhow, bail, Result};
 use ftblas::bench::{self, BenchCtx};
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
+use ftblas::coordinator::cluster::{Cluster, ClusterConfig};
 use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
 use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
 use ftblas::coordinator::router::{execute_native, Router};
-use ftblas::coordinator::server::Server;
-use ftblas::coordinator::trace::{self, TraceConfig};
+use ftblas::coordinator::trace::{self, Burst, TraceConfig};
 use ftblas::ft::injector::{Fault, InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::Matrix;
@@ -82,10 +82,14 @@ USAGE:
              [--variant naive|blocked|tuned] [--threads T]
              [--ft none|hybrid|abft-unfused|abft-weighted] [--inject]
              [--profile P]
-  ftblas serve [--requests N] [--ft P] [--workers W] [--max-batch B]
-             [--thread-budget T] [--threads T] [--vec-len N] [--mat-dim N]
-             [--inject] [--profile P]
-  ftblas bench --exp table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
+  ftblas serve [--requests N] [--ft P] [--shards S] [--admission-depth D]
+             [--workers W] [--max-batch B] [--thread-budget T] [--threads T]
+             [--vec-len N] [--mat-dim N] [--burst F] [--inject] [--profile P]
+             (--shards: engines in the cluster, routed by planned kernel;
+              --admission-depth: per-shard queue watermark — excess
+              submissions shed as `Overloaded`; --burst: arrival-rate
+              multiplier for the trace's on phases)
+  ftblas bench --exp smoke|table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
   ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
              ablation-threads|ablation-weighted)"
@@ -214,9 +218,10 @@ fn results_close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
     }
 }
 
-/// Drive the plan-aware serving pipeline with a mixed trace and print
-/// the per-kernel metrics ledger: admission-time plans, kernel-keyed
-/// batches, the thread-budget ledger, plan-cache hit rates.
+/// Drive the sharded serving tier with a mixed trace and print the
+/// merged per-kernel metrics ledger: admission-time plans, rendezvous
+/// routing across shards, queue-depth shedding, kernel-keyed batches,
+/// the thread-budget ledgers, SLO burns, plan-cache hit rates.
 fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     let requests = args.get_usize("requests", 200)?.max(1);
     let policy = FtPolicy::by_name(&args.get("ft", "hybrid"))
@@ -224,11 +229,26 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     profile.threads = args.get_usize("threads", profile.threads)?.max(1);
     profile.workers = args.get_usize("workers", profile.workers)?.max(1);
     profile.max_batch = args.get_usize("max-batch", profile.max_batch)?.max(1);
+    profile.shards = args.get_usize("shards", profile.shards)?.max(1);
     if args.has("thread-budget") {
         profile.thread_budget =
             Some(args.get_usize("thread-budget", 0)?.max(1));
     }
+    if args.has("admission-depth") {
+        profile.admission_depth =
+            Some(args.get_usize("admission-depth", 0)?.max(1));
+    }
     let mat_dim = args.get_usize("mat-dim", 128)?;
+    // `--burst` alone takes the default 50× on-phase factor
+    let burst = if args.has("burst") {
+        let factor = match args.get("burst", "50").as_str() {
+            "true" => 50.0,
+            v => v.parse::<f64>().map_err(|_| anyhow!("--burst wants a number"))?,
+        };
+        Some(Burst { factor: factor.max(1.0), ..Default::default() })
+    } else {
+        None
+    };
     let cfg = TraceConfig {
         requests,
         vec_len: args.get_usize("vec-len", 16384)?,
@@ -236,33 +256,66 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
         // a second MT-eligible DGEMM shape shows kernel-keyed batching
         mat_dim_alt: Some((mat_dim / 2).max(profile.gemm.mr * 2)),
         seed: args.get_usize("seed", 0x5E12)? as u64,
+        burst,
         ..Default::default()
     };
-    println!("serve: {} requests on {} (workers={}, threads={}, \
-              max_batch={}, policy={})",
-             requests, profile.name, profile.workers, profile.threads,
-             profile.max_batch, policy.name());
+    println!("serve: {} requests on {} (shards={}, workers/shard={}, \
+              threads={}, max_batch={}, admission_depth={}, policy={})",
+             requests, profile.name, profile.shards, profile.workers,
+             profile.threads, profile.max_batch,
+             profile.admission_depth.map_or("unbounded".to_string(),
+                                            |d| d.to_string()),
+             policy.name());
     let entries = trace::generate(&cfg);
     let injection = args.has("inject").then(|| InjectorConfig {
         count: (requests / 8).max(1),
         ..Default::default()
     });
-    let workers = profile.workers;
+    let cluster_cfg = ClusterConfig {
+        injection,
+        expected_requests: requests,
+        ..ClusterConfig::from_profile(&profile)
+    };
     let router = Router::native_only(profile, Backend::NativeTuned);
-    let server = Server::start(router, policy, workers, injection, requests);
-    let handle = server.handle();
+    let cluster = Cluster::start(router, policy, cluster_cfg);
+    let handle = cluster.handle();
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = entries
-        .iter()
-        .map(|e| handle.submit(e.request.clone()))
-        .collect();
+    let mut rxs = Vec::new();
+    let mut rejected = 0u64;
+    // with a burst overlay the trace's arrival times are the point:
+    // pace submissions by them so the on-phases actually slam the
+    // admission watermark while off-phases let the shards drain.
+    // Without --burst, submissions stay un-paced (as fast as possible).
+    let paced = cfg.burst.is_some();
+    for e in &entries {
+        if paced {
+            let at = t0 + std::time::Duration::from_secs_f64(e.at_seconds);
+            let wait = at.saturating_duration_since(std::time::Instant::now());
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        match handle.submit(e.request.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1, // typed Overloaded: client backs off
+        }
+    }
     for rx in rxs {
         rx.recv()??;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = server.shutdown();
-    println!("completed {} requests in {:.2}s -> {:.1} req/s\n",
-             snap.completed, wall, snap.completed as f64 / wall);
+    let shard_snaps = cluster.shard_metrics();
+    let snap = cluster.shutdown();
+    println!("completed {} of {} requests in {:.2}s -> {:.1} req/s \
+              ({rejected} shed at admission)\n",
+             snap.completed, requests, wall, snap.completed as f64 / wall);
+    for (i, s) in shard_snaps.iter().enumerate() {
+        println!("shard {i}: {} completed, {} shed, e2e p99={:.2}ms, \
+                  max queue depth {}",
+                 s.completed, s.shed, s.overall_e2e().p99 * 1e3,
+                 s.max_queue_depth);
+    }
+    println!();
     ftblas::bench::harness::print_ledger(&snap);
     Ok(())
 }

@@ -1,0 +1,239 @@
+//! Integration tests over the sharded serving tier: rendezvous routing
+//! across shards, exact per-shard ledger merges, queue-depth admission
+//! control under saturating traffic, and cluster-wide fault injection.
+
+use ftblas::config::Profile;
+use ftblas::coordinator::cluster::{Cluster, ClusterConfig, Error};
+use ftblas::coordinator::metrics::MetricsSnapshot;
+use ftblas::coordinator::request::{Backend, BlasRequest};
+use ftblas::coordinator::router::Router;
+use ftblas::coordinator::trace::{self, Burst, TraceConfig};
+use ftblas::ft::injector::InjectorConfig;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::matrix::{allclose, Matrix};
+use ftblas::util::rng::Rng;
+
+fn native_cluster(profile: Profile, policy: FtPolicy, shards: usize,
+                  workers: usize, injection: Option<InjectorConfig>,
+                  expected: usize) -> Cluster {
+    let workers_per_shard = workers;
+    let router = Router::native_only(profile, Backend::NativeTuned);
+    Cluster::start(router, policy, ClusterConfig {
+        shards,
+        workers_per_shard,
+        injection,
+        expected_requests: expected,
+    })
+}
+
+/// A mixed trace on a two-shard cluster lands on both shards, each
+/// kernel's traffic stays on exactly one shard (rendezvous routing on
+/// the planned kernel id), and the merged snapshot is the exact
+/// aggregation of the per-shard ledgers — counters sum and the overall
+/// latency summary equals the sample-weighted combination, not a
+/// mean-of-shard-means.
+#[test]
+fn two_shard_trace_merges_ledgers_exactly() {
+    let cfg = TraceConfig {
+        requests: 80,
+        vec_len: 2048,
+        mat_dim: 48,
+        ..Default::default()
+    };
+    let entries = trace::generate(&cfg);
+    let cluster = native_cluster(Profile::default(), FtPolicy::Hybrid, 2, 2,
+                                 None, entries.len());
+    let handle = cluster.handle();
+    let rxs: Vec<_> = entries
+        .iter()
+        .map(|e| handle.submit(e.request.clone()).expect("unbounded admission"))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let shards = cluster.shard_metrics();
+    let merged = cluster.shutdown();
+    assert_eq!(shards.len(), 2);
+    assert!(shards.iter().all(|s| s.completed > 0),
+            "the trace must drive both shards: {:?}",
+            shards.iter().map(|s| s.completed).collect::<Vec<_>>());
+    // counters aggregate exactly
+    assert_eq!(merged.completed, 80);
+    assert_eq!(merged.completed,
+               shards.iter().map(|s| s.completed).sum::<u64>());
+    assert_eq!(merged.failed, 0);
+    assert_eq!(merged.shed, 0);
+    // kernel-keyed routing: each executed kernel lives on exactly one
+    // shard, and its merged ledger equals that shard's
+    for (name, k) in &merged.kernels {
+        let owners: Vec<u64> = shards
+            .iter()
+            .filter_map(|s| s.kernels.get(name).map(|k| k.completed))
+            .collect();
+        assert_eq!(owners.len(), 1,
+                   "{name}: kernel traffic split across shards");
+        assert_eq!(owners[0], k.completed, "{name}: merge drifted");
+    }
+    // the merged overall summary is computed from all samples: its mean
+    // must equal the completion-weighted combination of shard means
+    let weighted: f64 = shards
+        .iter()
+        .map(|s| s.e2e_overall.mean * s.e2e_overall.n as f64)
+        .sum::<f64>() / merged.completed as f64;
+    assert_eq!(merged.e2e_overall.n as u64, merged.completed);
+    assert!((merged.overall_e2e().mean - weighted).abs() < 1e-12,
+            "merged mean {} != exact weighted mean {weighted}",
+            merged.overall_e2e().mean);
+    // planning happened once per distinct shape in the shared cache
+    assert_eq!(merged.plan_cache_hits + merged.plan_cache_misses, 80);
+    assert!(merged.plan_cache_hits > merged.plan_cache_misses);
+    assert!(shards.iter().all(|s| s.plan_cache_misses == 0),
+            "shard-local caches must be bypassed in cluster mode");
+}
+
+/// Saturation: a bursty all-DGEMM trace against a depth-1 watermark and
+/// one worker per shard. Excess submissions come back as the typed
+/// `Error::Overloaded` (never silent queue growth — the queue-depth
+/// watermark holds), accepted requests still complete with correct
+/// results, and the merged snapshot accounts for every shed.
+#[test]
+fn saturating_trace_sheds_typed_overloads() {
+    let n = 192;
+    let profile = Profile::default().with_admission_depth(1);
+    let cluster = native_cluster(profile, FtPolicy::Hybrid, 2, 1, None, 0);
+    let handle = cluster.handle();
+    let mut rng = Rng::new(0x0C1);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let mut want = vec![0.0; n * n];
+    ftblas::blas::naive::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut want);
+    // a burst-shaped submission storm: every request identical, so all
+    // of them route to one shard and pile onto its depth-1 queue far
+    // faster than a single worker drains ~30ms kernels
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..16 {
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        };
+        match handle.submit(req) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert!(matches!(e, Error::Overloaded { limit: 1, .. }),
+                        "unexpected rejection: {e}");
+                shed += 1;
+            }
+        }
+    }
+    assert!(!accepted.is_empty(), "the first submission is always admitted");
+    assert!(shed >= 1, "a saturating storm must shed");
+    for rx in accepted {
+        let resp = rx.recv().unwrap().unwrap();
+        let got = resp.result.as_matrix().unwrap();
+        assert!(allclose(&got.data, &want, 1e-7, 1e-7),
+                "accepted request returned a wrong result");
+    }
+    let merged = cluster.shutdown();
+    assert_eq!(merged.shed, shed, "every rejection lands in the ledger");
+    assert_eq!(merged.completed + merged.shed, 16);
+    assert_eq!(merged.failed, 0);
+    assert!(merged.max_queue_depth <= 1,
+            "queue grew past the admission watermark: {}",
+            merged.max_queue_depth);
+}
+
+/// Cluster-wide injection: per-shard injectors fire independently and
+/// the merged FT counters balance (every injected fault detected and
+/// corrected), with per-kernel attribution intact — the per-stream
+/// fault-accounting shape, merged at the end.
+#[test]
+fn injection_merges_ft_counters_across_shards() {
+    let inj = InjectorConfig { count: 8, ..Default::default() };
+    let cluster = native_cluster(Profile::default(), FtPolicy::Hybrid, 2, 2,
+                                 Some(inj), 48);
+    let handle = cluster.handle();
+    let mut rng = Rng::new(0x1F7);
+    let l = Matrix::random_lower_triangular(64, &mut rng);
+    let mut rxs = Vec::new();
+    let mut oracle = Vec::new();
+    for i in 0..48 {
+        if i % 2 == 0 {
+            let b = rng.normal_vec(64);
+            let mut want = b.clone();
+            ftblas::blas::naive::dtrsv_lower(64, &l.data, &mut want);
+            oracle.push(Some(want));
+            rxs.push(handle.submit(BlasRequest::Dtrsv { a: l.clone(), b })
+                .unwrap());
+        } else {
+            oracle.push(None);
+            rxs.push(handle
+                .submit(BlasRequest::Ddot {
+                    x: rng.normal_vec(1024),
+                    y: rng.normal_vec(1024),
+                })
+                .unwrap());
+        }
+    }
+    for (rx, want) in rxs.into_iter().zip(oracle) {
+        let resp = rx.recv().unwrap().unwrap();
+        if let Some(want) = want {
+            let got = resp.result.as_vector().unwrap();
+            assert!(allclose(got, &want, 1e-8, 1e-8));
+        }
+    }
+    let merged = cluster.shutdown();
+    assert_eq!(merged.completed, 48);
+    assert!(merged.errors_injected >= 1, "planned faults should fire");
+    assert_eq!(merged.errors_detected, merged.errors_injected);
+    assert_eq!(merged.errors_corrected, merged.errors_detected);
+    // attribution: FT counters sit on the kernels that ran protected
+    let ft_total: u64 = merged
+        .kernels
+        .values()
+        .map(|k| k.errors_detected)
+        .sum();
+    assert_eq!(ft_total, merged.errors_detected);
+}
+
+/// The bursty trace overlay drives shedding through the real pipeline:
+/// with plain Poisson pacing ignored (submissions are immediate) the
+/// burst just documents intent, so this test instead checks the merged
+/// SLO view — burns are counted per kernel and the totals roll up.
+#[test]
+fn slo_burns_roll_up_in_the_merged_ledger() {
+    // impossible 1ns targets: every completion burns
+    let slo = ftblas::config::SloTable::by_level(1e-9, 1e-9, 1e-9);
+    let profile = Profile::default().with_slo(slo);
+    let cluster = native_cluster(profile, FtPolicy::None, 2, 2, None, 0);
+    let handle = cluster.handle();
+    let cfg = TraceConfig {
+        requests: 24,
+        vec_len: 1024,
+        mat_dim: 32,
+        burst: Some(Burst::default()),
+        seed: 0x510,
+        ..Default::default()
+    };
+    let rxs: Vec<_> = trace::generate(&cfg)
+        .iter()
+        .map(|e| handle.submit(e.request.clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let shards = cluster.shard_metrics();
+    let merged = cluster.shutdown();
+    assert_eq!(merged.completed, 24);
+    assert_eq!(merged.slo_burns(), 24, "1ns targets must all burn");
+    assert_eq!(merged.slo_burns(),
+               shards.iter().map(MetricsSnapshot::slo_burns).sum::<u64>());
+    for k in merged.kernels.values() {
+        assert_eq!(k.slo_burns, k.completed, "{}: burns != completions",
+                   k.routine);
+        assert!(k.slo_target > 0.0);
+    }
+}

@@ -6,11 +6,14 @@
 //! Uses the repo's seeded check harness (`util::check`) — proptest is not
 //! vendored in this offline image; see DESIGN.md §9.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
 use ftblas::coordinator::batcher::Batcher;
+use ftblas::coordinator::cluster::{route, route_key};
+use ftblas::coordinator::plan::PlanCache;
+use ftblas::coordinator::registry::KernelRegistry;
 use ftblas::coordinator::request::{Backend, BlasRequest, Level};
 use ftblas::coordinator::router::{execute_native, Router};
 use ftblas::coordinator::server::Server;
@@ -299,6 +302,78 @@ fn server_ledger_balances() {
                        snap.failed, total))?;
         ensure(snap.errors_detected == 0 && snap.errors_corrected == 0,
                "phantom errors in ledger")
+    });
+}
+
+// ------------------------------------------------------- shard routing
+
+/// Determinism: the same `(routine, dim, policy)` resolves — through a
+/// fresh plan cache each time — to the same routing key and the same
+/// shard at any fixed shard count, for both serving profiles. This is
+/// the property that keeps a kernel's traffic pinned to one shard, so
+/// shard-local kernel-keyed batching stays effective.
+#[test]
+fn shard_routing_is_deterministic() {
+    check("cluster-routing-deterministic", 40, |g| {
+        let profile = if g.rng.below(2) == 0 {
+            Profile::skylake_sim()
+        } else {
+            Profile::cascade_sim()
+        };
+        let routines = ["dscal", "ddot", "dnrm2", "dgemv", "dtrsv", "dgemm",
+                        "dsymm", "dtrmm", "dtrsm"];
+        let routine = routines[g.rng.below(routines.len())];
+        let dim = [32usize, 48, 64, 96, 128][g.rng.below(5)];
+        let policy = FtPolicy::ALL[g.rng.below(4)];
+        let key = |_: usize| -> Result<u64, String> {
+            // a fresh cache per resolution: memoization cannot be what
+            // makes routing stable
+            let cache = PlanCache::new(profile.clone());
+            let plan = cache.resolve(routine, dim, policy,
+                                     Backend::NativeTuned);
+            ensure(plan.is_some(), "native requests always plan")?;
+            Ok(route_key(plan.as_ref(), routine, dim))
+        };
+        let (k1, k2) = (key(0)?, key(1)?);
+        ensure(k1 == k2, format!("{routine}/{dim}: routing key unstable"))?;
+        for shards in 1..=6 {
+            let depths = vec![0usize; shards];
+            ensure(route(k1, &depths) == route(k2, &depths),
+                   format!("{routine}/{dim}: shard flapped at {shards}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Coverage: the registry's kernel-id key space spreads over every
+/// shard for the cluster sizes the profiles ship (no shard is
+/// unreachable, so a mixed workload uses the whole tier).
+#[test]
+fn shard_routing_covers_all_shards() {
+    let ids = KernelRegistry::global().entries().len() as u64;
+    for shards in [2usize, 3, 4, 8] {
+        let depths = vec![0usize; shards];
+        let used: HashSet<usize> =
+            (0..ids).map(|k| route(k, &depths)).collect();
+        assert_eq!(used.len(), shards,
+                   "{shards} shards: kernel ids only reach {:?}", used);
+    }
+}
+
+/// Unplanned (direct) keys are shape-sensitive but still deterministic.
+#[test]
+fn direct_route_keys_are_stable_and_shape_keyed() {
+    check("cluster-routing-direct", 30, |g| {
+        let dim = 1 + g.rng.below(4096);
+        let a = route_key(None, "dgemm", dim);
+        let b = route_key(None, "dgemm", dim);
+        ensure(a == b, "direct key unstable")?;
+        ensure(a >> 63 == 1, "direct keys carry the namespace tag")?;
+        ensure(route_key(None, "dgemm", dim) != route_key(None, "dsymm", dim),
+               "routine must enter the key")?;
+        ensure(route_key(None, "dgemm", dim)
+                   != route_key(None, "dgemm", dim + 1),
+               "shape must enter the key")
     });
 }
 
