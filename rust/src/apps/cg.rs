@@ -17,10 +17,15 @@ use crate::util::matrix::Matrix;
 /// Convergence report of a CG run.
 #[derive(Clone, Debug)]
 pub struct CgResult {
+    /// The solution iterate.
     pub x: Vec<f64>,
+    /// Iterations taken.
     pub iterations: usize,
+    /// Final relative residual.
     pub residual: f64,
+    /// Whether the tolerance was reached.
     pub converged: bool,
+    /// Accumulated FT counters across all BLAS calls.
     pub ft: FtReport,
 }
 

@@ -15,7 +15,9 @@ use crate::util::matrix::Matrix;
 /// permutation `piv` (row i was swapped with `piv[i]` at step i).
 #[derive(Clone, Debug)]
 pub struct LuFactors {
+    /// Packed L (unit lower) and U factors.
     pub lu: Matrix,
+    /// Row-pivot permutation.
     pub piv: Vec<usize>,
 }
 

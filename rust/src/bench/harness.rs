@@ -13,9 +13,11 @@ use crate::util::stats::{self, Summary};
 
 /// Context for a bench run.
 pub struct BenchCtx {
+    /// Machine profile the run measures under.
     pub profile: Profile,
     /// Keep the executor alive for the PJRT backend's lifetime.
     pub executor: Option<PjrtExecutor>,
+    /// The PJRT backend, when artifacts are available.
     pub pjrt: Option<PjrtBackend>,
     /// Fewer reps / smaller sizes for CI-style runs.
     pub quick: bool,
@@ -96,9 +98,13 @@ impl BenchCtx {
 /// A printed result row.
 #[derive(Clone, Debug)]
 pub struct Row {
+    /// Row label (variant / size).
     pub label: String,
+    /// Measured throughput.
     pub gflops: f64,
+    /// Best measured seconds.
     pub seconds: f64,
+    /// Free-form annotation (paper reference, fault counts, ...).
     pub note: String,
 }
 
@@ -207,8 +213,12 @@ pub fn print_ledger(snap: &MetricsSnapshot) {
     };
     println!("plan cache: {} hits / {} misses ({hit_pct:.1}% hit)",
              snap.plan_cache_hits, snap.plan_cache_misses);
-    println!("thread budget: {} (max in-flight {}, {} deferrals)",
-             snap.thread_budget, snap.max_in_flight_threads, snap.deferrals);
+    println!("thread budget: {} (max in-flight {}, {} deferrals, \
+              {} starvation reserves)",
+             snap.thread_budget, snap.max_in_flight_threads, snap.deferrals,
+             snap.starvation_reserves);
+    println!("scaling: {} up / {} down, {} kernel-id keys migrated",
+             snap.scale_ups, snap.scale_downs, snap.keys_migrated);
     println!("errors: injected={} detected={} corrected={}",
              snap.errors_injected, snap.errors_detected,
              snap.errors_corrected);
@@ -225,6 +235,8 @@ pub fn overhead_pct(base_secs: f64, ft_secs: f64) -> f64 {
     (1.0 - base_secs / ft_secs) * 100.0
 }
 
+/// Print an FT-vs-baseline overhead table with the paper's reference
+/// column.
 pub fn print_overhead_table(title: &str,
                             rows: &[(String, f64, f64, Option<f64>)]) {
     // rows: (label, base_secs, ft_secs, paper_pct)

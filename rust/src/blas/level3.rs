@@ -6,10 +6,15 @@
 /// in config.rs; these are the Skylake-sim defaults.
 #[derive(Clone, Copy, Debug)]
 pub struct GemmParams {
+    /// Row-panel block (L2-cache resident A panel).
     pub mc: usize,
+    /// Column block (L3-resident B panel).
     pub nc: usize,
+    /// Depth block (packed panel depth).
     pub kc: usize,
+    /// Micro-kernel rows (register tile).
     pub mr: usize,
+    /// Micro-kernel columns (register tile).
     pub nr: usize,
 }
 

@@ -38,8 +38,10 @@ pub enum Impl {
 }
 
 impl Impl {
+    /// Every variant, in bench/report order.
     pub const ALL: [Impl; 3] = [Impl::Naive, Impl::Blocked, Impl::Tuned];
 
+    /// CLI/report name of the variant.
     pub fn name(&self) -> &'static str {
         match self {
             Impl::Naive => "naive",

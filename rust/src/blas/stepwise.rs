@@ -23,19 +23,26 @@ use std::hint::black_box;
 
 use crate::blas::level1::prefetch;
 
+/// Simulated vector width (AVX-512 lanes of f64).
 pub const LANES: usize = 8;
+/// Unroll factor of the vectorized ladder steps.
 pub const UNROLL: usize = 4;
 
 /// One ladder step: paired FT / non-FT implementations.
 #[derive(Clone, Copy)]
 pub struct Step {
+    /// Step label, as printed by the Fig. 7 bench.
     pub name: &'static str,
     /// paper's measured FT overhead at this step, for EXPERIMENTS.md
     pub paper_overhead_pct: f64,
+    /// The unprotected DSCAL at this step.
     pub ori: fn(f64, &mut [f64]),
+    /// The DMR-protected DSCAL (optional injected fault; returns
+    /// corrected-error count).
     pub ft: fn(f64, &mut [f64], Option<(usize, f64)>) -> usize,
 }
 
+/// The six-step Fig. 7 ladder, slowest to fastest.
 pub const STEPS: [Step; 6] = [
     Step { name: "scalar", paper_overhead_pct: 50.8, ori: v0_scalar, ft: v0_scalar_ft },
     Step { name: "vectorized", paper_overhead_pct: 5.2, ori: v1_vec, ft: v1_vec_ft },
@@ -76,12 +83,15 @@ fn mulsd(a: f64, b: f64) -> f64 {
     a * b
 }
 
+/// Step 0: scalar `mulsd` loop.
 pub fn v0_scalar(alpha: f64, x: &mut [f64]) {
     for v in x.iter_mut() {
         *v = mulsd(alpha, *v); // mulsd
     }
 }
 
+/// Step 0 FT: every multiply issued twice and compared (paper's
+/// ~50 % overhead point).
 pub fn v0_scalar_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
     let mut errs = 0;
     let a2 = black_box(alpha);
@@ -106,6 +116,7 @@ pub fn v0_scalar_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> 
 
 // ------------------------------------------------------ step 1 vectorized
 
+/// Step 1: vectorized (`vmulpd`-shaped) loop.
 pub fn v1_vec(alpha: f64, x: &mut [f64]) {
     let mut chunks = x.chunks_exact_mut(LANES);
     for c in &mut chunks {
@@ -187,6 +198,8 @@ fn lane_mask(primary: &[f64; LANES], dup: &[f64; LANES]) -> u32 {
     mask
 }
 
+/// Step 1 FT: per-chunk duplicated vector multiply with one opmask
+/// verification branch per 8 lanes.
 pub fn v1_vec_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
     let n = x.len();
     let main = n - n % LANES;
@@ -208,6 +221,7 @@ pub fn v1_vec_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usi
 
 // -------------------------------------------------- step 2 + 4x unrolling
 
+/// Step 2: 4× unrolled vectorized loop.
 pub fn v2_unroll(alpha: f64, x: &mut [f64]) {
     const STEP: usize = LANES * UNROLL;
     let mut chunks = x.chunks_exact_mut(STEP);
@@ -219,6 +233,8 @@ pub fn v2_unroll(alpha: f64, x: &mut [f64]) {
     v1_vec(alpha, chunks.into_remainder());
 }
 
+/// Step 2 FT: unrolled duplicated multiplies, still one verification
+/// branch per chunk.
 pub fn v2_unroll_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
     const STEP: usize = LANES * UNROLL;
     let n = x.len();
@@ -243,6 +259,8 @@ pub fn v2_unroll_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> 
 
 // --------------------------------------- step 3 + comparison reduction
 
+/// Step 3 FT: comparison reduction — the per-chunk opmasks are OR-ed
+/// so only one accounting branch fires per 32 elements.
 pub fn v3_cmpred_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
     const STEP: usize = LANES * UNROLL;
     let n = x.len();
@@ -275,6 +293,8 @@ pub fn v3_cmpred_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> 
 
 // ------------------------- step 4 + software pipelining + checkpointing
 
+/// Step 4: the non-FT side of the software-pipelined step (identical
+/// instruction stream to step 2; see the comment inside).
 pub fn v4_pipe(alpha: f64, x: &mut [f64]) {
     // non-FT pipelined version: same instructions as v2_unroll — LLVM
     // already performs the modulo scheduling the paper does by hand, so
@@ -292,6 +312,8 @@ pub fn v4_pipe_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> us
 
 // ------------------------------------------------- step 5 + prefetching
 
+/// Step 5: unrolled loop with the paper's 128-element prefetch
+/// distance.
 pub fn v5_prefetch(alpha: f64, x: &mut [f64]) {
     const STEP: usize = LANES * UNROLL;
     const DIST: usize = 128; // the paper's 1024-bit / 128-element distance
@@ -306,6 +328,8 @@ pub fn v5_prefetch(alpha: f64, x: &mut [f64]) {
     v1_vec(alpha, chunks.into_remainder());
 }
 
+/// Step 5 FT: the pipelined DMR loop with prefetching — the ladder's
+/// 0.36 % endpoint.
 pub fn v5_prefetch_ft(alpha: f64, x: &mut [f64], inject: Option<(usize, f64)>) -> usize {
     pipelined_ft::<true>(alpha, x, inject)
 }

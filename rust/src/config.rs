@@ -27,6 +27,8 @@ pub struct SloTable {
 }
 
 impl SloTable {
+    /// Build a table from the three level defaults, with no per-kernel
+    /// overrides.
     pub fn by_level(l1: f64, l2: f64, l3: f64) -> SloTable {
         SloTable { l1, l2, l3, per_kernel: Vec::new() }
     }
@@ -65,7 +67,9 @@ impl Default for SloTable {
 /// A machine tuning profile.
 #[derive(Clone, Debug)]
 pub struct Profile {
+    /// Profile name, as accepted by [`Profile::by_name`] and `--profile`.
     pub name: &'static str,
+    /// Cache-blocking parameters for the tuned GEMM family.
     pub gemm: GemmParams,
     /// DTRSV panel size for the tuned kernel (paper: B = 4).
     pub trsv_panel: usize,
@@ -86,10 +90,28 @@ pub struct Profile {
     /// clamps it to at least `threads` (one full MT grant), so the
     /// in-flight watermark can never exceed the effective budget.
     pub thread_budget: Option<usize>,
-    /// Shards the serving cluster splits into (each shard is a full
+    /// Shards the serving cluster *starts* with (each shard is a full
     /// worker-pool + batcher + thread-budget engine). 1 = the single
-    /// monolithic server.
+    /// monolithic server. With `min_shards == max_shards` the tier is
+    /// fixed-size; widen the bounds to let the
+    /// [`crate::coordinator::autoscale::ScalingController`] grow and
+    /// shrink the shard set between them.
     pub shards: usize,
+    /// Elastic floor: the scaling controller never drains the tier
+    /// below this many shards. Equal to `shards` by default (fixed
+    /// size).
+    pub min_shards: usize,
+    /// Elastic ceiling: the scaling controller never grows the tier
+    /// past this many shards. Equal to `shards` by default (fixed
+    /// size).
+    pub max_shards: usize,
+    /// Anti-starvation aging limit for the shard scheduler: after this
+    /// many drains bypass a budget-deferred group at the FIFO head, the
+    /// shard reserves its thread budget for that group (no younger
+    /// group drains) until the head fits. Keeps sustained serial
+    /// traffic from starving an MT batch indefinitely under a tight
+    /// budget.
+    pub starvation_limit: usize,
     /// Per-shard queue-depth watermark: submissions arriving while a
     /// shard's queue holds this many pending requests are shed with a
     /// typed `Overloaded` error instead of growing the queue without
@@ -116,6 +138,9 @@ impl Profile {
             max_batch: 16,
             thread_budget: None,
             shards: 1,
+            min_shards: 1,
+            max_shards: 1,
+            starvation_limit: 4,
             admission_depth: None,
             slo: SloTable::default(),
             artifact_dir: "artifacts",
@@ -138,6 +163,9 @@ impl Profile {
             thread_budget: None,
             // the wider machine serves as a two-shard cluster by default
             shards: 2,
+            min_shards: 2,
+            max_shards: 2,
+            starvation_limit: 4,
             admission_depth: None,
             slo: SloTable::default(),
             artifact_dir: "artifacts/cascade_sim",
@@ -163,10 +191,35 @@ impl Profile {
         self
     }
 
-    /// Same profile with a different serving-cluster shard count.
+    /// Same profile with a different serving-cluster shard count
+    /// (fixed-size: the elastic bounds collapse onto it).
     pub fn with_shards(mut self, shards: usize) -> Profile {
         self.shards = shards.max(1);
+        self.min_shards = self.shards;
+        self.max_shards = self.shards;
         self
+    }
+
+    /// Same profile with elastic shard bounds: the cluster starts at
+    /// the current `shards` clamped into `[min, max]`, and the scaling
+    /// controller may grow/shrink within the bounds.
+    pub fn with_shard_bounds(mut self, min: usize, max: usize) -> Profile {
+        self.min_shards = min.max(1);
+        self.max_shards = max.max(self.min_shards);
+        self.shards = self.shards.clamp(self.min_shards, self.max_shards);
+        self
+    }
+
+    /// Same profile with a different anti-starvation aging limit for
+    /// the shard scheduler (clamped to at least 1 bypass).
+    pub fn with_starvation_limit(mut self, limit: usize) -> Profile {
+        self.starvation_limit = limit.max(1);
+        self
+    }
+
+    /// Whether the serving tier may change size at runtime.
+    pub fn elastic(&self) -> bool {
+        self.min_shards < self.max_shards
     }
 
     /// Same profile with a per-shard queue-depth admission watermark.
@@ -191,6 +244,7 @@ impl Profile {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(self.artifact_dir)
     }
 
+    /// Look a profile up by its CLI name.
     pub fn by_name(name: &str) -> Option<Profile> {
         match name {
             "skylake_sim" => Some(Profile::skylake_sim()),
@@ -230,6 +284,42 @@ mod tests {
         assert_eq!(p.admission_depth, Some(1));
         assert!(Profile::skylake_sim().admission_depth.is_none());
         assert_eq!(Profile::cascade_sim().shards, 2);
+    }
+
+    #[test]
+    fn shard_bounds_default_to_fixed_size() {
+        for p in [Profile::skylake_sim(), Profile::cascade_sim()] {
+            assert_eq!(p.min_shards, p.shards);
+            assert_eq!(p.max_shards, p.shards);
+            assert!(!p.elastic());
+        }
+        // with_shards keeps the tier fixed at the new size
+        let p = Profile::cascade_sim().with_shards(3);
+        assert_eq!((p.min_shards, p.max_shards), (3, 3));
+        assert!(!p.elastic());
+    }
+
+    #[test]
+    fn shard_bounds_clamp_and_enable_elasticity() {
+        let p = Profile::skylake_sim().with_shard_bounds(1, 4);
+        assert!(p.elastic());
+        assert_eq!(p.shards, 1, "start size clamps into the bounds");
+        let p = Profile::cascade_sim().with_shard_bounds(0, 0);
+        assert_eq!((p.min_shards, p.max_shards), (1, 1));
+        assert_eq!(p.shards, 1);
+        // inverted bounds collapse onto the floor
+        let p = Profile::skylake_sim().with_shard_bounds(3, 2);
+        assert_eq!((p.min_shards, p.max_shards), (3, 3));
+        assert_eq!(p.shards, 3);
+    }
+
+    #[test]
+    fn starvation_limit_clamps() {
+        assert_eq!(Profile::skylake_sim().starvation_limit, 4);
+        assert_eq!(Profile::skylake_sim().with_starvation_limit(0)
+                       .starvation_limit, 1);
+        assert_eq!(Profile::skylake_sim().with_starvation_limit(9)
+                       .starvation_limit, 9);
     }
 
     #[test]

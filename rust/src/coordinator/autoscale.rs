@@ -1,0 +1,353 @@
+//! Elastic shard scaling: the decision logic that grows and shrinks the
+//! serving cluster between [`Profile::min_shards`] and
+//! [`Profile::max_shards`].
+//!
+//! FT-BLAS's claim is that fault tolerance must survive production
+//! throughput; FT-GEMM (arXiv:2305.02444) extends the hybrid DMR/ABFT
+//! strategy to sustained multi-core load. The serving analog is that
+//! the tier must *adapt capacity to load*, not just shed it: bursts
+//! should recruit shards, and a calm tier should hand capacity back.
+//!
+//! The [`ScalingController`] is deliberately **pure**: it consumes
+//! cumulative [`TierSample`]s (live queue depth plus the cluster's
+//! shed / SLO-burn / completion counters), maintains a sliding window
+//! of per-interval deltas, and returns a [`ScaleDecision`]. All
+//! threading, locking, and actual shard surgery live in
+//! [`crate::coordinator::cluster`]; this module can be unit-tested with
+//! synthetic sample streams.
+//!
+//! ## Decision rules
+//!
+//! - **Grow** (immediately, on fresh evidence) when any window interval
+//!   shed submissions, when the live per-shard queue depth reaches
+//!   `grow_depth`, or when the window's SLO burn fraction reaches
+//!   `grow_burn_rate` — and the tier is below `max_shards`.
+//! - **Shrink** (conservatively, on a full calm window) only when every
+//!   interval in a *full* window was calm: zero sheds, per-shard depth
+//!   at or below `shrink_depth`, and burn fraction below
+//!   `grow_burn_rate` — and the tier is above `min_shards`.
+//! - **Hold** otherwise. After any Grow/Shrink the window is cleared,
+//!   so the next decision waits for evidence gathered under the new
+//!   topology (hysteresis against flapping).
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::config::Profile;
+
+/// Tuning for the elastic scaling loop. Built from a [`Profile`] via
+/// [`ScalingConfig::from_profile`]; the shard bounds come from the
+/// profile, the thresholds have serving-sim defaults.
+#[derive(Clone, Debug)]
+pub struct ScalingConfig {
+    /// The controller never shrinks below this many shards.
+    pub min_shards: usize,
+    /// The controller never grows past this many shards.
+    pub max_shards: usize,
+    /// Sampling cadence of the controller loop.
+    pub interval: Duration,
+    /// Sliding-window length, in samples. Growth triggers on any
+    /// pressured sample; shrink requires a *full* calm window.
+    pub window: usize,
+    /// Per-shard live queue depth that signals pressure. Defaults to
+    /// half the profile's admission watermark (pressure should trigger
+    /// before shedding does), or 4.0 when admission is unbounded.
+    pub grow_depth: f64,
+    /// Per-shard live queue depth at or below which an interval counts
+    /// as calm.
+    pub shrink_depth: f64,
+    /// SLO burn fraction (burns / completions over the window) that
+    /// signals pressure.
+    pub grow_burn_rate: f64,
+    /// Print a line on every scale event (the `ftblas serve` CLI turns
+    /// this on; library embedders keep it off).
+    pub verbose: bool,
+}
+
+impl ScalingConfig {
+    /// Derive a config from a profile: bounds from
+    /// `min_shards`/`max_shards`, `grow_depth` from the admission
+    /// watermark when one is set.
+    pub fn from_profile(p: &Profile) -> ScalingConfig {
+        ScalingConfig {
+            min_shards: p.min_shards.max(1),
+            max_shards: p.max_shards.max(p.min_shards.max(1)),
+            interval: Duration::from_millis(25),
+            window: 4,
+            grow_depth: p
+                .admission_depth
+                .map(|d| (d as f64 * 0.5).max(1.0))
+                .unwrap_or(4.0),
+            shrink_depth: 0.5,
+            grow_burn_rate: 0.5,
+            verbose: false,
+        }
+    }
+
+    /// Same config with a different sampling cadence.
+    pub fn with_interval(mut self, interval: Duration) -> ScalingConfig {
+        self.interval = interval;
+        self
+    }
+
+    /// Whether the bounds leave the controller any room to act.
+    pub fn elastic(&self) -> bool {
+        self.min_shards < self.max_shards
+    }
+}
+
+/// One cumulative observation of the serving tier, taken at a sample
+/// instant. Counters are monotone totals since cluster start (the
+/// controller differences consecutive samples itself); `queue_depth`
+/// is the live pending total across shards at the instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TierSample {
+    /// Live shard count.
+    pub shards: usize,
+    /// Live pending-queue total across all shards.
+    pub queue_depth: usize,
+    /// Cumulative submissions shed at admission watermarks.
+    pub shed: u64,
+    /// Cumulative SLO burns across the per-kernel ledgers.
+    pub slo_burns: u64,
+    /// Cumulative completions.
+    pub completed: u64,
+}
+
+/// What the controller wants done to the tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Spawn one more shard.
+    Grow,
+    /// Drain and retire one shard.
+    Shrink,
+    /// Leave the topology alone.
+    Hold,
+}
+
+/// Per-interval deltas derived from two consecutive samples.
+#[derive(Clone, Copy, Debug)]
+struct IntervalLoad {
+    /// Live queue depth per shard at the sample instant.
+    depth_per_shard: f64,
+    shed: u64,
+    burns: u64,
+    completed: u64,
+}
+
+/// The sliding-window scaling policy. Feed it one [`TierSample`] per
+/// interval via [`ScalingController::observe`]; it answers with a
+/// [`ScaleDecision`]. Pure state machine — no clocks, no threads.
+pub struct ScalingController {
+    cfg: ScalingConfig,
+    window: VecDeque<IntervalLoad>,
+    last: Option<TierSample>,
+}
+
+impl ScalingController {
+    /// A controller with an empty window (first decision is always
+    /// bounds enforcement or Hold).
+    pub fn new(cfg: ScalingConfig) -> ScalingController {
+        ScalingController { cfg, window: VecDeque::new(), last: None }
+    }
+
+    /// The config this controller runs under.
+    pub fn config(&self) -> &ScalingConfig {
+        &self.cfg
+    }
+
+    /// Ingest one sample and decide. Growth reacts to any pressured
+    /// interval in the window; shrink demands a full calm window; both
+    /// clear the window so the next decision re-gathers evidence under
+    /// the new topology.
+    pub fn observe(&mut self, s: TierSample) -> ScaleDecision {
+        let prev = self.last.replace(s);
+        let (shed, burns, completed) = match prev {
+            // counters are cumulative; saturate so a merged-ledger
+            // hiccup can never poison the window with huge deltas
+            Some(p) => (s.shed.saturating_sub(p.shed),
+                        s.slo_burns.saturating_sub(p.slo_burns),
+                        s.completed.saturating_sub(p.completed)),
+            None => (s.shed, s.slo_burns, s.completed),
+        };
+        self.window.push_back(IntervalLoad {
+            depth_per_shard: s.queue_depth as f64 / s.shards.max(1) as f64,
+            shed,
+            burns,
+            completed,
+        });
+        while self.window.len() > self.cfg.window.max(1) {
+            self.window.pop_front();
+        }
+        // bounds enforcement outranks the signals
+        if s.shards < self.cfg.min_shards {
+            self.window.clear();
+            return ScaleDecision::Grow;
+        }
+        if s.shards > self.cfg.max_shards {
+            self.window.clear();
+            return ScaleDecision::Shrink;
+        }
+        let burn_frac = {
+            let (b, c) = self.window.iter().fold((0u64, 0u64), |(b, c), w| {
+                (b + w.burns, c + w.completed)
+            });
+            if c == 0 { 0.0 } else { b as f64 / c as f64 }
+        };
+        // any pressured interval in the window counts: shed deltas and
+        // burn counts integrate over the interval, and a queue-depth
+        // spike caught by one sample stays persuasive for a full window
+        // rather than having to land on the latest tick
+        let pressured = self
+            .window
+            .iter()
+            .any(|w| w.shed > 0 || w.depth_per_shard >= self.cfg.grow_depth)
+            || burn_frac >= self.cfg.grow_burn_rate;
+        if pressured && s.shards < self.cfg.max_shards {
+            self.window.clear();
+            return ScaleDecision::Grow;
+        }
+        let calm = self.window.len() >= self.cfg.window.max(1)
+            && self.window.iter().all(|w| {
+                w.shed == 0 && w.depth_per_shard <= self.cfg.shrink_depth
+            })
+            && burn_frac < self.cfg.grow_burn_rate;
+        if calm && s.shards > self.cfg.min_shards {
+            self.window.clear();
+            return ScaleDecision::Shrink;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(min: usize, max: usize) -> ScalingConfig {
+        ScalingConfig {
+            min_shards: min,
+            max_shards: max,
+            interval: Duration::from_millis(25),
+            window: 3,
+            grow_depth: 4.0,
+            shrink_depth: 0.5,
+            grow_burn_rate: 0.5,
+            verbose: false,
+        }
+    }
+
+    fn sample(shards: usize, depth: usize, shed: u64, burns: u64,
+              completed: u64) -> TierSample {
+        TierSample { shards, queue_depth: depth, shed,
+                     slo_burns: burns, completed }
+    }
+
+    #[test]
+    fn sheds_trigger_growth_immediately() {
+        let mut c = ScalingController::new(cfg(1, 4));
+        assert_eq!(c.observe(sample(1, 0, 0, 0, 0)), ScaleDecision::Hold);
+        // one shed interval is enough — no full window needed
+        assert_eq!(c.observe(sample(1, 0, 3, 0, 10)), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn queue_depth_triggers_growth_without_sheds() {
+        let mut c = ScalingController::new(cfg(1, 4));
+        // depth 9 over 2 shards = 4.5 per shard >= grow_depth 4.0
+        assert_eq!(c.observe(sample(2, 9, 0, 0, 5)), ScaleDecision::Grow);
+        // the window was cleared: a calm next sample holds
+        assert_eq!(c.observe(sample(3, 0, 0, 0, 6)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn burn_rate_triggers_growth() {
+        let mut c = ScalingController::new(cfg(1, 4));
+        // 6 of 10 completions burned their SLO in the first interval
+        assert_eq!(c.observe(sample(2, 0, 0, 6, 10)), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn growth_respects_the_ceiling() {
+        let mut c = ScalingController::new(cfg(1, 2));
+        assert_eq!(c.observe(sample(2, 50, 9, 0, 1)), ScaleDecision::Hold,
+                   "at max_shards pressure cannot grow");
+    }
+
+    #[test]
+    fn shrink_needs_a_full_calm_window() {
+        let mut c = ScalingController::new(cfg(1, 4));
+        assert_eq!(c.observe(sample(3, 0, 0, 0, 10)), ScaleDecision::Hold);
+        assert_eq!(c.observe(sample(3, 0, 0, 0, 11)), ScaleDecision::Hold,
+                   "two calm samples < window of three");
+        assert_eq!(c.observe(sample(3, 0, 0, 0, 12)), ScaleDecision::Shrink);
+        // window cleared by the decision: calm must re-accumulate
+        assert_eq!(c.observe(sample(2, 0, 0, 0, 12)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn one_pressured_interval_resets_the_calm_run() {
+        let mut c = ScalingController::new(cfg(1, 4));
+        assert_eq!(c.observe(sample(4, 0, 0, 0, 0)), ScaleDecision::Hold);
+        assert_eq!(c.observe(sample(4, 0, 0, 0, 0)), ScaleDecision::Hold);
+        // a shed in the third interval both blocks shrink and grows...
+        assert_eq!(c.observe(sample(4, 0, 2, 0, 4)), ScaleDecision::Hold,
+                   "...unless already at max — then it holds");
+        // (4 == max_shards here, so pressure holds instead of growing)
+        assert_eq!(c.observe(sample(4, 0, 2, 0, 4)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn shrink_respects_the_floor() {
+        let mut c = ScalingController::new(cfg(2, 4));
+        for _ in 0..6 {
+            let d = c.observe(sample(2, 0, 0, 0, 0));
+            assert_eq!(d, ScaleDecision::Hold, "at min_shards calm holds");
+        }
+    }
+
+    #[test]
+    fn bounds_enforcement_outranks_signals() {
+        let mut c = ScalingController::new(cfg(2, 4));
+        // below the floor: grow even under pressure-free calm
+        assert_eq!(c.observe(sample(1, 0, 0, 0, 0)), ScaleDecision::Grow);
+        // above the ceiling: shrink even while shedding
+        let mut c = ScalingController::new(cfg(1, 2));
+        assert_eq!(c.observe(sample(3, 90, 9, 9, 9)), ScaleDecision::Shrink);
+    }
+
+    #[test]
+    fn cumulative_counters_are_differenced() {
+        // the very first sample has no baseline: its raw totals count
+        // as one interval, so a history of sheds reads as pressure
+        let mut c = ScalingController::new(cfg(1, 4));
+        assert_eq!(c.observe(sample(2, 0, 1000, 0, 5000)),
+                   ScaleDecision::Grow);
+        // with a baseline established, *flat* cumulative totals are
+        // calm intervals — the stale history cannot re-trigger growth,
+        // and a full calm window shrinks
+        let mut c = ScalingController::new(cfg(1, 4));
+        c.observe(sample(2, 0, 1000, 0, 5000)); // baseline (clears window)
+        assert_eq!(c.observe(sample(2, 0, 1000, 0, 5000)),
+                   ScaleDecision::Hold);
+        assert_eq!(c.observe(sample(2, 0, 1000, 0, 5000)),
+                   ScaleDecision::Hold);
+        assert_eq!(c.observe(sample(2, 0, 1000, 0, 5000)),
+                   ScaleDecision::Shrink,
+                   "three flat intervals fill the calm window");
+    }
+
+    #[test]
+    fn from_profile_derives_thresholds() {
+        let p = Profile::skylake_sim().with_shard_bounds(1, 4)
+            .with_admission_depth(16);
+        let cfg = ScalingConfig::from_profile(&p);
+        assert_eq!((cfg.min_shards, cfg.max_shards), (1, 4));
+        assert!(cfg.elastic());
+        assert_eq!(cfg.grow_depth, 8.0, "half the admission watermark");
+        let p = Profile::skylake_sim().with_shard_bounds(2, 2);
+        let cfg = ScalingConfig::from_profile(&p);
+        assert!(!cfg.elastic());
+        assert_eq!(cfg.grow_depth, 4.0, "unbounded admission default");
+    }
+}

@@ -26,8 +26,11 @@ use std::hash::Hash;
 /// A queued item: an opaque payload plus its batch key.
 #[derive(Debug)]
 pub struct Pending<K, T> {
+    /// Scheduling key the item was pushed under.
     pub key: K,
+    /// Globally unique arrival sequence number.
     pub seq: u64,
+    /// The opaque payload.
     pub item: T,
 }
 
@@ -36,7 +39,9 @@ pub struct Pending<K, T> {
 /// skipped by the predicate — before the drained group was found.
 #[derive(Debug)]
 pub struct Drain<K, T> {
+    /// The drained batch (all one key; empty when nothing passed).
     pub batch: Vec<Pending<K, T>>,
+    /// Older groups the admission predicate skipped before this batch.
     pub deferred: usize,
 }
 
@@ -57,6 +62,8 @@ pub struct Batcher<K, T> {
 }
 
 impl<K: Copy + Eq + Hash, T> Batcher<K, T> {
+    /// An empty queue draining at most `max_batch` items per batch
+    /// (clamped to at least 1).
     pub fn new(max_batch: usize) -> Batcher<K, T> {
         Batcher {
             queues: HashMap::new(),
@@ -67,6 +74,7 @@ impl<K: Copy + Eq + Hash, T> Batcher<K, T> {
         }
     }
 
+    /// Enqueue one item under its scheduling key.
     pub fn push(&mut self, key: K, item: T) {
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -78,10 +86,12 @@ impl<K: Copy + Eq + Hash, T> Batcher<K, T> {
         self.len += 1;
     }
 
+    /// Total pending items across all groups.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether no items are pending.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -89,6 +99,14 @@ impl<K: Copy + Eq + Hash, T> Batcher<K, T> {
     /// Number of distinct pending groups.
     pub fn groups(&self) -> usize {
         self.order.len()
+    }
+
+    /// Key of the group at the FIFO head — the one holding the oldest
+    /// pending item. The server's anti-starvation aging watches this:
+    /// a head that keeps getting bypassed by `next_batch_where`
+    /// eventually gets the budget reserved for it.
+    pub fn head_key(&self) -> Option<K> {
+        self.order.values().next().copied()
     }
 
     /// Drain the next batch: the oldest request's group, up to max_batch
@@ -205,6 +223,21 @@ mod tests {
                    vec![0, 1]);
         assert_eq!(b.next_batch()[0].item, 2, "A's tail outranks B");
         assert_eq!(b.next_batch()[0].item, 3);
+    }
+
+    #[test]
+    fn head_key_tracks_the_oldest_group() {
+        let mut b = Batcher::new(1);
+        assert_eq!(b.head_key(), None);
+        b.push(("mt", 4), 0);
+        b.push(("s1", 1), 1);
+        assert_eq!(b.head_key(), Some(("mt", 4)));
+        // bypassing the head does not change it
+        let d = b.next_batch_where(|k| k.0 != "mt");
+        assert_eq!(d.batch[0].item, 1);
+        assert_eq!(b.head_key(), Some(("mt", 4)));
+        b.next_batch();
+        assert_eq!(b.head_key(), None);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Sharded serving tier: a cluster of per-shard [`Server`] engines
-//! behind one admission front-end.
+//! Sharded serving tier: an **elastic** cluster of per-shard [`Server`]
+//! engines behind one admission front-end.
 //!
 //! [`ClusterHandle::submit`] is the cluster's admission point. Each
 //! request is planned once through the cluster's shared [`PlanCache`]
@@ -9,7 +9,7 @@
 //! are deliberately coarse (16-bit): score ties are where the live
 //! least-loaded tiebreak — fed by each shard's current queue depth —
 //! gets to act, while routing stays deterministic per key at a fixed
-//! shard count.
+//! topology.
 //!
 //! Each shard is a full engine (worker pool, batcher, thread-budget
 //! ledger, per-shard metrics) and enforces its own queue-depth
@@ -20,53 +20,105 @@
 //! merged exactly at read time via [`MetricsSnapshot::merge`]: counters
 //! sum, latency summaries are recomputed from every retained sample,
 //! never from per-shard means.
+//!
+//! ## Elasticity
+//!
+//! The shard set is mutable at runtime, between the profile's
+//! `min_shards`/`max_shards` bounds:
+//!
+//! - **Grow** ([`ClusterHandle::scale_up`]): a new [`Server`] engine is
+//!   spawned on the shared `Arc<Router>` and appended at the next slot
+//!   with a **fresh rendezvous salt** ([`salt_for`] over a
+//!   monotonically increasing generation). Rendezvous hashing makes the
+//!   migration minimal by construction: survivors' scores are
+//!   untouched, so the only kernel-id keys that change owner are
+//!   exactly those the new shard now wins — ~1/(n+1) of the key space —
+//!   and re-salting means a slot that is drained and later re-grown
+//!   claims a *different* slice each generation instead of recalling
+//!   the old one. The migrated-key count lands in the merged ledger.
+//! - **Shrink** ([`ClusterHandle::scale_down`]): the newest slot is the
+//!   victim (removing the top slot is the rendezvous-minimal drain:
+//!   only keys the victim owned move, each falling back to its
+//!   second-choice shard). The victim is first unrouted — removed from
+//!   the topology under the write lock, so no new submission can reach
+//!   it — then drained: its workers finish every queued batch, its
+//!   final [`MetricsSnapshot`] is retired into the survivor ledger, and
+//!   only then is the engine joined. In-flight requests are never
+//!   dropped; their responses arrive on the receivers the clients
+//!   already hold.
+//!
+//! Scaling can be driven manually (the two methods above) or by the
+//! [`ScalingController`] sampling loop that [`Cluster::start`] spawns
+//! when the config carries a [`ScalingConfig`]
+//! ([`crate::coordinator::autoscale`] documents the decision rules).
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
 
 use anyhow::anyhow;
 
 use crate::config::Profile;
+use crate::coordinator::autoscale::{ScaleDecision, ScalingConfig,
+                                    ScalingController, TierSample};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::plan::{ExecutionPlan, PlanCache};
+use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::request::{BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{Admitted, Server, ServerHandle};
 use crate::ft::injector::InjectorConfig;
 use crate::ft::policy::FtPolicy;
+use crate::util::rng::Rng;
 
 pub use crate::coordinator::server::Error;
 
 /// Cluster sizing. Routing and admission knobs (`shards` here is the
-/// instance count; the per-shard `admission_depth` watermark and the
-/// SLO table) live on [`Profile`], so one profile describes the whole
-/// tier.
+/// starting instance count; the per-shard `admission_depth` watermark,
+/// the SLO table, and the elastic `min_shards`/`max_shards` bounds)
+/// live on [`Profile`], so one profile describes the whole tier.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
-    /// Shard (engine) count; clamped to at least 1.
+    /// Starting shard (engine) count; clamped to at least 1.
     pub shards: usize,
     /// Native worker threads per shard.
     pub workers_per_shard: usize,
-    /// Fault-injection config, split across shards (independent
-    /// per-shard plans with derived seeds).
+    /// Fault-injection config, split across the starting shards
+    /// (independent per-shard plans with derived seeds; shards grown
+    /// later join uninjected — their traffic was not in the plan).
     pub injection: Option<InjectorConfig>,
     /// Expected request volume (sizes each shard's injection plan).
     pub expected_requests: usize,
+    /// When set, [`Cluster::start`] spawns a [`ScalingController`]
+    /// sampling thread that grows/shrinks the tier automatically.
+    /// `None` = fixed-size (manual `scale_up`/`scale_down` still work,
+    /// bounded by the profile).
+    pub autoscale: Option<ScalingConfig>,
 }
 
 impl ClusterConfig {
+    /// Sizing from a profile: starting shards, workers per shard, no
+    /// injection, and an autoscaler iff the profile's shard bounds are
+    /// elastic.
     pub fn from_profile(p: &Profile) -> ClusterConfig {
         ClusterConfig {
             shards: p.shards,
             workers_per_shard: p.workers,
             injection: None,
             expected_requests: 0,
+            autoscale: p.elastic().then(|| ScalingConfig::from_profile(p)),
         }
     }
 }
 
-/// Salt for the rendezvous hash (chosen so the registry's kernel-id key
-/// space spreads across small shard counts; see the coverage proptest).
+/// Base salt for the rendezvous hash (chosen so the registry's
+/// kernel-id key space spreads across small shard counts; see the
+/// coverage proptest).
 const ROUTE_SALT: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// Generation stride for [`salt_for`] (the 64-bit golden ratio, so
+/// successive generations of one slot land far apart in salt space).
+const GENERATION_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// SplitMix64 finalizer — the avalanche step behind the rendezvous
 /// scores.
@@ -79,30 +131,49 @@ fn mix64(mut x: u64) -> u64 {
     x
 }
 
-/// 16-bit rendezvous score of `(key, shard)`. Coarse on purpose: equal
-/// scores are rare but reachable, and they are exactly where the live
-/// least-loaded tiebreak acts.
-pub fn rendezvous_score(key: u64, shard: usize) -> u64 {
-    mix64(key ^ mix64(ROUTE_SALT ^ shard as u64)) >> 48
+/// Rendezvous salt of a shard slot at a given spawn generation.
+/// Generation 0 reproduces the fixed-topology salts of the pre-elastic
+/// tier (`ROUTE_SALT ^ slot`); every regrow of a slot bumps the
+/// generation, so the slot claims a fresh pseudo-random key slice
+/// instead of recalling the one its previous occupant held.
+pub fn salt_for(slot: usize, generation: u64) -> u64 {
+    ROUTE_SALT ^ (slot as u64) ^ generation.wrapping_mul(GENERATION_STRIDE)
 }
 
-/// Pick the shard for a routing key: highest rendezvous score wins;
-/// equal scores fall to the shallower live queue, then the lower shard
-/// index. `depth_of` is only called on score ties (~2⁻¹⁶ of key pairs),
-/// so the hot path never touches shard state — the cluster passes a
-/// closure that locks a shard's scheduler only when the tiebreak
-/// actually needs its queue depth. Deterministic for fixed depths, and
-/// since depths only matter on ties, a key's shard is stable at a
-/// fixed shard count in steady state.
-pub fn route_with<F: FnMut(usize) -> usize>(key: u64, shards: usize,
-                                            mut depth_of: F) -> usize {
+/// 16-bit rendezvous score of `(key, salt)`. Coarse on purpose: equal
+/// scores are rare but reachable, and they are exactly where the live
+/// least-loaded tiebreak acts.
+pub fn rendezvous_score_salted(key: u64, salt: u64) -> u64 {
+    mix64(key ^ mix64(salt)) >> 48
+}
+
+/// [`rendezvous_score_salted`] at a slot's generation-0 salt — the
+/// fixed-topology score (tests, simulation).
+pub fn rendezvous_score(key: u64, shard: usize) -> u64 {
+    rendezvous_score_salted(key, salt_for(shard, 0))
+}
+
+/// The shared routing core: highest rendezvous score wins; equal
+/// scores fall to the shallower live queue, then the lower slot index.
+/// `depth_of` is only called on score ties (~2⁻¹⁶ of key pairs), so the
+/// hot path never touches shard state — the cluster passes a closure
+/// that locks a shard's scheduler only when the tiebreak actually needs
+/// its queue depth. Deterministic for fixed depths, and since depths
+/// only matter on ties, a key's shard is stable at a fixed topology in
+/// steady state.
+fn route_core<S, F>(key: u64, shards: usize, salt_of: S, mut depth_of: F)
+                    -> usize
+where
+    S: Fn(usize) -> u64,
+    F: FnMut(usize) -> usize,
+{
     assert!(shards > 0, "route needs at least one shard");
     // pass 1: pure rendezvous argmax (lowest index on equal scores)
     let mut best = 0;
-    let mut best_score = rendezvous_score(key, 0);
+    let mut best_score = rendezvous_score_salted(key, salt_of(0));
     let mut tied = false;
     for s in 1..shards {
-        let score = rendezvous_score(key, s);
+        let score = rendezvous_score_salted(key, salt_of(s));
         if score > best_score {
             best = s;
             best_score = score;
@@ -118,7 +189,7 @@ pub fn route_with<F: FnMut(usize) -> usize>(key: u64, shards: usize,
     // comparison keeps the lower index on equal depths
     let mut best_depth = depth_of(best);
     for s in (best + 1)..shards {
-        if rendezvous_score(key, s) == best_score {
+        if rendezvous_score_salted(key, salt_of(s)) == best_score {
             let depth = depth_of(s);
             if depth < best_depth {
                 best = s;
@@ -129,9 +200,28 @@ pub fn route_with<F: FnMut(usize) -> usize>(key: u64, shards: usize,
     best
 }
 
+/// Route over generation-0 salts (the fixed-topology view); depths are
+/// fetched lazily, only on rendezvous ties.
+pub fn route_with<F: FnMut(usize) -> usize>(key: u64, shards: usize,
+                                            depth_of: F) -> usize {
+    route_core(key, shards, |s| salt_for(s, 0), depth_of)
+}
+
+/// Route over an explicit per-shard salt slice — the elastic tier's
+/// view, where a regrown slot carries a fresh-generation salt.
+pub fn route_salted_with<F: FnMut(usize) -> usize>(key: u64, salts: &[u64],
+                                                   depth_of: F) -> usize {
+    route_core(key, salts.len(), |s| salts[s], depth_of)
+}
+
 /// [`route_with`] over a pre-collected depth slice (tests, simulation).
 pub fn route(key: u64, depths: &[usize]) -> usize {
     route_with(key, depths.len(), |s| depths[s])
+}
+
+/// [`route_salted_with`] over a pre-collected depth slice.
+pub fn route_salted(key: u64, salts: &[u64], depths: &[usize]) -> usize {
+    route_salted_with(key, salts, |s| depths[s])
 }
 
 /// Routing key of a request: planned jobs key by kernel id (one
@@ -153,11 +243,255 @@ pub fn route_key(plan: Option<&ExecutionPlan>, routine: &str, dim: usize)
     }
 }
 
+/// Bounded retry policy for [`ClusterHandle::submit_with_retry`]:
+/// exponential backoff with deterministic jitter around the typed
+/// [`Error::Overloaded`] shed. Sheds mean "the shard's queue is full
+/// *right now*" — under bursty arrivals a short, jittered wait usually
+/// lands in the drain phase, so clients retry instead of losing work.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retry attempts after the first submission (0 = no retries).
+    pub attempts: u32,
+    /// Backoff before the first retry; doubles per retry.
+    pub base: std::time::Duration,
+    /// Ceiling on one backoff step (the exponential is clamped here).
+    pub cap: std::time::Duration,
+    /// Base seed for the jitter stream (each retry adds a uniform
+    /// fraction of `base`). Every `submit_with_retry` call mixes a
+    /// per-cluster call counter into this seed, so concurrent callers
+    /// sharing one policy still draw distinct jitter and de-synchronize
+    /// instead of colliding in lockstep.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 5,
+            base: std::time::Duration::from_micros(500),
+            cap: std::time::Duration::from_millis(20),
+            jitter_seed: 0x5EED,
+        }
+    }
+}
+
+/// A live shard slot: its routing salt plus the engine handle.
+struct ShardEntry {
+    /// Slot index (stable while live; reused after a shrink+regrow,
+    /// but with a fresh-generation salt).
+    slot: usize,
+    salt: u64,
+    handle: ServerHandle,
+}
+
+/// A live engine owned by the cluster (the join side of a slot).
+struct Engine {
+    slot: usize,
+    server: Server,
+}
+
+/// Scale-event counters, folded into merged snapshots.
+#[derive(Default)]
+struct ScaleStats {
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    keys_migrated: AtomicU64,
+}
+
 struct ClusterShared {
     plans: PlanCache,
     router: Arc<Router>,
     policy: FtPolicy,
-    handles: Vec<ServerHandle>,
+    workers_per_shard: usize,
+    /// Elastic bounds from the profile; manual and automatic scaling
+    /// both respect them.
+    min_shards: usize,
+    max_shards: usize,
+    /// The live routing topology. Submissions hold the read lock from
+    /// route through enqueue, so a scale-down (write lock) can never
+    /// unroute a shard while a submission is mid-flight toward it —
+    /// the drain invariant needs no per-request retry loop.
+    topology: RwLock<Vec<ShardEntry>>,
+    /// The engines behind the topology. This mutex also serializes
+    /// scale operations (one grow/shrink at a time).
+    engines: Mutex<Vec<Engine>>,
+    /// Final ledgers of drained (retired) shards — merged into every
+    /// cluster-wide snapshot so scale-downs never lose history.
+    retired: Mutex<Vec<MetricsSnapshot>>,
+    /// Monotone spawn-generation counter; starting shards take
+    /// generation 0 (the fixed-topology salts), every later spawn a
+    /// fresh one.
+    next_generation: AtomicU64,
+    /// Monotone `submit_with_retry` call counter — mixed into the
+    /// retry policy's jitter seed so concurrent callers draw distinct
+    /// backoff jitter.
+    retry_calls: AtomicU64,
+    stats: ScaleStats,
+    stop: AtomicBool,
+}
+
+impl ClusterShared {
+    /// Count the registry kernel-id keys whose owner differs between
+    /// two salt vectors (zero-depth routing: the deterministic,
+    /// steady-state view of the topology).
+    fn migrated_keys(old: &[u64], new: &[u64]) -> u64 {
+        let ids = KernelRegistry::global().entries().len() as u64;
+        (0..ids)
+            .filter(|&k| {
+                let a = if old.is_empty() { usize::MAX }
+                        else { route_salted_with(k, old, |_| 0) };
+                let b = route_salted_with(k, new, |_| 0);
+                a != b
+            })
+            .count() as u64
+    }
+
+    /// Grow by one shard. Returns the new shard count, or an error at
+    /// the `max_shards` ceiling.
+    fn scale_up(&self) -> anyhow::Result<usize> {
+        // the engines mutex serializes scale ops end to end
+        let mut engines = self.engines.lock().unwrap();
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(anyhow!("cluster is shut down"));
+        }
+        let old_salts: Vec<u64> = {
+            let topo = self.topology.read().unwrap();
+            if topo.len() >= self.max_shards {
+                return Err(anyhow!("cluster already at max_shards ({})",
+                                   self.max_shards));
+            }
+            topo.iter().map(|e| e.salt).collect()
+        };
+        let slot = old_salts.len();
+        let generation = self.next_generation.fetch_add(1, Ordering::SeqCst);
+        let salt = salt_for(slot, generation);
+        let server = Server::start_shard(slot, self.router.clone(),
+                                         self.policy, self.workers_per_shard,
+                                         None, 0);
+        let handle = server.handle();
+        let mut new_salts = old_salts.clone();
+        new_salts.push(salt);
+        let migrated = Self::migrated_keys(&old_salts, &new_salts);
+        {
+            let mut topo = self.topology.write().unwrap();
+            topo.push(ShardEntry { slot, salt, handle });
+        }
+        engines.push(Engine { slot, server });
+        self.stats.scale_ups.fetch_add(1, Ordering::Relaxed);
+        self.stats.keys_migrated.fetch_add(migrated, Ordering::Relaxed);
+        Ok(slot + 1)
+    }
+
+    /// Shrink by one shard: unroute the newest slot, drain it, retire
+    /// its ledger. Returns the new shard count, or an error at the
+    /// `min_shards` floor. Blocks until the victim's queue is fully
+    /// drained — zero in-flight requests are dropped.
+    fn scale_down(&self) -> anyhow::Result<usize> {
+        let mut engines = self.engines.lock().unwrap();
+        // unroute the victim and park a provisional snapshot in
+        // `retired` in ONE topology write scope: readers that take the
+        // topology lock and then the retired lock (sample, the merged
+        // snapshots) therefore see the victim in exactly one of the two
+        // sets — never both (double-count) and never neither (a dip
+        // that a differencing autoscaler would misread as fresh
+        // pressure when it reverses). Mid-drain reads undercount only
+        // the victim's in-drain completions; counters never go
+        // backwards. Scale ops are serialized by the engines mutex, so
+        // the provisional entry's index is stable until the exact final
+        // ledger replaces it below.
+        let (victim_entry, remaining, provisional) = {
+            let mut topo = self.topology.write().unwrap();
+            if topo.len() <= self.min_shards {
+                return Err(anyhow!("cluster already at min_shards ({})",
+                                   self.min_shards));
+            }
+            // the newest slot is the rendezvous-minimal victim: only
+            // keys it owned migrate, survivors' scores are untouched
+            let victim = topo
+                .pop()
+                .expect("min_shards >= 1 keeps the topology non-empty");
+            let remaining: Vec<u64> = topo.iter().map(|e| e.salt).collect();
+            let mut retired = self.retired.lock().unwrap();
+            retired.push(victim.handle.metrics());
+            (victim, remaining, retired.len() - 1)
+        };
+        let mut old_salts = remaining.clone();
+        old_salts.push(victim_entry.salt);
+        let migrated = Self::migrated_keys(&old_salts, &remaining);
+        // the victim is unrouted; drain it outside the topology lock so
+        // admissions to the survivors proceed while it finishes
+        let pos = engines
+            .iter()
+            .position(|e| e.slot == victim_entry.slot)
+            .expect("routed shard must have a live engine");
+        let engine = engines.remove(pos);
+        let final_ledger = engine.server.shutdown();
+        self.retired.lock().unwrap()[provisional] = final_ledger;
+        self.stats.scale_downs.fetch_add(1, Ordering::Relaxed);
+        self.stats.keys_migrated.fetch_add(migrated, Ordering::Relaxed);
+        Ok(remaining.len())
+    }
+
+    /// Cheap cumulative tier counters for the autoscaler: live queue
+    /// depth plus (completed, shed, burns) summed over live shards and
+    /// retired ledgers — retirement moves counters between the two
+    /// sets, so the totals the controller differences stay monotone.
+    fn sample(&self) -> TierSample {
+        // the retired read nests inside the topology read scope:
+        // scale_down migrates a shard topology→retired atomically under
+        // the write lock, so one consistent scope counts every shard
+        // exactly once and the totals stay monotone across drains
+        let topo = self.topology.read().unwrap();
+        let mut queue_depth = 0usize;
+        let mut completed = 0u64;
+        let mut shed = 0u64;
+        let mut burns = 0u64;
+        for e in topo.iter() {
+            queue_depth += e.handle.queue_depth();
+            let (c, s, b) = e.handle.pressure();
+            completed += c;
+            shed += s;
+            burns += b;
+        }
+        for r in self.retired.lock().unwrap().iter() {
+            completed += r.completed;
+            shed += r.shed;
+            burns += r.slo_burns();
+        }
+        TierSample { shards: topo.len(), queue_depth, shed,
+                     slo_burns: burns, completed }
+    }
+
+    /// Fold the shared plan-cache and scale counters into a merged
+    /// snapshot.
+    fn finish_snapshot(&self, shards: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let retired = self.retired.lock().unwrap();
+        let mut parts: Vec<MetricsSnapshot> = retired.clone();
+        parts.extend_from_slice(shards);
+        let mut merged = MetricsSnapshot::merge(&parts);
+        let (hits, misses) = self.plans.stats();
+        merged.plan_cache_hits += hits;
+        merged.plan_cache_misses += misses;
+        merged.scale_ups = self.stats.scale_ups.load(Ordering::Relaxed);
+        merged.scale_downs = self.stats.scale_downs.load(Ordering::Relaxed);
+        merged.keys_migrated = self.stats.keys_migrated.load(Ordering::Relaxed);
+        merged
+    }
+
+    /// Consistent cluster-wide snapshot: the live ledgers are collected
+    /// and merged with the retired set inside one topology read scope,
+    /// so a concurrent scale-down (which migrates a shard between the
+    /// two sets under the write lock) can never double-count or drop a
+    /// shard in the merged view.
+    fn merged_snapshot(&self) -> MetricsSnapshot {
+        let topo = self.topology.read().unwrap();
+        let live: Vec<MetricsSnapshot> =
+            topo.iter().map(|e| e.handle.metrics()).collect();
+        // finish_snapshot locks `retired` while we still hold the
+        // topology read lock — the same topology→retired order
+        // scale_down nests under its write lock
+        self.finish_snapshot(&live)
+    }
 }
 
 /// Handle for submitting requests to the cluster; cheap to clone.
@@ -167,10 +501,11 @@ pub struct ClusterHandle {
 }
 
 impl ClusterHandle {
-    /// The shared admission front half: plan once (shared cache), then
-    /// route — depths are fetched lazily, only on rendezvous ties.
-    fn plan_and_route(&self, req: &BlasRequest)
-                      -> (Option<ExecutionPlan>, usize) {
+    /// The shared admission front half: resolve the request's plan
+    /// through the shared cache and derive its routing key. Both
+    /// `submit` and `shard_for` go through here, so key derivation can
+    /// never drift between the two.
+    fn plan_key(&self, req: &BlasRequest) -> (Option<ExecutionPlan>, u64) {
         let policy = self.shared.policy;
         let backend = self.shared.router.resolve(req, policy);
         let plan = self
@@ -178,23 +513,125 @@ impl ClusterHandle {
             .plans
             .resolve(req.routine(), req.dim(), policy, backend);
         let key = route_key(plan.as_ref(), req.routine(), req.dim());
-        let handles = &self.shared.handles;
-        let shard =
-            route_with(key, handles.len(), |s| handles[s].queue_depth());
-        (plan, shard)
+        (plan, key)
     }
 
     /// Admit a request: plan it once (shared cache), route it to its
     /// shard, enqueue it there. Returns the typed [`Error::Overloaded`]
     /// when the target shard's queue is at its admission watermark.
+    ///
+    /// The topology read lock is held from route through enqueue, so a
+    /// concurrent scale-down can never drain the target shard out from
+    /// under an admitted request.
+    ///
+    /// ```
+    /// use ftblas::config::Profile;
+    /// use ftblas::coordinator::cluster::{Cluster, ClusterConfig};
+    /// use ftblas::coordinator::request::{Backend, BlasRequest};
+    /// use ftblas::coordinator::router::Router;
+    /// use ftblas::ft::policy::FtPolicy;
+    ///
+    /// let router = Router::native_only(Profile::default(),
+    ///                                  Backend::NativeTuned);
+    /// let cluster = Cluster::start(router, FtPolicy::None,
+    ///                              ClusterConfig {
+    ///                                  workers_per_shard: 1,
+    ///                                  ..ClusterConfig::from_profile(
+    ///                                      &Profile::default())
+    ///                              });
+    /// let handle = cluster.handle();
+    /// let rx = handle
+    ///     .submit(BlasRequest::Ddot { x: vec![1.0; 64], y: vec![2.0; 64] })
+    ///     .expect("unbounded admission never sheds");
+    /// let resp = rx.recv().unwrap().unwrap();
+    /// assert_eq!(resp.result.as_scalar(), Some(128.0));
+    /// cluster.shutdown();
+    /// ```
     pub fn submit(&self, req: BlasRequest) -> Admitted {
-        let (plan, shard) = self.plan_and_route(&req);
-        self.shared.handles[shard].submit_planned(req, plan)
+        self.submit_returning(req).map_err(|(e, _)| e)
     }
 
-    /// The shard `submit` would route this request to right now.
+    /// [`ClusterHandle::submit`] that hands a rejected request back to
+    /// the caller — the no-clone substrate under `submit_with_retry`.
+    fn submit_returning(&self, req: BlasRequest)
+                        -> Result<std::sync::mpsc::Receiver<
+                                      anyhow::Result<BlasResponse>>,
+                                  (Error, BlasRequest)> {
+        let (plan, key) = self.plan_key(&req);
+        let topo = self.shared.topology.read().unwrap();
+        if topo.is_empty() {
+            // the cluster was shut down while this handle survived
+            return Err((Error::ShuttingDown { shard: 0 }, req));
+        }
+        let shard = route_core(key, topo.len(), |s| topo[s].salt,
+                               |s| topo[s].handle.queue_depth());
+        topo[shard].handle.submit_planned_returning(req, plan)
+    }
+
+    /// [`ClusterHandle::submit`] with bounded exponential backoff and
+    /// deterministic jitter around [`Error::Overloaded`] sheds. Returns
+    /// the final admission outcome plus how many retries were spent;
+    /// non-overload rejections (shutdown) surface immediately.
+    ///
+    /// ```
+    /// use ftblas::config::Profile;
+    /// use ftblas::coordinator::cluster::{Cluster, ClusterConfig,
+    ///                                    RetryPolicy};
+    /// use ftblas::coordinator::request::{Backend, BlasRequest};
+    /// use ftblas::coordinator::router::Router;
+    /// use ftblas::ft::policy::FtPolicy;
+    ///
+    /// let router = Router::native_only(Profile::default(),
+    ///                                  Backend::NativeTuned);
+    /// let cluster = Cluster::start(router, FtPolicy::None,
+    ///                              ClusterConfig {
+    ///                                  workers_per_shard: 1,
+    ///                                  ..ClusterConfig::from_profile(
+    ///                                      &Profile::default())
+    ///                              });
+    /// let handle = cluster.handle();
+    /// let req = BlasRequest::Ddot { x: vec![1.0; 32], y: vec![1.0; 32] };
+    /// let (admitted, retries) =
+    ///     handle.submit_with_retry(req, &RetryPolicy::default());
+    /// assert_eq!(retries, 0, "an idle cluster admits on the first try");
+    /// admitted.unwrap().recv().unwrap().unwrap();
+    /// cluster.shutdown();
+    /// ```
+    pub fn submit_with_retry(&self, req: BlasRequest, policy: &RetryPolicy)
+                             -> (Admitted, u32) {
+        // per-call seed: concurrent callers sharing one policy must not
+        // draw identical jitter, or their retries collide in lockstep
+        let call = self.shared.retry_calls.fetch_add(1, Ordering::Relaxed);
+        let mut jitter = Rng::new(policy.jitter_seed ^ mix64(call));
+        let mut backoff = policy.base;
+        // rejected submissions hand the request back, so each retry
+        // re-submits the same value — no clone per attempt
+        let mut req = req;
+        for attempt in 0..=policy.attempts {
+            match self.submit_returning(req) {
+                Err((Error::Overloaded { .. }, returned))
+                    if attempt < policy.attempts =>
+                {
+                    req = returned;
+                    let pause = backoff.min(policy.cap)
+                        + policy.base.mul_f64(jitter.uniform());
+                    std::thread::sleep(pause);
+                    backoff = backoff.saturating_mul(2);
+                }
+                Err((e, _)) => return (Err(e), attempt),
+                Ok(rx) => return (Ok(rx), attempt),
+            }
+        }
+        unreachable!("the final attempt always returns")
+    }
+
+    /// The shard `submit` would route this request to right now
+    /// (panics on a shut-down cluster, which has no shards left).
     pub fn shard_for(&self, req: &BlasRequest) -> usize {
-        self.plan_and_route(req).1
+        let (_, key) = self.plan_key(req);
+        let topo = self.shared.topology.read().unwrap();
+        route_core(key, topo.len(), |s| topo[s].salt,
+                   |s| topo[s].handle.queue_depth())
     }
 
     /// Submit and wait (sheds surface as errors).
@@ -205,95 +642,247 @@ impl ClusterHandle {
             .map_err(|_| anyhow!("cluster dropped the request"))?
     }
 
-    /// Exact cluster-wide snapshot: per-shard ledgers merged plus the
-    /// shared plan-cache counters.
+    /// Live shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shared.topology.read().unwrap().len()
+    }
+
+    /// Cumulative `(scale_ups, scale_downs)` — a cheap poll for callers
+    /// watching the elastic tier (no ledger merge, no sample clones).
+    pub fn scale_events(&self) -> (u64, u64) {
+        (self.shared.stats.scale_ups.load(Ordering::Relaxed),
+         self.shared.stats.scale_downs.load(Ordering::Relaxed))
+    }
+
+    /// Grow the tier by one shard (also the autoscaler's actuator).
+    /// Fails at the profile's `max_shards` ceiling.
+    pub fn scale_up(&self) -> anyhow::Result<usize> {
+        self.shared.scale_up()
+    }
+
+    /// Drain and retire one shard (also the autoscaler's actuator).
+    /// Blocks until the victim finishes its queue; fails at the
+    /// profile's `min_shards` floor.
+    pub fn scale_down(&self) -> anyhow::Result<usize> {
+        self.shared.scale_down()
+    }
+
+    /// Exact cluster-wide snapshot: live per-shard ledgers merged with
+    /// every retired shard's final ledger, plus the shared plan-cache
+    /// and scale counters (consistent under concurrent scaling).
     pub fn metrics(&self) -> MetricsSnapshot {
-        let snaps: Vec<MetricsSnapshot> =
-            self.shared.handles.iter().map(|h| h.metrics()).collect();
-        merge_with_plans(&snaps, &self.shared.plans)
+        self.shared.merged_snapshot()
     }
 }
 
-fn merge_with_plans(shards: &[MetricsSnapshot], plans: &PlanCache)
-                    -> MetricsSnapshot {
-    let mut merged = MetricsSnapshot::merge(shards);
-    let (hits, misses) = plans.stats();
-    merged.plan_cache_hits += hits;
-    merged.plan_cache_misses += misses;
-    merged
-}
-
-/// The cluster: `shards` independent [`Server`] engines over one shared
+/// The cluster: an elastic set of [`Server`] engines over one shared
 /// read-only router.
 pub struct Cluster {
-    shards: Vec<Server>,
     shared: Arc<ClusterShared>,
+    controller: Option<JoinHandle<()>>,
 }
 
 impl Cluster {
     /// Start `cfg.shards` engines sharing one router. Injection plans
-    /// are split across shards (independent seeds, counts divided with
-    /// the remainder on the low shards). Note the split assumes roughly
-    /// balanced traffic: each shard plans its share over its own
-    /// expected stream, so a shard that routing starves of requests
-    /// fires fewer of its planned faults — cluster totals are an upper
-    /// bound, not a guarantee (the ledger's `errors_injected` reports
-    /// what actually fired).
-    pub fn start(router: Router, policy: FtPolicy, cfg: ClusterConfig)
+    /// are split across the starting shards (independent seeds, counts
+    /// divided with the remainder on the low shards). Note the split
+    /// assumes roughly balanced traffic: each shard plans its share
+    /// over its own expected stream, so a shard that routing starves of
+    /// requests fires fewer of its planned faults — cluster totals are
+    /// an upper bound, not a guarantee (the ledger's `errors_injected`
+    /// reports what actually fired).
+    ///
+    /// With `cfg.autoscale` set, a [`ScalingController`] thread samples
+    /// the tier every `interval` and grows/shrinks it inside the
+    /// profile's shard bounds; [`Cluster::shutdown`] joins it.
+    pub fn start(router: Router, policy: FtPolicy, mut cfg: ClusterConfig)
                  -> Cluster {
         let n = cfg.shards.max(1);
         let router = Arc::new(router);
         let profile = router.profile.clone();
+        // an explicit starting size outside the profile's bounds widens
+        // the bounds to include it, so the tier never starts somewhere
+        // the scale ops could not legally keep it (nor somewhere the
+        // controller would immediately fight)
+        let min_shards = profile.min_shards.max(1).min(n);
+        let max_shards = profile.max_shards.max(min_shards).max(n);
         let expected_per_shard = cfg.expected_requests.div_ceil(n);
-        let shards: Vec<Server> = (0..n)
-            .map(|s| {
-                let injection = cfg.injection.clone().map(|mut c| {
-                    c.seed = c.seed.wrapping_add(s as u64);
-                    c.count = c.count / n + usize::from(s < c.count % n);
-                    c
-                });
-                Server::start_shard(s, router.clone(), policy,
-                                    cfg.workers_per_shard.max(1), injection,
-                                    expected_per_shard)
-            })
-            .collect();
-        let handles = shards.iter().map(|s| s.handle()).collect();
+        let mut engines = Vec::with_capacity(n);
+        let mut entries = Vec::with_capacity(n);
+        for s in 0..n {
+            let injection = cfg.injection.clone().map(|mut c| {
+                c.seed = c.seed.wrapping_add(s as u64);
+                c.count = c.count / n + usize::from(s < c.count % n);
+                c
+            });
+            let server = Server::start_shard(s, router.clone(), policy,
+                                             cfg.workers_per_shard.max(1),
+                                             injection, expected_per_shard);
+            entries.push(ShardEntry {
+                slot: s,
+                salt: salt_for(s, 0),
+                handle: server.handle(),
+            });
+            engines.push(Engine { slot: s, server });
+        }
         let shared = Arc::new(ClusterShared {
-            plans: PlanCache::new(profile),
+            plans: PlanCache::new(profile.clone()),
             router,
             policy,
-            handles,
+            workers_per_shard: cfg.workers_per_shard.max(1),
+            min_shards,
+            max_shards,
+            topology: RwLock::new(entries),
+            engines: Mutex::new(engines),
+            retired: Mutex::new(Vec::new()),
+            next_generation: AtomicU64::new(1),
+            retry_calls: AtomicU64::new(0),
+            stats: ScaleStats::default(),
+            stop: AtomicBool::new(false),
         });
-        Cluster { shards, shared }
+        let controller = cfg
+            .autoscale
+            .take()
+            .map(|mut scfg| {
+                // the cluster's effective bounds may be wider than the
+                // profile's (see above); the controller must enforce the
+                // same ones or it would fight the starting topology
+                scfg.min_shards = min_shards;
+                scfg.max_shards = max_shards;
+                scfg
+            })
+            .filter(ScalingConfig::elastic)
+            .map(|scfg| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name("ftblas-autoscale".to_string())
+                    .spawn(move || controller_loop(shared, scfg))
+                    .expect("spawn autoscale controller")
+            });
+        Cluster { shared, controller }
     }
 
+    /// A submission handle; cheap to clone, shares the topology.
     pub fn handle(&self) -> ClusterHandle {
         ClusterHandle { shared: self.shared.clone() }
     }
 
+    /// Live shard count.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.shared.topology.read().unwrap().len()
     }
 
-    /// Per-shard snapshots, in shard order (each shard's plan-cache
-    /// counters are zero in cluster mode — planning happens in the
-    /// cluster's shared cache).
+    /// Grow the tier by one shard (see [`ClusterHandle::scale_up`]).
+    pub fn scale_up(&self) -> anyhow::Result<usize> {
+        self.shared.scale_up()
+    }
+
+    /// Drain and retire one shard (see [`ClusterHandle::scale_down`]).
+    pub fn scale_down(&self) -> anyhow::Result<usize> {
+        self.shared.scale_down()
+    }
+
+    /// Per-shard snapshots of the **live** shards, in slot order (each
+    /// shard's plan-cache counters are zero in cluster mode — planning
+    /// happens in the cluster's shared cache). Retired shards'
+    /// ledgers are folded into [`Cluster::metrics`], not listed here.
     pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
-        self.shards.iter().map(|s| s.metrics()).collect()
+        let topo = self.shared.topology.read().unwrap();
+        topo.iter().map(|e| e.handle.metrics()).collect()
     }
 
-    /// Exact cluster-wide snapshot (see [`MetricsSnapshot::merge`]).
+    /// Final ledgers of shards retired by scale-downs, in drain order.
+    pub fn retired_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shared.retired.lock().unwrap().clone()
+    }
+
+    /// Exact cluster-wide snapshot (see [`MetricsSnapshot::merge`]):
+    /// live shards plus retired ledgers plus shared-cache and scale
+    /// counters (consistent under concurrent scaling).
     pub fn metrics(&self) -> MetricsSnapshot {
-        merge_with_plans(&self.shard_metrics(), &self.shared.plans)
+        self.shared.merged_snapshot()
     }
 
-    /// Stop accepting work, drain every shard, and return the exact
-    /// merged snapshot.
-    pub fn shutdown(self) -> MetricsSnapshot {
-        let Cluster { shards, shared } = self;
-        let snaps: Vec<MetricsSnapshot> =
-            shards.into_iter().map(|s| s.shutdown()).collect();
-        merge_with_plans(&snaps, &shared.plans)
+    /// Stop the autoscaler, stop accepting work, drain every live
+    /// shard, and return the exact merged snapshot (including every
+    /// retired shard's ledger).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let snaps = self.halt();
+        self.shared.finish_snapshot(&snaps)
+    }
+
+    /// The shared teardown: stop the controller, unroute everything,
+    /// drain and join every live engine. Idempotent (a second call
+    /// finds nothing to stop). Returns the engines' final ledgers.
+    fn halt(&mut self) -> Vec<MetricsSnapshot> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(c) = self.controller.take() {
+            let _ = c.join();
+        }
+        let engines: Vec<Engine> = {
+            let mut engines = self.shared.engines.lock().unwrap();
+            self.shared.topology.write().unwrap().clear();
+            engines.drain(..).collect()
+        };
+        engines.into_iter().map(|e| e.server.shutdown()).collect()
+    }
+}
+
+/// Dropping the cluster without [`Cluster::shutdown`] must not leak
+/// threads: the controller owns an `Arc<ClusterShared>` (which owns
+/// every engine), so an un-stopped controller would keep all worker
+/// pools alive for the life of the process. Drop mirrors `shutdown`
+/// minus the returned snapshot — pending jobs still finish.
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// The autoscaler loop: sample, decide, actuate. Decision rules live in
+/// [`ScalingController`]; this loop only owns the clock and the
+/// actuation calls (which are bounds-checked again inside
+/// `scale_up`/`scale_down`, so a racing manual scale cannot push the
+/// tier out of bounds).
+fn controller_loop(shared: Arc<ClusterShared>, cfg: ScalingConfig) {
+    let verbose = cfg.verbose;
+    let interval = cfg.interval;
+    let mut controller = ScalingController::new(cfg);
+    // sleep in short slices so a shutdown never waits out a long
+    // sampling interval just to join this thread
+    let slice = std::time::Duration::from_millis(10).min(interval);
+    while !shared.stop.load(Ordering::SeqCst) {
+        let wake = std::time::Instant::now() + interval;
+        loop {
+            let now = std::time::Instant::now();
+            if now >= wake || shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            std::thread::sleep(slice.min(wake - now));
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let sample = shared.sample();
+        match controller.observe(sample) {
+            ScaleDecision::Grow => {
+                if let Ok(n) = shared.scale_up() {
+                    if verbose {
+                        println!("autoscale: grew to {n} shards \
+                                  (queue={}, shed={})",
+                                 sample.queue_depth, sample.shed);
+                    }
+                }
+            }
+            ScaleDecision::Shrink => {
+                if let Ok(n) = shared.scale_down() {
+                    if verbose {
+                        println!("autoscale: drained one shard, {n} remain");
+                    }
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
     }
 }
 
@@ -313,6 +902,39 @@ mod tests {
                 assert!(route(key, &depths) < shards);
             }
         }
+    }
+
+    /// Generation 0 reproduces the fixed-topology salts, so the legacy
+    /// helpers and the salted ones agree there.
+    #[test]
+    fn generation_zero_salts_match_the_fixed_topology() {
+        for shard in 0..8 {
+            assert_eq!(salt_for(shard, 0), ROUTE_SALT ^ shard as u64);
+        }
+        let salts: Vec<u64> = (0..4).map(|s| salt_for(s, 0)).collect();
+        let depths = [0usize; 4];
+        for key in 0..512u64 {
+            assert_eq!(route(key, &depths), route_salted(key, &salts, &depths));
+        }
+    }
+
+    /// Regrowing a slot at a fresh generation changes its salt — the
+    /// slot claims a different key slice instead of recalling the old
+    /// one.
+    #[test]
+    fn fresh_generations_resalt_a_slot() {
+        assert_ne!(salt_for(1, 0), salt_for(1, 1));
+        assert_ne!(salt_for(1, 1), salt_for(1, 2));
+        let base = [salt_for(0, 0)];
+        let gen0: Vec<u64> = (0..512)
+            .filter(|&k| route_salted(k, &[base[0], salt_for(1, 0)], &[0, 0])
+                         == 1)
+            .collect();
+        let gen1: Vec<u64> = (0..512)
+            .filter(|&k| route_salted(k, &[base[0], salt_for(1, 1)], &[0, 0])
+                         == 1)
+            .collect();
+        assert_ne!(gen0, gen1, "a regrown slot must claim a fresh slice");
     }
 
     /// Equal rendezvous scores are where the live queue depths act: the
@@ -357,6 +979,7 @@ mod tests {
             workers_per_shard: 2,
             injection: None,
             expected_requests: 0,
+            autoscale: None,
         };
         let cluster = Cluster::start(router, FtPolicy::None, cfg);
         let handle = cluster.handle();
@@ -378,8 +1001,36 @@ mod tests {
         assert_eq!(m.completed, 6);
         assert_eq!(m.failed, 0);
         assert_eq!(m.shed, 0);
+        assert_eq!(m.scale_ups, 0);
+        assert_eq!(m.scale_downs, 0);
         // one shape, planned once in the cluster's shared cache
         assert_eq!(m.plan_cache_misses, 1);
         assert_eq!(m.plan_cache_hits, 5);
+    }
+
+    /// Manual scaling respects the profile's shard bounds, in both
+    /// directions.
+    #[test]
+    fn manual_scaling_respects_the_profile_bounds() {
+        let profile = Profile::default().with_shard_bounds(1, 2);
+        let router = Router::native_only(profile, Backend::NativeTuned);
+        let cfg = ClusterConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            injection: None,
+            expected_requests: 0,
+            autoscale: None,
+        };
+        let cluster = Cluster::start(router, FtPolicy::None, cfg);
+        assert_eq!(cluster.shard_count(), 1);
+        assert!(cluster.scale_down().is_err(), "already at the floor");
+        assert_eq!(cluster.scale_up().unwrap(), 2);
+        assert!(cluster.scale_up().is_err(), "already at the ceiling");
+        assert_eq!(cluster.scale_down().unwrap(), 1);
+        let m = cluster.shutdown();
+        assert_eq!(m.scale_ups, 1);
+        assert_eq!(m.scale_downs, 1);
+        assert!(m.keys_migrated > 0,
+                "growing past one shard must migrate some kernel ids");
     }
 }

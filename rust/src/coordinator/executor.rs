@@ -16,8 +16,11 @@ use crate::runtime::engine::{ArgView, Engine};
 /// Owned argument crossing the channel to the executor thread.
 #[derive(Clone, Debug)]
 pub enum OwnedArg {
+    /// A scalar operand.
     Scalar(f64),
+    /// A rank-1 operand.
     Vec1(Vec<f64>),
+    /// A row-major matrix operand with (rows, cols).
     Mat(Vec<f64>, usize, usize),
 }
 
@@ -76,6 +79,7 @@ impl PjrtHandle {
         rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
     }
 
+    /// Names of every loadable artifact.
     pub fn artifacts(&self) -> Result<Vec<String>> {
         let (reply, rx) = channel();
         self.tx
@@ -93,6 +97,7 @@ impl PjrtHandle {
         rx.recv().map_err(|_| anyhow!("executor dropped reply"))
     }
 
+    /// Ask the executor thread to exit (idempotent).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
     }
@@ -101,11 +106,14 @@ impl PjrtHandle {
 /// The executor: spawn with the artifact directory; join on drop of the
 /// last handle + shutdown.
 pub struct PjrtExecutor {
+    /// The channel-backed handle callers clone and use.
     pub handle: PjrtHandle,
     thread: Option<JoinHandle<()>>,
 }
 
 impl PjrtExecutor {
+    /// Spawn the single executor thread over an artifact directory
+    /// (fails if the PJRT engine cannot initialize there).
     pub fn spawn(artifact_dir: PathBuf) -> Result<PjrtExecutor> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();

@@ -57,6 +57,7 @@ struct Inner {
     errors_detected: u64,
     errors_corrected: u64,
     deferrals: u64,
+    starvation_reserves: u64,
     thread_budget: u64,
     max_in_flight_threads: u64,
     max_queue_depth: u64,
@@ -71,21 +72,30 @@ struct Inner {
 pub struct KernelStats {
     /// Routine the kernel serves (rollup key for the per-routine views).
     pub routine: String,
+    /// Completions recorded against this kernel.
     pub completed: u64,
+    /// Faults the injector armed on requests this kernel executed.
     pub errors_injected: u64,
+    /// Faults the kernel's protection scheme detected.
     pub errors_detected: u64,
+    /// Detected faults the scheme corrected in place.
     pub errors_corrected: u64,
     /// End-to-end latency SLO target (seconds; 0 = untracked, or mixed
     /// — completions under differing targets share this ledger entry).
     pub slo_target: f64,
     /// Completions that missed the target.
     pub slo_burns: u64,
+    /// Kernel-exec latency summary (seconds).
     pub exec: Summary,
+    /// End-to-end latency summary (queue + exec, seconds).
     pub e2e: Summary,
+    /// Queue-wait latency summary (admission → execution start).
     pub queue: Summary,
     /// Raw retained samples behind the summaries above.
     pub exec_samples: Vec<f64>,
+    /// Raw end-to-end samples.
     pub e2e_samples: Vec<f64>,
+    /// Raw queue-wait samples.
     pub queue_samples: Vec<f64>,
 }
 
@@ -102,21 +112,40 @@ impl KernelStats {
 /// A snapshot for reporting.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
+    /// Requests that completed successfully.
     pub completed: u64,
+    /// Requests whose execution returned an error.
     pub failed: u64,
     /// Submissions rejected at the admission watermark (`Overloaded`).
     pub shed: u64,
+    /// Faults the injector armed across the run.
     pub errors_injected: u64,
+    /// Faults detected by the protection schemes.
     pub errors_detected: u64,
+    /// Detected faults corrected in place.
     pub errors_corrected: u64,
     /// Admission-time plan-cache counters (filled by the server, or by
     /// the cluster for its shared cache).
     pub plan_cache_hits: u64,
+    /// Plan-cache misses (one per distinct shape × policy × backend).
     pub plan_cache_misses: u64,
     /// Times a drained batch bypassed an older group whose thread grant
     /// did not fit the remaining budget (counted per bypassed group on
     /// successful drains only, so idle re-polling does not inflate it).
     pub deferrals: u64,
+    /// Times the scheduler's anti-starvation aging kicked in: a
+    /// budget-deferred group at the FIFO head was bypassed
+    /// `starvation_limit` times, so the shard reserved its thread
+    /// budget for that group until it fit.
+    pub starvation_reserves: u64,
+    /// Shards the elastic tier added (cluster-level; zero in per-shard
+    /// snapshots, summed by merge).
+    pub scale_ups: u64,
+    /// Shards the elastic tier drained and retired (cluster-level).
+    pub scale_downs: u64,
+    /// Kernel-id routing keys whose owning shard changed across all
+    /// scale events (the migration cost of elasticity; cluster-level).
+    pub keys_migrated: u64,
     /// Configured thread budget (0 when no server is involved; summed
     /// across shards in a merged snapshot — total cluster capacity).
     pub thread_budget: u64,
@@ -131,6 +160,7 @@ pub struct MetricsSnapshot {
     /// Per-routine rollups (exact: aggregated from the retained
     /// per-kernel samples) for callers that don't care which kernel ran.
     pub exec_by_routine: HashMap<String, Summary>,
+    /// Per-routine end-to-end rollups (exact, like `exec_by_routine`).
     pub e2e_by_routine: HashMap<String, Summary>,
     /// Exact all-kernel end-to-end summary (computed from every retained
     /// sample at snapshot time, not from per-group means).
@@ -138,6 +168,7 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// An empty ledger.
     pub fn new() -> Metrics {
         Metrics::default()
     }
@@ -179,6 +210,7 @@ impl Metrics {
         k.queue.push(queue_s);
     }
 
+    /// Count a request whose execution returned an error.
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failed += 1;
     }
@@ -195,6 +227,24 @@ impl Metrics {
         }
     }
 
+    /// Count an anti-starvation reservation: the FIFO-head group
+    /// crossed the bypass limit and the scheduler fenced the budget for
+    /// it.
+    pub fn record_starvation_reserve(&self) {
+        self.inner.lock().unwrap().starvation_reserves += 1;
+    }
+
+    /// Cheap cumulative counters for the autoscaler's sampling loop:
+    /// `(completed, shed, slo_burns)` without cloning any latency
+    /// samples (a full [`Metrics::snapshot`] clones every retained
+    /// sample vector, which is too heavy to take every few
+    /// milliseconds).
+    pub fn pressure(&self) -> (u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        let burns = m.kernels.values().map(|k| k.slo_burns).sum();
+        (m.completed, m.shed, burns)
+    }
+
     /// Record the ledger level after an admission (keeps the
     /// high-watermark the oversubscription test asserts on).
     pub fn record_in_flight(&self, in_flight_threads: u64) {
@@ -209,10 +259,13 @@ impl Metrics {
         m.max_queue_depth = m.max_queue_depth.max(depth);
     }
 
+    /// Record the configured thread budget (reported, never derived).
     pub fn set_thread_budget(&self, budget: u64) {
         self.inner.lock().unwrap().thread_budget = budget;
     }
 
+    /// A point-in-time copy of the ledger, with all summaries computed
+    /// from the retained samples.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let mut snap = MetricsSnapshot {
@@ -225,6 +278,7 @@ impl Metrics {
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             deferrals: m.deferrals,
+            starvation_reserves: m.starvation_reserves,
             thread_budget: m.thread_budget,
             max_in_flight_threads: m.max_in_flight_threads,
             max_queue_depth: m.max_queue_depth,
@@ -313,6 +367,10 @@ impl MetricsSnapshot {
             out.plan_cache_hits += p.plan_cache_hits;
             out.plan_cache_misses += p.plan_cache_misses;
             out.deferrals += p.deferrals;
+            out.starvation_reserves += p.starvation_reserves;
+            out.scale_ups += p.scale_ups;
+            out.scale_downs += p.scale_downs;
+            out.keys_migrated += p.keys_migrated;
             out.thread_budget += p.thread_budget;
             out.max_in_flight_threads =
                 out.max_in_flight_threads.max(p.max_in_flight_threads);
@@ -404,12 +462,47 @@ mod tests {
         m.record_queue_depth(4);
         m.record_queue_depth(2);
         m.record_shed();
+        m.record_starvation_reserve();
         let s = m.snapshot();
         assert_eq!(s.thread_budget, 8);
         assert_eq!(s.max_in_flight_threads, 5);
         assert_eq!(s.deferrals, 2);
         assert_eq!(s.max_queue_depth, 4);
         assert_eq!(s.shed, 1);
+        assert_eq!(s.starvation_reserves, 1);
+    }
+
+    #[test]
+    fn pressure_matches_the_snapshot_counters() {
+        let m = Metrics::new();
+        m.record_completion("ddot/dmr", "ddot", 0.3, 0.3, 0.0, 0, 0, 0, 0.2);
+        m.record_completion("ddot/dmr", "ddot", 0.1, 0.1, 0.0, 0, 0, 0, 0.2);
+        m.record_shed();
+        m.record_shed();
+        let (completed, shed, burns) = m.pressure();
+        let s = m.snapshot();
+        assert_eq!(completed, s.completed);
+        assert_eq!(shed, s.shed);
+        assert_eq!(burns, s.slo_burns());
+        assert_eq!((completed, shed, burns), (2, 2, 1));
+    }
+
+    /// The cluster-level scale counters ride through merges by
+    /// summation (per-shard snapshots carry zeros; the cluster fills
+    /// them on the merged view).
+    #[test]
+    fn scale_counters_merge_by_sum() {
+        let mut a = Metrics::new().snapshot();
+        a.scale_ups = 2;
+        a.scale_downs = 1;
+        a.keys_migrated = 40;
+        a.starvation_reserves = 3;
+        let b = Metrics::new().snapshot();
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.scale_ups, 2);
+        assert_eq!(merged.scale_downs, 1);
+        assert_eq!(merged.keys_migrated, 40);
+        assert_eq!(merged.starvation_reserves, 3);
     }
 
     #[test]

@@ -46,11 +46,25 @@
 //!   CLI, benches, and examples — itself a thin delegate to the planned
 //!   path.
 //!
+//! The tier is **elastic**: an [`autoscale::ScalingController`] samples
+//! queue depth, shed rate, and SLO burn rate over a sliding window and
+//! grows/shrinks the shard set between the profile's
+//! `min_shards`/`max_shards` bounds. Growth spawns a fresh engine on
+//! the shared router with a fresh-generation rendezvous salt (only the
+//! minimal kernel-id slice migrates); shrink unroutes the newest shard,
+//! drains it to completion, and retires its ledger into the merged
+//! snapshot — in-flight requests are never dropped. Clients wrap
+//! [`cluster::ClusterHandle::submit_with_retry`] around bursty traffic
+//! to ride out transient `Overloaded` sheds with jittered backoff.
+//! `docs/ARCHITECTURE.md` narrates the whole pipeline, including the
+//! scaling state machine.
+//!
 //! The PJRT engine is not `Send`, so exactly one executor thread owns it
 //! and serves artifact calls over channels ([`executor`]); PJRT jobs are
 //! admitted unplanned (the executor plans per-artifact), batch by
 //! `(routine, dim)`, and route by a hash of the same key.
 
+pub mod autoscale;
 pub mod batcher;
 pub mod cluster;
 pub mod executor;
@@ -63,7 +77,9 @@ pub mod router;
 pub mod server;
 pub mod trace;
 
-pub use cluster::{Cluster, ClusterConfig, ClusterHandle};
+pub use autoscale::{ScaleDecision, ScalingConfig, ScalingController,
+                    TierSample};
+pub use cluster::{Cluster, ClusterConfig, ClusterHandle, RetryPolicy};
 pub use metrics::{KernelStats, MetricsSnapshot};
 pub use plan::{ExecutionPlan, PlanCache, Planner};
 pub use registry::{KernelDescriptor, KernelId, KernelRegistry};

@@ -44,11 +44,14 @@ fn inj5(f: Option<Fault>) -> OwnedArg {
 }
 
 impl PjrtBackend {
+    /// Build the backend from an executor handle and its manifest
+    /// directory.
     pub fn new(handle: PjrtHandle, artifact_dir: &Path) -> Result<PjrtBackend> {
         let manifest = Manifest::load(artifact_dir)?;
         Ok(PjrtBackend { handle, manifest })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

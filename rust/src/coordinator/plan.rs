@@ -26,15 +26,18 @@ use crate::ft::policy::FtPolicy;
 /// A resolved execution: which kernel, how many threads, which policy.
 #[derive(Clone, Copy)]
 pub struct ExecutionPlan {
+    /// The registered kernel that will run.
     pub kernel: &'static KernelDescriptor,
     /// Stable registry id of `kernel` — the batcher's scheduling key.
     pub kernel_id: KernelId,
     /// Threads granted to the kernel (1 for serial kernels).
     pub threads: usize,
+    /// Protection policy the plan was resolved under.
     pub policy: FtPolicy,
 }
 
 impl ExecutionPlan {
+    /// One-line human description (CLI `run` prints it).
     pub fn describe(&self) -> String {
         format!("{} (threads={}, policy={})", self.kernel.name, self.threads,
                 self.policy.name())
@@ -54,6 +57,7 @@ pub struct Planner<'p> {
 }
 
 impl<'p> Planner<'p> {
+    /// A planner over the global registry for one profile.
     pub fn new(profile: &'p Profile) -> Planner<'p> {
         Planner { profile, registry: KernelRegistry::global() }
     }
@@ -142,6 +146,7 @@ pub struct PlanCache {
 type PlanKey = (&'static str, usize, FtPolicy, Backend);
 
 impl PlanCache {
+    /// An empty cache for one profile.
     pub fn new(profile: Profile) -> PlanCache {
         PlanCache {
             profile,
@@ -151,6 +156,7 @@ impl PlanCache {
         }
     }
 
+    /// The profile resolutions are planned under.
     pub fn profile(&self) -> &Profile {
         &self.profile
     }

@@ -23,8 +23,11 @@ use crate::util::matrix::Matrix;
 
 /// Everything a registered kernel sees at execution time.
 pub struct ExecCtx<'a> {
+    /// The request being executed.
     pub req: &'a BlasRequest,
+    /// Machine profile (block parameters, panel sizes).
     pub profile: &'a Profile,
+    /// Protection policy the plan selected.
     pub policy: FtPolicy,
     /// Planned faults to inject (empty on clean runs). Serial DMR/ABFT
     /// schemes consume the first; the banded MT kernels route each
@@ -79,12 +82,16 @@ pub struct KernelId(pub u16);
 pub struct KernelDescriptor {
     /// Registry name, `"<routine>/<flavor>"` (e.g. `"dgemm/abft-fused-mt"`).
     pub name: &'static str,
+    /// Routine the kernel serves.
     pub routine: &'static str,
+    /// BLAS level of the routine.
     pub level: Level,
     /// Variant family the kernel belongs to (protected kernels are
     /// built on the tuned substrate and register as [`Impl::Tuned`]).
     pub variant: Impl,
+    /// Backend the kernel reports as.
     pub backend: Backend,
+    /// Protection scheme the kernel implements.
     pub scheme: Scheme,
     /// FT policies this kernel can serve.
     pub policies: &'static [FtPolicy],
@@ -95,10 +102,12 @@ pub struct KernelDescriptor {
     pub min_mr_multiple: usize,
     /// One-line human description (bench row notes).
     pub summary: &'static str,
+    /// The kernel entry point.
     pub execute: KernelFn,
 }
 
 impl KernelDescriptor {
+    /// Whether this kernel can serve `policy`.
     pub fn supports(&self, policy: FtPolicy) -> bool {
         self.policies.contains(&policy)
     }
@@ -126,10 +135,12 @@ pub struct KernelRegistry {
 static REGISTRY: KernelRegistry = KernelRegistry { entries: ENTRIES };
 
 impl KernelRegistry {
+    /// The process-wide registry table.
     pub fn global() -> &'static KernelRegistry {
         &REGISTRY
     }
 
+    /// Every descriptor, in registration (= [`KernelId`]) order.
     pub fn entries(&self) -> &'static [KernelDescriptor] {
         self.entries
     }

@@ -17,6 +17,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// CLI/report name of the backend.
     pub fn name(&self) -> &'static str {
         match self {
             Backend::NativeNaive => "naive",
@@ -26,6 +27,7 @@ impl Backend {
         }
     }
 
+    /// Parse a backend name (the CLI's `--backend`).
     pub fn by_name(s: &str) -> Option<Backend> {
         match s {
             "naive" => Some(Backend::NativeNaive),
@@ -61,25 +63,43 @@ impl Backend {
 #[derive(Clone, Debug)]
 pub enum BlasRequest {
     // ---- Level 1
+    /// x ← αx.
     Dscal { alpha: f64, x: Vec<f64> },
+    /// y ← αx + y.
     Daxpy { alpha: f64, x: Vec<f64>, y: Vec<f64> },
+    /// xᵀy.
     Ddot { x: Vec<f64>, y: Vec<f64> },
+    /// ‖x‖₂.
     Dnrm2 { x: Vec<f64> },
+    /// Σ|xᵢ|.
     Dasum { x: Vec<f64> },
+    /// Givens rotation of (x, y).
     Drot { x: Vec<f64>, y: Vec<f64>, c: f64, s: f64 },
+    /// Modified Givens rotation (flagged parameter form).
     Drotm { x: Vec<f64>, y: Vec<f64>, param: [f64; 5] },
+    /// Index of max |xᵢ|.
     Idamax { x: Vec<f64> },
     // ---- Level 2
+    /// y ← αAx + βy.
     Dgemv { alpha: f64, a: Matrix, x: Vec<f64>, beta: f64, y: Vec<f64> },
+    /// Solve Lx = b (lower triangular).
     Dtrsv { a: Matrix, b: Vec<f64> },
+    /// A ← αxyᵀ + A.
     Dger { alpha: f64, x: Vec<f64>, y: Vec<f64>, a: Matrix },
+    /// y ← αAx + βy, A symmetric.
     Dsymv { alpha: f64, a: Matrix, x: Vec<f64>, beta: f64, y: Vec<f64> },
+    /// x ← Lx (lower triangular).
     Dtrmv { a: Matrix, x: Vec<f64> },
     // ---- Level 3
+    /// C ← αAB + βC.
     Dgemm { alpha: f64, a: Matrix, b: Matrix, beta: f64, c: Matrix },
+    /// C ← αAB + βC, A symmetric.
     Dsymm { alpha: f64, a: Matrix, b: Matrix, beta: f64, c: Matrix },
+    /// B ← αLB (lower triangular).
     Dtrmm { alpha: f64, a: Matrix, b: Matrix },
+    /// Solve LX = B (lower triangular).
     Dtrsm { a: Matrix, b: Matrix },
+    /// C ← αAAᵀ + βC.
     Dsyrk { alpha: f64, a: Matrix, beta: f64, c: Matrix },
 }
 
@@ -87,12 +107,16 @@ pub enum BlasRequest {
 /// policy: DMR for 1/2, ABFT for 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Level {
+    /// Vector-vector (memory-bound; DMR-protected).
     L1,
+    /// Matrix-vector (memory-bound; DMR-protected).
     L2,
+    /// Matrix-matrix (compute-bound; ABFT-protected).
     L3,
 }
 
 impl BlasRequest {
+    /// Lowercase BLAS routine name.
     pub fn routine(&self) -> &'static str {
         match self {
             BlasRequest::Dscal { .. } => "dscal",
@@ -116,6 +140,7 @@ impl BlasRequest {
         }
     }
 
+    /// BLAS level of the routine family.
     pub fn level(&self) -> Level {
         match self {
             BlasRequest::Dscal { .. }
@@ -202,12 +227,16 @@ impl BlasRequest {
 /// Response payload: scalar or tensor result(s).
 #[derive(Clone, Debug)]
 pub enum BlasResult {
+    /// A scalar result (dot, norms, amax index as f64).
     Scalar(f64),
+    /// A vector result.
     Vector(Vec<f64>),
+    /// A matrix result.
     Matrix(Matrix),
 }
 
 impl BlasResult {
+    /// The scalar payload, if this is one.
     pub fn as_scalar(&self) -> Option<f64> {
         match self {
             BlasResult::Scalar(v) => Some(*v),
@@ -215,6 +244,7 @@ impl BlasResult {
         }
     }
 
+    /// The vector payload, if this is one.
     pub fn as_vector(&self) -> Option<&[f64]> {
         match self {
             BlasResult::Vector(v) => Some(v),
@@ -222,6 +252,7 @@ impl BlasResult {
         }
     }
 
+    /// The matrix payload, if this is one.
     pub fn as_matrix(&self) -> Option<&Matrix> {
         match self {
             BlasResult::Matrix(m) => Some(m),
@@ -233,8 +264,11 @@ impl BlasResult {
 /// A completed request.
 #[derive(Clone, Debug)]
 pub struct BlasResponse {
+    /// The computed payload.
     pub result: BlasResult,
+    /// Detection/correction counters from the protection scheme.
     pub ft: FtReport,
+    /// Backend that executed the request.
     pub backend: Backend,
     /// Registry name of the kernel that executed the request
     /// (e.g. `"dgemm/abft-fused-mt"`; `"pjrt"` on the artifact path).

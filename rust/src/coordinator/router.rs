@@ -28,16 +28,21 @@ use crate::ft::policy::FtPolicy;
 /// The router. `pjrt` is optional so the native path works without
 /// artifacts on disk (e.g. unit tests).
 pub struct Router {
+    /// Machine profile shared by every kernel execution.
     pub profile: Profile,
+    /// The artifact backend, when available.
     pub pjrt: Option<PjrtBackend>,
+    /// Preferred backend for requests both sides could serve.
     pub prefer: Backend,
 }
 
 impl Router {
+    /// A router with no PJRT backend (everything resolves native).
     pub fn native_only(profile: Profile, prefer: Backend) -> Router {
         Router { profile, pjrt: None, prefer }
     }
 
+    /// A router that may resolve requests to the PJRT artifact path.
     pub fn with_pjrt(profile: Profile, pjrt: PjrtBackend, prefer: Backend) -> Router {
         Router { profile, pjrt: Some(pjrt), prefer }
     }

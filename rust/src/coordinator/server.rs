@@ -122,6 +122,10 @@ struct Sched {
     batcher: Batcher<BatchKey, Job>,
     /// Sum of thread costs of in-flight batches.
     in_flight_threads: usize,
+    /// Anti-starvation aging: the FIFO-head group's key and how many
+    /// drains have bypassed it on budget grounds. Reset whenever the
+    /// head drains or a different group reaches the head.
+    head_age: Option<(BatchKey, u32)>,
 }
 
 impl Sched {
@@ -130,19 +134,52 @@ impl Sched {
     /// (a grant larger than the whole budget runs alone rather than
     /// starving). Returns the batch and its debited cost.
     ///
+    /// **Anti-starvation aging**: a budget-deferred MT group at the
+    /// FIFO head can otherwise be bypassed indefinitely — every serial
+    /// drain keeps the ledger non-empty, so the MT grant never fits.
+    /// After `age_limit` bypasses of the same head group, the budget is
+    /// *reserved* for it: no younger group drains until the head fits
+    /// (in-flight batches crediting the ledger back eventually admit
+    /// it, at worst via the empty-ledger escape). Sustained serial
+    /// traffic therefore delays an MT batch by a bounded amount instead
+    /// of forever; the reservation is counted in the ledger.
+    ///
     /// Deferrals are recorded only when a younger batch actually
     /// bypassed an over-budget group — a real scheduling decision. A
     /// fruitless pass (nothing admissible, worker goes back to waiting)
     /// is not counted, so the metric reflects contention rather than
     /// how often idle workers re-poll.
-    fn pop_admissible(&mut self, budget: usize, metrics: &Metrics)
-                      -> Option<(Batch, usize)> {
+    fn pop_admissible(&mut self, budget: usize, age_limit: usize,
+                      metrics: &Metrics) -> Option<(Batch, usize)> {
         let in_flight = self.in_flight_threads;
+        let head = self.batcher.head_key();
+        let reserved = matches!(
+            (&self.head_age, head),
+            (Some((aged, n)), Some(h)) if *aged == h && *n >= age_limit as u32
+        );
         let drain = self.batcher.next_batch_where(|k| {
-            in_flight == 0 || in_flight + k.thread_cost() <= budget
+            let fits = in_flight == 0 || in_flight + k.thread_cost() <= budget;
+            fits && (!reserved || Some(*k) == head)
         });
         if !drain.batch.is_empty() {
             metrics.record_deferrals(drain.deferred as u64);
+        }
+        // aging bookkeeping: the head either drained (reset), was
+        // bypassed by the drained batch (count it), or nothing drained
+        // (state unchanged — an idle re-poll is not a bypass)
+        match (drain.batch.first().map(|p| p.key), head) {
+            (Some(k), Some(h)) if k == h => self.head_age = None,
+            (Some(_), Some(h)) => {
+                let n = match self.head_age {
+                    Some((aged, n)) if aged == h => n + 1,
+                    _ => 1,
+                };
+                if n as usize == age_limit {
+                    metrics.record_starvation_reserve();
+                }
+                self.head_age = Some((h, n));
+            }
+            _ => {}
         }
         let first = drain.batch.first()?;
         let cost = first.key.thread_cost();
@@ -161,6 +198,9 @@ struct Shared {
     router: Arc<Router>,
     policy: FtPolicy,
     thread_budget: usize,
+    /// Bypass count after which the scheduler reserves the budget for
+    /// a deferred FIFO-head group (from `Profile.starvation_limit`).
+    starvation_limit: usize,
     /// This engine's shard index (0 for a standalone server).
     shard: usize,
     /// Queue-depth watermark; `None` = unbounded admission.
@@ -217,20 +257,32 @@ impl ServerHandle {
             .shared
             .plans
             .resolve(req.routine(), req.dim(), policy, backend);
-        self.enqueue(req, plan)
+        self.enqueue(req, plan).map_err(|(e, _)| e)
     }
 
     /// Cluster entry: enqueue a request whose plan was already resolved
     /// by the cluster's shared cache (no shard-local planning).
     pub(crate) fn submit_planned(&self, req: BlasRequest,
                                  plan: Option<ExecutionPlan>) -> Admitted {
+        self.enqueue(req, plan).map_err(|(e, _)| e)
+    }
+
+    /// [`ServerHandle::submit_planned`] that hands a rejected request
+    /// back to the caller, so retry wrappers re-submit the same value
+    /// without a defensive clone per attempt.
+    pub(crate) fn submit_planned_returning(
+        &self, req: BlasRequest, plan: Option<ExecutionPlan>)
+        -> std::result::Result<Receiver<Result<BlasResponse>>,
+                               (Error, BlasRequest)> {
         self.enqueue(req, plan)
     }
 
     /// The single enqueue path: admission watermark, batch-key
-    /// derivation, push, wake.
+    /// derivation, push, wake. Rejections return the request unconsumed
+    /// alongside the typed error.
     fn enqueue(&self, req: BlasRequest, plan: Option<ExecutionPlan>)
-               -> Admitted {
+               -> std::result::Result<Receiver<Result<BlasResponse>>,
+                                      (Error, BlasRequest)> {
         let key = match &plan {
             Some(p) => BatchKey::Planned {
                 kernel: p.kernel_id,
@@ -249,18 +301,19 @@ impl ServerHandle {
             // push racing shutdown either lands before that decision —
             // and is drained — or is rejected here, never orphaned
             if self.shared.shutdown.load(Ordering::SeqCst) {
-                return Err(Error::ShuttingDown { shard: self.shared.shard });
+                return Err((Error::ShuttingDown { shard: self.shared.shard },
+                            req));
             }
             if let Some(limit) = self.shared.admission_depth {
                 let depth = s.batcher.len();
                 if depth >= limit {
                     drop(s);
                     self.shared.metrics.record_shed();
-                    return Err(Error::Overloaded {
+                    return Err((Error::Overloaded {
                         shard: self.shared.shard,
                         depth,
                         limit,
-                    });
+                    }, req));
                 }
             }
             s.batcher
@@ -284,6 +337,15 @@ impl ServerHandle {
         self.shared.sched.lock().unwrap().batcher.len()
     }
 
+    /// Cheap cumulative `(completed, shed, slo_burns)` counters — what
+    /// the cluster's autoscaler samples every interval (a full
+    /// [`ServerHandle::metrics`] snapshot clones every retained latency
+    /// sample, far too heavy for a sampling loop).
+    pub fn pressure(&self) -> (u64, u64, u64) {
+        self.shared.metrics.pressure()
+    }
+
+    /// Snapshot of this shard's ledger (plan-cache counters included).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.snapshot()
     }
@@ -341,10 +403,12 @@ impl Server {
             sched: Mutex::new(Sched {
                 batcher: Batcher::new(profile.max_batch),
                 in_flight_threads: 0,
+                head_age: None,
             }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             metrics: Metrics::new(),
+            starvation_limit: profile.starvation_limit.max(1),
             shard,
             admission_depth: profile.admission_depth,
             slo: profile.slo.clone(),
@@ -368,10 +432,12 @@ impl Server {
         Server { shared, workers }
     }
 
+    /// A submission handle; cheap to clone.
     pub fn handle(&self) -> ServerHandle {
         ServerHandle { shared: self.shared.clone() }
     }
 
+    /// Snapshot of this engine's ledger.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.snapshot()
     }
@@ -424,8 +490,9 @@ fn worker_loop(shared: Arc<Shared>) {
             let mut s = shared.sched.lock().unwrap();
             loop {
                 if !s.batcher.is_empty() {
-                    if let Some(got) =
-                        s.pop_admissible(shared.thread_budget, &shared.metrics)
+                    if let Some(got) = s.pop_admissible(shared.thread_budget,
+                                                        shared.starvation_limit,
+                                                        &shared.metrics)
                     {
                         break got;
                     }
@@ -597,6 +664,7 @@ mod tests {
             batcher: Batcher::new(8),
             // one MT batch already executing
             in_flight_threads: mt.thread_cost(),
+            head_age: None,
         };
         let job = |plan: &ExecutionPlan, req: BlasRequest| {
             let key = BatchKey::Planned {
@@ -624,14 +692,14 @@ mod tests {
         let (k2, j2) = job(&serial, dot);
         sched.batcher.push(k2, j2);
         // budget 6: in-flight 4 + MT 4 > 6 defers, + serial 1 = 5 fits
-        let (batch, cost) = sched.pop_admissible(6, &metrics).unwrap();
+        let (batch, cost) = sched.pop_admissible(6, 4, &metrics).unwrap();
         assert_eq!(cost, 1, "serial batch must flow past the deferred MT");
         assert!(matches!(batch[0].key, BatchKey::Planned { threads: 1, .. }));
         assert_eq!(sched.in_flight_threads, 5);
         // nothing admissible for the MT batch until the ledger drains
-        assert!(sched.pop_admissible(6, &metrics).is_none());
+        assert!(sched.pop_admissible(6, 4, &metrics).is_none());
         sched.in_flight_threads = 0;
-        let (batch, cost) = sched.pop_admissible(6, &metrics).unwrap();
+        let (batch, cost) = sched.pop_admissible(6, 4, &metrics).unwrap();
         assert_eq!(cost, 4);
         assert!(matches!(batch[0].key, BatchKey::Planned { threads: 4, .. }));
         let snap = metrics.snapshot();
@@ -639,6 +707,86 @@ mod tests {
         // group; the fruitless pass in between is not counted
         assert_eq!(snap.deferrals, 1);
         assert_eq!(snap.max_in_flight_threads, 5);
+    }
+
+    /// Anti-starvation aging, on a deterministic schedule: an MT group
+    /// at the FIFO head under a tight budget is bypassed by serial
+    /// traffic exactly `age_limit` times, after which the budget is
+    /// reserved for it — younger serial groups stop draining even
+    /// though they fit — until the ledger empties and the head runs.
+    #[test]
+    fn aged_head_group_reserves_the_budget() {
+        let profile = Profile::cascade_sim(); // threads = 4
+        let cache = PlanCache::new(profile.clone());
+        let mt = cache
+            .resolve("dgemm", 96, FtPolicy::None, Backend::NativeTuned)
+            .unwrap();
+        let serial = cache
+            .resolve("ddot", 256, FtPolicy::None, Backend::NativeTuned)
+            .unwrap();
+        let metrics = Metrics::new();
+        let mut sched = Sched {
+            batcher: Batcher::new(1), // one item per drain: exact schedule
+            in_flight_threads: 4,     // an MT batch is already executing
+            head_age: None,
+        };
+        let job = |plan: &ExecutionPlan, req: BlasRequest| {
+            let key = BatchKey::Planned {
+                kernel: plan.kernel_id,
+                threads: plan.thread_cost() as u16,
+            };
+            let (reply, _rx) = channel();
+            std::mem::forget(_rx);
+            (key, Job { req, plan: Some(*plan), enqueued: Instant::now(),
+                        reply })
+        };
+        let mut rng = Rng::new(0xA9E);
+        let gemm = || BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::zeros(96, 96),
+            b: Matrix::zeros(96, 96),
+            beta: 0.0,
+            c: Matrix::zeros(96, 96),
+        };
+        let (mk, mj) = job(&mt, gemm());
+        sched.batcher.push(mk, mj);
+        // sustained serial traffic behind the MT head
+        for _ in 0..4 {
+            let (sk, sj) = job(&serial, BlasRequest::Ddot {
+                x: rng.normal_vec(256),
+                y: rng.normal_vec(256),
+            });
+            sched.batcher.push(sk, sj);
+        }
+        const LIMIT: usize = 2;
+        // budget 6, in-flight 4: MT (4 more) never fits, serial (1) does.
+        // Bypass 1 and 2 drain serial batches and age the head...
+        for bypass in 1..=LIMIT {
+            let (batch, cost) =
+                sched.pop_admissible(6, LIMIT, &metrics).unwrap();
+            assert_eq!(cost, 1, "bypass {bypass} must drain a serial batch");
+            assert!(matches!(batch[0].key,
+                             BatchKey::Planned { threads: 1, .. }));
+            sched.in_flight_threads -= 1; // the serial batch completes
+        }
+        // ...and from now on the budget is reserved: serial batches
+        // still fit the arithmetic, but the aged head fences them out
+        assert!(sched.pop_admissible(6, LIMIT, &metrics).is_none(),
+                "reservation must block younger serial batches");
+        assert_eq!(sched.batcher.len(), 3, "two serial drained, two wait");
+        // the in-flight MT batch finally credits the ledger back
+        sched.in_flight_threads = 0;
+        let (batch, cost) = sched.pop_admissible(6, LIMIT, &metrics).unwrap();
+        assert_eq!(cost, 4, "the aged MT head drains first");
+        assert!(matches!(batch[0].key, BatchKey::Planned { threads: 4, .. }));
+        // reservation cleared: the remaining serial traffic flows again
+        let (_, cost) = sched.pop_admissible(6, LIMIT, &metrics).unwrap();
+        assert_eq!(cost, 1);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.starvation_reserves, 1,
+                   "crossing the limit is counted once");
+        assert_eq!(snap.deferrals, LIMIT as u64,
+                   "only the real bypasses count as deferrals");
     }
 
     /// The admission error is typed (clients match on it to back off)

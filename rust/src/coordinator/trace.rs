@@ -11,12 +11,19 @@ use crate::util::rng::Rng;
 /// Mix weights over routine families (normalized internally).
 #[derive(Clone, Debug)]
 pub struct Mix {
+    /// Weight of DSCAL requests (Level-1).
     pub dscal: f64,
+    /// Weight of DDOT requests (Level-1).
     pub ddot: f64,
+    /// Weight of DNRM2 requests (Level-1).
     pub dnrm2: f64,
+    /// Weight of DGEMV requests (Level-2).
     pub dgemv: f64,
+    /// Weight of DTRSV requests (Level-2).
     pub dtrsv: f64,
+    /// Weight of DGEMM requests (Level-3).
     pub dgemm: f64,
+    /// Weight of DTRSM requests (Level-3).
     pub dtrsm: f64,
 }
 
@@ -50,13 +57,31 @@ impl Default for Burst {
     }
 }
 
+impl Burst {
+    /// Parse a named arrival pattern (the CLI's `--trace` flag):
+    /// `"steady"` is plain Poisson arrivals (no overlay), `"burst"` the
+    /// default on/off overlay. Unknown names are an error, listing the
+    /// accepted values.
+    pub fn from_pattern(name: &str) -> Result<Option<Burst>, String> {
+        match name {
+            "steady" => Ok(None),
+            "burst" => Ok(Some(Burst::default())),
+            other => Err(format!(
+                "unknown trace pattern `{other}` (want steady|burst)")),
+        }
+    }
+}
+
 /// Trace generation config.
 #[derive(Clone, Debug)]
 pub struct TraceConfig {
+    /// RNG seed; traces are fully deterministic given the config.
     pub seed: u64,
+    /// Number of requests to generate.
     pub requests: usize,
     /// mean arrival rate (requests/second) for the Poisson process
     pub rate: f64,
+    /// Routine-family mix weights.
     pub mix: Mix,
     /// vector length for L1 routines
     pub vec_len: usize,
@@ -88,7 +113,9 @@ impl Default for TraceConfig {
 
 /// One trace entry: the request plus its arrival offset from t=0.
 pub struct TraceEntry {
+    /// Arrival time, seconds after the trace starts.
     pub at_seconds: f64,
+    /// The request arriving at that instant.
     pub request: BlasRequest,
 }
 
@@ -246,6 +273,14 @@ mod tests {
         for (a, b) in t.iter().zip(&plain) {
             assert_eq!(a.request.routine(), b.request.routine());
         }
+    }
+
+    #[test]
+    fn named_patterns_parse() {
+        assert!(Burst::from_pattern("steady").unwrap().is_none());
+        let b = Burst::from_pattern("burst").unwrap().unwrap();
+        assert_eq!(b.period, Burst::default().period);
+        assert!(Burst::from_pattern("storm").is_err());
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub struct ChecksumState {
 }
 
 impl ChecksumState {
+    /// Zero-initialized checksum state for an m×n output.
     pub fn zeros(m: usize, n: usize) -> Self {
         ChecksumState { cr_enc: vec![0.0; m], cc_enc: vec![0.0; n] }
     }
@@ -72,8 +73,11 @@ impl ChecksumState {
 /// A located error: position and decoded magnitude.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LocatedError {
+    /// Row of the corrupted element.
     pub i: usize,
+    /// Column of the corrupted element.
     pub j: usize,
+    /// Decoded additive error magnitude.
     pub magnitude: f64,
 }
 

@@ -16,6 +16,7 @@ pub struct Fault {
     pub step: usize,
     /// Position within the output (row for vectors, (i, j) for matrices).
     pub i: usize,
+    /// Column within the output (0 for vectors).
     pub j: usize,
     /// Additive magnitude — the flipped-bit value delta.
     pub delta: f64,
@@ -24,11 +25,13 @@ pub struct Fault {
 /// Injection configuration for an experiment run.
 #[derive(Clone, Debug)]
 pub struct InjectorConfig {
+    /// RNG seed; plans are deterministic given the config.
     pub seed: u64,
     /// Total faults to inject across the run (paper: 20 per routine).
     pub count: usize,
     /// Magnitude range (log-uniform).
     pub min_magnitude: f64,
+    /// Upper magnitude bound.
     pub max_magnitude: f64,
 }
 
@@ -74,10 +77,12 @@ impl Injector {
         Injector { plan, cursor: 0 }
     }
 
+    /// An injector with nothing planned.
     pub fn empty() -> Self {
         Injector { plan: Vec::new(), cursor: 0 }
     }
 
+    /// Total strikes in the plan.
     pub fn planned(&self) -> usize {
         self.plan.len()
     }
@@ -93,6 +98,7 @@ impl Injector {
         }
     }
 
+    /// Strikes not yet taken.
     pub fn remaining(&self) -> usize {
         self.plan.len() - self.cursor
     }

@@ -26,15 +26,19 @@ pub mod policy;
 /// layer (paper §6.3 validates against these).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FtReport {
+    /// Faults the scheme detected.
     pub errors_detected: u64,
+    /// Detected faults corrected in place.
     pub errors_corrected: u64,
 }
 
 impl FtReport {
+    /// A clean report (no errors).
     pub fn none() -> Self {
         Self::default()
     }
 
+    /// Accumulate another report's counters.
     pub fn merge(&mut self, other: FtReport) {
         self.errors_detected += other.errors_detected;
         self.errors_corrected += other.errors_corrected;

@@ -27,6 +27,7 @@ pub enum FtPolicy {
 }
 
 impl FtPolicy {
+    /// Every policy, in CLI/report order.
     pub const ALL: [FtPolicy; 4] = [
         FtPolicy::None,
         FtPolicy::Hybrid,
@@ -34,6 +35,7 @@ impl FtPolicy {
         FtPolicy::AbftWeighted,
     ];
 
+    /// CLI/report name of the policy.
     pub fn name(&self) -> &'static str {
         match self {
             FtPolicy::None => "none",
@@ -43,6 +45,7 @@ impl FtPolicy {
         }
     }
 
+    /// Parse a policy name (the CLI's `--ft`, with aliases).
     pub fn by_name(s: &str) -> Option<FtPolicy> {
         match s {
             "none" | "off" => Some(FtPolicy::None),
@@ -53,6 +56,7 @@ impl FtPolicy {
         }
     }
 
+    /// Whether the policy applies any protection at all.
     pub fn protects(&self) -> bool {
         !matches!(self, FtPolicy::None)
     }

@@ -22,15 +22,29 @@
 //!   memoized plan cache; a *cluster* front-end routes each admitted
 //!   request to a shard by rendezvous hashing on the planned kernel id
 //!   (shedding typed `Overloaded` errors at a per-shard queue-depth
-//!   watermark); each shard's batcher schedules by planned kernel id
-//!   under a thread-budget ledger, and workers execute pre-resolved
-//!   plans. Completions land in per-shard, per-kernel metrics ledgers
-//!   (latencies, SLO burns, FT counters) that merge exactly. Dispatch
-//!   is data — a descriptor table — not nested match arms.
+//!   watermark, which clients ride out with
+//!   [`coordinator::cluster::ClusterHandle::submit_with_retry`]); each
+//!   shard's batcher schedules by planned kernel id under a
+//!   thread-budget ledger with anti-starvation aging, and workers
+//!   execute pre-resolved plans. The shard set itself is **elastic**: a
+//!   [`coordinator::autoscale::ScalingController`] grows and shrinks it
+//!   between the profile's bounds on queue-depth / shed-rate / SLO-burn
+//!   signals, migrating only the minimal kernel-id slice per scale
+//!   event and draining victims without dropping a request. Completions
+//!   land in per-shard, per-kernel metrics ledgers (latencies, SLO
+//!   burns, FT counters, scale events) that merge exactly. Dispatch is
+//!   data — a descriptor table — not nested match arms.
 //! - [`bench`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //! - [`apps`] — downstream consumers (blocked Cholesky) exercising the
 //!   public API end to end.
+//!
+//! `docs/ARCHITECTURE.md` is the narrative companion: the full
+//! admission → route → schedule → execute pipeline, the elastic-scaling
+//! state machine, and the mapping from each `ft/` scheme back to the
+//! paper section it reproduces.
+
+#![warn(missing_docs)]
 
 pub mod apps;
 pub mod bench;
@@ -42,6 +56,8 @@ pub mod runtime;
 pub mod util;
 
 pub use config::Profile;
+pub use coordinator::autoscale::{ScalingConfig, ScalingController};
+pub use coordinator::cluster::{Cluster, ClusterHandle, RetryPolicy};
 pub use coordinator::metrics::MetricsSnapshot;
 pub use coordinator::plan::{ExecutionPlan, PlanCache, Planner};
 pub use coordinator::registry::{KernelId, KernelRegistry};

@@ -15,7 +15,8 @@ use anyhow::{anyhow, bail, Result};
 use ftblas::bench::{self, BenchCtx};
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
-use ftblas::coordinator::cluster::{Cluster, ClusterConfig};
+use ftblas::coordinator::autoscale::ScalingConfig;
+use ftblas::coordinator::cluster::{Cluster, ClusterConfig, RetryPolicy};
 use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
 use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
@@ -82,13 +83,17 @@ USAGE:
              [--variant naive|blocked|tuned] [--threads T]
              [--ft none|hybrid|abft-unfused|abft-weighted] [--inject]
              [--profile P]
-  ftblas serve [--requests N] [--ft P] [--shards S] [--admission-depth D]
+  ftblas serve [--requests N] [--ft P] [--shards S] [--min-shards M]
+             [--max-shards X] [--scale-interval MS] [--admission-depth D]
              [--workers W] [--max-batch B] [--thread-budget T] [--threads T]
-             [--vec-len N] [--mat-dim N] [--burst F] [--inject] [--profile P]
-             (--shards: engines in the cluster, routed by planned kernel;
+             [--vec-len N] [--mat-dim N] [--trace steady|burst] [--burst F]
+             [--inject] [--profile P]
+             (--shards: fixed-size cluster, routed by planned kernel;
+              --min-shards/--max-shards: elastic bounds — a scaling
+              controller grows/shrinks the tier every --scale-interval ms;
               --admission-depth: per-shard queue watermark — excess
-              submissions shed as `Overloaded`; --burst: arrival-rate
-              multiplier for the trace's on phases)
+              submissions shed as `Overloaded` and retried with backoff;
+              --trace burst (or --burst F): bursty paced arrivals)
   ftblas bench --exp smoke|table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
   ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
@@ -220,8 +225,9 @@ fn results_close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
 
 /// Drive the sharded serving tier with a mixed trace and print the
 /// merged per-kernel metrics ledger: admission-time plans, rendezvous
-/// routing across shards, queue-depth shedding, kernel-keyed batches,
-/// the thread-budget ledgers, SLO burns, plan-cache hit rates.
+/// routing across shards, queue-depth shedding with client-side
+/// retries, elastic scaling events, kernel-keyed batches, the
+/// thread-budget ledgers, SLO burns, plan-cache hit rates.
 fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     let requests = args.get_usize("requests", 200)?.max(1);
     let policy = FtPolicy::by_name(&args.get("ft", "hybrid"))
@@ -229,7 +235,6 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     profile.threads = args.get_usize("threads", profile.threads)?.max(1);
     profile.workers = args.get_usize("workers", profile.workers)?.max(1);
     profile.max_batch = args.get_usize("max-batch", profile.max_batch)?.max(1);
-    profile.shards = args.get_usize("shards", profile.shards)?.max(1);
     if args.has("thread-budget") {
         profile.thread_budget =
             Some(args.get_usize("thread-budget", 0)?.max(1));
@@ -238,17 +243,46 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
         profile.admission_depth =
             Some(args.get_usize("admission-depth", 0)?.max(1));
     }
+    // sizing: `--shards` is the fixed-size mode; `--min-shards` /
+    // `--max-shards` widen the bounds and hand sizing to the
+    // autoscaling controller (starting at the floor)
+    if args.has("min-shards") || args.has("max-shards") {
+        let min = args.get_usize("min-shards", 1)?.max(1);
+        let max = args.get_usize("max-shards", profile.shards.max(min))?;
+        if min >= max {
+            // the elastic flags promise an autoscaler, which needs a
+            // real range — a collapsed or inverted one would silently
+            // run fixed-size (use --shards for that)
+            bail!("elastic bounds [{min}, {max}] leave the autoscaler no \
+                   room: need min < max (use --shards N for a fixed-size \
+                   tier)");
+        }
+        profile = profile.with_shard_bounds(min, max);
+        // start at an explicit --shards (clamped into the bounds), else
+        // at the floor and let the controller earn the rest
+        profile.shards = args
+            .get_usize("shards", profile.min_shards)?
+            .clamp(profile.min_shards, profile.max_shards);
+    } else {
+        profile = profile
+            .with_shards(args.get_usize("shards", profile.shards)?.max(1));
+    }
+    // 10ms sampling: bursty queue spikes last a few ms, so the
+    // controller needs a tight cadence to witness them live (shed and
+    // burn counters integrate between samples regardless)
+    let scale_interval = args.get_usize("scale-interval", 10)?.max(1);
     let mat_dim = args.get_usize("mat-dim", 128)?;
+    // `--trace burst` and `--burst F` both enable the on/off overlay;
     // `--burst` alone takes the default 50× on-phase factor
-    let burst = if args.has("burst") {
+    let mut burst = Burst::from_pattern(&args.get("trace", "steady"))
+        .map_err(|e| anyhow!(e))?;
+    if args.has("burst") {
         let factor = match args.get("burst", "50").as_str() {
             "true" => 50.0,
             v => v.parse::<f64>().map_err(|_| anyhow!("--burst wants a number"))?,
         };
-        Some(Burst { factor: factor.max(1.0), ..Default::default() })
-    } else {
-        None
-    };
+        burst = Some(Burst { factor: factor.max(1.0), ..Default::default() });
+    }
     let cfg = TraceConfig {
         requests,
         vec_len: args.get_usize("vec-len", 16384)?,
@@ -259,10 +293,16 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
         burst,
         ..Default::default()
     };
-    println!("serve: {} requests on {} (shards={}, workers/shard={}, \
+    println!("serve: {} requests on {} (shards={}{}, workers/shard={}, \
               threads={}, max_batch={}, admission_depth={}, policy={})",
-             requests, profile.name, profile.shards, profile.workers,
-             profile.threads, profile.max_batch,
+             requests, profile.name, profile.shards,
+             if profile.elastic() {
+                 format!(" elastic [{}..{}]", profile.min_shards,
+                         profile.max_shards)
+             } else {
+                 String::new()
+             },
+             profile.workers, profile.threads, profile.max_batch,
              profile.admission_depth.map_or("unbounded".to_string(),
                                             |d| d.to_string()),
              policy.name());
@@ -271,21 +311,33 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
         count: (requests / 8).max(1),
         ..Default::default()
     });
+    let autoscale = profile.elastic().then(|| {
+        let mut scfg = ScalingConfig::from_profile(&profile)
+            .with_interval(std::time::Duration::from_millis(
+                scale_interval as u64));
+        scfg.verbose = true;
+        scfg
+    });
     let cluster_cfg = ClusterConfig {
         injection,
         expected_requests: requests,
+        autoscale,
         ..ClusterConfig::from_profile(&profile)
     };
+    let elastic = cluster_cfg.autoscale.is_some();
+    let min_shards = profile.min_shards;
     let router = Router::native_only(profile, Backend::NativeTuned);
     let cluster = Cluster::start(router, policy, cluster_cfg);
     let handle = cluster.handle();
+    let retry = RetryPolicy::default();
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     let mut rejected = 0u64;
+    let mut retries = 0u64;
     // with a burst overlay the trace's arrival times are the point:
     // pace submissions by them so the on-phases actually slam the
     // admission watermark while off-phases let the shards drain.
-    // Without --burst, submissions stay un-paced (as fast as possible).
+    // Without bursts, submissions stay un-paced (as fast as possible).
     let paced = cfg.burst.is_some();
     for e in &entries {
         if paced {
@@ -295,25 +347,65 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
                 std::thread::sleep(wait);
             }
         }
-        match handle.submit(e.request.clone()) {
-            Ok(rx) => rxs.push(rx),
-            Err(_) => rejected += 1, // typed Overloaded: client backs off
+        if paced {
+            // bursty clients ride out transient sheds with jittered
+            // exponential backoff instead of losing the request
+            let (admitted, spent) = handle.submit_with_retry(
+                e.request.clone(), &retry);
+            retries += spent as u64;
+            match admitted {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1, // retries exhausted
+            }
+        } else {
+            match handle.submit(e.request.clone()) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1, // typed Overloaded, no pacing
+            }
         }
     }
     for rx in rxs {
         rx.recv()??;
     }
     let wall = t0.elapsed().as_secs_f64();
+    // elastic runs end with a cooldown: the trace is done, arrivals are
+    // calm, and the controller should hand capacity back — wait for at
+    // least one scale-down (bounded) so a single `serve` demonstrates a
+    // full grow→shrink cycle.
+    if elastic {
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(3);
+        while std::time::Instant::now() < deadline {
+            // done when the tier never grew (nothing to hand back) or
+            // has drained back down to the floor; scale_events is a
+            // cheap counter read, no ledger merge per poll
+            let (ups, _) = handle.scale_events();
+            if ups == 0 || handle.shard_count() <= min_shards {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
     let shard_snaps = cluster.shard_metrics();
+    let retired = cluster.retired_metrics();
     let snap = cluster.shutdown();
+    // unpaced runs submit without retries, so their rejects are raw
+    // first-attempt sheds — label them as such
+    let shed_label =
+        if paced { "shed after retries" } else { "shed at admission" };
     println!("completed {} of {} requests in {:.2}s -> {:.1} req/s \
-              ({rejected} shed at admission)\n",
+              ({retries} retried, {rejected} {shed_label})\n",
              snap.completed, requests, wall, snap.completed as f64 / wall);
     for (i, s) in shard_snaps.iter().enumerate() {
         println!("shard {i}: {} completed, {} shed, e2e p99={:.2}ms, \
                   max queue depth {}",
                  s.completed, s.shed, s.overall_e2e().p99 * 1e3,
                  s.max_queue_depth);
+    }
+    for (i, s) in retired.iter().enumerate() {
+        println!("retired shard #{i}: {} completed, {} shed \
+                  (drained by scale-down; ledger merged below)",
+                 s.completed, s.shed);
     }
     println!();
     ftblas::bench::harness::print_ledger(&snap);

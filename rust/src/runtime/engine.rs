@@ -17,7 +17,9 @@ use crate::runtime::manifest::{ArtifactSpec, Manifest};
 /// rank <= 2 (BLAS), which keeps this simple.
 #[derive(Clone, Copy, Debug)]
 pub enum ArgView<'a> {
+    /// A scalar operand.
     Scalar(f64),
+    /// A rank-1 operand.
     Vec1(&'a [f64]),
     /// Row-major (rows, cols).
     Mat(&'a [f64], usize, usize),
@@ -41,6 +43,7 @@ pub struct Engine {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     /// compile + execute counters for metrics
     pub compiles: u64,
+    /// Artifact executions performed.
     pub executions: u64,
 }
 
@@ -59,6 +62,7 @@ impl Engine {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -21,18 +21,22 @@ use anyhow::{bail, Context, Result};
 pub struct Shape(pub Vec<usize>);
 
 impl Shape {
+    /// The rank-0 shape.
     pub fn scalar() -> Shape {
         Shape(vec![])
     }
 
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.0.iter().product()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.0.len()
     }
 
+    /// Parse the manifest's `f64:...` shape syntax.
     pub fn parse(s: &str) -> Result<Shape> {
         let body = s
             .strip_prefix("f64:")
@@ -52,12 +56,19 @@ impl Shape {
 /// One artifact entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (manifest key).
     pub name: String,
+    /// HLO-text file, relative to the manifest directory.
     pub file: PathBuf,
+    /// BLAS routine the artifact implements.
     pub routine: String,
+    /// Artifact variant (`ori`, `dmr`, `abft`, ...).
     pub variant: String,
+    /// Input shapes, in call order.
     pub inputs: Vec<Shape>,
+    /// Output shapes.
     pub outputs: Vec<Shape>,
+    /// Free-form key=value metadata from the manifest row.
     pub meta: HashMap<String, String>,
 }
 
@@ -71,12 +82,15 @@ impl ArtifactSpec {
 /// The parsed manifest: ordered specs + indices.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Profile the artifacts were compiled for.
     pub profile: String,
+    /// All artifact entries, in manifest order.
     pub specs: Vec<ArtifactSpec>,
     by_name: HashMap<String, usize>,
 }
 
 impl Manifest {
+    /// Parse manifest text (TSV rows + `# profile=` header).
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
         let mut m = Manifest::default();
         for (lineno, line) in text.lines().enumerate() {
@@ -128,6 +142,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Load and parse `manifest.tsv` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&path)
@@ -135,6 +150,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Look an artifact up by its manifest name.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.by_name.get(name).map(|&i| &self.specs[i])
     }

@@ -10,7 +10,9 @@ use crate::util::rng::Rng;
 
 /// Generator handed to properties: a seeded RNG plus sizing helpers.
 pub struct Gen {
+    /// The case's seeded RNG.
     pub rng: Rng,
+    /// Zero-based case index within the check run.
     pub case: usize,
 }
 
@@ -62,6 +64,7 @@ pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
     if cond { Ok(()) } else { Err(msg.into()) }
 }
 
+/// `ensure` specialized to relative f64 closeness.
 pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
     if (a - b).abs() <= tol * (1.0 + b.abs()) {
         Ok(())

@@ -6,21 +6,27 @@ use crate::util::rng::Rng;
 /// Row-major dense matrix of f64 (the paper's D-precision).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap existing row-major data (panics on a shape mismatch).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Matrix { rows, cols, data }
     }
 
+    /// The n×n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -29,6 +35,7 @@ impl Matrix {
         m
     }
 
+    /// Standard-normal entries from the seeded RNG.
     pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
         Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
     }
@@ -99,16 +106,19 @@ impl Matrix {
         head[lo * c..(lo + 1) * c].swap_with_slice(&mut tail[..c]);
     }
 
+    /// Element `(i, j)`.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.cols + j]
     }
 
+    /// Set element `(i, j)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         self.data[i * self.cols + j] = v;
     }
 
+    /// A transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -119,12 +129,14 @@ impl Matrix {
         t
     }
 
+    /// Per-row sums (the ABFT row-checksum primitive).
     pub fn row_sums(&self) -> Vec<f64> {
         (0..self.rows)
             .map(|i| self.data[i * self.cols..(i + 1) * self.cols].iter().sum())
             .collect()
     }
 
+    /// Per-column sums (the ABFT column-checksum primitive).
     pub fn col_sums(&self) -> Vec<f64> {
         let mut s = vec![0.0; self.cols];
         for i in 0..self.rows {
@@ -135,10 +147,13 @@ impl Matrix {
         s
     }
 
+    /// Largest absolute entry.
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0, |m, &v| m.max(v.abs()))
     }
 
+    /// Largest absolute elementwise difference (panics on shape
+    /// mismatch).
     pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data

@@ -25,6 +25,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

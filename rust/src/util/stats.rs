@@ -7,16 +7,24 @@ use std::time::{Duration, Instant};
 /// Summary statistics over a set of measurements (seconds).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 99th percentile (nearest-rank).
     pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a sample slice (all zeros when empty).
     pub fn from_samples(samples: &[f64]) -> Summary {
         if samples.is_empty() {
             return Summary::default();

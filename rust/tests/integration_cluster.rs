@@ -1,9 +1,12 @@
 //! Integration tests over the sharded serving tier: rendezvous routing
 //! across shards, exact per-shard ledger merges, queue-depth admission
-//! control under saturating traffic, and cluster-wide fault injection.
+//! control under saturating traffic, cluster-wide fault injection, and
+//! the elastic grow → drain → shrink cycle (manual and autoscaled).
 
 use ftblas::config::Profile;
-use ftblas::coordinator::cluster::{Cluster, ClusterConfig, Error};
+use ftblas::coordinator::autoscale::ScalingConfig;
+use ftblas::coordinator::cluster::{Cluster, ClusterConfig, Error,
+                                   RetryPolicy};
 use ftblas::coordinator::metrics::MetricsSnapshot;
 use ftblas::coordinator::request::{Backend, BlasRequest};
 use ftblas::coordinator::router::Router;
@@ -23,6 +26,7 @@ fn native_cluster(profile: Profile, policy: FtPolicy, shards: usize,
         workers_per_shard,
         injection,
         expected_requests: expected,
+        autoscale: None,
     })
 }
 
@@ -197,6 +201,189 @@ fn injection_merges_ft_counters_across_shards() {
         .map(|k| k.errors_detected)
         .sum();
     assert_eq!(ft_total, merged.errors_detected);
+}
+
+/// The elastic cycle, driven deterministically (no controller thread):
+/// a bursty trace is pushed through grow → drain → shrink, and the
+/// merged ledger accounts for every request exactly — including the
+/// completions of the shard that was drained mid-run. Zero responses
+/// are lost across the scale events.
+#[test]
+fn elastic_grow_drain_shrink_loses_no_responses() {
+    let profile = Profile::default().with_shard_bounds(1, 3);
+    let cluster = native_cluster(profile, FtPolicy::Hybrid, 1, 2, None, 0);
+    let handle = cluster.handle();
+    let cfg = TraceConfig {
+        requests: 90,
+        vec_len: 2048,
+        mat_dim: 48,
+        burst: Some(Burst::default()),
+        ..Default::default()
+    };
+    let entries = trace::generate(&cfg);
+    let mut rxs = Vec::new();
+    // phase 1: one shard takes the first third of the trace
+    for e in &entries[..30] {
+        rxs.push(handle.submit(e.request.clone()).expect("unbounded"));
+    }
+    // grow twice mid-stream: new shards join with fresh salts and the
+    // survivors keep their queues
+    assert_eq!(handle.scale_up().unwrap(), 2);
+    assert_eq!(handle.scale_up().unwrap(), 3);
+    assert_eq!(handle.shard_count(), 3);
+    for e in &entries[30..60] {
+        rxs.push(handle.submit(e.request.clone()).expect("unbounded"));
+    }
+    // shrink immediately, with the last slice's requests still queued:
+    // scale_down must unroute the victim, drain it to completion, and
+    // retire its ledger — no queued response may be dropped
+    assert_eq!(handle.scale_down().unwrap(), 2);
+    assert_eq!(handle.shard_count(), 2);
+    for e in &entries[60..] {
+        rxs.push(handle.submit(e.request.clone()).expect("unbounded"));
+    }
+    for rx in rxs {
+        rx.recv().expect("response channel must survive scaling")
+            .expect("request must execute cleanly");
+    }
+    let live = cluster.shard_metrics();
+    let retired = cluster.retired_metrics();
+    assert_eq!(live.len(), 2);
+    assert_eq!(retired.len(), 1, "one shard was drained and retired");
+    let merged = cluster.shutdown();
+    // exact accounting across the scale events: live + retired ledgers
+    // cover all 90 requests, with no sheds, failures, or losses
+    assert_eq!(merged.completed, 90);
+    assert_eq!(merged.failed, 0);
+    assert_eq!(merged.shed, 0);
+    let live_total: u64 = live.iter().map(|s| s.completed).sum();
+    assert_eq!(live_total + retired[0].completed, 90,
+               "every completion is attributed to a live or retired ledger");
+    assert_eq!(merged.scale_ups, 2);
+    assert_eq!(merged.scale_downs, 1);
+    assert!(merged.keys_migrated > 0, "scale events must migrate keys");
+    // the merged overall summary counts every sample exactly once
+    assert_eq!(merged.overall_e2e().n as u64, 90);
+    // plans resolve once per shape in the shared cache, sized across
+    // the whole run regardless of topology changes
+    assert_eq!(merged.plan_cache_hits + merged.plan_cache_misses, 90);
+}
+
+/// The autoscaling controller closes the loop end to end: a slow,
+/// saturating workload on a 1-worker floor shard must trigger a
+/// scale-up; draining the backlog and going calm must trigger the
+/// scale-down. Bounded polling keeps the test robust on slow CI
+/// machines.
+#[test]
+fn autoscaler_grows_under_pressure_and_shrinks_when_calm() {
+    let n = 160;
+    // a small batch window keeps the backlog visibly deep (a drain
+    // removes at most 4 jobs from the pending count), and the 64-deep
+    // watermark sets grow_depth at 32 — well under the 48-job pile
+    let profile = Profile::default()
+        .with_shard_bounds(1, 2)
+        .with_max_batch(4)
+        .with_admission_depth(64);
+    let scfg = ScalingConfig::from_profile(&profile)
+        .with_interval(std::time::Duration::from_millis(5));
+    assert!(scfg.elastic());
+    let router = Router::native_only(profile, Backend::NativeTuned);
+    let cluster = Cluster::start(router, FtPolicy::None, ClusterConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        injection: None,
+        expected_requests: 0,
+        autoscale: Some(scfg),
+    });
+    let handle = cluster.handle();
+    let mut rng = Rng::new(0xE1A);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    // a pile of ~ms GEMMs on one worker: the queue grows well past
+    // grow_depth (half the 64-deep watermark) within a few intervals,
+    // and the queue-wait pushes late completions far over the 50ms L3
+    // SLO target — two independent grow signals
+    let mut rxs = Vec::new();
+    let retry = RetryPolicy::default();
+    for _ in 0..48 {
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        };
+        let (admitted, _retries) = handle.submit_with_retry(req, &retry);
+        if let Ok(rx) = admitted {
+            rxs.push(rx);
+        }
+    }
+    // the controller must react while the backlog drains
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(20);
+    while handle.scale_events().0 == 0 {
+        assert!(std::time::Instant::now() < deadline,
+                "queue pressure never triggered a scale-up");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    // calm: the controller hands capacity back down to the floor
+    while handle.shard_count() > 1 {
+        assert!(std::time::Instant::now() < deadline,
+                "calm tier never scaled back down");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let merged = cluster.shutdown();
+    assert!(merged.scale_ups >= 1);
+    assert!(merged.scale_downs >= 1);
+    assert_eq!(merged.failed, 0);
+    assert_eq!(merged.completed + merged.shed, 48);
+}
+
+/// `submit_with_retry` turns transient `Overloaded` sheds into
+/// successes: on a depth-1, 1-worker shard a storm of identical
+/// requests mostly sheds without retries, but bounded backoff rides
+/// out the contention. Every admitted request completes correctly and
+/// the retry count is reported to the caller.
+#[test]
+fn retry_backoff_rides_out_transient_sheds() {
+    let n = 96;
+    let profile = Profile::default().with_admission_depth(1);
+    let cluster = native_cluster(profile, FtPolicy::None, 1, 1, None, 0);
+    let handle = cluster.handle();
+    let mut rng = Rng::new(0x5AFE);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let retry = RetryPolicy {
+        attempts: 40,
+        base: std::time::Duration::from_micros(200),
+        cap: std::time::Duration::from_millis(5),
+        jitter_seed: 7,
+    };
+    let mut rxs = Vec::new();
+    let mut total_retries = 0u32;
+    for _ in 0..8 {
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        };
+        let (admitted, retries) = handle.submit_with_retry(req, &retry);
+        total_retries += retries;
+        rxs.push(admitted.expect("40 bounded retries must outlast a \
+                                  depth-1 queue of ~ms kernels"));
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let merged = cluster.shutdown();
+    assert_eq!(merged.completed, 8, "retries admit every request");
+    assert_eq!(merged.shed as u32, total_retries,
+               "every shed was ridden out by exactly one retry");
 }
 
 /// The bursty trace overlay drives shedding through the real pipeline:

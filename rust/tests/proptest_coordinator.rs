@@ -11,7 +11,7 @@ use std::collections::{HashMap, HashSet};
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
 use ftblas::coordinator::batcher::Batcher;
-use ftblas::coordinator::cluster::{route, route_key};
+use ftblas::coordinator::cluster::{route, route_key, route_salted, salt_for};
 use ftblas::coordinator::plan::PlanCache;
 use ftblas::coordinator::registry::KernelRegistry;
 use ftblas::coordinator::request::{Backend, BlasRequest, Level};
@@ -358,6 +358,92 @@ fn shard_routing_covers_all_shards() {
         assert_eq!(used.len(), shards,
                    "{shards} shards: kernel ids only reach {:?}", used);
     }
+}
+
+/// The elastic-migration invariant, grow side: appending a shard with
+/// any fresh-generation salt moves **only the intended slice** of the
+/// kernel-id key space — a key changes owner iff its new owner is the
+/// new shard (survivors' scores are untouched by construction, so
+/// nothing can reshuffle between them).
+#[test]
+fn regrown_shard_migrates_only_its_own_slice() {
+    check("cluster-resalt-grow", 40, |g| {
+        let ids = KernelRegistry::global().entries().len() as u64;
+        let shards = 1 + g.rng.below(5);
+        // a topology with arbitrary spawn generations per slot — the
+        // state an elastic cluster reaches after any grow/shrink history
+        let salts: Vec<u64> = (0..shards)
+            .map(|s| salt_for(s, g.rng.below(6) as u64))
+            .collect();
+        let grown = {
+            let mut v = salts.clone();
+            v.push(salt_for(shards, 1 + g.rng.below(8) as u64));
+            v
+        };
+        let depths_old = vec![0usize; shards];
+        let depths_new = vec![0usize; shards + 1];
+        let mut migrated = 0u64;
+        for key in 0..ids {
+            let before = route_salted(key, &salts, &depths_old);
+            let after = route_salted(key, &grown, &depths_new);
+            if before != after {
+                ensure(after == shards,
+                       format!("key {key} moved {before}→{after}, not to \
+                                the new shard"))?;
+                migrated += 1;
+            }
+        }
+        ensure(migrated < ids,
+               "growth must never migrate the whole key space")
+    });
+}
+
+/// The elastic-migration invariant, shrink side: removing the top
+/// shard re-homes exactly the keys it owned; every other key keeps its
+/// shard (this is why the scale-down victim is always the newest slot).
+#[test]
+fn draining_the_top_shard_moves_only_its_keys() {
+    check("cluster-resalt-shrink", 40, |g| {
+        let ids = KernelRegistry::global().entries().len() as u64;
+        let shards = 2 + g.rng.below(5);
+        let salts: Vec<u64> = (0..shards)
+            .map(|s| salt_for(s, g.rng.below(6) as u64))
+            .collect();
+        let shrunk = salts[..shards - 1].to_vec();
+        let depths_old = vec![0usize; shards];
+        let depths_new = vec![0usize; shards - 1];
+        for key in 0..ids {
+            let before = route_salted(key, &salts, &depths_old);
+            let after = route_salted(key, &shrunk, &depths_new);
+            if before == shards - 1 {
+                ensure(after < shards - 1, "victim keys must re-home")?;
+            } else {
+                ensure(after == before,
+                       format!("key {key} flapped {before}→{after} though \
+                                its shard survived"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Re-salting is what makes a *regrown* slot claim a fresh slice: the
+/// same slot at different generations owns visibly different key sets
+/// (checked over the kernel-id space the cluster actually routes).
+#[test]
+fn fresh_generation_salts_change_the_slice() {
+    let ids = KernelRegistry::global().entries().len() as u64;
+    let base = salt_for(0, 0);
+    let slice = |gen: u64| -> Vec<u64> {
+        (0..ids)
+            .filter(|&k| route_salted(k, &[base, salt_for(1, gen)], &[0, 0])
+                         == 1)
+            .collect()
+    };
+    let gen0 = slice(0);
+    assert!(!gen0.is_empty(), "slot 1 must own some kernel ids");
+    assert!((1..4).any(|g| slice(g) != gen0),
+            "regrowing slot 1 must eventually claim a different slice");
 }
 
 /// Unplanned (direct) keys are shape-sensitive but still deterministic.
