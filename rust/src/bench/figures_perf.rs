@@ -72,6 +72,12 @@ pub fn smoke(ctx: &mut BenchCtx) -> Result<()> {
         anyhow::bail!("bench smoke: registry produced no dgemm rows");
     }
     print_rows(&rows);
+    if let Some(path) = &ctx.out {
+        let doc = harness::rows_json("smoke", ctx.profile.name, ctx.quick,
+                                     &rows);
+        harness::write_json(path, &doc)?;
+        println!("[bench] smoke rows written to {}", path.display());
+    }
     Ok(())
 }
 

@@ -9,6 +9,7 @@ use crate::coordinator::pjrt_backend::PjrtBackend;
 use crate::coordinator::registry::{ExecCtx, KernelRegistry};
 use crate::coordinator::request::BlasRequest;
 use crate::ft::policy::FtPolicy;
+use crate::util::json::Json;
 use crate::util::stats::{self, Summary};
 
 /// Context for a bench run.
@@ -23,13 +24,18 @@ pub struct BenchCtx {
     pub quick: bool,
     /// Measurement repetitions (the paper averages 20).
     pub reps: usize,
+    /// When set, experiments that produce a machine-readable artifact
+    /// (currently the CI `smoke` row set) also write it here as JSON
+    /// (the CLI's `--out`).
+    pub out: Option<std::path::PathBuf>,
 }
 
 impl BenchCtx {
     /// Native-only context.
     pub fn native(profile: Profile, quick: bool) -> BenchCtx {
         let reps = if quick { 7 } else { 20 }; // paper: average of 20
-        BenchCtx { profile, executor: None, pjrt: None, quick, reps }
+        BenchCtx { profile, executor: None, pjrt: None, quick, reps,
+                   out: None }
     }
 
     /// Context with the PJRT backend if artifacts exist.
@@ -190,7 +196,7 @@ pub fn print_ledger(snap: &MetricsSnapshot) {
              "burn", "det", "corr");
     let mut kernels: Vec<_> = snap.kernels.iter().collect();
     kernels.sort_by(|a, b| a.0.cmp(b.0));
-    for (name, k) in kernels {
+    for (name, k) in &kernels {
         println!("{:<26} {:>6} {:>8.2}ms {:>8.2}ms {:>8.2}ms {:>7.1}ms \
                   {:>5} {:>5} {:>5}",
                  name, k.completed, k.exec.mean * 1e3, k.e2e.p99 * 1e3,
@@ -219,9 +225,60 @@ pub fn print_ledger(snap: &MetricsSnapshot) {
              snap.starvation_reserves);
     println!("scaling: {} up / {} down, {} kernel-id keys migrated",
              snap.scale_ups, snap.scale_downs, snap.keys_migrated);
-    println!("errors: injected={} detected={} corrected={}",
+    // FT outcomes: per kernel and overall, headed by the injection
+    // mode (campaign = rate-based cluster-wide schedule, per-call =
+    // a planned per-run injector)
+    let mode = match snap.injection_mode {
+        "" => "no injection",
+        m => m,
+    };
+    println!("ft outcomes [{mode}]:");
+    let struck: Vec<_> = kernels
+        .iter()
+        .filter(|(_, k)| k.errors_injected > 0 || k.errors_detected > 0)
+        .collect();
+    if struck.is_empty() {
+        println!("  (no faults injected)");
+    }
+    for (name, k) in struck {
+        println!("  {:<24} injected={:<5} detected={:<5} corrected={:<5} \
+                  escaped={}",
+                 name, k.errors_injected, k.errors_detected,
+                 k.errors_corrected, k.errors_escaped);
+    }
+    println!("  overall: injected={} detected={} corrected={} escaped={}",
              snap.errors_injected, snap.errors_detected,
-             snap.errors_corrected);
+             snap.errors_corrected, snap.errors_escaped);
+}
+
+/// Write a JSON document to `path`, creating parent directories —
+/// the CI artifact writer behind `--out`.
+pub fn write_json(path: &std::path::Path, doc: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.render() + "\n")?;
+    Ok(())
+}
+
+/// The bench-smoke rows as a stable JSON artifact
+/// (`ftblas.bench-smoke.v1`): one row per measured kernel variant, in
+/// print order, so the perf trajectory is machine-readable across PRs.
+pub fn rows_json(exp: &str, profile: &str, quick: bool, rows: &[Row]) -> Json {
+    Json::obj()
+        .field("schema", Json::Str("ftblas.bench-smoke.v1".into()))
+        .field("exp", Json::Str(exp.into()))
+        .field("profile", Json::Str(profile.into()))
+        .field("quick", Json::Bool(quick))
+        .field("rows", Json::Arr(rows.iter().map(|r| {
+            Json::obj()
+                .field("label", Json::Str(r.label.clone()))
+                .field("gflops", Json::Num(r.gflops))
+                .field("seconds", Json::Num(r.seconds))
+                .field("note", Json::Str(r.note.clone()))
+        }).collect()))
 }
 
 /// Percent overhead of the FT run relative to the baseline, in the

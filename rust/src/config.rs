@@ -7,6 +7,7 @@
 
 use crate::blas::level3::GemmParams;
 use crate::coordinator::request::Level;
+use crate::ft::injector::CampaignConfig;
 
 /// Per-kernel end-to-end latency targets (seconds). Defaults derive
 /// from the BLAS level — memory-bound L1 calls should turn around far
@@ -119,6 +120,12 @@ pub struct Profile {
     pub admission_depth: Option<usize>,
     /// Per-kernel latency SLO targets for the serving ledger.
     pub slo: SloTable,
+    /// Cluster-wide fault-injection campaign knobs. When set, a serving
+    /// cluster built from this profile runs a rate-based, scheme-aware
+    /// [`crate::ft::injector::InjectionCampaign`] shared by every shard
+    /// (including shards the autoscaler spawns mid-run). `None` = no
+    /// campaign; the per-call `--inject` plans are unaffected.
+    pub campaign: Option<CampaignConfig>,
     /// Artifact directory relative to the repo root.
     pub artifact_dir: &'static str,
 }
@@ -143,6 +150,7 @@ impl Profile {
             starvation_limit: 4,
             admission_depth: None,
             slo: SloTable::default(),
+            campaign: None,
             artifact_dir: "artifacts",
         }
     }
@@ -168,6 +176,7 @@ impl Profile {
             starvation_limit: 4,
             admission_depth: None,
             slo: SloTable::default(),
+            campaign: None,
             artifact_dir: "artifacts/cascade_sim",
         }
     }
@@ -231,6 +240,15 @@ impl Profile {
     /// Same profile with a different SLO table.
     pub fn with_slo(mut self, slo: SloTable) -> Profile {
         self.slo = slo;
+        self
+    }
+
+    /// Same profile with cluster-wide injection-campaign knobs (the
+    /// stride is normalized to at least 1, matching how the schedule
+    /// reads it, so configs compare predictably).
+    pub fn with_campaign(mut self, mut campaign: CampaignConfig) -> Profile {
+        campaign.stride = campaign.stride.max(1);
+        self.campaign = Some(campaign);
         self
     }
 
@@ -336,6 +354,18 @@ mod tests {
         // re-pinning the same kernel: the latest override wins
         let slo = slo.with_kernel("dgemm/abft-fused", 4e-3);
         assert_eq!(slo.target("dgemm/abft-fused", Level::L3), 4e-3);
+    }
+
+    #[test]
+    fn campaign_knobs_normalize_and_default_off() {
+        assert!(Profile::skylake_sim().campaign.is_none());
+        assert!(Profile::cascade_sim().campaign.is_none());
+        let p = Profile::skylake_sim().with_campaign(CampaignConfig {
+            stride: 0,
+            ..Default::default()
+        });
+        assert_eq!(p.campaign.as_ref().unwrap().stride, 1,
+                   "stride normalizes to the schedule's floor");
     }
 
     #[test]

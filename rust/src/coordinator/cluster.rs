@@ -51,6 +51,25 @@
 //! [`ScalingController`] sampling loop that [`Cluster::start`] spawns
 //! when the config carries a [`ScalingConfig`]
 //! ([`crate::coordinator::autoscale`] documents the decision rules).
+//!
+//! ## Injection campaigns
+//!
+//! When the config carries a [`CampaignConfig`], the cluster starts a
+//! cluster-wide [`InjectionCampaign`] and threads it through the shared
+//! `Arc<Router>`. Because the campaign's strike schedule is a pure
+//! function of `(seed, KernelId, occurrence)` and its occurrence
+//! counters are cluster-wide, the campaign is **elasticity-proof**:
+//!
+//! - a shard spawned by `scale_up` mid-run inherits its slice of the
+//!   campaign — the strikes of whatever kernels rendezvous routing
+//!   assigns it — the moment its workers start, with no hand-off;
+//! - a kernel migrated to a fresh-salted shard *continues* its
+//!   occurrence sequence instead of replaying it (no double
+//!   injection);
+//! - `scale_down` retires the victim's strike outcomes (injected /
+//!   detected / corrected / escaped) exactly, with its ledger.
+//!
+//! `ftblas soak` drives this end to end and gates CI on the outcome.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -67,7 +86,7 @@ use crate::coordinator::registry::KernelRegistry;
 use crate::coordinator::request::{BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{Admitted, Server, ServerHandle};
-use crate::ft::injector::InjectorConfig;
+use crate::ft::injector::{CampaignConfig, InjectionCampaign, InjectorConfig};
 use crate::ft::policy::FtPolicy;
 use crate::util::rng::Rng;
 
@@ -83,12 +102,21 @@ pub struct ClusterConfig {
     pub shards: usize,
     /// Native worker threads per shard.
     pub workers_per_shard: usize,
-    /// Fault-injection config, split across the starting shards
-    /// (independent per-shard plans with derived seeds; shards grown
-    /// later join uninjected — their traffic was not in the plan).
+    /// **Per-call** fault-injection config, split across the starting
+    /// shards (independent per-shard plans with derived seeds; shards
+    /// grown later join uninjected — their traffic was not in the
+    /// plan). For rate-based, topology-proof injection use `campaign`
+    /// instead; a live campaign takes precedence at the workers.
     pub injection: Option<InjectorConfig>,
     /// Expected request volume (sizes each shard's injection plan).
     pub expected_requests: usize,
+    /// Cluster-wide **injection campaign**: a seeded, rate-based,
+    /// scheme-aware strike schedule owned by the cluster and shared by
+    /// every shard through the `Arc<Router>` — shards the autoscaler
+    /// spawns mid-run deterministically inherit their slice of it (the
+    /// strikes of the kernels routing assigns them), and a drained
+    /// shard's strike outcomes are retired exactly with its ledger.
+    pub campaign: Option<CampaignConfig>,
     /// When set, [`Cluster::start`] spawns a [`ScalingController`]
     /// sampling thread that grows/shrinks the tier automatically.
     /// `None` = fixed-size (manual `scale_up`/`scale_down` still work,
@@ -98,14 +126,15 @@ pub struct ClusterConfig {
 
 impl ClusterConfig {
     /// Sizing from a profile: starting shards, workers per shard, no
-    /// injection, and an autoscaler iff the profile's shard bounds are
-    /// elastic.
+    /// per-call injection, the profile's campaign knobs, and an
+    /// autoscaler iff the profile's shard bounds are elastic.
     pub fn from_profile(p: &Profile) -> ClusterConfig {
         ClusterConfig {
             shards: p.shards,
             workers_per_shard: p.workers,
             injection: None,
             expected_requests: 0,
+            campaign: p.campaign.clone(),
             autoscale: p.elastic().then(|| ScalingConfig::from_profile(p)),
         }
     }
@@ -673,6 +702,13 @@ impl ClusterHandle {
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.merged_snapshot()
     }
+
+    /// The cluster's live injection campaign, if one is running (the
+    /// soak driver reads its armed/suppressed counters to cross-check
+    /// the ledger).
+    pub fn campaign(&self) -> Option<&InjectionCampaign> {
+        self.shared.router.campaign()
+    }
 }
 
 /// The cluster: an elastic set of [`Server`] engines over one shared
@@ -698,6 +734,14 @@ impl Cluster {
     pub fn start(router: Router, policy: FtPolicy, mut cfg: ClusterConfig)
                  -> Cluster {
         let n = cfg.shards.max(1);
+        // the cluster owns the campaign: started here, carried by the
+        // shared router so every shard — starting or spawned mid-run —
+        // arms strikes from the same clock, rate budget, and
+        // cluster-wide occurrence counters
+        let router = match cfg.campaign.take() {
+            Some(campaign) => router.with_campaign(campaign),
+            None => router,
+        };
         let router = Arc::new(router);
         let profile = router.profile.clone();
         // an explicit starting size outside the profile's bounds widens
@@ -801,6 +845,12 @@ impl Cluster {
     /// counters (consistent under concurrent scaling).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.merged_snapshot()
+    }
+
+    /// The cluster's live injection campaign, if one is running (see
+    /// [`ClusterHandle::campaign`]).
+    pub fn campaign(&self) -> Option<&InjectionCampaign> {
+        self.shared.router.campaign()
     }
 
     /// Stop the autoscaler, stop accepting work, drain every live
@@ -979,6 +1029,7 @@ mod tests {
             workers_per_shard: 2,
             injection: None,
             expected_requests: 0,
+            campaign: None,
             autoscale: None,
         };
         let cluster = Cluster::start(router, FtPolicy::None, cfg);
@@ -1019,6 +1070,7 @@ mod tests {
             workers_per_shard: 1,
             injection: None,
             expected_requests: 0,
+            campaign: None,
             autoscale: None,
         };
         let cluster = Cluster::start(router, FtPolicy::None, cfg);

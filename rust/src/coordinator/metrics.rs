@@ -19,7 +19,20 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// JSON view of a latency [`Summary`] (seconds; a shared shape so the
+/// ledger artifact's schema stays uniform across fields).
+fn summary_json(s: &Summary) -> Json {
+    Json::obj()
+        .field("n", Json::Int(s.n as u64))
+        .field("mean_s", Json::Num(s.mean))
+        .field("min_s", Json::Num(s.min))
+        .field("max_s", Json::Num(s.max))
+        .field("p50_s", Json::Num(s.p50))
+        .field("p99_s", Json::Num(s.p99))
+}
 
 /// Shared, thread-safe metrics sink.
 #[derive(Default)]
@@ -35,6 +48,9 @@ struct KernelLedger {
     errors_injected: u64,
     errors_detected: u64,
     errors_corrected: u64,
+    /// Injected faults the scheme failed to detect (computed per
+    /// completion as `injected − detected`, clamped at zero).
+    errors_escaped: u64,
     /// SLO target (seconds, end-to-end; 0 = untracked, or mixed —
     /// completions recorded under differing targets).
     slo_target: f64,
@@ -56,6 +72,7 @@ struct Inner {
     errors_injected: u64,
     errors_detected: u64,
     errors_corrected: u64,
+    errors_escaped: u64,
     deferrals: u64,
     starvation_reserves: u64,
     thread_budget: u64,
@@ -80,6 +97,10 @@ pub struct KernelStats {
     pub errors_detected: u64,
     /// Detected faults the scheme corrected in place.
     pub errors_corrected: u64,
+    /// Injected faults the scheme failed to detect — a nonzero value
+    /// here means a silently wrong result left this kernel, which is
+    /// exactly what the soak gate refuses to ship.
+    pub errors_escaped: u64,
     /// End-to-end latency SLO target (seconds; 0 = untracked, or mixed
     /// — completions under differing targets share this ledger entry).
     pub slo_target: f64,
@@ -124,6 +145,15 @@ pub struct MetricsSnapshot {
     pub errors_detected: u64,
     /// Detected faults corrected in place.
     pub errors_corrected: u64,
+    /// Injected faults no scheme detected (summed per completion as
+    /// `injected − detected`, clamped at zero). The soak gate requires
+    /// this to be exactly zero.
+    pub errors_escaped: u64,
+    /// How faults were armed for this ledger's completions:
+    /// `"campaign"` (a rate-based [`crate::ft::injector::InjectionCampaign`]),
+    /// `"per-call"` (a planned [`crate::ft::injector::Injector`]), or
+    /// `""` (no injection). Merges keep the first non-empty label.
+    pub injection_mode: &'static str,
     /// Admission-time plan-cache counters (filled by the server, or by
     /// the cluster for its shared cache).
     pub plan_cache_hits: u64,
@@ -181,17 +211,24 @@ impl Metrics {
                              routine: &'static str, exec_s: f64, e2e_s: f64,
                              queue_s: f64, detected: u64, corrected: u64,
                              injected: u64, slo_target: f64) {
+        // an escape is judged per completion: a fault was armed for
+        // this execution and the scheme reported fewer detections than
+        // injections — the silent-corruption case the campaign gate
+        // exists to catch
+        let escaped = injected.saturating_sub(detected);
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
         m.errors_detected += detected;
         m.errors_corrected += corrected;
         m.errors_injected += injected;
+        m.errors_escaped += escaped;
         let k = m.kernels.entry(kernel).or_default();
         k.routine = routine;
         k.completed += 1;
         k.errors_detected += detected;
         k.errors_corrected += corrected;
         k.errors_injected += injected;
+        k.errors_escaped += escaped;
         // burns are judged per completion against that completion's
         // target; the ledger's *displayed* target stays stable only
         // while every completion shares one target and degrades to 0
@@ -275,6 +312,7 @@ impl Metrics {
             errors_injected: m.errors_injected,
             errors_detected: m.errors_detected,
             errors_corrected: m.errors_corrected,
+            errors_escaped: m.errors_escaped,
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             deferrals: m.deferrals,
@@ -291,6 +329,7 @@ impl Metrics {
                 errors_injected: k.errors_injected,
                 errors_detected: k.errors_detected,
                 errors_corrected: k.errors_corrected,
+                errors_escaped: k.errors_escaped,
                 slo_target: k.slo_target,
                 slo_burns: k.slo_burns,
                 exec: Summary::from_samples(&k.exec),
@@ -346,6 +385,68 @@ impl MetricsSnapshot {
         self.e2e_overall = Summary::from_samples(&e2e_all);
     }
 
+    /// Serialize the ledger as a stable JSON document
+    /// (`ftblas.ledger.v1`): counters, error outcomes, scheduling and
+    /// scaling state, the overall end-to-end summary, and the
+    /// per-kernel ledgers sorted by kernel name. This is the
+    /// machine-readable artifact CI uploads per run, so the schema is
+    /// append-only: new fields may be added, existing keys never change
+    /// meaning.
+    pub fn to_json(&self) -> Json {
+        let mut kernels: Vec<(&String, &KernelStats)> =
+            self.kernels.iter().collect();
+        kernels.sort_by(|a, b| a.0.cmp(b.0));
+        let kernel_rows = kernels
+            .into_iter()
+            .map(|(name, k)| {
+                Json::obj()
+                    .field("kernel", Json::Str(name.clone()))
+                    .field("routine", Json::Str(k.routine.clone()))
+                    .field("completed", Json::Int(k.completed))
+                    .field("errors", Json::obj()
+                        .field("injected", Json::Int(k.errors_injected))
+                        .field("detected", Json::Int(k.errors_detected))
+                        .field("corrected", Json::Int(k.errors_corrected))
+                        .field("escaped", Json::Int(k.errors_escaped)))
+                    .field("slo", Json::obj()
+                        .field("target_s", Json::Num(k.slo_target))
+                        .field("burns", Json::Int(k.slo_burns)))
+                    .field("exec", summary_json(&k.exec))
+                    .field("e2e", summary_json(&k.e2e))
+                    .field("queue", summary_json(&k.queue))
+            })
+            .collect();
+        Json::obj()
+            .field("schema", Json::Str("ftblas.ledger.v1".into()))
+            .field("completed", Json::Int(self.completed))
+            .field("failed", Json::Int(self.failed))
+            .field("shed", Json::Int(self.shed))
+            .field("injection_mode", Json::Str(self.injection_mode.into()))
+            .field("errors", Json::obj()
+                .field("injected", Json::Int(self.errors_injected))
+                .field("detected", Json::Int(self.errors_detected))
+                .field("corrected", Json::Int(self.errors_corrected))
+                .field("escaped", Json::Int(self.errors_escaped)))
+            .field("plan_cache", Json::obj()
+                .field("hits", Json::Int(self.plan_cache_hits))
+                .field("misses", Json::Int(self.plan_cache_misses)))
+            .field("scheduling", Json::obj()
+                .field("deferrals", Json::Int(self.deferrals))
+                .field("starvation_reserves",
+                       Json::Int(self.starvation_reserves))
+                .field("thread_budget", Json::Int(self.thread_budget))
+                .field("max_in_flight_threads",
+                       Json::Int(self.max_in_flight_threads))
+                .field("max_queue_depth", Json::Int(self.max_queue_depth)))
+            .field("scaling", Json::obj()
+                .field("ups", Json::Int(self.scale_ups))
+                .field("downs", Json::Int(self.scale_downs))
+                .field("keys_migrated", Json::Int(self.keys_migrated)))
+            .field("slo_burns", Json::Int(self.slo_burns()))
+            .field("e2e_overall", summary_json(&self.e2e_overall))
+            .field("kernels", Json::Arr(kernel_rows))
+    }
+
     /// Aggregate per-shard snapshots **exactly**: counters sum, kernel
     /// ledgers concatenate their retained samples, and every latency
     /// summary (per-kernel, per-routine, overall) is recomputed from
@@ -364,6 +465,10 @@ impl MetricsSnapshot {
             out.errors_injected += p.errors_injected;
             out.errors_detected += p.errors_detected;
             out.errors_corrected += p.errors_corrected;
+            out.errors_escaped += p.errors_escaped;
+            if out.injection_mode.is_empty() {
+                out.injection_mode = p.injection_mode;
+            }
             out.plan_cache_hits += p.plan_cache_hits;
             out.plan_cache_misses += p.plan_cache_misses;
             out.deferrals += p.deferrals;
@@ -383,6 +488,7 @@ impl MetricsSnapshot {
                 dst.errors_injected += k.errors_injected;
                 dst.errors_detected += k.errors_detected;
                 dst.errors_corrected += k.errors_corrected;
+                dst.errors_escaped += k.errors_escaped;
                 // same mixed-target rule as recording: shards that
                 // disagree on a kernel's target merge to 0 (untracked)
                 if first_part {
@@ -485,6 +591,51 @@ mod tests {
         assert_eq!(shed, s.shed);
         assert_eq!(burns, s.slo_burns());
         assert_eq!((completed, shed, burns), (2, 2, 1));
+    }
+
+    /// Escapes are judged per completion (`injected − detected`,
+    /// clamped), accumulate per kernel and overall, and merge by sum;
+    /// the injection-mode label survives a merge with unlabeled parts.
+    #[test]
+    fn escapes_accumulate_and_merge() {
+        let m = Metrics::new();
+        // detected: no escape
+        m.record_completion("ddot/dmr", "ddot", 0.1, 0.1, 0.0, 1, 1, 1, 0.0);
+        // injected but undetected: one escape
+        m.record_completion("ddot/dmr", "ddot", 0.1, 0.1, 0.0, 0, 0, 1, 0.0);
+        // spurious extra detection never counts negative
+        m.record_completion("ddot/dmr", "ddot", 0.1, 0.1, 0.0, 2, 2, 1, 0.0);
+        let mut a = m.snapshot();
+        assert_eq!(a.errors_escaped, 1);
+        assert_eq!(a.kernels["ddot/dmr"].errors_escaped, 1);
+        a.injection_mode = "campaign";
+        let b = Metrics::new().snapshot();
+        let merged = MetricsSnapshot::merge(&[b, a]);
+        assert_eq!(merged.errors_escaped, 1);
+        assert_eq!(merged.kernels["ddot/dmr"].errors_escaped, 1);
+        assert_eq!(merged.injection_mode, "campaign",
+                   "the label survives unlabeled parts");
+    }
+
+    /// The JSON artifact is stable: fixed schema tag, exact integer
+    /// counters, kernels sorted by name.
+    #[test]
+    fn ledger_json_is_stable_and_sorted() {
+        let m = Metrics::new();
+        m.record_completion("dscal/tuned", "dscal", 0.2, 0.2, 0.0, 0, 0, 0,
+                            0.0);
+        m.record_completion("ddot/dmr", "ddot", 0.1, 0.1, 0.0, 1, 1, 1, 0.0);
+        let mut snap = m.snapshot();
+        snap.injection_mode = "per-call";
+        let text = snap.to_json().render();
+        assert!(text.starts_with(r#"{"schema":"ftblas.ledger.v1""#));
+        assert!(text.contains(r#""injection_mode":"per-call""#));
+        assert!(text.contains(r#""injected":1"#));
+        let ddot = text.find(r#""kernel":"ddot/dmr""#).unwrap();
+        let dscal = text.find(r#""kernel":"dscal/tuned""#).unwrap();
+        assert!(ddot < dscal, "kernels must serialize sorted by name");
+        // rendering is deterministic
+        assert_eq!(text, snap.to_json().render());
     }
 
     /// The cluster-level scale counters ride through merges by

@@ -12,6 +12,8 @@
 //! a policy, or a threaded variant means registering a descriptor — not
 //! threading a new arm through per-routine match statements.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::blas::Impl;
@@ -22,7 +24,7 @@ use crate::coordinator::registry::ExecCtx;
 use crate::coordinator::request::{
     Backend, BlasRequest, BlasResponse,
 };
-use crate::ft::injector::Fault;
+use crate::ft::injector::{CampaignConfig, Fault, InjectionCampaign};
 use crate::ft::policy::FtPolicy;
 
 /// The router. `pjrt` is optional so the native path works without
@@ -34,17 +36,37 @@ pub struct Router {
     pub pjrt: Option<PjrtBackend>,
     /// Preferred backend for requests both sides could serve.
     pub prefer: Backend,
+    /// The live cluster-wide fault-injection campaign, when one is
+    /// running. It lives here — on the one object every shard already
+    /// shares as `Arc<Router>` — so a shard spawned by the autoscaler
+    /// mid-run inherits the campaign (and its slice of the schedule)
+    /// with no extra hand-off: the workers simply ask the router.
+    pub campaign: Option<Arc<InjectionCampaign>>,
 }
 
 impl Router {
     /// A router with no PJRT backend (everything resolves native).
     pub fn native_only(profile: Profile, prefer: Backend) -> Router {
-        Router { profile, pjrt: None, prefer }
+        Router { profile, pjrt: None, prefer, campaign: None }
     }
 
     /// A router that may resolve requests to the PJRT artifact path.
     pub fn with_pjrt(profile: Profile, pjrt: PjrtBackend, prefer: Backend) -> Router {
-        Router { profile, pjrt: Some(pjrt), prefer }
+        Router { profile, pjrt: Some(pjrt), prefer, campaign: None }
+    }
+
+    /// Same router with a live injection campaign started from `cfg`
+    /// (the campaign clock starts here). Server workers arm campaign
+    /// strikes on every planned execution through the `campaign()`
+    /// accessor.
+    pub fn with_campaign(mut self, cfg: CampaignConfig) -> Router {
+        self.campaign = Some(Arc::new(InjectionCampaign::new(cfg)));
+        self
+    }
+
+    /// The live campaign, if one is running.
+    pub fn campaign(&self) -> Option<&InjectionCampaign> {
+        self.campaign.as_deref()
     }
 
     /// Where would this request actually run?

@@ -212,12 +212,23 @@ struct Shared {
 }
 
 impl Shared {
-    /// Snapshot with the plan-cache counters folded in.
+    /// Snapshot with the plan-cache counters folded in and the
+    /// injection mode labeled: `"campaign"` when the shared router
+    /// carries a live [`crate::ft::injector::InjectionCampaign`],
+    /// `"per-call"` when this shard armed a planned [`Injector`], empty
+    /// otherwise.
     fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         let (hits, misses) = self.plans.stats();
         snap.plan_cache_hits = hits;
         snap.plan_cache_misses = misses;
+        snap.injection_mode = if self.router.campaign().is_some() {
+            "campaign"
+        } else if self.injector.lock().unwrap().planned() > 0 {
+            "per-call"
+        } else {
+            ""
+        };
         snap
     }
 }
@@ -515,17 +526,30 @@ fn worker_loop(shared: Arc<Shared>) {
             let job = pending.item;
             let started = Instant::now();
             let queue_s = started.duration_since(job.enqueued).as_secs_f64();
-            let step = shared.steps.fetch_add(1, Ordering::SeqCst) as usize;
-            let fault = {
-                let mut inj = shared.injector.lock().unwrap();
-                inj.take(step).map(|mut f| {
-                    // clamp the planned position into this request's range
-                    let dim = job.req.dim();
-                    f.i %= dim.max(1);
-                    f.j %= dim.max(1);
-                    f.step = 1; // strike the second panel/chunk when stepped
-                    f
-                })
+            // campaign mode outranks the per-call plan: a live campaign
+            // (shared through the router by every shard, including
+            // shards spawned mid-run) arms scheme-aware, rate-gated
+            // strikes per planned execution; otherwise the shard's own
+            // planned injector fires on its call steps.
+            let fault = match router.campaign() {
+                Some(campaign) => job.plan.as_ref().and_then(|p| {
+                    campaign.arm(p.kernel_id, p.kernel.scheme,
+                                 job.req.dim().max(1))
+                }),
+                None => {
+                    let step =
+                        shared.steps.fetch_add(1, Ordering::SeqCst) as usize;
+                    let mut inj = shared.injector.lock().unwrap();
+                    inj.take(step).map(|mut f| {
+                        // clamp the planned position into this
+                        // request's range
+                        let dim = job.req.dim();
+                        f.i %= dim.max(1);
+                        f.j %= dim.max(1);
+                        f.step = 1; // strike the second panel/chunk
+                        f
+                    })
+                }
             };
             let injected = fault.is_some() as u64;
             // SLO targets key off the executed kernel's BLAS level
@@ -639,9 +663,88 @@ mod tests {
         assert_eq!(m.errors_detected, m.errors_injected,
                    "every injected fault must be detected");
         assert_eq!(m.errors_corrected, m.errors_detected);
+        assert_eq!(m.errors_escaped, 0);
+        assert_eq!(m.injection_mode, "per-call");
         // FT counters attributed to the kernel that actually ran
         let k = &m.kernels["dtrsv/dmr"];
         assert_eq!(k.errors_detected, m.errors_detected);
+    }
+
+    /// Campaign mode end to end on one engine: a router-carried
+    /// campaign (stride 1, unbounded rate) strikes every protected
+    /// execution, every strike is detected and corrected, results stay
+    /// correct, and the ledger labels the mode.
+    #[test]
+    fn campaign_strikes_are_detected_and_labeled() {
+        use crate::ft::injector::CampaignConfig;
+        let campaign = CampaignConfig {
+            stride: 1,
+            rate_per_min: f64::INFINITY,
+            ..Default::default()
+        };
+        let router = Router::native_only(Profile::default(),
+                                         Backend::NativeTuned)
+            .with_campaign(campaign);
+        let server = Server::start(router, FtPolicy::Hybrid, 3, None, 0);
+        let handle = server.handle();
+        let mut rng = Rng::new(0xCA);
+        let mut rxs = Vec::new();
+        let mut oracle = Vec::new();
+        for _ in 0..16 {
+            let x = rng.normal_vec(512);
+            let y = rng.normal_vec(512);
+            oracle.push(x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>());
+            rxs.push(handle.submit(BlasRequest::Ddot { x, y }));
+        }
+        for (rx, want) in rxs.into_iter().zip(oracle) {
+            let resp = rx.recv().unwrap().unwrap();
+            let got = resp.result.as_scalar().unwrap();
+            assert!((got - want).abs() <= 1e-8 * (1.0 + want.abs()),
+                    "struck ddot must still be corrected: {got} vs {want}");
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 16);
+        assert_eq!(m.errors_injected, 16,
+                   "stride 1 + unbounded rate strikes every execution");
+        assert_eq!(m.errors_detected, 16);
+        assert_eq!(m.errors_corrected, 16);
+        assert_eq!(m.errors_escaped, 0);
+        assert_eq!(m.injection_mode, "campaign");
+        assert_eq!(m.kernels["ddot/dmr"].errors_injected, 16);
+    }
+
+    /// A campaign targeting only the fused-ABFT paths leaves DMR
+    /// traffic unstruck — scheme-aware targeting at the worker.
+    #[test]
+    fn campaign_targeting_skips_out_of_scope_schemes() {
+        use crate::ft::injector::{CampaignConfig, CampaignTarget};
+        let campaign = CampaignConfig {
+            stride: 1,
+            rate_per_min: f64::INFINITY,
+            target: CampaignTarget::Fused,
+            ..Default::default()
+        };
+        let router = Router::native_only(Profile::default(),
+                                         Backend::NativeTuned)
+            .with_campaign(campaign);
+        let server = Server::start(router, FtPolicy::Hybrid, 2, None, 0);
+        let handle = server.handle();
+        let mut rng = Rng::new(0xD0);
+        let rxs: Vec<_> = (0..8)
+            .map(|_| handle.submit(BlasRequest::Ddot {
+                x: rng.normal_vec(256),
+                y: rng.normal_vec(256),
+            }))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.errors_injected, 0,
+                   "a fused-only campaign must not strike DMR kernels");
+        assert_eq!(m.injection_mode, "campaign",
+                   "the mode labels the campaign even when it never fired");
     }
 
     /// Deterministic scheduler check: with an MT group at the head of

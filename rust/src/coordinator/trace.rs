@@ -96,6 +96,19 @@ pub struct TraceConfig {
     pub burst: Option<Burst>,
 }
 
+impl TraceConfig {
+    /// Size the trace so a paced replay lasts roughly `secs` of
+    /// wall-clock at the configured base arrival rate — how the soak
+    /// driver turns a `--duration` into a request count. A burst
+    /// overlay compresses on-phase gaps, so a bursty replay finishes
+    /// somewhat *faster* than the nominal duration (the overlay
+    /// modulates rate upward, never below the base).
+    pub fn sized_for(mut self, secs: f64) -> TraceConfig {
+        self.requests = (secs.max(0.0) * self.rate).ceil().max(1.0) as usize;
+        self
+    }
+}
+
 impl Default for TraceConfig {
     fn default() -> Self {
         TraceConfig {
@@ -273,6 +286,16 @@ mod tests {
         for (a, b) in t.iter().zip(&plain) {
             assert_eq!(a.request.routine(), b.request.routine());
         }
+    }
+
+    #[test]
+    fn sized_for_matches_duration_times_rate() {
+        let cfg = TraceConfig { rate: 50.0, ..Default::default() }
+            .sized_for(4.0);
+        assert_eq!(cfg.requests, 200);
+        // degenerate durations still produce a non-empty trace
+        assert_eq!(TraceConfig::default().sized_for(0.0).requests, 1);
+        assert_eq!(TraceConfig::default().sized_for(-3.0).requests, 1);
     }
 
     #[test]

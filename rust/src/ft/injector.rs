@@ -6,8 +6,46 @@
 //! those injection plans deterministically from a seed so experiments are
 //! reproducible, and converts them to the operand format the AOT kernels
 //! expect ([flag, idx..., delta] f64 vectors).
+//!
+//! Two injection modes live here:
+//!
+//! - **Per-call plans** ([`Injector`]): a fixed count of faults spread
+//!   over one run's call stream — the shape the paper's §6 experiments
+//!   use, and what `ftblas run --inject` / `serve --inject` arm.
+//! - **Campaigns** ([`InjectionCampaign`]): a seeded, *rate-based*
+//!   cluster-wide schedule (target errors per minute) for sustained
+//!   soak runs — the "hundreds of errors injected per minute" regime of
+//!   paper §6 and FT-GEMM's sustained-injection argument. The schedule
+//!   is a pure function of `(campaign seed, KernelId, occurrence)`
+//!   ([`CampaignConfig::is_strike`]), so it is topology-independent:
+//!   however the serving tier shards, grows, or shrinks, each kernel's
+//!   executions see exactly the same strike sequence, and the
+//!   cluster-wide occurrence counters guarantee a migrated kernel
+//!   continues its sequence instead of replaying it (no
+//!   double-injection after a re-salt migration).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::registry::{KernelId, Scheme};
 use crate::util::rng::Rng;
+
+/// SplitMix64 finalizer — the stateless, position-addressable hash
+/// behind the campaign schedule (an RNG stream would have to be drawn
+/// in order; the schedule must answer "does occurrence n strike?" for
+/// any n directly).
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// 64-bit golden-ratio stride (decorrelates per-kernel hash lanes).
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// One planned fault.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -104,6 +142,261 @@ impl Injector {
     }
 }
 
+/// Which protection paths a campaign strikes. Campaigns are
+/// **scheme-aware**: a strike on a kernel whose scheme cannot detect it
+/// (`Scheme::None`) would escape by construction and say nothing about
+/// the FT machinery, so unprotected kernels are never targeted — a
+/// campaign measures the protection, not the absence of it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CampaignTarget {
+    /// Every protected path: DMR, all ABFT flavors, and FT-TRSM.
+    AllProtected,
+    /// The duplicate-and-verify Level-1/2 paths only (paper §4).
+    Dmr,
+    /// Every checksum path: fused, unfused, and weighted ABFT plus
+    /// FT-TRSM (paper §5).
+    Abft,
+    /// Only the fused online-ABFT kernels (paper §5.2).
+    Fused,
+}
+
+impl CampaignTarget {
+    /// Every target, in CLI/report order.
+    pub const ALL: [CampaignTarget; 4] = [
+        CampaignTarget::AllProtected,
+        CampaignTarget::Dmr,
+        CampaignTarget::Abft,
+        CampaignTarget::Fused,
+    ];
+
+    /// Whether a kernel running `scheme` is inside this target set.
+    /// `Scheme::None` is outside every set.
+    pub fn admits(&self, scheme: Scheme) -> bool {
+        match self {
+            CampaignTarget::AllProtected => scheme != Scheme::None,
+            CampaignTarget::Dmr => scheme == Scheme::Dmr,
+            CampaignTarget::Abft => matches!(
+                scheme,
+                Scheme::AbftFused | Scheme::AbftUnfused
+                    | Scheme::AbftWeighted | Scheme::FtTrsm
+            ),
+            CampaignTarget::Fused => scheme == Scheme::AbftFused,
+        }
+    }
+
+    /// CLI/report name of the target set.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CampaignTarget::AllProtected => "all",
+            CampaignTarget::Dmr => "dmr",
+            CampaignTarget::Abft => "abft",
+            CampaignTarget::Fused => "fused",
+        }
+    }
+
+    /// Parse a target name (the soak CLI's `--target`).
+    pub fn by_name(s: &str) -> Option<CampaignTarget> {
+        match s {
+            "all" | "all-protected" => Some(CampaignTarget::AllProtected),
+            "dmr" => Some(CampaignTarget::Dmr),
+            "abft" => Some(CampaignTarget::Abft),
+            "fused" => Some(CampaignTarget::Fused),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration of an injection campaign. The schedule half
+/// ([`CampaignConfig::is_strike`] / [`CampaignConfig::fault_at`]) is a
+/// pure function of this config, so two campaigns built from equal
+/// configs plant identical faults regardless of cluster topology.
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// Campaign seed; the per-kernel schedule derives from it.
+    pub seed: u64,
+    /// Cluster-wide target injection rate, in errors per minute. The
+    /// realized rate is capped here by a token bucket that refills
+    /// continuously; candidate strikes beyond the budget are
+    /// *suppressed* (counted, never injected), so a fast tier does not
+    /// overshoot the target.
+    pub rate_per_min: f64,
+    /// Candidate stride: every `stride`-th eligible execution of a
+    /// kernel is a candidate strike — the paper's "one error every k
+    /// iterations" — at a per-kernel phase derived from the seed (so
+    /// different kernels strike on different beats).
+    pub stride: u64,
+    /// Which protection paths the campaign strikes.
+    pub target: CampaignTarget,
+    /// Magnitude range (log-uniform), kept well above checksum
+    /// tolerances so a planted fault is unambiguously detectable.
+    pub min_magnitude: f64,
+    /// Upper magnitude bound.
+    pub max_magnitude: f64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            seed: 0xCA4A16,
+            rate_per_min: 120.0,
+            stride: 4,
+            target: CampaignTarget::AllProtected,
+            min_magnitude: 1e2,
+            max_magnitude: 1e6,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// This kernel's candidate phase in `[0, stride)`.
+    fn phase(&self, kernel: KernelId) -> u64 {
+        mix64(self.seed ^ (kernel.0 as u64).wrapping_mul(GOLDEN))
+            % self.stride.max(1)
+    }
+
+    /// Whether the `occurrence`-th eligible execution of `kernel`
+    /// (0-based, counted cluster-wide) is a candidate strike. Pure in
+    /// `(config, kernel, occurrence)` — topology-independent, which is
+    /// what makes the schedule partition exactly across shards: routing
+    /// decides *where* a kernel runs, never *whether* it is struck.
+    pub fn is_strike(&self, kernel: KernelId, occurrence: u64) -> bool {
+        occurrence % self.stride.max(1) == self.phase(kernel)
+    }
+
+    /// The fault the schedule plants on a candidate occurrence, scaled
+    /// into an `m × n` output. Deterministic in `(config, kernel,
+    /// occurrence, m, n)`; the step lands in a small range the stepped
+    /// kernels clamp into their panel count.
+    pub fn fault_at(&self, kernel: KernelId, occurrence: u64, m: usize,
+                    n: usize) -> Fault {
+        let h1 = mix64(self.seed
+                       ^ mix64(((kernel.0 as u64) << 32) | occurrence));
+        let h2 = mix64(h1);
+        let h3 = mix64(h2);
+        let lo = self.min_magnitude.max(f64::MIN_POSITIVE).ln();
+        let hi = self.max_magnitude.max(self.min_magnitude).ln();
+        let u = (h3 >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let magnitude = (lo + (hi - lo) * u).exp();
+        Fault {
+            step: ((h1 >> 16) & 0xF) as usize,
+            i: (h1 as usize) % m.max(1),
+            j: (h2 as usize) % n.max(1),
+            delta: if h3 & 1 == 0 { magnitude } else { -magnitude },
+        }
+    }
+}
+
+/// A live, cluster-wide injection campaign: the runtime state (clock,
+/// rate budget, per-kernel occurrence counters) around the pure
+/// [`CampaignConfig`] schedule.
+///
+/// One instance is shared — via the cluster's `Arc<Router>` — by every
+/// shard, *including shards the autoscaler spawns mid-run*: a new shard
+/// inherits its slice of the campaign (the strikes of whatever kernels
+/// rendezvous routing assigns it) with no hand-off protocol, because
+/// the schedule never depended on the topology in the first place. The
+/// per-kernel occurrence counters are likewise cluster-wide, so a
+/// kernel migrated to a fresh-salted shard *continues* its occurrence
+/// sequence — the schedule entries it already consumed can never fire
+/// a second time.
+#[derive(Debug)]
+pub struct InjectionCampaign {
+    cfg: CampaignConfig,
+    /// Campaign clock: the rate budget accrues from construction.
+    start: Instant,
+    /// Cluster-wide occurrence counters, indexed by `KernelId`. Each
+    /// eligible execution claims the next index for its kernel
+    /// regardless of which shard runs it.
+    occurrences: Mutex<Vec<u64>>,
+    /// Faults actually armed (the ledger's `errors_injected` mirror).
+    injected: AtomicU64,
+    /// Candidate strikes the rate gate refused (budget spent).
+    suppressed: AtomicU64,
+}
+
+impl InjectionCampaign {
+    /// Start a campaign; the rate budget begins accruing now.
+    pub fn new(cfg: CampaignConfig) -> InjectionCampaign {
+        InjectionCampaign {
+            cfg,
+            start: Instant::now(),
+            occurrences: Mutex::new(Vec::new()),
+            injected: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+        }
+    }
+
+    /// The campaign's configuration (and thereby its pure schedule).
+    pub fn config(&self) -> &CampaignConfig {
+        &self.cfg
+    }
+
+    /// Claim the next cluster-wide occurrence index of `kernel`.
+    fn claim(&self, kernel: KernelId) -> u64 {
+        let mut occ = self.occurrences.lock().unwrap();
+        let idx = kernel.0 as usize;
+        if occ.len() <= idx {
+            occ.resize(idx + 1, 0);
+        }
+        let n = occ[idx];
+        occ[idx] = n + 1;
+        n
+    }
+
+    /// Arm a fault for one execution of `kernel` over a `dim × dim`
+    /// (or `dim`-long) output. Returns `None` when the kernel's scheme
+    /// is outside the campaign's target set (no occurrence consumed),
+    /// when the occurrence is not a candidate on the schedule, or when
+    /// the rate budget is spent (the candidate is counted as
+    /// suppressed).
+    pub fn arm(&self, kernel: KernelId, scheme: Scheme, dim: usize)
+               -> Option<Fault> {
+        if !self.cfg.target.admits(scheme) {
+            return None;
+        }
+        let occurrence = self.claim(kernel);
+        if !self.cfg.is_strike(kernel, occurrence) {
+            return None;
+        }
+        // token bucket: budget refills continuously at the target rate;
+        // +1 lets the first candidate fire at t = 0 (an f64→u64 cast
+        // saturates, so an infinite rate means an unbounded budget)
+        let budget = (self.cfg.rate_per_min.max(0.0) / 60.0
+                      * self.start.elapsed().as_secs_f64()) as u64;
+        let budget = budget.saturating_add(1);
+        let mut cur = self.injected.load(Ordering::Relaxed);
+        loop {
+            if cur >= budget {
+                self.suppressed.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.injected.compare_exchange_weak(
+                cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        Some(self.cfg.fault_at(kernel, occurrence, dim, dim))
+    }
+
+    /// Faults armed so far (the cluster ledger's `errors_injected`
+    /// must agree with this at rest — the soak gate checks it).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Candidate strikes the rate gate refused.
+    pub fn suppressed(&self) -> u64 {
+        self.suppressed.load(Ordering::Relaxed)
+    }
+
+    /// Eligible executions of `kernel` observed so far, cluster-wide.
+    pub fn occurrences_of(&self, kernel: KernelId) -> u64 {
+        let occ = self.occurrences.lock().unwrap();
+        occ.get(kernel.0 as usize).copied().unwrap_or(0)
+    }
+}
+
 /// Serialize a fault to the 3-operand format of the L1 DMR kernels:
 /// [flag, idx, delta].
 pub fn to_inject3(fault: Option<Fault>) -> [f64; 3] {
@@ -192,5 +485,112 @@ mod tests {
         assert_eq!(to_inject4(Some(f)), [1.0, 2.0, 5.0, -7.5]);
         assert_eq!(to_inject5(Some(f)), [1.0, 3.0, 2.0, 5.0, -7.5]);
         assert_eq!(to_inject3(None)[0], 0.0);
+    }
+
+    fn unbounded() -> CampaignConfig {
+        CampaignConfig { rate_per_min: f64::INFINITY, ..Default::default() }
+    }
+
+    /// The campaign schedule is a pure function: every `stride`-th
+    /// occurrence of a kernel is a candidate, at a seed-derived
+    /// per-kernel phase, identically across config clones.
+    #[test]
+    fn campaign_schedule_is_deterministic_and_stride_spaced() {
+        let cfg = CampaignConfig { stride: 5, ..unbounded() };
+        let rebuilt = CampaignConfig { stride: 5, ..unbounded() };
+        for kid in [0u16, 3, 17, 79] {
+            let k = KernelId(kid);
+            let hits: Vec<u64> =
+                (0..100).filter(|&o| cfg.is_strike(k, o)).collect();
+            assert_eq!(hits.len(), 20, "stride 5 over 100 occurrences");
+            assert!(hits[0] < 5, "phase lives inside the first stride");
+            assert!(hits.windows(2).all(|w| w[1] - w[0] == 5));
+            let again: Vec<u64> =
+                (0..100).filter(|&o| rebuilt.is_strike(k, o)).collect();
+            assert_eq!(hits, again);
+        }
+        // different seeds move the phases
+        let other = CampaignConfig { seed: cfg.seed ^ 1, ..cfg.clone() };
+        assert!((0u16..64).any(|kid| {
+            let k = KernelId(kid);
+            (0..5).find(|&o| cfg.is_strike(k, o))
+                != (0..5).find(|&o| other.is_strike(k, o))
+        }));
+    }
+
+    /// Scheme-aware targeting: unprotected kernels are never struck
+    /// (and consume no occurrence), and the named subsets admit exactly
+    /// their schemes.
+    #[test]
+    fn campaign_targets_are_scheme_aware() {
+        for t in CampaignTarget::ALL {
+            assert!(!t.admits(Scheme::None), "{:?} must skip unprotected", t);
+            assert_eq!(CampaignTarget::by_name(t.name()), Some(t));
+        }
+        assert!(CampaignTarget::AllProtected.admits(Scheme::Dmr));
+        assert!(CampaignTarget::AllProtected.admits(Scheme::FtTrsm));
+        assert!(CampaignTarget::Dmr.admits(Scheme::Dmr));
+        assert!(!CampaignTarget::Dmr.admits(Scheme::AbftFused));
+        assert!(CampaignTarget::Abft.admits(Scheme::AbftWeighted));
+        assert!(!CampaignTarget::Abft.admits(Scheme::Dmr));
+        assert!(CampaignTarget::Fused.admits(Scheme::AbftFused));
+        assert!(!CampaignTarget::Fused.admits(Scheme::AbftUnfused));
+        assert!(CampaignTarget::by_name("storm").is_none());
+
+        let c = InjectionCampaign::new(CampaignConfig {
+            stride: 1,
+            ..unbounded()
+        });
+        let k = KernelId(7);
+        assert!(c.arm(k, Scheme::None, 64).is_none());
+        assert_eq!(c.occurrences_of(k), 0,
+                   "ineligible schemes must not consume occurrences");
+        assert!(c.arm(k, Scheme::Dmr, 64).is_some());
+        assert_eq!(c.occurrences_of(k), 1);
+    }
+
+    /// With an unbounded rate and stride 1, every eligible execution
+    /// strikes, faults stay inside the output, and the magnitude range
+    /// holds.
+    #[test]
+    fn campaign_faults_are_in_range() {
+        let c = InjectionCampaign::new(CampaignConfig {
+            stride: 1,
+            ..unbounded()
+        });
+        for kid in 0..8u16 {
+            for _ in 0..16 {
+                let f = c.arm(KernelId(kid), Scheme::AbftFused, 13)
+                    .expect("stride 1 + unbounded rate strikes always");
+                assert!(f.i < 13 && f.j < 13);
+                let mag = f.delta.abs();
+                assert!((1e2..=1e6).contains(&mag), "delta={}", f.delta);
+            }
+        }
+        assert_eq!(c.injected(), 8 * 16);
+        assert_eq!(c.suppressed(), 0);
+    }
+
+    /// The token bucket caps the realized rate: a burst of candidates
+    /// at t≈0 fires exactly the starting budget (1) and suppresses the
+    /// rest instead of overshooting the target.
+    #[test]
+    fn campaign_rate_gate_suppresses_over_budget_candidates() {
+        let c = InjectionCampaign::new(CampaignConfig {
+            stride: 1,
+            rate_per_min: 0.001, // ~one strike per 1000 minutes
+            ..Default::default()
+        });
+        let mut armed = 0;
+        for _ in 0..50 {
+            if c.arm(KernelId(3), Scheme::Dmr, 32).is_some() {
+                armed += 1;
+            }
+        }
+        assert_eq!(armed, 1, "only the t=0 budget of one strike fires");
+        assert_eq!(c.injected(), 1);
+        assert_eq!(c.suppressed(), 49);
+        assert_eq!(c.occurrences_of(KernelId(3)), 50,
+                   "suppression still consumes the occurrence");
     }
 }

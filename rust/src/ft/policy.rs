@@ -7,6 +7,9 @@
 //! ([`crate::coordinator::registry`]) via each descriptor's capability
 //! list.
 
+use crate::coordinator::registry::KernelRegistry;
+use crate::ft::injector::CampaignTarget;
+
 /// Protection scheme selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FtPolicy {
@@ -60,6 +63,20 @@ impl FtPolicy {
     pub fn protects(&self) -> bool {
         !matches!(self, FtPolicy::None)
     }
+
+    /// Whether an injection campaign with this `target` can ever strike
+    /// while the tier serves under this policy — i.e. whether any
+    /// registered kernel that serves the policy runs a scheme the
+    /// target admits. `ftblas soak` validates its flags through this,
+    /// so a run that would inject nothing (e.g. `--target fused` under
+    /// a DMR-only policy, or anything under `none`) fails fast instead
+    /// of "passing" vacuously.
+    pub fn reaches(&self, target: CampaignTarget) -> bool {
+        KernelRegistry::global()
+            .entries()
+            .iter()
+            .any(|e| e.supports(*self) && target.admits(e.scheme))
+    }
 }
 
 #[cfg(test)]
@@ -81,5 +98,22 @@ mod tests {
         for p in FtPolicy::ALL {
             assert_eq!(p.protects(), p != FtPolicy::None);
         }
+    }
+
+    /// Campaign reachability mirrors the registry's capability lists:
+    /// `none` reaches nothing, the hybrid policy reaches every target
+    /// set, and the unfused policy cannot reach the fused kernels.
+    #[test]
+    fn campaign_reachability_follows_the_registry() {
+        for t in CampaignTarget::ALL {
+            assert!(!FtPolicy::None.reaches(t),
+                    "unprotected serving reaches no campaign target");
+            assert!(FtPolicy::Hybrid.reaches(CampaignTarget::AllProtected));
+        }
+        assert!(FtPolicy::Hybrid.reaches(CampaignTarget::Dmr));
+        assert!(FtPolicy::Hybrid.reaches(CampaignTarget::Fused));
+        assert!(FtPolicy::AbftUnfused.reaches(CampaignTarget::Abft));
+        assert!(!FtPolicy::AbftUnfused.reaches(CampaignTarget::Fused),
+                "the unfused policy never plans a fused kernel");
     }
 }

@@ -10,7 +10,10 @@
 //!   paper's Fig. 7.
 //! - [`ft`] — the fault-tolerance engine: DMR wrappers for Level-1/2,
 //!   checksum-based online ABFT for Level-3, and the fault-injection
-//!   substrate used by the error-injection experiments (Figs. 10/11).
+//!   substrate used by the error-injection experiments (Figs. 10/11) —
+//!   both per-call plans and cluster-wide, rate-based
+//!   [`ft::injector::InjectionCampaign`]s whose schedules survive
+//!   elastic scaling (the `ftblas soak` CI gate drives them).
 //! - [`runtime`] — the PJRT runtime: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them on
 //!   the CPU PJRT client. Python never runs on this path.

@@ -5,6 +5,8 @@
 //! ftblas verify [--profile P]              cross-check artifacts vs native
 //! ftblas run --routine R --n N [...]       execute one routine
 //! ftblas serve --requests N [...]          drive the plan-aware server
+//! ftblas soak [--quick] [...]              timed fault-injection campaign
+//!                                          on an elastic tier (CI gate)
 //! ftblas bench --exp ID [--quick]          regenerate a paper table/figure
 //! ```
 
@@ -22,8 +24,10 @@ use ftblas::coordinator::pjrt_backend::PjrtBackend;
 use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
 use ftblas::coordinator::router::{execute_native, Router};
 use ftblas::coordinator::trace::{self, Burst, TraceConfig};
-use ftblas::ft::injector::{Fault, InjectorConfig};
+use ftblas::ft::injector::{CampaignConfig, CampaignTarget, Fault,
+                           InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
+use ftblas::util::json::Json;
 use ftblas::util::matrix::Matrix;
 use ftblas::util::rng::Rng;
 
@@ -94,8 +98,21 @@ USAGE:
               --admission-depth: per-shard queue watermark — excess
               submissions shed as `Overloaded` and retried with backoff;
               --trace burst (or --burst F): bursty paced arrivals)
+  ftblas soak [--quick] [--duration SECS] [--rate ERRORS_PER_MIN]
+             [--stride K] [--target all|dmr|abft|fused] [--ft P]
+             [--seed S (campaign schedule)] [--trace-seed S (workload)]
+             [--min-shards M] [--max-shards X] [--admission-depth D]
+             [--workers W] [--mat-dim N] [--vec-len N] [--out PATH]
+             [--profile P]
+             (timed, rate-controlled fault-injection campaign against an
+              elastic burst trace; exits nonzero unless the tier grew,
+              shards spawned mid-run were struck, no error escaped, and
+              the injected/detected/corrected counts balance exactly —
+              the CI reliability gate. --out writes the soak report as
+              JSON.)
   ftblas bench --exp smoke|table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
+             (--exp smoke also takes --out PATH to write its rows as JSON)
   ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
              ablation-threads|ablation-weighted)"
     );
@@ -117,9 +134,13 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&profile, args.has("quick")),
         "run" => cmd_run(&args, profile),
         "serve" => cmd_serve(&args, profile),
+        "soak" => cmd_soak(&args, profile),
         "bench" => {
             let exp = args.get("exp", "all");
             let mut ctx = BenchCtx::with_artifacts(profile, args.has("quick"));
+            if args.has("out") {
+                ctx.out = Some(args.get("out", "bench.json").into());
+            }
             bench::run(&exp, &mut ctx)
         }
         _ => usage(),
@@ -409,6 +430,264 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     }
     println!();
     ftblas::bench::harness::print_ledger(&snap);
+    Ok(())
+}
+
+/// One soak-gate check: a named pass/fail with its evidence.
+struct SoakCheck {
+    name: &'static str,
+    pass: bool,
+    detail: String,
+}
+
+fn soak_check(name: &'static str, pass: bool, detail: String) -> SoakCheck {
+    SoakCheck { name, pass, detail }
+}
+
+/// `ftblas soak` — a timed, rate-controlled fault-injection campaign
+/// against an elastic burst trace, gated for CI.
+///
+/// The run starts the tier at its elastic floor, paces a bursty trace
+/// through admission (sheds ride out with bounded retries) so the
+/// autoscaler grows the tier mid-campaign, and arms scheme-aware
+/// campaign strikes on every shard — including the shards spawned
+/// mid-run, which inherit their slice of the schedule through the
+/// shared router. The process exits nonzero unless:
+///
+/// - at least one grow event happened and a shard spawned mid-run
+///   recorded a nonzero injected-error count (the campaign really is
+///   topology-proof, not just configured);
+/// - zero errors escaped and the injected / detected / corrected
+///   counts — ledger-side and campaign-side — balance exactly.
+fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
+    let quick = args.has("quick");
+    let duration = args.get_usize("duration", if quick { 5 } else { 20 })?
+        .max(1) as f64;
+    let rate_per_min = args.get_usize("rate", 600)?.max(1) as f64;
+    let stride = args.get_usize("stride", 2)?.max(1) as u64;
+    let target = CampaignTarget::by_name(&args.get("target", "all"))
+        .ok_or_else(|| anyhow!("bad --target (want all|dmr|abft|fused)"))?;
+    let policy = FtPolicy::by_name(&args.get("ft", "hybrid"))
+        .ok_or_else(|| anyhow!("bad --ft"))?;
+    if !policy.protects() {
+        bail!("soak needs a protecting --ft policy: under `none` the \
+               campaign could never strike and the gate would pass \
+               vacuously");
+    }
+    if !policy.reaches(target) {
+        bail!("campaign target `{}` is unreachable under policy `{}`: no \
+               registered kernel serving the policy runs a targeted \
+               scheme, so the run would inject nothing",
+              target.name(), policy.name());
+    }
+    // elastic floor→ceiling: the run must have room to grow, and it
+    // starts at the floor so every slot >= min_shards is provably a
+    // mid-run spawn
+    let min = args.get_usize("min-shards", 1)?.max(1);
+    let max = args.get_usize("max-shards", 3)?;
+    if min >= max {
+        bail!("soak drives an elastic tier: need --min-shards {min} < \
+               --max-shards {max}");
+    }
+    profile = profile.with_shard_bounds(min, max);
+    profile.shards = profile.min_shards;
+    profile.workers = args.get_usize("workers", 1)?.max(1);
+    // a shallow watermark + small batch window keep burst pressure
+    // visible to the controller (sheds and queue spikes, not silence)
+    profile = profile
+        .with_admission_depth(args.get_usize("admission-depth", 4)?.max(1))
+        .with_max_batch(4);
+    let campaign_seed = args.get_usize("seed", 0xCA4A16)? as u64;
+    let trace_seed = args.get_usize("trace-seed", 0x50AC)? as u64;
+    let campaign = CampaignConfig {
+        seed: campaign_seed,
+        rate_per_min,
+        stride,
+        target,
+        ..Default::default()
+    };
+    profile = profile.with_campaign(campaign);
+    let trace_cfg = TraceConfig {
+        seed: trace_seed,
+        rate: 300.0,
+        vec_len: args.get_usize("vec-len", 2048)?,
+        mat_dim: args.get_usize("mat-dim", 128)?,
+        mat_dim_alt: None,
+        burst: Some(Burst::default()),
+        ..Default::default()
+    }
+    .sized_for(duration);
+    println!("soak: ~{duration:.0}s campaign at {rate_per_min:.0} err/min \
+              (stride {stride}, target {}, policy {}) over {} bursty \
+              requests on {} [{}..{} shards, {} worker(s)/shard, \
+              admission depth {}]",
+             target.name(), policy.name(), trace_cfg.requests, profile.name,
+             profile.min_shards, profile.max_shards, profile.workers,
+             profile.admission_depth.unwrap_or(0));
+    let entries = trace::generate(&trace_cfg);
+    let mut scfg = ScalingConfig::from_profile(&profile)
+        .with_interval(std::time::Duration::from_millis(
+            args.get_usize("scale-interval", 10)?.max(1) as u64));
+    scfg.verbose = true;
+    let cluster_cfg = ClusterConfig {
+        expected_requests: entries.len(),
+        autoscale: Some(scfg),
+        ..ClusterConfig::from_profile(&profile)
+    };
+    let min_shards = profile.min_shards;
+    let router = Router::native_only(profile, Backend::NativeTuned);
+    let cluster = Cluster::start(router, policy, cluster_cfg);
+    let handle = cluster.handle();
+    let retry = RetryPolicy { attempts: 6, ..RetryPolicy::default() };
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    let mut rejected = 0u64;
+    let mut retries = 0u64;
+    for e in &entries {
+        let at = t0 + std::time::Duration::from_secs_f64(e.at_seconds);
+        let wait = at.saturating_duration_since(std::time::Instant::now());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let (admitted, spent) =
+            handle.submit_with_retry(e.request.clone(), &retry);
+        retries += spent as u64;
+        match admitted {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in rxs {
+        // execution failures land in the ledger's `failed` counter,
+        // which the gate checks; a dropped channel cannot happen while
+        // the cluster is alive
+        let _ = rx.recv().map_err(|_| anyhow!("cluster dropped a request"))?;
+    }
+    let campaign_wall = t0.elapsed().as_secs_f64();
+    // cooldown: give the calm tier a chance to hand capacity back so
+    // one soak demonstrates the full grow → strike → shrink → retire
+    // cycle (bounded; shrink is reported, not gated)
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(3);
+    while std::time::Instant::now() < deadline {
+        let (ups, _) = handle.scale_events();
+        if ups == 0 || handle.shard_count() <= min_shards {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let live = cluster.shard_metrics();
+    let retired = cluster.retired_metrics();
+    let (armed, suppressed) = cluster
+        .campaign()
+        .map(|c| (c.injected(), c.suppressed()))
+        .expect("soak always runs a campaign");
+    let snap = cluster.shutdown();
+    println!("\ncampaign wall {:.2}s: {} submitted, {} completed, {} shed \
+              after {} retries; {} strikes armed ({} suppressed by the \
+              rate gate -> {:.1} err/min realized)",
+             campaign_wall, entries.len(), snap.completed, rejected, retries,
+             armed, suppressed, armed as f64 / (campaign_wall / 60.0));
+    for (slot, s) in live.iter().enumerate() {
+        let origin = if slot < min_shards { "start" } else { "mid-run" };
+        println!("shard {slot} [{origin}]: {} completed, injected={} \
+                  detected={} escaped={}",
+                 s.completed, s.errors_injected, s.errors_detected,
+                 s.errors_escaped);
+    }
+    for (i, s) in retired.iter().enumerate() {
+        println!("retired shard #{i} [mid-run]: {} completed, injected={} \
+                  detected={} escaped={} (drained by scale-down)",
+                 s.completed, s.errors_injected, s.errors_detected,
+                 s.errors_escaped);
+    }
+    println!();
+    ftblas::bench::harness::print_ledger(&snap);
+
+    // every shard at a slot >= the floor — live or already retired —
+    // was spawned mid-run (the tier started at the floor and the floor
+    // slots can never be drained)
+    let midrun_injected: u64 = live
+        .iter()
+        .skip(min_shards)
+        .chain(retired.iter())
+        .map(|s| s.errors_injected)
+        .sum();
+    let checks = [
+        soak_check("requests-complete", snap.failed == 0,
+                   format!("{} failed of {} completed", snap.failed,
+                           snap.completed)),
+        soak_check("campaign-injected", snap.errors_injected > 0,
+                   format!("{} errors injected", snap.errors_injected)),
+        soak_check("zero-escapes", snap.errors_escaped == 0,
+                   format!("{} errors escaped detection",
+                           snap.errors_escaped)),
+        soak_check("detect-drift",
+                   snap.errors_detected == snap.errors_injected,
+                   format!("detected {} vs injected {}",
+                           snap.errors_detected, snap.errors_injected)),
+        soak_check("correct-drift",
+                   snap.errors_corrected == snap.errors_detected,
+                   format!("corrected {} vs detected {}",
+                           snap.errors_corrected, snap.errors_detected)),
+        soak_check("ledger-vs-campaign", snap.errors_injected == armed,
+                   format!("ledger {} vs campaign {}",
+                           snap.errors_injected, armed)),
+        soak_check("tier-grew", snap.scale_ups >= 1,
+                   format!("{} grow events", snap.scale_ups)),
+        soak_check("midrun-shard-struck", midrun_injected > 0,
+                   format!("{midrun_injected} strikes on shards spawned \
+                            mid-run")),
+    ];
+    println!("\nsoak gate:");
+    for c in &checks {
+        println!("  [{}] {:<22} {}", if c.pass { "PASS" } else { "FAIL" },
+                 c.name, c.detail);
+    }
+    if let Some(path) = args.flags.get("out") {
+        let doc = Json::obj()
+            .field("schema", Json::Str("ftblas.soak.v1".into()))
+            .field("config", Json::obj()
+                .field("duration_s", Json::Num(duration))
+                .field("rate_errors_per_min", Json::Num(rate_per_min))
+                .field("stride", Json::Int(stride))
+                .field("target", Json::Str(target.name().into()))
+                .field("policy", Json::Str(policy.name().into()))
+                .field("seed", Json::Int(campaign_seed))
+                .field("trace_seed", Json::Int(trace_seed))
+                .field("min_shards", Json::Int(min_shards as u64))
+                .field("max_shards", Json::Int(max as u64))
+                .field("quick", Json::Bool(quick)))
+            .field("campaign", Json::obj()
+                .field("wall_s", Json::Num(campaign_wall))
+                .field("armed", Json::Int(armed))
+                .field("suppressed", Json::Int(suppressed)))
+            .field("submitted", Json::Int(entries.len() as u64))
+            .field("rejected", Json::Int(rejected))
+            .field("retries", Json::Int(retries))
+            .field("midrun_injected", Json::Int(midrun_injected))
+            .field("checks", Json::Arr(checks.iter().map(|c| {
+                Json::obj()
+                    .field("name", Json::Str(c.name.into()))
+                    .field("pass", Json::Bool(c.pass))
+                    .field("detail", Json::Str(c.detail.clone()))
+            }).collect()))
+            .field("passed", Json::Bool(checks.iter().all(|c| c.pass)))
+            .field("ledger", snap.to_json());
+        ftblas::bench::harness::write_json(std::path::Path::new(path), &doc)?;
+        println!("soak report written to {path}");
+    }
+    let failed: Vec<&str> = checks
+        .iter()
+        .filter(|c| !c.pass)
+        .map(|c| c.name)
+        .collect();
+    if !failed.is_empty() {
+        bail!("soak gate failed: {}", failed.join(", "));
+    }
+    println!("soak gate passed: {} errors injected, all detected and \
+              corrected, none escaped, across {} grow / {} shrink events",
+             snap.errors_injected, snap.scale_ups, snap.scale_downs);
     Ok(())
 }
 

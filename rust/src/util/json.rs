@@ -1,0 +1,146 @@
+//! Minimal JSON document builder (serde is not vendored in this
+//! offline image; see DESIGN.md §9). The CI artifacts — the bench-smoke
+//! ledger and the soak report — need a *stable, machine-readable*
+//! schema across PRs, so this builder emits objects with keys in
+//! insertion order (callers sort collections themselves), strings with
+//! full escaping, and floats via Rust's shortest-roundtrip `Display`
+//! (non-finite values degrade to `null` rather than emitting invalid
+//! JSON).
+
+use std::fmt::Write as _;
+
+/// A JSON value tree.
+#[derive(Clone, Debug)]
+pub enum Json {
+    /// An object; keys serialize in insertion order.
+    Obj(Vec<(String, Json)>),
+    /// An array.
+    Arr(Vec<Json>),
+    /// A string (escaped on serialization).
+    Str(String),
+    /// A float (`null` when non-finite).
+    Num(f64),
+    /// An unsigned integer (exact — not routed through f64).
+    Int(u64),
+    /// A boolean.
+    Bool(bool),
+    /// An explicit null.
+    Null,
+}
+
+impl Json {
+    /// An empty object to push fields onto.
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append a field to an object; panics when `self` is not one
+    /// (builder misuse, not data-dependent).
+    pub fn field(mut self, key: &str, value: Json) -> Json {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), value)),
+            other => panic!("field() on a non-object Json: {other:?}"),
+        }
+        self
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Num(v) if v.is_finite() => {
+                let _ = write!(out, "{v}");
+            }
+            Json::Num(_) => out.push_str("null"),
+            Json::Int(v) => {
+                let _ = write!(out, "{v}");
+            }
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Null => out.push_str("null"),
+        }
+    }
+}
+
+/// Write `s` as a quoted JSON string with RFC 8259 escaping.
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_documents() {
+        let doc = Json::obj()
+            .field("schema", Json::Str("v1".into()))
+            .field("count", Json::Int(3))
+            .field("mean", Json::Num(0.25))
+            .field("ok", Json::Bool(true))
+            .field("rows", Json::Arr(vec![
+                Json::obj().field("label", Json::Str("a".into())),
+                Json::Null,
+            ]));
+        assert_eq!(doc.render(),
+                   r#"{"schema":"v1","count":3,"mean":0.25,"ok":true,"rows":[{"label":"a"},null]}"#);
+    }
+
+    #[test]
+    fn escapes_strings_and_degrades_nonfinite() {
+        let doc = Json::obj()
+            .field("s", Json::Str("a\"b\\c\nd\u{1}".into()))
+            .field("nan", Json::Num(f64::NAN))
+            .field("inf", Json::Num(f64::INFINITY));
+        assert_eq!(doc.render(),
+                   r#"{"s":"a\"b\\c\nd\u0001","nan":null,"inf":null}"#);
+    }
+
+    #[test]
+    fn integers_are_exact() {
+        // u64 values above 2^53 would lose precision through f64
+        let big = (1u64 << 60) + 1;
+        assert_eq!(Json::Int(big).render(), big.to_string());
+    }
+}

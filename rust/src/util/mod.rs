@@ -3,6 +3,7 @@
 //! image — see DESIGN.md §9).
 
 pub mod check;
+pub mod json;
 pub mod matrix;
 pub mod rng;
 pub mod stats;

@@ -11,7 +11,7 @@ use ftblas::coordinator::metrics::MetricsSnapshot;
 use ftblas::coordinator::request::{Backend, BlasRequest};
 use ftblas::coordinator::router::Router;
 use ftblas::coordinator::trace::{self, Burst, TraceConfig};
-use ftblas::ft::injector::InjectorConfig;
+use ftblas::ft::injector::{CampaignConfig, CampaignTarget, InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::{allclose, Matrix};
 use ftblas::util::rng::Rng;
@@ -26,6 +26,7 @@ fn native_cluster(profile: Profile, policy: FtPolicy, shards: usize,
         workers_per_shard,
         injection,
         expected_requests: expected,
+        campaign: None,
         autoscale: None,
     })
 }
@@ -203,6 +204,95 @@ fn injection_merges_ft_counters_across_shards() {
     assert_eq!(ft_total, merged.errors_detected);
 }
 
+/// A cluster-wide injection campaign is elasticity-proof end to end:
+/// shards grown mid-run inherit the campaign through the shared router
+/// and fire their slice of the schedule, a shard drained mid-run
+/// retires its strike outcomes exactly, and across the whole run every
+/// injected fault is detected and corrected — zero escapes, zero
+/// count drift between the campaign's own ledger and the merged
+/// metrics.
+#[test]
+fn campaign_strikes_inherit_across_grow_and_survive_shrink() {
+    let campaign = CampaignConfig {
+        seed: 0x50AC,
+        rate_per_min: f64::INFINITY, // schedule-only: no rate gating
+        stride: 2,
+        target: CampaignTarget::AllProtected,
+        ..Default::default()
+    };
+    let profile = Profile::default()
+        .with_shard_bounds(1, 4)
+        .with_campaign(campaign);
+    let cluster = native_cluster(profile, FtPolicy::Hybrid, 1, 2, None, 0);
+    let handle = cluster.handle();
+    // grow before the traffic lands: slots 1..=3 are mid-run spawns
+    // with fresh-generation salts, so between them they own most of
+    // the kernel-id key space
+    handle.scale_up().unwrap();
+    handle.scale_up().unwrap();
+    handle.scale_up().unwrap();
+    assert_eq!(handle.shard_count(), 4);
+    let cfg = TraceConfig {
+        requests: 120,
+        vec_len: 1024,
+        mat_dim: 48,
+        seed: 0x7A57,
+        ..Default::default()
+    };
+    let entries = trace::generate(&cfg);
+    let rxs: Vec<_> = entries[..80]
+        .iter()
+        .map(|e| handle.submit(e.request.clone()).expect("unbounded"))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    // drain one mid-run shard with strikes already on its ledger: the
+    // retired snapshot must carry them into the merged view
+    handle.scale_down().unwrap();
+    let rxs: Vec<_> = entries[80..]
+        .iter()
+        .map(|e| handle.submit(e.request.clone()).expect("unbounded"))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let live = cluster.shard_metrics();
+    let retired = cluster.retired_metrics();
+    let armed = cluster.campaign().expect("campaign is live").injected();
+    let merged = cluster.shutdown();
+    assert_eq!(merged.completed, 120);
+    assert_eq!(merged.failed, 0);
+    assert_eq!(merged.injection_mode, "campaign");
+    // an unbounded stride-2 campaign over 120 protected requests
+    // strikes roughly half of every kernel's occurrences
+    assert!(merged.errors_injected >= 20,
+            "campaign barely fired: {} strikes", merged.errors_injected);
+    assert_eq!(merged.errors_detected, merged.errors_injected,
+               "no count drift");
+    assert_eq!(merged.errors_corrected, merged.errors_detected);
+    assert_eq!(merged.errors_escaped, 0, "nothing may escape");
+    assert_eq!(merged.errors_injected, armed,
+               "ledger and campaign agree exactly");
+    // inheritance: the mid-run shards (live slots >= 1 plus the one
+    // retired) took traffic and fired their slice of the schedule
+    assert_eq!(live.len(), 3);
+    assert_eq!(retired.len(), 1);
+    let midrun_injected: u64 = live[1..]
+        .iter()
+        .chain(&retired)
+        .map(|s| s.errors_injected)
+        .sum();
+    let midrun_completed: u64 = live[1..]
+        .iter()
+        .chain(&retired)
+        .map(|s| s.completed)
+        .sum();
+    assert!(midrun_completed > 0, "grown shards must take traffic");
+    assert!(midrun_injected > 0,
+            "shards spawned mid-run must inherit campaign strikes");
+}
+
 /// The elastic cycle, driven deterministically (no controller thread):
 /// a bursty trace is pushed through grow → drain → shrink, and the
 /// merged ledger accounts for every request exactly — including the
@@ -293,6 +383,7 @@ fn autoscaler_grows_under_pressure_and_shrinks_when_calm() {
         workers_per_shard: 1,
         injection: None,
         expected_requests: 0,
+        campaign: None,
         autoscale: Some(scfg),
     });
     let handle = cluster.handle();

@@ -1,0 +1,177 @@
+//! Property tests for the injection-campaign schedule: the per-kernel
+//! strike schedule must be **deterministic** (a pure function of the
+//! campaign seed + `KernelId` + occurrence index) and **partition
+//! exact** under elastic grow/shrink — however the rendezvous topology
+//! slices the kernel space across shards, the union of the per-shard
+//! strike sets equals the fixed-topology schedule, every strike fires
+//! on exactly one shard, and a kernel migrated by a re-salt continues
+//! its occurrence sequence instead of replaying it (no double
+//! injection).
+
+use std::collections::{HashMap, HashSet};
+
+use ftblas::coordinator::cluster::{route_salted_with, salt_for};
+use ftblas::coordinator::registry::{KernelId, Scheme};
+use ftblas::ft::injector::{CampaignConfig, CampaignTarget, InjectionCampaign};
+use ftblas::util::check::{check, ensure};
+
+fn unbounded(seed: u64, stride: u64) -> CampaignConfig {
+    CampaignConfig {
+        seed,
+        stride,
+        rate_per_min: f64::INFINITY,
+        target: CampaignTarget::AllProtected,
+        ..Default::default()
+    }
+}
+
+/// Schedule determinism: two campaigns from equal configs agree on
+/// every (kernel, occurrence) decision and on the planted fault, and
+/// candidates are exactly stride-spaced per kernel.
+#[test]
+fn campaign_schedule_is_pure() {
+    check("campaign-schedule-pure", 40, |g| {
+        let stride = 1 + g.rng.below(6) as u64;
+        let seed = g.rng.next_u64();
+        let a = unbounded(seed, stride);
+        let b = unbounded(seed, stride);
+        for _ in 0..8 {
+            let k = KernelId(g.rng.below(96) as u16);
+            let mut hits = Vec::new();
+            for occ in 0..64u64 {
+                ensure(a.is_strike(k, occ) == b.is_strike(k, occ),
+                       "schedules from equal configs must agree")?;
+                if a.is_strike(k, occ) {
+                    ensure(a.fault_at(k, occ, 32, 32)
+                           == b.fault_at(k, occ, 32, 32),
+                           "planted faults must agree")?;
+                    let f = a.fault_at(k, occ, 32, 32);
+                    ensure(f.i < 32 && f.j < 32, "fault outside the output")?;
+                    hits.push(occ);
+                }
+            }
+            ensure(!hits.is_empty(), "64 occurrences cover any stride <= 6")?;
+            ensure(hits[0] < stride, "phase lands in the first stride")?;
+            ensure(hits.windows(2).all(|w| w[1] - w[0] == stride),
+                   format!("stride {stride} spacing violated: {hits:?}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Partition exactness under grow/shrink: replay a random elastic walk
+/// (grow with fresh-generation salts, shrink the newest slot) while
+/// kernels execute through ONE shared campaign — the shape the cluster
+/// threads through its `Arc<Router>`. At every step each kernel is
+/// routed to exactly one live shard, so attributing each armed strike
+/// to the owner shard partitions the strike set. The union over shards
+/// must equal the fixed-topology schedule over the claimed occurrence
+/// ranges, with every strike attributed exactly once and occurrence
+/// sequences continuing across migrations.
+#[test]
+fn campaign_partitions_exactly_under_grow_shrink() {
+    check("campaign-partition-exact", 25, |g| {
+        let stride = 1 + g.rng.below(5) as u64;
+        let cfg = unbounded(g.rng.next_u64(), stride);
+        let campaign = InjectionCampaign::new(cfg.clone());
+        // a handful of kernels; ids from the registry's id range
+        let kernels: Vec<KernelId> =
+            (0..6).map(|_| KernelId(g.rng.below(96) as u16)).collect();
+        let mut salts = vec![salt_for(0, 0)];
+        let mut next_generation = 1u64;
+        let mut claimed: HashMap<u16, u64> = HashMap::new();
+        // strikes attributed to the shard that executed them, keyed by
+        // the slot's salt (slots are reused across generations; salts
+        // are unique per spawn)
+        let mut by_shard: HashMap<u64, HashSet<(u16, u64)>> = HashMap::new();
+        for _epoch in 0..12 {
+            // random scale event between epochs: grow (fresh salt) or
+            // shrink (drop the newest slot), inside [1, 4] shards
+            match g.rng.below(3) {
+                0 if salts.len() < 4 => {
+                    salts.push(salt_for(salts.len(), next_generation));
+                    next_generation += 1;
+                }
+                1 if salts.len() > 1 => {
+                    salts.pop();
+                }
+                _ => {}
+            }
+            // each kernel executes a few times; routing owns WHERE,
+            // the campaign owns WHETHER
+            for &k in &kernels {
+                let shard =
+                    route_salted_with(k.0 as u64, &salts, |_| 0);
+                for _ in 0..(1 + g.rng.below(4)) {
+                    let occurrence = *claimed.get(&k.0).unwrap_or(&0);
+                    let fault = campaign.arm(k, Scheme::Dmr, 64);
+                    claimed.insert(k.0, occurrence + 1);
+                    ensure(campaign.occurrences_of(k) == occurrence + 1,
+                           "occurrence counters must be cluster-wide and \
+                            monotone across migrations")?;
+                    ensure(fault.is_some() == cfg.is_strike(k, occurrence),
+                           "an unbounded campaign must realize exactly \
+                            the pure schedule")?;
+                    if fault.is_some() {
+                        let fresh = by_shard
+                            .entry(salts[shard])
+                            .or_default()
+                            .insert((k.0, occurrence));
+                        ensure(fresh, "a strike fired twice")?;
+                    }
+                }
+            }
+        }
+        // union over shard slices == the fixed-topology schedule over
+        // the claimed ranges, and the slices are pairwise disjoint
+        let mut union: HashSet<(u16, u64)> = HashSet::new();
+        let mut total = 0usize;
+        for slice in by_shard.values() {
+            total += slice.len();
+            union.extend(slice.iter().copied());
+        }
+        ensure(union.len() == total,
+               "shard slices overlap: double injection")?;
+        let reference: HashSet<(u16, u64)> = claimed
+            .iter()
+            .flat_map(|(&k, &n)| {
+                let cfg = &cfg;
+                (0..n).filter(move |&o| cfg.is_strike(KernelId(k), o))
+                      .map(move |o| (k, o))
+            })
+            .collect();
+        ensure(union == reference,
+               format!("union of shard slices ({}) != fixed-topology \
+                        schedule ({})", union.len(), reference.len()))?;
+        Ok(())
+    });
+}
+
+/// Re-salting a slot moves kernels between shards but never re-arms a
+/// consumed schedule entry: a kernel executed before and after a
+/// migration sees strictly increasing occurrences, so the strike count
+/// equals the pure schedule's count over the whole range.
+#[test]
+fn migration_never_replays_consumed_strikes() {
+    check("campaign-no-replay", 25, |g| {
+        let stride = 1 + g.rng.below(4) as u64;
+        let cfg = unbounded(g.rng.next_u64(), stride);
+        let campaign = InjectionCampaign::new(cfg.clone());
+        let k = KernelId(g.rng.below(96) as u16);
+        let total = 40 + g.rng.below(40) as u64;
+        let mut armed = 0u64;
+        // "migrate" the kernel between phases by changing which shard
+        // executes it — invisible to the campaign, as it must be
+        for _ in 0..total {
+            if campaign.arm(k, Scheme::AbftFused, 48).is_some() {
+                armed += 1;
+            }
+        }
+        let expected =
+            (0..total).filter(|&o| cfg.is_strike(k, o)).count() as u64;
+        ensure(armed == expected,
+               format!("armed {armed} != scheduled {expected}"))?;
+        ensure(campaign.injected() == armed, "injected counter drifted")?;
+        Ok(())
+    });
+}
