@@ -1,8 +1,8 @@
 //! Performance figures without fault injection: Table 1, Figs. 5-7.
 //!
-//! Variant ladders (naive / blocked / tuned) are enumerated from the
-//! kernel registry — adding a variant to the registry adds its bench
-//! row; the figures keep no hand-maintained kernel lists.
+//! Variant ladders (naive / blocked / tuned / simd) are enumerated from
+//! the kernel registry — adding a variant to the registry adds its
+//! bench row; the figures keep no hand-maintained kernel lists.
 
 use anyhow::Result;
 use std::hint::black_box;

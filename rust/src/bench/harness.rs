@@ -148,9 +148,9 @@ pub fn row<F: FnMut()>(ctx: &BenchCtx, label: &str, flops: f64, note: &str,
 }
 
 /// Time the serial unprotected variant ladder of one routine straight
-/// off the kernel registry (naive → blocked → tuned, in registration
-/// order) — the figure drivers enumerate descriptors instead of
-/// hand-maintaining variant lists.
+/// off the kernel registry (naive → blocked → tuned → simd, in
+/// registration order) — the figure drivers enumerate descriptors
+/// instead of hand-maintaining variant lists.
 ///
 /// The uniform `execute` entry clones the request's output buffer, so
 /// every row carries the same clone cost and the `vs[0]` column (the
@@ -266,12 +266,16 @@ pub fn write_json(path: &std::path::Path, doc: &Json) -> Result<()> {
 /// The bench-smoke rows as a stable JSON artifact
 /// (`ftblas.bench-smoke.v1`): one row per measured kernel variant, in
 /// print order, so the perf trajectory is machine-readable across PRs.
+/// Every document records the host's probed `cpu_features` so committed
+/// rows are comparable across machines.
 pub fn rows_json(exp: &str, profile: &str, quick: bool, rows: &[Row]) -> Json {
     Json::obj()
         .field("schema", Json::Str("ftblas.bench-smoke.v1".into()))
         .field("exp", Json::Str(exp.into()))
         .field("profile", Json::Str(profile.into()))
         .field("quick", Json::Bool(quick))
+        .field("cpu_features",
+               Json::Str(crate::blas::simd::CpuFeatures::summary().into()))
         .field("rows", Json::Arr(rows.iter().map(|r| {
             Json::obj()
                 .field("label", Json::Str(r.label.clone()))

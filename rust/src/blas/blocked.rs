@@ -19,6 +19,14 @@ use crate::blas::level3::{self, GemmParams};
 const SSE_LANES: usize = 2; // legacy 128-bit SSE2 = 2 doubles
 
 /// DSCAL without prefetch (otherwise the tuned chunked loop).
+///
+/// This is rung two of the four-rung serial ladder the registry
+/// reports through `serial_variants` — naive → **blocked** → tuned →
+/// simd — and its position is load-bearing: the bench figures and the
+/// committed perf trajectory read the ladder positionally (blocked at
+/// index 1, the paper's 3.85 % DSCAL gap measured against index 2).
+/// The ordering itself is pinned by the registry's
+/// `serial_ladder_order_is_deterministic` regression test.
 pub fn dscal(alpha: f64, x: &mut [f64]) {
     const STEP: usize = 8 * 4;
     let n = x.len();

@@ -8,6 +8,7 @@
 //! | [`naive`] | LAPACK reference    | textbook triple loops               |
 //! | [`blocked`]| OpenBLAS / BLIS    | cache-blocked, but with the exact under-optimizations the paper calls out (TRSV B=64, scalar TRSM diagonal solver, no prefetch in SCAL) |
 //! | [`level1`]/[`level2`]/[`level3`] | FT-BLAS "Ori" | the tuned kernels: chunked+unrolled L1, register-reuse GEMV (R_i=4), B=4 TRSV, packed GEMM with an unrolled micro kernel, reciprocal-diagonal TRSM |
+//! | [`simd`]  | FT-BLAS (AVX)       | explicit `std::arch` AVX2+FMA microkernels (8×4 GEBP dgemm, wide-lane L1) behind a runtime CPU probe; tuned-scalar fallback off-AVX2 |
 //!
 //! [`stepwise`] holds the Fig. 7 DSCAL optimization ladder (six steps,
 //! FT and non-FT at each step).
@@ -22,6 +23,7 @@ pub mod level2;
 pub mod level3;
 pub mod naive;
 pub mod parallel;
+pub mod simd;
 pub mod stepwise;
 
 /// Which implementation variant to dispatch to (coordinator backends and
@@ -35,11 +37,17 @@ pub enum Impl {
     Blocked,
     /// The tuned FT-BLAS kernels.
     Tuned,
+    /// The explicit AVX2+FMA microkernels of [`simd`], runtime-probed
+    /// with a tuned-scalar fallback — the top rung of the variant
+    /// ladder.
+    Simd,
 }
 
 impl Impl {
-    /// Every variant, in bench/report order.
-    pub const ALL: [Impl; 3] = [Impl::Naive, Impl::Blocked, Impl::Tuned];
+    /// Every variant, in bench/report (= ladder) order:
+    /// naive → blocked → tuned → simd.
+    pub const ALL: [Impl; 4] =
+        [Impl::Naive, Impl::Blocked, Impl::Tuned, Impl::Simd];
 
     /// CLI/report name of the variant.
     pub fn name(&self) -> &'static str {
@@ -47,6 +55,7 @@ impl Impl {
             Impl::Naive => "naive",
             Impl::Blocked => "blocked",
             Impl::Tuned => "tuned",
+            Impl::Simd => "simd",
         }
     }
 
@@ -58,6 +67,7 @@ impl Impl {
             "naive" => Some(Impl::Naive),
             "blocked" => Some(Impl::Blocked),
             "tuned" => Some(Impl::Tuned),
+            "simd" => Some(Impl::Simd),
             _ => None,
         }
     }

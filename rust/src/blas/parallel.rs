@@ -18,6 +18,7 @@
 //! `threads = 1` falls through to the serial kernels (no spawn, no copy).
 
 use crate::blas::level3::{self, GemmParams};
+use crate::blas::simd;
 use crate::ft::abft_fused::{self, Strike};
 use crate::ft::FtReport;
 
@@ -96,6 +97,87 @@ pub fn dgemm_abft_fused_mt(m: usize, n: usize, k: usize, alpha: f64,
             handles.push(s.spawn(move || {
                 abft_fused::dgemm_abft_fused(hi - lo, n, k, alpha, a_band, b,
                                              beta, band, params, &band_inject)
+            }));
+        }
+        for h in handles {
+            reports.push(h.join().expect("gemm band thread panicked"));
+        }
+    });
+    let mut total = FtReport::none();
+    for r in reports {
+        total.merge(r);
+    }
+    total
+}
+
+/// C := α·A·B + β·C across `threads` row bands, each band running the
+/// runtime-probed SIMD serial frame (AVX2+FMA where the one-time CPU
+/// probe allows, tuned-scalar otherwise). Bands are MR-aligned to the
+/// SIMD micro-tile height so no thread starts mid 8×4 tile.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_simd_mt(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                     b: &[f64], beta: f64, c: &mut [f64],
+                     params: &GemmParams, threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let mr = simd::MR;
+    if threads <= 1 || m < 2 * mr {
+        simd::dgemm(m, n, k, alpha, a, b, beta, c, params);
+        return;
+    }
+    let bands = row_bands(m, threads, mr);
+    std::thread::scope(|s| {
+        let mut rest = c;
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let a_band = &a[lo * k..hi * k];
+            s.spawn(move || {
+                simd::dgemm(hi - lo, n, k, alpha, a_band, b, beta, band,
+                            params);
+            });
+        }
+    });
+}
+
+/// Checksum-fused SIMD DGEMM across row bands: the same band-local FT
+/// state as [`dgemm_abft_fused_mt`], but each band runs the
+/// runtime-probed SIMD fused frame, so the dual accumulators stay
+/// in-register per thread. Strikes are re-homed to the band owning
+/// their row.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_abft_fused_simd_mt(m: usize, n: usize, k: usize, alpha: f64,
+                                a: &[f64], b: &[f64], beta: f64,
+                                c: &mut [f64], params: &GemmParams,
+                                threads: usize, inject: &[Strike])
+                                -> FtReport {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let mr = simd::MR;
+    if threads <= 1 || m < 2 * mr {
+        return simd::dgemm_abft_fused(m, n, k, alpha, a, b, beta, c,
+                                      params, inject);
+    }
+    let bands = row_bands(m, threads, mr);
+    let mut reports: Vec<FtReport> = Vec::new();
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut handles = Vec::new();
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * n);
+            rest = tail;
+            let a_band = &a[lo * k..hi * k];
+            // re-home strikes into band-local row coordinates
+            let band_inject: Vec<Strike> = inject
+                .iter()
+                .filter(|&&(_, i, _, _)| i >= lo && i < hi)
+                .map(|&(st, i, j, d)| (st, i - lo, j, d))
+                .collect();
+            handles.push(s.spawn(move || {
+                simd::dgemm_abft_fused(hi - lo, n, k, alpha, a_band, b,
+                                       beta, band, params, &band_inject)
             }));
         }
         for h in handles {
@@ -351,6 +433,85 @@ mod tests {
                        "t={threads}: serial fall-through dropped correction");
             assert!(allclose(&c, &want, 1e-8, 1e-8),
                     "t={threads}: fall-through result wrong");
+        }
+    }
+
+    #[test]
+    fn dgemm_simd_mt_matches_serial() {
+        check("mt-gemm-simd", 12, |g| {
+            let m = g.dim(1, 100);
+            let n = g.dim(1, 80);
+            let k = g.dim(1, 60);
+            let threads = 1 + g.rng.below(5);
+            let params = GemmParams::default();
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let mut want = c0.data.clone();
+            naive::dgemm(m, n, k, 0.7, &a.data, &b.data, -0.4, &mut want);
+            let mut c = c0.data.clone();
+            dgemm_simd_mt(m, n, k, 0.7, &a.data, &b.data, -0.4, &mut c,
+                          &params, threads);
+            ensure(allclose(&c, &want, 1e-9, 1e-9),
+                   format!("mt simd gemm wrong ({threads} threads)"))
+        });
+    }
+
+    #[test]
+    fn dgemm_abft_simd_mt_clean_and_injected() {
+        check("mt-gemm-simd-ft", 10, |g| {
+            let m = g.dim(16, 96);
+            let n = g.dim(8, 64);
+            let k = g.dim(8, 64);
+            let threads = 2 + g.rng.below(3);
+            let params = GemmParams { kc: 16, ..Default::default() };
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let mut want = vec![0.0; m * n];
+            naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused_simd_mt(m, n, k, 1.0, &a.data,
+                                               &b.data, 0.0, &mut c, &params,
+                                               threads, &[]);
+            ensure(rep == FtReport::none(), "clean simd mt flagged")?;
+            ensure(allclose(&c, &want, 1e-9, 1e-9), "clean simd mt wrong")?;
+            let steps = k.div_ceil(params.kc);
+            let strikes: Vec<Strike> = vec![
+                (g.rng.below(steps), g.rng.below(m), g.rng.below(n), 4e4),
+            ];
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused_simd_mt(m, n, k, 1.0, &a.data,
+                                               &b.data, 0.0, &mut c, &params,
+                                               threads, &strikes);
+            ensure(rep.errors_corrected == 1,
+                   format!("simd mt inject not corrected: {rep:?}"))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8), "simd mt inject wrong")
+        });
+    }
+
+    /// The SIMD MT entry's small-m fall-through must surface the serial
+    /// fused kernel's FtReport, exactly like the scalar MT entry.
+    #[test]
+    fn simd_fallthrough_preserves_ft_report() {
+        let mut rng = crate::util::rng::Rng::new(0x51);
+        let params = GemmParams { kc: 16, ..Default::default() };
+        let (m, n, k) = (simd::MR * 2 - 1, 24, 32); // below the band floor
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let mut want = vec![0.0; m * n];
+        naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+        for threads in [1usize, 4] {
+            let strikes: Vec<Strike> = vec![(0, m / 2, n / 3, 9e4)];
+            let mut c = vec![0.0; m * n];
+            let rep = dgemm_abft_fused_simd_mt(m, n, k, 1.0, &a.data,
+                                               &b.data, 0.0, &mut c, &params,
+                                               threads, &strikes);
+            assert_eq!(rep.errors_detected, 1,
+                       "t={threads}: simd fall-through dropped detection");
+            assert_eq!(rep.errors_corrected, 1,
+                       "t={threads}: simd fall-through dropped correction");
+            assert!(allclose(&c, &want, 1e-8, 1e-8),
+                    "t={threads}: simd fall-through result wrong");
         }
     }
 

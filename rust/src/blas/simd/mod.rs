@@ -1,0 +1,850 @@
+//! SIMD microkernel backend (paper §3.3, §4.4): explicit AVX2+FMA
+//! `std::arch` kernels behind a one-time runtime CPU-feature probe.
+//!
+//! The tuned kernels in [`crate::blas::level1`]/[`crate::blas::level3`]
+//! are written so LLVM *auto*-vectorizes them; this module is the layer
+//! the paper actually ships — hand-scheduled wide-lane loops:
+//!
+//! - Level-1 (`dscal`/`daxpy`/`ddot`/`dnrm2`): 256-bit lanes, 4-way
+//!   unrolled FMA chains, software prefetch a fixed distance ahead
+//!   (§4.4.4's `prefetcht0` placement).
+//! - Level-3 (`dgemm`): a GEBP macro kernel over packed A/B panels with
+//!   an 8×4 register-tiled microkernel — eight `__m256d` accumulators,
+//!   one broadcast-FMA per row per rank-1 update (§3.3.2's register
+//!   blocking, at AVX2 width).
+//! - Fused ABFT (`dgemm_abft_fused`): the §5.2 fusion on the AVX2
+//!   path. The packed panels are shared with the checksum pass (the
+//!   fused packing routines of [`crate::ft::abft_fused`] accumulate
+//!   `B·e` / `e^T·A` from the loads packing performs anyway), and the
+//!   `dC^c` checksum stream runs as one extra FMA accumulator over the
+//!   packed, cache-hot B̃ — dual accumulation in-register instead of a
+//!   second memory pass.
+//!
+//! Every public entry point consults [`CpuFeatures::get`] — a process-
+//! wide, once-only probe — and dispatches to the AVX2 path only when
+//! the running CPU reports both `avx2` and `fma`. Otherwise (including
+//! every non-x86_64 build, where the intrinsics are compiled out) the
+//! call falls through to the existing tuned scalar kernel, so results
+//! off-AVX2 are bit-identical to the tuned path and the registry can
+//! expose `Impl::Simd` unconditionally.
+
+use std::sync::OnceLock;
+
+use crate::blas::level3::GemmParams;
+use crate::ft::abft_fused::Strike;
+use crate::ft::FtReport;
+
+/// Register-tile rows of the AVX2 GEBP microkernel: eight `__m256d`
+/// accumulators, one per row. The MT row-band frames in
+/// [`crate::blas::parallel`] band on this so every band keeps full
+/// tiles.
+pub const MR: usize = 8;
+
+/// Register-tile columns of the microkernel: one 4-lane `__m256d` per
+/// row.
+pub const NR: usize = 4;
+
+/// Result of the one-time CPU feature probe gating the AVX2 kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuFeatures {
+    /// 256-bit SIMD (`vmulpd`/`vbroadcastsd` tier).
+    pub avx2: bool,
+    /// Fused multiply-add (`vfmadd231pd`).
+    pub fma: bool,
+}
+
+impl CpuFeatures {
+    /// Probe the running CPU. On non-x86_64 targets every feature reads
+    /// `false`, so the simd wrappers dispatch to the tuned scalar path.
+    pub fn detect() -> CpuFeatures {
+        #[cfg(target_arch = "x86_64")]
+        {
+            CpuFeatures {
+                avx2: std::arch::is_x86_feature_detected!("avx2"),
+                fma: std::arch::is_x86_feature_detected!("fma"),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            CpuFeatures { avx2: false, fma: false }
+        }
+    }
+
+    /// The cached probe result — detection runs once per process; every
+    /// kernel dispatch afterwards is a branch on two bools.
+    pub fn get() -> CpuFeatures {
+        static PROBE: OnceLock<CpuFeatures> = OnceLock::new();
+        *PROBE.get_or_init(CpuFeatures::detect)
+    }
+
+    /// Whether the AVX2+FMA microkernels can run on this CPU.
+    pub fn simd_ready(self) -> bool {
+        self.avx2 && self.fma
+    }
+
+    /// Stable feature string for ledgers and bench rows. Committed
+    /// `BENCH_*.json` rows are compared across machines, so every
+    /// report records what the probe saw when the rows were produced.
+    pub fn summary() -> &'static str {
+        let f = CpuFeatures::get();
+        match (cfg!(target_arch = "x86_64"), f.avx2, f.fma) {
+            (true, true, true) => "x86_64+avx2+fma",
+            (true, true, false) => "x86_64+avx2",
+            (true, false, _) => "x86_64",
+            (false, ..) => "scalar",
+        }
+    }
+}
+
+/// x := α·x — AVX2 wide-lane loop with software prefetch; tuned scalar
+/// fallback off-AVX2.
+pub fn dscal(alpha: f64, x: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        unsafe { avx2::dscal(alpha, x) };
+        return;
+    }
+    crate::blas::level1::dscal(alpha, x);
+}
+
+/// y := α·x + y — AVX2 FMA loop; tuned scalar fallback off-AVX2.
+pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        unsafe { avx2::daxpy(alpha, x, y) };
+        return;
+    }
+    crate::blas::level1::daxpy(alpha, x, y);
+}
+
+/// dot(x, y) — four independent AVX2 FMA chains (VFMA latency hiding),
+/// folded once; tuned scalar fallback off-AVX2.
+pub fn ddot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        return unsafe { avx2::ddot(x, y) };
+    }
+    crate::blas::level1::ddot(x, y)
+}
+
+/// ‖x‖₂ — AVX2 sum-of-squares with the same overflow/underflow guard as
+/// the tuned kernel (degrade to the scaled naive path when the plain
+/// sum of squares is not representable); tuned scalar fallback
+/// off-AVX2.
+pub fn dnrm2(x: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        let ssq = unsafe { avx2::dsumsq(x) };
+        return if ssq.is_finite() && ssq > f64::MIN_POSITIVE {
+            ssq.sqrt()
+        } else {
+            crate::blas::naive::dnrm2(x)
+        };
+    }
+    crate::blas::level1::dnrm2(x)
+}
+
+/// C := α·A·B + β·C — GEBP over packed panels with the 8×4 AVX2
+/// microkernel. Blocking sizes (`mc`/`nc`/`kc`) come from `params`; the
+/// register tile is fixed at [`MR`]×[`NR`]. Falls back to the tuned
+/// scalar [`crate::blas::level3::dgemm`] off-AVX2.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm(m: usize, n: usize, k: usize, alpha: f64, a: &[f64], b: &[f64],
+             beta: f64, c: &mut [f64], params: &GemmParams) {
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        unsafe { avx2::dgemm(m, n, k, alpha, a, b, beta, c, params) };
+        return;
+    }
+    crate::blas::level3::dgemm(m, n, k, alpha, a, b, beta, c, params);
+}
+
+/// C := α·A·B + β·C with fused online ABFT on the AVX2 path (paper
+/// §5.2; FT-GEMM's dual-accumulation refinement): panels are packed
+/// once by the fused packing routines (checksums accumulate from the
+/// packed loads), the 8×4 microkernel computes the tile, and the `dC^c`
+/// stream is one extra in-register FMA accumulator over the packed B̃.
+/// Off-AVX2 the call falls through to the tuned scalar fused kernel
+/// with identical detection/correction semantics.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                        b: &[f64], beta: f64, c: &mut [f64],
+                        params: &GemmParams, inject: &[Strike]) -> FtReport {
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        return unsafe {
+            avx2::dgemm_abft_fused(m, n, k, alpha, a, b, beta, c, params,
+                                   inject)
+        };
+    }
+    crate::ft::abft_fused::dgemm_abft_fused(m, n, k, alpha, a, b, beta, c,
+                                            params, inject)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The `#[target_feature]` kernel bodies. Everything here is
+    //! `unsafe fn`: callers must have verified `avx2` and `fma` via
+    //! [`super::CpuFeatures`] before entering.
+
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_castpd256_pd128, _mm256_extractf128_pd,
+        _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd, _mm_add_pd, _mm_add_sd,
+        _mm_cvtsd_f64, _mm_prefetch, _mm_unpackhi_pd, _MM_HINT_T0, __m256d,
+    };
+
+    use super::{MR, NR};
+    use crate::blas::level3::GemmParams;
+    use crate::ft::abft;
+    use crate::ft::abft_fused::{self, Strike};
+    use crate::ft::FtReport;
+
+    /// f64 lanes per `__m256d`.
+    const LANES: usize = 4;
+    /// Independent FMA chains in the Level-1 loops (paper: 4).
+    const UNROLL: usize = 4;
+    const STEP: usize = LANES * UNROLL;
+    /// Prefetch distance in elements — the tuned scalar kernels' 1 KiB
+    /// look-ahead (`wrapping_add` keeps out-of-range hint addresses
+    /// defined; the hint itself never faults).
+    const PREFETCH_DIST: usize = 128;
+
+    #[inline(always)]
+    unsafe fn prefetch(p: *const f64) {
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+
+    /// x := α·x.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dscal(alpha: f64, x: &mut [f64]) {
+        let n = x.len();
+        let p = x.as_mut_ptr();
+        let va = _mm256_set1_pd(alpha);
+        let mut i = 0;
+        while i + STEP <= n {
+            prefetch(p.wrapping_add(i + PREFETCH_DIST) as *const f64);
+            let mut u = 0;
+            while u < UNROLL {
+                let q = p.add(i + u * LANES);
+                _mm256_storeu_pd(q, _mm256_mul_pd(va, _mm256_loadu_pd(q)));
+                u += 1;
+            }
+            i += STEP;
+        }
+        while i < n {
+            *p.add(i) *= alpha;
+            i += 1;
+        }
+    }
+
+    /// y := α·x + y (equal lengths, asserted by the safe wrapper).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let va = _mm256_set1_pd(alpha);
+        let mut i = 0;
+        while i + STEP <= n {
+            prefetch(xp.wrapping_add(i + PREFETCH_DIST));
+            prefetch(yp.wrapping_add(i + PREFETCH_DIST) as *const f64);
+            let mut u = 0;
+            while u < UNROLL {
+                let q = yp.add(i + u * LANES);
+                let r = _mm256_fmadd_pd(
+                    va, _mm256_loadu_pd(xp.add(i + u * LANES)),
+                    _mm256_loadu_pd(q));
+                _mm256_storeu_pd(q, r);
+                u += 1;
+            }
+            i += STEP;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    /// Horizontal sum of one ymm: lo128 + hi128, then the two lanes.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let s = _mm_add_pd(lo, hi);
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    /// dot(x, y) with four independent FMA accumulator chains.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn ddot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + STEP <= n {
+            prefetch(xp.wrapping_add(i + PREFETCH_DIST));
+            prefetch(yp.wrapping_add(i + PREFETCH_DIST));
+            a0 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i)),
+                                 _mm256_loadu_pd(yp.add(i)), a0);
+            a1 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i + LANES)),
+                                 _mm256_loadu_pd(yp.add(i + LANES)), a1);
+            a2 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i + 2 * LANES)),
+                                 _mm256_loadu_pd(yp.add(i + 2 * LANES)), a2);
+            a3 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i + 3 * LANES)),
+                                 _mm256_loadu_pd(yp.add(i + 3 * LANES)), a3);
+            i += STEP;
+        }
+        let mut sum = hsum(_mm256_add_pd(_mm256_add_pd(a0, a1),
+                                         _mm256_add_pd(a2, a3)));
+        while i < n {
+            sum += *xp.add(i) * *yp.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// Σ xᵢ² with four independent FMA accumulator chains (the dnrm2
+    /// core; the overflow guard lives in the safe wrapper).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dsumsq(x: &[f64]) -> f64 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + STEP <= n {
+            prefetch(xp.wrapping_add(i + PREFETCH_DIST));
+            let v0 = _mm256_loadu_pd(xp.add(i));
+            let v1 = _mm256_loadu_pd(xp.add(i + LANES));
+            let v2 = _mm256_loadu_pd(xp.add(i + 2 * LANES));
+            let v3 = _mm256_loadu_pd(xp.add(i + 3 * LANES));
+            a0 = _mm256_fmadd_pd(v0, v0, a0);
+            a1 = _mm256_fmadd_pd(v1, v1, a1);
+            a2 = _mm256_fmadd_pd(v2, v2, a2);
+            a3 = _mm256_fmadd_pd(v3, v3, a3);
+            i += STEP;
+        }
+        let mut ssq = hsum(_mm256_add_pd(_mm256_add_pd(a0, a1),
+                                         _mm256_add_pd(a2, a3)));
+        while i < n {
+            let v = *xp.add(i);
+            ssq += v * v;
+            i += 1;
+        }
+        ssq
+    }
+
+    /// Pack an (mcb × kcb) block of A into MR-row micro panels,
+    /// zero-padded to full tiles (so the microkernel never branches on
+    /// edge rows).
+    fn pack_a(a: &[f64], lda: usize, i0: usize, p0: usize, mcb: usize,
+              kcb: usize, out: &mut [f64]) {
+        let mut w = 0;
+        let mut i = 0;
+        while i < mcb {
+            let rows = MR.min(mcb - i);
+            for p in 0..kcb {
+                for r in 0..rows {
+                    out[w] = a[(i0 + i + r) * lda + p0 + p];
+                    w += 1;
+                }
+                for _ in rows..MR {
+                    out[w] = 0.0;
+                    w += 1;
+                }
+            }
+            i += MR;
+        }
+    }
+
+    /// Pack a (kcb × ncb) block of B into NR-col micro panels,
+    /// zero-padded to full tiles.
+    fn pack_b(b: &[f64], ldb: usize, p0: usize, j0: usize, kcb: usize,
+              ncb: usize, out: &mut [f64]) {
+        let mut w = 0;
+        let mut j = 0;
+        while j < ncb {
+            let cols = NR.min(ncb - j);
+            for p in 0..kcb {
+                for cdx in 0..cols {
+                    out[w] = b[(p0 + p) * ldb + j0 + j + cdx];
+                    w += 1;
+                }
+                for _ in cols..NR {
+                    out[w] = 0.0;
+                    w += 1;
+                }
+            }
+            j += NR;
+        }
+    }
+
+    /// The 8×4 register-tiled microkernel: eight `__m256d` accumulators
+    /// (one row each); per rank-1 update, one packed-B row load and
+    /// eight broadcast-FMAs. Writes the raw A·B tile (no α) to `acc`.
+    ///
+    /// # Safety
+    /// `ap`/`bp` must point at `kc` full MR-row / NR-col packed panels;
+    /// requires avx2+fma.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn kernel_8x4(kc: usize, ap: *const f64, bp: *const f64,
+                         acc: &mut [f64; MR * NR]) {
+        let mut c0 = _mm256_setzero_pd();
+        let mut c1 = _mm256_setzero_pd();
+        let mut c2 = _mm256_setzero_pd();
+        let mut c3 = _mm256_setzero_pd();
+        let mut c4 = _mm256_setzero_pd();
+        let mut c5 = _mm256_setzero_pd();
+        let mut c6 = _mm256_setzero_pd();
+        let mut c7 = _mm256_setzero_pd();
+        let mut p = 0;
+        while p < kc {
+            // stay ~8 rank-1 updates ahead of the FMA stream
+            prefetch(ap.wrapping_add((p + 8) * MR));
+            prefetch(bp.wrapping_add((p + 8) * NR));
+            let bv = _mm256_loadu_pd(bp.add(p * NR));
+            let ar = ap.add(p * MR);
+            c0 = _mm256_fmadd_pd(_mm256_set1_pd(*ar), bv, c0);
+            c1 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(1)), bv, c1);
+            c2 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(2)), bv, c2);
+            c3 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(3)), bv, c3);
+            c4 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(4)), bv, c4);
+            c5 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(5)), bv, c5);
+            c6 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(6)), bv, c6);
+            c7 = _mm256_fmadd_pd(_mm256_set1_pd(*ar.add(7)), bv, c7);
+            p += 1;
+        }
+        let out = acc.as_mut_ptr();
+        _mm256_storeu_pd(out, c0);
+        _mm256_storeu_pd(out.add(NR), c1);
+        _mm256_storeu_pd(out.add(2 * NR), c2);
+        _mm256_storeu_pd(out.add(3 * NR), c3);
+        _mm256_storeu_pd(out.add(4 * NR), c4);
+        _mm256_storeu_pd(out.add(5 * NR), c5);
+        _mm256_storeu_pd(out.add(6 * NR), c6);
+        _mm256_storeu_pd(out.add(7 * NR), c7);
+    }
+
+    /// Serial GEBP DGEMM: C := α·A·B + β·C.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dgemm(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                        b: &[f64], beta: f64, c: &mut [f64],
+                        params: &GemmParams) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        // β pass first so the macro kernel accumulates with a pure +=
+        if beta == 0.0 {
+            c.fill(0.0);
+        } else if beta != 1.0 {
+            dscal(beta, c);
+        }
+        if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+            return;
+        }
+        let &GemmParams { mc, nc, kc, .. } = params;
+        let mut apack = vec![0.0; mc.div_ceil(MR) * MR * kc];
+        let mut bpack = vec![0.0; nc.div_ceil(NR) * NR * kc];
+        let mut acc = [0.0f64; MR * NR];
+        let mut j0 = 0;
+        while j0 < n {
+            let ncb = nc.min(n - j0);
+            let mut p0 = 0;
+            while p0 < k {
+                let kcb = kc.min(k - p0);
+                pack_b(b, n, p0, j0, kcb, ncb, &mut bpack);
+                let mut i0 = 0;
+                while i0 < m {
+                    let mcb = mc.min(m - i0);
+                    pack_a(a, k, i0, p0, mcb, kcb, &mut apack);
+                    let mut jj = 0;
+                    while jj < ncb {
+                        let nrb = NR.min(ncb - jj);
+                        let bp = bpack[(jj / NR) * (NR * kcb)..].as_ptr();
+                        let mut ii = 0;
+                        while ii < mcb {
+                            let mrb = MR.min(mcb - ii);
+                            let ap =
+                                apack[(ii / MR) * (MR * kcb)..].as_ptr();
+                            kernel_8x4(kcb, ap, bp, &mut acc);
+                            for r in 0..mrb {
+                                let crow = &mut c[(i0 + ii + r) * n + j0
+                                    + jj..][..nrb];
+                                let arow = &acc[r * NR..r * NR + nrb];
+                                for (cv, av) in crow.iter_mut().zip(arow) {
+                                    *cv += alpha * av;
+                                }
+                            }
+                            ii += MR;
+                        }
+                        jj += NR;
+                    }
+                    i0 += mc;
+                }
+                p0 += kc;
+            }
+            j0 += nc;
+        }
+    }
+
+    /// The fused `dC^c` checksum stream for one NR-tile of packed B̃:
+    /// `dst[c] += Σ_p (α·eta[p]) · B̃[p][c]` — a single extra FMA
+    /// accumulator register riding the cache-hot packed panel (the "one
+    /// extra FMA stream" the §5.2 fusion costs).
+    ///
+    /// # Safety
+    /// `bp` must point at `kcb` packed NR-col rows; requires avx2+fma.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dcc_tile(kcb: usize, alpha: f64, eta: &[f64], bp: *const f64,
+                       dst: &mut [f64]) {
+        if dst.len() == NR {
+            let mut acc = _mm256_setzero_pd();
+            for (p, e) in eta.iter().enumerate().take(kcb) {
+                acc = _mm256_fmadd_pd(_mm256_set1_pd(alpha * e),
+                                      _mm256_loadu_pd(bp.add(p * NR)), acc);
+            }
+            let mut out = [0.0f64; NR];
+            _mm256_storeu_pd(out.as_mut_ptr(), acc);
+            for (d, v) in dst.iter_mut().zip(out) {
+                *d += v;
+            }
+        } else {
+            for (p, e) in eta.iter().enumerate().take(kcb) {
+                let ep = alpha * e;
+                for (cdx, d) in dst.iter_mut().enumerate() {
+                    *d += ep * *bp.add(p * NR + cdx);
+                }
+            }
+        }
+    }
+
+    /// C := α·A·B + β·C with fused online ABFT — the scalar
+    /// [`abft_fused::dgemm_abft_fused`] orchestration (same fused
+    /// packing, same verification intervals, same injection model) with
+    /// the 8×4 AVX2 microkernel and the in-register `dC^c` stream.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64,
+                                   a: &[f64], b: &[f64], beta: f64,
+                                   c: &mut [f64], params: &GemmParams,
+                                   inject: &[Strike]) -> FtReport {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let mut report = FtReport::none();
+        if m == 0 || n == 0 {
+            return report;
+        }
+        let &GemmParams { mc, nc, kc, .. } = params;
+
+        // fused β-scaling + checksum seeding, exactly as the scalar
+        // fused kernel (each C element is read once anyway)
+        let mut cr_enc = vec![0.0; m];
+        let mut cc_enc = vec![0.0; n];
+        for i in 0..m {
+            let row = &mut c[i * n..(i + 1) * n];
+            let mut rsum = 0.0;
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= beta;
+                rsum += *v;
+                cc_enc[j] += *v;
+            }
+            cr_enc[i] = rsum;
+        }
+        let mut cr_ref = cr_enc.clone();
+        let mut cc_ref = cc_enc.clone();
+
+        if k == 0 || alpha == 0.0 {
+            return report;
+        }
+
+        let mut apack = vec![0.0; mc.div_ceil(MR) * MR * kc];
+        let mut bpack = vec![0.0; nc.div_ceil(NR) * NR * kc];
+        let mut acc = [0.0f64; MR * NR];
+        let mut be = vec![0.0; kc];
+        let mut eta = vec![0.0; kc];
+        let mut crenc_loc = vec![0.0; mc];
+        let mut crref_loc = vec![0.0; mc];
+        let mut ccenc_loc = vec![0.0; nc];
+        let mut ccref_loc = vec![0.0; nc];
+        let (mut max_a, mut max_b) = (0.0f64, 0.0f64);
+        let mut corrected_tol = 0.0f64;
+
+        // rank-k loop outermost: each K_C step is one verification
+        // interval (one correction per interval, paper §2.1)
+        let mut p0 = 0;
+        let mut step = 0;
+        while p0 < k {
+            let kcb = kc.min(k - p0);
+            let mut j0 = 0;
+            while j0 < n {
+                let ncb = nc.min(n - j0);
+                be[..kcb].fill(0.0);
+                abft_fused::pack_b_fused(b, n, p0, j0, kcb, ncb, NR,
+                                         &mut bpack, &mut be[..kcb]);
+                max_b = max_b.max(abft_fused::max_abs(
+                    &bpack[..ncb.div_ceil(NR) * NR * kcb]));
+                let mut i0 = 0;
+                while i0 < m {
+                    let mcb = mc.min(m - i0);
+                    eta[..kcb].fill(0.0);
+                    crenc_loc[..mcb].fill(0.0);
+                    crref_loc[..mcb].fill(0.0);
+                    ccenc_loc[..ncb].fill(0.0);
+                    ccref_loc[..ncb].fill(0.0);
+                    abft_fused::pack_a_fused(a, k, i0, p0, mcb, kcb, MR,
+                                             alpha, &be[..kcb], &mut apack,
+                                             &mut crenc_loc, &mut eta[..kcb]);
+                    if j0 == 0 {
+                        max_a = max_a.max(abft_fused::max_abs(
+                            &apack[..mcb.div_ceil(MR) * MR * kcb]));
+                    }
+                    // dC^c of this block pair: (e^T A_block) · B̃, one
+                    // FMA accumulator per NR-tile of the packed panel
+                    {
+                        let mut jj = 0;
+                        while jj < ncb {
+                            let cols = NR.min(ncb - jj);
+                            let bp =
+                                bpack[(jj / NR) * (NR * kcb)..].as_ptr();
+                            dcc_tile(kcb, alpha, &eta, bp,
+                                     &mut ccenc_loc[jj..jj + cols]);
+                            jj += NR;
+                        }
+                    }
+                    // macro kernel with fused reference-checksum update
+                    let mut jj = 0;
+                    while jj < ncb {
+                        let nrb = NR.min(ncb - jj);
+                        let bp = bpack[(jj / NR) * (NR * kcb)..].as_ptr();
+                        let mut ii = 0;
+                        while ii < mcb {
+                            let mrb = MR.min(mcb - ii);
+                            let ap =
+                                apack[(ii / MR) * (MR * kcb)..].as_ptr();
+                            kernel_8x4(kcb, ap, bp, &mut acc);
+                            // transient-fault injection: corrupt the
+                            // computed tile value before anything
+                            // consumes it (same model as the scalar
+                            // fused kernel)
+                            for &(s, fi, fj, delta) in inject {
+                                if s == step
+                                    && fi >= i0 + ii && fi < i0 + ii + mrb
+                                    && fj >= j0 + jj && fj < j0 + jj + nrb
+                                {
+                                    acc[(fi - i0 - ii) * NR
+                                        + (fj - j0 - jj)] += delta / alpha;
+                                }
+                            }
+                            // write-back reuses the register tile for
+                            // the reference checksums
+                            for r in 0..mrb {
+                                let gi = i0 + ii + r;
+                                let crow = &mut c[gi * n + j0 + jj..][..nrb];
+                                let arow = &acc[r * NR..r * NR + nrb];
+                                let ccref = &mut ccref_loc[jj..jj + nrb];
+                                let mut drow = [0.0f64; NR];
+                                let drow = &mut drow[..nrb];
+                                for (dv, av) in drow.iter_mut().zip(arow) {
+                                    *dv = alpha * av;
+                                }
+                                for (cv, dv) in
+                                    crow.iter_mut().zip(drow.iter())
+                                {
+                                    *cv += dv;
+                                }
+                                for (cc, dv) in
+                                    ccref.iter_mut().zip(drow.iter())
+                                {
+                                    *cc += dv;
+                                }
+                                crref_loc[ii + r] +=
+                                    drow.iter().sum::<f64>();
+                            }
+                            ii += MR;
+                        }
+                        jj += NR;
+                    }
+                    // flush the block-local checksum accumulators
+                    for (g, l) in cr_enc[i0..i0 + mcb].iter_mut()
+                        .zip(&crenc_loc[..mcb])
+                    {
+                        *g += l;
+                    }
+                    for (g, l) in cr_ref[i0..i0 + mcb].iter_mut()
+                        .zip(&crref_loc[..mcb])
+                    {
+                        *g += l;
+                    }
+                    for (g, l) in cc_enc[j0..j0 + ncb].iter_mut()
+                        .zip(&ccenc_loc[..ncb])
+                    {
+                        *g += l;
+                    }
+                    for (g, l) in cc_ref[j0..j0 + ncb].iter_mut()
+                        .zip(&ccref_loc[..ncb])
+                    {
+                        *g += l;
+                    }
+                    i0 += mc;
+                }
+                j0 += nc;
+            }
+            // end of verification interval: O(m+n) compare / locate /
+            // correct
+            let tol = abft::round_off_threshold(
+                alpha.abs().max(1.0) * max_a * max_b, k, n.max(m))
+                + corrected_tol;
+            if let Some(err) = abft_fused::verify_refs(&cr_enc, &cc_enc,
+                                                       &cr_ref, &cc_ref, tol)
+            {
+                c[err.i * n + err.j] -= err.magnitude;
+                cr_ref[err.i] -= err.magnitude;
+                cc_ref[err.j] -= err.magnitude;
+                corrected_tol += err.magnitude.abs() * f64::EPSILON * 64.0;
+                report.errors_detected += 1;
+                report.errors_corrected += 1;
+            }
+            p0 += kc;
+            step += 1;
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::check::{check, ensure, ensure_close};
+    use crate::util::matrix::{allclose, Matrix};
+
+    #[test]
+    fn probe_is_cached_and_summarized() {
+        let a = CpuFeatures::get();
+        let b = CpuFeatures::get();
+        assert_eq!(a, b, "probe must be stable across calls");
+        assert_eq!(a, CpuFeatures::detect());
+        let s = CpuFeatures::summary();
+        assert!(!s.is_empty());
+        if !cfg!(target_arch = "x86_64") {
+            assert_eq!(s, "scalar");
+            assert!(!a.simd_ready());
+        }
+    }
+
+    #[test]
+    fn level1_kernels_match_naive() {
+        check("simd-level1", 40, |g| {
+            let n = g.dim(1, 300);
+            let alpha = g.rng.range(-2.0, 2.0);
+            let x = g.rng.normal_vec(n);
+            let y = g.rng.normal_vec(n);
+            let mut xs = x.clone();
+            let mut xn = x.clone();
+            dscal(alpha, &mut xs);
+            naive::dscal(alpha, &mut xn);
+            ensure(xs == xn, "simd dscal != naive")?;
+            let mut ys = y.clone();
+            let mut yn = y.clone();
+            daxpy(alpha, &x, &mut ys);
+            naive::daxpy(alpha, &x, &mut yn);
+            ensure(allclose(&ys, &yn, 1e-13, 1e-13), "simd daxpy drifted")?;
+            ensure_close(ddot(&x, &y), naive::ddot(&x, &y), 1e-12,
+                         "simd ddot")?;
+            ensure_close(dnrm2(&x), naive::dnrm2(&x), 1e-12, "simd dnrm2")
+        });
+    }
+
+    #[test]
+    fn dnrm2_overflow_falls_back() {
+        let x = vec![1e300; 18];
+        let expect = 1e300 * (18.0f64).sqrt();
+        assert!((dnrm2(&x) - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn dgemm_matches_naive_odd_shapes() {
+        check("simd-dgemm", 20, |g| {
+            let m = g.dim(1, 40);
+            let n = g.dim(1, 40);
+            let k = g.dim(1, 40);
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let (alpha, beta) =
+                (g.rng.range(-2.0, 2.0), g.rng.range(-1.0, 1.0));
+            let mut want = c0.data.clone();
+            naive::dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut want);
+            let mut got = c0.data.clone();
+            dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut got,
+                  &GemmParams::default());
+            ensure(allclose(&got, &want, 1e-10, 1e-10), "simd dgemm wrong")
+        });
+    }
+
+    #[test]
+    fn fused_dgemm_clean_and_injected() {
+        check("simd-fused", 20, |g| {
+            let m = g.dim(4, 40);
+            let n = g.dim(4, 40);
+            let k = g.dim(4, 48);
+            let params = GemmParams { kc: 8, ..Default::default() };
+            let a = Matrix::random(m, k, &mut g.rng);
+            let b = Matrix::random(k, n, &mut g.rng);
+            let c0 = Matrix::random(m, n, &mut g.rng);
+            let alpha = g.rng.range(0.5, 2.0);
+            let beta = g.rng.range(-1.0, 1.0);
+            let mut want = c0.data.clone();
+            naive::dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut want);
+            let mut c = c0.data.clone();
+            let rep = dgemm_abft_fused(m, n, k, alpha, &a.data, &b.data,
+                                       beta, &mut c, &params, &[]);
+            ensure(rep == FtReport::none(), "clean simd-fused flagged")?;
+            ensure(allclose(&c, &want, 1e-9, 1e-9), "clean value wrong")?;
+            let steps = k.div_ceil(params.kc);
+            let strike = (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                          g.rng.range(1e2, 1e5));
+            let mut c = c0.data.clone();
+            let rep = dgemm_abft_fused(m, n, k, alpha, &a.data, &b.data,
+                                       beta, &mut c, &params, &[strike]);
+            ensure(rep.errors_detected == 1 && rep.errors_corrected == 1,
+                   format!("simd-fused report {rep:?}"))?;
+            ensure(allclose(&c, &want, 1e-8, 1e-8), "strike not corrected")
+        });
+    }
+}

@@ -154,6 +154,11 @@ pub struct MetricsSnapshot {
     /// `"per-call"` (a planned [`crate::ft::injector::Injector`]), or
     /// `""` (no injection). Merges keep the first non-empty label.
     pub injection_mode: &'static str,
+    /// CPU feature set the one-time SIMD probe detected on the host
+    /// that produced this snapshot (e.g. `"x86_64+avx2+fma"`,
+    /// `"scalar"`), so committed ledgers and bench rows are comparable
+    /// across machines. Merges keep the first non-empty label.
+    pub cpu_features: &'static str,
     /// Admission-time plan-cache counters (filled by the server, or by
     /// the cluster for its shared cache).
     pub plan_cache_hits: u64,
@@ -313,6 +318,7 @@ impl Metrics {
             errors_detected: m.errors_detected,
             errors_corrected: m.errors_corrected,
             errors_escaped: m.errors_escaped,
+            cpu_features: crate::blas::simd::CpuFeatures::summary(),
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             deferrals: m.deferrals,
@@ -422,6 +428,7 @@ impl MetricsSnapshot {
             .field("failed", Json::Int(self.failed))
             .field("shed", Json::Int(self.shed))
             .field("injection_mode", Json::Str(self.injection_mode.into()))
+            .field("cpu_features", Json::Str(self.cpu_features.into()))
             .field("errors", Json::obj()
                 .field("injected", Json::Int(self.errors_injected))
                 .field("detected", Json::Int(self.errors_detected))
@@ -468,6 +475,9 @@ impl MetricsSnapshot {
             out.errors_escaped += p.errors_escaped;
             if out.injection_mode.is_empty() {
                 out.injection_mode = p.injection_mode;
+            }
+            if out.cpu_features.is_empty() {
+                out.cpu_features = p.cpu_features;
             }
             out.plan_cache_hits += p.plan_cache_hits;
             out.plan_cache_misses += p.plan_cache_misses;

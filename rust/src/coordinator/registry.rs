@@ -10,7 +10,8 @@
 //! instead of hand-maintaining per-routine × per-variant match arms.
 
 use crate::blas::level3::GemmParams;
-use crate::blas::{blocked, level1, level2, level3, naive, parallel, Impl};
+use crate::blas::{blocked, level1, level2, level3, naive, parallel, simd,
+                  Impl};
 use crate::config::Profile;
 use crate::coordinator::request::{
     Backend, BlasRequest, BlasResult, Level,
@@ -171,7 +172,8 @@ impl KernelRegistry {
     }
 
     /// The serial unprotected variant ladder for one routine
-    /// (naive → blocked → tuned), as the bench figures enumerate it.
+    /// (naive → blocked → tuned → simd where a SIMD rung is
+    /// registered), as the bench figures enumerate it.
     pub fn serial_variants(&self, routine: &str)
                            -> Vec<&'static KernelDescriptor> {
         self.entries
@@ -283,6 +285,51 @@ const fn threaded(name: &'static str, routine: &'static str, scheme: Scheme,
     }
 }
 
+/// Protected kernel built on the SIMD substrate: same shape as
+/// [`protected`] but registering as [`Impl::Simd`] so planner variant
+/// selection and `--variant simd` route to it.
+const fn protected_simd(name: &'static str, routine: &'static str,
+                        scheme: Scheme, policies: &'static [FtPolicy],
+                        summary: &'static str, execute: KernelFn)
+                        -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine,
+        level: Level::L3,
+        variant: Impl::Simd,
+        backend: Backend::NativeSimd,
+        scheme,
+        policies,
+        threaded: false,
+        min_mr_multiple: 0,
+        summary,
+        execute,
+    }
+}
+
+/// Threaded kernel on the SIMD substrate — [`threaded`]'s counterpart
+/// for [`Impl::Simd`]. The SIMD MT frames band on the 8-row SIMD
+/// micro-tile and fall through to the serial SIMD kernel below the
+/// floor, so the same two-band minimum applies.
+const fn threaded_simd(name: &'static str, routine: &'static str,
+                       scheme: Scheme, policies: &'static [FtPolicy],
+                       summary: &'static str, execute: KernelFn)
+                       -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine,
+        level: Level::L3,
+        variant: Impl::Simd,
+        backend: Backend::NativeSimd,
+        scheme,
+        policies,
+        threaded: true,
+        min_mr_multiple: 2,
+        summary,
+        execute,
+    }
+}
+
 // ------------------------------------------------------- Level 1 kernels
 
 fn dscal_with(c: &ExecCtx, k: fn(f64, &mut [f64])) -> KernelOut {
@@ -315,6 +362,10 @@ fn dscal_dmr(c: &ExecCtx) -> KernelOut {
     (BlasResult::Vector(x), ft)
 }
 
+fn dscal_simd(c: &ExecCtx) -> KernelOut {
+    dscal_with(c, simd::dscal)
+}
+
 fn daxpy_with(c: &ExecCtx, k: fn(f64, &[f64], &mut [f64])) -> KernelOut {
     let BlasRequest::Daxpy { alpha, x, y } = c.req else {
         unreachable!("daxpy kernel planned for {}", c.req.routine())
@@ -343,6 +394,10 @@ fn daxpy_dmr(c: &ExecCtx) -> KernelOut {
     let mut y = y.clone();
     let ft = dmr::daxpy_ft(*alpha, x, &mut y, c.inj_elem());
     (BlasResult::Vector(y), ft)
+}
+
+fn daxpy_simd(c: &ExecCtx) -> KernelOut {
+    daxpy_with(c, simd::daxpy)
 }
 
 /// Reduction DMR injects per chunk: clamp the strike to the chunk range.
@@ -377,6 +432,10 @@ fn ddot_dmr(c: &ExecCtx) -> KernelOut {
     (BlasResult::Scalar(d), ft)
 }
 
+fn ddot_simd(c: &ExecCtx) -> KernelOut {
+    ddot_with(c, simd::ddot)
+}
+
 fn dnrm2_with(c: &ExecCtx, k: fn(&[f64]) -> f64) -> KernelOut {
     let BlasRequest::Dnrm2 { x } = c.req else {
         unreachable!("dnrm2 kernel planned for {}", c.req.routine())
@@ -402,6 +461,10 @@ fn dnrm2_dmr(c: &ExecCtx) -> KernelOut {
     };
     let (d, ft) = dmr::dnrm2_ft(x, chunk_inj(c, x.len()));
     (BlasResult::Scalar(d), ft)
+}
+
+fn dnrm2_simd(c: &ExecCtx) -> KernelOut {
+    dnrm2_with(c, simd::dnrm2)
 }
 
 fn dasum_with(c: &ExecCtx, k: fn(&[f64]) -> f64) -> KernelOut {
@@ -755,6 +818,55 @@ fn dgemm_fused_mt(c: &ExecCtx) -> KernelOut {
     let ft = parallel::dgemm_abft_fused_mt(m, n, kk, *alpha, &a.data, &b.data,
                                            *beta, &mut cd, params, c.threads,
                                            &inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dgemm_simd(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let mut cd = c0.data.clone();
+    simd::dgemm(m, n, kk, *alpha, &a.data, &b.data, *beta, &mut cd,
+                &c.profile.gemm);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dgemm_simd_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let mut cd = c0.data.clone();
+    parallel::dgemm_simd_mt(m, n, kk, *alpha, &a.data, &b.data, *beta,
+                            &mut cd, &c.profile.gemm, c.threads);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+}
+
+fn dgemm_fused_simd(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    let mut cd = c0.data.clone();
+    let ft = simd::dgemm_abft_fused(m, n, kk, *alpha, &a.data, &b.data,
+                                    *beta, &mut cd, params, &inj);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+fn dgemm_fused_simd_mt(c: &ExecCtx) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    let mut cd = c0.data.clone();
+    let ft = parallel::dgemm_abft_fused_simd_mt(m, n, kk, *alpha, &a.data,
+                                                &b.data, *beta, &mut cd,
+                                                params, c.threads, &inj);
     (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
 }
 
@@ -1207,9 +1319,9 @@ fn dtrsm_ft_native(m: usize, n: usize, a: &[f64], b: &mut [f64], panel: usize,
 // ---------------------------------------------------------------- table
 
 /// The full native kernel table. Registration order matters twice:
-/// `serial_variants` reports the naive → blocked → tuned ladder in this
-/// order, and the planner's any-variant fallback takes the first
-/// supporting entry.
+/// `serial_variants` reports the naive → blocked → tuned → simd ladder
+/// in this order, and the planner's any-variant fallback takes the
+/// first supporting entry.
 static ENTRIES: &[KernelDescriptor] = &[
     // -------------------------------------------------------- Level 1
     serial("dscal/naive", "dscal", Level::L1, Impl::Naive,
@@ -1220,6 +1332,8 @@ static ENTRIES: &[KernelDescriptor] = &[
            "+prefetch (FT-BLAS Ori)", dscal_tuned),
     protected("dscal/dmr", "dscal", Level::L1, Scheme::Dmr, PROTECTED_ALL,
               "duplicated SIMD streams", dscal_dmr),
+    serial("dscal/simd", "dscal", Level::L1, Impl::Simd,
+           "AVX2 4-lane ×4 unroll, runtime-probed", dscal_simd),
     serial("daxpy/naive", "daxpy", Level::L1, Impl::Naive,
            "scalar loop", daxpy_naive),
     serial("daxpy/blocked", "daxpy", Level::L1, Impl::Blocked,
@@ -1228,6 +1342,8 @@ static ENTRIES: &[KernelDescriptor] = &[
            "SIMD-width, unroll, prefetch", daxpy_tuned),
     protected("daxpy/dmr", "daxpy", Level::L1, Scheme::Dmr, PROTECTED_ALL,
               "duplicated SIMD streams", daxpy_dmr),
+    serial("daxpy/simd", "daxpy", Level::L1, Impl::Simd,
+           "AVX2+FMA 4-lane ×4 unroll, runtime-probed", daxpy_simd),
     serial("ddot/naive", "ddot", Level::L1, Impl::Naive,
            "single accumulator", ddot_naive),
     serial("ddot/blocked", "ddot", Level::L1, Impl::Blocked,
@@ -1236,6 +1352,8 @@ static ENTRIES: &[KernelDescriptor] = &[
            "4 accumulator chains, prefetch", ddot_tuned),
     protected("ddot/dmr", "ddot", Level::L1, Scheme::Dmr, PROTECTED_ALL,
               "per-chunk duplicated reduction", ddot_dmr),
+    serial("ddot/simd", "ddot", Level::L1, Impl::Simd,
+           "4 AVX2 FMA chains, runtime-probed", ddot_simd),
     serial("dnrm2/naive", "dnrm2", Level::L1, Impl::Naive,
            "scaled loop", dnrm2_naive),
     serial("dnrm2/blocked", "dnrm2", Level::L1, Impl::Blocked,
@@ -1244,6 +1362,9 @@ static ENTRIES: &[KernelDescriptor] = &[
            "AVX512-width (8 lanes), prefetch", dnrm2_tuned),
     protected("dnrm2/dmr", "dnrm2", Level::L1, Scheme::Dmr, PROTECTED_ALL,
               "per-chunk duplicated reduction", dnrm2_dmr),
+    serial("dnrm2/simd", "dnrm2", Level::L1, Impl::Simd,
+           "4 AVX2 FMA chains + overflow fallback, runtime-probed",
+           dnrm2_simd),
     serial("dasum/naive", "dasum", Level::L1, Impl::Naive,
            "textbook loop", dasum_naive),
     serial("dasum/blocked", "dasum", Level::L1, Impl::Blocked,
@@ -1337,6 +1458,17 @@ static ENTRIES: &[KernelDescriptor] = &[
     protected("dgemm/abft-weighted", "dgemm", Level::L3, Scheme::AbftWeighted,
               WEIGHTED_ONLY, "weighted double-checksum encoding (§2.1)",
               dgemm_weighted),
+    serial("dgemm/simd", "dgemm", Level::L3, Impl::Simd,
+           "8×4 AVX2+FMA GEBP micro kernel, runtime-probed", dgemm_simd),
+    threaded_simd("dgemm/simd-mt", "dgemm", Scheme::None, UNPROTECTED,
+                  "row-band parallel SIMD GEBP", dgemm_simd_mt),
+    protected_simd("dgemm/abft-fused-simd", "dgemm", Scheme::AbftFused,
+                   HYBRID_ONLY,
+                   "checksum stream fused into the 8×4 micro kernel",
+                   dgemm_fused_simd),
+    threaded_simd("dgemm/abft-fused-simd-mt", "dgemm", Scheme::AbftFused,
+                  HYBRID_ONLY, "band-local fused ABFT on the SIMD substrate",
+                  dgemm_fused_simd_mt),
     serial("dsymm/naive", "dsymm", Level::L3, Impl::Naive,
            "textbook triple loop", dsymm_naive),
     serial("dsymm/blocked", "dsymm", Level::L3, Impl::Blocked,
@@ -1414,6 +1546,34 @@ mod tests {
                     "{r}: no naive serial kernel");
             assert!(ladder.iter().any(|e| e.variant == Impl::Tuned),
                     "{r}: no tuned serial kernel");
+        }
+    }
+
+    /// The committed bench trajectory and the Fig. 5/6 oracles both
+    /// read `serial_variants` positionally, so the ladder order is
+    /// load-bearing: naive → blocked → tuned (→ simd for the routines
+    /// with an AVX2 rung), deterministically, per registration order.
+    #[test]
+    fn serial_ladder_order_is_deterministic() {
+        let reg = KernelRegistry::global();
+        for r in ["dscal", "daxpy", "ddot", "dnrm2", "dgemm"] {
+            let names: Vec<&str> =
+                reg.serial_variants(r).iter().map(|e| e.name).collect();
+            let want: Vec<String> = ["naive", "blocked", "tuned", "simd"]
+                .iter()
+                .map(|f| format!("{r}/{f}"))
+                .collect();
+            assert_eq!(names, want, "{r}: serial ladder drifted");
+        }
+        // routines without a SIMD rung keep the three-rung prefix order
+        for r in reg.routines() {
+            let ladder = reg.serial_variants(r);
+            let mut last = None;
+            for e in &ladder {
+                let pos = Impl::ALL.iter().position(|v| *v == e.variant);
+                assert!(pos > last, "{r}: ladder out of Impl::ALL order");
+                last = pos;
+            }
         }
     }
 

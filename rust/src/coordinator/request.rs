@@ -12,6 +12,9 @@ pub enum Backend {
     NativeBlocked,
     /// Tuned native kernels (FT-BLAS Ori native).
     NativeTuned,
+    /// Runtime-probed AVX2+FMA microkernels (tuned-scalar fallback
+    /// off-AVX2).
+    NativeSimd,
     /// AOT Pallas/XLA artifact via PJRT.
     Pjrt,
 }
@@ -23,6 +26,7 @@ impl Backend {
             Backend::NativeNaive => "naive",
             Backend::NativeBlocked => "blocked",
             Backend::NativeTuned => "tuned",
+            Backend::NativeSimd => "simd",
             Backend::Pjrt => "pjrt",
         }
     }
@@ -33,6 +37,7 @@ impl Backend {
             "naive" => Some(Backend::NativeNaive),
             "blocked" => Some(Backend::NativeBlocked),
             "tuned" => Some(Backend::NativeTuned),
+            "simd" => Some(Backend::NativeSimd),
             "pjrt" => Some(Backend::Pjrt),
             _ => None,
         }
@@ -44,6 +49,7 @@ impl Backend {
             crate::blas::Impl::Naive => Backend::NativeNaive,
             crate::blas::Impl::Blocked => Backend::NativeBlocked,
             crate::blas::Impl::Tuned => Backend::NativeTuned,
+            crate::blas::Impl::Simd => Backend::NativeSimd,
         }
     }
 
@@ -53,6 +59,7 @@ impl Backend {
             Backend::NativeNaive => Some(crate::blas::Impl::Naive),
             Backend::NativeBlocked => Some(crate::blas::Impl::Blocked),
             Backend::NativeTuned => Some(crate::blas::Impl::Tuned),
+            Backend::NativeSimd => Some(crate::blas::Impl::Simd),
             Backend::Pjrt => None,
         }
     }
@@ -307,8 +314,11 @@ mod tests {
     #[test]
     fn backend_names() {
         for b in [Backend::NativeNaive, Backend::NativeBlocked,
-                  Backend::NativeTuned, Backend::Pjrt] {
+                  Backend::NativeTuned, Backend::NativeSimd, Backend::Pjrt] {
             assert_eq!(Backend::by_name(b.name()), Some(b));
+        }
+        for v in crate::blas::Impl::ALL {
+            assert_eq!(Backend::for_variant(v).variant(), Some(v));
         }
     }
 }

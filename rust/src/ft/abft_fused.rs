@@ -49,9 +49,10 @@ pub type Strike = (usize, usize, usize, f64);
 /// - `eta[p]` += A[i][p]              (panel column sums, for dC^c)
 /// - running max|A| for the round-off threshold.
 #[allow(clippy::too_many_arguments)]
-fn pack_a_fused(a: &[f64], lda: usize, i0: usize, p0: usize, mcb: usize,
-                kcb: usize, mr: usize, alpha: f64, be: &[f64],
-                out: &mut [f64], dcr: &mut [f64], eta: &mut [f64]) {
+pub(crate) fn pack_a_fused(a: &[f64], lda: usize, i0: usize, p0: usize,
+                           mcb: usize, kcb: usize, mr: usize, alpha: f64,
+                           be: &[f64], out: &mut [f64], dcr: &mut [f64],
+                           eta: &mut [f64]) {
     let mut w = 0;
     let mut i = 0;
     while i < mcb {
@@ -81,8 +82,9 @@ fn pack_a_fused(a: &[f64], lda: usize, i0: usize, p0: usize, mcb: usize,
 /// Pack a (kcb × ncb) block of B into NR-col micro panels, fused with the
 /// panel row-sum accumulation `be[p] += Σ_j B[p][j]` (the paper's B^c
 /// computed "simultaneously by reusing B") and the running max|B|.
-fn pack_b_fused(b: &[f64], ldb: usize, p0: usize, j0: usize, kcb: usize,
-                ncb: usize, nr: usize, out: &mut [f64], be: &mut [f64]) {
+pub(crate) fn pack_b_fused(b: &[f64], ldb: usize, p0: usize, j0: usize,
+                           kcb: usize, ncb: usize, nr: usize, out: &mut [f64],
+                           be: &mut [f64]) {
     let mut w = 0;
     let mut j = 0;
     while j < ncb {
@@ -393,8 +395,8 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
 /// Compare maintained reference sums against encoded predictions; locate
 /// a single error (row checksum first, column only on disagreement —
 /// paper §5.1's short-circuit).
-fn verify_refs(cr_enc: &[f64], cc_enc: &[f64], cr_ref: &[f64], cc_ref: &[f64],
-               tol: f64) -> Option<LocatedError> {
+pub(crate) fn verify_refs(cr_enc: &[f64], cc_enc: &[f64], cr_ref: &[f64],
+                          cc_ref: &[f64], tol: f64) -> Option<LocatedError> {
     let mut i_err = None;
     let mut worst = tol;
     for (i, (r, e)) in cr_ref.iter().zip(cr_enc).enumerate() {

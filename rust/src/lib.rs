@@ -6,8 +6,10 @@
 //!
 //! - [`blas`] — the pure-Rust BLAS substrate: naive (LAPACK-reference
 //!   stand-in), blocked (OpenBLAS stand-in) and tuned kernels for all three
-//!   BLAS levels, plus the step-wise DSCAL optimization ladder of the
-//!   paper's Fig. 7.
+//!   BLAS levels, the runtime-probed AVX2+FMA microkernel backend in
+//!   [`blas::simd`] (8×4 GEBP DGEMM, wide-lane Level-1 loops, scalar
+//!   fallback off-AVX2), plus the step-wise DSCAL optimization ladder
+//!   of the paper's Fig. 7.
 //! - [`ft`] — the fault-tolerance engine: DMR wrappers for Level-1/2,
 //!   checksum-based online ABFT for Level-3, and the fault-injection
 //!   substrate used by the error-injection experiments (Figs. 10/11) —

@@ -8,6 +8,8 @@
 //! ftblas soak [--quick] [...]              timed fault-injection campaign
 //!                                          on an elastic tier (CI gate)
 //! ftblas bench --exp ID [--quick]          regenerate a paper table/figure
+//! ftblas bench-diff BASE.json CAND.json    gate candidate bench rows
+//!                                          against a committed baseline
 //! ```
 
 use std::collections::HashMap;
@@ -34,7 +36,6 @@ use ftblas::util::rng::Rng;
 /// Minimal flag parser (clap is not vendored in this offline image).
 struct Args {
     flags: HashMap<String, String>,
-    #[allow(dead_code)]
     positional: Vec<String>,
 }
 
@@ -83,8 +84,8 @@ fn usage() -> ! {
 USAGE:
   ftblas artifacts [--profile skylake_sim|cascade_sim]
   ftblas verify    [--profile P] [--quick]
-  ftblas run --routine dgemm --n 256 [--backend tuned|naive|blocked|pjrt]
-             [--variant naive|blocked|tuned] [--threads T]
+  ftblas run --routine dgemm --n 256 [--backend tuned|naive|blocked|simd|pjrt]
+             [--variant naive|blocked|tuned|simd] [--threads T]
              [--ft none|hybrid|abft-unfused|abft-weighted] [--inject]
              [--profile P]
   ftblas serve [--requests N] [--ft P] [--shards S] [--min-shards M]
@@ -114,7 +115,12 @@ USAGE:
              [--quick] [--profile P]
              (--exp smoke also takes --out PATH to write its rows as JSON)
   ftblas bench --exp ablations   (or ablation-kc|ablation-trsm-panel|
-             ablation-threads|ablation-weighted)"
+             ablation-threads|ablation-weighted)
+  ftblas bench-diff BASELINE.json CANDIDATE.json [--tolerance 0.05]
+             (compare two ftblas.bench-smoke.v1 row sets per label; exits
+              nonzero when a candidate row's GFLOP/s regresses below the
+              baseline by more than the tolerance — the committed perf
+              trajectory's CI gate)"
     );
     std::process::exit(2);
 }
@@ -143,8 +149,111 @@ fn main() -> Result<()> {
             }
             bench::run(&exp, &mut ctx)
         }
+        "bench-diff" => cmd_bench_diff(&args),
         _ => usage(),
     }
+}
+
+/// `ftblas bench-diff BASELINE CANDIDATE` — the committed-perf gate.
+/// Both files are `ftblas.bench-smoke.v1` documents; rows are matched
+/// by label and a candidate row whose GFLOP/s falls more than the
+/// tolerance below the baseline fails the run. Rows only ever produced
+/// on one side (new kernels, zero-GFLOP floor rows) are reported but
+/// never gate, and when the two documents were produced under
+/// different `cpu_features` the comparison is reported without gating
+/// — rows from different machines are not commensurable.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let [baseline, candidate] = args.positional.as_slice() else {
+        bail!("bench-diff wants exactly two row files: \
+               ftblas bench-diff BASELINE.json CANDIDATE.json");
+    };
+    let tolerance = match args.flags.get("tolerance") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| anyhow!("--tolerance wants a number"))?,
+        None => 0.05,
+    };
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{path}: {e}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow!("{path}: malformed JSON: {e}"))?;
+        match doc.get("schema").and_then(Json::as_str) {
+            Some("ftblas.bench-smoke.v1") => Ok(doc),
+            other => bail!("{path}: not an ftblas.bench-smoke.v1 document \
+                            (schema {other:?})"),
+        }
+    };
+    let base = load(baseline)?;
+    let cand = load(candidate)?;
+    let feat = |d: &Json| {
+        d.get("cpu_features")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string()
+    };
+    // zero-GFLOP rows (the L1 request-clone floor) carry no throughput
+    // claim, so they never gate
+    let rows = |d: &Json| -> Vec<(String, f64)> {
+        d.get("rows")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|r| {
+                let label = r.get("label")?.as_str()?;
+                let g = r.get("gflops")?.as_f64()?;
+                (g > 0.0).then(|| (label.to_string(), g))
+            })
+            .collect()
+    };
+    let (bf, cf) = (feat(&base), feat(&cand));
+    let comparable = bf == cf;
+    println!("bench-diff: {candidate} vs {baseline} (tolerance -{:.1}%)",
+             tolerance * 100.0);
+    if !comparable {
+        println!("cpu_features differ (baseline `{bf}`, candidate `{cf}`): \
+                  rows from different machines are not commensurable — \
+                  reporting deltas without gating");
+    }
+    let base_rows = rows(&base);
+    let cand_rows = rows(&cand);
+    if base_rows.is_empty() {
+        bail!("{baseline}: no gateable rows (all zero-GFLOP or missing)");
+    }
+    println!("{:<38} {:>10} {:>10} {:>8}  {}", "label", "base", "cand",
+             "delta", "status");
+    let mut regressions = Vec::new();
+    for (label, bg) in &base_rows {
+        let Some((_, cg)) = cand_rows.iter().find(|(l, _)| l == label) else {
+            println!("{label:<38} {bg:>10.3} {:>10} {:>8}  dropped \
+                      (not gated)", "-", "-");
+            continue;
+        };
+        let delta = (cg - bg) / bg * 100.0;
+        let regressed = *cg < bg * (1.0 - tolerance);
+        let status = match (regressed, comparable) {
+            (false, _) => "ok",
+            (true, true) => "REGRESSION",
+            (true, false) => "slower (not gated)",
+        };
+        println!("{label:<38} {bg:>10.3} {cg:>10.3} {delta:>+7.1}%  \
+                  {status}");
+        if regressed && comparable {
+            regressions.push(label.clone());
+        }
+    }
+    for (label, cg) in &cand_rows {
+        if !base_rows.iter().any(|(l, _)| l == label) {
+            println!("{label:<38} {:>10} {cg:>10.3} {:>8}  new row", "-",
+                     "-");
+        }
+    }
+    if !regressions.is_empty() {
+        bail!("bench-diff: {} row(s) regressed beyond {:.1}%: {}",
+              regressions.len(), tolerance * 100.0, regressions.join(", "));
+    }
+    println!("bench-diff: no regressions beyond {:.1}%", tolerance * 100.0);
+    Ok(())
 }
 
 fn cmd_artifacts(profile: &Profile) -> Result<()> {

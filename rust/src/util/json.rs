@@ -1,11 +1,12 @@
-//! Minimal JSON document builder (serde is not vendored in this
-//! offline image; see DESIGN.md §9). The CI artifacts — the bench-smoke
-//! ledger and the soak report — need a *stable, machine-readable*
-//! schema across PRs, so this builder emits objects with keys in
-//! insertion order (callers sort collections themselves), strings with
-//! full escaping, and floats via Rust's shortest-roundtrip `Display`
-//! (non-finite values degrade to `null` rather than emitting invalid
-//! JSON).
+//! Minimal JSON document builder and parser (serde is not vendored in
+//! this offline image; see DESIGN.md §9). The CI artifacts — the
+//! bench-smoke ledger and the soak report — need a *stable,
+//! machine-readable* schema across PRs, so this builder emits objects
+//! with keys in insertion order (callers sort collections themselves),
+//! strings with full escaping, and floats via Rust's
+//! shortest-roundtrip `Display` (non-finite values degrade to `null`
+//! rather than emitting invalid JSON). [`Json::parse`] reads the same
+//! documents back for the `bench-diff` regression gate.
 
 use std::fmt::Write as _;
 
@@ -87,6 +88,220 @@ impl Json {
             Json::Null => out.push_str("null"),
         }
     }
+
+    /// Parse a JSON document (the counterpart of [`Json::render`],
+    /// for reading back committed `BENCH_*.json` artifacts). Numbers
+    /// parse as [`Json::Int`] when they are unsigned integers that fit
+    /// `u64` and [`Json::Num`] otherwise, matching what the builder
+    /// emits. Returns a message with a byte offset on malformed input,
+    /// including trailing non-whitespace.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (first match); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// The numeric value of a `Num` or `Int` node.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            Json::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// The string value of a `Str` node.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The items of an `Arr` node.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+// ------------------------------------------------------------- parsing
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r')
+    {
+        *pos += 1;
+    }
+}
+
+fn expect_byte(bytes: &[u8], pos: &mut usize, want: u8) -> Result<(), String> {
+    if bytes.get(*pos) == Some(&want) {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", want as char, pos))
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        Some(b'{') => parse_obj(bytes, pos),
+        Some(b'[') => parse_arr(bytes, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        Some(_) => parse_number(bytes, pos),
+        None => Err("unexpected end of input".into()),
+    }
+}
+
+fn parse_obj(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect_byte(bytes, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect_byte(bytes, pos, b':')?;
+        fields.push((key, parse_value(bytes, pos)?));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+        }
+    }
+}
+
+fn parse_arr(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect_byte(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+        }
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect_byte(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or("truncated \\u escape")?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| "bad \\u escape")?;
+                        // surrogate halves only arise for chars the
+                        // writer never emits raw; map them to U+FFFD
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {pos}")),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // copy one UTF-8 scalar (multi-byte sequences intact)
+                let start = *pos;
+                *pos += 1;
+                while *pos < bytes.len() && bytes[*pos] & 0xC0 == 0x80 {
+                    *pos += 1;
+                }
+                let s = std::str::from_utf8(&bytes[start..*pos])
+                    .map_err(|_| format!("invalid UTF-8 at byte {start}"))?;
+                out.push_str(s);
+            }
+        }
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json)
+             -> Result<Json, String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(format!("expected '{lit}' at byte {pos}"))
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos],
+                    b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).unwrap();
+    if !text.contains(['.', 'e', 'E', '-']) {
+        if let Ok(v) = text.parse::<u64>() {
+            return Ok(Json::Int(v));
+        }
+    }
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number '{text}' at byte {start}"))
 }
 
 /// Write `s` as a quoted JSON string with RFC 8259 escaping.
@@ -142,5 +357,49 @@ mod tests {
         // u64 values above 2^53 would lose precision through f64
         let big = (1u64 << 60) + 1;
         assert_eq!(Json::Int(big).render(), big.to_string());
+    }
+
+    /// Everything the builder can emit parses back to an equivalent
+    /// tree — the round-trip the bench-diff gate depends on.
+    #[test]
+    fn parse_round_trips_rendered_documents() {
+        let doc = Json::obj()
+            .field("schema", Json::Str("ftblas.bench-smoke.v1".into()))
+            .field("quick", Json::Bool(true))
+            .field("count", Json::Int(3))
+            .field("rows", Json::Arr(vec![
+                Json::obj()
+                    .field("label", Json::Str("dgemm/simd".into()))
+                    .field("gflops", Json::Num(12.375))
+                    .field("note", Json::Str("a\"b\\c\nd".into())),
+                Json::Null,
+            ]));
+        let text = doc.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.render(), text, "render∘parse must be identity");
+        assert_eq!(back.get("schema").and_then(Json::as_str),
+                   Some("ftblas.bench-smoke.v1"));
+        let rows = back.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows[0].get("gflops").and_then(Json::as_f64),
+                   Some(12.375));
+        assert_eq!(rows[0].get("note").and_then(Json::as_str),
+                   Some("a\"b\\c\nd"));
+        assert_eq!(back.get("count").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_negative_numbers() {
+        let back = Json::parse(" { \"a\" : [ -1.5 , 2e3 , 7 ] }\n").unwrap();
+        let a = back.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(a[0].as_f64(), Some(-1.5));
+        assert_eq!(a[1].as_f64(), Some(2000.0));
+        assert!(matches!(a[2], Json::Int(7)));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in ["", "{", "{\"a\":}", "[1,]", "tru", "1.5x", "{} {}"] {
+            assert!(Json::parse(bad).is_err(), "accepted malformed: {bad:?}");
+        }
     }
 }

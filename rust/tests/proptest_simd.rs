@@ -1,0 +1,188 @@
+//! SIMD-vs-naive numerical equivalence (ISSUE 6 satellite): every new
+//! microkernel against the naive oracle across odd/remainder
+//! dimensions, plus a campaign-armed strike through the checksum-fused
+//! SIMD DGEMM.
+//!
+//! Bound discipline: the element-wise kernels (DSCAL, DAXPY) compute
+//! the same per-element expression as the oracle — at most one FMA
+//! contraction apart — so they are held to a strict <= 4 ULP
+//! per-element bound. The reductions (DDOT, DNRM2) and the GEBP DGEMM
+//! re-associate the sum across lanes and tiles, so they are held to a
+//! magnitude-scaled envelope instead: an ULP bound on a re-associated
+//! sum is not meaningful under cancellation.
+
+use ftblas::blas::level3::GemmParams;
+use ftblas::blas::{naive, simd};
+use ftblas::coordinator::registry::{KernelRegistry, Scheme};
+use ftblas::ft::abft_fused::Strike;
+use ftblas::ft::injector::{CampaignConfig, CampaignTarget,
+                           InjectionCampaign};
+use ftblas::util::check::{check, ensure};
+use ftblas::util::matrix::{allclose, Matrix};
+
+/// Distance in units-in-the-last-place between two finite doubles,
+/// via the monotone mapping of the IEEE-754 bit patterns onto a signed
+/// line (negative floats mirror below zero).
+fn ulp_dist(a: f64, b: f64) -> u64 {
+    fn key(f: f64) -> i64 {
+        let i = f.to_bits() as i64;
+        if i < 0 { i64::MIN - i } else { i }
+    }
+    if a == b {
+        return 0; // covers +0.0 vs -0.0
+    }
+    key(a).abs_diff(key(b))
+}
+
+/// Dimensions that exercise every remainder path of the wide-lane
+/// loops: below one lane, straddling the 4-lane step, straddling the
+/// 16-element unrolled step, and around the prefetch distance.
+const EDGE_DIMS: &[usize] =
+    &[1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 63, 64, 65, 127, 129];
+
+#[test]
+fn dscal_within_4_ulp_of_naive() {
+    check("simd-dscal-ulp", 30, |g| {
+        let n = if g.case < EDGE_DIMS.len() {
+            EDGE_DIMS[g.case]
+        } else {
+            g.dim(1, 400)
+        };
+        let alpha = g.rng.range(-3.0, 3.0);
+        let x0 = g.rng.normal_vec(n);
+        let mut want = x0.clone();
+        naive::dscal(alpha, &mut want);
+        let mut got = x0.clone();
+        simd::dscal(alpha, &mut got);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            let d = ulp_dist(*a, *b);
+            ensure(d <= 4, format!("dscal n={n} [{i}]: {a} vs {b} ({d} ulp)"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn daxpy_within_4_ulp_of_naive() {
+    check("simd-daxpy-ulp", 30, |g| {
+        let n = if g.case < EDGE_DIMS.len() {
+            EDGE_DIMS[g.case]
+        } else {
+            g.dim(1, 400)
+        };
+        let alpha = g.rng.range(-3.0, 3.0);
+        let x = g.rng.normal_vec(n);
+        let y0 = g.rng.normal_vec(n);
+        let mut want = y0.clone();
+        naive::daxpy(alpha, &x, &mut want);
+        let mut got = y0.clone();
+        simd::daxpy(alpha, &x, &mut got);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            let d = ulp_dist(*a, *b);
+            ensure(d <= 4, format!("daxpy n={n} [{i}]: {a} vs {b} ({d} ulp)"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ddot_and_dnrm2_match_naive_within_envelope() {
+    check("simd-reductions", 30, |g| {
+        let n = if g.case < EDGE_DIMS.len() {
+            EDGE_DIMS[g.case]
+        } else {
+            g.dim(1, 3000)
+        };
+        let x = g.rng.normal_vec(n);
+        let y = g.rng.normal_vec(n);
+        // envelope scaled by the magnitude actually summed, so the
+        // bound stays meaningful when the signed dot cancels
+        let mag: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let got = simd::ddot(&x, &y);
+        let want = naive::ddot(&x, &y);
+        ensure((got - want).abs() <= 1e-13 * (1.0 + mag),
+               format!("ddot n={n}: {got} vs {want}"))?;
+        let got = simd::dnrm2(&x);
+        let want = naive::dnrm2(&x);
+        ensure((got - want).abs() <= 1e-12 * (1.0 + want),
+               format!("dnrm2 n={n}: {got} vs {want}"))
+    });
+}
+
+#[test]
+fn dnrm2_overflow_falls_back_like_tuned() {
+    let x = vec![1e300; 33];
+    let got = simd::dnrm2(&x);
+    let want = naive::dnrm2(&x);
+    assert!(got.is_finite(), "simd dnrm2 overflowed: {got}");
+    assert!((got - want).abs() <= 1e-9 * want, "{got} vs {want}");
+}
+
+#[test]
+fn dgemm_matches_naive_across_odd_shapes() {
+    check("simd-gemm", 20, |g| {
+        // shapes straddle the 8x4 micro-tile and the kc/mc/nc blocks
+        let m = g.dim(1, 70);
+        let n = g.dim(1, 50);
+        let k = g.dim(1, 90);
+        let alpha = g.rng.range(-2.0, 2.0);
+        let beta = g.rng.range(-1.0, 1.0);
+        let params = GemmParams { kc: 16, mc: 24, nc: 20,
+                                  ..Default::default() };
+        let a = Matrix::random(m, k, &mut g.rng);
+        let b = Matrix::random(k, n, &mut g.rng);
+        let c0 = Matrix::random(m, n, &mut g.rng);
+        let mut want = c0.data.clone();
+        naive::dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut want);
+        let mut got = c0.data.clone();
+        simd::dgemm(m, n, k, alpha, &a.data, &b.data, beta, &mut got,
+                    &params);
+        ensure(allclose(&got, &want, 1e-10, 1e-10),
+               format!("simd dgemm wrong at {m}x{n}x{k}"))
+    });
+}
+
+/// The checksum-fused SIMD DGEMM detects and corrects a strike armed
+/// through the `ft/injector.rs` campaign machinery — the same path the
+/// soak harness drives — not a hand-placed fault.
+#[test]
+fn fused_simd_dgemm_corrects_campaign_strike() {
+    let reg = KernelRegistry::global();
+    let fused = reg
+        .find("dgemm/abft-fused-simd")
+        .expect("fused SIMD dgemm must be registered");
+    let id = reg.id_of(fused).unwrap();
+    // stride 1 + unbounded rate: every eligible execution is a strike,
+    // so the test is deterministic
+    let campaign = InjectionCampaign::new(CampaignConfig {
+        stride: 1,
+        rate_per_min: f64::INFINITY,
+        target: CampaignTarget::Fused,
+        ..Default::default()
+    });
+    let (m, n, k) = (48, 40, 64);
+    let params = GemmParams { kc: 16, ..Default::default() };
+    let nsteps = k.div_ceil(params.kc);
+    let mut rng = ftblas::util::rng::Rng::new(0x51D);
+    let a = Matrix::random(m, k, &mut rng);
+    let b = Matrix::random(k, n, &mut rng);
+    let mut want = vec![0.0; m * n];
+    naive::dgemm(m, n, k, 1.0, &a.data, &b.data, 0.0, &mut want);
+    for round in 0..8 {
+        let fault = campaign
+            .arm(id, Scheme::AbftFused, m)
+            .expect("stride-1 unbounded campaign must strike every arm");
+        let strike: Strike =
+            (fault.step % nsteps, fault.i % m, fault.j % n, fault.delta);
+        let mut c = vec![0.0; m * n];
+        let rep = simd::dgemm_abft_fused(m, n, k, 1.0, &a.data, &b.data,
+                                         0.0, &mut c, &params, &[strike]);
+        assert_eq!(rep.errors_detected, 1,
+                   "round {round}: strike {strike:?} not detected");
+        assert_eq!(rep.errors_corrected, 1,
+                   "round {round}: strike {strike:?} not corrected");
+        assert!(allclose(&c, &want, 1e-8, 1e-8),
+                "round {round}: corrected result wrong");
+    }
+    assert_eq!(campaign.injected(), 8);
+}
