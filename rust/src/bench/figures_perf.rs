@@ -10,7 +10,9 @@ use std::hint::black_box;
 use crate::bench::harness::{
     self, header, print_rows, registry_variant_rows, row, BenchCtx, Row,
 };
-use crate::blas::{level2, stepwise};
+use crate::blas::batched::{self, GemmItem};
+use crate::blas::level3::GemmParams;
+use crate::blas::{level2, simd, stepwise};
 use crate::coordinator::request::BlasRequest;
 use crate::ft::policy::FtPolicy;
 use crate::util::matrix::Matrix;
@@ -50,10 +52,11 @@ pub fn table1(_ctx: &mut BenchCtx) -> Result<()> {
     Ok(())
 }
 
-/// CI smoke: one registry-driven row set at tiny dims. Exercises the
-/// descriptor-table bench path (registry enumeration → `ExecCtx` →
-/// kernel → Row) end to end in well under a second, so the bench
-/// plumbing cannot silently rot between full runs.
+/// CI smoke: one registry-driven row set at tiny dims plus the batched
+/// small-GEMM pair. Exercises the descriptor-table bench path (registry
+/// enumeration → `ExecCtx` → kernel → Row) and the batch-fused driver
+/// end to end in well under a second, so the bench plumbing cannot
+/// silently rot between full runs.
 pub fn smoke(ctx: &mut BenchCtx) -> Result<()> {
     header("smoke", "registry bench path at tiny dims");
     let n = 32;
@@ -65,13 +68,52 @@ pub fn smoke(ctx: &mut BenchCtx) -> Result<()> {
         beta: 0.0,
         c: Matrix::zeros(n, n),
     };
-    let rows = registry_variant_rows(ctx, &req, 2.0 * (n * n * n) as f64);
+    let mut rows = registry_variant_rows(ctx, &req, 2.0 * (n * n * n) as f64);
     // a hard failure, not harness::expect's warning: this row set going
     // empty is exactly the rot the CI smoke step exists to catch
     if rows.is_empty() {
         anyhow::bail!("bench smoke: registry produced no dgemm rows");
     }
     print_rows(&rows);
+
+    // ---- batched small-GEMM pair: the fusion win the batcher exploits.
+    // A per-call baseline (the serial SIMD kernel once per item — what
+    // an unfused batch of below-banding-floor items costs) against the
+    // batch-fused driver draining the *same* items as one task queue
+    // under one thread scope. Labels are stable: `bench-diff` gates the
+    // batched row against its committed baseline like any other kernel.
+    let batch = 16usize;
+    let (bm, bn, bk) = (32usize, 32usize, 32usize);
+    let mats: Vec<(Matrix, Matrix)> = (0..batch)
+        .map(|_| (Matrix::random(bm, bk, &mut rng),
+                  Matrix::random(bk, bn, &mut rng)))
+        .collect();
+    let params = GemmParams::default();
+    let bflops = (batch * 2 * bm * bn * bk) as f64;
+    let mut outs: Vec<Vec<f64>> = vec![vec![0.0; bm * bn]; batch];
+    let mut brows = Vec::new();
+    brows.push(row(ctx, "dgemm/small-batch/per-call-simd", bflops,
+                   "16x 32^3, one simd call per item", || {
+        for ((a, b), c) in mats.iter().zip(outs.iter_mut()) {
+            simd::dgemm(bm, bn, bk, 1.0, &a.data, &b.data, 0.0, c, &params);
+        }
+    }));
+    brows.push(row(ctx, "dgemm/small-batch/batched-simd", bflops,
+                   "same items, one fused task queue (4 threads)", || {
+        let mut items: Vec<GemmItem<'_>> = mats
+            .iter()
+            .zip(outs.iter_mut())
+            .map(|((a, b), c)| GemmItem {
+                m: bm, n: bn, k: bk, alpha: 1.0, beta: 0.0,
+                a: &a.data, b: &b.data, c: &mut c[..],
+                inject: Vec::new(),
+            })
+            .collect();
+        batched::dgemm_batched_simd(&mut items, &params, 4);
+    }));
+    print_rows(&brows);
+    rows.extend(brows);
+
     if let Some(path) = &ctx.out {
         let doc = harness::rows_json("smoke", ctx.profile.name, ctx.quick,
                                      &rows);

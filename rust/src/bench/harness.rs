@@ -225,6 +225,8 @@ pub fn print_ledger(snap: &MetricsSnapshot) {
              snap.starvation_reserves);
     println!("scaling: {} up / {} down, {} kernel-id keys migrated",
              snap.scale_ups, snap.scale_downs, snap.keys_migrated);
+    println!("batching: {} batches fused ({} items)", snap.batches_fused,
+             snap.items_fused);
     // FT outcomes: per kernel and overall, headed by the injection
     // mode (campaign = rate-based cluster-wide schedule, per-call =
     // a planned per-run injector)

@@ -1,0 +1,446 @@
+//! Batch-fused small-GEMM execution: run a whole same-kernel batch of
+//! DGEMMs in **one** call under **one** threading frame.
+//!
+//! The per-call MT drivers in [`crate::blas::parallel`] fork and join a
+//! thread scope per request. That amortizes fine for one large GEMM,
+//! but a serving batch of N *small* GEMMs pays N fork/join frames — and
+//! most items are below the banding floor anyway, so the threads sit
+//! idle while each item runs serially. The batched drivers here invert
+//! that: every item of the batch is decomposed into MR-aligned row
+//! bands by the same rule the MT kernels use (a small item is a single
+//! band), the (item × band) tasks are pooled into **one** work queue,
+//! and one `std::thread::scope` drains it. Worker threads pick up
+//! whatever task is next, so a batch of many small items keeps every
+//! thread busy without per-item fork/join, and each worker's packing
+//! and checksum scratch comes from its own thread-local
+//! [`crate::util::arena`] slab — steady-state batches allocate nothing
+//! on the kernel hot path.
+//!
+//! Per-band execution reuses the serial kernels unchanged, so a batched
+//! run is arithmetically identical to calling the underlying kernel per
+//! item (bitwise for the scalar/SIMD paths — the property tests pin
+//! this). On the fused-ABFT path every band carries band-local checksum
+//! state and re-homed strikes exactly like
+//! [`crate::blas::parallel::dgemm_abft_fused_mt`], and band reports are
+//! merged **per item**, so each item of the batch gets its own
+//! [`FtReport`] and injection-campaign accounting stays exact.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::blas::level3::{self, GemmParams};
+use crate::blas::parallel::row_bands;
+use crate::blas::simd;
+use crate::ft::abft_fused::Strike;
+use crate::ft::FtReport;
+
+/// One DGEMM of a batch: `c := alpha * a * b + beta * c`, with the
+/// strikes (if any) an injection campaign armed against this item.
+pub struct GemmItem<'a> {
+    /// Rows of `a` and `c`.
+    pub m: usize,
+    /// Columns of `b` and `c`.
+    pub n: usize,
+    /// Inner dimension.
+    pub k: usize,
+    /// Scale on the product.
+    pub alpha: f64,
+    /// Scale on the existing `c`.
+    pub beta: f64,
+    /// `m x k` row-major input.
+    pub a: &'a [f64],
+    /// `k x n` row-major input.
+    pub b: &'a [f64],
+    /// `m x n` row-major output, updated in place.
+    pub c: &'a mut [f64],
+    /// Strikes to inject into *this item* (fused-ABFT driver only; the
+    /// unprotected drivers ignore it). Row/column coordinates are
+    /// item-global; the driver re-homes them to the owning band.
+    pub inject: Vec<Strike>,
+}
+
+/// Which serial kernel a batch's bands run on.
+#[derive(Clone, Copy)]
+enum Backend {
+    /// Tuned scalar GEBP frame ([`level3::dgemm`]).
+    Scalar,
+    /// Runtime-probed SIMD frame ([`simd::dgemm`]).
+    Simd,
+    /// Checksum-fused SIMD frame ([`simd::dgemm_abft_fused`]).
+    FusedSimd,
+}
+
+/// One unit of work: a contiguous row band of one batch item.
+struct Task<'t> {
+    /// Index of the owning item (band reports merge under it).
+    item: usize,
+    /// Rows in this band.
+    rows: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    a: &'t [f64],
+    b: &'t [f64],
+    c: &'t mut [f64],
+    /// Strikes owned by this band, in band-local row coordinates.
+    inject: Vec<Strike>,
+}
+
+/// Decompose every item into row bands, pool the bands into one queue,
+/// and drain it under a single thread scope (inline when the grant or
+/// the task count is 1). Returns one merged report per item.
+fn run_batch(items: &mut [GemmItem<'_>], params: &GemmParams,
+             threads: usize, backend: Backend) -> Vec<FtReport> {
+    let mr = match backend {
+        Backend::Scalar => params.mr,
+        Backend::Simd | Backend::FusedSimd => simd::MR,
+    };
+    let mut tasks: VecDeque<Task<'_>> = VecDeque::new();
+    for (idx, it) in items.iter_mut().enumerate() {
+        assert_eq!(it.a.len(), it.m * it.k, "item {idx}: bad A shape");
+        assert_eq!(it.b.len(), it.k * it.n, "item {idx}: bad B shape");
+        assert_eq!(it.c.len(), it.m * it.n, "item {idx}: bad C shape");
+        if it.m == 0 || it.n == 0 {
+            continue; // nothing to compute or scale
+        }
+        // same banding rule (and small-m floor) as the per-call MT
+        // drivers, so banded batched execution matches them band-for-band
+        let bands = if threads <= 1 || it.m < 2 * mr {
+            vec![(0, it.m)]
+        } else {
+            row_bands(it.m, threads, mr)
+        };
+        let mut rest: &mut [f64] = it.c;
+        for &(lo, hi) in &bands {
+            let (band, tail) = rest.split_at_mut((hi - lo) * it.n);
+            rest = tail;
+            // re-home strikes into band-local row coordinates
+            let inject: Vec<Strike> = it
+                .inject
+                .iter()
+                .filter(|&&(_, i, _, _)| i >= lo && i < hi)
+                .map(|&(st, i, j, d)| (st, i - lo, j, d))
+                .collect();
+            tasks.push_back(Task {
+                item: idx,
+                rows: hi - lo,
+                n: it.n,
+                k: it.k,
+                alpha: it.alpha,
+                beta: it.beta,
+                a: &it.a[lo * it.k..hi * it.k],
+                b: it.b,
+                c: band,
+                inject,
+            });
+        }
+    }
+    let reports: Vec<Mutex<FtReport>> =
+        (0..items.len()).map(|_| Mutex::new(FtReport::none())).collect();
+    let run = |t: Task<'_>| -> FtReport {
+        match backend {
+            Backend::Scalar => {
+                level3::dgemm(t.rows, t.n, t.k, t.alpha, t.a, t.b, t.beta,
+                              t.c, params);
+                FtReport::none()
+            }
+            Backend::Simd => {
+                simd::dgemm(t.rows, t.n, t.k, t.alpha, t.a, t.b, t.beta,
+                            t.c, params);
+                FtReport::none()
+            }
+            Backend::FusedSimd => {
+                simd::dgemm_abft_fused(t.rows, t.n, t.k, t.alpha, t.a, t.b,
+                                       t.beta, t.c, params, &t.inject)
+            }
+        }
+    };
+    let workers = threads.max(1).min(tasks.len().max(1));
+    if workers <= 1 {
+        // serial drain: no threading frame at all
+        for t in tasks {
+            let item = t.item;
+            let rep = run(t);
+            reports[item].lock().unwrap().merge(rep);
+        }
+    } else {
+        // ONE threading frame for the whole batch: workers pull from the
+        // shared queue until it runs dry
+        let queue = Mutex::new(tasks);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    // take the lock only for the pop, never across a task
+                    let next = queue.lock().unwrap().pop_front();
+                    let Some(t) = next else { break };
+                    let item = t.item;
+                    let rep = run(t);
+                    reports[item].lock().unwrap().merge(rep);
+                });
+            }
+        });
+    }
+    reports.into_iter().map(|m| m.into_inner().unwrap()).collect()
+}
+
+/// Run a batch of DGEMMs on the tuned scalar frame. Bitwise identical
+/// to calling [`level3::dgemm`] once per item, at any thread grant.
+pub fn dgemm_batched(items: &mut [GemmItem<'_>], params: &GemmParams,
+                     threads: usize) {
+    run_batch(items, params, threads, Backend::Scalar);
+}
+
+/// Run a batch of DGEMMs on the runtime-probed SIMD frame. Bitwise
+/// identical to calling [`simd::dgemm`] once per item, at any grant.
+pub fn dgemm_batched_simd(items: &mut [GemmItem<'_>], params: &GemmParams,
+                          threads: usize) {
+    run_batch(items, params, threads, Backend::Simd);
+}
+
+/// Run a batch of DGEMMs on the checksum-fused SIMD frame, injecting
+/// each item's strikes into the band that owns the struck row. Returns
+/// one [`FtReport`] per item (index-aligned with `items`), so the
+/// server can account detections and corrections per request.
+pub fn dgemm_batched_abft_fused_simd(items: &mut [GemmItem<'_>],
+                                     params: &GemmParams, threads: usize)
+                                     -> Vec<FtReport> {
+    run_batch(items, params, threads, Backend::FusedSimd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::naive;
+    use crate::util::matrix::{allclose, Matrix};
+    use crate::util::rng::Rng;
+
+    /// A reproducible mixed-shape batch: returns (items' inputs, fresh
+    /// outputs) for `count` items whose dims straddle the banding floor.
+    fn mixed_batch(rng: &mut Rng, count: usize)
+                   -> Vec<(usize, usize, usize, f64, f64, Vec<f64>,
+                           Vec<f64>, Vec<f64>)> {
+        (0..count)
+            .map(|i| {
+                let m = 3 + rng.below(40);
+                let n = 2 + rng.below(24);
+                let k = 1 + rng.below(32);
+                let alpha = [1.0, 0.7, -1.2][i % 3];
+                let beta = [0.0, 1.0, -0.4][(i + 1) % 3];
+                let a = Matrix::random(m, k, rng).data;
+                let b = Matrix::random(k, n, rng).data;
+                let c = Matrix::random(m, n, rng).data;
+                (m, n, k, alpha, beta, a, b, c)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_scalar_is_bitwise_sequential() {
+        let mut rng = Rng::new(0xBA7C);
+        let params = GemmParams::default();
+        let specs = mixed_batch(&mut rng, 7);
+        for threads in [1usize, 4] {
+            let mut want: Vec<Vec<f64>> = Vec::new();
+            for (m, n, k, alpha, beta, a, b, c0) in &specs {
+                let mut c = c0.clone();
+                level3::dgemm(*m, *n, *k, *alpha, a, b, *beta, &mut c,
+                              &params);
+                want.push(c);
+            }
+            let mut outs: Vec<Vec<f64>> =
+                specs.iter().map(|s| s.7.clone()).collect();
+            let mut items: Vec<GemmItem<'_>> = specs
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(s, c)| GemmItem {
+                    m: s.0, n: s.1, k: s.2, alpha: s.3, beta: s.4,
+                    a: &s.5[..], b: &s.6[..], c: &mut c[..],
+                    inject: Vec::new(),
+                })
+                .collect();
+            dgemm_batched(&mut items, &params, threads);
+            drop(items);
+            for (got, want) in outs.iter().zip(&want) {
+                assert_eq!(got, want,
+                           "t={threads}: batched scalar diverged bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_simd_is_bitwise_sequential() {
+        let mut rng = Rng::new(0x51BD);
+        let params = GemmParams::default();
+        let specs = mixed_batch(&mut rng, 6);
+        for threads in [1usize, 3] {
+            let mut want: Vec<Vec<f64>> = Vec::new();
+            for (m, n, k, alpha, beta, a, b, c0) in &specs {
+                let mut c = c0.clone();
+                simd::dgemm(*m, *n, *k, *alpha, a, b, *beta, &mut c,
+                            &params);
+                want.push(c);
+            }
+            let mut outs: Vec<Vec<f64>> =
+                specs.iter().map(|s| s.7.clone()).collect();
+            let mut items: Vec<GemmItem<'_>> = specs
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(s, c)| GemmItem {
+                    m: s.0, n: s.1, k: s.2, alpha: s.3, beta: s.4,
+                    a: &s.5[..], b: &s.6[..], c: &mut c[..],
+                    inject: Vec::new(),
+                })
+                .collect();
+            dgemm_batched_simd(&mut items, &params, threads);
+            drop(items);
+            for (got, want) in outs.iter().zip(&want) {
+                assert_eq!(got, want,
+                           "t={threads}: batched simd diverged bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_reports_per_item_and_corrects() {
+        let mut rng = Rng::new(0xF7);
+        let params = GemmParams { kc: 16, ..Default::default() };
+        let dims = [(24usize, 16usize, 32usize), (9, 12, 16), (40, 8, 32)];
+        let mats: Vec<(Vec<f64>, Vec<f64>)> = dims
+            .iter()
+            .map(|&(m, n, k)| (Matrix::random(m, k, &mut rng).data,
+                               Matrix::random(k, n, &mut rng).data))
+            .collect();
+        let want: Vec<Vec<f64>> = dims
+            .iter()
+            .zip(&mats)
+            .map(|(&(m, n, k), (a, b))| {
+                let mut c = vec![0.0; m * n];
+                naive::dgemm(m, n, k, 1.0, a, b, 0.0, &mut c);
+                c
+            })
+            .collect();
+        for threads in [1usize, 4] {
+            let mut outs: Vec<Vec<f64>> =
+                dims.iter().map(|&(m, n, _)| vec![0.0; m * n]).collect();
+            let mut items: Vec<GemmItem<'_>> = dims
+                .iter()
+                .zip(&mats)
+                .zip(outs.iter_mut())
+                .enumerate()
+                .map(|(i, ((&(m, n, k), (a, b)), c))| GemmItem {
+                    m, n, k, alpha: 1.0, beta: 0.0,
+                    a: &a[..], b: &b[..], c: &mut c[..],
+                    // strike items 0 and 2; item 1 stays clean
+                    inject: if i != 1 {
+                        vec![(0, m / 2, n / 3, 5e4)]
+                    } else {
+                        Vec::new()
+                    },
+                })
+                .collect();
+            let reps =
+                dgemm_batched_abft_fused_simd(&mut items, &params, threads);
+            drop(items);
+            assert_eq!(reps.len(), 3);
+            for (i, rep) in reps.iter().enumerate() {
+                let hit = i != 1;
+                assert_eq!(rep.errors_detected, hit as u64,
+                           "t={threads} item {i}: wrong detection count");
+                assert_eq!(rep.errors_corrected, hit as u64,
+                           "t={threads} item {i}: wrong correction count");
+            }
+            for (i, (got, want)) in outs.iter().zip(&want).enumerate() {
+                assert!(allclose(got, want, 1e-8, 1e-8),
+                        "t={threads} item {i}: corrected result wrong");
+            }
+        }
+    }
+
+    /// Arena reuse across a batch of *differing* dims must be invisible:
+    /// re-running the same batch — and interleaving a large item before
+    /// a small one — always reproduces the standalone per-item result
+    /// bitwise. This is the arena-determinism acceptance property.
+    #[test]
+    fn arena_reuse_across_differing_dims_is_deterministic() {
+        let mut rng = Rng::new(0xA2E);
+        let params = GemmParams::default();
+        let (big_m, small_m, n, k) = (96usize, 5usize, 18usize, 24usize);
+        let ba = Matrix::random(big_m, k, &mut rng).data;
+        let sa = Matrix::random(small_m, k, &mut rng).data;
+        let b = Matrix::random(k, n, &mut rng).data;
+        // standalone small-item result, computed before any big lease
+        let mut standalone = vec![0.0; small_m * n];
+        simd::dgemm(small_m, n, k, 1.0, &sa, &b, 0.0, &mut standalone,
+                    &params);
+        let run_once = |ba: &[f64], sa: &[f64], b: &[f64]| {
+            let mut big_c = vec![0.0; big_m * n];
+            let mut small_c = vec![0.0; small_m * n];
+            let mut items = vec![
+                GemmItem { m: big_m, n, k, alpha: 1.0, beta: 0.0,
+                           a: ba, b, c: &mut big_c[..],
+                           inject: Vec::new() },
+                GemmItem { m: small_m, n, k, alpha: 1.0, beta: 0.0,
+                           a: sa, b, c: &mut small_c[..],
+                           inject: Vec::new() },
+            ];
+            dgemm_batched_simd(&mut items, &params, 1);
+            drop(items);
+            (big_c, small_c)
+        };
+        let first = run_once(&ba, &sa, &b);
+        let second = run_once(&ba, &sa, &b);
+        assert_eq!(first, second, "batch re-run diverged (arena leak)");
+        assert_eq!(first.1, standalone,
+                   "small item after a big lease diverged from standalone");
+    }
+
+    /// After one warm-up batch, running more batches of the same (or
+    /// smaller) shapes must not grow the arena slab: the steady-state
+    /// hot path is allocation-free. Runs on a dedicated thread so other
+    /// tests' leases can't skew the thread-local counters.
+    #[test]
+    fn steady_state_batches_do_not_grow_the_arena() {
+        std::thread::spawn(|| {
+            let mut rng = Rng::new(0x57D);
+            let params = GemmParams::default();
+            let (m, n, k) = (12usize, 10usize, 14usize);
+            let a = Matrix::random(m, k, &mut rng).data;
+            let b = Matrix::random(k, n, &mut rng).data;
+            let warm = |a: &[f64], b: &[f64]| {
+                let mut c = vec![0.0; m * n];
+                let mut items = vec![GemmItem {
+                    m, n, k, alpha: 1.0, beta: 0.0, a, b, c: &mut c[..],
+                    inject: Vec::new(),
+                }];
+                dgemm_batched_simd(&mut items, &params, 1);
+            };
+            warm(&a, &b);
+            let (_, grows, _) = crate::util::arena::thread_stats();
+            for _ in 0..10 {
+                warm(&a, &b);
+            }
+            let (_, grows_after, _) = crate::util::arena::thread_stats();
+            assert_eq!(grows, grows_after,
+                       "steady-state batches reallocated packing scratch");
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn degenerate_items_are_skipped_cleanly() {
+        let params = GemmParams::default();
+        let a: Vec<f64> = Vec::new();
+        let b: Vec<f64> = Vec::new();
+        let mut c: Vec<f64> = Vec::new();
+        let mut items = vec![GemmItem {
+            m: 0, n: 0, k: 4, alpha: 1.0, beta: 0.0,
+            a: &a[..], b: &b[..], c: &mut c[..], inject: Vec::new(),
+        }];
+        let reps = dgemm_batched_abft_fused_simd(&mut items, &params, 4);
+        assert_eq!(reps, vec![FtReport::none()]);
+        let empty: &mut [GemmItem<'_>] = &mut [];
+        assert!(dgemm_batched_abft_fused_simd(empty, &params, 2).is_empty());
+    }
+}

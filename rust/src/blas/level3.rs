@@ -1,6 +1,10 @@
 //! Tuned Level-3 kernels (paper §3.3): packed, cache-blocked DGEMM with an
 //! unrolled micro kernel, and DTRSM with the reciprocal-diagonal packing
-//! trick and a tuned diagonal macro kernel.
+//! trick and a tuned diagonal macro kernel. The DGEMM packing panels are
+//! leased from the thread-local [`crate::util::arena`], so steady-state
+//! calls are allocation-free.
+
+use crate::util::arena;
 
 /// Cache-blocking parameters (the paper's M_C/N_C/K_C). Tuned per profile
 /// in config.rs; these are the Skylake-sim defaults.
@@ -136,49 +140,55 @@ pub fn dgemm(m: usize, n: usize, k: usize, alpha: f64, a: &[f64], b: &[f64],
         return;
     }
     let &GemmParams { mc, nc, kc, mr, nr } = params;
-    let mut apack = vec![0.0; mc.div_ceil(mr) * mr * kc];
-    let mut bpack = vec![0.0; nc.div_ceil(nr) * nr * kc];
-    let mut acc = vec![0.0; mr * nr];
-
-    let mut j0 = 0;
-    while j0 < n {
-        let ncb = nc.min(n - j0);
-        let mut p0 = 0;
-        while p0 < k {
-            let kcb = kc.min(k - p0);
-            pack_b(b, n, p0, j0, kcb, ncb, nr, &mut bpack);
-            let mut i0 = 0;
-            while i0 < m {
-                let mcb = mc.min(m - i0);
-                pack_a(a, k, i0, p0, mcb, kcb, mr, &mut apack);
-                // macro kernel: iterate micro tiles
-                let mut jj = 0;
-                while jj < ncb {
-                    let nrb = nr.min(ncb - jj);
-                    let bp = &bpack[(jj / nr) * (nr * kcb)..][..nr * kcb];
-                    let mut ii = 0;
-                    while ii < mcb {
-                        let mrb = mr.min(mcb - ii);
-                        let ap = &apack[(ii / mr) * (mr * kcb)..][..mr * kcb];
-                        micro_kernel(kcb, ap, bp, mr, nr, &mut acc);
-                        for r in 0..mrb {
-                            let crow =
-                                &mut c[(i0 + ii + r) * n + j0 + jj..][..nrb];
-                            let arow = &acc[r * nr..r * nr + nrb];
-                            for (cv, av) in crow.iter_mut().zip(arow) {
-                                *cv += alpha * av;
+    // packing panels + accumulator come from the thread-local arena:
+    // steady-state calls (the batched small-GEMM shape) allocate nothing
+    arena::with(
+        [arena::packed_a_len(mc, kc, mr), arena::packed_b_len(nc, kc, nr),
+         mr * nr],
+        |[apack, bpack, acc]| {
+            let mut j0 = 0;
+            while j0 < n {
+                let ncb = nc.min(n - j0);
+                let mut p0 = 0;
+                while p0 < k {
+                    let kcb = kc.min(k - p0);
+                    pack_b(b, n, p0, j0, kcb, ncb, nr, bpack);
+                    let mut i0 = 0;
+                    while i0 < m {
+                        let mcb = mc.min(m - i0);
+                        pack_a(a, k, i0, p0, mcb, kcb, mr, apack);
+                        // macro kernel: iterate micro tiles
+                        let mut jj = 0;
+                        while jj < ncb {
+                            let nrb = nr.min(ncb - jj);
+                            let bp =
+                                &bpack[(jj / nr) * (nr * kcb)..][..nr * kcb];
+                            let mut ii = 0;
+                            while ii < mcb {
+                                let mrb = mr.min(mcb - ii);
+                                let ap = &apack[(ii / mr) * (mr * kcb)..]
+                                    [..mr * kcb];
+                                micro_kernel(kcb, ap, bp, mr, nr, acc);
+                                for r in 0..mrb {
+                                    let crow = &mut c
+                                        [(i0 + ii + r) * n + j0 + jj..][..nrb];
+                                    let arow = &acc[r * nr..r * nr + nrb];
+                                    for (cv, av) in crow.iter_mut().zip(arow) {
+                                        *cv += alpha * av;
+                                    }
+                                }
+                                ii += mr;
                             }
+                            jj += nr;
                         }
-                        ii += mr;
+                        i0 += mc;
                     }
-                    jj += nr;
+                    p0 += kc;
                 }
-                i0 += mc;
+                j0 += nc;
             }
-            p0 += kc;
-        }
-        j0 += nc;
-    }
+        },
+    );
 }
 
 /// C := alpha sym(A) B + beta C — the DSYMM packing modification: the

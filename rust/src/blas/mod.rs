@@ -11,12 +11,15 @@
 //! | [`simd`]  | FT-BLAS (AVX)       | explicit `std::arch` AVX2+FMA microkernels (8×4 GEBP dgemm, wide-lane L1) behind a runtime CPU probe; tuned-scalar fallback off-AVX2 |
 //!
 //! [`stepwise`] holds the Fig. 7 DSCAL optimization ladder (six steps,
-//! FT and non-FT at each step).
+//! FT and non-FT at each step). [`batched`] executes a whole
+//! same-kernel batch of small DGEMMs under one threading frame — the
+//! serving fast path for the small-GEMM workload.
 //!
 //! All matrices are dense row-major `&[f64]` with explicit dimensions;
 //! triangular routines read the lower triangle (the paper restricts its
 //! presentation to the same case).
 
+pub mod batched;
 pub mod blocked;
 pub mod level1;
 pub mod level2;

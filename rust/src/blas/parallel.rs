@@ -23,8 +23,11 @@ use crate::ft::abft_fused::{self, Strike};
 use crate::ft::FtReport;
 
 /// Split `m` rows into at most `threads` contiguous bands, MR-aligned so
-/// no band starts mid micro-tile.
-fn row_bands(m: usize, threads: usize, mr: usize) -> Vec<(usize, usize)> {
+/// no band starts mid micro-tile. Shared with the batched driver
+/// ([`crate::blas::batched`]), which decomposes every item of a batch by
+/// the same rule before pooling the bands into one work queue.
+pub(crate) fn row_bands(m: usize, threads: usize, mr: usize)
+                        -> Vec<(usize, usize)> {
     let t = threads.max(1).min(m.div_ceil(mr).max(1));
     let per = m.div_ceil(t).div_ceil(mr) * mr;
     let mut bands = Vec::new();

@@ -207,6 +207,7 @@ mod avx2 {
     use crate::ft::abft;
     use crate::ft::abft_fused::{self, Strike};
     use crate::ft::FtReport;
+    use crate::util::arena;
 
     /// f64 lanes per `__m256d`.
     const LANES: usize = 4;
@@ -474,8 +475,28 @@ mod avx2 {
             return;
         }
         let &GemmParams { mc, nc, kc, .. } = params;
-        let mut apack = vec![0.0; mc.div_ceil(MR) * MR * kc];
-        let mut bpack = vec![0.0; nc.div_ceil(NR) * NR * kc];
+        // packing panels come from the thread-local arena: steady-state
+        // calls (the batched small-GEMM shape) allocate nothing
+        arena::with(
+            [arena::packed_a_len(mc, kc, MR),
+             arena::packed_b_len(nc, kc, NR)],
+            // SAFETY: the caller vouched for avx2+fma
+            |[apack, bpack]| unsafe {
+                gebp_loop(m, n, k, alpha, a, b, c, params, apack, bpack)
+            },
+        );
+    }
+
+    /// The GEBP loop nest of [`dgemm`], over arena-leased packed panels.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn gebp_loop(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                        b: &[f64], c: &mut [f64], params: &GemmParams,
+                        apack: &mut [f64], bpack: &mut [f64]) {
+        let &GemmParams { mc, nc, kc, .. } = params;
         let mut acc = [0.0f64; MR * NR];
         let mut j0 = 0;
         while j0 < n {
@@ -565,16 +586,65 @@ mod avx2 {
         assert_eq!(a.len(), m * k);
         assert_eq!(b.len(), k * n);
         assert_eq!(c.len(), m * n);
-        let mut report = FtReport::none();
         if m == 0 || n == 0 {
-            return report;
+            return FtReport::none();
         }
         let &GemmParams { mc, nc, kc, .. } = params;
+        // checksum vectors, packing panels, and ABFT scratch come from
+        // one zeroed arena lease — steady-state protected GEMMs are
+        // allocation-free
+        arena::with(
+            [m, n, m, n,
+             arena::packed_a_len(mc, kc, MR),
+             arena::packed_b_len(nc, kc, NR),
+             kc, kc, mc, mc, nc, nc],
+            // SAFETY: the caller vouched for avx2+fma
+            |[cr_enc, cc_enc, cr_ref, cc_ref, apack, bpack, be, eta,
+              crenc_loc, crref_loc, ccenc_loc, ccref_loc]| unsafe {
+                fused_loop(m, n, k, alpha, a, b, beta, c, params, inject,
+                           FusedScratch { cr_enc, cc_enc, cr_ref, cc_ref,
+                                          apack, bpack, be, eta, crenc_loc,
+                                          crref_loc, ccenc_loc, ccref_loc })
+            },
+        )
+    }
+
+    /// Arena-leased scratch of one fused AVX2 GEMM (the accumulator
+    /// tile stays a stack array in [`fused_loop`]).
+    struct FusedScratch<'s> {
+        cr_enc: &'s mut [f64],
+        cc_enc: &'s mut [f64],
+        cr_ref: &'s mut [f64],
+        cc_ref: &'s mut [f64],
+        apack: &'s mut [f64],
+        bpack: &'s mut [f64],
+        be: &'s mut [f64],
+        eta: &'s mut [f64],
+        crenc_loc: &'s mut [f64],
+        crref_loc: &'s mut [f64],
+        ccenc_loc: &'s mut [f64],
+        ccref_loc: &'s mut [f64],
+    }
+
+    /// The fused loop nest of [`dgemm_abft_fused`], operating entirely
+    /// on arena-leased scratch.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn fused_loop(m: usize, n: usize, k: usize, alpha: f64,
+                         a: &[f64], b: &[f64], beta: f64, c: &mut [f64],
+                         params: &GemmParams, inject: &[Strike],
+                         scratch: FusedScratch<'_>) -> FtReport {
+        let FusedScratch { cr_enc, cc_enc, cr_ref, cc_ref, apack, bpack,
+                           be, eta, crenc_loc, crref_loc, ccenc_loc,
+                           ccref_loc } = scratch;
+        let &GemmParams { mc, nc, kc, .. } = params;
+        let mut report = FtReport::none();
 
         // fused β-scaling + checksum seeding, exactly as the scalar
         // fused kernel (each C element is read once anyway)
-        let mut cr_enc = vec![0.0; m];
-        let mut cc_enc = vec![0.0; n];
         for i in 0..m {
             let row = &mut c[i * n..(i + 1) * n];
             let mut rsum = 0.0;
@@ -585,22 +655,14 @@ mod avx2 {
             }
             cr_enc[i] = rsum;
         }
-        let mut cr_ref = cr_enc.clone();
-        let mut cc_ref = cc_enc.clone();
+        cr_ref.copy_from_slice(cr_enc);
+        cc_ref.copy_from_slice(cc_enc);
 
         if k == 0 || alpha == 0.0 {
             return report;
         }
 
-        let mut apack = vec![0.0; mc.div_ceil(MR) * MR * kc];
-        let mut bpack = vec![0.0; nc.div_ceil(NR) * NR * kc];
         let mut acc = [0.0f64; MR * NR];
-        let mut be = vec![0.0; kc];
-        let mut eta = vec![0.0; kc];
-        let mut crenc_loc = vec![0.0; mc];
-        let mut crref_loc = vec![0.0; mc];
-        let mut ccenc_loc = vec![0.0; nc];
-        let mut ccref_loc = vec![0.0; nc];
         let (mut max_a, mut max_b) = (0.0f64, 0.0f64);
         let mut corrected_tol = 0.0f64;
 

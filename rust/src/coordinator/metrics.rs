@@ -56,6 +56,9 @@ struct KernelLedger {
     slo_target: f64,
     /// Completions whose end-to-end latency exceeded the target.
     slo_burns: u64,
+    /// Largest number of items a single fused batch executed through
+    /// this kernel (0 = never batch-fused).
+    max_items_per_batch: u64,
     /// kernel-exec latencies (seconds)
     exec: Vec<f64>,
     /// end-to-end latencies (queue + exec, seconds)
@@ -75,6 +78,12 @@ struct Inner {
     errors_escaped: u64,
     deferrals: u64,
     starvation_reserves: u64,
+    /// Drained batches the worker executed as ONE batched-kernel call
+    /// instead of per-item plans.
+    batches_fused: u64,
+    /// Items those fused batches carried (so `items_fused /
+    /// batches_fused` is the realized mean batch size).
+    items_fused: u64,
     thread_budget: u64,
     max_in_flight_threads: u64,
     max_queue_depth: u64,
@@ -106,6 +115,9 @@ pub struct KernelStats {
     pub slo_target: f64,
     /// Completions that missed the target.
     pub slo_burns: u64,
+    /// High-watermark of items per fused batch executed through this
+    /// kernel (0 = never batch-fused; merges take the max).
+    pub max_items_per_batch: u64,
     /// Kernel-exec latency summary (seconds).
     pub exec: Summary,
     /// End-to-end latency summary (queue + exec, seconds).
@@ -173,6 +185,13 @@ pub struct MetricsSnapshot {
     /// `starvation_limit` times, so the shard reserved its thread
     /// budget for that group until it fit.
     pub starvation_reserves: u64,
+    /// Drained batches the worker fused into ONE batched-kernel call
+    /// (every item same planned kernel, every dim under the batched
+    /// sibling's ceiling) instead of executing per-item plans.
+    pub batches_fused: u64,
+    /// Items carried by those fused batches; `items_fused /
+    /// batches_fused` is the realized mean fused-batch size.
+    pub items_fused: u64,
     /// Shards the elastic tier added (cluster-level; zero in per-shard
     /// snapshots, summed by merge).
     pub scale_ups: u64,
@@ -276,6 +295,19 @@ impl Metrics {
         self.inner.lock().unwrap().starvation_reserves += 1;
     }
 
+    /// Record one fused batch: `items` jobs executed as a single call on
+    /// the batched `kernel`. The per-item completions are recorded
+    /// separately (by [`Metrics::record_completion`], under the same
+    /// kernel name); this tracks how often fusion fired and how large
+    /// the fused batches ran.
+    pub fn record_batch_fusion(&self, kernel: &'static str, items: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches_fused += 1;
+        m.items_fused += items;
+        let k = m.kernels.entry(kernel).or_default();
+        k.max_items_per_batch = k.max_items_per_batch.max(items);
+    }
+
     /// Cheap cumulative counters for the autoscaler's sampling loop:
     /// `(completed, shed, slo_burns)` without cloning any latency
     /// samples (a full [`Metrics::snapshot`] clones every retained
@@ -323,6 +355,8 @@ impl Metrics {
             plan_cache_misses: 0,
             deferrals: m.deferrals,
             starvation_reserves: m.starvation_reserves,
+            batches_fused: m.batches_fused,
+            items_fused: m.items_fused,
             thread_budget: m.thread_budget,
             max_in_flight_threads: m.max_in_flight_threads,
             max_queue_depth: m.max_queue_depth,
@@ -338,6 +372,7 @@ impl Metrics {
                 errors_escaped: k.errors_escaped,
                 slo_target: k.slo_target,
                 slo_burns: k.slo_burns,
+                max_items_per_batch: k.max_items_per_batch,
                 exec: Summary::from_samples(&k.exec),
                 e2e: Summary::from_samples(&k.e2e),
                 queue: Summary::from_samples(&k.queue),
@@ -417,6 +452,8 @@ impl MetricsSnapshot {
                     .field("slo", Json::obj()
                         .field("target_s", Json::Num(k.slo_target))
                         .field("burns", Json::Int(k.slo_burns)))
+                    .field("max_items_per_batch",
+                           Json::Int(k.max_items_per_batch))
                     .field("exec", summary_json(&k.exec))
                     .field("e2e", summary_json(&k.e2e))
                     .field("queue", summary_json(&k.queue))
@@ -441,6 +478,8 @@ impl MetricsSnapshot {
                 .field("deferrals", Json::Int(self.deferrals))
                 .field("starvation_reserves",
                        Json::Int(self.starvation_reserves))
+                .field("batches_fused", Json::Int(self.batches_fused))
+                .field("items_fused", Json::Int(self.items_fused))
                 .field("thread_budget", Json::Int(self.thread_budget))
                 .field("max_in_flight_threads",
                        Json::Int(self.max_in_flight_threads))
@@ -483,6 +522,8 @@ impl MetricsSnapshot {
             out.plan_cache_misses += p.plan_cache_misses;
             out.deferrals += p.deferrals;
             out.starvation_reserves += p.starvation_reserves;
+            out.batches_fused += p.batches_fused;
+            out.items_fused += p.items_fused;
             out.scale_ups += p.scale_ups;
             out.scale_downs += p.scale_downs;
             out.keys_migrated += p.keys_migrated;
@@ -507,6 +548,8 @@ impl MetricsSnapshot {
                     dst.slo_target = 0.0;
                 }
                 dst.slo_burns += k.slo_burns;
+                dst.max_items_per_batch =
+                    dst.max_items_per_batch.max(k.max_items_per_batch);
                 dst.exec_samples.extend_from_slice(&k.exec_samples);
                 dst.e2e_samples.extend_from_slice(&k.e2e_samples);
                 dst.queue_samples.extend_from_slice(&k.queue_samples);
@@ -664,6 +707,37 @@ mod tests {
         assert_eq!(merged.scale_downs, 1);
         assert_eq!(merged.keys_migrated, 40);
         assert_eq!(merged.starvation_reserves, 3);
+    }
+
+    /// Batch-fusion counters: totals sum, the per-kernel items-per-batch
+    /// high-watermark rides snapshots and merges by max, and the JSON
+    /// artifact carries all three (append-only schema).
+    #[test]
+    fn batch_fusion_counters_accumulate_and_merge() {
+        let m = Metrics::new();
+        m.record_batch_fusion("dgemm/batched-simd", 6);
+        m.record_batch_fusion("dgemm/batched-simd", 3);
+        for _ in 0..9 {
+            m.record_completion("dgemm/batched-simd", "dgemm", 0.1, 0.1, 0.0,
+                                0, 0, 0, 0.0);
+        }
+        let a = m.snapshot();
+        assert_eq!(a.batches_fused, 2);
+        assert_eq!(a.items_fused, 9);
+        assert_eq!(a.kernels["dgemm/batched-simd"].max_items_per_batch, 6);
+        let n = Metrics::new();
+        n.record_batch_fusion("dgemm/batched-simd", 8);
+        n.record_completion("dgemm/batched-simd", "dgemm", 0.1, 0.1, 0.0, 0,
+                            0, 0, 0.0);
+        let merged = MetricsSnapshot::merge(&[a, n.snapshot()]);
+        assert_eq!(merged.batches_fused, 3, "fusion totals sum");
+        assert_eq!(merged.items_fused, 17);
+        assert_eq!(merged.kernels["dgemm/batched-simd"].max_items_per_batch,
+                   8, "the high-watermark merges by max, not sum");
+        let text = merged.to_json().render();
+        assert!(text.contains(r#""batches_fused":3"#));
+        assert!(text.contains(r#""items_fused":17"#));
+        assert!(text.contains(r#""max_items_per_batch":8"#));
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //! instead of hand-maintaining per-routine × per-variant match arms.
 
 use crate::blas::level3::GemmParams;
-use crate::blas::{blocked, level1, level2, level3, naive, parallel, simd,
-                  Impl};
+use crate::blas::{batched, blocked, level1, level2, level3, naive, parallel,
+                  simd, Impl};
 use crate::config::Profile;
 use crate::coordinator::request::{
     Backend, BlasRequest, BlasResult, Level,
@@ -101,6 +101,11 @@ pub struct KernelDescriptor {
     /// Minimum principal dimension in units of `GemmParams.mr` (banded
     /// kernels need at least two MR-aligned bands; 0 = no floor).
     pub min_mr_multiple: usize,
+    /// Largest principal dimension an item may have to ride this
+    /// kernel's batch-fused execution (0 = not batch-capable). Only the
+    /// `dgemm/batched*` entries set this: batch fusion pays off exactly
+    /// where per-call threading does not — many small items.
+    pub batch_dim_ceiling: usize,
     /// One-line human description (bench row notes).
     pub summary: &'static str,
     /// The kernel entry point.
@@ -125,6 +130,12 @@ impl KernelDescriptor {
     /// worker thread itself; threaded kernels cost their whole grant.
     pub fn thread_cost(&self, grant: usize) -> usize {
         if self.threaded { grant.max(1) } else { 1 }
+    }
+
+    /// Can an item of principal dimension `dim` ride this kernel's
+    /// batch-fused execution? Always false for non-batched kernels.
+    pub fn admits_batch(&self, dim: usize) -> bool {
+        self.batch_dim_ceiling > 0 && dim > 0 && dim <= self.batch_dim_ceiling
     }
 }
 
@@ -184,6 +195,27 @@ impl KernelRegistry {
             .collect()
     }
 
+    /// The batch-fused counterpart of a per-call kernel, if one is
+    /// registered: same routine, variant family, and protection scheme.
+    /// The server's worker fuses a drained batch through this mapping
+    /// when every item's plan resolved to `k` and every item's dim
+    /// clears [`KernelDescriptor::admits_batch`]. Both serial and MT
+    /// per-call kernels map — a batch of MT-planned small GEMMs is
+    /// exactly the per-item fork/join waste fusion removes (the fused
+    /// batch reuses the plan's grant for one pooled frame instead).
+    pub fn batched_sibling(&self, k: &KernelDescriptor)
+                           -> Option<&'static KernelDescriptor> {
+        if k.batch_dim_ceiling > 0 {
+            return None; // already batched
+        }
+        self.entries.iter().find(|e| {
+            e.batch_dim_ceiling > 0
+                && e.routine == k.routine
+                && e.variant == k.variant
+                && e.scheme == k.scheme
+        })
+    }
+
     /// Unique routine names, in registration order.
     pub fn routines(&self) -> Vec<&'static str> {
         let mut out: Vec<&'static str> = Vec::new();
@@ -235,6 +267,7 @@ const fn serial_with(name: &'static str, routine: &'static str, level: Level,
         policies,
         threaded: false,
         min_mr_multiple: 0,
+        batch_dim_ceiling: 0,
         summary,
         execute,
     }
@@ -260,6 +293,7 @@ const fn protected(name: &'static str, routine: &'static str, level: Level,
         policies,
         threaded: false,
         min_mr_multiple: 0,
+        batch_dim_ceiling: 0,
         summary,
         execute,
     }
@@ -280,6 +314,7 @@ const fn threaded(name: &'static str, routine: &'static str, scheme: Scheme,
         // at least two MR-aligned row bands, else the MT frame falls
         // through to the serial kernel anyway
         min_mr_multiple: 2,
+        batch_dim_ceiling: 0,
         summary,
         execute,
     }
@@ -302,6 +337,7 @@ const fn protected_simd(name: &'static str, routine: &'static str,
         policies,
         threaded: false,
         min_mr_multiple: 0,
+        batch_dim_ceiling: 0,
         summary,
         execute,
     }
@@ -325,6 +361,41 @@ const fn threaded_simd(name: &'static str, routine: &'static str,
         policies,
         threaded: true,
         min_mr_multiple: 2,
+        batch_dim_ceiling: 0,
+        summary,
+        execute,
+    }
+}
+
+/// Every `dgemm/batched*` entry fuses items up to this principal
+/// dimension. Above it a request is better served per-call (the MT
+/// kernels band it across the pool); at or below it per-call threading
+/// is idle overhead and batch fusion wins.
+pub const BATCH_DIM_CEILING: usize = 64;
+
+/// Batch-fused kernel: executes a whole same-plan batch of small GEMMs
+/// under one threading frame (see [`crate::blas::batched`]). Registered
+/// `threaded` — a fused batch occupies one pool grant, debited once per
+/// batch, not per item — with the standard two-band MR floor so the
+/// planner's per-request selection never prefers it over the earlier MT
+/// entries: batched kernels are entered through the server's fusion
+/// step ([`KernelRegistry::batched_sibling`]), or as a batch of one via
+/// the uniform [`KernelFn`] entry point.
+const fn batched_kernel(name: &'static str, variant: Impl, scheme: Scheme,
+                        policies: &'static [FtPolicy],
+                        summary: &'static str, execute: KernelFn)
+                        -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine: "dgemm",
+        level: Level::L3,
+        variant,
+        backend: Backend::for_variant(variant),
+        scheme,
+        policies,
+        threaded: true,
+        min_mr_multiple: 2,
+        batch_dim_ceiling: BATCH_DIM_CEILING,
         summary,
         execute,
     }
@@ -744,7 +815,10 @@ fn dtrmv_dmr(c: &ExecCtx) -> KernelOut {
 // ------------------------------------------------------- Level 3 kernels
 
 /// Translate planned faults into rank-K_C strikes for an m×n ABFT frame.
-fn strikes(faults: &[Fault], nsteps: usize, m: usize, n: usize) -> Vec<Strike> {
+/// Shared with the router's batch-fusion path, which arms one fault per
+/// batch item through the same mapping.
+pub(crate) fn strikes(faults: &[Fault], nsteps: usize, m: usize, n: usize)
+                      -> Vec<Strike> {
     let nsteps = nsteps.max(1);
     faults
         .iter()
@@ -868,6 +942,57 @@ fn dgemm_fused_simd_mt(c: &ExecCtx) -> KernelOut {
                                                 &b.data, *beta, &mut cd,
                                                 params, c.threads, &inj);
     (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+}
+
+/// Run one dgemm request through a batched driver as a batch of one —
+/// the uniform [`KernelFn`] face of the `dgemm/batched*` entries. The
+/// server's fusion path calls the drivers directly with the whole
+/// drained batch; this entry keeps the registry contract (CLI `run`,
+/// bench harness, campaign arming) uniform.
+fn dgemm_batched_with(
+    c: &ExecCtx,
+    driver: fn(&mut [batched::GemmItem<'_>], &GemmParams, usize)
+               -> Vec<crate::ft::FtReport>,
+) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let params = &c.profile.gemm;
+    let inj = strikes(c.faults, kk.div_ceil(params.kc), m, n);
+    let mut cd = c0.data.clone();
+    let mut items = vec![batched::GemmItem {
+        m,
+        n,
+        k: kk,
+        alpha: *alpha,
+        beta: *beta,
+        a: &a.data[..],
+        b: &b.data[..],
+        c: &mut cd[..],
+        inject: inj,
+    }];
+    let reps = driver(&mut items, params, c.threads);
+    drop(items);
+    (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), reps[0])
+}
+
+fn dgemm_batched_one(c: &ExecCtx) -> KernelOut {
+    dgemm_batched_with(c, |items, params, threads| {
+        batched::dgemm_batched(items, params, threads);
+        vec![FtReport::none(); items.len().max(1)]
+    })
+}
+
+fn dgemm_batched_simd_one(c: &ExecCtx) -> KernelOut {
+    dgemm_batched_with(c, |items, params, threads| {
+        batched::dgemm_batched_simd(items, params, threads);
+        vec![FtReport::none(); items.len().max(1)]
+    })
+}
+
+fn dgemm_batched_fused_one(c: &ExecCtx) -> KernelOut {
+    dgemm_batched_with(c, batched::dgemm_batched_abft_fused_simd)
 }
 
 fn dgemm_unfused(c: &ExecCtx) -> KernelOut {
@@ -1512,6 +1637,18 @@ static ENTRIES: &[KernelDescriptor] = &[
                 "shares the tuned kernel (no FT path)", dsyrk_tuned),
     serial_with("dsyrk/tuned", "dsyrk", Level::L3, Impl::Tuned, ANY_POLICY,
                 "packed rank-k frame (no FT path)", dsyrk_tuned),
+    // ---------------------------------------------- batch-fused kernels
+    batched_kernel("dgemm/batched", Impl::Tuned, Scheme::None, UNPROTECTED,
+                   "batch of small tuned GEMMs, one pooled row-band queue",
+                   dgemm_batched_one),
+    batched_kernel("dgemm/batched-simd", Impl::Simd, Scheme::None,
+                   UNPROTECTED,
+                   "batch of small SIMD GEMMs under one threading frame",
+                   dgemm_batched_simd_one),
+    batched_kernel("dgemm/batched-abft-fused-simd", Impl::Simd,
+                   Scheme::AbftFused, HYBRID_ONLY,
+                   "batch-fused ABFT: per-item checksum state and reports",
+                   dgemm_batched_fused_one),
 ];
 
 #[cfg(test)]
@@ -1607,6 +1744,95 @@ mod tests {
             assert_eq!(e.thread_cost(0), 1, "{}: zero grant clamps", e.name);
         }
         assert!(reg.by_id(KernelId(reg.entries().len() as u16)).is_none());
+    }
+
+    /// The fusion mapping: each batchable serial dgemm kernel resolves
+    /// to exactly the batched entry sharing its variant and scheme, and
+    /// everything else resolves to nothing.
+    #[test]
+    fn batched_siblings_map_variant_and_scheme_exactly() {
+        let reg = KernelRegistry::global();
+        for (serial, want) in [
+            ("dgemm/tuned", "dgemm/batched"),
+            ("dgemm/tuned-mt", "dgemm/batched"),
+            ("dgemm/simd", "dgemm/batched-simd"),
+            ("dgemm/simd-mt", "dgemm/batched-simd"),
+            ("dgemm/abft-fused-simd", "dgemm/batched-abft-fused-simd"),
+            ("dgemm/abft-fused-simd-mt", "dgemm/batched-abft-fused-simd"),
+        ] {
+            let k = reg.find(serial).unwrap();
+            let b = reg.batched_sibling(k).unwrap();
+            assert_eq!(b.name, want, "{serial}: wrong batched sibling");
+            assert_eq!(b.scheme, k.scheme);
+            assert_eq!(b.policies, k.policies,
+                       "{serial}: fusion must not widen policy support");
+            assert!(b.threaded, "{want}: a batch debits one pool grant");
+            assert!(b.admits_batch(BATCH_DIM_CEILING));
+            assert!(!b.admits_batch(BATCH_DIM_CEILING + 1),
+                    "{want}: must refuse items above the ceiling");
+            assert!(!b.admits_batch(0));
+        }
+        // scalar-fused (no scalar batched-fused entry), unfused,
+        // weighted, naive/blocked, other routines, and the batched
+        // entries themselves never fuse
+        for name in ["dgemm/naive", "dgemm/blocked", "dgemm/abft-fused",
+                     "dgemm/abft-fused-mt", "dgemm/abft-unfused",
+                     "dgemm/abft-weighted", "dgemm/batched-simd",
+                     "dsymm/tuned", "dsymm/tuned-mt", "ddot/tuned"] {
+            let k = reg.find(name).unwrap();
+            assert!(reg.batched_sibling(k).is_none(),
+                    "{name}: unexpected batched sibling");
+        }
+        // only batched entries admit batch items at all
+        assert!(!reg.find("dgemm/simd").unwrap().admits_batch(8));
+    }
+
+    /// The batched entries' uniform KernelFn face runs a batch of one:
+    /// a strike through the fused entry is detected, corrected, and
+    /// reported exactly like the serial fused kernel would.
+    #[test]
+    fn batched_entry_executes_a_batch_of_one() {
+        use crate::util::matrix::allclose;
+        use crate::util::rng::Rng;
+        let reg = KernelRegistry::global();
+        let profile = Profile::skylake_sim();
+        let mut rng = Rng::new(0xB1);
+        let n = 24;
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let mut want = vec![0.0; n * n];
+        naive::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut want);
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a,
+            b,
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        };
+        let fault = Fault { step: 0, i: 5, j: 7, delta: 4e4 };
+        for (name, policy, faults, hits) in [
+            ("dgemm/batched", FtPolicy::None, &[][..], 0u64),
+            ("dgemm/batched-simd", FtPolicy::None, &[][..], 0),
+            ("dgemm/batched-abft-fused-simd", FtPolicy::Hybrid,
+             &[fault][..], 1),
+        ] {
+            let k = reg.find(name).unwrap();
+            let ctx = ExecCtx {
+                req: &req,
+                profile: &profile,
+                policy,
+                faults,
+                threads: 1,
+            };
+            let (res, ft) = (k.execute)(&ctx);
+            assert_eq!(ft.errors_detected, hits, "{name}: detection count");
+            assert_eq!(ft.errors_corrected, hits, "{name}: correction count");
+            let BlasResult::Matrix(got) = res else {
+                panic!("{name}: dgemm must return a matrix");
+            };
+            assert!(allclose(&got.data, &want, 1e-8, 1e-8),
+                    "{name}: batch-of-one result wrong");
+        }
     }
 
     /// Threaded kernels are L3-only, carry an MR floor, and have a

@@ -16,16 +16,20 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::blas::Impl;
+use crate::blas::{batched, Impl};
 use crate::config::Profile;
 use crate::coordinator::pjrt_backend::PjrtBackend;
 use crate::coordinator::plan::{ExecutionPlan, Planner};
-use crate::coordinator::registry::ExecCtx;
+use crate::coordinator::registry::{
+    self, ExecCtx, KernelDescriptor, Scheme,
+};
 use crate::coordinator::request::{
-    Backend, BlasRequest, BlasResponse,
+    Backend, BlasRequest, BlasResponse, BlasResult,
 };
 use crate::ft::injector::{CampaignConfig, Fault, InjectionCampaign};
 use crate::ft::policy::FtPolicy;
+use crate::ft::FtReport;
+use crate::util::matrix::Matrix;
 
 /// The router. `pjrt` is optional so the native path works without
 /// artifacts on disk (e.g. unit tests).
@@ -102,6 +106,82 @@ impl Router {
     pub fn execute_planned(&self, plan: &ExecutionPlan, req: &BlasRequest,
                            fault: Option<Fault>) -> Result<BlasResponse> {
         Ok(execute_plan(req, plan, &self.profile, fault))
+    }
+
+    /// Execute a whole drained batch through one batch-fused kernel —
+    /// the server's small-GEMM fast path. `kernel` must be a
+    /// `dgemm/batched*` entry (the worker resolves it via
+    /// [`crate::coordinator::registry::KernelRegistry::batched_sibling`])
+    /// and every request must be a DGEMM whose plan resolved to that
+    /// entry's serial sibling. The batch runs in **one** driver call
+    /// under one threading frame; each item keeps its own fault (armed
+    /// by the caller in batch order, so campaign occurrence sequences
+    /// continue exactly) and gets its own [`BlasResponse`] with its own
+    /// `FtReport`, index-aligned with `reqs`.
+    ///
+    /// The driver times the batch as a whole; the per-item
+    /// `exec_seconds` is the batch mean, which keeps ledger sums exact.
+    pub fn execute_batch(&self, kernel: &'static KernelDescriptor,
+                         reqs: &[(&BlasRequest, Option<Fault>)],
+                         threads: usize) -> Vec<BlasResponse> {
+        let t0 = std::time::Instant::now();
+        let params = &self.profile.gemm;
+        let mut dims = Vec::with_capacity(reqs.len());
+        let mut outs: Vec<Vec<f64>> = Vec::with_capacity(reqs.len());
+        for (req, fault) in reqs {
+            let BlasRequest::Dgemm { alpha, a, b, beta, c } = req else {
+                unreachable!("batch fusion drained a non-dgemm request: {}",
+                             req.routine())
+            };
+            dims.push((a.rows, b.cols, a.cols, *alpha, *beta, &a.data,
+                       &b.data, *fault));
+            outs.push(c.data.clone());
+        }
+        let mut items: Vec<batched::GemmItem<'_>> = dims
+            .iter()
+            .zip(outs.iter_mut())
+            .map(|(&(m, n, k, alpha, beta, a, b, fault), cd)| {
+                let inject = match fault {
+                    Some(f) => registry::strikes(
+                        &[f], k.div_ceil(params.kc), m.max(1), n.max(1)),
+                    None => Vec::new(),
+                };
+                batched::GemmItem {
+                    m, n, k, alpha, beta,
+                    a: &a[..], b: &b[..], c: &mut cd[..], inject,
+                }
+            })
+            .collect();
+        let reports = match (kernel.variant, kernel.scheme) {
+            (Impl::Tuned, Scheme::None) => {
+                batched::dgemm_batched(&mut items, params, threads);
+                vec![FtReport::none(); reqs.len()]
+            }
+            (Impl::Simd, Scheme::None) => {
+                batched::dgemm_batched_simd(&mut items, params, threads);
+                vec![FtReport::none(); reqs.len()]
+            }
+            (Impl::Simd, Scheme::AbftFused) => {
+                batched::dgemm_batched_abft_fused_simd(&mut items, params,
+                                                       threads)
+            }
+            (v, s) => unreachable!(
+                "{}: no batched driver for variant {}/scheme {s:?}",
+                kernel.name, v.name()),
+        };
+        drop(items);
+        let per_item = t0.elapsed().as_secs_f64() / reqs.len().max(1) as f64;
+        dims.into_iter()
+            .zip(outs)
+            .zip(reports)
+            .map(|(((m, n, ..), cd), ft)| BlasResponse {
+                result: BlasResult::Matrix(Matrix::from_vec(m, n, cd)),
+                ft,
+                backend: kernel.backend,
+                kernel: kernel.name,
+                exec_seconds: per_item,
+            })
+            .collect()
     }
 
     /// Execute a request under a policy with an optional planned fault.
@@ -332,6 +412,72 @@ mod tests {
         let plan = router.plan(&req, FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/abft-fused");
         assert!(plan.describe().contains("dgemm/abft-fused"));
+    }
+
+    /// One `execute_batch` call serves every item of a fused batch:
+    /// per-item results match the sequential oracle, per-item faults
+    /// are corrected by the item that owns them, and every response
+    /// reports the batched kernel name.
+    #[test]
+    fn execute_batch_serves_each_item_with_its_own_report() {
+        use crate::coordinator::registry::KernelRegistry;
+        let mut rng = Rng::new(0xBA);
+        let dims = [(24usize, 16usize, 16usize), (9, 12, 8), (32, 8, 24)];
+        let reqs: Vec<BlasRequest> = dims
+            .iter()
+            .map(|&(m, n, k)| BlasRequest::Dgemm {
+                alpha: 1.0,
+                a: Matrix::random(m, k, &mut rng),
+                b: Matrix::random(k, n, &mut rng),
+                beta: 0.0,
+                c: Matrix::zeros(m, n),
+            })
+            .collect();
+        let oracles: Vec<BlasResponse> = reqs.iter().map(oracle).collect();
+        let router =
+            Router::native_only(Profile::default(), Backend::NativeSimd);
+        let kernel = KernelRegistry::global()
+            .find("dgemm/batched-abft-fused-simd")
+            .unwrap();
+        // fault on items 0 and 2 only; item 1 must stay clean
+        let strike = |m: usize, n: usize| {
+            Some(Fault { step: 0, i: m / 2, j: n / 3, delta: 6e4 })
+        };
+        let batch: Vec<(&BlasRequest, Option<Fault>)> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let (m, n, _) = dims[i];
+                (r, if i != 1 { strike(m, n) } else { None })
+            })
+            .collect();
+        for threads in [1usize, 4] {
+            let resps = router.execute_batch(kernel, &batch, threads);
+            assert_eq!(resps.len(), reqs.len());
+            for (i, (resp, want)) in resps.iter().zip(&oracles).enumerate() {
+                assert_eq!(resp.kernel, "dgemm/batched-abft-fused-simd");
+                let hit = (i != 1) as u64;
+                assert_eq!(resp.ft.errors_detected, hit,
+                           "t={threads} item {i}: detection count");
+                assert_eq!(resp.ft.errors_corrected, hit,
+                           "t={threads} item {i}: correction count");
+                assert!(close(&resp.result, &want.result, 1e-7),
+                        "t={threads} item {i}: batched result wrong");
+            }
+        }
+        // the unprotected batched entries serve the same batch cleanly
+        let clean: Vec<(&BlasRequest, Option<Fault>)> =
+            reqs.iter().map(|r| (r, None)).collect();
+        for name in ["dgemm/batched", "dgemm/batched-simd"] {
+            let kernel = KernelRegistry::global().find(name).unwrap();
+            let resps = router.execute_batch(kernel, &clean, 2);
+            for (i, (resp, want)) in resps.iter().zip(&oracles).enumerate() {
+                assert_eq!(resp.kernel, name);
+                assert_eq!(resp.ft, crate::ft::FtReport::none());
+                assert!(close(&resp.result, &want.result, 1e-8),
+                        "{name} item {i}: batched result wrong");
+            }
+        }
     }
 
     /// The weighted-checksum policy is reachable end to end and corrects

@@ -24,7 +24,14 @@
 //!    would oversubscribe it while serial batches flow past.
 //! 3. **Execution** — workers run the pre-resolved plan via
 //!    [`Router::execute_planned`]; no planner lookup happens on the hot
-//!    path. Unplanned (PJRT) jobs fall back to `Router::execute`.
+//!    path. Unplanned (PJRT) jobs fall back to `Router::execute`. A
+//!    drained batch of ≥2 small GEMMs whose shared plan has a
+//!    batch-fused sibling kernel
+//!    ([`crate::coordinator::registry::KernelRegistry::batched_sibling`])
+//!    short-circuits into ONE [`Router::execute_batch`] call — one
+//!    pooled work queue under at most one threading frame instead of
+//!    per-item kernel launches (counted as `batches_fused` /
+//!    `items_fused` in the ledger).
 //!
 //! Completions land in the per-kernel metrics ledger — tagged with the
 //! profile's latency-SLO target for the executed kernel — together with
@@ -42,10 +49,10 @@ use crate::config::SloTable;
 use crate::coordinator::batcher::{Batcher, Pending};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::plan::{ExecutionPlan, PlanCache};
-use crate::coordinator::registry::KernelId;
+use crate::coordinator::registry::{KernelId, KernelRegistry};
 use crate::coordinator::request::{Backend, BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
-use crate::ft::injector::{Injector, InjectorConfig};
+use crate::ft::injector::{Fault, Injector, InjectorConfig};
 use crate::ft::policy::FtPolicy;
 
 /// Typed admission failures — distinguishable from kernel errors so
@@ -493,6 +500,94 @@ impl Drop for CostCredit<'_> {
     }
 }
 
+/// Batch-fusion fast path. A drained batch is kernel-uniform (the
+/// batcher keys planned jobs by kernel id), so when its plan's kernel
+/// has a batched sibling and every item's principal dim clears the
+/// sibling's small-dim ceiling, the whole batch executes as ONE
+/// [`Router::execute_batch`] call: one pooled (item × row-band) work
+/// queue under at most one threading frame sized by the batch's debited
+/// thread grant, arena-shared packing, per-item [`crate::ft::FtReport`]s.
+///
+/// Faults are armed per item **in batch order** against the *batched*
+/// kernel's id and scheme — completions land in the ledger under the
+/// batched kernel's name, so campaign occurrence accounting balances
+/// exactly against the per-item ledger rows (no double or dropped
+/// strikes).
+///
+/// Returns `None` when the batch was fully served (every reply sent),
+/// or hands the batch back unchanged for the per-item path.
+fn try_fused(shared: &Shared, router: &Router, batch: Batch,
+             threads: usize) -> Option<Batch> {
+    if batch.len() < 2 {
+        return Some(batch); // nothing to fuse
+    }
+    let Some(plan) = batch[0].item.plan else {
+        return Some(batch); // unplanned (PJRT) batches never fuse
+    };
+    let registry = KernelRegistry::global();
+    let Some(bk) = registry.batched_sibling(plan.kernel) else {
+        return Some(batch);
+    };
+    if !batch.iter().all(|p| {
+        p.item.plan.is_some() && bk.admits_batch(p.item.req.dim())
+    }) {
+        return Some(batch);
+    }
+    let bk_id = registry.id_of(bk).expect("batched kernels live in the table");
+    let started = Instant::now();
+    let mut faults: Vec<Option<Fault>> = Vec::with_capacity(batch.len());
+    let mut queue_s: Vec<f64> = Vec::with_capacity(batch.len());
+    for pending in &batch {
+        let job = &pending.item;
+        queue_s.push(started.duration_since(job.enqueued).as_secs_f64());
+        // same precedence as the per-item path: a live campaign outranks
+        // the shard's planned per-call injector
+        let fault = match router.campaign() {
+            Some(campaign) => {
+                campaign.arm(bk_id, bk.scheme, job.req.dim().max(1))
+            }
+            None => {
+                let step = shared.steps.fetch_add(1, Ordering::SeqCst) as usize;
+                let mut inj = shared.injector.lock().unwrap();
+                inj.take(step).map(|mut f| {
+                    let dim = job.req.dim();
+                    f.i %= dim.max(1);
+                    f.j %= dim.max(1);
+                    f.step = 1; // strike the second panel/chunk
+                    f
+                })
+            }
+        };
+        faults.push(fault);
+    }
+    let reqs: Vec<(&BlasRequest, Option<Fault>)> = batch
+        .iter()
+        .zip(&faults)
+        .map(|(p, f)| (&p.item.req, *f))
+        .collect();
+    let resps = router.execute_batch(bk, &reqs, threads);
+    drop(reqs);
+    shared.metrics.record_batch_fusion(bk.name, batch.len() as u64);
+    for (((pending, resp), fault), qs) in
+        batch.into_iter().zip(resps).zip(faults).zip(queue_s)
+    {
+        let job = pending.item;
+        shared.metrics.record_completion(
+            resp.kernel,
+            job.req.routine(),
+            resp.exec_seconds,
+            job.enqueued.elapsed().as_secs_f64(),
+            qs,
+            resp.ft.errors_detected,
+            resp.ft.errors_corrected,
+            fault.is_some() as u64,
+            shared.slo.target(resp.kernel, bk.level),
+        );
+        let _ = job.reply.send(Ok(resp));
+    }
+    None
+}
+
 fn worker_loop(shared: Arc<Shared>) {
     let router = shared.router.clone();
     let policy = shared.policy;
@@ -522,6 +617,12 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         };
         let _credit = CostCredit { shared: shared.as_ref(), cost };
+        // small-GEMM fast path: a kernel-uniform batch whose kernel has
+        // a batched sibling executes as one fused call (replies sent
+        // inside); anything else falls back to the per-item loop below
+        let Some(batch) = try_fused(&shared, &router, batch, cost) else {
+            continue;
+        };
         for pending in batch {
             let job = pending.item;
             let started = Instant::now();
@@ -890,6 +991,84 @@ mod tests {
                    "crossing the limit is counted once");
         assert_eq!(snap.deferrals, LIMIT as u64,
                    "only the real bypasses count as deferrals");
+    }
+
+    /// End-to-end batch fusion: a pile of same-plan small DGEMMs drains
+    /// as ONE fused call on the batched sibling kernel, under a live
+    /// campaign. The first (large, unfusable) request pins the single
+    /// worker so the small ones provably group into one batch; every
+    /// armed strike is detected and corrected, completions land under
+    /// the batched kernel's ledger entry, the fusion counters fire, and
+    /// results stay correct.
+    #[test]
+    fn small_gemm_batches_fuse_through_the_batched_kernel() {
+        use crate::ft::injector::CampaignConfig;
+        let campaign = CampaignConfig {
+            stride: 1,
+            rate_per_min: f64::INFINITY,
+            ..Default::default()
+        };
+        let router = Router::native_only(Profile::default(),
+                                         Backend::NativeSimd)
+            .with_campaign(campaign);
+        // ONE worker: it picks up the head-of-queue pin request — a
+        // large DTRSV, whose plan keys a *different* batch group than
+        // the small GEMMs — and executes it (~ms) while the 16 small
+        // submissions (microseconds of clone work each) pile into one
+        // kernel-keyed group, which then drains as a single fused batch
+        let server = Server::start(router, FtPolicy::Hybrid, 1, None, 0);
+        let handle = server.handle();
+        let mut rng = Rng::new(0xBA7C);
+        let big = 1536;
+        let l = Matrix::random_lower_triangular(big, &mut rng);
+        let mut rxs = vec![handle.submit(BlasRequest::Dtrsv {
+            a: l,
+            b: rng.normal_vec(big),
+        })];
+        let n = 32; // small: plans serial, fuses through the sibling
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let mut want = vec![0.0; n * n];
+        crate::blas::naive::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0,
+                                  &mut want);
+        for _ in 0..16 {
+            rxs.push(handle.submit(BlasRequest::Dgemm {
+                alpha: 1.0,
+                a: a.clone(),
+                b: b.clone(),
+                beta: 0.0,
+                c: Matrix::zeros(n, n),
+            }));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.ft.errors_detected, 1,
+                       "stride-1 campaign strikes every protected item");
+            assert_eq!(resp.ft.errors_corrected, 1);
+            if i > 0 {
+                let got = resp.result.as_matrix().unwrap();
+                assert!(crate::util::matrix::allclose(&got.data, &want,
+                                                      1e-7, 1e-7),
+                        "struck small GEMM {i} must still be corrected");
+            }
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 17);
+        assert_eq!(m.failed, 0);
+        // the fusion fast path fired and the ledger says so
+        assert!(m.batches_fused >= 1, "no batch fused");
+        assert!(m.items_fused >= 2, "fused batches carry ≥2 items");
+        let k = &m.kernels["dgemm/batched-abft-fused-simd"];
+        assert!(k.completed >= 2, "fused completions land under the \
+                                   batched kernel's name");
+        assert!(k.max_items_per_batch >= 2);
+        assert_eq!(k.errors_escaped, 0);
+        // exact campaign balance across fused and per-item executions
+        assert_eq!(m.errors_injected, 17);
+        assert_eq!(m.errors_detected, 17);
+        assert_eq!(m.errors_corrected, 17);
+        assert_eq!(m.errors_escaped, 0);
+        assert_eq!(m.injection_mode, "campaign");
     }
 
     /// The admission error is typed (clients match on it to back off)

@@ -61,7 +61,8 @@ impl Burst {
     /// Parse a named arrival pattern (the CLI's `--trace` flag):
     /// `"steady"` is plain Poisson arrivals (no overlay), `"burst"` the
     /// default on/off overlay. Unknown names are an error, listing the
-    /// accepted values.
+    /// accepted values. Shape names that also change the request mix
+    /// (e.g. `small-gemm`) parse through [`TraceShape::from_name`].
     pub fn from_pattern(name: &str) -> Result<Option<Burst>, String> {
         match name {
             "steady" => Ok(None),
@@ -69,6 +70,67 @@ impl Burst {
             other => Err(format!(
                 "unknown trace pattern `{other}` (want steady|burst)")),
         }
+    }
+}
+
+/// A named workload shape for the CLI's `--trace` flag. `Steady` and
+/// `Burst` only set the arrival pattern; `SmallGemm` additionally
+/// overrides the mix and dimensions to the batched small-GEMM serving
+/// workload: an all-DGEMM stream of two small shapes (both under the
+/// registry's batch ceiling and both resolving to the same planned
+/// kernel) arriving in bursts, so the server's kernel-keyed batcher
+/// repeatedly drains multi-item groups that fuse into single
+/// batched-kernel calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceShape {
+    /// Plain Poisson arrivals, default mix.
+    Steady,
+    /// Default on/off burst overlay, default mix.
+    Burst,
+    /// Bursty all-small-DGEMM stream exercising batch fusion.
+    SmallGemm,
+}
+
+impl TraceShape {
+    /// Parse a shape name: `steady`, `burst`, or `small-gemm`.
+    pub fn from_name(name: &str) -> Result<TraceShape, String> {
+        match name {
+            "steady" => Ok(TraceShape::Steady),
+            "burst" => Ok(TraceShape::Burst),
+            "small-gemm" => Ok(TraceShape::SmallGemm),
+            other => Err(format!(
+                "unknown trace shape `{other}` (want steady|burst|small-gemm)"
+            )),
+        }
+    }
+
+    /// CLI/report name of the shape.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceShape::Steady => "steady",
+            TraceShape::Burst => "burst",
+            TraceShape::SmallGemm => "small-gemm",
+        }
+    }
+
+    /// Apply the shape to a base config. `Steady`/`Burst` leave the mix
+    /// and dimensions alone; `SmallGemm` replaces them with the batched
+    /// small-GEMM workload (dims 32/24 — both clear the threaded
+    /// planner's MR floor and sit under the batch ceiling, so every
+    /// request shares one planned kernel and every drained group is
+    /// fusable).
+    pub fn apply(&self, mut cfg: TraceConfig) -> TraceConfig {
+        cfg.burst = match self {
+            TraceShape::Steady => None,
+            TraceShape::Burst | TraceShape::SmallGemm => Some(Burst::default()),
+        };
+        if let TraceShape::SmallGemm = self {
+            cfg.mix = Mix { dscal: 0.0, ddot: 0.0, dnrm2: 0.0, dgemv: 0.0,
+                            dtrsv: 0.0, dgemm: 1.0, dtrsm: 0.0 };
+            cfg.mat_dim = 32;
+            cfg.mat_dim_alt = Some(24);
+        }
+        cfg
     }
 }
 
@@ -304,6 +366,35 @@ mod tests {
         let b = Burst::from_pattern("burst").unwrap().unwrap();
         assert_eq!(b.period, Burst::default().period);
         assert!(Burst::from_pattern("storm").is_err());
+    }
+
+    /// The small-GEMM shape: every request is a DGEMM at one of the two
+    /// small dims, arrivals are bursty, and names round-trip.
+    #[test]
+    fn small_gemm_shape_is_an_all_small_dgemm_burst() {
+        for (name, shape) in [("steady", TraceShape::Steady),
+                              ("burst", TraceShape::Burst),
+                              ("small-gemm", TraceShape::SmallGemm)] {
+            let s = TraceShape::from_name(name).unwrap();
+            assert_eq!(s, shape);
+            assert_eq!(s.name(), name);
+        }
+        assert!(TraceShape::from_name("tiny").is_err());
+        let cfg = TraceShape::SmallGemm
+            .apply(TraceConfig { requests: 200, ..Default::default() });
+        assert!(cfg.burst.is_some(), "small-gemm arrivals are bursty");
+        let t = generate(&cfg);
+        assert_eq!(t.len(), 200);
+        assert!(t.iter().all(|e| e.request.routine() == "dgemm"));
+        let d32 = t.iter().filter(|e| e.request.dim() == 32).count();
+        let d24 = t.iter().filter(|e| e.request.dim() == 24).count();
+        assert_eq!(d32 + d24, 200, "only the two small shapes appear");
+        assert!(d32 > 0 && d24 > 0, "both shapes present: {d32}/{d24}");
+        // steady/burst leave the mix and dims untouched
+        let base = TraceConfig::default();
+        let kept = TraceShape::Burst.apply(base.clone());
+        assert_eq!(kept.mat_dim, base.mat_dim);
+        assert!(TraceShape::Steady.apply(base).burst.is_none());
     }
 
     #[test]

@@ -38,6 +38,7 @@
 use crate::blas::level3::GemmParams;
 use crate::ft::abft::{self, LocatedError};
 use crate::ft::FtReport;
+use crate::util::arena;
 
 /// One planned strike: (rank-k step, global row, global col, magnitude).
 pub type Strike = (usize, usize, usize, f64);
@@ -197,16 +198,61 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    let mut report = FtReport::none();
     if m == 0 || n == 0 {
-        return report;
+        return FtReport::none();
     }
     let &GemmParams { mc, nc, kc, mr, nr } = params;
+    // every transient buffer — global checksum vectors, packing panels,
+    // ABFT scratch — comes from the thread-local arena in one zeroed
+    // lease, so steady-state protected GEMMs allocate nothing
+    arena::with(
+        [m, n, m, n,
+         arena::packed_a_len(mc, kc, mr), arena::packed_b_len(nc, kc, nr),
+         mr * nr, kc, kc, mc, mc, nc, nc],
+        |[cr_enc, cc_enc, cr_ref, cc_ref, apack, bpack, acc, be, eta,
+          crenc_loc, crref_loc, ccref_loc, ccenc_loc]| {
+            fused_driver(m, n, k, alpha, a, b, beta, c, params, inject,
+                         FusedScratch { cr_enc, cc_enc, cr_ref, cc_ref,
+                                        apack, bpack, acc, be, eta,
+                                        crenc_loc, crref_loc, ccref_loc,
+                                        ccenc_loc })
+        },
+    )
+}
+
+/// Per-call scratch of one fused-ABFT GEMM, leased zero-filled from the
+/// [`crate::util::arena`]: the global encoded/reference checksum
+/// vectors, the packed A/B panels, the accumulator tile, the per-depth
+/// block sums (`be`/`eta`), and the block-local checksum accumulators.
+struct FusedScratch<'s> {
+    cr_enc: &'s mut [f64],
+    cc_enc: &'s mut [f64],
+    cr_ref: &'s mut [f64],
+    cc_ref: &'s mut [f64],
+    apack: &'s mut [f64],
+    bpack: &'s mut [f64],
+    acc: &'s mut [f64],
+    be: &'s mut [f64],
+    eta: &'s mut [f64],
+    crenc_loc: &'s mut [f64],
+    crref_loc: &'s mut [f64],
+    ccref_loc: &'s mut [f64],
+    ccenc_loc: &'s mut [f64],
+}
+
+/// The fused loop nest, operating entirely on arena-leased scratch.
+#[allow(clippy::too_many_arguments)]
+fn fused_driver(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
+                b: &[f64], beta: f64, c: &mut [f64], params: &GemmParams,
+                inject: &[Strike], scratch: FusedScratch<'_>) -> FtReport {
+    let FusedScratch { cr_enc, cc_enc, cr_ref, cc_ref, apack, bpack, acc,
+                       be, eta, crenc_loc, crref_loc, ccref_loc,
+                       ccenc_loc } = scratch;
+    let &GemmParams { mc, nc, kc, mr, nr } = params;
+    let mut report = FtReport::none();
 
     // ---- fused β-scaling + checksum seeding (paper: "the encoding of
     // C^c and C^r is fused with the matrix scaling routine C = βC")
-    let mut cr_enc = vec![0.0; m];
-    let mut cc_enc = vec![0.0; n];
     for i in 0..m {
         let row = &mut c[i * n..(i + 1) * n];
         let mut rsum = 0.0;
@@ -219,28 +265,19 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
     }
     // reference checksums start in agreement and are maintained at tile
     // write-back from the register acc values
-    let mut cr_ref = cr_enc.clone();
-    let mut cc_ref = cc_enc.clone();
+    cr_ref.copy_from_slice(cr_enc);
+    cc_ref.copy_from_slice(cc_enc);
 
     if k == 0 || alpha == 0.0 {
         return report;
     }
 
-    let mut apack = vec![0.0; mc.div_ceil(mr) * mr * kc];
-    let mut bpack = vec![0.0; nc.div_ceil(nr) * nr * kc];
-    let mut acc = vec![0.0; mr * nr];
-    let mut be = vec![0.0; kc];
-    let mut eta = vec![0.0; kc];
-    // Block-local checksum accumulators: the macro-kernel write-back and
-    // the packing routines scatter read-modify-writes across the full
-    // m/n-length checksum vectors otherwise, which (depending on heap
-    // layout) can alias the streaming C rows in the same cache sets —
-    // bimodal 20% swings across process runs. Compact locals stay in L1
-    // and are flushed once per block.
-    let mut crenc_loc = vec![0.0; mc];
-    let mut crref_loc = vec![0.0; mc];
-    let mut ccref_loc = vec![0.0; nc];
-    let mut ccenc_loc = vec![0.0; nc];
+    // The block-local checksum accumulators (`*_loc`): the macro-kernel
+    // write-back and the packing routines scatter read-modify-writes
+    // across the full m/n-length checksum vectors otherwise, which
+    // (depending on heap layout) can alias the streaming C rows in the
+    // same cache sets — bimodal 20% swings across process runs. Compact
+    // locals stay in L1 and are flushed once per block.
     let (mut max_a, mut max_b) = (0.0f64, 0.0f64);
 
     // Correcting an error of magnitude M cannot restore C below ~eps·|M|
@@ -258,7 +295,7 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
         while j0 < n {
             let ncb = nc.min(n - j0);
             be[..kcb].fill(0.0);
-            pack_b_fused(b, n, p0, j0, kcb, ncb, nr, &mut bpack,
+            pack_b_fused(b, n, p0, j0, kcb, ncb, nr, bpack,
                          &mut be[..kcb]);
             // threshold bookkeeping over the packed (cache-hot) buffer —
             // one vectorized pass, instead of a serialized running max in
@@ -273,7 +310,7 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
                 ccenc_loc[..ncb].fill(0.0);
                 ccref_loc[..ncb].fill(0.0);
                 pack_a_fused(a, k, i0, p0, mcb, kcb, mr, alpha, &be[..kcb],
-                             &mut apack, &mut crenc_loc, &mut eta[..kcb]);
+                             apack, crenc_loc, &mut eta[..kcb]);
                 if j0 == 0 {
                     max_a = max_a.max(max_abs(
                         &apack[..mcb.div_ceil(mr) * mr * kcb]));
@@ -306,7 +343,7 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
                     while ii < mcb {
                         let mrb = mr.min(mcb - ii);
                         let ap = &apack[(ii / mr) * (mr * kcb)..][..mr * kcb];
-                        micro_kernel(kcb, ap, bp, mr, nr, &mut acc);
+                        micro_kernel(kcb, ap, bp, mr, nr, acc);
                         // transient-fault injection: corrupt the computed
                         // register value before it is consumed anywhere
                         for &(s, fi, fj, delta) in inject {
@@ -376,7 +413,7 @@ pub fn dgemm_abft_fused(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
         // correct (the only non-fused work — negligible)
         let tol = abft::round_off_threshold(
             alpha.abs().max(1.0) * max_a * max_b, k, n.max(m)) + corrected_tol;
-        if let Some(err) = verify_refs(&cr_enc, &cc_enc, &cr_ref, &cc_ref, tol) {
+        if let Some(err) = verify_refs(cr_enc, cc_enc, cr_ref, cc_ref, tol) {
             c[err.i * n + err.j] -= err.magnitude;
             // bring the maintained reference sums back in line with the
             // corrected C so later intervals verify against truth

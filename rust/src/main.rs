@@ -25,7 +25,7 @@ use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
 use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
 use ftblas::coordinator::router::{execute_native, Router};
-use ftblas::coordinator::trace::{self, Burst, TraceConfig};
+use ftblas::coordinator::trace::{self, Burst, TraceConfig, TraceShape};
 use ftblas::ft::injector::{CampaignConfig, CampaignTarget, Fault,
                            InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
@@ -91,19 +91,24 @@ USAGE:
   ftblas serve [--requests N] [--ft P] [--shards S] [--min-shards M]
              [--max-shards X] [--scale-interval MS] [--admission-depth D]
              [--workers W] [--max-batch B] [--thread-budget T] [--threads T]
-             [--vec-len N] [--mat-dim N] [--trace steady|burst] [--burst F]
+             [--vec-len N] [--mat-dim N] [--backend tuned|simd]
+             [--trace steady|burst|small-gemm] [--burst F]
              [--inject] [--profile P]
              (--shards: fixed-size cluster, routed by planned kernel;
               --min-shards/--max-shards: elastic bounds — a scaling
               controller grows/shrinks the tier every --scale-interval ms;
               --admission-depth: per-shard queue watermark — excess
               submissions shed as `Overloaded` and retried with backoff;
-              --trace burst (or --burst F): bursty paced arrivals)
+              --trace burst (or --burst F): bursty paced arrivals;
+              --trace small-gemm: bursty all-small-DGEMM stream that
+              exercises the batch-fused execution path — pair with
+              --backend simd to fuse under a protecting --ft policy)
   ftblas soak [--quick] [--duration SECS] [--rate ERRORS_PER_MIN]
              [--stride K] [--target all|dmr|abft|fused] [--ft P]
              [--seed S (campaign schedule)] [--trace-seed S (workload)]
              [--min-shards M] [--max-shards X] [--admission-depth D]
              [--workers W] [--mat-dim N] [--vec-len N] [--out PATH]
+             [--trace steady|burst|small-gemm] [--backend tuned|simd]
              [--profile P]
              (timed, rate-controlled fault-injection campaign against an
               elastic burst trace; exits nonzero unless the tier grew,
@@ -158,8 +163,9 @@ fn main() -> Result<()> {
 /// Both files are `ftblas.bench-smoke.v1` documents; rows are matched
 /// by label and a candidate row whose GFLOP/s falls more than the
 /// tolerance below the baseline fails the run. Rows only ever produced
-/// on one side (new kernels, zero-GFLOP floor rows) are reported but
-/// never gate, and when the two documents were produced under
+/// on one side (new kernels, zero-GFLOP floor rows) never gate but are
+/// called out as explicit warnings — a renamed or lost row must not
+/// masquerade as a clean pass — and when the two documents were produced under
 /// different `cpu_features` the comparison is reported without gating
 /// — rows from different machines are not commensurable.
 fn cmd_bench_diff(args: &Args) -> Result<()> {
@@ -223,10 +229,12 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     println!("{:<38} {:>10} {:>10} {:>8}  {}", "label", "base", "cand",
              "delta", "status");
     let mut regressions = Vec::new();
+    let mut one_sided = Vec::new();
     for (label, bg) in &base_rows {
         let Some((_, cg)) = cand_rows.iter().find(|(l, _)| l == label) else {
-            println!("{label:<38} {bg:>10.3} {:>10} {:>8}  dropped \
-                      (not gated)", "-", "-");
+            println!("{label:<38} {bg:>10.3} {:>10} {:>8}  WARNING: \
+                      dropped from candidate (not gated)", "-", "-");
+            one_sided.push(format!("`{label}` only in baseline"));
             continue;
         };
         let delta = (cg - bg) / bg * 100.0;
@@ -244,9 +252,17 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     }
     for (label, cg) in &cand_rows {
         if !base_rows.iter().any(|(l, _)| l == label) {
-            println!("{label:<38} {:>10} {cg:>10.3} {:>8}  new row", "-",
-                     "-");
+            println!("{label:<38} {:>10} {cg:>10.3} {:>8}  WARNING: new \
+                      row (not gated)", "-", "-");
+            one_sided.push(format!("`{label}` only in candidate"));
         }
+    }
+    // one-sided labels carry no regression verdict either way; surface
+    // them loudly so a silently-renamed or lost row cannot masquerade
+    // as a clean pass
+    for warn in &one_sided {
+        eprintln!("bench-diff: warning: {warn} — row not gated; update \
+                   the baseline if the rename/addition is intentional");
     }
     if !regressions.is_empty() {
         bail!("bench-diff: {} row(s) regressed beyond {:.1}%: {}",
@@ -402,29 +418,39 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     // burn counters integrate between samples regardless)
     let scale_interval = args.get_usize("scale-interval", 10)?.max(1);
     let mat_dim = args.get_usize("mat-dim", 128)?;
-    // `--trace burst` and `--burst F` both enable the on/off overlay;
-    // `--burst` alone takes the default 50× on-phase factor
-    let mut burst = Burst::from_pattern(&args.get("trace", "steady"))
+    // `--trace` names a workload shape; `small-gemm` also overrides the
+    // mix/dims to the batch-fusion workload. `--burst F` layers the
+    // on/off overlay at a custom factor on top of any shape.
+    let shape = TraceShape::from_name(&args.get("trace", "steady"))
         .map_err(|e| anyhow!(e))?;
-    if args.has("burst") {
-        let factor = match args.get("burst", "50").as_str() {
-            "true" => 50.0,
-            v => v.parse::<f64>().map_err(|_| anyhow!("--burst wants a number"))?,
-        };
-        burst = Some(Burst { factor: factor.max(1.0), ..Default::default() });
-    }
-    let cfg = TraceConfig {
+    let mut cfg = shape.apply(TraceConfig {
         requests,
         vec_len: args.get_usize("vec-len", 16384)?,
         mat_dim,
         // a second MT-eligible DGEMM shape shows kernel-keyed batching
         mat_dim_alt: Some((mat_dim / 2).max(profile.gemm.mr * 2)),
         seed: args.get_usize("seed", 0x5E12)? as u64,
-        burst,
         ..Default::default()
+    });
+    if args.has("burst") {
+        let factor = match args.get("burst", "50").as_str() {
+            "true" => 50.0,
+            v => v.parse::<f64>().map_err(|_| anyhow!("--burst wants a number"))?,
+        };
+        cfg.burst =
+            Some(Burst { factor: factor.max(1.0), ..Default::default() });
+    }
+    // `--backend simd` serves through the SIMD kernel ladder — under a
+    // protecting policy that is the plan whose batched sibling exists,
+    // so the small-gemm shape actually fuses
+    let backend = match args.get("backend", "tuned").as_str() {
+        "tuned" => Backend::NativeTuned,
+        "simd" => Backend::NativeSimd,
+        other => bail!("serve --backend wants tuned|simd, got `{other}`"),
     };
     println!("serve: {} requests on {} (shards={}{}, workers/shard={}, \
-              threads={}, max_batch={}, admission_depth={}, policy={})",
+              threads={}, max_batch={}, admission_depth={}, policy={}, \
+              trace={}, backend={})",
              requests, profile.name, profile.shards,
              if profile.elastic() {
                  format!(" elastic [{}..{}]", profile.min_shards,
@@ -435,7 +461,7 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
              profile.workers, profile.threads, profile.max_batch,
              profile.admission_depth.map_or("unbounded".to_string(),
                                             |d| d.to_string()),
-             policy.name());
+             policy.name(), shape.name(), backend.name());
     let entries = trace::generate(&cfg);
     let injection = args.has("inject").then(|| InjectorConfig {
         count: (requests / 8).max(1),
@@ -456,7 +482,7 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     };
     let elastic = cluster_cfg.autoscale.is_some();
     let min_shards = profile.min_shards;
-    let router = Router::native_only(profile, Backend::NativeTuned);
+    let router = Router::native_only(profile, backend);
     let cluster = Cluster::start(router, policy, cluster_cfg);
     let handle = cluster.handle();
     let retry = RetryPolicy::default();
@@ -616,23 +642,35 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
         ..Default::default()
     };
     profile = profile.with_campaign(campaign);
-    let trace_cfg = TraceConfig {
-        seed: trace_seed,
-        rate: 300.0,
-        vec_len: args.get_usize("vec-len", 2048)?,
-        mat_dim: args.get_usize("mat-dim", 128)?,
-        mat_dim_alt: None,
-        burst: Some(Burst::default()),
-        ..Default::default()
-    }
-    .sized_for(duration);
+    // `--trace small-gemm` soaks the batch-fused path instead of the
+    // default mixed burst workload (pair with `--backend simd` so the
+    // protected small-GEMM plans carry a batched sibling)
+    let shape = TraceShape::from_name(&args.get("trace", "burst"))
+        .map_err(|e| anyhow!(e))?;
+    let backend = match args.get("backend", "tuned").as_str() {
+        "tuned" => Backend::NativeTuned,
+        "simd" => Backend::NativeSimd,
+        other => bail!("soak --backend wants tuned|simd, got `{other}`"),
+    };
+    let trace_cfg = shape
+        .apply(TraceConfig {
+            seed: trace_seed,
+            rate: 300.0,
+            vec_len: args.get_usize("vec-len", 2048)?,
+            mat_dim: args.get_usize("mat-dim", 128)?,
+            mat_dim_alt: None,
+            burst: Some(Burst::default()),
+            ..Default::default()
+        })
+        .sized_for(duration);
     println!("soak: ~{duration:.0}s campaign at {rate_per_min:.0} err/min \
-              (stride {stride}, target {}, policy {}) over {} bursty \
+              (stride {stride}, target {}, policy {}) over {} `{}` \
               requests on {} [{}..{} shards, {} worker(s)/shard, \
-              admission depth {}]",
-             target.name(), policy.name(), trace_cfg.requests, profile.name,
-             profile.min_shards, profile.max_shards, profile.workers,
-             profile.admission_depth.unwrap_or(0));
+              admission depth {}, backend {}]",
+             target.name(), policy.name(), trace_cfg.requests, shape.name(),
+             profile.name, profile.min_shards, profile.max_shards,
+             profile.workers, profile.admission_depth.unwrap_or(0),
+             backend.name());
     let entries = trace::generate(&trace_cfg);
     let mut scfg = ScalingConfig::from_profile(&profile)
         .with_interval(std::time::Duration::from_millis(
@@ -644,7 +682,7 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
         ..ClusterConfig::from_profile(&profile)
     };
     let min_shards = profile.min_shards;
-    let router = Router::native_only(profile, Backend::NativeTuned);
+    let router = Router::native_only(profile, backend);
     let cluster = Cluster::start(router, policy, cluster_cfg);
     let handle = cluster.handle();
     let retry = RetryPolicy { attempts: 6, ..RetryPolicy::default() };
@@ -766,6 +804,8 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
                 .field("trace_seed", Json::Int(trace_seed))
                 .field("min_shards", Json::Int(min_shards as u64))
                 .field("max_shards", Json::Int(max as u64))
+                .field("trace", Json::Str(shape.name().into()))
+                .field("backend", Json::Str(backend.name().into()))
                 .field("quick", Json::Bool(quick)))
             .field("campaign", Json::obj()
                 .field("wall_s", Json::Num(campaign_wall))

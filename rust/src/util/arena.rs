@@ -1,0 +1,212 @@
+//! Grow-only scratch arena for the GEMM hot path.
+//!
+//! Every tuned/SIMD DGEMM call needs the same transient buffers: the
+//! packed A/B panels of the GEBP loop nest and, on the fused-ABFT path,
+//! the checksum scratch (`be`/`eta` per depth block, `cr*`/`cc*`
+//! encoded/reference accumulators). Allocating them with `vec!` per
+//! call is exactly the per-call overhead the paper's fused design
+//! amortizes away — and it dominates when the workload is many *small*
+//! GEMMs (the batched serving shape). [`PackArena`] replaces those
+//! allocations with leases from one grow-only, thread-local slab: the
+//! first call on a thread sizes the slab, every later call with the
+//! same (or smaller) footprint reuses it allocation-free.
+//!
+//! A lease is always **zero-filled** before the borrower sees it, so a
+//! kernel written against `vec![0.0; len]` buffers computes bit-identical
+//! results through the arena — reuse can never leak state between calls
+//! (the arena-determinism property test pins this).
+//!
+//! The sizing helpers [`packed_a_len`] / [`packed_b_len`] are the single
+//! source of truth for packed-panel footprints; the scalar tuned path,
+//! the AVX2 GEBP/fused kernels, and the unfused fused-ABFT driver all
+//! size their panels through them instead of re-deriving the rounding
+//! arithmetic per call site.
+
+use std::cell::RefCell;
+
+/// Length of a packed A panel: `mc` rows rounded up to whole `mr`
+/// micro-panels, each `kc` deep. The one formula every packing call
+/// site shares.
+pub fn packed_a_len(mc: usize, kc: usize, mr: usize) -> usize {
+    mc.div_ceil(mr) * mr * kc
+}
+
+/// Length of a packed B panel: `nc` columns rounded up to whole `nr`
+/// micro-panels, each `kc` deep.
+pub fn packed_b_len(nc: usize, kc: usize, nr: usize) -> usize {
+    nc.div_ceil(nr) * nr * kc
+}
+
+/// A grow-only `f64` scratch slab that lends disjoint, zeroed slices.
+///
+/// The slab only ever grows (to the largest total footprint any lease
+/// asked for), so steady-state leases are allocation-free. Not
+/// thread-safe by design — each thread owns one via [`with`]'s
+/// thread-local.
+#[derive(Default)]
+pub struct PackArena {
+    slab: Vec<f64>,
+    grows: u64,
+    leases: u64,
+}
+
+impl PackArena {
+    /// An empty arena; the first lease sizes the slab.
+    pub fn new() -> PackArena {
+        PackArena::default()
+    }
+
+    /// Current slab capacity in `f64` elements (the high-watermark of
+    /// every lease footprint so far).
+    pub fn capacity(&self) -> usize {
+        self.slab.len()
+    }
+
+    /// How many times a lease had to grow the slab (a steady-state hot
+    /// loop must stop incrementing this after warm-up).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Total leases served.
+    pub fn leases(&self) -> u64 {
+        self.leases
+    }
+
+    /// Lease `N` disjoint zero-filled slices of the given sizes and run
+    /// `f` on them. Equivalent to handing `f` freshly built
+    /// `vec![0.0; size]` buffers, minus the per-call allocations: the
+    /// slab grows to the total footprint once and is reused thereafter.
+    pub fn with_slices<const N: usize, R>(
+        &mut self, sizes: [usize; N],
+        f: impl FnOnce([&mut [f64]; N]) -> R,
+    ) -> R {
+        let total: usize = sizes.iter().sum();
+        if self.slab.len() < total {
+            self.slab.resize(total, 0.0);
+            self.grows += 1;
+        }
+        self.leases += 1;
+        // zero the leased prefix: borrowers rely on vec![0.0; n]
+        // semantics, and reuse must never leak a previous call's state
+        for v in &mut self.slab[..total] {
+            *v = 0.0;
+        }
+        let mut rest: &mut [f64] = &mut self.slab[..total];
+        let parts = sizes.map(|s| {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(s);
+            rest = tail;
+            head
+        });
+        f(parts)
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<PackArena> = RefCell::new(PackArena::new());
+}
+
+/// Lease `N` zeroed scratch slices from the calling thread's arena.
+///
+/// This is the hot-path entry the GEMM kernels use: each worker/band
+/// thread reuses its own slab across calls, so steady-state packing and
+/// checksum scratch costs zero heap allocations. `f` must not re-enter
+/// the arena (the kernels wired through it are leaves; a nested lease
+/// would panic on the `RefCell` borrow rather than corrupt a live
+/// lease).
+pub fn with<const N: usize, R>(
+    sizes: [usize; N], f: impl FnOnce([&mut [f64]; N]) -> R,
+) -> R {
+    ARENA.with(|a| a.borrow_mut().with_slices(sizes, f))
+}
+
+/// `(capacity, grows, leases)` of the calling thread's arena — what the
+/// steady-state tests assert on (after warm-up, `grows` must not move).
+pub fn thread_stats() -> (usize, u64, u64) {
+    ARENA.with(|a| {
+        let a = a.borrow();
+        (a.capacity(), a.grows(), a.leases())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_slices_are_zeroed_disjoint_and_sized() {
+        let mut arena = PackArena::new();
+        arena.with_slices([4, 3, 5], |[a, b, c]| {
+            assert_eq!((a.len(), b.len(), c.len()), (4, 3, 5));
+            assert!(a.iter().chain(b.iter()).chain(c.iter())
+                        .all(|&v| v == 0.0));
+            a.fill(1.0);
+            b.fill(2.0);
+            // disjointness: writing a and b leaves c untouched
+            assert!(c.iter().all(|&v| v == 0.0));
+        });
+        // dirt from the previous lease never leaks into the next one
+        arena.with_slices([12], |[s]| {
+            assert!(s.iter().all(|&v| v == 0.0));
+        });
+    }
+
+    #[test]
+    fn slab_grows_once_then_steady_state_is_allocation_free() {
+        let mut arena = PackArena::new();
+        arena.with_slices([64, 32], |_| ());
+        assert_eq!(arena.grows(), 1);
+        assert_eq!(arena.capacity(), 96);
+        // smaller and equal footprints reuse the slab
+        arena.with_slices([16], |_| ());
+        arena.with_slices([48, 48], |_| ());
+        assert_eq!(arena.grows(), 1, "steady state must not reallocate");
+        // a larger footprint grows it exactly once more
+        arena.with_slices([100, 100], |_| ());
+        assert_eq!(arena.grows(), 2);
+        assert_eq!(arena.capacity(), 200);
+        assert_eq!(arena.leases(), 4);
+    }
+
+    #[test]
+    fn zero_length_slices_are_fine() {
+        let mut arena = PackArena::new();
+        arena.with_slices([0, 8, 0], |[a, b, c]| {
+            assert!(a.is_empty() && c.is_empty());
+            assert_eq!(b.len(), 8);
+        });
+    }
+
+    #[test]
+    fn sizing_helpers_round_up_to_whole_micro_panels() {
+        assert_eq!(packed_a_len(128, 128, 4), 128 * 128);
+        assert_eq!(packed_a_len(70, 16, 4), 72 * 16);
+        assert_eq!(packed_b_len(256, 128, 8), 256 * 128);
+        assert_eq!(packed_b_len(9, 32, 8), 16 * 32);
+        // degenerate blocks lease nothing
+        assert_eq!(packed_a_len(0, 16, 8), 0);
+    }
+
+    #[test]
+    fn thread_local_entry_reuses_one_slab_per_thread() {
+        // run on a dedicated thread so other tests' leases don't skew
+        // the counters
+        std::thread::spawn(|| {
+            with([32, 16], |[a, b]| {
+                a.fill(3.0);
+                b.fill(4.0);
+            });
+            let (cap, grows, _) = thread_stats();
+            assert_eq!(cap, 48);
+            assert_eq!(grows, 1);
+            with([32, 16], |[a, _]| {
+                assert!(a.iter().all(|&v| v == 0.0), "lease must be re-zeroed");
+            });
+            let (_, grows, leases) = thread_stats();
+            assert_eq!(grows, 1, "same footprint must not grow the slab");
+            assert_eq!(leases, 2);
+        })
+        .join()
+        .unwrap();
+    }
+}

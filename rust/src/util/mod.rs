@@ -2,6 +2,7 @@
 //! property-testing harness (proptest is not vendored in this offline
 //! image — see DESIGN.md §9).
 
+pub mod arena;
 pub mod check;
 pub mod json;
 pub mod matrix;

@@ -1,0 +1,232 @@
+//! Property and end-to-end tests on the batch-fused small-GEMM path:
+//! batched drivers must be indistinguishable from per-item kernel calls
+//! (bitwise for the unprotected frames, per-item FT accounting for the
+//! fused-ABFT frame), and the server's fusion fast path must keep the
+//! campaign ledger exactly balanced.
+//!
+//! Uses the repo's seeded check harness (`util::check`) — proptest is not
+//! vendored in this offline image; see DESIGN.md §9.
+
+use ftblas::blas::batched::{self, GemmItem};
+use ftblas::blas::level3::{self, GemmParams};
+use ftblas::blas::{naive, simd};
+use ftblas::config::Profile;
+use ftblas::coordinator::request::{Backend, BlasRequest};
+use ftblas::coordinator::router::Router;
+use ftblas::coordinator::server::Server;
+use ftblas::ft::injector::CampaignConfig;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::check::{check, ensure};
+use ftblas::util::matrix::{allclose, Matrix};
+use ftblas::util::rng::Rng;
+
+/// One random batch item spec: (m, n, k, alpha, beta, a, b, c0).
+type Spec = (usize, usize, usize, f64, f64, Vec<f64>, Vec<f64>, Vec<f64>);
+
+fn random_specs(rng: &mut Rng, count: usize) -> Vec<Spec> {
+    (0..count)
+        .map(|i| {
+            let m = 1 + rng.below(48);
+            let n = 1 + rng.below(32);
+            let k = 1 + rng.below(32);
+            let alpha = [1.0, 0.6, -1.5][i % 3];
+            let beta = [0.0, 1.0, -0.3][(i + 1) % 3];
+            let a = Matrix::random(m, k, rng).data;
+            let b = Matrix::random(k, n, rng).data;
+            let c = Matrix::random(m, n, rng).data;
+            (m, n, k, alpha, beta, a, b, c)
+        })
+        .collect()
+}
+
+/// Batched execution is unobservable from outside: for any batch shape
+/// mix and any thread grant, both unprotected batched drivers reproduce
+/// the per-item serial kernel results bitwise.
+#[test]
+fn batched_drivers_match_sequential_kernels_bitwise() {
+    check("batched-vs-sequential", 40, |g| {
+        let params = GemmParams::default();
+        let count = 1 + g.rng.below(6);
+        let threads = 1 + g.rng.below(4);
+        let specs = random_specs(&mut g.rng, count);
+        for scalar in [true, false] {
+            let mut want: Vec<Vec<f64>> = Vec::new();
+            for (m, n, k, alpha, beta, a, b, c0) in &specs {
+                let mut c = c0.clone();
+                if scalar {
+                    level3::dgemm(*m, *n, *k, *alpha, a, b, *beta, &mut c,
+                                  &params);
+                } else {
+                    simd::dgemm(*m, *n, *k, *alpha, a, b, *beta, &mut c,
+                                &params);
+                }
+                want.push(c);
+            }
+            let mut outs: Vec<Vec<f64>> =
+                specs.iter().map(|s| s.7.clone()).collect();
+            let mut items: Vec<GemmItem<'_>> = specs
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(s, c)| GemmItem {
+                    m: s.0, n: s.1, k: s.2, alpha: s.3, beta: s.4,
+                    a: &s.5[..], b: &s.6[..], c: &mut c[..],
+                    inject: Vec::new(),
+                })
+                .collect();
+            if scalar {
+                batched::dgemm_batched(&mut items, &params, threads);
+            } else {
+                batched::dgemm_batched_simd(&mut items, &params, threads);
+            }
+            drop(items);
+            for (i, (got, want)) in outs.iter().zip(&want).enumerate() {
+                ensure(got == want,
+                       format!("scalar={scalar} t={threads} item {i}: \
+                                batched result diverged bitwise"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The fused-ABFT batched driver accounts faults *per item*: striking a
+/// random subset of a random batch yields exactly one detection and one
+/// correction on each struck item, none anywhere else, and every output
+/// still matches the naive oracle.
+#[test]
+fn fused_batched_driver_accounts_faults_per_item() {
+    check("batched-fused-per-item-ft", 30, |g| {
+        let params = GemmParams { kc: 16, ..Default::default() };
+        let count = 2 + g.rng.below(5);
+        let threads = 1 + g.rng.below(4);
+        let specs: Vec<(usize, usize, usize, Vec<f64>, Vec<f64>)> = (0..count)
+            .map(|_| {
+                let m = 1 + g.rng.below(40);
+                let n = 1 + g.rng.below(24);
+                let k = [8usize, 16, 24, 32][g.rng.below(4)];
+                let a = Matrix::random(m, k, &mut g.rng).data;
+                let b = Matrix::random(k, n, &mut g.rng).data;
+                (m, n, k, a, b)
+            })
+            .collect();
+        let struck: Vec<bool> =
+            (0..count).map(|_| g.rng.below(2) == 0).collect();
+        let want: Vec<Vec<f64>> = specs
+            .iter()
+            .map(|(m, n, k, a, b)| {
+                let mut c = vec![0.0; m * n];
+                naive::dgemm(*m, *n, *k, 1.0, a, b, 0.0, &mut c);
+                c
+            })
+            .collect();
+        let mut outs: Vec<Vec<f64>> =
+            specs.iter().map(|(m, n, ..)| vec![0.0; m * n]).collect();
+        let mut items: Vec<GemmItem<'_>> = specs
+            .iter()
+            .zip(outs.iter_mut())
+            .zip(&struck)
+            .map(|(((m, n, k, a, b), c), &hit)| GemmItem {
+                m: *m, n: *n, k: *k, alpha: 1.0, beta: 0.0,
+                a: &a[..], b: &b[..], c: &mut c[..],
+                inject: if hit {
+                    vec![(0, g.rng.below(*m), g.rng.below(*n), 5e4)]
+                } else {
+                    Vec::new()
+                },
+            })
+            .collect();
+        let reps = batched::dgemm_batched_abft_fused_simd(&mut items,
+                                                          &params, threads);
+        drop(items);
+        ensure(reps.len() == count, "one report per item")?;
+        for (i, (rep, &hit)) in reps.iter().zip(&struck).enumerate() {
+            ensure(rep.errors_detected == hit as u64,
+                   format!("item {i}: wrong detection count"))?;
+            ensure(rep.errors_corrected == hit as u64,
+                   format!("item {i}: wrong correction count"))?;
+        }
+        for (i, (got, want)) in outs.iter().zip(&want).enumerate() {
+            ensure(allclose(got, want, 1e-7, 1e-7),
+                   format!("item {i}: output wrong after correction"))?;
+        }
+        Ok(())
+    });
+}
+
+/// End to end through the public API: a burst of small same-shape DGEMMs
+/// under a stride-1 campaign fuses through the batched fused-ABFT kernel
+/// and the ledger stays exactly balanced — every armed fault detected
+/// and corrected, fused completions attributed to the batched kernel,
+/// and every fused batch carrying at least two items.
+#[test]
+fn fused_server_batches_balance_the_campaign_ledger() {
+    let campaign = CampaignConfig {
+        stride: 1,
+        rate_per_min: f64::INFINITY,
+        ..Default::default()
+    };
+    let router = Router::native_only(Profile::default(), Backend::NativeSimd)
+        .with_campaign(campaign);
+    // one worker: the large head-of-queue DTRSV (a different batch key)
+    // pins it while the small GEMMs pile into one kernel-keyed group
+    let server = Server::start(router, FtPolicy::Hybrid, 1, None, 0);
+    let handle = server.handle();
+    let mut rng = Rng::new(0x5BA7);
+    let big = 1536;
+    let l = Matrix::random_lower_triangular(big, &mut rng);
+    let mut rxs = vec![handle.submit(BlasRequest::Dtrsv {
+        a: l,
+        b: rng.normal_vec(big),
+    })];
+    let n = 24; // below the batch dim ceiling: plans serial, fuses
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let mut want = vec![0.0; n * n];
+    naive::dgemm(n, n, n, 1.0, &a.data, &b.data, 0.0, &mut want);
+    let smalls = 12;
+    for _ in 0..smalls {
+        rxs.push(handle.submit(BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: a.clone(),
+            b: b.clone(),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        }));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.ft.errors_detected, 1,
+                   "stride-1 campaign strikes every protected request");
+        assert_eq!(resp.ft.errors_corrected, 1);
+        if i > 0 {
+            let got = resp.result.as_matrix().unwrap();
+            assert!(allclose(&got.data, &want, 1e-7, 1e-7),
+                    "struck small GEMM {i} must still be corrected");
+        }
+    }
+    let m = server.shutdown();
+    let total = (smalls + 1) as u64;
+    assert_eq!(m.completed, total);
+    assert_eq!(m.failed, 0);
+    // the fusion fast path fired, and its counters are self-consistent:
+    // every fused batch carries at least two items
+    assert!(m.batches_fused >= 1, "no batch fused");
+    assert!(m.items_fused >= 2 * m.batches_fused,
+            "a fused batch carried fewer than 2 items: {} batches, {} items",
+            m.batches_fused, m.items_fused);
+    let k = &m.kernels["dgemm/batched-abft-fused-simd"];
+    assert!(k.completed >= 2,
+            "fused completions land under the batched kernel's name");
+    assert!(k.max_items_per_batch >= 2);
+    assert!(k.max_items_per_batch <= m.items_fused);
+    assert_eq!(k.errors_escaped, 0);
+    // per-kernel completions roll up exactly across fused + per-item paths
+    let ledger_total: u64 = m.kernels.values().map(|k| k.completed).sum();
+    assert_eq!(ledger_total, total);
+    // exact campaign balance: armed == detected == corrected, none escape
+    assert_eq!(m.errors_injected, total);
+    assert_eq!(m.errors_detected, total);
+    assert_eq!(m.errors_corrected, total);
+    assert_eq!(m.errors_escaped, 0);
+    assert_eq!(m.injection_mode, "campaign");
+}
