@@ -12,7 +12,7 @@ use crate::bench::harness::{
 };
 use crate::blas::batched::{self, GemmItem};
 use crate::blas::level3::GemmParams;
-use crate::blas::{level2, simd, stepwise};
+use crate::blas::{level2, parallel, simd, stepwise};
 use crate::coordinator::request::BlasRequest;
 use crate::ft::policy::FtPolicy;
 use crate::util::matrix::Matrix;
@@ -113,6 +113,37 @@ pub fn smoke(ctx: &mut BenchCtx) -> Result<()> {
     }));
     print_rows(&brows);
     rows.extend(brows);
+
+    // ---- MT scoped vs pooled pair: the per-call fork/join the
+    // persistent compute pool eliminates. Both rows run the identical
+    // banded SIMD MT frame at the same grant; only the threading
+    // substrate differs — a `std::thread::scope` per call (the
+    // `--no-pool` A/B mode) vs task submission to one long-lived pool.
+    // Labels are stable so `bench-diff` gates the pooled row against
+    // its committed baseline like any other kernel.
+    let (pm, pn, pk) = (128usize, 64usize, 64usize);
+    let pa = Matrix::random(pm, pk, &mut rng);
+    let pb = Matrix::random(pk, pn, &mut rng);
+    let mut pc = vec![0.0; pm * pn];
+    let pflops = (2 * pm * pn * pk) as f64;
+    let mut prows = Vec::new();
+    prows.push(row(ctx, "dgemm/mt-scoped", pflops,
+                   "128x64x64, 4 threads, scope per call", || {
+        parallel::dgemm_simd_mt(pm, pn, pk, 1.0, &pa.data, &pb.data, 0.0,
+                                &mut pc, &params, 4);
+    }));
+    {
+        let compute =
+            std::sync::Arc::new(crate::runtime::pool::ComputePool::new(4));
+        let _guard = crate::runtime::pool::enter(compute);
+        prows.push(row(ctx, "dgemm/mt-pooled", pflops,
+                       "same frame on the persistent pool", || {
+            parallel::dgemm_simd_mt(pm, pn, pk, 1.0, &pa.data, &pb.data,
+                                    0.0, &mut pc, &params, 4);
+        }));
+    }
+    print_rows(&prows);
+    rows.extend(prows);
 
     if let Some(path) = &ctx.out {
         let doc = harness::rows_json("smoke", ctx.profile.name, ctx.quick,

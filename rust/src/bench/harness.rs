@@ -227,6 +227,23 @@ pub fn print_ledger(snap: &MetricsSnapshot) {
              snap.scale_ups, snap.scale_downs, snap.keys_migrated);
     println!("batching: {} batches fused ({} items)", snap.batches_fused,
              snap.items_fused);
+    println!("arena: {} f64 capacity, {} grows, {} leases (server workers)",
+             snap.arena_capacity, snap.arena_grows, snap.arena_leases);
+    let p = &snap.pool;
+    if p.workers > 0 {
+        println!("pool: {} workers | {} submitted / {} executed | \
+                  {} steals, {} park wakeups",
+                 p.workers, p.tasks_submitted, p.tasks_executed, p.steals,
+                 p.park_wakeups);
+        println!("pool arena: {} f64 capacity, {} grows, {} leases",
+                 p.arena_capacity, p.arena_grows, p.arena_leases);
+        for (label, s) in p.queue_summaries() {
+            println!("  {:<24} queue-wait mean={:.1}us p99={:.1}us (n={})",
+                     label, s.mean * 1e6, s.p99 * 1e6, s.n);
+        }
+    } else {
+        println!("pool: none (scoped frames — --no-pool or non-cluster)");
+    }
     // FT outcomes: per kernel and overall, headed by the injection
     // mode (campaign = rate-based cluster-wide schedule, per-call =
     // a planned per-run injector)

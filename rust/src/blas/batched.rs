@@ -9,7 +9,9 @@
 //! that: every item of the batch is decomposed into MR-aligned row
 //! bands by the same rule the MT kernels use (a small item is a single
 //! band), the (item × band) tasks are pooled into **one** work queue,
-//! and one `std::thread::scope` drains it. Worker threads pick up
+//! and one threading frame — the cluster's persistent
+//! [`crate::runtime::pool`] when installed, a scoped fork/join
+//! otherwise — drains it. Worker threads pick up
 //! whatever task is next, so a batch of many small items keeps every
 //! thread busy without per-item fork/join, and each worker's packing
 //! and checksum scratch comes from its own thread-local
@@ -33,6 +35,7 @@ use crate::blas::parallel::row_bands;
 use crate::blas::simd;
 use crate::ft::abft_fused::Strike;
 use crate::ft::FtReport;
+use crate::runtime::pool::{self, ScopedTask};
 
 /// One DGEMM of a batch: `c := alpha * a * b + beta * c`, with the
 /// strikes (if any) an injection campaign armed against this item.
@@ -88,8 +91,10 @@ struct Task<'t> {
 }
 
 /// Decompose every item into row bands, pool the bands into one queue,
-/// and drain it under a single thread scope (inline when the grant or
-/// the task count is 1). Returns one merged report per item.
+/// and drain it under a single threading frame — pool tasks when a
+/// compute pool is installed, a scoped fork/join otherwise (inline when
+/// the grant or the task count is 1). Returns one merged report per
+/// item.
 fn run_batch(items: &mut [GemmItem<'_>], params: &GemmParams,
              threads: usize, backend: Backend) -> Vec<FtReport> {
     let mr = match backend {
@@ -168,18 +173,22 @@ fn run_batch(items: &mut [GemmItem<'_>], params: &GemmParams,
         // ONE threading frame for the whole batch: workers pull from the
         // shared queue until it runs dry
         let queue = Mutex::new(tasks);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
+        let drainers: Vec<ScopedTask<'_>> = (0..workers)
+            .map(|_| {
+                let queue = &queue;
+                let reports = &reports;
+                let run = &run;
+                Box::new(move || loop {
                     // take the lock only for the pop, never across a task
                     let next = queue.lock().unwrap().pop_front();
                     let Some(t) = next else { break };
                     let item = t.item;
                     let rep = run(t);
                     reports[item].lock().unwrap().merge(rep);
-                });
-            }
-        });
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool::run_tasks("dgemm/batched", drainers);
     }
     reports.into_iter().map(|m| m.into_inner().unwrap()).collect()
 }

@@ -16,11 +16,20 @@
 //!   O(m²·n/2) solve).
 //!
 //! `threads = 1` falls through to the serial kernels (no spawn, no copy).
+//!
+//! Threading frames go through [`crate::runtime::pool::run_tasks`]: a
+//! serving cluster installs its persistent work-stealing pool on the
+//! executing thread and the band closures become pool tasks gated on a
+//! completion latch; without an installed pool (unit tests, `--no-pool`
+//! A/B mode) the identical closures run under a scoped fork/join. The
+//! band decomposition, strike re-homing, and report merges are the same
+//! either way, so pooled results are bitwise identical to scoped ones.
 
 use crate::blas::level3::{self, GemmParams};
 use crate::blas::simd;
 use crate::ft::abft_fused::{self, Strike};
 use crate::ft::FtReport;
+use crate::runtime::pool::{self, ScopedTask};
 
 /// Split `m` rows into at most `threads` contiguous bands, MR-aligned so
 /// no band starts mid micro-tile. Shared with the batched driver
@@ -53,18 +62,18 @@ pub fn dgemm_mt(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
         return;
     }
     let bands = row_bands(m, threads, params.mr);
-    std::thread::scope(|s| {
-        let mut rest = c;
-        for &(lo, hi) in &bands {
-            let (band, tail) = rest.split_at_mut((hi - lo) * n);
-            rest = tail;
-            let a_band = &a[lo * k..hi * k];
-            s.spawn(move || {
-                level3::dgemm(hi - lo, n, k, alpha, a_band, b, beta, band,
-                              params);
-            });
-        }
-    });
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(bands.len());
+    let mut rest = c;
+    for &(lo, hi) in &bands {
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        let a_band = &a[lo * k..hi * k];
+        tasks.push(Box::new(move || {
+            level3::dgemm(hi - lo, n, k, alpha, a_band, b, beta, band,
+                          params);
+        }));
+    }
+    pool::run_tasks("dgemm/mt", tasks);
 }
 
 /// Fused-ABFT DGEMM across row bands: each band carries its own checksum
@@ -83,29 +92,26 @@ pub fn dgemm_abft_fused_mt(m: usize, n: usize, k: usize, alpha: f64,
                                             params, inject);
     }
     let bands = row_bands(m, threads, params.mr);
-    let mut reports: Vec<FtReport> = Vec::new();
-    std::thread::scope(|s| {
-        let mut rest = c;
-        let mut handles = Vec::new();
-        for &(lo, hi) in &bands {
-            let (band, tail) = rest.split_at_mut((hi - lo) * n);
-            rest = tail;
-            let a_band = &a[lo * k..hi * k];
-            // re-home strikes into band-local row coordinates
-            let band_inject: Vec<Strike> = inject
-                .iter()
-                .filter(|&&(_, i, _, _)| i >= lo && i < hi)
-                .map(|&(st, i, j, d)| (st, i - lo, j, d))
-                .collect();
-            handles.push(s.spawn(move || {
-                abft_fused::dgemm_abft_fused(hi - lo, n, k, alpha, a_band, b,
-                                             beta, band, params, &band_inject)
-            }));
-        }
-        for h in handles {
-            reports.push(h.join().expect("gemm band thread panicked"));
-        }
-    });
+    let mut reports: Vec<FtReport> = vec![FtReport::none(); bands.len()];
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(bands.len());
+    let mut rest = c;
+    for (&(lo, hi), slot) in bands.iter().zip(reports.iter_mut()) {
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        let a_band = &a[lo * k..hi * k];
+        // re-home strikes into band-local row coordinates
+        let band_inject: Vec<Strike> = inject
+            .iter()
+            .filter(|&&(_, i, _, _)| i >= lo && i < hi)
+            .map(|&(st, i, j, d)| (st, i - lo, j, d))
+            .collect();
+        tasks.push(Box::new(move || {
+            *slot = abft_fused::dgemm_abft_fused(hi - lo, n, k, alpha,
+                                                 a_band, b, beta, band,
+                                                 params, &band_inject);
+        }));
+    }
+    pool::run_tasks("dgemm/abft-fused-mt", tasks);
     let mut total = FtReport::none();
     for r in reports {
         total.merge(r);
@@ -130,18 +136,18 @@ pub fn dgemm_simd_mt(m: usize, n: usize, k: usize, alpha: f64, a: &[f64],
         return;
     }
     let bands = row_bands(m, threads, mr);
-    std::thread::scope(|s| {
-        let mut rest = c;
-        for &(lo, hi) in &bands {
-            let (band, tail) = rest.split_at_mut((hi - lo) * n);
-            rest = tail;
-            let a_band = &a[lo * k..hi * k];
-            s.spawn(move || {
-                simd::dgemm(hi - lo, n, k, alpha, a_band, b, beta, band,
-                            params);
-            });
-        }
-    });
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(bands.len());
+    let mut rest = c;
+    for &(lo, hi) in &bands {
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        let a_band = &a[lo * k..hi * k];
+        tasks.push(Box::new(move || {
+            simd::dgemm(hi - lo, n, k, alpha, a_band, b, beta, band,
+                        params);
+        }));
+    }
+    pool::run_tasks("dgemm/simd-mt", tasks);
 }
 
 /// Checksum-fused SIMD DGEMM across row bands: the same band-local FT
@@ -164,29 +170,25 @@ pub fn dgemm_abft_fused_simd_mt(m: usize, n: usize, k: usize, alpha: f64,
                                       params, inject);
     }
     let bands = row_bands(m, threads, mr);
-    let mut reports: Vec<FtReport> = Vec::new();
-    std::thread::scope(|s| {
-        let mut rest = c;
-        let mut handles = Vec::new();
-        for &(lo, hi) in &bands {
-            let (band, tail) = rest.split_at_mut((hi - lo) * n);
-            rest = tail;
-            let a_band = &a[lo * k..hi * k];
-            // re-home strikes into band-local row coordinates
-            let band_inject: Vec<Strike> = inject
-                .iter()
-                .filter(|&&(_, i, _, _)| i >= lo && i < hi)
-                .map(|&(st, i, j, d)| (st, i - lo, j, d))
-                .collect();
-            handles.push(s.spawn(move || {
-                simd::dgemm_abft_fused(hi - lo, n, k, alpha, a_band, b,
-                                       beta, band, params, &band_inject)
-            }));
-        }
-        for h in handles {
-            reports.push(h.join().expect("gemm band thread panicked"));
-        }
-    });
+    let mut reports: Vec<FtReport> = vec![FtReport::none(); bands.len()];
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(bands.len());
+    let mut rest = c;
+    for (&(lo, hi), slot) in bands.iter().zip(reports.iter_mut()) {
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        let a_band = &a[lo * k..hi * k];
+        // re-home strikes into band-local row coordinates
+        let band_inject: Vec<Strike> = inject
+            .iter()
+            .filter(|&&(_, i, _, _)| i >= lo && i < hi)
+            .map(|&(st, i, j, d)| (st, i - lo, j, d))
+            .collect();
+        tasks.push(Box::new(move || {
+            *slot = simd::dgemm_abft_fused(hi - lo, n, k, alpha, a_band, b,
+                                           beta, band, params, &band_inject);
+        }));
+    }
+    pool::run_tasks("dgemm/abft-fused-simd-mt", tasks);
     let mut total = FtReport::none();
     for r in reports {
         total.merge(r);
@@ -219,18 +221,18 @@ pub fn dsymm_lower_mt(m: usize, n: usize, alpha: f64, a: &[f64], b: &[f64],
         }
     }
     let bands = row_bands(m, threads, params.mr);
-    std::thread::scope(|s| {
-        let mut rest = c;
-        for &(lo, hi) in &bands {
-            let (band, tail) = rest.split_at_mut((hi - lo) * n);
-            rest = tail;
-            let a_band = &full[lo * m..hi * m];
-            s.spawn(move || {
-                level3::dgemm(hi - lo, n, m, alpha, a_band, b, beta, band,
-                              params);
-            });
-        }
-    });
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(bands.len());
+    let mut rest = c;
+    for &(lo, hi) in &bands {
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        let a_band = &full[lo * m..hi * m];
+        tasks.push(Box::new(move || {
+            level3::dgemm(hi - lo, n, m, alpha, a_band, b, beta, band,
+                          params);
+        }));
+    }
+    pool::run_tasks("dsymm/mt", tasks);
 }
 
 /// B := α·tril(A)·B across `threads` row bands. Output row `i` only
@@ -248,25 +250,25 @@ pub fn dtrmm_lower_mt(m: usize, n: usize, alpha: f64, a: &[f64],
     }
     let b0 = b.to_vec();
     let bands = row_bands(m, threads, params.mr);
-    std::thread::scope(|s| {
-        let mut rest = b;
-        for &(lo, hi) in &bands {
-            let (band, tail) = rest.split_at_mut((hi - lo) * n);
-            rest = tail;
-            let b0 = &b0;
-            s.spawn(move || {
-                // pack this band's rows of the triangle, zero-filled
-                // above the diagonal, truncated to k = hi columns
-                let mut apanel = vec![0.0; (hi - lo) * hi];
-                for (r, row) in apanel.chunks_exact_mut(hi).enumerate() {
-                    let gi = lo + r;
-                    row[..=gi].copy_from_slice(&a[gi * m..gi * m + gi + 1]);
-                }
-                level3::dgemm(hi - lo, n, hi, alpha, &apanel, &b0[..hi * n],
-                              0.0, band, params);
-            });
-        }
-    });
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(bands.len());
+    let mut rest = b;
+    for &(lo, hi) in &bands {
+        let (band, tail) = rest.split_at_mut((hi - lo) * n);
+        rest = tail;
+        let b0 = &b0;
+        tasks.push(Box::new(move || {
+            // pack this band's rows of the triangle, zero-filled
+            // above the diagonal, truncated to k = hi columns
+            let mut apanel = vec![0.0; (hi - lo) * hi];
+            for (r, row) in apanel.chunks_exact_mut(hi).enumerate() {
+                let gi = lo + r;
+                row[..=gi].copy_from_slice(&a[gi * m..gi * m + gi + 1]);
+            }
+            level3::dgemm(hi - lo, n, hi, alpha, &apanel, &b0[..hi * n],
+                          0.0, band, params);
+        }));
+    }
+    pool::run_tasks("dtrmm/mt", tasks);
 }
 
 /// Solve tril(A)·X = B in place across `threads` column stripes (each
@@ -293,14 +295,14 @@ pub fn dtrsm_llnn_mt(m: usize, n: usize, a: &[f64], b: &mut [f64],
         stripes.push((j, w, s));
         j += per;
     }
-    std::thread::scope(|sc| {
-        for (_, w, stripe) in stripes.iter_mut() {
-            let w = *w;
-            sc.spawn(move || {
-                level3::dtrsm_llnn(m, w, a, stripe, panel, params);
-            });
-        }
-    });
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(stripes.len());
+    for (_, w, stripe) in stripes.iter_mut() {
+        let w = *w;
+        tasks.push(Box::new(move || {
+            level3::dtrsm_llnn(m, w, a, stripe, panel, params);
+        }));
+    }
+    pool::run_tasks("dtrsm/mt", tasks);
     for (j, w, stripe) in &stripes {
         for r in 0..m {
             b[r * n + j..r * n + j + w].copy_from_slice(

@@ -8,6 +8,9 @@
 //! - Level-1 (`dscal`/`daxpy`/`ddot`/`dnrm2`): 256-bit lanes, 4-way
 //!   unrolled FMA chains, software prefetch a fixed distance ahead
 //!   (§4.4.4's `prefetcht0` placement).
+//! - Level-2 (`dgemv`): row-major matrix-vector product where every row
+//!   runs the ddot kernel's four independent FMA accumulator chains —
+//!   the §4.4 register-reuse scheme at AVX2 width.
 //! - Level-3 (`dgemm`): a GEBP macro kernel over packed A/B panels with
 //!   an 8×4 register-tiled microkernel — eight `__m256d` accumulators,
 //!   one broadcast-FMA per row per rank-1 update (§3.3.2's register
@@ -148,6 +151,23 @@ pub fn dnrm2(x: &[f64]) -> f64 {
         };
     }
     crate::blas::level1::dnrm2(x)
+}
+
+/// y := α·A·x + β·y over row-major A (m×n) — each row reduces through
+/// the ddot kernel's four independent AVX2 FMA chains; tuned scalar
+/// fallback off-AVX2.
+pub fn dgemv(m: usize, n: usize, alpha: f64, a: &[f64], x: &[f64], beta: f64,
+             y: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    #[cfg(target_arch = "x86_64")]
+    if CpuFeatures::get().simd_ready() {
+        // SAFETY: the probe confirmed avx2+fma on this CPU.
+        unsafe { avx2::dgemv(m, n, alpha, a, x, beta, y) };
+        return;
+    }
+    crate::blas::level2::dgemv(m, n, alpha, a, x, beta, y);
 }
 
 /// C := α·A·B + β·C — GEBP over packed panels with the 8×4 AVX2
@@ -360,6 +380,22 @@ mod avx2 {
             i += 1;
         }
         ssq
+    }
+
+    /// y := α·A·x + β·y over row-major A: one row per iteration, each
+    /// reduced by [`ddot`]'s four independent FMA accumulator chains
+    /// (the row stream prefetches inside `ddot`; rows are contiguous,
+    /// so the next row's head is usually already resident).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (probe-checked by the safe wrapper).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dgemv(m: usize, n: usize, alpha: f64, a: &[f64],
+                        x: &[f64], beta: f64, y: &mut [f64]) {
+        for i in 0..m {
+            let acc = ddot(&a[i * n..(i + 1) * n], x);
+            y[i] = alpha * acc + beta * y[i];
+        }
     }
 
     /// Pack an (mcb × kcb) block of A into MR-row micro panels,
@@ -857,6 +893,24 @@ mod tests {
         let x = vec![1e300; 18];
         let expect = 1e300 * (18.0f64).sqrt();
         assert!((dnrm2(&x) - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn dgemv_matches_naive_odd_shapes() {
+        check("simd-dgemv", 30, |g| {
+            let m = g.dim(1, 60);
+            let n = g.dim(1, 60);
+            let a = Matrix::random(m, n, &mut g.rng);
+            let x = g.rng.normal_vec(n);
+            let y0 = g.rng.normal_vec(m);
+            let (alpha, beta) =
+                (g.rng.range(-2.0, 2.0), g.rng.range(-1.0, 1.0));
+            let mut want = y0.clone();
+            naive::dgemv(m, n, alpha, &a.data, &x, beta, &mut want);
+            let mut got = y0.clone();
+            dgemv(m, n, alpha, &a.data, &x, beta, &mut got);
+            ensure(allclose(&got, &want, 1e-12, 1e-12), "simd dgemv wrong")
+        });
     }
 
     #[test]

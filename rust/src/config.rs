@@ -118,6 +118,16 @@ pub struct Profile {
     /// typed `Overloaded` error instead of growing the queue without
     /// bound. `None` = unbounded admission.
     pub admission_depth: Option<usize>,
+    /// Worker threads for the cluster's persistent work-stealing
+    /// compute pool ([`crate::runtime::pool`]). `None` sizes the pool
+    /// from the effective thread budget (see
+    /// [`Profile::pool_worker_count`]), so admission tickets and pool
+    /// capacity stay one currency.
+    pub pool_workers: Option<usize>,
+    /// Disable the persistent compute pool: every MT and batched kernel
+    /// frame falls back to a per-call scoped fork/join. This is the
+    /// `--no-pool` A/B mode; results are bitwise identical either way.
+    pub no_pool: bool,
     /// Per-kernel latency SLO targets for the serving ledger.
     pub slo: SloTable,
     /// Cluster-wide fault-injection campaign knobs. When set, a serving
@@ -149,6 +159,8 @@ impl Profile {
             max_shards: 1,
             starvation_limit: 4,
             admission_depth: None,
+            pool_workers: None,
+            no_pool: false,
             slo: SloTable::default(),
             campaign: None,
             artifact_dir: "artifacts",
@@ -175,6 +187,8 @@ impl Profile {
             max_shards: 2,
             starvation_limit: 4,
             admission_depth: None,
+            pool_workers: None,
+            no_pool: false,
             slo: SloTable::default(),
             campaign: None,
             artifact_dir: "artifacts/cascade_sim",
@@ -229,6 +243,34 @@ impl Profile {
     /// Whether the serving tier may change size at runtime.
     pub fn elastic(&self) -> bool {
         self.min_shards < self.max_shards
+    }
+
+    /// Same profile with an explicit compute-pool worker count
+    /// (clamped to at least 1).
+    pub fn with_pool_workers(mut self, workers: usize) -> Profile {
+        self.pool_workers = Some(workers.max(1));
+        self
+    }
+
+    /// Same profile with the persistent compute pool disabled: kernel
+    /// frames use per-call scoped fork/join (the `--no-pool` A/B mode).
+    pub fn without_pool(mut self) -> Profile {
+        self.no_pool = true;
+        self
+    }
+
+    /// Resolved compute-pool size: the explicit [`Profile::pool_workers`]
+    /// override when set, else the effective thread budget — the same
+    /// formula the server's scheduling ledger uses (`thread_budget`,
+    /// defaulting to `threads × workers`, clamped to at least one full
+    /// MT grant) — so a grant admitted by the budget always fits the
+    /// pool.
+    pub fn pool_worker_count(&self) -> usize {
+        self.pool_workers.unwrap_or_else(|| {
+            self.thread_budget
+                .unwrap_or(self.threads.max(1) * self.workers.max(1))
+                .max(self.threads.max(1))
+        })
     }
 
     /// Same profile with a per-shard queue-depth admission watermark.
@@ -366,6 +408,29 @@ mod tests {
         });
         assert_eq!(p.campaign.as_ref().unwrap().stride, 1,
                    "stride normalizes to the schedule's floor");
+    }
+
+    #[test]
+    fn pool_knobs_default_and_resolve() {
+        let p = Profile::skylake_sim();
+        assert!(p.pool_workers.is_none());
+        assert!(!p.no_pool);
+        // 1 kernel thread x 4 workers
+        assert_eq!(p.pool_worker_count(), 4);
+        // 4 threads x 8 workers on the wider machine
+        assert_eq!(Profile::cascade_sim().pool_worker_count(), 32);
+        // explicit override wins and clamps
+        assert_eq!(Profile::skylake_sim().with_pool_workers(0)
+                       .pool_worker_count(), 1);
+        assert_eq!(Profile::skylake_sim().with_pool_workers(6)
+                       .pool_worker_count(), 6);
+        // an explicit budget resizes the pool with it (one currency),
+        // clamped to a full MT grant
+        assert_eq!(Profile::skylake_sim().with_thread_budget(2)
+                       .pool_worker_count(), 2);
+        assert_eq!(Profile::cascade_sim().with_thread_budget(1)
+                       .pool_worker_count(), 4);
+        assert!(Profile::skylake_sim().without_pool().no_pool);
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //! [`Batcher::next_batch_where`] makes draining cost-aware: the caller
 //! passes an admission predicate (the server's thread-budget check) and
 //! the oldest *admissible* group is drained while deferred groups keep
-//! their place in line.
+//! their place in line. Since the compute pool took over execution the
+//! debited grant is an *admission ticket* bounding how many pool tasks
+//! the batch may occupy at once, not a count of threads to spawn — see
+//! [`crate::runtime::pool`].
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::hash::Hash;

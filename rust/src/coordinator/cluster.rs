@@ -88,6 +88,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::server::{Admitted, Server, ServerHandle};
 use crate::ft::injector::{CampaignConfig, InjectionCampaign, InjectorConfig};
 use crate::ft::policy::FtPolicy;
+use crate::runtime::pool::ComputePool;
 use crate::util::rng::Rng;
 
 pub use crate::coordinator::server::Error;
@@ -504,6 +505,12 @@ impl ClusterShared {
         merged.scale_ups = self.stats.scale_ups.load(Ordering::Relaxed);
         merged.scale_downs = self.stats.scale_downs.load(Ordering::Relaxed);
         merged.keys_migrated = self.stats.keys_migrated.load(Ordering::Relaxed);
+        // pool counters are cluster-level (one pool shared by every
+        // shard via the router), so they are stamped once here — the
+        // per-shard snapshots carry zeros and the merge stays exact
+        if let Some(pool) = self.router.pool() {
+            merged.pool = pool.stats();
+        }
         merged
     }
 
@@ -741,6 +748,18 @@ impl Cluster {
         let router = match cfg.campaign.take() {
             Some(campaign) => router.with_campaign(campaign),
             None => router,
+        };
+        // the cluster owns the compute pool the same way: one
+        // persistent work-stealing worker set, sized from the profile's
+        // thread budget, carried by the shared router so every shard —
+        // starting or spawned mid-run — submits band tasks to the same
+        // long-lived workers instead of fork/joining per call.
+        // `--no-pool` (or a pre-attached pool) leaves the router as-is.
+        let router = if router.pool.is_none() && !router.profile.no_pool {
+            let workers = router.profile.pool_worker_count();
+            router.with_pool(Arc::new(ComputePool::new(workers)))
+        } else {
+            router
         };
         let router = Arc::new(router);
         let profile = router.profile.clone();

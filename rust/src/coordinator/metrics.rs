@@ -9,6 +9,11 @@
 //! deferrals, admission sheds, the configured budget and the queue /
 //! in-flight high-watermarks — live beside them, so one snapshot answers
 //! both "what ran" and "how the admission/scheduling pipeline behaved".
+//! Runtime-substrate counters complete the picture: the compute pool's
+//! occupancy/stealing ledger ([`crate::runtime::pool::PoolStats`],
+//! stamped once by the cluster that owns the shared pool) and the
+//! packing-arena totals of the server worker threads
+//! ([`Metrics::record_arena`]).
 //!
 //! Snapshots retain the raw latency samples, which is what lets a
 //! cluster merge its per-shard ledgers **exactly**:
@@ -19,6 +24,8 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::runtime::pool::PoolStats;
+use crate::util::arena;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -87,6 +94,11 @@ struct Inner {
     thread_budget: u64,
     max_in_flight_threads: u64,
     max_queue_depth: u64,
+    /// Latest `(capacity, grows, leases)` of each recording thread's
+    /// packing arena ([`crate::util::arena::thread_stats`]); keyed by
+    /// thread id because the stats are cumulative per thread — each
+    /// refresh overwrites, so a snapshot sums every thread exactly once.
+    arenas: HashMap<std::thread::ThreadId, (usize, u64, u64)>,
     /// ledgers keyed by executed kernel registry name
     kernels: HashMap<&'static str, KernelLedger>,
 }
@@ -209,6 +221,20 @@ pub struct MetricsSnapshot {
     pub max_in_flight_threads: u64,
     /// High-watermark of the pending-queue depth (max across shards).
     pub max_queue_depth: u64,
+    /// Total packing-arena capacity (`f64` elements) across the server
+    /// worker threads that recorded into this ledger (summed by merge —
+    /// shards own disjoint workers). Pool-worker arenas are reported
+    /// separately under [`MetricsSnapshot::pool`].
+    pub arena_capacity: u64,
+    /// Total arena slab reallocations across those threads — flat in
+    /// steady state, when the packing hot path allocates nothing.
+    pub arena_grows: u64,
+    /// Total arena leases served across those threads.
+    pub arena_leases: u64,
+    /// Compute-pool counters. Per-shard snapshots carry zeros — shards
+    /// share ONE cluster pool, so the cluster stamps the pool's stats
+    /// once on the merged view and cross-shard sums stay exact.
+    pub pool: PoolStats,
     /// Per-kernel ledger, keyed by executed kernel registry name.
     pub kernels: HashMap<String, KernelStats>,
     /// Per-routine rollups (exact: aggregated from the retained
@@ -338,6 +364,17 @@ impl Metrics {
         self.inner.lock().unwrap().thread_budget = budget;
     }
 
+    /// Refresh the calling thread's packing-arena statistics
+    /// ([`crate::util::arena::thread_stats`]) into the ledger. The stats
+    /// are cumulative per thread and keyed by thread id, so workers can
+    /// call this after every drained batch and a snapshot still counts
+    /// each thread exactly once (latest value wins).
+    pub fn record_arena(&self) {
+        let stats = arena::thread_stats();
+        let mut m = self.inner.lock().unwrap();
+        m.arenas.insert(std::thread::current().id(), stats);
+    }
+
     /// A point-in-time copy of the ledger, with all summaries computed
     /// from the retained samples.
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -362,6 +399,11 @@ impl Metrics {
             max_queue_depth: m.max_queue_depth,
             ..Default::default()
         };
+        for &(capacity, grows, leases) in m.arenas.values() {
+            snap.arena_capacity += capacity as u64;
+            snap.arena_grows += grows;
+            snap.arena_leases += leases;
+        }
         for (name, k) in &m.kernels {
             snap.kernels.insert(name.to_string(), KernelStats {
                 routine: k.routine.to_string(),
@@ -488,9 +530,41 @@ impl MetricsSnapshot {
                 .field("ups", Json::Int(self.scale_ups))
                 .field("downs", Json::Int(self.scale_downs))
                 .field("keys_migrated", Json::Int(self.keys_migrated)))
+            .field("arena", Json::obj()
+                .field("capacity_f64", Json::Int(self.arena_capacity))
+                .field("grows", Json::Int(self.arena_grows))
+                .field("leases", Json::Int(self.arena_leases)))
+            .field("pool", self.pool_json())
             .field("slo_burns", Json::Int(self.slo_burns()))
             .field("e2e_overall", summary_json(&self.e2e_overall))
             .field("kernels", Json::Arr(kernel_rows))
+    }
+
+    /// JSON view of the compute-pool counters: occupancy and stealing
+    /// totals, the pool workers' arena triple, and the per-kernel-frame
+    /// queue-to-start wait summaries (sorted by frame label).
+    fn pool_json(&self) -> Json {
+        let p = &self.pool;
+        let waits = p
+            .queue_summaries()
+            .into_iter()
+            .map(|(label, s)| {
+                Json::obj()
+                    .field("frame", Json::Str(label.into()))
+                    .field("wait", summary_json(&s))
+            })
+            .collect();
+        Json::obj()
+            .field("workers", Json::Int(p.workers))
+            .field("tasks_submitted", Json::Int(p.tasks_submitted))
+            .field("tasks_executed", Json::Int(p.tasks_executed))
+            .field("steals", Json::Int(p.steals))
+            .field("park_wakeups", Json::Int(p.park_wakeups))
+            .field("arena", Json::obj()
+                .field("capacity_f64", Json::Int(p.arena_capacity))
+                .field("grows", Json::Int(p.arena_grows))
+                .field("leases", Json::Int(p.arena_leases)))
+            .field("queue_waits", Json::Arr(waits))
     }
 
     /// Aggregate per-shard snapshots **exactly**: counters sum, kernel
@@ -531,6 +605,10 @@ impl MetricsSnapshot {
             out.max_in_flight_threads =
                 out.max_in_flight_threads.max(p.max_in_flight_threads);
             out.max_queue_depth = out.max_queue_depth.max(p.max_queue_depth);
+            out.arena_capacity += p.arena_capacity;
+            out.arena_grows += p.arena_grows;
+            out.arena_leases += p.arena_leases;
+            out.pool.absorb(&p.pool);
             for (name, k) in &p.kernels {
                 let dst = out.kernels.entry(name.clone()).or_default();
                 let first_part = dst.completed == 0;
@@ -763,6 +841,71 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.kernels["pjrt"].slo_target, 0.0, "mixed targets");
         assert_eq!(s.kernels["pjrt"].slo_burns, 1, "0.1 burns only 0.05");
+    }
+
+    /// Server-worker arena stats: recorded per thread (latest wins, so
+    /// repeated refreshes never double-count), summed into the
+    /// snapshot, summed again across shards by merge, and emitted in
+    /// the ledger JSON.
+    #[test]
+    fn arena_stats_record_sum_and_merge() {
+        // a dedicated thread so the arena counters start from zero
+        let a = std::thread::spawn(|| {
+            let m = Metrics::new();
+            crate::util::arena::with([32, 16], |_| ());
+            m.record_arena();
+            crate::util::arena::with([8], |_| ());
+            m.record_arena(); // refresh: overwrites, never double-counts
+            m.snapshot()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(a.arena_capacity, 48);
+        assert_eq!(a.arena_grows, 1);
+        assert_eq!(a.arena_leases, 2);
+        let mut b = Metrics::new().snapshot();
+        b.arena_capacity = 100;
+        b.arena_grows = 2;
+        b.arena_leases = 7;
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.arena_capacity, 148, "shard arenas sum");
+        assert_eq!(merged.arena_grows, 3);
+        assert_eq!(merged.arena_leases, 9);
+        let text = merged.to_json().render();
+        assert!(text.contains(
+            r#""arena":{"capacity_f64":148,"grows":3,"leases":9}"#));
+    }
+
+    /// Compute-pool counters ride the merge via [`PoolStats::absorb`]
+    /// (per-shard snapshots carry zeros; the cluster stamps the shared
+    /// pool once) and serialize with sorted per-frame wait summaries.
+    #[test]
+    fn pool_counters_merge_and_serialize() {
+        let mut a = Metrics::new().snapshot();
+        a.pool.workers = 4;
+        a.pool.tasks_submitted = 12;
+        a.pool.tasks_executed = 12;
+        a.pool.steals = 3;
+        a.pool.park_wakeups = 5;
+        a.pool.arena_leases = 12;
+        a.pool.queue_waits.insert("dgemm/mt", vec![1e-6, 3e-6]);
+        a.pool.queue_waits.insert("dgemm/batched", vec![2e-6]);
+        let b = Metrics::new().snapshot();
+        let merged = MetricsSnapshot::merge(&[b, a]);
+        assert_eq!(merged.pool.workers, 4);
+        assert_eq!(merged.pool.tasks_submitted, 12);
+        assert_eq!(merged.pool.tasks_executed, 12,
+                   "no-leak invariant survives the merge");
+        assert_eq!(merged.pool.park_wakeups, 5);
+        let text = merged.to_json().render();
+        assert!(text.contains(r#""pool":{"workers":4"#));
+        assert!(text.contains(r#""tasks_submitted":12"#));
+        assert!(text.contains(r#""steals":3"#));
+        assert!(text.contains(r#""park_wakeups":5"#));
+        // frames serialize sorted: dgemm/batched before dgemm/mt
+        let batched = text.find(r#""frame":"dgemm/batched""#).unwrap();
+        let mt = text.find(r#""frame":"dgemm/mt""#).unwrap();
+        assert!(batched < mt, "queue_waits must be sorted by frame");
     }
 
     /// The cluster-merge invariant: merging two shard snapshots is

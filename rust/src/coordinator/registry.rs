@@ -671,6 +671,10 @@ fn dgemv_tuned(c: &ExecCtx) -> KernelOut {
     dgemv_with(c, level2::dgemv)
 }
 
+fn dgemv_simd(c: &ExecCtx) -> KernelOut {
+    dgemv_with(c, simd::dgemv)
+}
+
 fn dgemv_dmr(c: &ExecCtx) -> KernelOut {
     let BlasRequest::Dgemv { alpha, a, x, beta, y } = c.req else {
         unreachable!("dgemv kernel planned for {}", c.req.routine())
@@ -1531,6 +1535,8 @@ static ENTRIES: &[KernelDescriptor] = &[
            "Ri=4 register reuse, streaming A", dgemv_tuned),
     protected("dgemv/dmr", "dgemv", Level::L2, Scheme::Dmr, PROTECTED_ALL,
               "duplicated row streams", dgemv_dmr),
+    serial("dgemv/simd", "dgemv", Level::L2, Impl::Simd,
+           "row-dot with 4 AVX2 FMA chains, runtime-probed", dgemv_simd),
     serial("dtrsv/naive", "dtrsv", Level::L2, Impl::Naive,
            "textbook forward solve", dtrsv_naive),
     serial("dtrsv/blocked", "dtrsv", Level::L2, Impl::Blocked,
@@ -1693,7 +1699,7 @@ mod tests {
     #[test]
     fn serial_ladder_order_is_deterministic() {
         let reg = KernelRegistry::global();
-        for r in ["dscal", "daxpy", "ddot", "dnrm2", "dgemm"] {
+        for r in ["dscal", "daxpy", "ddot", "dnrm2", "dgemv", "dgemm"] {
             let names: Vec<&str> =
                 reg.serial_variants(r).iter().map(|e| e.name).collect();
             let want: Vec<String> = ["naive", "blocked", "tuned", "simd"]

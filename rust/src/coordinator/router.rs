@@ -29,6 +29,7 @@ use crate::coordinator::request::{
 use crate::ft::injector::{CampaignConfig, Fault, InjectionCampaign};
 use crate::ft::policy::FtPolicy;
 use crate::ft::FtReport;
+use crate::runtime::pool::{self, ComputePool};
 use crate::util::matrix::Matrix;
 
 /// The router. `pjrt` is optional so the native path works without
@@ -46,17 +47,27 @@ pub struct Router {
     /// mid-run inherits the campaign (and its slice of the schedule)
     /// with no extra hand-off: the workers simply ask the router.
     pub campaign: Option<Arc<InjectionCampaign>>,
+    /// The cluster's persistent work-stealing compute pool, when one is
+    /// attached. Like the campaign it lives on the one object every
+    /// shard shares as `Arc<Router>`, so shards the autoscaler spawns
+    /// mid-run submit to the same long-lived workers. The router
+    /// installs it thread-locally around kernel execution
+    /// ([`crate::runtime::pool::enter`]); `None` (unit tests, plain
+    /// servers, `--no-pool`) leaves the frames on their scoped
+    /// fork/join fallback.
+    pub pool: Option<Arc<ComputePool>>,
 }
 
 impl Router {
     /// A router with no PJRT backend (everything resolves native).
     pub fn native_only(profile: Profile, prefer: Backend) -> Router {
-        Router { profile, pjrt: None, prefer, campaign: None }
+        Router { profile, pjrt: None, prefer, campaign: None, pool: None }
     }
 
     /// A router that may resolve requests to the PJRT artifact path.
     pub fn with_pjrt(profile: Profile, pjrt: PjrtBackend, prefer: Backend) -> Router {
-        Router { profile, pjrt: Some(pjrt), prefer, campaign: None }
+        Router { profile, pjrt: Some(pjrt), prefer, campaign: None,
+                 pool: None }
     }
 
     /// Same router with a live injection campaign started from `cfg`
@@ -71,6 +82,28 @@ impl Router {
     /// The live campaign, if one is running.
     pub fn campaign(&self) -> Option<&InjectionCampaign> {
         self.campaign.as_deref()
+    }
+
+    /// Same router with a persistent compute pool attached. The cluster
+    /// builds one pool (sized by
+    /// [`crate::config::Profile::pool_worker_count`]) and attaches it
+    /// here before wrapping the router in `Arc`, so every shard — and
+    /// every shard spawned later — shares the same workers.
+    pub fn with_pool(mut self, pool: Arc<ComputePool>) -> Router {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The attached compute pool, if any.
+    pub fn pool(&self) -> Option<&Arc<ComputePool>> {
+        self.pool.as_ref()
+    }
+
+    /// Install this router's pool (when present) on the current thread
+    /// for the lifetime of the returned guard, routing the `blas`
+    /// frames' band tasks to the persistent workers.
+    fn enter_pool(&self) -> Option<pool::PoolGuard> {
+        self.pool.as_ref().map(|p| pool::enter(p.clone()))
     }
 
     /// Where would this request actually run?
@@ -105,6 +138,7 @@ impl Router {
     /// no planner lookup, no registry scan, just the planned kernel.
     pub fn execute_planned(&self, plan: &ExecutionPlan, req: &BlasRequest,
                            fault: Option<Fault>) -> Result<BlasResponse> {
+        let _pool = self.enter_pool();
         Ok(execute_plan(req, plan, &self.profile, fault))
     }
 
@@ -124,6 +158,7 @@ impl Router {
     pub fn execute_batch(&self, kernel: &'static KernelDescriptor,
                          reqs: &[(&BlasRequest, Option<Fault>)],
                          threads: usize) -> Vec<BlasResponse> {
+        let _pool = self.enter_pool();
         let t0 = std::time::Instant::now();
         let params = &self.profile.gemm;
         let mut dims = Vec::with_capacity(reqs.len());
@@ -207,6 +242,7 @@ impl Router {
                 // one execution code path: execute_native is the thin
                 // planner wrapper over the same execute_plan hot path
                 // the server's workers use
+                let _pool = self.enter_pool();
                 Ok(execute_native(req, variant, &self.profile, policy, fault))
             }
         }

@@ -21,7 +21,14 @@
 //! 2. **Scheduling** — workers drain the oldest *admissible* group: a
 //!    thread-budget ledger debits each in-flight batch's thread grant
 //!    against the configured budget, deferring MT-kernel batches that
-//!    would oversubscribe it while serial batches flow past.
+//!    would oversubscribe it while serial batches flow past. When the
+//!    shard runs inside a cluster, a grant is an **admission ticket**
+//!    against the cluster's persistent
+//!    [`crate::runtime::pool::ComputePool`]: the same ledger now bounds
+//!    pool *occupancy* (concurrent band tasks) rather than a
+//!    spawned-thread count — the pool is sized from the same
+//!    `Profile.thread_budget`, so tickets and capacity stay in one
+//!    currency.
 //! 3. **Execution** — workers run the pre-resolved plan via
 //!    [`Router::execute_planned`]; no planner lookup happens on the hot
 //!    path. Unplanned (PJRT) jobs fall back to `Router::execute`. A
@@ -103,7 +110,9 @@ enum BatchKey {
 }
 
 impl BatchKey {
-    /// Pool threads a batch with this key occupies while in flight.
+    /// Threads a batch with this key occupies while in flight — the
+    /// size of its admission ticket against the compute pool (or, with
+    /// `--no-pool`, the scoped threads its frame will spawn).
     fn thread_cost(&self) -> usize {
         match self {
             BatchKey::Planned { threads, .. } => (*threads).max(1) as usize,
@@ -621,6 +630,9 @@ fn worker_loop(shared: Arc<Shared>) {
         // a batched sibling executes as one fused call (replies sent
         // inside); anything else falls back to the per-item loop below
         let Some(batch) = try_fused(&shared, &router, batch, cost) else {
+            // refresh this worker's packing-arena totals into the
+            // ledger (cumulative per thread; latest value wins)
+            shared.metrics.record_arena();
             continue;
         };
         for pending in batch {
@@ -688,6 +700,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 }
             }
         }
+        shared.metrics.record_arena();
         // _credit drops here: ledger credited back, waiters notified
     }
 }

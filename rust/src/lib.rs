@@ -16,9 +16,12 @@
 //!   both per-call plans and cluster-wide, rate-based
 //!   [`ft::injector::InjectionCampaign`]s whose schedules survive
 //!   elastic scaling (the `ftblas soak` CI gate drives them).
-//! - [`runtime`] — the PJRT runtime: loads the AOT-compiled HLO-text
-//!   artifacts produced by `python/compile/aot.py` and executes them on
-//!   the CPU PJRT client. Python never runs on this path.
+//! - [`runtime`] — the execution substrate: the persistent work-stealing
+//!   compute pool in [`runtime::pool`] that every multithreaded and
+//!   batched kernel frame drains into (replacing per-call fork/join),
+//!   and the PJRT runtime that loads the AOT-compiled HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU
+//!   PJRT client. Python never runs on this path.
 //! - [`coordinator`] — typed BLAS requests and the serving shell: every
 //!   native kernel (serial, multithreaded, DMR, fused/unfused/weighted
 //!   ABFT) registers a descriptor in the kernel *registry*; a *planner*

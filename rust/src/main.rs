@@ -93,6 +93,7 @@ USAGE:
              [--workers W] [--max-batch B] [--thread-budget T] [--threads T]
              [--vec-len N] [--mat-dim N] [--backend tuned|simd]
              [--trace steady|burst|small-gemm] [--burst F]
+             [--pool-workers N] [--no-pool]
              [--inject] [--profile P]
              (--shards: fixed-size cluster, routed by planned kernel;
               --min-shards/--max-shards: elastic bounds — a scaling
@@ -102,19 +103,26 @@ USAGE:
               --trace burst (or --burst F): bursty paced arrivals;
               --trace small-gemm: bursty all-small-DGEMM stream that
               exercises the batch-fused execution path — pair with
-              --backend simd to fuse under a protecting --ft policy)
+              --backend simd to fuse under a protecting --ft policy;
+              --pool-workers: size of the cluster's persistent compute
+              pool (default: the thread budget); --no-pool: scoped
+              fork/join per kernel frame — the A/B baseline, bitwise
+              identical results)
   ftblas soak [--quick] [--duration SECS] [--rate ERRORS_PER_MIN]
              [--stride K] [--target all|dmr|abft|fused] [--ft P]
              [--seed S (campaign schedule)] [--trace-seed S (workload)]
              [--min-shards M] [--max-shards X] [--admission-depth D]
-             [--workers W] [--mat-dim N] [--vec-len N] [--out PATH]
+             [--workers W] [--threads T] [--mat-dim N] [--vec-len N]
+             [--out PATH] [--pool-workers N] [--no-pool]
              [--trace steady|burst|small-gemm] [--backend tuned|simd]
              [--profile P]
              (timed, rate-controlled fault-injection campaign against an
               elastic burst trace; exits nonzero unless the tier grew,
               shards spawned mid-run were struck, no error escaped, and
               the injected/detected/corrected counts balance exactly —
-              the CI reliability gate. --out writes the soak report as
+              the CI reliability gate. Unless --no-pool, the gate also
+              asserts the persistent compute pool woke parked workers
+              and leaked no tasks. --out writes the soak report as
               JSON.)
   ftblas bench --exp smoke|table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
@@ -389,6 +397,13 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
         profile.admission_depth =
             Some(args.get_usize("admission-depth", 0)?.max(1));
     }
+    if args.has("pool-workers") {
+        profile = profile
+            .with_pool_workers(args.get_usize("pool-workers", 0)?.max(1));
+    }
+    if args.has("no-pool") {
+        profile = profile.without_pool();
+    }
     // sizing: `--shards` is the fixed-size mode; `--min-shards` /
     // `--max-shards` widen the bounds and hand sizing to the
     // autoscaling controller (starting at the floor)
@@ -450,7 +465,7 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     };
     println!("serve: {} requests on {} (shards={}{}, workers/shard={}, \
               threads={}, max_batch={}, admission_depth={}, policy={}, \
-              trace={}, backend={})",
+              trace={}, backend={}, pool={})",
              requests, profile.name, profile.shards,
              if profile.elastic() {
                  format!(" elastic [{}..{}]", profile.min_shards,
@@ -461,7 +476,12 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
              profile.workers, profile.threads, profile.max_batch,
              profile.admission_depth.map_or("unbounded".to_string(),
                                             |d| d.to_string()),
-             policy.name(), shape.name(), backend.name());
+             policy.name(), shape.name(), backend.name(),
+             if profile.no_pool {
+                 "off (scoped frames)".to_string()
+             } else {
+                 format!("{} workers", profile.pool_worker_count())
+             });
     let entries = trace::generate(&cfg);
     let injection = args.has("inject").then(|| InjectorConfig {
         count: (requests / 8).max(1),
@@ -627,6 +647,19 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
     profile = profile.with_shard_bounds(min, max);
     profile.shards = profile.min_shards;
     profile.workers = args.get_usize("workers", 1)?.max(1);
+    // MT frames need a real thread grant to reach the compute pool: at
+    // the skylake_sim default of 1 thread every frame would fall
+    // through to serial and the pool gates below would fail vacuously
+    profile.threads =
+        args.get_usize("threads", profile.threads.max(2))?.max(1);
+    if args.has("pool-workers") {
+        profile = profile
+            .with_pool_workers(args.get_usize("pool-workers", 0)?.max(1));
+    }
+    if args.has("no-pool") {
+        profile = profile.without_pool();
+    }
+    let pooled = !profile.no_pool;
     // a shallow watermark + small batch window keep burst pressure
     // visible to the controller (sheds and queue spikes, not silence)
     profile = profile
@@ -760,7 +793,7 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
         .chain(retired.iter())
         .map(|s| s.errors_injected)
         .sum();
-    let checks = [
+    let mut checks = vec![
         soak_check("requests-complete", snap.failed == 0,
                    format!("{} failed of {} completed", snap.failed,
                            snap.completed)),
@@ -786,6 +819,23 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
                    format!("{midrun_injected} strikes on shards spawned \
                             mid-run")),
     ];
+    if pooled {
+        // the grow→shrink cycle above ran entirely on the persistent
+        // pool: parked workers must have been woken by arriving band
+        // tasks, and every submitted task must have executed (no leaks
+        // across elastic scale events — the Drop/shutdown join
+        // guarantee, observed from the ledger side)
+        checks.push(soak_check(
+            "pool-wakeups", snap.pool.park_wakeups > 0,
+            format!("{} park wakeups across {} pooled tasks",
+                    snap.pool.park_wakeups, snap.pool.tasks_executed)));
+        checks.push(soak_check(
+            "pool-drained",
+            snap.pool.tasks_submitted > 0
+                && snap.pool.tasks_executed == snap.pool.tasks_submitted,
+            format!("{} submitted / {} executed",
+                    snap.pool.tasks_submitted, snap.pool.tasks_executed)));
+    }
     println!("\nsoak gate:");
     for c in &checks {
         println!("  [{}] {:<22} {}", if c.pass { "PASS" } else { "FAIL" },
@@ -806,6 +856,7 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
                 .field("max_shards", Json::Int(max as u64))
                 .field("trace", Json::Str(shape.name().into()))
                 .field("backend", Json::Str(backend.name().into()))
+                .field("pooled", Json::Bool(pooled))
                 .field("quick", Json::Bool(quick)))
             .field("campaign", Json::obj()
                 .field("wall_s", Json::Num(campaign_wall))

@@ -1,5 +1,11 @@
-//! PJRT runtime (Layer 3's bridge to the AOT artifacts).
+//! Execution runtimes: the persistent compute pool and the PJRT bridge.
 //!
+//! [`pool`] is the serving tier's threading substrate — a persistent
+//! work-stealing worker set that replaces per-call `std::thread::scope`
+//! fork/join on every MT and batched kernel path.
+//!
+//! The rest of the module is the PJRT runtime (Layer 3's bridge to the
+//! AOT artifacts):
 //! `python/compile/aot.py` lowers every routine x variant x shape to HLO
 //! *text* plus a manifest; this module loads the manifest
 //! ([`manifest`]), compiles artifacts on the CPU PJRT client on first
@@ -14,6 +20,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 
 pub use engine::{ArgView, Engine};
 pub use manifest::{Manifest, ArtifactSpec, Shape};

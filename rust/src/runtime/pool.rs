@@ -1,0 +1,690 @@
+//! Persistent work-stealing compute pool — the serving tier's threading
+//! substrate.
+//!
+//! Before this module existed, every MT kernel frame in
+//! [`crate::blas::parallel`] and every drained batch in
+//! [`crate::blas::batched`] paid a full `std::thread::scope` fork/join:
+//! a shard executing a steady stream of MT row-band GEMMs spawned and
+//! joined OS threads thousands of times per second. The pool replaces
+//! that with **one** set of long-lived workers per
+//! [`crate::coordinator::cluster::Cluster`], shared by every shard via
+//! the existing `Arc<Router>`:
+//!
+//! - each worker owns a LIFO deque (its newest band first, for warm
+//!   caches) and steals FIFO from its siblings when it runs dry;
+//! - a global injector queue takes the overflow when a frame submits
+//!   more tasks than there are workers;
+//! - idle workers park on a condvar and are woken exactly when work
+//!   arrives — a quiet pool burns no CPU.
+//!
+//! Kernel frames never talk to the pool directly. The router installs
+//! the cluster's pool into a **thread-local slot** around kernel
+//! execution ([`enter`]), and the frames hand their per-band closures to
+//! [`run_tasks`]: with a pool installed the bands become pool tasks
+//! gated on a completion latch; without one (unit tests, `--no-pool`
+//! A/B mode, plain [`crate::coordinator::server::Server`]s built
+//! outside a cluster) the exact same closures run under a scoped
+//! fork/join. Either way the MR-aligned band decomposition, the
+//! band-local strike re-homing, and the per-item `FtReport` merges are
+//! untouched — pooled execution is bitwise identical to the scoped
+//! frames (the `proptest_pool` suite pins this).
+//!
+//! The submitting thread is not idle while its frame drains: it helps
+//! execute queued tasks until its latch opens, so a grant of `t`
+//! threads really applies `t` threads (the submitter plus `t - 1`
+//! workers' worth of capacity) just like the scoped frames did.
+//!
+//! **Grants are admission tickets.** The server's thread-budget ledger
+//! (debit on drain, deferral when the head group doesn't fit,
+//! anti-starvation reservation) is unchanged, but its meaning shifts:
+//! a grant of `t` threads is now a ticket admitting at most `t`
+//! concurrent band tasks into the pool, and the budget bounds total
+//! pool *occupancy* across a shard's in-flight batches instead of a
+//! spawned-thread count. Sizing the pool from the same
+//! `Profile::thread_budget` keeps tickets and capacity in one currency.
+//!
+//! Shutdown is a join guarantee: [`ComputePool::shutdown`] (also run by
+//! `Drop`) flags the workers, wakes every parked one, and joins them
+//! all — queued work is drained first, so `tasks_executed ==
+//! tasks_submitted` holds at rest (the soak gate asserts exactly this
+//! after an elastic grow→shrink).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::util::arena;
+use crate::util::stats::Summary;
+
+/// A borrowed per-band closure, as the kernel frames build them. The
+/// lifetime lets frames capture band slices of the caller's matrices;
+/// [`ComputePool::run`] blocks until every task has finished, so the
+/// borrows outlive the tasks.
+pub type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// An owned task as the workers see it (lifetime erased by `run`).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one submitted frame: counts tasks down and
+/// carries the first panic payload across threads.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// One task finished (with its panic payload, if it panicked).
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.state.lock().unwrap().remaining == 0
+    }
+
+    /// Block until every task completed; returns the first panic.
+    fn wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// One queued unit of work: a band closure plus its accounting tags.
+struct PoolTask {
+    run: Task,
+    /// Kernel-frame label for the queue-to-start latency ledger.
+    label: &'static str,
+    queued_at: Instant,
+    latch: Arc<Latch>,
+}
+
+/// State shared between the pool handle and its workers.
+struct PoolShared {
+    /// Global injector queue: overflow beyond one task per worker.
+    injector: Mutex<VecDeque<PoolTask>>,
+    /// Per-worker deques: the owner pops LIFO (newest band, warm
+    /// caches), thieves pop FIFO (oldest band, least contention).
+    locals: Vec<Mutex<VecDeque<PoolTask>>>,
+    /// Park/wake gate. Submitters notify while holding it and sleepy
+    /// workers re-scan the queues under it, so no wakeup is lost.
+    gate: Mutex<()>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin start for distributing a frame's tasks.
+    cursor: AtomicUsize,
+    tasks_submitted: AtomicU64,
+    tasks_executed: AtomicU64,
+    steals: AtomicU64,
+    park_wakeups: AtomicU64,
+    /// Queue-to-start wait samples per kernel-frame label (seconds).
+    queue_waits: Mutex<HashMap<&'static str, Vec<f64>>>,
+    /// Latest (capacity, grows, leases) of each worker's thread-local
+    /// packing arena, refreshed after every executed task.
+    arena: Mutex<Vec<(usize, u64, u64)>>,
+}
+
+impl PoolShared {
+    /// Any task queued anywhere?
+    fn has_work(&self) -> bool {
+        if !self.injector.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.locals.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    /// Pop the next task honoring the stealing order: own deque LIFO,
+    /// then the injector, then siblings FIFO. `wid` is `None` for a
+    /// helping submitter thread (no deque of its own).
+    fn next_task(&self, wid: Option<usize>) -> Option<PoolTask> {
+        if let Some(w) = wid {
+            if let Some(t) = self.locals[w].lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let n = self.locals.len();
+        let start = wid.unwrap_or(0);
+        for off in 0..n {
+            let j = (start + 1 + off) % n;
+            if Some(j) == wid {
+                continue;
+            }
+            if let Some(t) = self.locals[j].lock().unwrap().pop_front() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Run one queued task if any exists. Returns whether one ran.
+    fn try_run_one(&self, wid: Option<usize>) -> bool {
+        let Some(task) = self.next_task(wid) else { return false };
+        let waited = task.queued_at.elapsed().as_secs_f64();
+        self.queue_waits
+            .lock()
+            .unwrap()
+            .entry(task.label)
+            .or_default()
+            .push(waited);
+        // a panicking band must still open the latch, or the submitter
+        // (and its borrowed matrices) would block forever; the payload
+        // is re-thrown on the submitting thread instead
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(task.run));
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = wid {
+            self.arena.lock().unwrap()[w] = arena::thread_stats();
+        }
+        task.latch.complete(result.err());
+        true
+    }
+
+    /// Worker body: drain, steal, park.
+    fn worker_loop(self: &Arc<PoolShared>, wid: usize) {
+        loop {
+            if self.try_run_one(Some(wid)) {
+                continue;
+            }
+            let guard = self.gate.lock().unwrap();
+            // re-scan under the gate: a submitter that enqueued between
+            // our last scan and this lock cannot notify until we wait
+            if self.has_work() {
+                continue;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            drop(self.cv.wait(guard).unwrap());
+            self.park_wakeups.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Counter snapshot of one pool, merged exactly across shards by the
+/// metrics layer and emitted under the ledger's `pool` object.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Worker threads owned by the pool (merge keeps the max: shards
+    /// share one pool, so the counts are the same object observed
+    /// twice, not disjoint pools).
+    pub workers: u64,
+    /// Tasks handed to the pool since startup.
+    pub tasks_submitted: u64,
+    /// Tasks that finished executing. Equals `tasks_submitted` whenever
+    /// the pool is at rest — the soak gate's no-leak invariant.
+    pub tasks_executed: u64,
+    /// Tasks a worker (or helping submitter) took from a sibling's
+    /// deque rather than its own.
+    pub steals: u64,
+    /// Times a parked worker was woken by arriving work (or shutdown).
+    pub park_wakeups: u64,
+    /// Total `f64` capacity of the workers' thread-local packing
+    /// arenas ([`crate::util::arena::thread_stats`]).
+    pub arena_capacity: u64,
+    /// Total arena slab reallocations across workers — flat in steady
+    /// state, when the hot path allocates nothing.
+    pub arena_grows: u64,
+    /// Total arena leases served across workers.
+    pub arena_leases: u64,
+    /// Queue-to-start wait samples (seconds) per kernel-frame label.
+    pub queue_waits: HashMap<&'static str, Vec<f64>>,
+}
+
+impl PoolStats {
+    /// Fold another snapshot into this one: counters sum, worker count
+    /// keeps the max, wait samples concatenate (so merged summaries are
+    /// exact, not averages of averages).
+    pub fn absorb(&mut self, other: &PoolStats) {
+        self.workers = self.workers.max(other.workers);
+        self.tasks_submitted += other.tasks_submitted;
+        self.tasks_executed += other.tasks_executed;
+        self.steals += other.steals;
+        self.park_wakeups += other.park_wakeups;
+        self.arena_capacity += other.arena_capacity;
+        self.arena_grows += other.arena_grows;
+        self.arena_leases += other.arena_leases;
+        for (label, samples) in &other.queue_waits {
+            self.queue_waits
+                .entry(label)
+                .or_default()
+                .extend_from_slice(samples);
+        }
+    }
+
+    /// Per-kernel queue-to-start summaries, sorted by label for stable
+    /// ledger output.
+    pub fn queue_summaries(&self) -> Vec<(&'static str, Summary)> {
+        let mut rows: Vec<(&'static str, Summary)> = self
+            .queue_waits
+            .iter()
+            .map(|(label, s)| (*label, Summary::from_samples(s)))
+            .collect();
+        rows.sort_by_key(|(label, _)| *label);
+        rows
+    }
+}
+
+/// The persistent work-stealing pool. One per cluster, shared by every
+/// shard through `Arc<Router>`; sized once from
+/// [`crate::config::Profile::pool_worker_count`].
+///
+/// ```
+/// use ftblas::runtime::pool::ComputePool;
+/// let pool = ComputePool::new(2);
+/// let mut out = vec![0u64; 4];
+/// let tasks = out
+///     .chunks_mut(1)
+///     .enumerate()
+///     .map(|(i, c)| {
+///         Box::new(move || c[0] = i as u64 + 1)
+///             as Box<dyn FnOnce() + Send + '_>
+///     })
+///     .collect();
+/// pool.run("doc", tasks); // blocks until every task completed
+/// assert_eq!(out, vec![1, 2, 3, 4]);
+/// assert_eq!(pool.stats().tasks_executed, 4);
+/// ```
+pub struct ComputePool {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ComputePool {
+    /// Spawn a pool of `workers` threads (clamped to at least 1). The
+    /// workers park immediately and cost nothing until work arrives.
+    pub fn new(workers: usize) -> ComputePool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..workers)
+                .map(|_| Mutex::new(VecDeque::new()))
+                .collect(),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            cursor: AtomicUsize::new(0),
+            tasks_submitted: AtomicU64::new(0),
+            tasks_executed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            park_wakeups: AtomicU64::new(0),
+            queue_waits: Mutex::new(HashMap::new()),
+            arena: Mutex::new(vec![(0, 0, 0); workers]),
+        });
+        let handles = (0..workers)
+            .map(|wid| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("ftblas-pool-{wid}"))
+                    .spawn(move || shared.worker_loop(wid))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ComputePool { shared, handles: Mutex::new(handles) }
+    }
+
+    /// Worker threads owned by this pool.
+    pub fn worker_count(&self) -> usize {
+        self.shared.locals.len()
+    }
+
+    /// Execute a frame of borrowed band tasks on the pool and block
+    /// until all of them finished (the completion latch). The first
+    /// `worker_count()` tasks are dealt round-robin into the worker
+    /// deques, the overflow goes to the global injector, and the
+    /// submitting thread helps drain until its latch opens. If a band
+    /// panicked, the panic resurfaces here, on the submitting thread.
+    pub fn run<'scope>(&self, label: &'static str,
+                       tasks: Vec<ScopedTask<'scope>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        let workers = self.shared.locals.len();
+        let start = self.shared.cursor.fetch_add(1, Ordering::Relaxed);
+        for (i, task) in tasks.into_iter().enumerate() {
+            // SAFETY: `run` does not return until the latch has counted
+            // every task down, so the 'scope borrows inside the closure
+            // strictly outlive its execution. Erasing the lifetime is
+            // what lets long-lived workers run borrowed band closures —
+            // the same contract `std::thread::scope` enforces
+            // structurally.
+            let run: Task = unsafe {
+                std::mem::transmute::<ScopedTask<'scope>, Task>(task)
+            };
+            let pooled = PoolTask {
+                run,
+                label,
+                queued_at: Instant::now(),
+                latch: latch.clone(),
+            };
+            if i < workers {
+                let w = (start + i) % workers;
+                self.shared.locals[w].lock().unwrap().push_back(pooled);
+            } else {
+                self.shared.injector.lock().unwrap().push_back(pooled);
+            }
+        }
+        self.shared.tasks_submitted.fetch_add(n as u64, Ordering::Relaxed);
+        {
+            let _gate = self.shared.gate.lock().unwrap();
+            self.shared.cv.notify_all();
+        }
+        // help: the grant admitted this thread too — drain until the
+        // latch opens or the queues run dry (then the in-flight bands
+        // belong to workers and the latch wait is all that's left)
+        while !latch.done() {
+            if !self.shared.try_run_one(None) {
+                break;
+            }
+        }
+        if let Some(payload) = latch.wait() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Counter snapshot for the serving ledger.
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.shared;
+        let mut stats = PoolStats {
+            workers: s.locals.len() as u64,
+            tasks_submitted: s.tasks_submitted.load(Ordering::Relaxed),
+            tasks_executed: s.tasks_executed.load(Ordering::Relaxed),
+            steals: s.steals.load(Ordering::Relaxed),
+            park_wakeups: s.park_wakeups.load(Ordering::Relaxed),
+            ..PoolStats::default()
+        };
+        for &(capacity, grows, leases) in s.arena.lock().unwrap().iter() {
+            stats.arena_capacity += capacity as u64;
+            stats.arena_grows += grows;
+            stats.arena_leases += leases;
+        }
+        for (label, samples) in s.queue_waits.lock().unwrap().iter() {
+            stats.queue_waits.insert(label, samples.clone());
+        }
+        stats
+    }
+
+    /// Flag shutdown, wake every parked worker, and join them all.
+    /// Queued tasks are drained before the workers exit, so the no-leak
+    /// invariant (`tasks_executed == tasks_submitted`) holds afterward.
+    /// Idempotent; also run by `Drop`.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _gate = self.shared.gate.lock().unwrap();
+            self.shared.cv.notify_all();
+        }
+        for handle in self.handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+thread_local! {
+    /// The pool the current thread's kernel frames should submit to.
+    static CURRENT: RefCell<Option<Arc<ComputePool>>> =
+        RefCell::new(None);
+}
+
+/// Guard returned by [`enter`]; restores the previous thread-local pool
+/// (usually `None`) when dropped.
+pub struct PoolGuard {
+    prev: Option<Arc<ComputePool>>,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|slot| *slot.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `pool` as the current thread's compute pool for the lifetime
+/// of the returned guard. The router wraps kernel execution in this, so
+/// the `blas` frames stay ignorant of the coordinator: they only ever
+/// ask [`run_tasks`].
+pub fn enter(pool: Arc<ComputePool>) -> PoolGuard {
+    CURRENT.with(|slot| PoolGuard {
+        prev: slot.borrow_mut().replace(pool),
+    })
+}
+
+/// The pool installed on this thread, if any.
+pub fn current() -> Option<Arc<ComputePool>> {
+    CURRENT.with(|slot| slot.borrow().clone())
+}
+
+/// Execute one frame of band tasks and block until all complete: on the
+/// installed pool when one is present, else under a scoped fork/join
+/// (the `--no-pool` A/B mode and the default for code running outside a
+/// serving cluster). A single task runs inline either way — no frame at
+/// all, exactly like the serial fall-throughs.
+pub fn run_tasks<'scope>(label: &'static str,
+                         mut tasks: Vec<ScopedTask<'scope>>) {
+    if tasks.len() <= 1 {
+        if let Some(task) = tasks.pop() {
+            task();
+        }
+        return;
+    }
+    match current() {
+        Some(pool) => pool.run(label, tasks),
+        None => std::thread::scope(|s| {
+            for task in tasks {
+                s.spawn(task);
+            }
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    #[test]
+    fn runs_borrowed_tasks_to_completion() {
+        let pool = ComputePool::new(3);
+        let mut out = vec![0u64; 17];
+        let tasks: Vec<ScopedTask<'_>> = out
+            .chunks_mut(1)
+            .enumerate()
+            .map(|(i, c)| {
+                Box::new(move || c[0] = (i * i) as u64) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run("test-frame", tasks);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.tasks_submitted, 17);
+        assert_eq!(stats.tasks_executed, 17);
+        assert_eq!(stats.workers, 3);
+        let waits = &stats.queue_waits["test-frame"];
+        assert_eq!(waits.len(), 17, "every task leaves a wait sample");
+    }
+
+    #[test]
+    fn many_frames_reuse_the_same_workers() {
+        let pool = ComputePool::new(2);
+        let hits = TestCounter::new(0);
+        for _ in 0..50 {
+            let tasks: Vec<ScopedTask<'_>> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run("reuse", tasks);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 200);
+        let stats = pool.stats();
+        assert_eq!(stats.tasks_executed, 200);
+        assert_eq!(stats.workers, 2, "no per-frame spawns");
+    }
+
+    #[test]
+    fn workers_park_and_wake() {
+        let pool = ComputePool::new(2);
+        // give the freshly spawned workers a moment to park
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let ran = TestCounter::new(0);
+        let tasks: Vec<ScopedTask<'_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run("wake", tasks);
+        assert_eq!(ran.load(Ordering::Relaxed), 8);
+        assert!(pool.stats().park_wakeups > 0,
+                "parked workers never woke for arriving work");
+    }
+
+    #[test]
+    fn band_panic_resurfaces_on_the_submitter() {
+        let pool = ComputePool::new(2);
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let tasks: Vec<ScopedTask<'_>> = (0..3)
+                    .map(|i| {
+                        Box::new(move || {
+                            if i == 1 {
+                                panic!("band strike");
+                            }
+                        }) as ScopedTask<'_>
+                    })
+                    .collect();
+                pool.run("panic", tasks);
+            }));
+        assert!(caught.is_err(), "band panic was swallowed");
+        // the pool survives the panic and keeps serving
+        let mut x = [0u64; 2];
+        let tasks: Vec<ScopedTask<'_>> = x
+            .chunks_mut(1)
+            .map(|c| Box::new(move || c[0] = 9) as ScopedTask<'_>)
+            .collect();
+        pool.run("after-panic", tasks);
+        assert_eq!(x, [9, 9]);
+        let stats = pool.stats();
+        assert_eq!(stats.tasks_executed, stats.tasks_submitted,
+                   "leaked tasks after a band panic");
+    }
+
+    #[test]
+    fn shutdown_joins_workers_and_is_idempotent() {
+        let pool = ComputePool::new(4);
+        let tasks: Vec<ScopedTask<'_>> =
+            (0..16).map(|_| Box::new(|| {}) as ScopedTask<'_>).collect();
+        pool.run("pre-shutdown", tasks);
+        pool.shutdown();
+        pool.shutdown(); // second call must be a no-op
+        let stats = pool.stats();
+        assert_eq!(stats.tasks_executed, stats.tasks_submitted,
+                   "shutdown leaked queued tasks");
+    }
+
+    #[test]
+    fn run_tasks_falls_back_to_scoped_without_a_pool() {
+        assert!(current().is_none());
+        let mut out = vec![0u64; 4];
+        let tasks: Vec<ScopedTask<'_>> = out
+            .chunks_mut(1)
+            .enumerate()
+            .map(|(i, c)| Box::new(move || c[0] = i as u64 + 1)
+                 as ScopedTask<'_>)
+            .collect();
+        run_tasks("scoped", tasks);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn enter_installs_and_guard_restores() {
+        let pool = Arc::new(ComputePool::new(2));
+        assert!(current().is_none());
+        {
+            let _guard = enter(pool.clone());
+            assert!(current().is_some());
+            let mut out = vec![0u64; 3];
+            let tasks: Vec<ScopedTask<'_>> = out
+                .chunks_mut(1)
+                .map(|c| Box::new(move || c[0] = 7) as ScopedTask<'_>)
+                .collect();
+            run_tasks("installed", tasks);
+            assert_eq!(out, vec![7, 7, 7]);
+        }
+        assert!(current().is_none(), "guard did not restore the slot");
+        assert!(pool.stats().tasks_executed >= 3,
+                "run_tasks bypassed the installed pool");
+    }
+
+    #[test]
+    fn stats_absorb_merges_exactly() {
+        let mut a = PoolStats {
+            workers: 4,
+            tasks_submitted: 10,
+            tasks_executed: 10,
+            steals: 2,
+            park_wakeups: 5,
+            arena_capacity: 100,
+            arena_grows: 1,
+            arena_leases: 20,
+            ..PoolStats::default()
+        };
+        a.queue_waits.insert("dgemm/mt", vec![1e-6, 2e-6]);
+        let mut b = PoolStats {
+            workers: 2,
+            tasks_submitted: 3,
+            tasks_executed: 3,
+            ..PoolStats::default()
+        };
+        b.queue_waits.insert("dgemm/mt", vec![3e-6]);
+        b.queue_waits.insert("batched", vec![4e-6]);
+        a.absorb(&b);
+        assert_eq!(a.workers, 4, "worker count merges by max");
+        assert_eq!(a.tasks_submitted, 13);
+        assert_eq!(a.tasks_executed, 13);
+        assert_eq!(a.queue_waits["dgemm/mt"].len(), 3);
+        assert_eq!(a.queue_waits["batched"].len(), 1);
+        let rows = a.queue_summaries();
+        assert_eq!(rows[0].0, "batched", "summaries sorted by label");
+        assert_eq!(rows[1].1.n, 3);
+    }
+}

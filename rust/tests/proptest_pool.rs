@@ -1,0 +1,295 @@
+//! Pooled execution must be indistinguishable from the `--no-pool`
+//! scoped frames: every MT kernel and batched driver routed through the
+//! persistent compute pool has to produce **bitwise** identical results
+//! — and, on the fused-ABFT paths, exactly balanced per-band
+//! detection/correction accounting — at random shapes, thread grants,
+//! and pool sizes. The frames themselves are the variable under test:
+//! each property runs the same call once with no pool installed (the
+//! scoped fork/join fallback) and once under [`pool::enter`], then
+//! compares outputs with `==`, not a tolerance.
+//!
+//! Uses the repo's seeded check harness (`util::check`) — proptest is
+//! not vendored in this offline image; see DESIGN.md §9.
+
+use std::sync::Arc;
+
+use ftblas::blas::batched::{self, GemmItem};
+use ftblas::blas::level3::GemmParams;
+use ftblas::blas::parallel;
+use ftblas::ft::abft_fused::Strike;
+use ftblas::ft::FtReport;
+use ftblas::runtime::pool::{self, ComputePool};
+use ftblas::util::check::{check, ensure, Gen};
+use ftblas::util::matrix::Matrix;
+use ftblas::util::rng::Rng;
+
+/// One batched item spec: (m, n, k, a, b, c0, strikes).
+type BatchSpec =
+    (usize, usize, usize, Vec<f64>, Vec<f64>, Vec<f64>, Vec<Strike>);
+
+/// Outputs of one batched A/B run: scalar / simd / fused results plus
+/// the fused driver's per-item reports.
+type BatchOut =
+    (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<FtReport>);
+
+/// A pool sized from the case's RNG, so identity holds whether the pool
+/// is under- or over-provisioned relative to the thread grant.
+fn random_pool(rng: &mut Rng) -> Arc<ComputePool> {
+    Arc::new(ComputePool::new(1 + rng.below(6)))
+}
+
+#[test]
+fn pooled_dgemm_mt_is_bitwise_scoped() {
+    check("pool-gemm-identity", 10, |g| {
+        let m = g.dim(17, 140); // above the band floor for both MRs
+        let n = g.dim(1, 80);
+        let k = g.dim(1, 60);
+        let threads = 2 + g.rng.below(4);
+        let params = GemmParams::default();
+        let a = Matrix::random(m, k, &mut g.rng);
+        let b = Matrix::random(k, n, &mut g.rng);
+        let c0 = Matrix::random(m, n, &mut g.rng);
+        // scoped baseline: no pool installed on this thread
+        assert!(pool::current().is_none());
+        let mut scoped = c0.data.clone();
+        parallel::dgemm_mt(m, n, k, 0.9, &a.data, &b.data, -0.3,
+                           &mut scoped, &params, threads);
+        let mut scoped_simd = c0.data.clone();
+        parallel::dgemm_simd_mt(m, n, k, 0.9, &a.data, &b.data, -0.3,
+                                &mut scoped_simd, &params, threads);
+        // pooled run: identical calls under an installed pool
+        let compute = random_pool(&mut g.rng);
+        let mut pooled = c0.data.clone();
+        let mut pooled_simd = c0.data.clone();
+        {
+            let _guard = pool::enter(compute.clone());
+            parallel::dgemm_mt(m, n, k, 0.9, &a.data, &b.data, -0.3,
+                               &mut pooled, &params, threads);
+            parallel::dgemm_simd_mt(m, n, k, 0.9, &a.data, &b.data, -0.3,
+                                    &mut pooled_simd, &params, threads);
+        }
+        ensure(pooled == scoped,
+               format!("pooled dgemm_mt diverged bitwise (t={threads})"))?;
+        ensure(pooled_simd == scoped_simd,
+               format!("pooled dgemm_simd_mt diverged bitwise (t={threads})"))?;
+        let stats = compute.stats();
+        ensure(stats.tasks_submitted > 0, "frames bypassed the pool")?;
+        ensure(stats.tasks_executed == stats.tasks_submitted,
+               format!("pool leaked tasks: {} submitted, {} executed",
+                       stats.tasks_submitted, stats.tasks_executed))
+    });
+}
+
+#[test]
+fn pooled_level3_variants_are_bitwise_scoped() {
+    check("pool-l3-identity", 8, |g| {
+        let m = g.dim(17, 120);
+        let n = g.dim(2, 64);
+        let threads = 2 + g.rng.below(4);
+        let params = GemmParams::default();
+        let sym = Matrix::random_symmetric(m, &mut g.rng);
+        let tri = Matrix::random_lower_triangular(m, &mut g.rng);
+        let b0 = Matrix::random(m, n, &mut g.rng);
+        let c0 = Matrix::random(m, n, &mut g.rng);
+        // scoped baselines
+        let mut symm_s = c0.data.clone();
+        parallel::dsymm_lower_mt(m, n, 1.3, &sym.data, &b0.data, -0.6,
+                                 &mut symm_s, &params, threads);
+        let mut trmm_s = b0.data.clone();
+        parallel::dtrmm_lower_mt(m, n, 0.8, &tri.data, &mut trmm_s,
+                                 &params, threads);
+        let mut trsm_s = b0.data.clone();
+        parallel::dtrsm_llnn_mt(m, n, &tri.data, &mut trsm_s, 32, &params,
+                                threads);
+        // pooled runs
+        let compute = random_pool(&mut g.rng);
+        let mut symm_p = c0.data.clone();
+        let mut trmm_p = b0.data.clone();
+        let mut trsm_p = b0.data.clone();
+        {
+            let _guard = pool::enter(compute.clone());
+            parallel::dsymm_lower_mt(m, n, 1.3, &sym.data, &b0.data, -0.6,
+                                     &mut symm_p, &params, threads);
+            parallel::dtrmm_lower_mt(m, n, 0.8, &tri.data, &mut trmm_p,
+                                     &params, threads);
+            parallel::dtrsm_llnn_mt(m, n, &tri.data, &mut trsm_p, 32,
+                                    &params, threads);
+        }
+        ensure(symm_p == symm_s, "pooled dsymm_lower_mt diverged bitwise")?;
+        ensure(trmm_p == trmm_s, "pooled dtrmm_lower_mt diverged bitwise")?;
+        ensure(trsm_p == trsm_s, "pooled dtrsm_llnn_mt diverged bitwise")?;
+        let stats = compute.stats();
+        ensure(stats.tasks_executed == stats.tasks_submitted,
+               "pool leaked tasks across level-3 variants")
+    });
+}
+
+/// Fused-ABFT MT frames under campaign-armed strikes: the pooled run
+/// must reproduce the scoped run's corrected output bitwise AND its
+/// merged [`FtReport`] exactly — per-band detection/correction counts
+/// balance no matter which pool worker executed which band.
+#[test]
+fn pooled_fused_mt_strike_accounting_balances() {
+    check("pool-fused-identity", 8, |g| {
+        let m = g.dim(17, 110);
+        let n = g.dim(4, 64);
+        let k = g.dim(8, 64);
+        let threads = 2 + g.rng.below(4);
+        let params = GemmParams { kc: 16, ..Default::default() };
+        let a = Matrix::random(m, k, &mut g.rng);
+        let b = Matrix::random(k, n, &mut g.rng);
+        let steps = k.div_ceil(params.kc);
+        let strikes: Vec<Strike> = (0..1 + g.rng.below(3))
+            .map(|_| (g.rng.below(steps), g.rng.below(m), g.rng.below(n),
+                      2e4 + g.rng.uniform() * 8e4))
+            .collect();
+        assert!(pool::current().is_none());
+        let mut scoped = vec![0.0; m * n];
+        let rep_scoped = parallel::dgemm_abft_fused_mt(
+            m, n, k, 1.0, &a.data, &b.data, 0.0, &mut scoped, &params,
+            threads, &strikes);
+        let mut scoped_simd = vec![0.0; m * n];
+        let rep_scoped_simd = parallel::dgemm_abft_fused_simd_mt(
+            m, n, k, 1.0, &a.data, &b.data, 0.0, &mut scoped_simd, &params,
+            threads, &strikes);
+        let compute = random_pool(&mut g.rng);
+        let mut pooled = vec![0.0; m * n];
+        let mut pooled_simd = vec![0.0; m * n];
+        let (rep_pooled, rep_pooled_simd) = {
+            let _guard = pool::enter(compute.clone());
+            (parallel::dgemm_abft_fused_mt(
+                 m, n, k, 1.0, &a.data, &b.data, 0.0, &mut pooled, &params,
+                 threads, &strikes),
+             parallel::dgemm_abft_fused_simd_mt(
+                 m, n, k, 1.0, &a.data, &b.data, 0.0, &mut pooled_simd,
+                 &params, threads, &strikes))
+        };
+        ensure(pooled == scoped, "pooled fused mt diverged bitwise")?;
+        ensure(pooled_simd == scoped_simd,
+               "pooled fused simd mt diverged bitwise")?;
+        ensure(rep_pooled == rep_scoped,
+               format!("fused mt reports diverged: pooled {rep_pooled:?} \
+                        vs scoped {rep_scoped:?}"))?;
+        ensure(rep_pooled_simd == rep_scoped_simd,
+               format!("fused simd mt reports diverged: pooled \
+                        {rep_pooled_simd:?} vs scoped {rep_scoped_simd:?}"))?;
+        let stats = compute.stats();
+        ensure(stats.tasks_executed == stats.tasks_submitted,
+               "pool leaked tasks on the fused paths")
+    });
+}
+
+#[test]
+fn pooled_batched_drivers_are_bitwise_scoped() {
+    check("pool-batched-identity", 8, |g| {
+        let count = 3 + g.rng.below(4);
+        let threads = 2 + g.rng.below(3);
+        let params = GemmParams { kc: 16, ..Default::default() };
+        // shapes straddling the banding floor, strikes on every other item
+        let specs: Vec<BatchSpec> = (0..count)
+            .map(|i| {
+                let m = 3 + g.rng.below(44);
+                let n = 2 + g.rng.below(24);
+                let k = 8 + g.rng.below(24);
+                let a = Matrix::random(m, k, &mut g.rng).data;
+                let b = Matrix::random(k, n, &mut g.rng).data;
+                let c = Matrix::random(m, n, &mut g.rng).data;
+                let inject = if i % 2 == 0 {
+                    vec![(0, g.rng.below(m), g.rng.below(n), 5e4)]
+                } else {
+                    Vec::new()
+                };
+                (m, n, k, a, b, c, inject)
+            })
+            .collect();
+        let run = |pooled: bool, g: &mut Gen| -> BatchOut {
+            let _guard = pooled.then(|| pool::enter(random_pool(&mut g.rng)));
+            let mut scalar: Vec<Vec<f64>> =
+                specs.iter().map(|s| s.5.clone()).collect();
+            let mut items: Vec<GemmItem<'_>> = specs
+                .iter()
+                .zip(scalar.iter_mut())
+                .map(|(s, c)| GemmItem {
+                    m: s.0, n: s.1, k: s.2, alpha: 0.7, beta: -0.4,
+                    a: &s.3[..], b: &s.4[..], c: &mut c[..],
+                    inject: Vec::new(),
+                })
+                .collect();
+            batched::dgemm_batched(&mut items, &params, threads);
+            drop(items);
+            let mut simd: Vec<Vec<f64>> =
+                specs.iter().map(|s| s.5.clone()).collect();
+            let mut items: Vec<GemmItem<'_>> = specs
+                .iter()
+                .zip(simd.iter_mut())
+                .map(|(s, c)| GemmItem {
+                    m: s.0, n: s.1, k: s.2, alpha: 0.7, beta: -0.4,
+                    a: &s.3[..], b: &s.4[..], c: &mut c[..],
+                    inject: Vec::new(),
+                })
+                .collect();
+            batched::dgemm_batched_simd(&mut items, &params, threads);
+            drop(items);
+            let mut fused: Vec<Vec<f64>> =
+                specs.iter().map(|s| vec![0.0; s.0 * s.1]).collect();
+            let mut items: Vec<GemmItem<'_>> = specs
+                .iter()
+                .zip(fused.iter_mut())
+                .map(|(s, c)| GemmItem {
+                    m: s.0, n: s.1, k: s.2, alpha: 1.0, beta: 0.0,
+                    a: &s.3[..], b: &s.4[..], c: &mut c[..],
+                    inject: s.6.clone(),
+                })
+                .collect();
+            let reps = batched::dgemm_batched_abft_fused_simd(
+                &mut items, &params, threads);
+            drop(items);
+            (scalar, simd, fused, reps)
+        };
+        assert!(pool::current().is_none());
+        let (scalar_s, simd_s, fused_s, reps_s) = run(false, g);
+        let (scalar_p, simd_p, fused_p, reps_p) = run(true, g);
+        ensure(scalar_p == scalar_s,
+               "pooled batched scalar diverged bitwise")?;
+        ensure(simd_p == simd_s, "pooled batched simd diverged bitwise")?;
+        ensure(fused_p == fused_s, "pooled batched fused diverged bitwise")?;
+        ensure(reps_p == reps_s,
+               format!("per-item reports diverged: pooled {reps_p:?} vs \
+                        scoped {reps_s:?}"))
+    });
+}
+
+/// The long-lived pool a serving cluster would own: many frames reuse
+/// one pool, and after an explicit shutdown (the `Drop`/join guarantee)
+/// every submitted task has executed — the soak gate's no-leak
+/// invariant, pinned here at the unit scale.
+#[test]
+fn one_pool_survives_many_frames_and_drains_on_shutdown() {
+    let mut rng = Rng::new(0xB00F5);
+    let compute = Arc::new(ComputePool::new(3));
+    let params = GemmParams::default();
+    for round in 0..6 {
+        let m = 32 + 8 * round;
+        let (n, k) = (24, 16);
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let c0 = Matrix::random(m, n, &mut rng);
+        let mut scoped = c0.data.clone();
+        parallel::dgemm_mt(m, n, k, 1.1, &a.data, &b.data, 0.2, &mut scoped,
+                           &params, 4);
+        let mut pooled = c0.data.clone();
+        {
+            let _guard = pool::enter(compute.clone());
+            parallel::dgemm_mt(m, n, k, 1.1, &a.data, &b.data, 0.2,
+                               &mut pooled, &params, 4);
+        }
+        assert_eq!(pooled, scoped, "round {round} diverged bitwise");
+    }
+    let before = compute.stats();
+    assert!(before.tasks_submitted > 0, "frames never reached the pool");
+    assert_eq!(before.workers, 3, "no per-frame worker spawns");
+    compute.shutdown();
+    let after = compute.stats();
+    assert_eq!(after.tasks_executed, after.tasks_submitted,
+               "shutdown leaked queued tasks");
+}
