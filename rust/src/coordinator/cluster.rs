@@ -530,6 +530,35 @@ impl ClusterShared {
     }
 }
 
+/// One live routing slot, as reported by [`ClusterHandle::topology`].
+#[derive(Clone, Debug)]
+pub struct ShardSlot {
+    /// Slot index (stable while live; reused after a shrink+regrow).
+    pub slot: usize,
+    /// The slot's rendezvous salt — [`salt_for`]`(slot, generation)`,
+    /// so a reused slot is distinguishable from its predecessor.
+    pub salt: u64,
+    /// The shard's live queue depth at snapshot time.
+    pub queue_depth: usize,
+}
+
+/// A read-only snapshot of the live routing topology — the admin
+/// surface behind the gateway's `GET /topology` route. Taken under one
+/// topology read scope, so the slot list is internally consistent
+/// (never a mid-scale half-view).
+#[derive(Clone, Debug)]
+pub struct TopologySnapshot {
+    /// Live slots in routing order.
+    pub shards: Vec<ShardSlot>,
+    /// The generation the *next* spawned shard will take (monotone;
+    /// starting shards took generation 0).
+    pub next_generation: u64,
+    /// Cumulative grow events.
+    pub scale_ups: u64,
+    /// Cumulative shrink events.
+    pub scale_downs: u64,
+}
+
 /// Handle for submitting requests to the cluster; cheap to clone.
 #[derive(Clone)]
 pub struct ClusterHandle {
@@ -715,6 +744,33 @@ impl ClusterHandle {
     /// the ledger).
     pub fn campaign(&self) -> Option<&InjectionCampaign> {
         self.shared.router.campaign()
+    }
+
+    /// Consistent snapshot of the live routing topology: every slot's
+    /// index, salt, and queue depth, plus the generation counter and
+    /// cumulative scale events (collected under one topology read
+    /// scope — a concurrent scale op appears entirely or not at all).
+    pub fn topology(&self) -> TopologySnapshot {
+        let topo = self.shared.topology.read().unwrap();
+        let shards = topo
+            .iter()
+            .map(|e| ShardSlot {
+                slot: e.slot,
+                salt: e.salt,
+                queue_depth: e.handle.queue_depth(),
+            })
+            .collect();
+        TopologySnapshot {
+            shards,
+            next_generation: self.shared
+                .next_generation
+                .load(Ordering::SeqCst),
+            scale_ups: self.shared.stats.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.shared
+                .stats
+                .scale_downs
+                .load(Ordering::Relaxed),
+        }
     }
 }
 

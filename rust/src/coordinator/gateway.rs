@@ -1,0 +1,851 @@
+//! The network serving plane: a dependency-free HTTP/1.1 gateway over
+//! the elastic cluster. This is the transport/execution seam the
+//! ROADMAP names — everything above this module speaks bytes and
+//! status codes, everything below speaks typed [`BlasRequest`]s and
+//! typed admission errors, and the seam translates exactly once:
+//!
+//! - `POST /v1/blas` parses an `ftblas.request.v1` envelope (routine,
+//!   dims, variant, FT policy, deadline, idempotency key), builds the
+//!   seeded request, admits it through
+//!   [`ClusterHandle::submit_with_retry`], and maps the typed outcomes
+//!   onto the wire: [`Error::Overloaded`] → `429` with a `Retry-After`
+//!   derived from the [`RetryPolicy`], planner "no candidate" → `400`
+//!   with the diagnostic, deadline exceeded → `504`,
+//!   [`Error::ShuttingDown`] → `503`.
+//! - `GET /healthz` / `/metrics` / `/topology` / `/campaign` serve the
+//!   cluster's *live* operational state (the `ftblas.ledger.v1`
+//!   snapshot, the routing topology with slots/salts/generation, the
+//!   injection campaign's counters) — read-only views over state that
+//!   already existed; the gateway adds no shadow bookkeeping.
+//!
+//! Shutdown is a graceful drain: stop accepting, serve every
+//! connection already admitted, then hand control back so the caller
+//! can retire the cluster's ledgers exactly (`accepted == served` is
+//! the drain invariant the conformance suite pins).
+//!
+//! Request payloads are generated server-side from the envelope's
+//! `seed` (the same deterministic generators the CLI and traces use),
+//! so the wire carries intent, not megabytes of operands, and a
+//! response's `checksum` is reproducible by any client holding the
+//! envelope. `docs/PROTOCOL.md` documents the full contract.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::blas::Impl;
+use crate::config::Profile;
+use crate::coordinator::cluster::{ClusterHandle, RetryPolicy};
+use crate::coordinator::http::{read_request, Head, ReadError, Response};
+use crate::coordinator::metrics::LEDGER_SCHEMA;
+use crate::coordinator::plan::Planner;
+use crate::coordinator::registry::KernelRegistry;
+use crate::coordinator::request::{BlasRequest, BlasResult};
+use crate::coordinator::server::Error;
+use crate::ft::policy::FtPolicy;
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Schema tag of the request envelope.
+pub const REQUEST_SCHEMA: &str = "ftblas.request.v1";
+/// Schema tag of the success-response body.
+pub const RESPONSE_SCHEMA: &str = "ftblas.response.v1";
+/// Schema tag of `GET /healthz`.
+pub const HEALTH_SCHEMA: &str = "ftblas.health.v1";
+/// Schema tag of `GET /topology`.
+pub const TOPOLOGY_SCHEMA: &str = "ftblas.topology.v1";
+/// Schema tag of `GET /campaign`.
+pub const CAMPAIGN_SCHEMA: &str = "ftblas.campaign.v1";
+
+/// Every routine the envelope accepts (the [`BlasRequest`] surface).
+pub const ROUTINES: &[&str] = &[
+    "dscal", "daxpy", "ddot", "dnrm2", "dasum", "drot", "drotm", "idamax",
+    "dgemv", "dtrsv", "dger", "dsymv", "dtrmv", "dgemm", "dsymm", "dtrmm",
+    "dtrsm", "dsyrk",
+];
+
+/// A parsed `ftblas.request.v1` envelope. The wire carries intent —
+/// routine, principal dimension, generator seed — and the gateway
+/// builds the operand data deterministically from it, so two identical
+/// envelopes always produce identical results (and checksums).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    /// BLAS routine name (one of [`ROUTINES`]).
+    pub routine: String,
+    /// Principal dimension (vector length or matrix order), >= 1.
+    pub dim: usize,
+    /// Seed for the deterministic operand generator.
+    pub seed: u64,
+    /// Optional pinned kernel variant; when set, the gateway requires a
+    /// kernel of exactly this variant serving the policy (no silent
+    /// fallback substitution).
+    pub variant: Option<Impl>,
+    /// Optional FT-policy assertion; must match the policy the cluster
+    /// was started with (the policy is a cluster property, not a
+    /// per-request one).
+    pub ft: Option<FtPolicy>,
+    /// End-to-end deadline; past it the gateway answers `504`.
+    pub deadline_ms: Option<u64>,
+    /// Opaque client token, echoed verbatim in the response.
+    pub idempotency_key: Option<String>,
+}
+
+impl Envelope {
+    /// A minimal envelope for `routine` at dimension `dim`.
+    pub fn new(routine: &str, dim: usize) -> Envelope {
+        Envelope {
+            routine: routine.to_string(),
+            dim,
+            seed: 7,
+            variant: None,
+            ft: None,
+            deadline_ms: None,
+            idempotency_key: None,
+        }
+    }
+
+    /// Serialize (the exact inverse of [`Envelope::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj()
+            .field("schema", Json::Str(REQUEST_SCHEMA.into()))
+            .field("routine", Json::Str(self.routine.clone()))
+            .field("dim", Json::Int(self.dim as u64))
+            .field("seed", Json::Int(self.seed));
+        if let Some(v) = self.variant {
+            doc = doc.field("variant", Json::Str(v.name().into()));
+        }
+        if let Some(p) = self.ft {
+            doc = doc.field("ft", Json::Str(p.name().into()));
+        }
+        if let Some(d) = self.deadline_ms {
+            doc = doc.field("deadline_ms", Json::Int(d));
+        }
+        if let Some(k) = &self.idempotency_key {
+            doc = doc.field("idempotency_key", Json::Str(k.clone()));
+        }
+        doc
+    }
+
+    /// Decode an envelope from a parsed document. Unknown fields are
+    /// ignored (forward compatibility); known fields with the wrong
+    /// type or value are errors, not defaults.
+    pub fn from_json(doc: &Json) -> std::result::Result<Envelope, String> {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(REQUEST_SCHEMA) => {}
+            other => {
+                return Err(format!(
+                    "not an {REQUEST_SCHEMA} envelope (schema {other:?})"))
+            }
+        }
+        let routine = doc
+            .get("routine")
+            .and_then(Json::as_str)
+            .ok_or("missing required string field `routine`")?
+            .to_string();
+        let uint = |field: &str| -> std::result::Result<Option<u64>, String> {
+            match doc.get(field) {
+                None => Ok(None),
+                Some(Json::Int(v)) => Ok(Some(*v)),
+                Some(other) => Err(format!(
+                    "field `{field}` wants an unsigned integer, got \
+                     {other:?}")),
+            }
+        };
+        let dim = uint("dim")?
+            .ok_or("missing required integer field `dim`")? as usize;
+        if dim == 0 {
+            return Err("`dim` must be >= 1".into());
+        }
+        let seed = uint("seed")?.unwrap_or(7);
+        let variant = match doc.get("variant").map(|v| v.as_str()) {
+            None => None,
+            Some(Some(name)) => Some(Impl::by_name(name).ok_or(format!(
+                "unknown variant `{name}` (want naive|blocked|tuned|\
+                 simd)"))?),
+            Some(None) => return Err("field `variant` wants a string".into()),
+        };
+        let ft = match doc.get("ft").map(|v| v.as_str()) {
+            None => None,
+            Some(Some(name)) => Some(FtPolicy::by_name(name).ok_or(
+                format!("unknown ft policy `{name}`"))?),
+            Some(None) => return Err("field `ft` wants a string".into()),
+        };
+        let deadline_ms = match uint("deadline_ms")? {
+            Some(0) => return Err("`deadline_ms` must be >= 1".into()),
+            other => other,
+        };
+        let idempotency_key = match doc.get("idempotency_key") {
+            None => None,
+            Some(Json::Str(s)) => Some(s.clone()),
+            Some(_) => {
+                return Err("field `idempotency_key` wants a string".into())
+            }
+        };
+        Ok(Envelope { routine, dim, seed, variant, ft, deadline_ms,
+                      idempotency_key })
+    }
+
+    /// Parse an envelope straight from body text.
+    pub fn parse(text: &str) -> std::result::Result<Envelope, String> {
+        Envelope::from_json(&Json::parse(text)
+            .map_err(|e| format!("malformed JSON: {e}"))?)
+    }
+
+    /// Build the typed request: operands generated deterministically
+    /// from `(seed, dim)` — the same generators the CLI's `run` command
+    /// uses. `None` for a routine outside [`ROUTINES`].
+    pub fn build_request(&self) -> Option<BlasRequest> {
+        let n = self.dim;
+        let mut rng = Rng::new(self.seed);
+        Some(match self.routine.as_str() {
+            "dscal" => BlasRequest::Dscal { alpha: 1.5,
+                                            x: rng.normal_vec(n) },
+            "daxpy" => BlasRequest::Daxpy { alpha: 0.5,
+                                            x: rng.normal_vec(n),
+                                            y: rng.normal_vec(n) },
+            "ddot" => BlasRequest::Ddot { x: rng.normal_vec(n),
+                                          y: rng.normal_vec(n) },
+            "dnrm2" => BlasRequest::Dnrm2 { x: rng.normal_vec(n) },
+            "dasum" => BlasRequest::Dasum { x: rng.normal_vec(n) },
+            "drot" => BlasRequest::Drot { x: rng.normal_vec(n),
+                                          y: rng.normal_vec(n),
+                                          c: 0.6, s: 0.8 },
+            "drotm" => BlasRequest::Drotm {
+                x: rng.normal_vec(n), y: rng.normal_vec(n),
+                param: [-1.0, 0.9, -0.2, 0.3, 1.1],
+            },
+            "idamax" => BlasRequest::Idamax { x: rng.normal_vec(n) },
+            "dgemv" => BlasRequest::Dgemv {
+                alpha: 1.0, a: Matrix::random(n, n, &mut rng),
+                x: rng.normal_vec(n), beta: 0.0, y: rng.normal_vec(n),
+            },
+            "dtrsv" => BlasRequest::Dtrsv {
+                a: Matrix::random_lower_triangular(n, &mut rng),
+                b: rng.normal_vec(n),
+            },
+            "dger" => BlasRequest::Dger {
+                alpha: 1.0, x: rng.normal_vec(n), y: rng.normal_vec(n),
+                a: Matrix::random(n, n, &mut rng),
+            },
+            "dsymv" => BlasRequest::Dsymv {
+                alpha: 1.0, a: Matrix::random_symmetric(n, &mut rng),
+                x: rng.normal_vec(n), beta: 0.0, y: rng.normal_vec(n),
+            },
+            "dtrmv" => BlasRequest::Dtrmv {
+                a: Matrix::random_lower_triangular(n, &mut rng),
+                x: rng.normal_vec(n),
+            },
+            "dgemm" => BlasRequest::Dgemm {
+                alpha: 1.0, a: Matrix::random(n, n, &mut rng),
+                b: Matrix::random(n, n, &mut rng), beta: 0.0,
+                c: Matrix::zeros(n, n),
+            },
+            "dsymm" => BlasRequest::Dsymm {
+                alpha: 1.0, a: Matrix::random_symmetric(n, &mut rng),
+                b: Matrix::random(n, n, &mut rng), beta: 0.0,
+                c: Matrix::zeros(n, n),
+            },
+            "dtrmm" => BlasRequest::Dtrmm {
+                alpha: 1.0,
+                a: Matrix::random_lower_triangular(n, &mut rng),
+                b: Matrix::random(n, n, &mut rng),
+            },
+            "dtrsm" => BlasRequest::Dtrsm {
+                a: Matrix::random_lower_triangular(n, &mut rng),
+                b: Matrix::random(n, n, &mut rng),
+            },
+            "dsyrk" => BlasRequest::Dsyrk {
+                alpha: 1.0, a: Matrix::random(n, n, &mut rng), beta: 0.0,
+                c: Matrix::zeros(n, n),
+            },
+            _ => return None,
+        })
+    }
+}
+
+/// Deterministic scalar digest of a result — the reproducibility
+/// anchor of the 200 response (any holder of the envelope can recompute
+/// it from an identical execution).
+pub fn result_checksum(result: &BlasResult) -> f64 {
+    match result {
+        BlasResult::Scalar(v) => *v,
+        BlasResult::Vector(v) => v.iter().sum(),
+        BlasResult::Matrix(m) => m.data.iter().sum(),
+    }
+}
+
+/// Gateway sizing and policy knobs.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// HTTP worker threads draining the accept queue.
+    pub workers: usize,
+    /// Retry policy wrapped around admission (`Overloaded` sheds ride
+    /// out with jittered backoff before the gateway answers `429`).
+    pub retry: RetryPolicy,
+    /// Preferred kernel variant for the planner preflight when the
+    /// envelope does not pin one (match the cluster router's backend).
+    pub prefer: Impl,
+    /// Ceiling on any request's end-to-end deadline (envelopes may ask
+    /// for less, never more).
+    pub max_deadline: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            workers: 4,
+            retry: RetryPolicy::default(),
+            prefer: Impl::Tuned,
+            max_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Drain accounting, returned by [`Gateway::shutdown`]. The invariant
+/// the conformance suite pins: after a graceful drain,
+/// `accepted == served` — every connection the accept loop admitted
+/// was handled to completion, none abandoned.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayStats {
+    /// Connections the accept loop enqueued.
+    pub accepted: u64,
+    /// Connections fully handled (response written or peer gone).
+    pub served: u64,
+    /// Responses in the 2xx class.
+    pub s2xx: u64,
+    /// Responses in the 4xx class.
+    pub s4xx: u64,
+    /// Responses in the 5xx class (504 included).
+    pub s5xx: u64,
+}
+
+struct Shared {
+    cluster: ClusterHandle,
+    profile: Profile,
+    policy: FtPolicy,
+    cfg: GatewayConfig,
+    draining: AtomicBool,
+    accepted: AtomicU64,
+    served: AtomicU64,
+    s2xx: AtomicU64,
+    s4xx: AtomicU64,
+    s5xx: AtomicU64,
+}
+
+impl Shared {
+    fn count(&self, status: u16) {
+        match status {
+            200..=299 => self.s2xx.fetch_add(1, Ordering::Relaxed),
+            400..=499 => self.s4xx.fetch_add(1, Ordering::Relaxed),
+            _ => self.s5xx.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    fn stats(&self) -> GatewayStats {
+        GatewayStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            s2xx: self.s2xx.load(Ordering::Relaxed),
+            s4xx: self.s4xx.load(Ordering::Relaxed),
+            s5xx: self.s5xx.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The running gateway: one accept thread feeding `workers` handler
+/// threads over a channel. Dropping without [`Gateway::shutdown`]
+/// drains the same way (no detached threads survive).
+pub struct Gateway {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `addr` (port 0 picks an ephemeral port) and start serving
+    /// the cluster behind `handle`. `profile` and `policy` must be the
+    /// ones the cluster was started with — the gateway plans preflight
+    /// checks against them.
+    pub fn bind(addr: &str, handle: ClusterHandle, profile: Profile,
+                policy: FtPolicy, cfg: GatewayConfig) -> Result<Gateway> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("gateway cannot bind {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cluster: handle,
+            profile,
+            policy,
+            cfg: cfg.clone(),
+            draining: AtomicBool::new(false),
+            accepted: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            s2xx: AtomicU64::new(0),
+            s4xx: AtomicU64::new(0),
+            s5xx: AtomicU64::new(0),
+        });
+        let (tx, rx) = channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("ftblas-gw-{i}"))
+                    .spawn(move || worker_loop(shared, rx))
+                    .expect("spawn gateway worker")
+            })
+            .collect();
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("ftblas-gw-accept".to_string())
+                .spawn(move || accept_loop(listener, shared, tx))
+                .expect("spawn gateway accept loop")
+        };
+        Ok(Gateway { shared, local_addr, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Live counters (also available after shutdown via the return
+    /// value of [`Gateway::shutdown`]).
+    pub fn stats(&self) -> GatewayStats {
+        self.shared.stats()
+    }
+
+    /// Graceful drain: stop accepting, let the workers finish every
+    /// connection already admitted, join all threads, return the final
+    /// accounting. The cluster handle stays valid — retire its ledgers
+    /// (via `Cluster::shutdown`) after this returns for exact counts.
+    pub fn shutdown(mut self) -> GatewayStats {
+        self.halt();
+        self.shared.stats()
+    }
+
+    fn halt(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // the accept loop is parked in accept(2); poke it awake with a
+        // loopback connection it will see the drain flag on
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        // the accept thread dropped the sender; workers drain the
+        // channel backlog and exit on the disconnect
+        for t in self.workers.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.halt();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>,
+               tx: Sender<TcpStream>) {
+    for stream in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            // the wake-up (or a late client) connected after the drain
+            // flag: close it unserved and stop accepting
+            break;
+        }
+        if let Ok(stream) = stream {
+            shared.accepted.fetch_add(1, Ordering::Relaxed);
+            if tx.send(stream).is_err() {
+                break;
+            }
+        }
+    }
+    // dropping `tx` here releases the workers once the backlog drains
+}
+
+fn worker_loop(shared: Arc<Shared>, rx: Arc<Mutex<Receiver<TcpStream>>>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match stream {
+            Ok(stream) => serve_connection(&shared, stream),
+            Err(_) => break, // accept loop gone, backlog drained
+        }
+    }
+}
+
+/// Handle one connection end to end. Every admitted connection counts
+/// as served exactly once, whatever happens on the wire — the drain
+/// invariant's other half.
+fn serve_connection(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_nodelay(true);
+    match read_request(&mut stream) {
+        Ok((head, body)) => {
+            let resp = route(shared, &head, &body);
+            shared.count(resp.status);
+            let _ = resp.write_to(&mut stream);
+        }
+        Err(ReadError::Parse(e)) => {
+            let resp = error_response(e.status(), &e.to_string());
+            shared.count(resp.status);
+            let _ = resp.write_to(&mut stream);
+        }
+        Err(ReadError::Io(_)) | Err(ReadError::Closed) => {
+            // transport died or the peer never sent a request (the
+            // shutdown wake-up lands here when a worker wins the race
+            // for it); nothing is owed
+        }
+    }
+    shared.served.fetch_add(1, Ordering::Relaxed);
+}
+
+fn error_response(status: u16, message: &str) -> Response {
+    Response::json(status, &Json::obj()
+        .field("error", Json::Str(message.into()))
+        .field("status", Json::Int(status as u64)))
+}
+
+fn route(shared: &Shared, head: &Head, body: &[u8]) -> Response {
+    match (head.method.as_str(), head.target.as_str()) {
+        ("POST", "/v1/blas") => submit(shared, body),
+        ("GET", "/healthz") => healthz(shared),
+        ("GET", "/metrics") => metrics(shared),
+        ("GET", "/topology") => topology(shared),
+        ("GET", "/campaign") => campaign(shared),
+        (_, "/v1/blas") => {
+            error_response(405, "POST only").header("allow", "POST")
+        }
+        (_, "/healthz" | "/metrics" | "/topology" | "/campaign") => {
+            error_response(405, "GET only").header("allow", "GET")
+        }
+        (_, target) => Response::json(404, &Json::obj()
+            .field("error", Json::Str(format!("no route `{target}`")))
+            .field("routes", Json::Arr(
+                ["/v1/blas", "/healthz", "/metrics", "/topology",
+                 "/campaign"]
+                    .iter()
+                    .map(|r| Json::Str((*r).into()))
+                    .collect()))),
+    }
+}
+
+/// The `Retry-After` pair derived from the retry policy: the backoff
+/// step a client should wait after the gateway itself exhausted
+/// `attempts` retries — the next step of the same exponential,
+/// clamped at the policy's cap. Whole seconds for the header (HTTP
+/// grammar), exact milliseconds in the body.
+fn retry_after(policy: &RetryPolicy) -> (u64, u64) {
+    let step = policy
+        .base
+        .saturating_mul(1u32 << policy.attempts.min(20))
+        .min(policy.cap)
+        .max(policy.base);
+    let ms = (step.as_millis() as u64).max(1);
+    let secs = (step.as_secs_f64().ceil() as u64).max(1);
+    (secs, ms)
+}
+
+fn submit(shared: &Shared, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(text) => text,
+        Err(_) => return error_response(400, "body is not UTF-8"),
+    };
+    let env = match Envelope::parse(text) {
+        Ok(env) => env,
+        Err(msg) => return error_response(400, &msg),
+    };
+    if let Some(asked) = env.ft {
+        if asked != shared.policy {
+            return error_response(400, &format!(
+                "ft policy mismatch: this gateway serves `{}`, the \
+                 envelope asked for `{}` (the policy is a cluster \
+                 property; drop the field or match it)",
+                shared.policy.name(), asked.name()));
+        }
+    }
+    let req = match env.build_request() {
+        Some(req) => req,
+        None => {
+            return Response::json(400, &Json::obj()
+                .field("error", Json::Str(format!(
+                    "unknown routine `{}`", env.routine)))
+                .field("routines", Json::Arr(
+                    ROUTINES.iter().map(|r| Json::Str((*r).into()))
+                        .collect())))
+        }
+    };
+    if let Err(diag) = preflight(shared, &env) {
+        return error_response(400, &diag);
+    }
+    if shared.draining.load(Ordering::SeqCst) {
+        return error_response(503, "gateway is draining");
+    }
+    let deadline = env
+        .deadline_ms
+        .map(Duration::from_millis)
+        .unwrap_or(shared.cfg.max_deadline)
+        .min(shared.cfg.max_deadline);
+    let started = std::time::Instant::now();
+    let (admitted, retries) =
+        shared.cluster.submit_with_retry(req, &shared.cfg.retry);
+    let rx = match admitted {
+        Ok(rx) => rx,
+        Err(e @ Error::Overloaded { .. }) => {
+            let (secs, ms) = retry_after(&shared.cfg.retry);
+            return Response::json(429, &e.to_json()
+                .field("retries", Json::Int(retries as u64))
+                .field("retry_after_ms", Json::Int(ms)))
+                .header("retry-after", &secs.to_string());
+        }
+        Err(e @ Error::ShuttingDown { .. }) => {
+            return Response::json(503, &e.to_json());
+        }
+    };
+    let wait = deadline.saturating_sub(started.elapsed());
+    match rx.recv_timeout(wait) {
+        Ok(Ok(resp)) => {
+            let mut doc = Json::obj()
+                .field("schema", Json::Str(RESPONSE_SCHEMA.into()))
+                .field("routine", Json::Str(env.routine.clone()))
+                .field("dim", Json::Int(env.dim as u64))
+                .field("seed", Json::Int(env.seed))
+                .field("kernel", Json::Str(resp.kernel.into()))
+                .field("backend", Json::Str(resp.backend.name().into()))
+                .field("policy", Json::Str(shared.policy.name().into()))
+                .field("exec_seconds", Json::Num(resp.exec_seconds))
+                .field("retries", Json::Int(retries as u64))
+                .field("ft", Json::obj()
+                    .field("detected", Json::Int(resp.ft.errors_detected))
+                    .field("corrected",
+                           Json::Int(resp.ft.errors_corrected)))
+                .field("checksum",
+                       Json::Num(result_checksum(&resp.result)));
+            if let Some(key) = &env.idempotency_key {
+                doc = doc.field("idempotency_key", Json::Str(key.clone()));
+            }
+            Response::json(200, &doc)
+        }
+        Ok(Err(e)) => error_response(500, &format!("execution failed: {e}")),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            Response::json(504, &Json::obj()
+                .field("error", Json::Str("deadline exceeded".into()))
+                .field("deadline_ms",
+                       Json::Int(deadline.as_millis() as u64)))
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            error_response(500, "cluster dropped the request")
+        }
+    }
+}
+
+/// Planner preflight: refuse up front what execution could never
+/// serve, with the planner's own diagnostic. A pinned variant is
+/// strict — the planner's fallback ladder would silently substitute a
+/// different kernel, which is exactly what a client pinning a variant
+/// does not want.
+fn preflight(shared: &Shared, env: &Envelope)
+             -> std::result::Result<(), String> {
+    let policy = shared.policy;
+    if let Some(v) = env.variant {
+        let registry = KernelRegistry::global();
+        let serves = registry
+            .for_routine(&env.routine)
+            .into_iter()
+            .any(|k| k.supports(policy) && k.variant == v);
+        if !serves {
+            return Err(format!(
+                "no candidate kernel: routine `{}` has no `{}`-variant \
+                 kernel serving policy `{}` (drop the pin or pick a \
+                 served variant)",
+                env.routine, v.name(), policy.name()));
+        }
+        return Ok(());
+    }
+    Planner::new(&shared.profile)
+        .plan_dims(&env.routine, env.dim, shared.cfg.prefer, policy)
+        .map(|_| ())
+        .ok_or_else(|| format!(
+            "no candidate kernel: no registered kernel serves routine \
+             `{}` under policy `{}`", env.routine, policy.name()))
+}
+
+fn healthz(shared: &Shared) -> Response {
+    let snap = shared.cluster.metrics();
+    let (ups, downs) = shared.cluster.scale_events();
+    let draining = shared.draining.load(Ordering::SeqCst);
+    let pooled = !shared.profile.no_pool;
+    let doc = Json::obj()
+        .field("schema", Json::Str(HEALTH_SCHEMA.into()))
+        .field("status", Json::Str(
+            if draining { "draining" } else { "ok" }.into()))
+        .field("shards", Json::Int(shared.cluster.shard_count() as u64))
+        .field("scale_ups", Json::Int(ups))
+        .field("scale_downs", Json::Int(downs))
+        .field("pool", Json::obj()
+            .field("enabled", Json::Bool(pooled))
+            .field("workers", Json::Int(snap.pool.workers))
+            .field("live", Json::Bool(!pooled || snap.pool.workers > 0))
+            .field("tasks_submitted", Json::Int(snap.pool.tasks_submitted))
+            .field("tasks_executed", Json::Int(snap.pool.tasks_executed)))
+        .field("campaign", Json::Str(
+            if shared.cluster.campaign().is_some() { "active" }
+            else { "none" }.into()))
+        .field("policy", Json::Str(shared.policy.name().into()));
+    Response::json(200, &doc)
+}
+
+fn metrics(shared: &Shared) -> Response {
+    // the exact merged ledger — the same ftblas.ledger.v1 document the
+    // soak report embeds, served live
+    let doc = shared.cluster.metrics().to_json();
+    debug_assert_eq!(doc.get("schema").and_then(Json::as_str),
+                     Some(LEDGER_SCHEMA));
+    Response::json(200, &doc)
+}
+
+fn topology(shared: &Shared) -> Response {
+    let topo = shared.cluster.topology();
+    let doc = Json::obj()
+        .field("schema", Json::Str(TOPOLOGY_SCHEMA.into()))
+        .field("shards", Json::Arr(topo.shards.iter().map(|s| {
+            Json::obj()
+                .field("slot", Json::Int(s.slot as u64))
+                .field("salt", Json::Int(s.salt))
+                .field("queue_depth", Json::Int(s.queue_depth as u64))
+        }).collect()))
+        .field("next_generation", Json::Int(topo.next_generation))
+        .field("scale_ups", Json::Int(topo.scale_ups))
+        .field("scale_downs", Json::Int(topo.scale_downs));
+    Response::json(200, &doc)
+}
+
+fn campaign(shared: &Shared) -> Response {
+    let doc = match shared.cluster.campaign() {
+        None => Json::obj()
+            .field("schema", Json::Str(CAMPAIGN_SCHEMA.into()))
+            .field("active", Json::Bool(false)),
+        Some(c) => {
+            let cfg = c.config();
+            Json::obj()
+                .field("schema", Json::Str(CAMPAIGN_SCHEMA.into()))
+                .field("active", Json::Bool(true))
+                .field("seed", Json::Int(cfg.seed))
+                .field("rate_per_min", Json::Num(cfg.rate_per_min))
+                .field("stride", Json::Int(cfg.stride))
+                .field("target", Json::Str(cfg.target.name().into()))
+                .field("injected", Json::Int(c.injected()))
+                .field("suppressed", Json::Int(c.suppressed()))
+        }
+    };
+    Response::json(200, &doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_round_trips_through_json() {
+        let env = Envelope {
+            routine: "dgemm".into(),
+            dim: 96,
+            seed: 0xABCD,
+            variant: Some(Impl::Simd),
+            ft: Some(FtPolicy::Hybrid),
+            deadline_ms: Some(2500),
+            idempotency_key: Some("req-\"quoted\"/π".into()),
+        };
+        let text = env.to_json().render();
+        assert_eq!(Envelope::parse(&text).unwrap(), env);
+        // minimal envelope: optional fields default
+        let min = Envelope::new("ddot", 64);
+        assert_eq!(Envelope::parse(&min.to_json().render()).unwrap(), min);
+    }
+
+    #[test]
+    fn envelope_rejects_bad_documents() {
+        for (body, needle) in [
+            ("{}", "schema"),
+            (r#"{"schema":"ftblas.request.v2","routine":"ddot","dim":4}"#,
+             "schema"),
+            (r#"{"schema":"ftblas.request.v1","dim":4}"#, "routine"),
+            (r#"{"schema":"ftblas.request.v1","routine":"ddot"}"#, "dim"),
+            (r#"{"schema":"ftblas.request.v1","routine":"ddot","dim":0}"#,
+             "dim"),
+            (r#"{"schema":"ftblas.request.v1","routine":"ddot","dim":4,
+                 "variant":"mkl"}"#, "variant"),
+            (r#"{"schema":"ftblas.request.v1","routine":"ddot","dim":4,
+                 "deadline_ms":0}"#, "deadline_ms"),
+            ("not json at all", "JSON"),
+        ] {
+            let err = Envelope::parse(body).unwrap_err();
+            assert!(err.contains(needle),
+                    "`{err}` should mention {needle} for {body}");
+        }
+    }
+
+    #[test]
+    fn every_listed_routine_builds_a_request() {
+        for r in ROUTINES {
+            let env = Envelope::new(r, 8);
+            let req = env.build_request()
+                .unwrap_or_else(|| panic!("{r} must build"));
+            assert_eq!(req.routine(), *r);
+        }
+        assert!(Envelope::new("zgemm", 8).build_request().is_none());
+    }
+
+    #[test]
+    fn identical_envelopes_build_identical_requests() {
+        let env = Envelope::new("ddot", 32);
+        let (a, b) = (env.build_request().unwrap(),
+                      env.build_request().unwrap());
+        match (a, b) {
+            (BlasRequest::Ddot { x: xa, y: ya },
+             BlasRequest::Ddot { x: xb, y: yb }) => {
+                assert_eq!(xa, xb);
+                assert_eq!(ya, yb);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn retry_after_derives_from_the_policy() {
+        let policy = RetryPolicy::default();
+        let (secs, ms) = retry_after(&policy);
+        // default: 500us * 2^5 = 16ms, under the 20ms cap
+        assert_eq!(ms, 16);
+        assert_eq!(secs, 1, "sub-second backoff still advertises >= 1s");
+        let long = RetryPolicy {
+            attempts: 3,
+            base: Duration::from_secs(1),
+            cap: Duration::from_secs(6),
+            jitter_seed: 1,
+        };
+        assert_eq!(retry_after(&long), (6, 6000), "cap clamps the step");
+    }
+
+    #[test]
+    fn checksums_are_deterministic_per_result_kind() {
+        assert_eq!(result_checksum(&BlasResult::Scalar(2.5)), 2.5);
+        assert_eq!(result_checksum(&BlasResult::Vector(vec![1.0, 2.0])),
+                   3.0);
+        let m = Matrix { rows: 1, cols: 2, data: vec![3.0, 4.0] };
+        assert_eq!(result_checksum(&BlasResult::Matrix(m)), 7.0);
+    }
+}

@@ -1,0 +1,484 @@
+//! Minimal HTTP/1.1 wire layer for the gateway (no hyper/tokio in this
+//! offline image; see DESIGN.md §9). The parser is a **pure function
+//! over byte slices** — no sockets, no allocator tricks — so the
+//! conformance proptests can feed it arbitrary byte prefixes and prove
+//! it never panics: truncated input reports "incomplete", oversized
+//! request lines and header blocks hit hard size caps (mapped to `431`
+//! on the wire), and everything else malformed degrades to a typed
+//! error (mapped to `400`). The blocking socket helpers
+//! ([`read_request`], [`Response::write_to`], [`fetch`]) are thin
+//! adapters over the pure core.
+//!
+//! Scope is deliberately narrow — exactly what the gateway's protocol
+//! (`docs/PROTOCOL.md`) needs: one request per connection
+//! (`Connection: close`), `Content-Length` bodies only (chunked
+//! transfer encoding is rejected as unsupported), no continuation
+//! lines, no trailers.
+
+use std::io::{Read, Write};
+
+use crate::util::json::Json;
+
+/// Hard cap on the request head (request line + headers + blank line).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Hard cap on any single line in the head.
+pub const MAX_LINE_BYTES: usize = 4 * 1024;
+/// Hard cap on the number of header fields.
+pub const MAX_HEADERS: usize = 64;
+/// Hard cap on a request body (`Content-Length` above this is refused).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Typed parse failure, carrying its wire status.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// A size cap was exceeded (`431 Request Header Fields Too Large`).
+    TooLarge(&'static str),
+    /// The declared body exceeds [`MAX_BODY_BYTES`] (`413`).
+    BodyTooLarge(usize),
+    /// Anything else malformed (`400 Bad Request`).
+    Malformed(String),
+}
+
+impl ParseError {
+    /// The HTTP status this error maps to.
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::TooLarge(_) => 431,
+            ParseError::BodyTooLarge(_) => 413,
+            ParseError::Malformed(_) => 400,
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::TooLarge(what) => {
+                write!(f, "{what} exceeds the size cap")
+            }
+            ParseError::BodyTooLarge(n) => {
+                write!(f, "declared body of {n} bytes exceeds the \
+                           {MAX_BODY_BYTES}-byte cap")
+            }
+            ParseError::Malformed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed request head: the request line plus header fields. Bodies
+/// are read separately, by declared `Content-Length`.
+#[derive(Clone, Debug)]
+pub struct Head {
+    /// Request method, as sent (methods are case-sensitive tokens).
+    pub method: String,
+    /// Request target (origin form, e.g. `/healthz`).
+    pub target: String,
+    /// Header fields in arrival order (names lowercased).
+    pub headers: Vec<(String, String)>,
+}
+
+impl Head {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The declared body length: 0 when absent, an error when
+    /// unparseable or above [`MAX_BODY_BYTES`].
+    pub fn content_length(&self) -> Result<usize, ParseError> {
+        match self.header("content-length") {
+            None => Ok(0),
+            Some(v) => {
+                let n: usize = v.trim().parse().map_err(|_| {
+                    ParseError::Malformed(format!(
+                        "unparseable content-length `{v}`"))
+                })?;
+                if n > MAX_BODY_BYTES {
+                    return Err(ParseError::BodyTooLarge(n));
+                }
+                Ok(n)
+            }
+        }
+    }
+}
+
+/// Is `b` a valid RFC 9110 token byte (method / header-name alphabet)?
+fn is_token_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric()
+        || matches!(b, b'!' | b'#' | b'$' | b'%' | b'&' | b'\'' | b'*'
+                       | b'+' | b'-' | b'.' | b'^' | b'_' | b'`' | b'|'
+                       | b'~')
+}
+
+/// Take the next line out of `buf` starting at `*pos`: bytes up to the
+/// next LF, with one trailing CR stripped. `Ok(None)` = no complete
+/// line yet (with the line-length cap enforced against the unterminated
+/// tail, so a byte stream that never sends LF still terminates).
+fn next_line<'b>(buf: &'b [u8], pos: &mut usize)
+                 -> Result<Option<&'b [u8]>, ParseError> {
+    let rest = &buf[*pos..];
+    match rest.iter().position(|&b| b == b'\n') {
+        Some(nl) => {
+            if nl > MAX_LINE_BYTES {
+                return Err(ParseError::TooLarge("header line"));
+            }
+            let mut line = &rest[..nl];
+            if line.last() == Some(&b'\r') {
+                line = &line[..line.len() - 1];
+            }
+            *pos += nl + 1;
+            Ok(Some(line))
+        }
+        None if rest.len() > MAX_LINE_BYTES => {
+            Err(ParseError::TooLarge("header line"))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Parse a request head from the front of `buf`.
+///
+/// - `Ok(Some((head, consumed)))` — a complete head; the body (if any)
+///   starts at `buf[consumed..]`.
+/// - `Ok(None)` — the head is incomplete; read more bytes and retry.
+/// - `Err(_)` — the prefix can never become a valid head (size caps
+///   and grammar violations are detected as early as possible, so a
+///   malicious peer cannot buy buffering with garbage).
+///
+/// Total function over arbitrary bytes: no panic, no unbounded work.
+pub fn parse_head(buf: &[u8]) -> Result<Option<(Head, usize)>, ParseError> {
+    let mut pos = 0;
+    let request_line = match next_line(buf, &mut pos)? {
+        Some(line) => line,
+        None => return Ok(None),
+    };
+    let line = std::str::from_utf8(request_line).map_err(|_| {
+        ParseError::Malformed("request line is not UTF-8".into())
+    })?;
+    let mut parts = line.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => {
+                return Err(ParseError::Malformed(format!(
+                    "malformed request line `{line}`")))
+            }
+        };
+    if method.is_empty() || !method.bytes().all(is_token_byte) {
+        return Err(ParseError::Malformed(format!(
+            "malformed method `{method}`")));
+    }
+    if !target.starts_with('/') {
+        return Err(ParseError::Malformed(format!(
+            "request target `{target}` is not origin-form")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ParseError::Malformed(format!(
+            "unsupported protocol `{version}`")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        if pos > MAX_HEAD_BYTES {
+            return Err(ParseError::TooLarge("request head"));
+        }
+        let line = match next_line(buf, &mut pos)? {
+            Some(line) => line,
+            None if buf.len() > MAX_HEAD_BYTES => {
+                return Err(ParseError::TooLarge("request head"));
+            }
+            None => return Ok(None),
+        };
+        if line.is_empty() {
+            let head = Head {
+                method: method.to_string(),
+                target: target.to_string(),
+                headers,
+            };
+            return Ok(Some((head, pos)));
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(ParseError::TooLarge("header count"));
+        }
+        let text = std::str::from_utf8(line).map_err(|_| {
+            ParseError::Malformed("header line is not UTF-8".into())
+        })?;
+        let (name, value) = text.split_once(':').ok_or_else(|| {
+            ParseError::Malformed(format!("header line `{text}` has no ':'"))
+        })?;
+        if name.is_empty() || !name.bytes().all(is_token_byte) {
+            return Err(ParseError::Malformed(format!(
+                "malformed header name `{name}`")));
+        }
+        headers.push((name.to_ascii_lowercase(),
+                      value.trim().to_string()));
+    }
+}
+
+/// Read failure on the blocking server path: transport errors abort the
+/// connection silently, parse errors get a wire response.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The socket failed mid-read (peer reset, timeout).
+    Io(std::io::Error),
+    /// The bytes can never form a valid request.
+    Parse(ParseError),
+    /// The peer closed before completing the head (no response owed).
+    Closed,
+}
+
+/// Blocking server-side read of one full request (head + body) from a
+/// stream, under the module's size caps. Chunked transfer encoding is
+/// rejected — the protocol uses `Content-Length` bodies only.
+pub fn read_request<R: Read>(stream: &mut R)
+                             -> Result<(Head, Vec<u8>), ReadError> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 2048];
+    let (head, consumed) = loop {
+        match parse_head(&buf).map_err(ReadError::Parse)? {
+            Some(parsed) => break parsed,
+            None => {
+                let n = stream.read(&mut chunk).map_err(ReadError::Io)?;
+                if n == 0 {
+                    return Err(ReadError::Closed);
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    };
+    if head.header("transfer-encoding").is_some() {
+        return Err(ReadError::Parse(ParseError::Malformed(
+            "chunked transfer encoding is not supported (send a \
+             content-length body)".into())));
+    }
+    let want = head.content_length().map_err(ReadError::Parse)?;
+    let mut body = buf[consumed..].to_vec();
+    while body.len() < want {
+        let n = stream.read(&mut chunk).map_err(ReadError::Io)?;
+        if n == 0 {
+            return Err(ReadError::Parse(ParseError::Malformed(format!(
+                "body truncated at {} of {want} declared bytes",
+                body.len()))));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(want);
+    Ok((head, body))
+}
+
+/// The reason phrase for every status the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// An outgoing response; `write_to` stamps `Content-Length` and
+/// `Connection: close` itself.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// Extra header fields (content-length/connection are automatic).
+    pub headers: Vec<(String, String)>,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// An empty response with `status`.
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    /// A JSON-bodied response.
+    pub fn json(status: u16, doc: &Json) -> Response {
+        let mut r = Response::new(status);
+        r.headers.push(("content-type".into(), "application/json".into()));
+        r.body = doc.render().into_bytes();
+        r
+    }
+
+    /// Append a header field (builder-style).
+    pub fn header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// Serialize onto a stream (one response, then the connection
+    /// closes — the protocol is single-request).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status,
+                               reason(self.status));
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("content-length: {}\r\n", self.body.len()));
+        head.push_str("connection: close\r\n\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// A response as seen by the loopback client.
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    /// Status code from the status line.
+    pub status: u16,
+    /// Header fields (names lowercased).
+    pub headers: Vec<(String, String)>,
+    /// Body bytes, decoded as UTF-8 (the gateway only emits JSON).
+    pub body: String,
+}
+
+impl WireResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn invalid(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Minimal blocking HTTP client for the conformance tests and the
+/// `gateway --self-check` smoke: one request, read to EOF (the server
+/// always closes), parse the status line + headers + body.
+pub fn fetch(addr: &str, method: &str, path: &str, body: Option<&str>)
+             -> std::io::Result<WireResponse> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\n\
+         content-type: application/json\r\ncontent-length: {}\r\n\
+         connection: close\r\n\r\n{body}",
+        body.len());
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8(raw)
+        .map_err(|_| invalid("response is not UTF-8"))?;
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| invalid("response has no head/body separator"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| invalid(format!("bad status line `{status_line}`")))?;
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Ok(WireResponse { status, headers, body: body.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_complete_head() {
+        let raw = b"POST /v1/blas HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 2\r\n\r\n{}";
+        let (head, consumed) = parse_head(raw).unwrap().unwrap();
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.target, "/v1/blas");
+        assert_eq!(head.header("HOST"), Some("x"));
+        assert_eq!(head.content_length().unwrap(), 2);
+        assert_eq!(&raw[consumed..], b"{}");
+    }
+
+    #[test]
+    fn incomplete_heads_ask_for_more() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: x\r\n";
+        for cut in 0..raw.len() {
+            assert!(parse_head(&raw[..cut]).unwrap().is_none(),
+                    "prefix of {cut} bytes should be incomplete");
+        }
+        assert!(parse_head(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn lone_lf_line_endings_parse_too() {
+        let raw = b"GET / HTTP/1.1\nhost: x\n\n";
+        let (head, consumed) = parse_head(raw).unwrap().unwrap();
+        assert_eq!(head.target, "/");
+        assert_eq!(consumed, raw.len());
+    }
+
+    #[test]
+    fn malformed_heads_are_typed_400s() {
+        for bad in [&b"NOT A REQUEST LINE AT ALL\r\n\r\n"[..],
+                    b"GET /\r\n\r\n",
+                    b"GET / HTTP/2.0\r\n\r\n",
+                    b"GET noslash HTTP/1.1\r\n\r\n",
+                    b"G@T / HTTP/1.1\r\n\r\n",
+                    b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+                    b"GET / HTTP/1.1\r\n: empty-name\r\n\r\n"] {
+            let err = parse_head(bad).unwrap_err();
+            assert_eq!(err.status(), 400, "{err} for {bad:?}");
+        }
+    }
+
+    #[test]
+    fn size_caps_map_to_431() {
+        let long_line = vec![b'a'; MAX_LINE_BYTES + 2];
+        assert_eq!(parse_head(&long_line).unwrap_err().status(), 431);
+        let mut many = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..MAX_HEADERS + 1 {
+            many.extend_from_slice(format!("h{i}: v\r\n").as_bytes());
+        }
+        many.extend_from_slice(b"\r\n");
+        assert_eq!(parse_head(&many).unwrap_err().status(), 431);
+    }
+
+    #[test]
+    fn oversized_bodies_are_refused_up_front() {
+        let raw = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+                          MAX_BODY_BYTES + 1);
+        let (head, _) = parse_head(raw.as_bytes()).unwrap().unwrap();
+        assert_eq!(head.content_length().unwrap_err().status(), 413);
+    }
+
+    #[test]
+    fn responses_round_trip_through_the_client_parser() {
+        let doc = Json::obj().field("ok", Json::Bool(true));
+        let mut wire = Vec::new();
+        Response::json(429, &doc)
+            .header("retry-after", "1")
+            .write_to(&mut wire)
+            .unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("retry-after: 1\r\n"));
+        assert!(text.ends_with("{\"ok\":true}"));
+    }
+}

@@ -29,6 +29,11 @@ use crate::util::arena;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+/// Schema tag stamped on every serialized ledger snapshot. The gateway
+/// serves this document verbatim on `GET /metrics`, so the identifier
+/// is part of the wire contract (`docs/PROTOCOL.md`).
+pub const LEDGER_SCHEMA: &str = "ftblas.ledger.v1";
+
 /// JSON view of a latency [`Summary`] (seconds; a shared shape so the
 /// ledger artifact's schema stays uniform across fields).
 fn summary_json(s: &Summary) -> Json {
@@ -502,7 +507,7 @@ impl MetricsSnapshot {
             })
             .collect();
         Json::obj()
-            .field("schema", Json::Str("ftblas.ledger.v1".into()))
+            .field("schema", Json::Str(LEDGER_SCHEMA.into()))
             .field("completed", Json::Int(self.completed))
             .field("failed", Json::Int(self.failed))
             .field("shed", Json::Int(self.shed))

@@ -63,11 +63,22 @@
 //! and serves artifact calls over channels ([`executor`]); PJRT jobs are
 //! admitted unplanned (the executor plans per-artifact), batch by
 //! `(routine, dim)`, and route by a hash of the same key.
+//!
+//! Above the whole pipeline sits the **network serving plane**: the
+//! dependency-free HTTP/1.1 parser in [`http`] and the [`gateway`] that
+//! binds a `TcpListener` in front of a cluster, decodes the
+//! `ftblas.request.v1` envelope, submits through
+//! [`cluster::ClusterHandle::submit_with_retry`], and maps the typed
+//! admission errors onto wire status codes (`429` + `Retry-After` for
+//! `Overloaded`, `400` for plan failures, `504` past the deadline) —
+//! the transport/execution seam `docs/PROTOCOL.md` specifies.
 
 pub mod autoscale;
 pub mod batcher;
 pub mod cluster;
 pub mod executor;
+pub mod gateway;
+pub mod http;
 pub mod metrics;
 pub mod pjrt_backend;
 pub mod plan;
@@ -79,7 +90,9 @@ pub mod trace;
 
 pub use autoscale::{ScaleDecision, ScalingConfig, ScalingController,
                     TierSample};
-pub use cluster::{Cluster, ClusterConfig, ClusterHandle, RetryPolicy};
+pub use cluster::{Cluster, ClusterConfig, ClusterHandle, RetryPolicy,
+                  ShardSlot, TopologySnapshot};
+pub use gateway::{Envelope, Gateway, GatewayConfig, GatewayStats};
 pub use metrics::{KernelStats, MetricsSnapshot};
 pub use plan::{ExecutionPlan, PlanCache, Planner};
 pub use registry::{KernelDescriptor, KernelId, KernelRegistry};

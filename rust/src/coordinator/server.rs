@@ -94,6 +94,27 @@ impl std::fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+impl Error {
+    /// Machine-readable form for the wire: a JSON object carrying the
+    /// error kind, the shard, the admission numbers (for `Overloaded`),
+    /// and the human-readable message. The gateway chains extra fields
+    /// onto this (retry counts, back-off hints) before serializing.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let base = Json::obj().field("error", Json::Str(self.to_string()));
+        match self {
+            Error::Overloaded { shard, depth, limit } => base
+                .field("kind", Json::Str("overloaded".into()))
+                .field("shard", Json::Int(*shard as u64))
+                .field("queue_depth", Json::Int(*depth as u64))
+                .field("admission_limit", Json::Int(*limit as u64)),
+            Error::ShuttingDown { shard } => base
+                .field("kind", Json::Str("shutting_down".into()))
+                .field("shard", Json::Int(*shard as u64)),
+        }
+    }
+}
+
 /// Result of an admission attempt: a receiver for the (eventual)
 /// response, or the typed admission rejection.
 pub type Admitted = std::result::Result<Receiver<Result<BlasResponse>>, Error>;

@@ -41,7 +41,12 @@
 //!   event and draining victims without dropping a request. Completions
 //!   land in per-shard, per-kernel metrics ledgers (latencies, SLO
 //!   burns, FT counters, scale events) that merge exactly. Dispatch is
-//!   data — a descriptor table — not nested match arms.
+//!   data — a descriptor table — not nested match arms. The dep-free
+//!   HTTP/1.1 [`coordinator::gateway`] serves this whole pipeline over
+//!   the wire: `ftblas.request.v1` envelopes in, typed status mappings
+//!   out (429 + `Retry-After` on sheds, 400 on plan failures, 504 past
+//!   the deadline), plus `/healthz` `/metrics` `/topology` `/campaign`
+//!   admin routes — see `docs/PROTOCOL.md`.
 //! - [`bench`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //! - [`apps`] — downstream consumers (blocked Cholesky) exercising the
@@ -66,6 +71,7 @@ pub mod util;
 pub use config::Profile;
 pub use coordinator::autoscale::{ScalingConfig, ScalingController};
 pub use coordinator::cluster::{Cluster, ClusterHandle, RetryPolicy};
+pub use coordinator::gateway::{Envelope, Gateway, GatewayConfig};
 pub use coordinator::metrics::MetricsSnapshot;
 pub use coordinator::plan::{ExecutionPlan, PlanCache, Planner};
 pub use coordinator::registry::{KernelId, KernelRegistry};

@@ -5,6 +5,8 @@
 //! ftblas verify [--profile P]              cross-check artifacts vs native
 //! ftblas run --routine R --n N [...]       execute one routine
 //! ftblas serve --requests N [...]          drive the plan-aware server
+//! ftblas gateway [--addr A] [...]          HTTP/1.1 front end over the
+//!                                          cluster (docs/PROTOCOL.md)
 //! ftblas soak [--quick] [...]              timed fault-injection campaign
 //!                                          on an elastic tier (CI gate)
 //! ftblas bench --exp ID [--quick]          regenerate a paper table/figure
@@ -20,8 +22,11 @@ use ftblas::bench::{self, BenchCtx};
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
 use ftblas::coordinator::autoscale::ScalingConfig;
-use ftblas::coordinator::cluster::{Cluster, ClusterConfig, RetryPolicy};
+use ftblas::coordinator::cluster::{Cluster, ClusterConfig, ClusterHandle,
+                                   RetryPolicy};
 use ftblas::coordinator::executor::PjrtExecutor;
+use ftblas::coordinator::gateway::{self, Envelope, Gateway, GatewayConfig};
+use ftblas::coordinator::http;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
 use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
 use ftblas::coordinator::router::{execute_native, Router};
@@ -108,6 +113,27 @@ USAGE:
               pool (default: the thread budget); --no-pool: scoped
               fork/join per kernel frame — the A/B baseline, bitwise
               identical results)
+  ftblas gateway [--addr HOST:PORT] [--workers N (HTTP handler threads)]
+             [--ft P] [--backend tuned|simd] [--shards S] [--min-shards M]
+             [--max-shards X] [--admission-depth D] [--shard-workers W]
+             [--threads T] [--retry-attempts N] [--max-deadline-s S]
+             [--duration SECS] [--campaign] [--rate ERRORS_PER_MIN]
+             [--stride K] [--target all|dmr|abft|fused] [--seed S]
+             [--self-check] [--out PATH] [--profile P]
+             (dependency-free HTTP/1.1 front end over the elastic
+              cluster — the wire contract is docs/PROTOCOL.md. POST
+              /v1/blas takes an ftblas.request.v1 envelope; GET
+              /healthz /metrics /topology /campaign serve live
+              operational state. Typed outcomes map onto status codes:
+              Overloaded -> 429 with Retry-After, planner no-candidate
+              -> 400 with the diagnostic, deadline -> 504. --campaign
+              arms a seeded injection campaign under wire load;
+              --duration drains gracefully after SECS (default: serve
+              until killed). --self-check binds an ephemeral port,
+              round-trips one request against a direct in-process call,
+              checks /healthz and the 400 mapping, and exits nonzero on
+              any mismatch; --out writes the ftblas.gateway-check.v1
+              report as JSON.)
   ftblas soak [--quick] [--duration SECS] [--rate ERRORS_PER_MIN]
              [--stride K] [--target all|dmr|abft|fused] [--ft P]
              [--seed S (campaign schedule)] [--trace-seed S (workload)]
@@ -153,6 +179,7 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&profile, args.has("quick")),
         "run" => cmd_run(&args, profile),
         "serve" => cmd_serve(&args, profile),
+        "gateway" => cmd_gateway(&args, profile),
         "soak" => cmd_soak(&args, profile),
         "bench" => {
             let exp = args.get("exp", "all");
@@ -585,6 +612,215 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     }
     println!();
     ftblas::bench::harness::print_ledger(&snap);
+    Ok(())
+}
+
+/// `ftblas gateway` — serve the cluster over HTTP/1.1
+/// (docs/PROTOCOL.md). Fixed-size by default; `--min-shards` /
+/// `--max-shards` hand sizing to the autoscaler exactly as `serve`
+/// does; `--campaign` arms seeded injection under wire load. With
+/// `--self-check` the gateway binds an ephemeral port, conforms one
+/// wire round-trip against a direct in-process call, and exits
+/// nonzero on any mismatch — the CI smoke step.
+fn cmd_gateway(args: &Args, mut profile: Profile) -> Result<()> {
+    let policy = FtPolicy::by_name(&args.get("ft", "hybrid"))
+        .ok_or_else(|| anyhow!("bad --ft"))?;
+    let backend = match args.get("backend", "tuned").as_str() {
+        "tuned" => Backend::NativeTuned,
+        "simd" => Backend::NativeSimd,
+        other => bail!("gateway --backend wants tuned|simd, got `{other}`"),
+    };
+    // planner preflights check the same variant ladder the router serves
+    let prefer = match backend {
+        Backend::NativeSimd => Impl::Simd,
+        _ => Impl::Tuned,
+    };
+    profile.threads = args.get_usize("threads", profile.threads)?.max(1);
+    profile.workers =
+        args.get_usize("shard-workers", profile.workers)?.max(1);
+    if args.has("admission-depth") {
+        profile.admission_depth =
+            Some(args.get_usize("admission-depth", 0)?.max(1));
+    }
+    if args.has("min-shards") || args.has("max-shards") {
+        let min = args.get_usize("min-shards", 1)?.max(1);
+        let max = args.get_usize("max-shards", profile.shards.max(min))?;
+        if min >= max {
+            bail!("elastic bounds [{min}, {max}] leave the autoscaler no \
+                   room: need min < max (use --shards N for a fixed-size \
+                   tier)");
+        }
+        profile = profile.with_shard_bounds(min, max);
+        profile.shards = args
+            .get_usize("shards", profile.min_shards)?
+            .clamp(profile.min_shards, profile.max_shards);
+    } else {
+        profile = profile.with_shards(args.get_usize("shards", 2)?.max(1));
+    }
+    if args.has("campaign") {
+        let target = CampaignTarget::by_name(&args.get("target", "all"))
+            .ok_or_else(|| anyhow!("bad --target (want all|dmr|abft|\
+                                    fused)"))?;
+        if !policy.protects() {
+            bail!("--campaign needs a protecting --ft policy: under \
+                   `none` the strikes could never be detected");
+        }
+        if !policy.reaches(target) {
+            bail!("campaign target `{}` is unreachable under policy `{}`",
+                  target.name(), policy.name());
+        }
+        profile = profile.with_campaign(CampaignConfig {
+            seed: args.get_usize("seed", 0xCA4A16)? as u64,
+            rate_per_min: args.get_usize("rate", 600)?.max(1) as f64,
+            stride: args.get_usize("stride", 2)?.max(1) as u64,
+            target,
+            ..Default::default()
+        });
+    }
+    let scale_interval = args.get_usize("scale-interval", 10)?.max(1);
+    let autoscale = profile.elastic().then(|| {
+        ScalingConfig::from_profile(&profile).with_interval(
+            std::time::Duration::from_millis(scale_interval as u64))
+    });
+    let cluster_cfg = ClusterConfig {
+        autoscale,
+        ..ClusterConfig::from_profile(&profile)
+    };
+    let router = Router::native_only(profile.clone(), backend);
+    let cluster = Cluster::start(router, policy, cluster_cfg);
+    let handle = cluster.handle();
+    let gcfg = GatewayConfig {
+        workers: args.get_usize("workers", 4)?.max(1),
+        retry: RetryPolicy {
+            attempts: args.get_usize("retry-attempts", 5)? as u32,
+            ..RetryPolicy::default()
+        },
+        prefer,
+        max_deadline: std::time::Duration::from_secs(
+            args.get_usize("max-deadline-s", 30)?.max(1) as u64),
+    };
+    if args.has("self-check") {
+        return gateway_self_check(args, cluster, handle, profile, policy,
+                                  gcfg);
+    }
+    let addr = args.get("addr", "127.0.0.1:8775");
+    let gw = Gateway::bind(&addr, handle, profile.clone(), policy, gcfg)?;
+    println!("gateway: listening on {} (policy={}, backend={}, \
+              shards={}{}, campaign={})",
+             gw.local_addr(), policy.name(), backend.name(),
+             profile.shards,
+             if profile.elastic() {
+                 format!(" elastic [{}..{}]", profile.min_shards,
+                         profile.max_shards)
+             } else {
+                 String::new()
+             },
+             if profile.campaign.is_some() { "armed" } else { "off" });
+    let duration = args.get_usize("duration", 0)?;
+    if duration == 0 {
+        // serve until the process is killed
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration as u64));
+    let stats = gw.shutdown();
+    println!("gateway drained: {} accepted == {} served \
+              ({} 2xx / {} 4xx / {} 5xx)",
+             stats.accepted, stats.served, stats.s2xx, stats.s4xx,
+             stats.s5xx);
+    let snap = cluster.shutdown();
+    ftblas::bench::harness::print_ledger(&snap);
+    Ok(())
+}
+
+/// The `--self-check` smoke: one wire round-trip conformed against a
+/// direct in-process call, plus the `/healthz` and 400 mappings and
+/// the drain invariant. Exits nonzero on any mismatch.
+fn gateway_self_check(args: &Args, cluster: Cluster, handle: ClusterHandle,
+                      profile: Profile, policy: FtPolicy,
+                      cfg: GatewayConfig) -> Result<()> {
+    let gw = Gateway::bind("127.0.0.1:0", handle.clone(), profile, policy,
+                           cfg)?;
+    let addr = gw.local_addr().to_string();
+    println!("gateway self-check on {addr}");
+    let parse = |body: &str| {
+        Json::parse(body).unwrap_or(Json::Null)
+    };
+    let mut checks = Vec::new();
+
+    // one wire round-trip must byte-agree with the in-process result
+    let env = Envelope::new("dgemm", 48);
+    let wire = http::fetch(&addr, "POST", "/v1/blas",
+                           Some(&env.to_json().render()))
+        .map_err(|e| anyhow!("self-check POST failed: {e}"))?;
+    let wire_sum = parse(&wire.body).get("checksum").and_then(Json::as_f64);
+    let direct = handle.call(env.build_request().expect("dgemm builds"))?;
+    let direct_sum = gateway::result_checksum(&direct.result);
+    checks.push(soak_check(
+        "wire-roundtrip",
+        wire.status == 200 && wire_sum == Some(direct_sum),
+        format!("status {}, wire checksum {:?} vs direct {}",
+                wire.status, wire_sum, direct_sum)));
+
+    let health = http::fetch(&addr, "GET", "/healthz", None)
+        .map_err(|e| anyhow!("self-check /healthz failed: {e}"))?;
+    let hdoc = parse(&health.body);
+    checks.push(soak_check(
+        "healthz",
+        health.status == 200
+            && hdoc.get("schema").and_then(Json::as_str)
+                == Some(gateway::HEALTH_SCHEMA)
+            && hdoc.get("status").and_then(Json::as_str) == Some("ok"),
+        format!("status {}, body schema {:?}", health.status,
+                hdoc.get("schema").and_then(Json::as_str))));
+
+    let bad = http::fetch(&addr, "POST", "/v1/blas", Some("{not json"))
+        .map_err(|e| anyhow!("self-check malformed POST failed: {e}"))?;
+    checks.push(soak_check("malformed-400", bad.status == 400,
+                           format!("status {}", bad.status)));
+
+    let stats = gw.shutdown();
+    checks.push(soak_check(
+        "drain-exact", stats.accepted == stats.served,
+        format!("{} accepted / {} served", stats.accepted, stats.served)));
+    let snap = cluster.shutdown();
+    checks.push(soak_check(
+        "ledger-clean",
+        snap.completed >= 2 && snap.failed == 0
+            && snap.errors_escaped == 0,
+        format!("{} completed, {} failed, {} escaped", snap.completed,
+                snap.failed, snap.errors_escaped)));
+
+    println!("\ngateway self-check:");
+    for c in &checks {
+        println!("  [{}] {:<16} {}", if c.pass { "PASS" } else { "FAIL" },
+                 c.name, c.detail);
+    }
+    if let Some(path) = args.flags.get("out") {
+        let doc = Json::obj()
+            .field("schema", Json::Str("ftblas.gateway-check.v1".into()))
+            .field("addr", Json::Str(addr))
+            .field("checks", Json::Arr(checks.iter().map(|c| {
+                Json::obj()
+                    .field("name", Json::Str(c.name.into()))
+                    .field("pass", Json::Bool(c.pass))
+                    .field("detail", Json::Str(c.detail.clone()))
+            }).collect()))
+            .field("passed", Json::Bool(checks.iter().all(|c| c.pass)))
+            .field("ledger", snap.to_json());
+        ftblas::bench::harness::write_json(std::path::Path::new(path), &doc)?;
+        println!("gateway-check report written to {path}");
+    }
+    let failed: Vec<&str> = checks
+        .iter()
+        .filter(|c| !c.pass)
+        .map(|c| c.name)
+        .collect();
+    if !failed.is_empty() {
+        bail!("gateway self-check failed: {}", failed.join(", "));
+    }
+    println!("gateway self-check passed");
     Ok(())
 }
 

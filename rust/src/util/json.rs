@@ -245,20 +245,53 @@ fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
                     Some(b'b') => out.push('\u{8}'),
                     Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
-                        let hex = bytes
-                            .get(*pos + 1..*pos + 5)
-                            .and_then(|h| std::str::from_utf8(h).ok())
-                            .ok_or("truncated \\u escape")?;
-                        let code = u32::from_str_radix(hex, 16)
-                            .map_err(|_| "bad \\u escape")?;
-                        // surrogate halves only arise for chars the
-                        // writer never emits raw; map them to U+FFFD
-                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        let code = parse_hex4(bytes, *pos + 1)?;
                         *pos += 4;
+                        let ch = match code {
+                            0xD800..=0xDBFF => {
+                                // high surrogate: RFC 8259 §7 encodes
+                                // astral chars as a \u pair, so a low
+                                // half must follow immediately
+                                if bytes.get(*pos + 1..*pos + 3)
+                                    != Some(&b"\\u"[..])
+                                {
+                                    return Err(format!(
+                                        "lone high surrogate \
+                                         \\u{code:04x}"));
+                                }
+                                let low = parse_hex4(bytes, *pos + 3)?;
+                                if !(0xDC00..=0xDFFF).contains(&low) {
+                                    return Err(format!(
+                                        "\\u{code:04x} not followed by a \
+                                         low surrogate (got \
+                                         \\u{low:04x})"));
+                                }
+                                *pos += 6;
+                                let scalar = 0x10000
+                                    + ((code - 0xD800) << 10)
+                                    + (low - 0xDC00);
+                                char::from_u32(scalar)
+                                    .expect("paired surrogates decode")
+                            }
+                            0xDC00..=0xDFFF => {
+                                return Err(format!(
+                                    "lone low surrogate \\u{code:04x}"))
+                            }
+                            code => char::from_u32(code)
+                                .expect("non-surrogate BMP scalar"),
+                        };
+                        out.push(ch);
                     }
                     _ => return Err(format!("bad escape at byte {pos}")),
                 }
                 *pos += 1;
+            }
+            Some(&c) if c < 0x20 => {
+                // RFC 8259 §7: control characters must be escaped; raw
+                // ones in the input are malformed, not data
+                return Err(format!(
+                    "raw control character 0x{c:02x} in string at byte \
+                     {pos}"));
             }
             Some(_) => {
                 // copy one UTF-8 scalar (multi-byte sequences intact)
@@ -273,6 +306,20 @@ fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
             }
         }
     }
+}
+
+/// Four hex digits at `at` (the payload of a `\u` escape). Strict:
+/// exactly `[0-9A-Fa-f]{4}` — `u32::from_str_radix` alone would let a
+/// sign sneak in.
+fn parse_hex4(bytes: &[u8], at: usize) -> Result<u32, String> {
+    let hex = bytes
+        .get(at..at + 4)
+        .ok_or("truncated \\u escape")?;
+    if !hex.iter().all(u8::is_ascii_hexdigit) {
+        return Err(format!("bad \\u escape at byte {at}"));
+    }
+    u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16)
+        .map_err(|_| format!("bad \\u escape at byte {at}"))
 }
 
 fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json)
@@ -294,6 +341,10 @@ fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
         *pos += 1;
     }
     let text = std::str::from_utf8(&bytes[start..*pos]).unwrap();
+    if text.starts_with(['+', '.']) {
+        // Rust's f64 parser takes both; JSON's grammar takes neither
+        return Err(format!("bad number '{text}' at byte {start}"));
+    }
     if !text.contains(['.', 'e', 'E', '-']) {
         if let Ok(v) = text.parse::<u64>() {
             return Ok(Json::Int(v));
@@ -401,5 +452,73 @@ mod tests {
         for bad in ["", "{", "{\"a\":}", "[1,]", "tru", "1.5x", "{} {}"] {
             assert!(Json::parse(bad).is_err(), "accepted malformed: {bad:?}");
         }
+    }
+
+    /// `\u` escapes decode exactly: BMP scalars directly, astral chars
+    /// through surrogate pairs — gaps the gateway's envelope round-trip
+    /// proptests surfaced.
+    #[test]
+    fn parse_decodes_unicode_escapes() {
+        let cases = [
+            ("\"\\u0041\"", "A"),
+            ("\"\\u00e9\"", "\u{e9}"),
+            ("\"\\u2603\"", "\u{2603}"),
+            // U+1D11E (musical G clef), the canonical astral example
+            ("\"\\ud834\\udd1e\"", "\u{1D11E}"),
+            ("\"\\ud83d\\ude00\"", "\u{1F600}"),
+            ("\"\\u0000\"", "\u{0}"),
+            ("\"\\u001f\"", "\u{1F}"),
+        ];
+        for (text, want) in cases {
+            let got = Json::parse(text).unwrap();
+            assert_eq!(got.as_str(), Some(want), "decoding {text}");
+        }
+        // escaped control chars round-trip through the writer
+        let doc = Json::Str("\u{1}\u{1F}".into());
+        assert_eq!(Json::parse(&doc.render()).unwrap().as_str(),
+                   Some("\u{1}\u{1F}"));
+    }
+
+    /// Lone or mispaired surrogate halves are malformed, not U+FFFD.
+    #[test]
+    fn parse_rejects_broken_surrogates() {
+        for bad in [
+            r#""\ud834""#,          // lone high, string ends
+            r#""\ud834x""#,         // lone high, raw char follows
+            "\"\\ud834\\u0041\"",   // high paired with a non-surrogate
+            r#""\udd1e""#,          // lone low
+            r#""\ud834\ud834""#,    // high paired with another high
+            r#""\u12""#,            // truncated hex
+            r#""\u+123""#,          // sign is not a hex digit
+        ] {
+            assert!(Json::parse(bad).is_err(),
+                    "accepted broken escape: {bad}");
+        }
+    }
+
+    /// Raw (unescaped) control characters inside strings are malformed
+    /// per RFC 8259 §7 — only their `\u`/short-escape forms parse.
+    #[test]
+    fn parse_rejects_raw_control_characters() {
+        for bad in ["\"a\u{1}b\"", "\"a\nb\"", "\"\u{0}\"", "\"a\tb\""] {
+            assert!(Json::parse(bad).is_err(),
+                    "accepted raw control char: {bad:?}");
+        }
+        // the escaped forms of the same strings are fine
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap().as_str(),
+                   Some("a\nb"));
+        assert_eq!(Json::parse("\"a\\u0001b\"").unwrap().as_str(),
+                   Some("a\u{1}b"));
+    }
+
+    /// Number syntax is JSON's, not Rust's: no leading `+` or bare `.`
+    /// (exponent signs stay legal).
+    #[test]
+    fn parse_rejects_nonjson_number_forms() {
+        for bad in ["+1", "[+1.5]", "{\"a\":+2}", ".5", "[.25]"] {
+            assert!(Json::parse(bad).is_err(), "accepted: {bad}");
+        }
+        assert_eq!(Json::parse("1e+3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(Json::parse("-2e-2").unwrap().as_f64(), Some(-0.02));
     }
 }

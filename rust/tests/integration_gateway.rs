@@ -1,0 +1,379 @@
+//! Golden wire-conformance suite for the HTTP gateway
+//! (`docs/PROTOCOL.md`): every status-code mapping the protocol
+//! promises — 200 with a reproducible checksum, 400 for malformed /
+//! unknown / plan-less envelopes, 429 with `Retry-After` off a
+//! saturated cluster, 504 past the deadline — plus schema validation
+//! of the operational routes, the graceful-drain accounting, and a
+//! seeded injection campaign driven entirely through the wire.
+
+use std::time::Duration;
+
+use ftblas::config::Profile;
+use ftblas::coordinator::cluster::{Cluster, ClusterConfig, RetryPolicy};
+use ftblas::coordinator::gateway::{self, Envelope, Gateway, GatewayConfig,
+                                   result_checksum};
+use ftblas::coordinator::http::fetch;
+use ftblas::coordinator::request::{Backend, BlasRequest};
+use ftblas::coordinator::router::Router;
+use ftblas::ft::injector::{CampaignConfig, CampaignTarget};
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::json::Json;
+use ftblas::util::matrix::Matrix;
+use ftblas::util::rng::Rng;
+
+/// A gateway on an ephemeral loopback port over a native cluster.
+fn gateway_over(profile: Profile, policy: FtPolicy, cfg: GatewayConfig)
+                -> (Gateway, Cluster, String) {
+    let cluster_cfg = ClusterConfig::from_profile(&profile);
+    let router = Router::native_only(profile.clone(), Backend::NativeTuned);
+    let cluster = Cluster::start(router, policy, cluster_cfg);
+    let gw = Gateway::bind("127.0.0.1:0", cluster.handle(), profile, policy,
+                           cfg)
+        .expect("gateway binds an ephemeral port");
+    let addr = gw.local_addr().to_string();
+    (gw, cluster, addr)
+}
+
+fn parse(body: &str) -> Json {
+    Json::parse(body).unwrap_or_else(|e| panic!("body not JSON ({e}): {body}"))
+}
+
+fn str_of<'a>(doc: &'a Json, key: &str) -> Option<&'a str> {
+    doc.get(key).and_then(Json::as_str)
+}
+
+/// End-to-end 200: the wire answer carries the response schema, echoes
+/// the envelope, and its checksum is bit-identical to a direct
+/// in-process call built from the same envelope — the reproducibility
+/// contract of the seeded wire payload.
+#[test]
+fn wire_roundtrip_matches_the_direct_call() {
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(2), FtPolicy::Hybrid,
+        GatewayConfig::default());
+    let mut env = Envelope::new("dgemm", 48);
+    env.idempotency_key = Some("golden-1".into());
+    let resp = fetch(&addr, "POST", "/v1/blas",
+                     Some(&env.to_json().render())).unwrap();
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    let doc = parse(&resp.body);
+    assert_eq!(str_of(&doc, "schema"), Some(gateway::RESPONSE_SCHEMA));
+    assert_eq!(str_of(&doc, "routine"), Some("dgemm"));
+    assert_eq!(doc.get("dim").and_then(Json::as_f64), Some(48.0));
+    assert_eq!(str_of(&doc, "policy"), Some("hybrid"));
+    assert_eq!(str_of(&doc, "idempotency_key"), Some("golden-1"));
+    assert!(str_of(&doc, "kernel").is_some(), "executed kernel named");
+    let wire_sum = doc.get("checksum").and_then(Json::as_f64)
+        .expect("200 body carries a checksum");
+    let direct = cluster.handle()
+        .call(env.build_request().expect("dgemm builds"))
+        .expect("direct call succeeds");
+    assert_eq!(wire_sum, result_checksum(&direct.result),
+               "wire result must be bit-identical to the in-process call");
+    let stats = gw.shutdown();
+    assert_eq!((stats.accepted, stats.served, stats.s2xx), (1, 1, 1));
+    cluster.shutdown();
+}
+
+/// The 400 family: malformed JSON, schema violations, unknown
+/// routines (with the routine list as the diagnostic), FT-policy
+/// mismatches, and a pinned variant no kernel serves — each named in
+/// the error body.
+#[test]
+fn invalid_envelopes_map_to_400_with_diagnostics() {
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(1), FtPolicy::Hybrid,
+        GatewayConfig::default());
+    let post = |body: &str| fetch(&addr, "POST", "/v1/blas", Some(body))
+        .unwrap();
+
+    let resp = post("{ this is not json");
+    assert_eq!(resp.status, 400);
+    assert!(parse(&resp.body).get("error").is_some());
+
+    let resp = post(r#"{"schema":"ftblas.request.v1","routine":"ddot"}"#);
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("dim"), "names the missing field");
+
+    let env = Envelope::new("zgemm", 32);
+    let resp = post(&env.to_json().render());
+    assert_eq!(resp.status, 400);
+    let doc = parse(&resp.body);
+    assert!(str_of(&doc, "error").unwrap().contains("zgemm"));
+    let listed = doc.get("routines").and_then(Json::as_arr)
+        .expect("diagnostic lists the served routines");
+    assert_eq!(listed.len(), gateway::ROUTINES.len());
+
+    // the cluster serves hybrid; asserting another policy is a 400
+    let mut env = Envelope::new("ddot", 64);
+    env.ft = Some(FtPolicy::None);
+    let resp = post(&env.to_json().render());
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("mismatch"), "body: {}", resp.body);
+
+    // serial `naive` kernels are unprotected, so pinning that variant
+    // under a protecting policy has no candidate — the planner's
+    // diagnostic comes back instead of a silent substitution
+    let mut env = Envelope::new("dgemm", 32);
+    env.variant = Some(ftblas::blas::Impl::Naive);
+    let resp = post(&env.to_json().render());
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("no candidate kernel"),
+            "body: {}", resp.body);
+    assert!(resp.body.contains("naive"), "body: {}", resp.body);
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.accepted, stats.served);
+    assert_eq!(stats.s4xx, 5);
+    cluster.shutdown();
+}
+
+/// A saturated single-shard cluster sheds the wire submission: 429,
+/// a whole-second `Retry-After` header, and the typed admission
+/// diagnostic (shard, queue depth, watermark) in the body.
+#[test]
+fn saturated_cluster_answers_429_with_retry_after() {
+    let mut profile =
+        Profile::default().with_shards(1).with_admission_depth(1);
+    profile.workers = 1;
+    // no gateway-side retries: the test wants the shed surfaced, not
+    // ridden out
+    let cfg = GatewayConfig {
+        retry: RetryPolicy { attempts: 0, ..RetryPolicy::default() },
+        ..GatewayConfig::default()
+    };
+    let (gw, cluster, addr) = gateway_over(profile, FtPolicy::Hybrid, cfg);
+    let handle = cluster.handle();
+    // saturate: heavy DGEMMs through the same (only) shard until the
+    // watermark sheds — the queue then holds hundreds of ms of work
+    let mut rng = Rng::new(0x5A7);
+    let mut rxs = Vec::new();
+    let mut shed = false;
+    for _ in 0..12 {
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::random(512, 512, &mut rng),
+            b: Matrix::random(512, 512, &mut rng),
+            beta: 0.0,
+            c: Matrix::zeros(512, 512),
+        };
+        match handle.submit(req) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => {
+                shed = true;
+                break;
+            }
+        }
+    }
+    assert!(shed, "direct submissions must reach the admission watermark");
+    let resp = fetch(&addr, "POST", "/v1/blas",
+                     Some(&Envelope::new("dgemm", 512).to_json().render()))
+        .unwrap();
+    assert_eq!(resp.status, 429, "body: {}", resp.body);
+    let after: u64 = resp.header("retry-after")
+        .expect("429 carries Retry-After")
+        .parse()
+        .expect("Retry-After is whole seconds");
+    assert!(after >= 1);
+    let doc = parse(&resp.body);
+    assert_eq!(str_of(&doc, "kind"), Some("overloaded"));
+    assert_eq!(doc.get("retries").and_then(Json::as_f64), Some(0.0));
+    assert!(doc.get("queue_depth").is_some());
+    assert!(doc.get("admission_limit").is_some());
+    assert!(doc.get("retry_after_ms").and_then(Json::as_f64).unwrap()
+            >= 1.0);
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    gw.shutdown();
+    cluster.shutdown();
+}
+
+/// A deadline the execution cannot meet maps to 504 with the deadline
+/// echoed, and the late completion still lands in the ledger (the
+/// gateway abandons the wait, not the work).
+#[test]
+fn missed_deadline_maps_to_504() {
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(1), FtPolicy::Hybrid,
+        GatewayConfig::default());
+    let mut env = Envelope::new("dgemm", 384);
+    env.deadline_ms = Some(1);
+    let resp = fetch(&addr, "POST", "/v1/blas",
+                     Some(&env.to_json().render())).unwrap();
+    assert_eq!(resp.status, 504, "body: {}", resp.body);
+    let doc = parse(&resp.body);
+    assert!(str_of(&doc, "error").unwrap().contains("deadline"));
+    assert_eq!(doc.get("deadline_ms").and_then(Json::as_f64), Some(1.0));
+    gw.shutdown();
+    let snap = cluster.shutdown();
+    assert_eq!(snap.completed, 1,
+               "the abandoned request still executes and is accounted");
+}
+
+/// The operational routes serve live state under their committed
+/// `ftblas.*.v1` schemas, and unknown routes / wrong methods map to
+/// 404 / 405.
+#[test]
+fn ops_routes_validate_against_their_schemas() {
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(2), FtPolicy::Hybrid,
+        GatewayConfig::default());
+    // drive one request so the ledger has content
+    let ok = fetch(&addr, "POST", "/v1/blas",
+                   Some(&Envelope::new("ddot", 1024).to_json().render()))
+        .unwrap();
+    assert_eq!(ok.status, 200);
+
+    let health = fetch(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(health.status, 200);
+    let doc = parse(&health.body);
+    assert_eq!(str_of(&doc, "schema"), Some(gateway::HEALTH_SCHEMA));
+    assert_eq!(str_of(&doc, "status"), Some("ok"));
+    assert_eq!(doc.get("shards").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(str_of(&doc, "campaign"), Some("none"));
+    assert_eq!(str_of(&doc, "policy"), Some("hybrid"));
+    let pool = doc.get("pool").expect("healthz reports the compute pool");
+    assert!(pool.get("enabled").is_some());
+    assert!(pool.get("live").is_some());
+
+    let metrics = fetch(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(metrics.status, 200);
+    let doc = parse(&metrics.body);
+    assert_eq!(str_of(&doc, "schema"), Some("ftblas.ledger.v1"),
+               "/metrics serves the ledger snapshot verbatim");
+    assert_eq!(doc.get("completed").and_then(Json::as_f64), Some(1.0));
+    assert!(doc.get("errors").and_then(|e| e.get("escaped")).is_some());
+    assert!(doc.get("pool").is_some());
+    assert!(doc.get("arena").is_some());
+
+    let topo = fetch(&addr, "GET", "/topology", None).unwrap();
+    assert_eq!(topo.status, 200);
+    let doc = parse(&topo.body);
+    assert_eq!(str_of(&doc, "schema"), Some(gateway::TOPOLOGY_SCHEMA));
+    let shards = doc.get("shards").and_then(Json::as_arr).unwrap();
+    assert_eq!(shards.len(), 2);
+    for (i, s) in shards.iter().enumerate() {
+        assert_eq!(s.get("slot").and_then(Json::as_f64), Some(i as f64));
+        assert!(s.get("salt").is_some(), "slot {i} reports its salt");
+        assert!(s.get("queue_depth").is_some());
+    }
+    assert!(doc.get("next_generation").and_then(Json::as_f64).unwrap()
+            >= 1.0);
+    assert_eq!(doc.get("scale_ups").and_then(Json::as_f64), Some(0.0));
+
+    let campaign = fetch(&addr, "GET", "/campaign", None).unwrap();
+    assert_eq!(campaign.status, 200);
+    let doc = parse(&campaign.body);
+    assert_eq!(str_of(&doc, "schema"), Some(gateway::CAMPAIGN_SCHEMA));
+    assert_eq!(doc.get("active").and_then(|v| match v {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }), Some(false));
+
+    let missing = fetch(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(missing.status, 404);
+    assert!(parse(&missing.body).get("routes").is_some(),
+            "404 lists the routes");
+    let wrong = fetch(&addr, "GET", "/v1/blas", None).unwrap();
+    assert_eq!(wrong.status, 405);
+    assert_eq!(wrong.header("allow"), Some("POST"));
+    let wrong = fetch(&addr, "POST", "/healthz", Some("{}")).unwrap();
+    assert_eq!(wrong.status, 405);
+    assert_eq!(wrong.header("allow"), Some("GET"));
+
+    gw.shutdown();
+    cluster.shutdown();
+}
+
+/// Graceful shutdown drains in-flight wire requests: clients that were
+/// already accepted get complete 200 responses, the gateway's
+/// accounting closes at `accepted == served`, and the retired cluster
+/// ledger holds exactly the drained completions.
+#[test]
+fn graceful_shutdown_drains_inflight_requests_exactly() {
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(1), FtPolicy::Hybrid,
+        GatewayConfig::default());
+    // four slow requests in flight (~hundreds of ms each on one shard)
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut env = Envelope::new("dgemm", 512);
+                env.seed = 100 + i;
+                fetch(&addr, "POST", "/v1/blas",
+                      Some(&env.to_json().render()))
+            })
+        })
+        .collect();
+    // let every client connect and get accepted before draining
+    std::thread::sleep(Duration::from_millis(150));
+    let stats = gw.shutdown();
+    let mut oks = 0;
+    for c in clients {
+        let resp = c.join().unwrap()
+            .expect("accepted connections get full responses");
+        assert_eq!(resp.status, 200, "body: {}", resp.body);
+        oks += 1;
+    }
+    assert_eq!(oks, 4);
+    assert_eq!(stats.accepted, stats.served,
+               "drain invariant: every accepted connection was served");
+    assert_eq!(stats.accepted, 4);
+    assert_eq!(stats.s2xx, 4);
+    let snap = cluster.shutdown();
+    assert_eq!(snap.completed, 4, "ledger retires exactly");
+    assert_eq!(snap.failed, 0);
+}
+
+/// The soak gate's invariant, proven through the wire: a seeded
+/// campaign strikes protected kernels under wire load, and the
+/// `/metrics` snapshot shows every injected error detected, corrected,
+/// and none escaped.
+#[test]
+fn campaign_under_wire_load_escapes_nothing() {
+    let profile = Profile::default().with_shards(1).with_campaign(
+        CampaignConfig {
+            seed: 0xC0DE,
+            rate_per_min: 1.0e6, // rate gate effectively open
+            stride: 1,
+            target: CampaignTarget::AllProtected,
+            ..Default::default()
+        });
+    let (gw, cluster, addr) = gateway_over(profile, FtPolicy::Hybrid,
+                                           GatewayConfig::default());
+    for i in 0..24 {
+        let mut env = Envelope::new("dgemm", 64);
+        env.seed = i;
+        let resp = fetch(&addr, "POST", "/v1/blas",
+                         Some(&env.to_json().render())).unwrap();
+        assert_eq!(resp.status, 200, "body: {}", resp.body);
+    }
+    let resp = fetch(&addr, "GET", "/metrics", None).unwrap();
+    let doc = parse(&resp.body);
+    let errors = doc.get("errors").expect("ledger has error outcomes");
+    let count = |key: &str| errors.get(key).and_then(Json::as_f64).unwrap();
+    assert!(count("injected") > 0.0,
+            "the campaign must actually strike under wire load");
+    assert_eq!(count("escaped"), 0.0,
+               "no injected error may escape detection");
+    assert_eq!(count("detected"), count("injected"));
+    assert_eq!(count("corrected"), count("detected"));
+
+    let resp = fetch(&addr, "GET", "/campaign", None).unwrap();
+    let doc = parse(&resp.body);
+    assert_eq!(doc.get("active").and_then(|v| match v {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }), Some(true));
+    assert!(doc.get("injected").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(doc.get("stride").and_then(Json::as_f64), Some(1.0));
+
+    // /healthz reflects the armed campaign too
+    let resp = fetch(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(str_of(&parse(&resp.body), "campaign"), Some("active"));
+
+    gw.shutdown();
+    cluster.shutdown();
+}

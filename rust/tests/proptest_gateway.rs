@@ -1,0 +1,276 @@
+//! Property tests on the serving plane's wire layer: the
+//! `ftblas.request.v1` envelope codec round-trips every representable
+//! request (including hostile idempotency keys that stress the JSON
+//! string escaper), and the HTTP/1.1 head parser is *total* — it never
+//! panics on arbitrary byte prefixes, truncations, or mutations, and
+//! oversized input hits the size caps with the right status code
+//! instead of buying unbounded buffering.
+//!
+//! Uses the repo's seeded check harness (`util::check`) — proptest is
+//! not vendored in this offline image; see DESIGN.md §9.
+
+use ftblas::blas::Impl;
+use ftblas::coordinator::gateway::{Envelope, ROUTINES};
+use ftblas::coordinator::http::{
+    parse_head, ParseError, MAX_BODY_BYTES, MAX_HEADERS, MAX_LINE_BYTES,
+};
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::check::{check, ensure, Gen};
+use ftblas::util::json::Json;
+use ftblas::util::rng::Rng;
+
+// ----------------------------------------------------- envelope codec
+
+/// Code points the random idempotency keys draw from: plain ASCII,
+/// JSON-syntax characters that must be escaped, every class of control
+/// character, accented/BMP text, surrogate-range neighbours, and
+/// astral-plane scalars. Values (not literals) so the source stays
+/// ASCII-clean.
+const KEY_ALPHABET: &[u32] = &[
+    0x41,    // 'A'
+    0x7A,    // 'z'
+    0x20,    // space
+    0x22,    // '"'   (must escape)
+    0x5C,    // '\\'  (must escape)
+    0x2F,    // '/'
+    0x00,    // NUL        (control, \u-escaped on the wire)
+    0x01,    // SOH        (control)
+    0x08,    // backspace  (renders as \u0008)
+    0x09,    // tab        (short escape \t)
+    0x0A,    // newline    (short escape \n)
+    0x0D,    // CR         (short escape \r)
+    0x1F,    // unit sep   (last control)
+    0x7F,    // DEL (not a JSON control — passes through raw)
+    0xE9,    // e-acute (2-byte UTF-8)
+    0x2603,  // snowman (3-byte UTF-8)
+    0xD7FF,  // last scalar below the surrogate range
+    0xE000,  // first scalar above the surrogate range
+    0xFFFD,  // replacement character
+    0x1D11E, // musical G clef (astral — surrogate pair in \u form)
+    0x1F600, // emoji (astral)
+];
+
+/// A random key over [`KEY_ALPHABET`], length 0..=24.
+fn random_key(rng: &mut Rng) -> String {
+    let len = rng.below(25);
+    (0..len)
+        .map(|_| {
+            let cp = KEY_ALPHABET[rng.below(KEY_ALPHABET.len())];
+            char::from_u32(cp).expect("alphabet holds scalars only")
+        })
+        .collect()
+}
+
+/// A random valid envelope spanning the full field space.
+fn random_envelope(g: &mut Gen) -> Envelope {
+    let routine = ROUTINES[g.rng.below(ROUTINES.len())];
+    let mut env = Envelope::new(routine, g.dim(1, 4096));
+    env.seed = g.rng.next_u64();
+    if g.rng.below(2) == 1 {
+        env.variant = Some(Impl::ALL[g.rng.below(Impl::ALL.len())]);
+    }
+    if g.rng.below(2) == 1 {
+        const POLICIES: [FtPolicy; 4] = [
+            FtPolicy::None,
+            FtPolicy::Hybrid,
+            FtPolicy::AbftUnfused,
+            FtPolicy::AbftWeighted,
+        ];
+        env.ft = Some(POLICIES[g.rng.below(POLICIES.len())]);
+    }
+    if g.rng.below(2) == 1 {
+        env.deadline_ms = Some(1 + g.rng.below(120_000) as u64);
+    }
+    if g.rng.below(2) == 1 {
+        env.idempotency_key = Some(random_key(&mut g.rng));
+    }
+    env
+}
+
+/// Encode → render → parse → decode is the identity on every valid
+/// envelope, byte-hostile idempotency keys included. This is the wire
+/// contract: what a client serializes is exactly what the gateway
+/// submits.
+#[test]
+fn envelope_roundtrips_through_the_wire_encoding() {
+    check("envelope_roundtrip", 400, |g| {
+        let env = random_envelope(g);
+        let text = env.to_json().render();
+        let back = Envelope::parse(&text)
+            .map_err(|e| format!("decode of {text:?} failed: {e}"))?;
+        ensure(back == env,
+               format!("round-trip mismatch: {env:?} -> {back:?}"))?;
+        // the rendered envelope is also plain valid JSON for any
+        // third-party consumer
+        Json::parse(&text)
+            .map_err(|e| format!("render emitted invalid JSON: {e}"))?;
+        Ok(())
+    });
+}
+
+/// Every routine the envelope accepts builds a typed request: the
+/// `ROUTINES` table and `build_request` dispatch cannot drift apart.
+#[test]
+fn every_wire_routine_builds_a_request() {
+    check("routines_build", 60, |g| {
+        let routine = ROUTINES[g.rng.below(ROUTINES.len())];
+        let env = Envelope::new(routine, g.dim(1, 64));
+        ensure(env.build_request().is_some(),
+               format!("routine `{routine}` is listed but unbuildable"))
+    });
+}
+
+// -------------------------------------------------- HTTP head parser
+
+/// Render a syntactically valid request head (terminated by the blank
+/// line) with a random method/target/header set.
+fn random_head(rng: &mut Rng) -> Vec<u8> {
+    const METHODS: [&str; 4] = ["GET", "POST", "PUT", "DELETE"];
+    const TARGETS: [&str; 4] =
+        ["/", "/v1/blas", "/healthz", "/metrics?verbose=1"];
+    let mut head = format!("{} {} HTTP/1.1\r\n",
+                           METHODS[rng.below(METHODS.len())],
+                           TARGETS[rng.below(TARGETS.len())]);
+    for i in 0..rng.below(6) {
+        head.push_str(&format!("x-key-{i}: value-{}\r\n", rng.below(100)));
+    }
+    if rng.below(2) == 1 {
+        head.push_str(&format!("content-length: {}\r\n", rng.below(512)));
+    }
+    head.push_str("\r\n");
+    head.into_bytes()
+}
+
+/// Incremental-parse coherence: on a valid head, every strict prefix
+/// reports "incomplete, read more" and every extension past the blank
+/// line parses to the same consumed offset — no prefix panics, errs,
+/// or parses early. This is exactly the contract `read_request` leans
+/// on while bytes trickle in.
+#[test]
+fn every_prefix_of_a_valid_head_parses_incrementally() {
+    check("head_prefixes", 120, |g| {
+        let head = random_head(&mut g.rng);
+        let full = parse_head(&head)
+            .map_err(|e| format!("valid head rejected: {e:?}"))?;
+        let (_, consumed) =
+            full.ok_or("valid head reported incomplete")?;
+        ensure(consumed == head.len(),
+               format!("consumed {consumed} of {}", head.len()))?;
+        for cut in 0..head.len() {
+            match parse_head(&head[..cut]) {
+                Ok(None) => {}
+                Ok(Some(_)) => {
+                    return Err(format!(
+                        "prefix of {cut} bytes parsed as complete"))
+                }
+                Err(e) => {
+                    return Err(format!(
+                        "prefix of {cut} bytes errored: {e:?}"))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Totality under corruption: flip random bytes in a valid head (or
+/// feed pure garbage) and the parser must return *some* `Result` — any
+/// verdict is acceptable, a panic or hang is not.
+#[test]
+fn parser_never_panics_on_mutated_or_garbage_bytes() {
+    check("head_mutations", 200, |g| {
+        let mut buf = if g.rng.below(4) == 0 {
+            // pure garbage
+            (0..g.rng.below(256))
+                .map(|_| g.rng.next_u64() as u8)
+                .collect::<Vec<u8>>()
+        } else {
+            let mut head = random_head(&mut g.rng);
+            for _ in 0..1 + g.rng.below(8) {
+                let at = g.rng.below(head.len());
+                head[at] = g.rng.next_u64() as u8;
+            }
+            head
+        };
+        let _ = parse_head(&buf);
+        // and again on a random truncation of the same bytes
+        buf.truncate(g.rng.below(buf.len() + 1));
+        let _ = parse_head(&buf);
+        Ok(())
+    });
+}
+
+/// Size caps answer with the right status instead of buffering: a
+/// header line past `MAX_LINE_BYTES` — terminated or still streaming —
+/// is `431`, one header too many is `431`, and a declared body past
+/// `MAX_BODY_BYTES` is `413`. The caps fire on the *unterminated* tail
+/// too, so a peer that never sends LF cannot grow the buffer.
+#[test]
+fn oversized_input_hits_the_caps_with_431_and_413() {
+    check("size_caps", 80, |g| {
+        let overshoot = 1 + g.rng.below(512);
+
+        // (a) one huge header line, LF-terminated
+        let mut buf = b"GET / HTTP/1.1\r\nx-pad: ".to_vec();
+        buf.resize(buf.len() + MAX_LINE_BYTES + overshoot, b'a');
+        let mut terminated = buf.clone();
+        terminated.extend_from_slice(b"\r\n\r\n");
+        match parse_head(&terminated) {
+            Err(e @ ParseError::TooLarge(_)) => {
+                ensure(e.status() == 431,
+                       format!("terminated long line -> {}", e.status()))?
+            }
+            other => {
+                return Err(format!(
+                    "terminated long line -> {other:?}, want TooLarge"))
+            }
+        }
+
+        // (b) the same line still streaming (no LF yet): the cap must
+        // fire against the unterminated tail as well
+        match parse_head(&buf) {
+            Err(e @ ParseError::TooLarge(_)) => {
+                ensure(e.status() == 431,
+                       format!("streaming long line -> {}", e.status()))?
+            }
+            other => {
+                return Err(format!(
+                    "streaming long line -> {other:?}, want TooLarge"))
+            }
+        }
+
+        // (c) one header more than MAX_HEADERS
+        let mut many = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..=MAX_HEADERS {
+            many.extend_from_slice(format!("x-h{i}: v\r\n").as_bytes());
+        }
+        many.extend_from_slice(b"\r\n");
+        match parse_head(&many) {
+            Err(e @ ParseError::TooLarge(_)) => {
+                ensure(e.status() == 431,
+                       format!("header flood -> {}", e.status()))?
+            }
+            other => {
+                return Err(format!(
+                    "header flood -> {other:?}, want TooLarge"))
+            }
+        }
+
+        // (d) a declared body past the cap is refused at the head, with
+        // 413, before a single body byte is read
+        let big = MAX_BODY_BYTES + overshoot;
+        let huge = format!(
+            "POST /v1/blas HTTP/1.1\r\ncontent-length: {big}\r\n\r\n");
+        let (head, _) = parse_head(huge.as_bytes())
+            .map_err(|e| format!("huge-body head rejected early: {e:?}"))?
+            .ok_or("huge-body head reported incomplete")?;
+        match head.content_length() {
+            Err(e @ ParseError::BodyTooLarge(_)) => {
+                ensure(e.status() == 413,
+                       format!("oversized body -> {}", e.status()))
+            }
+            other => Err(format!(
+                "oversized body -> {other:?}, want BodyTooLarge")),
+        }
+    });
+}
