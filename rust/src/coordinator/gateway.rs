@@ -10,8 +10,9 @@
 //!   [`ClusterHandle::submit_with_retry`], and maps the typed outcomes
 //!   onto the wire: [`Error::Overloaded`] → `429` with a `Retry-After`
 //!   derived from the [`RetryPolicy`], planner "no candidate" → `400`
-//!   with the diagnostic, deadline exceeded → `504`,
-//!   [`Error::ShuttingDown`] → `503`.
+//!   with the diagnostic, a `dim` over the gateway's cap → `413`
+//!   *before* any operand is generated (operand memory is O(dim^2)),
+//!   deadline exceeded → `504`, [`Error::ShuttingDown`] → `503`.
 //! - `GET /healthz` / `/metrics` / `/topology` / `/campaign` serve the
 //!   cluster's *live* operational state (the `ftblas.ledger.v1`
 //!   snapshot, the routing topology with slots/salts/generation, the
@@ -157,11 +158,13 @@ impl Envelope {
                      {other:?}")),
             }
         };
-        let dim = uint("dim")?
-            .ok_or("missing required integer field `dim`")? as usize;
-        if dim == 0 {
+        let dim64 = uint("dim")?
+            .ok_or("missing required integer field `dim`")?;
+        if dim64 == 0 {
             return Err("`dim` must be >= 1".into());
         }
+        let dim = usize::try_from(dim64)
+            .map_err(|_| format!("`dim` {dim64} does not fit this host"))?;
         let seed = uint("seed")?.unwrap_or(7);
         let variant = match doc.get("variant").map(|v| v.as_str()) {
             None => None,
@@ -294,6 +297,12 @@ pub struct GatewayConfig {
     /// Ceiling on any request's end-to-end deadline (envelopes may ask
     /// for less, never more).
     pub max_deadline: Duration,
+    /// Ceiling on the envelope's principal dimension. Operand memory is
+    /// O(dim^2) for the matrix routines (a dgemm builds three n*n f64
+    /// matrices server-side), so an unbounded `dim` would let one small
+    /// POST drive an arbitrarily large allocation; past this cap the
+    /// gateway answers `413` before generating any operands.
+    pub max_dim: usize,
 }
 
 impl Default for GatewayConfig {
@@ -303,6 +312,8 @@ impl Default for GatewayConfig {
             retry: RetryPolicy::default(),
             prefer: Impl::Tuned,
             max_deadline: Duration::from_secs(30),
+            // three 4096^2 f64 matrices ~ 400 MB, the default worst case
+            max_dim: 4096,
         }
     }
 }
@@ -577,23 +588,37 @@ fn submit(shared: &Shared, body: &[u8]) -> Response {
                 shared.policy.name(), asked.name()));
         }
     }
-    let req = match env.build_request() {
-        Some(req) => req,
-        None => {
-            return Response::json(400, &Json::obj()
-                .field("error", Json::Str(format!(
-                    "unknown routine `{}`", env.routine)))
-                .field("routines", Json::Arr(
-                    ROUTINES.iter().map(|r| Json::Str((*r).into()))
-                        .collect())))
-        }
-    };
+    if !ROUTINES.contains(&env.routine.as_str()) {
+        return Response::json(400, &Json::obj()
+            .field("error", Json::Str(format!(
+                "unknown routine `{}`", env.routine)))
+            .field("routines", Json::Arr(
+                ROUTINES.iter().map(|r| Json::Str((*r).into()))
+                    .collect())));
+    }
+    // every refusal must fire before build_request: operand generation
+    // is O(dim^2) memory for the matrix routines, so nothing may
+    // allocate until the envelope is fully admitted
+    if env.dim > shared.cfg.max_dim {
+        return Response::json(413, &Json::obj()
+            .field("error", Json::Str(format!(
+                "`dim` {} exceeds this gateway's cap of {} (operand \
+                 memory is O(dim^2); raise --max-dim to serve larger \
+                 requests)", env.dim, shared.cfg.max_dim)))
+            .field("max_dim", Json::Int(shared.cfg.max_dim as u64)));
+    }
     if let Err(diag) = preflight(shared, &env) {
         return error_response(400, &diag);
     }
     if shared.draining.load(Ordering::SeqCst) {
         return error_response(503, "gateway is draining");
     }
+    let req = match env.build_request() {
+        Some(req) => req,
+        // unreachable: ROUTINES gated above and the two tables are
+        // pinned equal by `every_listed_routine_builds_a_request`
+        None => return error_response(500, "routine table out of sync"),
+    };
     let deadline = env
         .deadline_ms
         .map(Duration::from_millis)
@@ -641,10 +666,20 @@ fn submit(shared: &Shared, body: &[u8]) -> Response {
         }
         Ok(Err(e)) => error_response(500, &format!("execution failed: {e}")),
         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            // the gateway abandons the *wait*, not the work: the
+            // admitted request keeps executing in the cluster and will
+            // land in /metrics. Say so in the body — a client retrying
+            // a 504 immediately doubles the load exactly when the
+            // system is slowest (docs/PROTOCOL.md, "504 semantics").
             Response::json(504, &Json::obj()
                 .field("error", Json::Str("deadline exceeded".into()))
                 .field("deadline_ms",
-                       Json::Int(deadline.as_millis() as u64)))
+                       Json::Int(deadline.as_millis() as u64))
+                .field("request_abandoned", Json::Bool(false))
+                .field("note", Json::Str(
+                    "the admitted request keeps executing and will be \
+                     accounted in /metrics; back off before retrying"
+                        .into())))
         }
         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
             error_response(500, "cluster dropped the request")

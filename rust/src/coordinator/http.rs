@@ -16,6 +16,7 @@
 //! lines, no trailers.
 
 use std::io::{Read, Write};
+use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
@@ -90,12 +91,34 @@ impl Head {
     }
 
     /// The declared body length: 0 when absent, an error when
-    /// unparseable or above [`MAX_BODY_BYTES`].
+    /// unparseable, smuggling-shaped, or above [`MAX_BODY_BYTES`].
+    /// Strict per RFC 9110: the value must be ASCII digits only (no
+    /// sign, no surprises `usize::parse` would take), and duplicate
+    /// `Content-Length` fields must all agree — a disagreeing pair is
+    /// refused rather than silently resolved to the first.
     pub fn content_length(&self) -> Result<usize, ParseError> {
-        match self.header("content-length") {
+        let mut declared: Option<&str> = None;
+        for (k, v) in &self.headers {
+            if k != "content-length" {
+                continue;
+            }
+            match declared {
+                Some(prev) if prev != v.as_str() => {
+                    return Err(ParseError::Malformed(format!(
+                        "conflicting content-length fields `{prev}` and \
+                         `{v}`")));
+                }
+                _ => declared = Some(v),
+            }
+        }
+        match declared {
             None => Ok(0),
             Some(v) => {
-                let n: usize = v.trim().parse().map_err(|_| {
+                if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                    return Err(ParseError::Malformed(format!(
+                        "content-length `{v}` is not a plain decimal")));
+                }
+                let n: usize = v.parse().map_err(|_| {
                     ParseError::Malformed(format!(
                         "unparseable content-length `{v}`"))
                 })?;
@@ -232,17 +255,42 @@ pub enum ReadError {
     Closed,
 }
 
+/// Total wall-clock budget for reading one request. The per-read socket
+/// timeout alone is not enough: a slowloris peer trickling one byte per
+/// read could hold a worker for hours inside the size caps, so elapsed
+/// time is checked across reads and the whole request aborted past this
+/// deadline.
+pub const READ_BUDGET: Duration = Duration::from_secs(10);
+
 /// Blocking server-side read of one full request (head + body) from a
-/// stream, under the module's size caps. Chunked transfer encoding is
-/// rejected — the protocol uses `Content-Length` bodies only.
+/// stream, under the module's size caps and the [`READ_BUDGET`]
+/// wall-clock deadline. Chunked transfer encoding is rejected — the
+/// protocol uses `Content-Length` bodies only.
 pub fn read_request<R: Read>(stream: &mut R)
                              -> Result<(Head, Vec<u8>), ReadError> {
+    read_request_within(stream, READ_BUDGET)
+}
+
+/// [`read_request`] with an explicit wall-clock budget (tests pin the
+/// slowloris abort without waiting out the real deadline).
+pub fn read_request_within<R: Read>(stream: &mut R, budget: Duration)
+                                    -> Result<(Head, Vec<u8>), ReadError> {
+    let started = Instant::now();
+    let overdue = |started: Instant| {
+        ReadError::Io(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            format!("request not complete after {:?} (budget {budget:?})",
+                    started.elapsed())))
+    };
     let mut buf = Vec::with_capacity(1024);
     let mut chunk = [0u8; 2048];
     let (head, consumed) = loop {
         match parse_head(&buf).map_err(ReadError::Parse)? {
             Some(parsed) => break parsed,
             None => {
+                if started.elapsed() >= budget {
+                    return Err(overdue(started));
+                }
                 let n = stream.read(&mut chunk).map_err(ReadError::Io)?;
                 if n == 0 {
                     return Err(ReadError::Closed);
@@ -259,6 +307,9 @@ pub fn read_request<R: Read>(stream: &mut R)
     let want = head.content_length().map_err(ReadError::Parse)?;
     let mut body = buf[consumed..].to_vec();
     while body.len() < want {
+        if started.elapsed() >= budget {
+            return Err(overdue(started));
+        }
         let n = stream.read(&mut chunk).map_err(ReadError::Io)?;
         if n == 0 {
             return Err(ReadError::Parse(ParseError::Malformed(format!(
@@ -466,6 +517,68 @@ mod tests {
                           MAX_BODY_BYTES + 1);
         let (head, _) = parse_head(raw.as_bytes()).unwrap().unwrap();
         assert_eq!(head.content_length().unwrap_err().status(), 413);
+    }
+
+    #[test]
+    fn content_length_is_digits_only() {
+        // header values arrive OWS-trimmed from parse_head, so inner
+        // junk is what this guard must catch (not surrounding spaces)
+        for bad in ["+2", "-1", "0x10", "1_0", "2.0", "1 2", ""] {
+            let raw = format!(
+                "POST / HTTP/1.1\r\ncontent-length:{bad}\r\n\r\n");
+            let (head, _) = parse_head(raw.as_bytes()).unwrap().unwrap();
+            let err = head.content_length().unwrap_err();
+            assert_eq!(err.status(), 400, "`{bad}` gave {err}");
+        }
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 42\r\n\r\n";
+        let (head, _) = parse_head(raw).unwrap().unwrap();
+        assert_eq!(head.content_length().unwrap(), 42);
+    }
+
+    #[test]
+    fn conflicting_content_lengths_are_refused() {
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 2\r\n\
+                    content-length: 3\r\n\r\n";
+        let (head, _) = parse_head(raw).unwrap().unwrap();
+        let err = head.content_length().unwrap_err();
+        assert_eq!(err.status(), 400);
+        assert!(err.to_string().contains("conflicting"), "{err}");
+        // duplicates that agree are harmless
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 2\r\n\
+                    content-length: 2\r\n\r\n";
+        let (head, _) = parse_head(raw).unwrap().unwrap();
+        assert_eq!(head.content_length().unwrap(), 2);
+    }
+
+    /// A reader that yields one byte per read() forever — the slowloris
+    /// shape the wall-clock budget exists to abort.
+    struct Trickle(u8);
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            buf[0] = self.0;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn slowloris_reads_abort_on_the_wall_clock_budget() {
+        // an exhausted budget aborts even though the peer keeps sending
+        let err = read_request_within(&mut Trickle(b'G'), Duration::ZERO)
+            .unwrap_err();
+        match err {
+            ReadError::Io(e) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::TimedOut)
+            }
+            other => panic!("want a timed-out Io error, got {other:?}"),
+        }
+        // a sane budget still reads a prompt request in full
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 2\r\n\r\n{}";
+        let (head, body) =
+            read_request_within(&mut &raw[..], Duration::from_secs(5))
+                .unwrap();
+        assert_eq!(head.method, "POST");
+        assert_eq!(body, b"{}");
     }
 
     #[test]

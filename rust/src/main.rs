@@ -117,6 +117,8 @@ USAGE:
              [--ft P] [--backend tuned|simd] [--shards S] [--min-shards M]
              [--max-shards X] [--admission-depth D] [--shard-workers W]
              [--threads T] [--retry-attempts N] [--max-deadline-s S]
+             [--max-dim N (envelope dim cap, default 4096 — operand
+              memory is O(dim^2); oversized requests answer 413)]
              [--duration SECS] [--campaign] [--rate ERRORS_PER_MIN]
              [--stride K] [--target all|dmr|abft|fused] [--seed S]
              [--self-check] [--out PATH] [--profile P]
@@ -698,6 +700,7 @@ fn cmd_gateway(args: &Args, mut profile: Profile) -> Result<()> {
         prefer,
         max_deadline: std::time::Duration::from_secs(
             args.get_usize("max-deadline-s", 30)?.max(1) as u64),
+        max_dim: args.get_usize("max-dim", 4096)?.max(1),
     };
     if args.has("self-check") {
         return gateway_self_check(args, cluster, handle, profile, policy,

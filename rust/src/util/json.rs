@@ -332,6 +332,51 @@ fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json)
     }
 }
 
+/// Does `text` match RFC 8259's number grammar exactly? Rust's
+/// `f64`/`u64` parsers are looser (leading `+`, leading zeros, `1.`,
+/// `-.5`), so the token is validated here before delegating to them.
+fn is_json_number(text: &str) -> bool {
+    let b = text.as_bytes();
+    let mut i = 0;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    // int: `0` or a nonzero digit followed by digits (no leading zero)
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(b'1'..=b'9') => {
+            while matches!(b.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    // frac: `.` demands at least one digit
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return false;
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    // exp: `e`/`E`, optional sign, at least one digit
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return false;
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    i == b.len()
+}
+
 fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
     let start = *pos;
     while *pos < bytes.len()
@@ -341,8 +386,7 @@ fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
         *pos += 1;
     }
     let text = std::str::from_utf8(&bytes[start..*pos]).unwrap();
-    if text.starts_with(['+', '.']) {
-        // Rust's f64 parser takes both; JSON's grammar takes neither
+    if !is_json_number(text) {
         return Err(format!("bad number '{text}' at byte {start}"));
     }
     if !text.contains(['.', 'e', 'E', '-']) {
@@ -511,14 +555,21 @@ mod tests {
                    Some("a\u{1}b"));
     }
 
-    /// Number syntax is JSON's, not Rust's: no leading `+` or bare `.`
+    /// Number syntax is JSON's (RFC 8259), not Rust's: no leading `+`,
+    /// bare `.`, leading zeros, trailing dot, `-.5`, or empty exponent
     /// (exponent signs stay legal).
     #[test]
     fn parse_rejects_nonjson_number_forms() {
-        for bad in ["+1", "[+1.5]", "{\"a\":+2}", ".5", "[.25]"] {
+        for bad in ["+1", "[+1.5]", "{\"a\":+2}", ".5", "[.25]",
+                    "01", "[007]", "-01", "1.", "[2.e3]", "-.5", "[-.25]",
+                    "-", "1e", "1e+", "[1E-]", "--1", "1.2.3"] {
             assert!(Json::parse(bad).is_err(), "accepted: {bad}");
         }
         assert_eq!(Json::parse("1e+3").unwrap().as_f64(), Some(1000.0));
         assert_eq!(Json::parse("-2e-2").unwrap().as_f64(), Some(-0.02));
+        assert_eq!(Json::parse("0").unwrap().as_f64(), Some(0.0));
+        assert_eq!(Json::parse("-0.5").unwrap().as_f64(), Some(-0.5));
+        assert_eq!(Json::parse("0.25").unwrap().as_f64(), Some(0.25));
+        assert_eq!(Json::parse("10.5E2").unwrap().as_f64(), Some(1050.0));
     }
 }

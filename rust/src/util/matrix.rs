@@ -14,15 +14,26 @@ pub struct Matrix {
     pub data: Vec<f64>,
 }
 
+/// `rows * cols` with the multiplication checked: a shape whose element
+/// count overflows `usize` panics here instead of wrapping in release
+/// builds — a wrapped length would produce a Matrix whose `data` length
+/// disagrees with its dims, which the unsafe kernel backends trust.
+fn checked_len(rows: usize, cols: usize) -> usize {
+    rows.checked_mul(cols)
+        .unwrap_or_else(|| panic!("matrix shape {rows}x{cols} overflows \
+                                   the address space"))
+}
+
 impl Matrix {
     /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: vec![0.0; checked_len(rows, cols)] }
     }
 
     /// Wrap existing row-major data (panics on a shape mismatch).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
-        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        assert_eq!(data.len(), checked_len(rows, cols),
+                   "shape/data mismatch");
         Matrix { rows, cols, data }
     }
 
@@ -37,7 +48,7 @@ impl Matrix {
 
     /// Standard-normal entries from the seeded RNG.
     pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
-        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+        Matrix { rows, cols, data: rng.normal_vec(checked_len(rows, cols)) }
     }
 
     /// Random lower-triangular with a dominant diagonal (well conditioned
@@ -242,5 +253,13 @@ mod tests {
     fn allclose_tolerances() {
         assert!(allclose(&[1.0 + 1e-12], &[1.0], 1e-9, 0.0));
         assert!(!allclose(&[1.1], &[1.0], 1e-9, 1e-9));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn overflowing_shapes_panic_instead_of_wrapping() {
+        // usize::MAX * 2 wraps to a small length in release builds
+        // without the checked multiply — the guard must fire first
+        let _ = Matrix::zeros(usize::MAX, 2);
     }
 }

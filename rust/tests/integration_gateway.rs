@@ -128,6 +128,37 @@ fn invalid_envelopes_map_to_400_with_diagnostics() {
     cluster.shutdown();
 }
 
+/// An oversized `dim` is refused with 413 *before* operand generation:
+/// building a dgemm at the asked dimension would allocate O(dim^2)
+/// memory server-side, so the guard must fire on the envelope, not on
+/// the allocation (a `{"dim": 200000}` POST is ~1 TB of operands).
+#[test]
+fn oversized_dim_is_refused_before_operand_generation() {
+    let cfg = GatewayConfig { max_dim: 256, ..GatewayConfig::default() };
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(1), FtPolicy::Hybrid, cfg);
+    let post = |dim: u64| {
+        let body = format!(
+            r#"{{"schema":"ftblas.request.v1","routine":"dgemm","dim":{dim}}}"#);
+        fetch(&addr, "POST", "/v1/blas", Some(&body)).unwrap()
+    };
+    // a would-be ~1 TB dgemm answers instantly instead of OOMing
+    let resp = post(200_000);
+    assert_eq!(resp.status, 413, "body: {}", resp.body);
+    let doc = parse(&resp.body);
+    assert!(str_of(&doc, "error").unwrap().contains("max-dim"));
+    assert_eq!(doc.get("max_dim").and_then(Json::as_f64), Some(256.0));
+    // a dim whose square overflows u64 arithmetic is equally refused
+    let resp = post(u64::MAX);
+    assert_ne!(resp.status, 200, "body: {}", resp.body);
+    // at the cap itself the request is admitted and served
+    let resp = post(256);
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    let stats = gw.shutdown();
+    assert_eq!(stats.accepted, stats.served);
+    cluster.shutdown();
+}
+
 /// A saturated single-shard cluster sheds the wire submission: 429,
 /// a whole-second `Retry-After` header, and the typed admission
 /// diagnostic (shard, queue depth, watermark) in the body.
@@ -205,6 +236,13 @@ fn missed_deadline_maps_to_504() {
     let doc = parse(&resp.body);
     assert!(str_of(&doc, "error").unwrap().contains("deadline"));
     assert_eq!(doc.get("deadline_ms").and_then(Json::as_f64), Some(1.0));
+    // the body states the kept-running semantics: retrying a 504
+    // immediately compounds load, the work itself was not cancelled
+    assert_eq!(doc.get("request_abandoned").and_then(|v| match v {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }), Some(false));
+    assert!(str_of(&doc, "note").unwrap().contains("keeps executing"));
     gw.shutdown();
     let snap = cluster.shutdown();
     assert_eq!(snap.completed, 1,
