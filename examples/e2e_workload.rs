@@ -16,13 +16,25 @@ use ftblas::blas::Impl;
 use ftblas::config::Profile;
 use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
-use ftblas::coordinator::request::{Backend, BlasResult};
-use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::coordinator::plan::{Planner, SelectionPolicy};
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResponse,
+                                   BlasResult};
+use ftblas::coordinator::router::{execute_plan, Router};
 use ftblas::coordinator::server::Server;
 use ftblas::coordinator::trace::{self, TraceConfig};
 use ftblas::ft::injector::InjectorConfig;
+use ftblas::ft::injector::Fault;
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::allclose;
+
+/// Plan onto a pinned native variant and run the plan.
+fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+              policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, fault)
+}
 
 fn main() -> Result<()> {
     let use_pjrt = std::env::args().any(|a| a == "--pjrt");
@@ -47,8 +59,8 @@ fn main() -> Result<()> {
     let oracles: Vec<BlasResult> = entries
         .iter()
         .map(|e| {
-            execute_native(&e.request, Impl::Naive, &profile, FtPolicy::None,
-                           None)
+            run_native(&e.request, Impl::Naive, &profile, FtPolicy::None,
+                       None)
             .result
         })
         .collect();

@@ -10,12 +10,22 @@
 use anyhow::Result;
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
-use ftblas::coordinator::request::{BlasRequest, BlasResult};
-use ftblas::coordinator::router::execute_native;
+use ftblas::coordinator::plan::{Planner, SelectionPolicy};
+use ftblas::coordinator::request::{BlasRequest, BlasResponse, BlasResult};
+use ftblas::coordinator::router::execute_plan;
 use ftblas::ft::injector::{Injector, InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::{allclose, Matrix};
 use ftblas::util::rng::Rng;
+
+/// Plan onto a pinned native variant and run the plan.
+fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+              policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, fault)
+}
 
 fn main() -> Result<()> {
     let profile = Profile::skylake_sim();
@@ -37,13 +47,13 @@ fn main() -> Result<()> {
     println!("{:<8} {:>10} {:>12} {:>12} {:>10} {:>10}", "routine",
              "errors", "clean-time", "storm-time", "ovhd%", "correct");
     for req in &reqs {
-        let oracle = execute_native(&req.clone(), Impl::Naive, &profile,
-                                    FtPolicy::None, None);
+        let oracle = run_native(&req.clone(), Impl::Naive, &profile,
+                                FtPolicy::None, None);
         // clean protected run
         let reps = 20;
         let t0 = std::time::Instant::now();
         for _ in 0..reps {
-            execute_native(req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
+            run_native(req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
         }
         let clean = t0.elapsed().as_secs_f64() / reps as f64;
 
@@ -56,8 +66,8 @@ fn main() -> Result<()> {
         let t0 = std::time::Instant::now();
         for step in 0..reps {
             let fault = inj.take(step);
-            let resp = execute_native(req, Impl::Tuned, &profile,
-                                      FtPolicy::Hybrid, fault);
+            let resp = run_native(req, Impl::Tuned, &profile,
+                                  FtPolicy::Hybrid, fault);
             detected += resp.ft.errors_detected;
             all_ok &= matches(&resp.result, &oracle.result);
         }

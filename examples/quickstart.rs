@@ -32,14 +32,19 @@ fn main() -> Result<()> {
         beta: 0.0,
         c: Matrix::zeros(n, n),
     };
-    let resp = router.execute(&req, FtPolicy::None, None)?;
+    let plan = router.plan(&req, FtPolicy::None)
+        .expect("the tuned ladder serves dgemm");
+    println!("plan: {}", plan.describe());
+    let resp = router.execute_planned(&plan, &req, None)?;
     println!("[native/ori]    dgemm {n}x{n}: {:.2}ms",
              resp.exec_seconds * 1e3);
 
     // 2. same call under the hybrid FT policy with an injected fault —
     //    the soft error is detected, located and corrected online
     let fault = Fault { step: 1, i: 100, j: 200, delta: 1e6 };
-    let ft = router.execute(&req, FtPolicy::Hybrid, Some(fault))?;
+    let plan = router.plan(&req, FtPolicy::Hybrid)
+        .expect("a protected dgemm plans on every profile");
+    let ft = router.execute_planned(&plan, &req, Some(fault))?;
     println!("[native/hybrid] dgemm {n}x{n}: {:.2}ms, detected={} corrected={}",
              ft.exec_seconds * 1e3, ft.ft.errors_detected,
              ft.ft.errors_corrected);
@@ -55,7 +60,9 @@ fn main() -> Result<()> {
         let exec = PjrtExecutor::spawn(dir.clone())?;
         let pjrt = PjrtBackend::new(exec.handle.clone(), &dir)?;
         let router = Router::with_pjrt(profile, pjrt, Backend::Pjrt);
-        let resp = router.execute(&req, FtPolicy::Hybrid, Some(fault))?;
+        let plan = router.plan(&req, FtPolicy::Hybrid)
+            .expect("the loaded artifact set serves dgemm");
+        let resp = router.execute_planned(&plan, &req, Some(fault))?;
         println!("[pjrt/hybrid]   dgemm {n}x{n}: {:.2}ms, detected={} (fused \
                   Pallas ABFT kernel)",
                  resp.exec_seconds * 1e3, resp.ft.errors_detected);

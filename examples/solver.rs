@@ -16,12 +16,22 @@ use anyhow::Result;
 use ftblas::apps::{cg, cholesky, lu};
 use ftblas::blas::{naive, Impl};
 use ftblas::config::Profile;
-use ftblas::coordinator::request::BlasRequest;
-use ftblas::coordinator::router::execute_native;
+use ftblas::coordinator::plan::{Planner, SelectionPolicy};
+use ftblas::coordinator::request::{BlasRequest, BlasResponse};
+use ftblas::coordinator::router::execute_plan;
 use ftblas::ft::injector::Fault;
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::Matrix;
 use ftblas::util::rng::Rng;
+
+/// Plan onto a pinned native variant and run the plan.
+fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+              policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, fault)
+}
 
 fn main() -> Result<()> {
     let profile = Profile::skylake_sim();
@@ -51,11 +61,11 @@ fn main() -> Result<()> {
     let l = cholesky::dpotrf_lower(&a, 64, &profile.gemm)?;
     let bm = Matrix::random(n, 64, &mut rng);
     let req = BlasRequest::Dtrsm { a: l.clone(), b: bm.clone() };
-    let clean = execute_native(&req, Impl::Tuned, &profile,
-                               FtPolicy::None, None);
+    let clean = run_native(&req, Impl::Tuned, &profile,
+                           FtPolicy::None, None);
     let fault = Fault { step: 3, i: 5, j: 17, delta: 1e8 };
-    let ft = execute_native(&req, Impl::Tuned, &profile,
-                            FtPolicy::Hybrid, Some(fault));
+    let ft = run_native(&req, Impl::Tuned, &profile,
+                        FtPolicy::Hybrid, Some(fault));
     let diff = ft.result.as_matrix().unwrap()
         .max_abs_diff(clean.result.as_matrix().unwrap());
     println!("dtrsm panel solve under a 1e8 injected fault: detected={} \

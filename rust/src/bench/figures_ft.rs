@@ -7,9 +7,10 @@ use std::hint::black_box;
 use crate::bench::harness::{self, header, print_rows, row, BenchCtx, Row};
 use crate::blas::{level2, level3, naive, Impl};
 use crate::config::Profile;
+use crate::coordinator::plan::{Planner, SelectionPolicy};
 use crate::coordinator::registry::{ExecCtx, KernelRegistry, Scheme};
-use crate::coordinator::request::{BlasRequest, BlasResult};
-use crate::coordinator::router::execute_native;
+use crate::coordinator::request::{BlasRequest, BlasResponse, BlasResult};
+use crate::coordinator::router::execute_plan;
 use crate::ft::abft;
 use crate::ft::injector::Fault;
 use crate::ft::policy::FtPolicy;
@@ -18,6 +19,17 @@ use crate::util::rng::Rng;
 
 fn n3(ctx: &BenchCtx) -> usize {
     if ctx.quick { 256 } else { 512 }
+}
+
+/// Plan onto a pinned native variant and run the plan — the figures'
+/// direct executions (same planner overhead in both timed arms, so the
+/// ori/ft ratios stay comparable).
+fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+              policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, fault)
 }
 
 /// Fig. 8a: every registered DGEMM protection scheme vs the unprotected
@@ -250,12 +262,12 @@ pub fn fig9(ctx: &mut BenchCtx) -> Result<()> {
     for (req, _fl) in &reqs {
         let (ori, ft) = ctx.time_pair(
             || {
-                black_box(execute_native(req, Impl::Tuned, &profile,
-                                         FtPolicy::None, None));
+                black_box(run_native(req, Impl::Tuned, &profile,
+                                     FtPolicy::None, None));
             },
             || {
-                black_box(execute_native(req, Impl::Tuned, &profile,
-                                         FtPolicy::Hybrid, None));
+                black_box(run_native(req, Impl::Tuned, &profile,
+                                     FtPolicy::Hybrid, None));
             },
         );
         let paper = match req.routine() {
@@ -307,8 +319,8 @@ fn injection_figure(ctx: &mut BenchCtx, profile: &Profile) -> Result<()> {
     const ERRORS: usize = 20;
     let mut table = Vec::new();
     for req in &reqs {
-        let oracle = execute_native(req, Impl::Naive, profile,
-                                    FtPolicy::None, None);
+        let oracle = run_native(req, Impl::Naive, profile,
+                                FtPolicy::None, None);
         // under injection: each timed call carries one planned fault
         let dim = req.dim();
         let mut strike = 0usize;
@@ -316,8 +328,8 @@ fn injection_figure(ctx: &mut BenchCtx, profile: &Profile) -> Result<()> {
         let mut all_correct = true;
         let (ori, ft) = ctx.time_pair(
             || {
-                black_box(execute_native(req, Impl::Tuned, profile,
-                                         FtPolicy::None, None));
+                black_box(run_native(req, Impl::Tuned, profile,
+                                     FtPolicy::None, None));
             },
             || {
                 let fault = Fault {
@@ -327,8 +339,8 @@ fn injection_figure(ctx: &mut BenchCtx, profile: &Profile) -> Result<()> {
                     delta: 1e4 + strike as f64,
                 };
                 strike = (strike + 1) % ERRORS;
-                let resp = execute_native(req, Impl::Tuned, profile,
-                                          FtPolicy::Hybrid, Some(fault));
+                let resp = run_native(req, Impl::Tuned, profile,
+                                      FtPolicy::Hybrid, Some(fault));
                 detected += resp.ft.errors_detected;
                 all_correct &= results_match(&resp.result, &oracle.result, 1e-7);
             },

@@ -13,7 +13,8 @@ use crate::bench::harness::{
 use crate::blas::batched::{self, GemmItem};
 use crate::blas::level3::GemmParams;
 use crate::blas::{level2, parallel, simd, stepwise};
-use crate::coordinator::request::BlasRequest;
+use crate::coordinator::registry::{ExecCtx, KernelRegistry};
+use crate::coordinator::request::{Backend, BlasRequest};
 use crate::ft::policy::FtPolicy;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
@@ -144,6 +145,32 @@ pub fn smoke(ctx: &mut BenchCtx) -> Result<()> {
     }
     print_rows(&prows);
     rows.extend(prows);
+
+    // ---- simulated GPU tiers: the warp-tiled peer-backend executors,
+    // enumerated from the registry like the native ladder so adding a
+    // tier adds its row. Each runs under the first policy its
+    // descriptor serves — the fused-ABFT tiers do not serve the
+    // unprotected policy at all, so their rows price the checksum
+    // frame in, exactly as selection would deliver them.
+    let mut grows = Vec::new();
+    for entry in KernelRegistry::global().for_routine("dgemm") {
+        if entry.backend != Backend::GpuSim || !entry.serves_dim(n) {
+            continue;
+        }
+        let ectx = ExecCtx {
+            req: &req,
+            profile: &ctx.profile,
+            policy: entry.policies[0],
+            faults: &[],
+            threads: 1,
+        };
+        grows.push(row(ctx, entry.name, 2.0 * (n * n * n) as f64,
+                       entry.summary, || {
+            black_box((entry.execute)(&ectx));
+        }));
+    }
+    print_rows(&grows);
+    rows.extend(grows);
 
     if let Some(path) = &ctx.out {
         let doc = harness::rows_json("smoke", ctx.profile.name, ctx.quick,

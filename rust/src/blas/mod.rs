@@ -21,6 +21,7 @@
 
 pub mod batched;
 pub mod blocked;
+pub mod gpu_sim;
 pub mod level1;
 pub mod level2;
 pub mod level3;

@@ -81,8 +81,9 @@ use crate::config::Profile;
 use crate::coordinator::autoscale::{ScaleDecision, ScalingConfig,
                                     ScalingController, TierSample};
 use crate::coordinator::metrics::MetricsSnapshot;
-use crate::coordinator::plan::{ExecutionPlan, PlanCache};
-use crate::coordinator::registry::KernelRegistry;
+use crate::coordinator::plan::{ExecutionPlan, PlanCache, Planner,
+                               SelectionPolicy};
+use crate::coordinator::registry::{self, KernelRegistry};
 use crate::coordinator::request::{BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{Admitted, Server, ServerHandle};
@@ -254,23 +255,13 @@ pub fn route_salted(key: u64, salts: &[u64], depths: &[usize]) -> usize {
     route_salted_with(key, salts, |s| depths[s])
 }
 
-/// Routing key of a request: planned jobs key by kernel id (one
-/// kernel's batches stay on one shard); unplanned (PJRT) jobs fall back
-/// to an FNV-1a hash of `(routine, dim)` — their batches group by shape
-/// anyway — tagged in bit 63 so the two key spaces cannot collide.
-pub fn route_key(plan: Option<&ExecutionPlan>, routine: &str, dim: usize)
-                 -> u64 {
-    match plan {
-        Some(p) => p.kernel_id.0 as u64,
-        None => {
-            let mut h = 0xcbf2_9ce4_8422_2325u64;
-            for b in routine.bytes().chain(dim.to_le_bytes()) {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x0100_0000_01b3);
-            }
-            h | (1 << 63)
-        }
-    }
+/// Routing key of a request: the planned kernel id. Every admitted job
+/// is planned — native, PJRT, and GPU-sim requests all resolve to
+/// registry-resident descriptors — so one kernel's traffic always lands
+/// on one shard and the shard-local kernel-keyed batching stays
+/// effective.
+pub fn route_key(plan: &ExecutionPlan) -> u64 {
+    plan.kernel_id.0 as u64
 }
 
 /// Bounded retry policy for [`ClusterHandle::submit_with_retry`]:
@@ -569,16 +560,42 @@ impl ClusterHandle {
     /// The shared admission front half: resolve the request's plan
     /// through the shared cache and derive its routing key. Both
     /// `submit` and `shard_for` go through here, so key derivation can
-    /// never drift between the two.
-    fn plan_key(&self, req: &BlasRequest) -> (Option<ExecutionPlan>, u64) {
+    /// never drift between the two. A per-request routing overlay (the
+    /// wire contract's `routing` object) merges into the cluster's base
+    /// selection; an unsatisfiable selection surfaces as
+    /// [`Error::NoCandidate`] carrying the planner's full per-descriptor
+    /// diagnostics.
+    fn plan_key(&self, req: &BlasRequest,
+                routing: Option<&SelectionPolicy>)
+                -> Result<(ExecutionPlan, u64), Error> {
         let policy = self.shared.policy;
-        let backend = self.shared.router.resolve(req, policy);
-        let plan = self
+        let base = self.shared.router.selection_for(req, policy);
+        let sel = match routing {
+            Some(overlay) => base.merged_with(overlay),
+            None => base,
+        };
+        let Some(plan) = self
             .shared
             .plans
-            .resolve(req.routine(), req.dim(), policy, backend);
-        let key = route_key(plan.as_ref(), req.routine(), req.dim());
-        (plan, key)
+            .resolve(req.routine(), req.dim(), policy, &sel)
+        else {
+            // re-run selection outside the cache for the exhaustive
+            // per-descriptor miss list; shard 0 = rejected at the door
+            let detail = Planner::new(self.shared.plans.profile())
+                .select_dims(req.routine(), req.dim(), &sel, policy)
+                .expect_err("cache said no plan exists")
+                .to_string();
+            return Err(Error::NoCandidate { shard: 0, detail });
+        };
+        Ok((plan, route_key(&plan)))
+    }
+
+    /// The registry's backend inventory (`ftblas.backends.v1`), with the
+    /// attached PJRT backend's live health probe folded in — the single
+    /// serializer behind both the gateway's `/backends` route and the
+    /// `ftblas backends` subcommand.
+    pub fn backends_json(&self) -> crate::util::json::Json {
+        registry::backends_json(self.shared.router.pjrt_health())
     }
 
     /// Admit a request: plan it once (shared cache), route it to its
@@ -613,16 +630,29 @@ impl ClusterHandle {
     /// cluster.shutdown();
     /// ```
     pub fn submit(&self, req: BlasRequest) -> Admitted {
-        self.submit_returning(req).map_err(|(e, _)| e)
+        self.submit_returning(req, None).map_err(|(e, _)| e)
+    }
+
+    /// [`ClusterHandle::submit`] with a per-request selection overlay:
+    /// the overlay's preferences take precedence over the cluster's base
+    /// selection, its allowlist intersects, and its denies/requirements
+    /// accumulate (see [`SelectionPolicy::merged_with`]).
+    pub fn submit_routed(&self, req: BlasRequest,
+                         routing: &SelectionPolicy) -> Admitted {
+        self.submit_returning(req, Some(routing)).map_err(|(e, _)| e)
     }
 
     /// [`ClusterHandle::submit`] that hands a rejected request back to
     /// the caller — the no-clone substrate under `submit_with_retry`.
-    fn submit_returning(&self, req: BlasRequest)
+    fn submit_returning(&self, req: BlasRequest,
+                        routing: Option<&SelectionPolicy>)
                         -> Result<std::sync::mpsc::Receiver<
                                       anyhow::Result<BlasResponse>>,
                                   (Error, BlasRequest)> {
-        let (plan, key) = self.plan_key(&req);
+        let (plan, key) = match self.plan_key(&req, routing) {
+            Ok(pk) => pk,
+            Err(e) => return Err((e, req)),
+        };
         let topo = self.shared.topology.read().unwrap();
         if topo.is_empty() {
             // the cluster was shut down while this handle survived
@@ -664,6 +694,18 @@ impl ClusterHandle {
     /// ```
     pub fn submit_with_retry(&self, req: BlasRequest, policy: &RetryPolicy)
                              -> (Admitted, u32) {
+        self.submit_with_retry_routed(req, policy, None)
+    }
+
+    /// [`ClusterHandle::submit_with_retry`] with an optional per-request
+    /// selection overlay — the gateway's submission path. Planning
+    /// failures ([`Error::NoCandidate`]) are not retried: the registry
+    /// is static, so a selection that admits no candidate now never
+    /// will.
+    pub fn submit_with_retry_routed(&self, req: BlasRequest,
+                                    policy: &RetryPolicy,
+                                    routing: Option<&SelectionPolicy>)
+                                    -> (Admitted, u32) {
         // per-call seed: concurrent callers sharing one policy must not
         // draw identical jitter, or their retries collide in lockstep
         let call = self.shared.retry_calls.fetch_add(1, Ordering::Relaxed);
@@ -673,7 +715,7 @@ impl ClusterHandle {
         // re-submits the same value — no clone per attempt
         let mut req = req;
         for attempt in 0..=policy.attempts {
-            match self.submit_returning(req) {
+            match self.submit_returning(req, routing) {
                 Err((Error::Overloaded { .. }, returned))
                     if attempt < policy.attempts =>
                 {
@@ -691,9 +733,12 @@ impl ClusterHandle {
     }
 
     /// The shard `submit` would route this request to right now
-    /// (panics on a shut-down cluster, which has no shards left).
+    /// (panics on a shut-down cluster, which has no shards left, and on
+    /// a request the cluster's base selection cannot plan).
     pub fn shard_for(&self, req: &BlasRequest) -> usize {
-        let (_, key) = self.plan_key(req);
+        let (_, key) = self
+            .plan_key(req, None)
+            .expect("shard_for called with an unplannable request");
         let topo = self.shared.topology.read().unwrap();
         route_core(key, topo.len(), |s| topo[s].salt,
                    |s| topo[s].handle.queue_depth())
@@ -1075,21 +1120,29 @@ mod tests {
         assert_eq!(route(key, &[3, 3]), 0, "equal depth falls to the index");
     }
 
-    /// Planned and unplanned key spaces cannot collide (bit-63 tag).
+    /// Routing keys follow the planned kernel id: native and peer plans
+    /// for the same routine land on (potentially) different shards, and
+    /// one kernel's traffic always shares one key.
     #[test]
-    fn route_keys_partition_planned_and_direct() {
+    fn route_keys_follow_the_planned_kernel_id() {
         let cache = PlanCache::new(Profile::skylake_sim());
+        let tuned = SelectionPolicy::for_backend(Backend::NativeTuned);
         let plan = cache
-            .resolve("dgemm", 64, FtPolicy::None, Backend::NativeTuned)
+            .resolve("dgemm", 64, FtPolicy::None, &tuned)
             .unwrap();
-        let planned = route_key(Some(&plan), "dgemm", 64);
-        let direct = route_key(None, "dgemm", 64);
-        assert_eq!(planned, plan.kernel_id.0 as u64);
-        assert_ne!(planned, direct);
-        assert_eq!(direct >> 63, 1);
-        // direct keys separate by shape and routine
-        assert_ne!(route_key(None, "dgemm", 64), route_key(None, "dgemm", 65));
-        assert_ne!(route_key(None, "dgemm", 64), route_key(None, "dsymm", 64));
+        assert_eq!(route_key(&plan), plan.kernel_id.0 as u64);
+        // a peer backend's plan keys by its own descriptor id
+        let pjrt = SelectionPolicy::for_backend(Backend::Pjrt);
+        let peer = cache
+            .resolve("dgemm", 64, FtPolicy::None, &pjrt)
+            .unwrap();
+        assert_eq!(peer.kernel.name, "dgemm/pjrt");
+        assert_ne!(route_key(&peer), route_key(&plan));
+        // the same selection re-plans to the same key
+        let again = cache
+            .resolve("dgemm", 64, FtPolicy::None, &tuned)
+            .unwrap();
+        assert_eq!(route_key(&again), route_key(&plan));
     }
 
     /// A single-shard cluster behaves like the plain server: requests

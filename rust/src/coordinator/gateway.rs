@@ -4,20 +4,25 @@
 //! status codes, everything below speaks typed [`BlasRequest`]s and
 //! typed admission errors, and the seam translates exactly once:
 //!
-//! - `POST /v1/blas` parses an `ftblas.request.v1` envelope (routine,
-//!   dims, variant, FT policy, deadline, idempotency key), builds the
-//!   seeded request, admits it through
-//!   [`ClusterHandle::submit_with_retry`], and maps the typed outcomes
-//!   onto the wire: [`Error::Overloaded`] → `429` with a `Retry-After`
-//!   derived from the [`RetryPolicy`], planner "no candidate" → `400`
-//!   with the diagnostic, a `dim` over the gateway's cap → `413`
+//! - `POST /v1/blas` parses an `ftblas.request.v1` or `v2` envelope
+//!   (routine, dims, variant, FT policy, deadline, idempotency key; v2
+//!   adds the optional `routing` selection overlay — backend pin,
+//!   allow/deny lists, capability requirements), builds the seeded
+//!   request, admits it through
+//!   [`ClusterHandle::submit_with_retry_routed`], and maps the typed
+//!   outcomes onto the wire: [`Error::Overloaded`] → `429` with a
+//!   `Retry-After` derived from the [`RetryPolicy`], the planner's
+//!   exhaustive [`NoCandidate`](crate::coordinator::plan::NoCandidate)
+//!   diagnostics → `400`, a `dim` over the gateway's cap → `413`
 //!   *before* any operand is generated (operand memory is O(dim^2)),
 //!   deadline exceeded → `504`, [`Error::ShuttingDown`] → `503`.
-//! - `GET /healthz` / `/metrics` / `/topology` / `/campaign` serve the
-//!   cluster's *live* operational state (the `ftblas.ledger.v1`
-//!   snapshot, the routing topology with slots/salts/generation, the
-//!   injection campaign's counters) — read-only views over state that
-//!   already existed; the gateway adds no shadow bookkeeping.
+//! - `GET /healthz` / `/metrics` / `/topology` / `/campaign` /
+//!   `/backends` serve the cluster's *live* operational state (the
+//!   `ftblas.ledger.v1` snapshot, the routing topology with
+//!   slots/salts/generation, the injection campaign's counters, the
+//!   `ftblas.backends.v1` capability inventory with per-kernel
+//!   selection counts) — read-only views over state that already
+//!   existed; the gateway adds no shadow bookkeeping.
 //!
 //! Shutdown is a graceful drain: stop accepting, serve every
 //! connection already admitted, then hand control back so the caller
@@ -44,19 +49,25 @@ use crate::config::Profile;
 use crate::coordinator::cluster::{ClusterHandle, RetryPolicy};
 use crate::coordinator::http::{read_request, Head, ReadError, Response};
 use crate::coordinator::metrics::LEDGER_SCHEMA;
-use crate::coordinator::plan::Planner;
+use crate::coordinator::plan::{CapRequirement, Planner, SelectionPolicy};
 use crate::coordinator::registry::KernelRegistry;
-use crate::coordinator::request::{BlasRequest, BlasResult};
+use crate::coordinator::request::{Backend, BlasRequest, BlasResult};
 use crate::coordinator::server::Error;
 use crate::ft::policy::FtPolicy;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
-/// Schema tag of the request envelope.
+/// Schema tag of the v1 request envelope.
 pub const REQUEST_SCHEMA: &str = "ftblas.request.v1";
+/// Schema tag of the v2 request envelope (v1 plus the optional
+/// `routing` selection overlay).
+pub const REQUEST_SCHEMA_V2: &str = "ftblas.request.v2";
 /// Schema tag of the success-response body.
 pub const RESPONSE_SCHEMA: &str = "ftblas.response.v1";
+/// Schema tag of `GET /backends` (the registry's capability
+/// inventory, shared with `ftblas backends --json`).
+pub const BACKENDS_SCHEMA: &str = "ftblas.backends.v1";
 /// Schema tag of `GET /healthz`.
 pub const HEALTH_SCHEMA: &str = "ftblas.health.v1";
 /// Schema tag of `GET /topology`.
@@ -71,8 +82,8 @@ pub const ROUTINES: &[&str] = &[
     "dtrsm", "dsyrk",
 ];
 
-/// A parsed `ftblas.request.v1` envelope. The wire carries intent —
-/// routine, principal dimension, generator seed — and the gateway
+/// A parsed `ftblas.request.v1`/`v2` envelope. The wire carries intent
+/// — routine, principal dimension, generator seed — and the gateway
 /// builds the operand data deterministically from it, so two identical
 /// envelopes always produce identical results (and checksums).
 #[derive(Clone, Debug, PartialEq)]
@@ -95,6 +106,12 @@ pub struct Envelope {
     pub deadline_ms: Option<u64>,
     /// Opaque client token, echoed verbatim in the response.
     pub idempotency_key: Option<String>,
+    /// Request-scoped selection overlay (v2 only), merged onto the
+    /// gateway's base selection with
+    /// [`SelectionPolicy::merged_with`] — the request's preferences
+    /// outrank the gateway's, its allowlist intersects, its denials and
+    /// requirements accumulate.
+    pub routing: Option<SelectionPolicy>,
 }
 
 impl Envelope {
@@ -108,13 +125,18 @@ impl Envelope {
             ft: None,
             deadline_ms: None,
             idempotency_key: None,
+            routing: None,
         }
     }
 
-    /// Serialize (the exact inverse of [`Envelope::from_json`]).
+    /// Serialize (the exact inverse of [`Envelope::from_json`]). An
+    /// envelope without `routing` serializes as a v1 document —
+    /// byte-identical to the pre-v2 wire format.
     pub fn to_json(&self) -> Json {
+        let schema = if self.routing.is_some() { REQUEST_SCHEMA_V2 }
+                     else { REQUEST_SCHEMA };
         let mut doc = Json::obj()
-            .field("schema", Json::Str(REQUEST_SCHEMA.into()))
+            .field("schema", Json::Str(schema.into()))
             .field("routine", Json::Str(self.routine.clone()))
             .field("dim", Json::Int(self.dim as u64))
             .field("seed", Json::Int(self.seed));
@@ -130,20 +152,26 @@ impl Envelope {
         if let Some(k) = &self.idempotency_key {
             doc = doc.field("idempotency_key", Json::Str(k.clone()));
         }
+        if let Some(sel) = &self.routing {
+            doc = doc.field("routing", routing_to_json(sel));
+        }
         doc
     }
 
     /// Decode an envelope from a parsed document. Unknown fields are
     /// ignored (forward compatibility); known fields with the wrong
-    /// type or value are errors, not defaults.
+    /// type or value are errors, not defaults. Both schema versions
+    /// parse here; `routing` is the one v2-only field.
     pub fn from_json(doc: &Json) -> std::result::Result<Envelope, String> {
-        match doc.get("schema").and_then(Json::as_str) {
-            Some(REQUEST_SCHEMA) => {}
+        let v2 = match doc.get("schema").and_then(Json::as_str) {
+            Some(REQUEST_SCHEMA) => false,
+            Some(REQUEST_SCHEMA_V2) => true,
             other => {
                 return Err(format!(
-                    "not an {REQUEST_SCHEMA} envelope (schema {other:?})"))
+                    "not an {REQUEST_SCHEMA} or {REQUEST_SCHEMA_V2} \
+                     envelope (schema {other:?})"))
             }
-        }
+        };
         let routine = doc
             .get("routine")
             .and_then(Json::as_str)
@@ -190,8 +218,16 @@ impl Envelope {
                 return Err("field `idempotency_key` wants a string".into())
             }
         };
+        let routing = match doc.get("routing") {
+            None => None,
+            Some(_) if !v2 => {
+                return Err(format!(
+                    "field `routing` requires schema {REQUEST_SCHEMA_V2}"))
+            }
+            Some(spec) => Some(routing_from_json(spec)?),
+        };
         Ok(Envelope { routine, dim, seed, variant, ft, deadline_ms,
-                      idempotency_key })
+                      idempotency_key, routing })
     }
 
     /// Parse an envelope straight from body text.
@@ -272,6 +308,95 @@ impl Envelope {
     }
 }
 
+/// Serialize a selection overlay as the v2 `routing` object. Empty
+/// lists are omitted; the `backend` pin shorthand is input-only sugar,
+/// so serialization always uses the explicit lists.
+fn routing_to_json(sel: &SelectionPolicy) -> Json {
+    let names = |list: &[Backend]| {
+        Json::Arr(list.iter().map(|b| Json::Str(b.name().into())).collect())
+    };
+    let mut doc = Json::obj();
+    if !sel.prefer.is_empty() {
+        doc = doc.field("prefer", names(&sel.prefer));
+    }
+    if !sel.allow.is_empty() {
+        doc = doc.field("allow", names(&sel.allow));
+    }
+    if !sel.deny.is_empty() {
+        doc = doc.field("deny", names(&sel.deny));
+    }
+    if !sel.require.is_empty() {
+        doc = doc.field("require", Json::Arr(
+            sel.require.iter().map(|r| Json::Str(r.describe())).collect()));
+    }
+    doc
+}
+
+/// Decode the v2 `routing` object: `backend` (a hard pin — sugar for
+/// prefer+allow of that one backend), `prefer`, `allow`, `deny`
+/// (backend-name arrays), and `require` (`cap=value` strings).
+fn routing_from_json(doc: &Json) -> std::result::Result<SelectionPolicy,
+                                                        String> {
+    let mut sel = SelectionPolicy::default();
+    if let Some(v) = doc.get("backend") {
+        let name = v.as_str()
+            .ok_or("field `routing.backend` wants a string")?;
+        let be = Backend::by_name(name).ok_or_else(|| format!(
+            "unknown backend `{name}` (want naive|blocked|tuned|simd|\
+             pjrt|gpu-sim)"))?;
+        sel = SelectionPolicy::pinned(be);
+    }
+    let backends = |field: &str| -> std::result::Result<Vec<Backend>,
+                                                        String> {
+        match doc.get(field) {
+            None => Ok(Vec::new()),
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|v| {
+                    let name = v.as_str().ok_or_else(|| format!(
+                        "field `routing.{field}` wants backend-name \
+                         strings"))?;
+                    Backend::by_name(name).ok_or_else(|| format!(
+                        "unknown backend `{name}` in `routing.{field}`"))
+                })
+                .collect(),
+            Some(_) => Err(format!(
+                "field `routing.{field}` wants an array")),
+        }
+    };
+    for be in backends("prefer")? {
+        if !sel.prefer.contains(&be) {
+            sel.prefer.push(be);
+        }
+    }
+    for be in backends("allow")? {
+        if !sel.allow.contains(&be) {
+            sel.allow.push(be);
+        }
+    }
+    for be in backends("deny")? {
+        if !sel.deny.contains(&be) {
+            sel.deny.push(be);
+        }
+    }
+    match doc.get("require") {
+        None => {}
+        Some(Json::Arr(items)) => {
+            for v in items {
+                let spec = v.as_str().ok_or(
+                    "field `routing.require` wants `cap=value` strings")?;
+                let (key, value) = spec.split_once('=').ok_or_else(
+                    || format!("requirement `{spec}` wants `cap=value`"))?;
+                sel.require.push(CapRequirement::parse(key, value)?);
+            }
+        }
+        Some(_) => {
+            return Err("field `routing.require` wants an array".into())
+        }
+    }
+    Ok(sel)
+}
+
 /// Deterministic scalar digest of a result — the reproducibility
 /// anchor of the 200 response (any holder of the envelope can recompute
 /// it from an identical execution).
@@ -291,9 +416,11 @@ pub struct GatewayConfig {
     /// Retry policy wrapped around admission (`Overloaded` sheds ride
     /// out with jittered backoff before the gateway answers `429`).
     pub retry: RetryPolicy,
-    /// Preferred kernel variant for the planner preflight when the
-    /// envelope does not pin one (match the cluster router's backend).
-    pub prefer: Impl,
+    /// The gateway's base selection policy — backend preferences,
+    /// allow/deny lists, and capability requirements applied to every
+    /// request (match the cluster router's selection). A v2 envelope's
+    /// `routing` object overlays onto this per request.
+    pub selection: SelectionPolicy,
     /// Ceiling on any request's end-to-end deadline (envelopes may ask
     /// for less, never more).
     pub max_deadline: Duration,
@@ -310,7 +437,7 @@ impl Default for GatewayConfig {
         GatewayConfig {
             workers: 4,
             retry: RetryPolicy::default(),
-            prefer: Impl::Tuned,
+            selection: SelectionPolicy::for_backend(Backend::NativeTuned),
             max_deadline: Duration::from_secs(30),
             // three 4096^2 f64 matrices ~ 400 MB, the default worst case
             max_dim: 4096,
@@ -537,17 +664,19 @@ fn route(shared: &Shared, head: &Head, body: &[u8]) -> Response {
         ("GET", "/metrics") => metrics(shared),
         ("GET", "/topology") => topology(shared),
         ("GET", "/campaign") => campaign(shared),
+        ("GET", "/backends") => backends(shared),
         (_, "/v1/blas") => {
             error_response(405, "POST only").header("allow", "POST")
         }
-        (_, "/healthz" | "/metrics" | "/topology" | "/campaign") => {
+        (_, "/healthz" | "/metrics" | "/topology" | "/campaign"
+            | "/backends") => {
             error_response(405, "GET only").header("allow", "GET")
         }
         (_, target) => Response::json(404, &Json::obj()
             .field("error", Json::Str(format!("no route `{target}`")))
             .field("routes", Json::Arr(
                 ["/v1/blas", "/healthz", "/metrics", "/topology",
-                 "/campaign"]
+                 "/campaign", "/backends"]
                     .iter()
                     .map(|r| Json::Str((*r).into()))
                     .collect()))),
@@ -625,8 +754,8 @@ fn submit(shared: &Shared, body: &[u8]) -> Response {
         .unwrap_or(shared.cfg.max_deadline)
         .min(shared.cfg.max_deadline);
     let started = std::time::Instant::now();
-    let (admitted, retries) =
-        shared.cluster.submit_with_retry(req, &shared.cfg.retry);
+    let (admitted, retries) = shared.cluster.submit_with_retry_routed(
+        req, &shared.cfg.retry, env.routing.as_ref());
     let rx = match admitted {
         Ok(rx) => rx,
         Err(e @ Error::Overloaded { .. }) => {
@@ -635,6 +764,12 @@ fn submit(shared: &Shared, body: &[u8]) -> Response {
                 .field("retries", Json::Int(retries as u64))
                 .field("retry_after_ms", Json::Int(ms)))
                 .header("retry-after", &secs.to_string());
+        }
+        // preflight runs the same selection, so this arm only fires
+        // when the cluster's base selection is stricter than the
+        // gateway's — still a client-addressable 400
+        Err(e @ Error::NoCandidate { .. }) => {
+            return Response::json(400, &e.to_json());
         }
         Err(e @ Error::ShuttingDown { .. }) => {
             return Response::json(503, &e.to_json());
@@ -688,10 +823,11 @@ fn submit(shared: &Shared, body: &[u8]) -> Response {
 }
 
 /// Planner preflight: refuse up front what execution could never
-/// serve, with the planner's own diagnostic. A pinned variant is
-/// strict — the planner's fallback ladder would silently substitute a
-/// different kernel, which is exactly what a client pinning a variant
-/// does not want.
+/// serve, with the planner's own exhaustive diagnostics (every
+/// considered descriptor and the capability it missed). A pinned v1
+/// `variant` stays a strict admission-time assertion — the selection
+/// ladder would silently substitute a different kernel, which is
+/// exactly what a client pinning a variant does not want.
 fn preflight(shared: &Shared, env: &Envelope)
              -> std::result::Result<(), String> {
     let policy = shared.policy;
@@ -710,12 +846,14 @@ fn preflight(shared: &Shared, env: &Envelope)
         }
         return Ok(());
     }
+    let sel = match &env.routing {
+        Some(overlay) => shared.cfg.selection.merged_with(overlay),
+        None => shared.cfg.selection.clone(),
+    };
     Planner::new(&shared.profile)
-        .plan_dims(&env.routine, env.dim, shared.cfg.prefer, policy)
+        .select_dims(&env.routine, env.dim, &sel, policy)
         .map(|_| ())
-        .ok_or_else(|| format!(
-            "no candidate kernel: no registered kernel serves routine \
-             `{}` under policy `{}`", env.routine, policy.name()))
+        .map_err(|e| e.to_string())
 }
 
 fn healthz(shared: &Shared) -> Response {
@@ -789,6 +927,16 @@ fn campaign(shared: &Shared) -> Response {
     Response::json(200, &doc)
 }
 
+fn backends(shared: &Shared) -> Response {
+    // the exact ftblas.backends.v1 inventory — the same serializer the
+    // `ftblas backends` subcommand prints, with live selection counts
+    // and the attached PJRT backend's health probe
+    let doc = shared.cluster.backends_json();
+    debug_assert_eq!(doc.get("schema").and_then(Json::as_str),
+                     Some(BACKENDS_SCHEMA));
+    Response::json(200, &doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -803,8 +951,11 @@ mod tests {
             ft: Some(FtPolicy::Hybrid),
             deadline_ms: Some(2500),
             idempotency_key: Some("req-\"quoted\"/π".into()),
+            routing: None,
         };
         let text = env.to_json().render();
+        assert!(text.contains(REQUEST_SCHEMA),
+                "routing-free envelopes stay on the v1 wire format");
         assert_eq!(Envelope::parse(&text).unwrap(), env);
         // minimal envelope: optional fields default
         let min = Envelope::new("ddot", 64);
@@ -812,10 +963,31 @@ mod tests {
     }
 
     #[test]
+    fn v2_routing_round_trips_and_desugars_the_pin() {
+        let mut env = Envelope::new("dgemm", 48);
+        env.routing = Some(SelectionPolicy {
+            prefer: vec![Backend::GpuSim],
+            allow: vec![Backend::GpuSim, Backend::NativeTuned],
+            deny: vec![Backend::Pjrt],
+            require: vec![CapRequirement::Threaded(false)],
+        });
+        let text = env.to_json().render();
+        assert!(text.contains(REQUEST_SCHEMA_V2),
+                "an envelope carrying routing serializes as v2");
+        assert_eq!(Envelope::parse(&text).unwrap(), env);
+        // the `backend` shorthand pins: prefer + allow of that backend
+        let pinned = Envelope::parse(
+            r#"{"schema":"ftblas.request.v2","routine":"dgemm","dim":8,
+                "routing":{"backend":"gpu-sim"}}"#).unwrap();
+        assert_eq!(pinned.routing.unwrap(),
+                   SelectionPolicy::pinned(Backend::GpuSim));
+    }
+
+    #[test]
     fn envelope_rejects_bad_documents() {
         for (body, needle) in [
             ("{}", "schema"),
-            (r#"{"schema":"ftblas.request.v2","routine":"ddot","dim":4}"#,
+            (r#"{"schema":"ftblas.request.v3","routine":"ddot","dim":4}"#,
              "schema"),
             (r#"{"schema":"ftblas.request.v1","dim":4}"#, "routine"),
             (r#"{"schema":"ftblas.request.v1","routine":"ddot"}"#, "dim"),
@@ -825,6 +997,16 @@ mod tests {
                  "variant":"mkl"}"#, "variant"),
             (r#"{"schema":"ftblas.request.v1","routine":"ddot","dim":4,
                  "deadline_ms":0}"#, "deadline_ms"),
+            (r#"{"schema":"ftblas.request.v1","routine":"ddot","dim":4,
+                 "routing":{"backend":"pjrt"}}"#, "routing"),
+            (r#"{"schema":"ftblas.request.v2","routine":"ddot","dim":4,
+                 "routing":{"backend":"mkl"}}"#, "backend"),
+            (r#"{"schema":"ftblas.request.v2","routine":"ddot","dim":4,
+                 "routing":{"deny":["tpu"]}}"#, "deny"),
+            (r#"{"schema":"ftblas.request.v2","routine":"ddot","dim":4,
+                 "routing":{"require":["precision"]}}"#, "cap=value"),
+            (r#"{"schema":"ftblas.request.v2","routine":"ddot","dim":4,
+                 "routing":{"require":["scheme=tmr"]}}"#, "scheme"),
             ("not json at all", "JSON"),
         ] {
             let err = Envelope::parse(body).unwrap_err();

@@ -13,11 +13,13 @@
 //!   clients ──> submit = ADMISSION ──> ROUTE ────> batcher = SCHEDULE ──> workers = EXECUTE
 //!               │  plan cache            │  rendezvous   │  sub-queues keyed   │
 //!               │  (routine×dim×         │  hash on      │  by planned kernel  ├─> execute_planned
-//!               │   policy×backend       │  kernel id;   │  id; thread-budget  │   (pre-resolved
-//!               │   → ExecutionPlan,     │  queue-depth  │  ledger defers MT   │    native kernel,
-//!               │   memoized); depth     │  tiebreak     │  batches that would │    no lookup)
-//!               │   watermark sheds      │  over the     │  oversubscribe,     └─> PJRT executor
-//!               │   `Overloaded`         │  shards       │  serial flows past      (unplanned jobs)
+//!               │   policy×selection     │  kernel id;   │  id; thread-budget  │   (pre-resolved
+//!               │   → ExecutionPlan,     │  queue-depth  │  ledger defers MT   │    kernel: native,
+//!               │   memoized); depth     │  tiebreak     │  batches that would │    GPU-sim, or the
+//!               │   watermark sheds      │  over the     │  oversubscribe,     │    PJRT peer —
+//!               │   `Overloaded`;        │  shards       │  serial flows past  │    no lookup)
+//!               │   `NoCandidate` =
+//!               │   exhaustive planner diagnostics
 //!               └─< responses (+ FtReport, executed-kernel name, per-kernel
 //!                   metrics ledger: exec/e2e/queue-wait, SLO burns, plan-cache
 //!                   hits/misses, deferrals, sheds, FT counters — per shard,
@@ -26,9 +28,14 @@
 //!
 //! - **Admission** ([`cluster::ClusterHandle::submit`], or
 //!   [`server::ServerHandle::submit`] for a standalone shard): the
-//!   request is resolved once through the [`plan::PlanCache`]; its
-//!   batch key is the planned kernel's id, so shapes that run the same
-//!   registered kernel share a batch window. A shard at its
+//!   request is resolved once through the [`plan::PlanCache`] under a
+//!   [`plan::SelectionPolicy`] — ordered backend preferences plus
+//!   allow/deny lists and capability requirements, with any per-request
+//!   `routing` overlay merged in; its batch key is the planned kernel's
+//!   id, so shapes that run the same registered kernel share a batch
+//!   window. A selection no descriptor satisfies is rejected at the
+//!   door as [`server::Error::NoCandidate`], carrying every considered
+//!   descriptor and the capability each missed; a shard at its
 //!   `admission_depth` watermark sheds the submission with a typed
 //!   [`server::Error::Overloaded`] instead of queueing unboundedly.
 //! - **Route** ([`cluster`]): deterministic rendezvous hashing on the
@@ -41,10 +48,10 @@
 //!   whole thread grant is debited while in flight) without blocking
 //!   serial traffic behind it.
 //! - **Execute** ([`router::Router::execute_planned`]): workers run the
-//!   pre-resolved plan; the per-request planner lookup survives only in
-//!   the [`router::Router::execute`] compatibility shim used by the
-//!   CLI, benches, and examples — itself a thin delegate to the planned
-//!   path.
+//!   pre-resolved plan — native kernels and GPU-sim descriptors execute
+//!   in-process, while a plan carrying the PJRT peer backend is handed
+//!   to the attached [`pjrt_backend::PjrtBackend`]. There is no
+//!   unplanned dispatch path: the planned API *is* the whole API.
 //!
 //! The tier is **elastic**: an [`autoscale::ScalingController`] samples
 //! queue depth, shed rate, and SLO burn rate over a sliding window and
@@ -59,19 +66,23 @@
 //! `docs/ARCHITECTURE.md` narrates the whole pipeline, including the
 //! scaling state machine.
 //!
-//! The PJRT engine is not `Send`, so exactly one executor thread owns it
-//! and serves artifact calls over channels ([`executor`]); PJRT jobs are
-//! admitted unplanned (the executor plans per-artifact), batch by
-//! `(routine, dim)`, and route by a hash of the same key.
+//! The PJRT engine is a registry-resident **peer backend**: its
+//! descriptors sit in the same registry as the native kernels, so PJRT
+//! jobs are planned, batched, and routed by kernel id like everything
+//! else. The engine itself is not `Send`, so exactly one executor
+//! thread owns it and serves artifact calls over channels
+//! ([`executor`]).
 //!
 //! Above the whole pipeline sits the **network serving plane**: the
 //! dependency-free HTTP/1.1 parser in [`http`] and the [`gateway`] that
 //! binds a `TcpListener` in front of a cluster, decodes the
-//! `ftblas.request.v1` envelope, submits through
-//! [`cluster::ClusterHandle::submit_with_retry`], and maps the typed
-//! admission errors onto wire status codes (`429` + `Retry-After` for
-//! `Overloaded`, `400` for plan failures, `504` past the deadline) —
-//! the transport/execution seam `docs/PROTOCOL.md` specifies.
+//! `ftblas.request.v1`/`v2` envelopes (v2 adds the optional `routing`
+//! selection overlay), submits through
+//! [`cluster::ClusterHandle::submit_with_retry_routed`], and maps the
+//! typed admission errors onto wire status codes (`429` + `Retry-After`
+//! for `Overloaded`, `400` for plan failures and `NoCandidate`
+//! selections, `504` past the deadline) — the transport/execution seam
+//! `docs/PROTOCOL.md` specifies.
 
 pub mod autoscale;
 pub mod batcher;
@@ -94,7 +105,8 @@ pub use cluster::{Cluster, ClusterConfig, ClusterHandle, RetryPolicy,
                   ShardSlot, TopologySnapshot};
 pub use gateway::{Envelope, Gateway, GatewayConfig, GatewayStats};
 pub use metrics::{KernelStats, MetricsSnapshot};
-pub use plan::{ExecutionPlan, PlanCache, Planner};
+pub use plan::{CapRequirement, ExecutionPlan, NoCandidate, PlanCache,
+               Planner, SelectionPolicy};
 pub use registry::{KernelDescriptor, KernelId, KernelRegistry};
 pub use request::{BlasRequest, BlasResponse, Backend};
 pub use server::{Error, Server, ServerHandle};

@@ -80,6 +80,17 @@ impl PjrtBackend {
         self.manifest.find_n(req.routine(), variant, req.dim()).is_some()
     }
 
+    /// Health probe for the `/backends` report: the backend is healthy
+    /// exactly when its manifest resolved at least one artifact spec.
+    pub fn health(&self) -> String {
+        let specs = self.manifest.specs.len();
+        if specs == 0 {
+            "unavailable: manifest lists no artifact specs".to_string()
+        } else {
+            format!("healthy: {specs} artifact specs loaded")
+        }
+    }
+
     /// Pre-compile every artifact a request mix will touch.
     pub fn warmup_all(&self) -> Result<()> {
         for s in &self.manifest.specs {

@@ -2,24 +2,33 @@
 //! registered kernel that should run it.
 //!
 //! The [`Planner`] is the single place routing decisions live. Given a
-//! [`BlasRequest`], a preferred [`Impl`] variant, and an [`FtPolicy`],
-//! it filters the [`KernelRegistry`] by capability and size, decides the
-//! thread grant, and returns an [`ExecutionPlan`] that the router (and
-//! through it the server's worker pool and the bench harnesses) execute
-//! uniformly.
+//! [`BlasRequest`], a [`SelectionPolicy`] (ordered backend preferences
+//! plus allowlist/denylist/capability constraints), and an
+//! [`FtPolicy`], it filters the [`KernelRegistry`] by capability and
+//! size, decides the thread grant, and returns an [`ExecutionPlan`]
+//! that the router (and through it the server's worker pool and the
+//! bench harnesses) execute uniformly. When nothing qualifies,
+//! [`Planner::select_dims`] returns an exhaustive [`NoCandidate`]
+//! diagnostic — every descriptor considered and the specific
+//! capability each one missed — which the gateway surfaces through its
+//! 400 preflight mapping.
 //!
 //! The [`PlanCache`] memoizes resolutions by `(routine, dim, policy,
-//! backend)` so the server plans each distinct shape **once at admission
-//! time**: the hot serving path never touches the planner again, and the
-//! cache's hit/miss counters flow into the metrics ledger.
+//! selection)` so the server plans each distinct shape **once at
+//! admission time**: the hot serving path never touches the planner
+//! again, and the cache's hit/miss counters flow into the metrics
+//! ledger.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::blas::Impl;
 use crate::config::Profile;
-use crate::coordinator::registry::{KernelDescriptor, KernelId, KernelRegistry};
+use crate::coordinator::registry::{
+    self, Capabilities, KernelDescriptor, KernelId, KernelRegistry, Scheme,
+};
 use crate::coordinator::request::{Backend, BlasRequest};
 use crate::ft::policy::FtPolicy;
 
@@ -50,6 +59,248 @@ impl ExecutionPlan {
     }
 }
 
+impl fmt::Debug for ExecutionPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ExecutionPlan")
+            .field("kernel", &self.kernel.name)
+            .field("kernel_id", &self.kernel_id)
+            .field("threads", &self.threads)
+            .field("policy", &self.policy.name())
+            .finish()
+    }
+}
+
+/// One capability a caller can require of every candidate (the CLI's
+/// `--require cap=value` and the wire contract's `routing.require`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum CapRequirement {
+    /// Element precision (`precision=f64`).
+    Precision(String),
+    /// Exact protection scheme (`scheme=abft-fused`).
+    Scheme(Scheme),
+    /// Thread shape (`threaded=true|false`).
+    Threaded(bool),
+    /// Batch-fusion capability (`batched=true|false`).
+    Batched(bool),
+    /// A required CPU feature (`feature=avx2`).
+    Feature(String),
+}
+
+impl CapRequirement {
+    /// Parse one `cap=value` pair.
+    pub fn parse(key: &str, value: &str) -> Result<CapRequirement, String> {
+        let boolean = |v: &str| match v {
+            "true" => Ok(true),
+            "false" => Ok(false),
+            other => Err(format!("{key}: expected true|false, got {other:?}")),
+        };
+        match key {
+            "precision" => Ok(CapRequirement::Precision(value.to_string())),
+            "scheme" => Scheme::by_name(value)
+                .map(CapRequirement::Scheme)
+                .ok_or_else(|| format!("unknown scheme {value:?}")),
+            "threaded" => boolean(value).map(CapRequirement::Threaded),
+            "batched" => boolean(value).map(CapRequirement::Batched),
+            "feature" => Ok(CapRequirement::Feature(value.to_string())),
+            other => Err(format!(
+                "unknown capability {other:?} (expected precision, scheme, \
+                 threaded, batched, or feature)"
+            )),
+        }
+    }
+
+    /// Does `caps` satisfy this requirement?
+    pub fn satisfied_by(&self, caps: &Capabilities) -> bool {
+        match self {
+            CapRequirement::Precision(p) => caps.precision == p,
+            CapRequirement::Scheme(s) => caps.scheme == *s,
+            CapRequirement::Threaded(t) => caps.threaded == *t,
+            CapRequirement::Batched(b) => (caps.batch_dim_ceiling > 0) == *b,
+            CapRequirement::Feature(f) => {
+                caps.cpu_features.iter().any(|have| have == f)
+            }
+        }
+    }
+
+    /// The `cap=value` spelling (diagnostics and `/backends` echoes).
+    pub fn describe(&self) -> String {
+        match self {
+            CapRequirement::Precision(p) => format!("precision={p}"),
+            CapRequirement::Scheme(s) => format!("scheme={}", s.name()),
+            CapRequirement::Threaded(t) => format!("threaded={t}"),
+            CapRequirement::Batched(b) => format!("batched={b}"),
+            CapRequirement::Feature(f) => format!("feature={f}"),
+        }
+    }
+}
+
+/// How the planner chooses among capability-qualified candidates:
+/// ordered backend preferences plus hard constraints. The default
+/// (everything empty) admits every registered kernel and falls back to
+/// registration order — exactly the pre-redesign "any serial kernel
+/// serving the policy" rung.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct SelectionPolicy {
+    /// Ordered backend preference; earlier entries win.
+    pub prefer: Vec<Backend>,
+    /// Allowlist — when non-empty, only these backends are candidates.
+    pub allow: Vec<Backend>,
+    /// Denylist — always excluded, even when preferred or allowed.
+    pub deny: Vec<Backend>,
+    /// Capability requirements every candidate must satisfy.
+    pub require: Vec<CapRequirement>,
+}
+
+impl SelectionPolicy {
+    /// Prefer `backend`, with the registry-order fallback intact. The
+    /// non-native peers fall back to the tuned native tier — the same
+    /// fallback the pre-redesign router hard-coded for PJRT.
+    pub fn for_backend(backend: Backend) -> SelectionPolicy {
+        let prefer = if backend.is_native() {
+            vec![backend]
+        } else {
+            vec![backend, Backend::NativeTuned]
+        };
+        SelectionPolicy { prefer, ..SelectionPolicy::default() }
+    }
+
+    /// The `--variant` shorthand: prefer the variant's native backend.
+    pub fn for_variant(variant: Impl) -> SelectionPolicy {
+        SelectionPolicy::for_backend(Backend::for_variant(variant))
+    }
+
+    /// A hard pin: `backend` is both the only allowed backend and the
+    /// only preference — selection fails rather than falling back.
+    pub fn pinned(backend: Backend) -> SelectionPolicy {
+        SelectionPolicy {
+            prefer: vec![backend],
+            allow: vec![backend],
+            ..SelectionPolicy::default()
+        }
+    }
+
+    /// Overlay request-scoped `routing` onto this (server-side) policy.
+    /// Precedence: the request's preferences outrank the server's; the
+    /// allowlist intersects when both sides set one (request-only or
+    /// server-only lists pass through); denials and requirements union
+    /// — a server-side denial can never be lifted by a request.
+    pub fn merged_with(&self, routing: &SelectionPolicy) -> SelectionPolicy {
+        let mut prefer = routing.prefer.clone();
+        for be in &self.prefer {
+            if !prefer.contains(be) {
+                prefer.push(*be);
+            }
+        }
+        let allow = match (routing.allow.is_empty(), self.allow.is_empty()) {
+            (true, _) => self.allow.clone(),
+            (false, true) => routing.allow.clone(),
+            (false, false) => routing
+                .allow
+                .iter()
+                .copied()
+                .filter(|b| self.allow.contains(b))
+                .collect(),
+        };
+        let mut deny = self.deny.clone();
+        for be in &routing.deny {
+            if !deny.contains(be) {
+                deny.push(*be);
+            }
+        }
+        let mut require = self.require.clone();
+        for r in &routing.require {
+            if !require.contains(r) {
+                require.push(r.clone());
+            }
+        }
+        SelectionPolicy { prefer, allow, deny, require }
+    }
+
+    /// Exclude `backend` (idempotent) — the router folds per-request
+    /// backend availability in through this.
+    pub fn with_denied(mut self, backend: Backend) -> SelectionPolicy {
+        if !self.deny.contains(&backend) {
+            self.deny.push(backend);
+        }
+        self
+    }
+
+    /// Why `k` is not a candidate for `(dim, policy)` under this
+    /// selection — empty means it qualifies. Each entry names the
+    /// specific capability or constraint missed, for the [`NoCandidate`]
+    /// diagnostics.
+    pub fn miss_reasons(&self, k: &KernelDescriptor, dim: usize,
+                        policy: FtPolicy) -> Vec<String> {
+        let mut missing = Vec::new();
+        if !k.supports(policy) {
+            let serves: Vec<&str> =
+                k.policies.iter().map(|p| p.name()).collect();
+            missing.push(format!("policy {} not served (serves: {})",
+                                 policy.name(), serves.join(", ")));
+        }
+        if !k.serves_dim(dim) {
+            missing.push(format!("dim {dim} above its max_dim {}", k.max_dim));
+        }
+        if !self.allow.is_empty() && !self.allow.contains(&k.backend) {
+            missing.push(format!("backend {} not in the allowlist",
+                                 k.backend.name()));
+        }
+        if self.deny.contains(&k.backend) {
+            missing.push(format!("backend {} is denied", k.backend.name()));
+        }
+        let caps = k.capabilities();
+        for r in &self.require {
+            if !r.satisfied_by(&caps) {
+                missing.push(format!("lacks required {}", r.describe()));
+            }
+        }
+        missing
+    }
+}
+
+/// One descriptor that was considered and rejected, with the exact
+/// capabilities it missed.
+#[derive(Clone, Debug)]
+pub struct CandidateMiss {
+    /// Registry name of the descriptor.
+    pub name: &'static str,
+    /// Its backend.
+    pub backend: Backend,
+    /// The constraints it failed, one message each.
+    pub missing: Vec<String>,
+}
+
+/// SPEAR-style exhaustive no-candidate diagnostic: what was asked for
+/// and why every considered descriptor was rejected.
+#[derive(Clone, Debug)]
+pub struct NoCandidate {
+    /// Routine requested.
+    pub routine: String,
+    /// Principal dimension requested.
+    pub dim: usize,
+    /// Protection policy requested.
+    pub policy: FtPolicy,
+    /// How many descriptors were considered.
+    pub considered: usize,
+    /// Every rejection, in registration order.
+    pub misses: Vec<CandidateMiss>,
+}
+
+impl fmt::Display for NoCandidate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "no candidate kernel for {} dim {} policy {} ({} considered)",
+            self.routine, self.dim, self.policy.name(), self.considered
+        )?;
+        for m in &self.misses {
+            write!(f, "; {} [{}]: {}", m.name, m.backend.name(),
+                   m.missing.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
 /// Resolves requests against the kernel registry for one profile.
 pub struct Planner<'p> {
     profile: &'p Profile,
@@ -62,38 +313,62 @@ impl<'p> Planner<'p> {
         Planner { profile, registry: KernelRegistry::global() }
     }
 
-    /// Plan a request. Selection order:
-    ///
-    /// 1. a threaded kernel of the requested variant, when the profile
-    ///    grants more than one thread and the request clears the
-    ///    kernel's MR-aligned size floor;
-    /// 2. a serial kernel of the requested variant;
-    /// 3. any serial kernel serving the policy — protected kernels
-    ///    register under the tuned variant, so a protected request
-    ///    carrying a naive/blocked variant preference still gets
-    ///    protection (the pre-registry router behaved the same way).
-    ///
-    /// Returns `None` only if no registered kernel serves the routine
-    /// under the policy; the registry's totality test guarantees this
-    /// cannot happen for shipped routines.
-    pub fn plan(&self, req: &BlasRequest, variant: Impl, policy: FtPolicy)
-                -> Option<ExecutionPlan> {
-        self.plan_dims(req.routine(), req.dim(), variant, policy)
+    /// Plan a request under a selection policy; `None` when no
+    /// candidate qualifies (see [`Planner::select_dims`] for the
+    /// diagnostic-carrying form).
+    pub fn plan(&self, req: &BlasRequest, sel: &SelectionPolicy,
+                policy: FtPolicy) -> Option<ExecutionPlan> {
+        self.plan_dims(req.routine(), req.dim(), sel, policy)
     }
 
     /// Shape-only planning — the admission path's entry: the plan cache
     /// memoizes these resolutions, and since the server batches by the
     /// resulting kernel id a whole batch shares one plan.
-    pub fn plan_dims(&self, routine: &str, dim: usize, variant: Impl,
+    pub fn plan_dims(&self, routine: &str, dim: usize, sel: &SelectionPolicy,
                      policy: FtPolicy) -> Option<ExecutionPlan> {
+        self.select_dims(routine, dim, sel, policy).ok()
+    }
+
+    /// Select a kernel for `(routine, dim, policy)` under `sel`.
+    ///
+    /// Candidates are the registered kernels for the routine that serve
+    /// the policy, fit the dimension cap, and pass the selection's
+    /// allow/deny/requirement constraints. Selection order:
+    ///
+    /// 1. per preferred backend, in preference order: a threaded
+    ///    candidate of that backend when the profile grants more than
+    ///    one thread and the request clears the kernel's MR-aligned
+    ///    floor, else a serial candidate of that backend;
+    /// 2. any serial candidate, in registration order (protected
+    ///    kernels register under the tuned backend, so a protected
+    ///    request preferring naive/blocked still gets protection —
+    ///    the pre-redesign rung 3);
+    /// 3. any threaded candidate above its floor, when the constraints
+    ///    exclude every serial one.
+    ///
+    /// On failure the returned [`NoCandidate`] lists every descriptor
+    /// considered and the specific capability each missed.
+    pub fn select_dims(&self, routine: &str, dim: usize,
+                       sel: &SelectionPolicy, policy: FtPolicy)
+                       -> Result<ExecutionPlan, NoCandidate> {
         let mr = self.profile.gemm.mr;
         let threads = self.profile.threads.max(1);
-        let supported: Vec<&'static KernelDescriptor> = self
-            .registry
-            .for_routine(routine)
-            .into_iter()
-            .filter(|k| k.supports(policy))
-            .collect();
+        let mut candidates: Vec<&'static KernelDescriptor> = Vec::new();
+        let mut misses: Vec<CandidateMiss> = Vec::new();
+        let mut considered = 0usize;
+        for k in self.registry.for_routine(routine) {
+            considered += 1;
+            let missing = sel.miss_reasons(k, dim, policy);
+            if missing.is_empty() {
+                candidates.push(k);
+            } else {
+                misses.push(CandidateMiss {
+                    name: k.name,
+                    backend: k.backend,
+                    missing,
+                });
+            }
+        }
         let resolved = |k: &'static KernelDescriptor, threads: usize| {
             let kernel_id = self
                 .registry
@@ -101,41 +376,67 @@ impl<'p> Planner<'p> {
                 .expect("planner selected a descriptor outside the registry");
             ExecutionPlan { kernel: k, kernel_id, threads, policy }
         };
-        if threads > 1 {
-            if let Some(k) = supported.iter().copied().find(|k| {
-                k.threaded && k.variant == variant && k.admits_dim(dim, mr)
-            }) {
-                return Some(resolved(k, threads));
+        for &be in &sel.prefer {
+            if threads > 1 {
+                if let Some(k) = candidates.iter().copied().find(|k| {
+                    k.threaded && k.backend == be && k.admits_dim(dim, mr)
+                }) {
+                    return Ok(resolved(k, threads));
+                }
+            }
+            if let Some(k) = candidates
+                .iter()
+                .copied()
+                .find(|k| !k.threaded && k.backend == be)
+            {
+                return Ok(resolved(k, 1));
             }
         }
-        if let Some(k) = supported
-            .iter()
-            .copied()
-            .find(|k| !k.threaded && k.variant == variant)
-        {
-            return Some(resolved(k, 1));
+        if let Some(k) = candidates.iter().copied().find(|k| !k.threaded) {
+            return Ok(resolved(k, 1));
         }
-        supported
-            .iter()
-            .copied()
-            .find(|k| !k.threaded)
-            .map(|k| resolved(k, 1))
+        if threads > 1 {
+            if let Some(k) = candidates
+                .iter()
+                .copied()
+                .find(|k| k.threaded && k.admits_dim(dim, mr))
+            {
+                return Ok(resolved(k, threads));
+            }
+        }
+        // qualified candidates existed but none fit the thread shape
+        for k in candidates {
+            misses.push(CandidateMiss {
+                name: k.name,
+                backend: k.backend,
+                missing: vec![format!(
+                    "threaded-only candidate needs threads > 1 and dim ≥ \
+                     {}×mr (profile grants {threads})",
+                    k.min_mr_multiple
+                )],
+            });
+        }
+        Err(NoCandidate {
+            routine: routine.to_string(),
+            dim,
+            policy,
+            considered,
+            misses,
+        })
     }
 }
 
 /// Memoized admission-time planning.
 ///
-/// Keyed by `(routine, dim, policy, backend)`: everything the
+/// Keyed by `(routine, dim, policy, selection)`: everything the
 /// [`Planner`] reads from a request, for one fixed profile. The server
 /// — or, in sharded mode, the cluster front-end, which owns one shared
 /// cache and also routes on the resulting kernel id — resolves each
 /// request against this cache when it is *submitted*, so workers only
 /// ever execute pre-resolved plans — the planner's registry scan runs
-/// once per distinct shape, not once per request.
-///
-/// Backends without a native kernel variant (PJRT) are not planned
-/// here; `resolve` returns `None` for them without touching the
-/// counters (the PJRT executor plans per-artifact instead).
+/// once per distinct shape, not once per request. Every successful
+/// resolution (hit or miss) bumps the registry's per-kernel selection
+/// ledger, which `/backends` aggregates per backend.
 pub struct PlanCache {
     profile: Profile,
     plans: Mutex<HashMap<PlanKey, Option<ExecutionPlan>>>,
@@ -143,7 +444,7 @@ pub struct PlanCache {
     misses: AtomicU64,
 }
 
-type PlanKey = (&'static str, usize, FtPolicy, Backend);
+type PlanKey = (&'static str, usize, FtPolicy, SelectionPolicy);
 
 impl PlanCache {
     /// An empty cache for one profile.
@@ -161,16 +462,14 @@ impl PlanCache {
         &self.profile
     }
 
-    /// Resolve a `(routine, dim, policy, backend)` key, memoizing the
+    /// Resolve a `(routine, dim, policy, selection)` key, memoizing the
     /// planner's answer. A cached entry is returned verbatim — the
     /// proptests assert it always equals a fresh planner resolution.
     pub fn resolve(&self, routine: &'static str, dim: usize,
-                   policy: FtPolicy, backend: Backend)
+                   policy: FtPolicy, sel: &SelectionPolicy)
                    -> Option<ExecutionPlan> {
-        let variant = backend.variant()?;
-        let key = (routine, dim, policy, backend);
         let mut plans = self.plans.lock().unwrap();
-        match plans.get(&key) {
+        let plan = match plans.get(&(routine, dim, policy, sel.clone())) {
             Some(plan) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 *plan
@@ -178,11 +477,15 @@ impl PlanCache {
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 let plan = Planner::new(&self.profile)
-                    .plan_dims(routine, dim, variant, policy);
-                plans.insert(key, plan);
+                    .plan_dims(routine, dim, sel, policy);
+                plans.insert((routine, dim, policy, sel.clone()), plan);
                 plan
             }
+        };
+        if let Some(p) = plan {
+            registry::note_selected(p.kernel_id);
         }
+        plan
     }
 
     /// `(hits, misses)` since construction.
@@ -194,7 +497,6 @@ impl PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::registry::Scheme;
     use crate::util::matrix::Matrix;
     use crate::util::rng::Rng;
 
@@ -209,16 +511,20 @@ mod tests {
         }
     }
 
+    fn tuned() -> SelectionPolicy {
+        SelectionPolicy::for_variant(Impl::Tuned)
+    }
+
     #[test]
     fn serial_profile_plans_serial_kernels() {
         let profile = Profile::skylake_sim();
         assert_eq!(profile.threads, 1);
         let planner = Planner::new(&profile);
         let req = dgemm_req(64);
-        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::None).unwrap();
+        let plan = planner.plan(&req, &tuned(), FtPolicy::None).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/tuned");
         assert_eq!(plan.threads, 1);
-        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::Hybrid).unwrap();
+        let plan = planner.plan(&req, &tuned(), FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/abft-fused");
     }
 
@@ -227,15 +533,15 @@ mod tests {
         let profile = Profile::skylake_sim().with_threads(4);
         let planner = Planner::new(&profile);
         let req = dgemm_req(64);
-        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::None).unwrap();
+        let plan = planner.plan(&req, &tuned(), FtPolicy::None).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/tuned-mt");
         assert_eq!(plan.threads, 4);
-        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::Hybrid).unwrap();
+        let plan = planner.plan(&req, &tuned(), FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/abft-fused-mt");
         assert!(plan.kernel.threaded);
         // below the MR-aligned floor the serial kernels stay in charge
         let small = dgemm_req(profile.gemm.mr);
-        let plan = planner.plan(&small, Impl::Tuned, FtPolicy::Hybrid).unwrap();
+        let plan = planner.plan(&small, &tuned(), FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/abft-fused");
         assert_eq!(plan.threads, 1);
     }
@@ -245,7 +551,8 @@ mod tests {
         let profile = Profile::skylake_sim().with_threads(4);
         let planner = Planner::new(&profile);
         let req = dgemm_req(128);
-        let plan = planner.plan(&req, Impl::Naive, FtPolicy::None).unwrap();
+        let sel = SelectionPolicy::for_variant(Impl::Naive);
+        let plan = planner.plan(&req, &sel, FtPolicy::None).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/naive");
         assert_eq!(plan.threads, 1);
     }
@@ -255,35 +562,136 @@ mod tests {
         let profile = Profile::skylake_sim();
         let planner = Planner::new(&profile);
         let req = dgemm_req(48);
-        let plan = planner.plan(&req, Impl::Naive, FtPolicy::Hybrid).unwrap();
+        let sel = SelectionPolicy::for_variant(Impl::Naive);
+        let plan = planner.plan(&req, &sel, FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.scheme, Scheme::AbftFused);
+    }
+
+    #[test]
+    fn peer_backends_are_planned_as_candidates() {
+        let profile = Profile::skylake_sim();
+        let planner = Planner::new(&profile);
+        let req = dgemm_req(48);
+        // PJRT preferred: its registry descriptor wins outright
+        let sel = SelectionPolicy::for_backend(Backend::Pjrt);
+        let plan = planner.plan(&req, &sel, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/pjrt");
+        // …and falls back to the tuned native tier when denied
+        let sel = sel.with_denied(Backend::Pjrt);
+        let plan = planner.plan(&req, &sel, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/tuned");
+        // GPU-sim tiers split on the dimension cap
+        let sel = SelectionPolicy::for_backend(Backend::GpuSim);
+        let plan = planner.plan(&req, &sel, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/gpusim-wmma16");
+        let big = dgemm_req(96);
+        let plan = planner.plan(&big, &sel, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/gpusim-wmma32");
+        let plan = planner.plan(&big, &sel, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/gpusim-ori");
+    }
+
+    #[test]
+    fn no_candidate_diagnostics_are_exhaustive() {
+        let profile = Profile::skylake_sim();
+        let planner = Planner::new(&profile);
+        // a hard pin to a backend whose only dgemm descriptors cannot
+        // serve the policy at this dim: every miss must be explained
+        let sel = SelectionPolicy {
+            require: vec![CapRequirement::Threaded(true)],
+            ..SelectionPolicy::default()
+        };
+        let err = planner
+            .select_dims("dgemm", 64, &sel, FtPolicy::AbftWeighted)
+            .unwrap_err();
+        let reg = KernelRegistry::global();
+        assert_eq!(err.considered, reg.for_routine("dgemm").len());
+        assert_eq!(err.misses.len(), err.considered,
+                   "every considered descriptor is accounted for");
+        let text = err.to_string();
+        assert!(text.contains("no candidate kernel for dgemm"));
+        assert!(text.contains("policy abft-weighted not served"));
+        assert!(text.contains("lacks required threaded=true"));
+
+        // pinned selection refuses to fall back
+        let pin = SelectionPolicy::pinned(Backend::GpuSim);
+        let err = planner
+            .select_dims("ddot", 64, &pin, FtPolicy::None)
+            .unwrap_err();
+        assert!(err.to_string().contains("not in the allowlist"));
+    }
+
+    #[test]
+    fn requirement_parsing_round_trips() {
+        for (k, v) in [("precision", "f64"), ("scheme", "abft-fused"),
+                       ("threaded", "true"), ("batched", "false"),
+                       ("feature", "avx2")] {
+            let r = CapRequirement::parse(k, v).unwrap();
+            assert_eq!(r.describe(), format!("{k}={v}"));
+        }
+        assert!(CapRequirement::parse("scheme", "warp").is_err());
+        assert!(CapRequirement::parse("threaded", "maybe").is_err());
+        assert!(CapRequirement::parse("tile", "16").is_err());
+    }
+
+    #[test]
+    fn merged_with_respects_precedence() {
+        let server = SelectionPolicy::for_backend(Backend::NativeTuned)
+            .with_denied(Backend::Pjrt);
+        let routing = SelectionPolicy {
+            prefer: vec![Backend::GpuSim],
+            deny: vec![Backend::NativeSimd],
+            require: vec![CapRequirement::Scheme(Scheme::AbftFused)],
+            ..SelectionPolicy::default()
+        };
+        let merged = server.merged_with(&routing);
+        assert_eq!(merged.prefer, vec![Backend::GpuSim, Backend::NativeTuned]);
+        assert!(merged.deny.contains(&Backend::Pjrt),
+                "server denial survives the request overlay");
+        assert!(merged.deny.contains(&Backend::NativeSimd));
+        assert_eq!(merged.require,
+                   vec![CapRequirement::Scheme(Scheme::AbftFused)]);
+        // allowlists intersect when both sides set one
+        let a = SelectionPolicy {
+            allow: vec![Backend::NativeTuned, Backend::GpuSim],
+            ..SelectionPolicy::default()
+        };
+        let b = SelectionPolicy {
+            allow: vec![Backend::GpuSim, Backend::Pjrt],
+            ..SelectionPolicy::default()
+        };
+        assert_eq!(a.merged_with(&b).allow, vec![Backend::GpuSim]);
     }
 
     #[test]
     fn plan_cache_memoizes_and_counts() {
         let cache = PlanCache::new(Profile::skylake_sim().with_threads(4));
         let first = cache
-            .resolve("dgemm", 64, FtPolicy::Hybrid, Backend::NativeTuned)
+            .resolve("dgemm", 64, FtPolicy::Hybrid, &tuned())
             .unwrap();
         assert_eq!(first.kernel.name, "dgemm/abft-fused-mt");
         assert_eq!(cache.stats(), (0, 1));
         let again = cache
-            .resolve("dgemm", 64, FtPolicy::Hybrid, Backend::NativeTuned)
+            .resolve("dgemm", 64, FtPolicy::Hybrid, &tuned())
             .unwrap();
         assert_eq!(again.kernel_id, first.kernel_id);
         assert_eq!(again.threads, first.threads);
         assert_eq!(cache.stats(), (1, 1));
         // a different shape is a distinct key (below the MT floor here)
         let small = cache
-            .resolve("dgemm", 4, FtPolicy::Hybrid, Backend::NativeTuned)
+            .resolve("dgemm", 4, FtPolicy::Hybrid, &tuned())
             .unwrap();
         assert_eq!(small.kernel.name, "dgemm/abft-fused");
         assert_eq!(cache.stats(), (1, 2));
-        // PJRT has no native variant: unplanned and uncounted
-        assert!(cache
-            .resolve("dgemm", 64, FtPolicy::Hybrid, Backend::Pjrt)
-            .is_none());
-        assert_eq!(cache.stats(), (1, 2));
+        // PJRT is a peer now: its selection resolves (and counts) too
+        let pjrt = cache
+            .resolve("dgemm", 64, FtPolicy::Hybrid,
+                     &SelectionPolicy::for_backend(Backend::Pjrt))
+            .unwrap();
+        assert_eq!(pjrt.kernel.name, "dgemm/pjrt");
+        assert_eq!(cache.stats(), (1, 3));
+        // the selection ledger saw every successful resolve
+        assert!(registry::selection_count(first.kernel_id) >= 2);
     }
 
     #[test]
@@ -291,11 +699,14 @@ mod tests {
         let profile = Profile::skylake_sim().with_threads(4);
         let planner = Planner::new(&profile);
         let req = dgemm_req(64);
-        let plan = planner.plan(&req, Impl::Tuned, FtPolicy::None).unwrap();
+        let plan = planner.plan(&req, &tuned(), FtPolicy::None).unwrap();
         let reg = crate::coordinator::registry::KernelRegistry::global();
         assert!(std::ptr::eq(reg.by_id(plan.kernel_id).unwrap(), plan.kernel));
         assert_eq!(plan.thread_cost(), 4, "MT batch debits its whole grant");
-        let serial = planner.plan(&req, Impl::Naive, FtPolicy::None).unwrap();
+        let serial = planner
+            .plan(&req, &SelectionPolicy::for_variant(Impl::Naive),
+                  FtPolicy::None)
+            .unwrap();
         assert_eq!(serial.thread_cost(), 1);
     }
 
@@ -305,7 +716,7 @@ mod tests {
         let planner = Planner::new(&profile);
         let req = dgemm_req(48);
         let plan = planner
-            .plan(&req, Impl::Tuned, FtPolicy::AbftWeighted)
+            .plan(&req, &tuned(), FtPolicy::AbftWeighted)
             .unwrap();
         assert_eq!(plan.kernel.name, "dgemm/abft-weighted");
     }

@@ -10,8 +10,8 @@
 //! instead of hand-maintaining per-routine × per-variant match arms.
 
 use crate::blas::level3::GemmParams;
-use crate::blas::{batched, blocked, level1, level2, level3, naive, parallel,
-                  simd, Impl};
+use crate::blas::{batched, blocked, gpu_sim, level1, level2, level3, naive,
+                  parallel, simd, Impl};
 use crate::config::Profile;
 use crate::coordinator::request::{
     Backend, BlasRequest, BlasResult, Level,
@@ -70,6 +70,34 @@ pub enum Scheme {
     FtTrsm,
 }
 
+impl Scheme {
+    /// Report/constraint name of the scheme (the `--require scheme=…`
+    /// and `/backends` vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::None => "none",
+            Scheme::Dmr => "dmr",
+            Scheme::AbftFused => "abft-fused",
+            Scheme::AbftUnfused => "abft-unfused",
+            Scheme::AbftWeighted => "abft-weighted",
+            Scheme::FtTrsm => "ft-trsm",
+        }
+    }
+
+    /// Parse a scheme name (the inverse of [`Scheme::name`]).
+    pub fn by_name(s: &str) -> Option<Scheme> {
+        match s {
+            "none" => Some(Scheme::None),
+            "dmr" => Some(Scheme::Dmr),
+            "abft-fused" => Some(Scheme::AbftFused),
+            "abft-unfused" => Some(Scheme::AbftUnfused),
+            "abft-weighted" => Some(Scheme::AbftWeighted),
+            "ft-trsm" => Some(Scheme::FtTrsm),
+            _ => None,
+        }
+    }
+}
+
 /// Stable identity of a registered kernel: its index in the global
 /// registry table. Registration order is append-only (new kernels go at
 /// the end of their routine's block or the table's end), so an id is
@@ -101,6 +129,10 @@ pub struct KernelDescriptor {
     /// Minimum principal dimension in units of `GemmParams.mr` (banded
     /// kernels need at least two MR-aligned bands; 0 = no floor).
     pub min_mr_multiple: usize,
+    /// Largest principal dimension this kernel serves (0 = unbounded).
+    /// The GPU-sim small-tile tier caps itself here so selection falls
+    /// through to the unbounded tier above the cap.
+    pub max_dim: usize,
     /// Largest principal dimension an item may have to ride this
     /// kernel's batch-fused execution (0 = not batch-capable). Only the
     /// `dgemm/batched*` entries set this: batch fusion pays off exactly
@@ -137,6 +169,60 @@ impl KernelDescriptor {
     pub fn admits_batch(&self, dim: usize) -> bool {
         self.batch_dim_ceiling > 0 && dim > 0 && dim <= self.batch_dim_ceiling
     }
+
+    /// Is `dim` within this kernel's dimension cap (`max_dim`, 0 =
+    /// unbounded)?
+    pub fn serves_dim(&self, dim: usize) -> bool {
+        self.max_dim == 0 || dim <= self.max_dim
+    }
+
+    /// The typed capability record the selection layer, the `/backends`
+    /// serializer, and the no-candidate diagnostics all consume. The
+    /// descriptor *is* the capability set; this view materializes it
+    /// with the derived fields (precision, CPU-feature requirements)
+    /// spelled out.
+    pub fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            backend: self.backend,
+            precision: "f64",
+            max_dim: self.max_dim,
+            batch_dim_ceiling: self.batch_dim_ceiling,
+            policies: self.policies,
+            scheme: self.scheme,
+            threaded: self.threaded,
+            min_mr_multiple: self.min_mr_multiple,
+            cpu_features: match self.variant {
+                Impl::Simd => &["avx2", "fma"],
+                _ => &[],
+            },
+        }
+    }
+}
+
+/// The capability set of one registered kernel — what the
+/// [`crate::coordinator::plan::SelectionPolicy`] constraint vocabulary
+/// matches against and what `/backends` serializes.
+#[derive(Clone, Copy, Debug)]
+pub struct Capabilities {
+    /// Backend identity.
+    pub backend: Backend,
+    /// Element precision (every registered kernel is f64 today).
+    pub precision: &'static str,
+    /// Largest principal dimension served (0 = unbounded).
+    pub max_dim: usize,
+    /// Batch-fusion dimension ceiling (0 = not batch-capable).
+    pub batch_dim_ceiling: usize,
+    /// FT policies served.
+    pub policies: &'static [FtPolicy],
+    /// Protection scheme implemented.
+    pub scheme: Scheme,
+    /// Whether the kernel rides the profile's thread pool.
+    pub threaded: bool,
+    /// MR-aligned minimum-dimension floor (units of `GemmParams.mr`).
+    pub min_mr_multiple: usize,
+    /// CPU features the kernel's fast path requires (it still runs —
+    /// via runtime-probed fallback — without them).
+    pub cpu_features: &'static [&'static str],
 }
 
 /// The registry: a static table of every native kernel.
@@ -182,15 +268,19 @@ impl KernelRegistry {
         self.entries.get(id.0 as usize)
     }
 
-    /// The serial unprotected variant ladder for one routine
+    /// The serial unprotected *native* variant ladder for one routine
     /// (naive → blocked → tuned → simd where a SIMD rung is
-    /// registered), as the bench figures enumerate it.
+    /// registered), as the bench figures enumerate it. Peer-backend
+    /// descriptors (PJRT, GPU-sim) are not rungs of this ladder.
     pub fn serial_variants(&self, routine: &str)
                            -> Vec<&'static KernelDescriptor> {
         self.entries
             .iter()
             .filter(|e| {
-                e.routine == routine && !e.threaded && e.scheme == Scheme::None
+                e.routine == routine
+                    && !e.threaded
+                    && e.scheme == Scheme::None
+                    && e.backend.is_native()
             })
             .collect()
     }
@@ -213,6 +303,7 @@ impl KernelRegistry {
                 && e.routine == k.routine
                 && e.variant == k.variant
                 && e.scheme == k.scheme
+                && e.backend == k.backend
         })
     }
 
@@ -226,6 +317,97 @@ impl KernelRegistry {
         }
         out
     }
+}
+
+// --------------------------------------------------- selection ledger
+
+fn selection_counters() -> &'static [std::sync::atomic::AtomicU64] {
+    use std::sync::atomic::AtomicU64;
+    use std::sync::OnceLock;
+    static COUNTS: OnceLock<Vec<AtomicU64>> = OnceLock::new();
+    COUNTS.get_or_init(|| {
+        (0..ENTRIES.len()).map(|_| AtomicU64::new(0)).collect()
+    })
+}
+
+/// Record one planner selection of `id` — the per-kernel half of the
+/// per-backend selection counts `/backends` reports.
+pub fn note_selected(id: KernelId) {
+    if let Some(c) = selection_counters().get(id.0 as usize) {
+        c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// How many times the planner has selected `id` in this process.
+pub fn selection_count(id: KernelId) -> u64 {
+    selection_counters()
+        .get(id.0 as usize)
+        .map_or(0, |c| c.load(std::sync::atomic::Ordering::Relaxed))
+}
+
+/// The `/backends` document (`ftblas.backends.v1`): every backend with
+/// its health, aggregate selection count, and per-kernel capability
+/// records. Shared verbatim by the gateway admin route and the
+/// `ftblas backends` subcommand. `pjrt_health` is the PJRT backend's
+/// probe result when a handle is resident (`None` = not loaded).
+pub fn backends_json(pjrt_health: Option<String>) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let reg = KernelRegistry::global();
+    let mut backends = Vec::new();
+    for be in Backend::ALL {
+        let mut kernels = Vec::new();
+        let mut selected = 0u64;
+        for (i, e) in reg.entries().iter().enumerate() {
+            if e.backend != be {
+                continue;
+            }
+            let caps = e.capabilities();
+            let count = selection_count(KernelId(i as u16));
+            selected += count;
+            kernels.push(
+                Json::obj()
+                    .field("name", Json::Str(e.name.to_string()))
+                    .field("routine", Json::Str(e.routine.to_string()))
+                    .field("scheme", Json::Str(caps.scheme.name().into()))
+                    .field("precision", Json::Str(caps.precision.into()))
+                    .field("threaded", Json::Bool(caps.threaded))
+                    .field("max_dim", Json::Int(caps.max_dim as u64))
+                    .field("batch_dim_ceiling",
+                           Json::Int(caps.batch_dim_ceiling as u64))
+                    .field("min_mr_multiple",
+                           Json::Int(caps.min_mr_multiple as u64))
+                    .field(
+                        "policies",
+                        Json::Arr(caps.policies.iter()
+                            .map(|p| Json::Str(p.name().to_string()))
+                            .collect()),
+                    )
+                    .field(
+                        "cpu_features",
+                        Json::Arr(caps.cpu_features.iter()
+                            .map(|f| Json::Str((*f).to_string()))
+                            .collect()),
+                    )
+                    .field("selected", Json::Int(count)),
+            );
+        }
+        let health = match be {
+            Backend::Pjrt => pjrt_health.clone()
+                .unwrap_or_else(|| "unavailable: no handle loaded".into()),
+            Backend::GpuSim => "healthy: simulated executor".into(),
+            _ => "healthy: compiled in".into(),
+        };
+        backends.push(
+            Json::obj()
+                .field("backend", Json::Str(be.name().to_string()))
+                .field("health", Json::Str(health))
+                .field("selected", Json::Int(selected))
+                .field("kernels", Json::Arr(kernels)),
+        );
+    }
+    Json::obj()
+        .field("schema", Json::Str("ftblas.backends.v1".into()))
+        .field("backends", Json::Arr(backends))
 }
 
 // ---------------------------------------------------------------- policies
@@ -267,6 +449,7 @@ const fn serial_with(name: &'static str, routine: &'static str, level: Level,
         policies,
         threaded: false,
         min_mr_multiple: 0,
+        max_dim: 0,
         batch_dim_ceiling: 0,
         summary,
         execute,
@@ -293,6 +476,7 @@ const fn protected(name: &'static str, routine: &'static str, level: Level,
         policies,
         threaded: false,
         min_mr_multiple: 0,
+        max_dim: 0,
         batch_dim_ceiling: 0,
         summary,
         execute,
@@ -314,6 +498,7 @@ const fn threaded(name: &'static str, routine: &'static str, scheme: Scheme,
         // at least two MR-aligned row bands, else the MT frame falls
         // through to the serial kernel anyway
         min_mr_multiple: 2,
+        max_dim: 0,
         batch_dim_ceiling: 0,
         summary,
         execute,
@@ -337,6 +522,7 @@ const fn protected_simd(name: &'static str, routine: &'static str,
         policies,
         threaded: false,
         min_mr_multiple: 0,
+        max_dim: 0,
         batch_dim_ceiling: 0,
         summary,
         execute,
@@ -361,6 +547,7 @@ const fn threaded_simd(name: &'static str, routine: &'static str,
         policies,
         threaded: true,
         min_mr_multiple: 2,
+        max_dim: 0,
         batch_dim_ceiling: 0,
         summary,
         execute,
@@ -395,7 +582,68 @@ const fn batched_kernel(name: &'static str, variant: Impl, scheme: Scheme,
         policies,
         threaded: true,
         min_mr_multiple: 2,
+        max_dim: 0,
         batch_dim_ceiling: BATCH_DIM_CEILING,
+        summary,
+        execute,
+    }
+}
+
+/// Registry-resident descriptor for a PJRT-served routine. PJRT is a
+/// peer backend: its descriptors compete in capability selection like
+/// any native entry, but execution is dispatched by
+/// [`crate::coordinator::router::Router::execute_planned`] to the
+/// resident [`crate::coordinator::pjrt_backend::PjrtBackend`] handle
+/// (artifact dispatch needs the process-wide executor, which a static
+/// table cannot hold) — the uniform entry point below is unreachable
+/// by construction.
+const fn pjrt_peer(name: &'static str, routine: &'static str, level: Level,
+                   summary: &'static str) -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine,
+        level,
+        variant: Impl::Tuned,
+        backend: Backend::Pjrt,
+        scheme: Scheme::None,
+        policies: ANY_POLICY,
+        threaded: false,
+        min_mr_multiple: 0,
+        max_dim: 0,
+        batch_dim_ceiling: 0,
+        summary,
+        execute: pjrt_dispatches_via_router,
+    }
+}
+
+/// See [`pjrt_peer`]: planned PJRT jobs are intercepted by the router
+/// before the registry entry point is reached.
+fn pjrt_dispatches_via_router(c: &ExecCtx) -> KernelOut {
+    unreachable!(
+        "{}: PJRT descriptors execute through Router::execute_planned",
+        c.req.routine()
+    )
+}
+
+/// Simulated-GPU executor descriptor (see [`crate::blas::gpu_sim`]):
+/// a warp-tiled tier with an optional dimension cap, so the small-tile
+/// tier yields to the unbounded tier above `max_dim`.
+const fn gpu_sim_kernel(name: &'static str, scheme: Scheme,
+                        policies: &'static [FtPolicy], max_dim: usize,
+                        summary: &'static str, execute: KernelFn)
+                        -> KernelDescriptor {
+    KernelDescriptor {
+        name,
+        routine: "dgemm",
+        level: Level::L3,
+        variant: Impl::Tuned,
+        backend: Backend::GpuSim,
+        scheme,
+        policies,
+        threaded: false,
+        min_mr_multiple: 0,
+        max_dim,
+        batch_dim_ceiling: 0,
         summary,
         execute,
     }
@@ -1043,6 +1291,42 @@ fn dgemm_weighted(c: &ExecCtx) -> KernelOut {
     (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
 }
 
+/// Thread-block tile edges of the simulated GPU tiers (the WMMA
+/// fragment multiples of arXiv 2305.01024's kernel hierarchy).
+const GPUSIM_TILE_SMALL: usize = 16;
+const GPUSIM_TILE_LARGE: usize = 32;
+
+fn dgemm_gpusim_with(c: &ExecCtx, tile: usize, protected: bool) -> KernelOut {
+    let BlasRequest::Dgemm { alpha, a, b, beta, c: c0 } = c.req else {
+        unreachable!("dgemm kernel planned for {}", c.req.routine())
+    };
+    let (m, n, kk) = (a.rows, b.cols, a.cols);
+    let mut cd = c0.data.clone();
+    if protected {
+        let inj = strikes(c.faults, kk.div_ceil(tile), m, n);
+        let ft = gpu_sim::dgemm_gpusim_abft(m, n, kk, *alpha, &a.data,
+                                            &b.data, *beta, &mut cd, tile,
+                                            &inj);
+        (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), ft)
+    } else {
+        gpu_sim::dgemm_gpusim(m, n, kk, *alpha, &a.data, &b.data, *beta,
+                              &mut cd, tile);
+        (BlasResult::Matrix(Matrix::from_vec(m, n, cd)), FtReport::none())
+    }
+}
+
+fn dgemm_gpusim_ori(c: &ExecCtx) -> KernelOut {
+    dgemm_gpusim_with(c, GPUSIM_TILE_LARGE, false)
+}
+
+fn dgemm_gpusim_wmma16(c: &ExecCtx) -> KernelOut {
+    dgemm_gpusim_with(c, GPUSIM_TILE_SMALL, true)
+}
+
+fn dgemm_gpusim_wmma32(c: &ExecCtx) -> KernelOut {
+    dgemm_gpusim_with(c, GPUSIM_TILE_LARGE, true)
+}
+
 fn dsymm_with(c: &ExecCtx,
               k: fn(usize, usize, f64, &[f64], &[f64], f64, &mut [f64]))
               -> KernelOut {
@@ -1655,6 +1939,34 @@ static ENTRIES: &[KernelDescriptor] = &[
                    Scheme::AbftFused, HYBRID_ONLY,
                    "batch-fused ABFT: per-item checksum state and reports",
                    dgemm_batched_fused_one),
+    // ------------------------------------------ peer-backend executors
+    // PJRT: one capability descriptor per AOT-compiled routine; the
+    // router dispatches planned jobs to the resident executor handle.
+    pjrt_peer("dscal/pjrt", "dscal", Level::L1, "AOT Pallas scal artifact"),
+    pjrt_peer("daxpy/pjrt", "daxpy", Level::L1, "AOT Pallas axpy artifact"),
+    pjrt_peer("ddot/pjrt", "ddot", Level::L1, "AOT Pallas dot artifact"),
+    pjrt_peer("dnrm2/pjrt", "dnrm2", Level::L1, "AOT Pallas nrm2 artifact"),
+    pjrt_peer("dasum/pjrt", "dasum", Level::L1, "AOT Pallas asum artifact"),
+    pjrt_peer("dgemv/pjrt", "dgemv", Level::L2, "AOT Pallas gemv artifact"),
+    pjrt_peer("dtrsv/pjrt", "dtrsv", Level::L2, "AOT Pallas trsv artifact"),
+    pjrt_peer("dgemm/pjrt", "dgemm", Level::L3, "AOT Pallas gemm artifact"),
+    pjrt_peer("dsymm/pjrt", "dsymm", Level::L3, "AOT Pallas symm artifact"),
+    pjrt_peer("dtrmm/pjrt", "dtrmm", Level::L3, "AOT Pallas trmm artifact"),
+    pjrt_peer("dtrsm/pjrt", "dtrsm", Level::L3, "AOT Pallas trsm artifact"),
+    pjrt_peer("dsyrk/pjrt", "dsyrk", Level::L3, "AOT Pallas syrk artifact"),
+    // Simulated GPU tiers (arXiv 2305.01024): the small-tile fused-ABFT
+    // tier caps itself at the batch ceiling; selection falls through to
+    // the unbounded 32-wide tier above it.
+    gpu_sim_kernel("dgemm/gpusim-wmma16", Scheme::AbftFused, PROTECTED_ALL,
+                   BATCH_DIM_CEILING,
+                   "16-wide warp-tiled fused-ABFT tier (small dims)",
+                   dgemm_gpusim_wmma16),
+    gpu_sim_kernel("dgemm/gpusim-wmma32", Scheme::AbftFused, PROTECTED_ALL, 0,
+                   "32-wide warp-tiled fused-ABFT tier",
+                   dgemm_gpusim_wmma32),
+    gpu_sim_kernel("dgemm/gpusim-ori", Scheme::None, UNPROTECTED, 0,
+                   "32-wide warp-tiled unprotected tier",
+                   dgemm_gpusim_ori),
 ];
 
 #[cfg(test)]
@@ -1838,6 +2150,89 @@ mod tests {
             };
             assert!(allclose(&got.data, &want, 1e-8, 1e-8),
                     "{name}: batch-of-one result wrong");
+        }
+    }
+
+    /// PJRT and GPU-sim are registry-resident peers: their descriptors
+    /// compete in selection but never leak into the native serial
+    /// ladder or the native batch-fusion mapping.
+    #[test]
+    fn peer_backends_are_registry_resident() {
+        let reg = KernelRegistry::global();
+        let pjrt: Vec<_> = reg.entries().iter()
+            .filter(|e| e.backend == Backend::Pjrt)
+            .collect();
+        assert_eq!(pjrt.len(), 12, "PJRT descriptor count drifted");
+        for e in &pjrt {
+            assert!(e.name.ends_with("/pjrt"), "{}", e.name);
+            assert!(!e.threaded, "{}", e.name);
+        }
+        let small = reg.find("dgemm/gpusim-wmma16").unwrap();
+        assert_eq!(small.max_dim, BATCH_DIM_CEILING);
+        assert!(small.serves_dim(BATCH_DIM_CEILING));
+        assert!(!small.serves_dim(BATCH_DIM_CEILING + 1));
+        let large = reg.find("dgemm/gpusim-wmma32").unwrap();
+        assert_eq!(large.max_dim, 0, "large tier must be unbounded");
+        assert!(large.serves_dim(usize::MAX));
+        for e in reg.entries().iter().filter(|e| !e.backend.is_native()) {
+            assert!(
+                !reg.serial_variants(e.routine)
+                    .iter()
+                    .any(|s| s.name == e.name),
+                "{}: peer entry leaked into the native ladder", e.name
+            );
+            assert!(reg.batched_sibling(e).is_none(),
+                    "{}: peer entry must not batch-fuse natively", e.name);
+        }
+    }
+
+    /// The capability view is a faithful projection of the descriptor,
+    /// and scheme names round-trip for the constraint vocabulary.
+    #[test]
+    fn capabilities_view_mirrors_descriptor() {
+        let reg = KernelRegistry::global();
+        for e in reg.entries() {
+            let caps = e.capabilities();
+            assert_eq!(caps.backend, e.backend, "{}", e.name);
+            assert_eq!(caps.precision, "f64");
+            assert_eq!(caps.scheme, e.scheme);
+            assert_eq!(caps.threaded, e.threaded);
+            assert_eq!(caps.max_dim, e.max_dim);
+            assert_eq!(caps.batch_dim_ceiling, e.batch_dim_ceiling);
+            assert_eq!(caps.min_mr_multiple, e.min_mr_multiple);
+            assert_eq!(caps.cpu_features.is_empty(),
+                       e.variant != Impl::Simd, "{}", e.name);
+            assert_eq!(Scheme::by_name(e.scheme.name()), Some(e.scheme));
+        }
+        assert!(Scheme::by_name("warp").is_none());
+    }
+
+    /// The selection ledger counts per kernel and the shared
+    /// `/backends` serializer covers every backend and every entry.
+    #[test]
+    fn selection_ledger_counts_and_serializes() {
+        let reg = KernelRegistry::global();
+        let id = reg.id_of(reg.find("dgemm/tuned").unwrap()).unwrap();
+        let before = selection_count(id);
+        note_selected(id);
+        assert_eq!(selection_count(id), before + 1);
+        // out-of-table ids are ignored, not a panic
+        note_selected(KernelId(u16::MAX));
+        assert_eq!(selection_count(KernelId(u16::MAX)), 0);
+
+        let doc = backends_json(None);
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(),
+                   "ftblas.backends.v1");
+        let arr = doc.get("backends").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), Backend::ALL.len());
+        let total: usize = arr.iter()
+            .map(|b| b.get("kernels").unwrap().as_arr().unwrap().len())
+            .sum();
+        assert_eq!(total, reg.entries().len(),
+                   "every kernel appears under exactly one backend");
+        for b in arr {
+            assert!(b.get("health").unwrap().as_str().is_some());
+            assert!(b.get("backend").unwrap().as_str().is_some());
         }
     }
 

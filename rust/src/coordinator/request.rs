@@ -17,9 +17,23 @@ pub enum Backend {
     NativeSimd,
     /// AOT Pallas/XLA artifact via PJRT.
     Pjrt,
+    /// Simulated GPU executor: warp-tiled fused-ABFT GEMM tiers
+    /// (arXiv 2305.01024's block/warp checksum hierarchy, emulated on
+    /// the host so selection and soak can target a heterogeneous tier).
+    GpuSim,
 }
 
 impl Backend {
+    /// Every backend, in registry/report order.
+    pub const ALL: [Backend; 6] = [
+        Backend::NativeNaive,
+        Backend::NativeBlocked,
+        Backend::NativeTuned,
+        Backend::NativeSimd,
+        Backend::Pjrt,
+        Backend::GpuSim,
+    ];
+
     /// CLI/report name of the backend.
     pub fn name(&self) -> &'static str {
         match self {
@@ -28,6 +42,7 @@ impl Backend {
             Backend::NativeTuned => "tuned",
             Backend::NativeSimd => "simd",
             Backend::Pjrt => "pjrt",
+            Backend::GpuSim => "gpu-sim",
         }
     }
 
@@ -39,8 +54,16 @@ impl Backend {
             "tuned" => Some(Backend::NativeTuned),
             "simd" => Some(Backend::NativeSimd),
             "pjrt" => Some(Backend::Pjrt),
+            "gpu-sim" => Some(Backend::GpuSim),
             _ => None,
         }
+    }
+
+    /// Whether this backend is one of the four native variant families
+    /// (the serial/MT kernels compiled into the binary). PJRT and the
+    /// GPU simulator are peer backends with their own descriptors.
+    pub fn is_native(&self) -> bool {
+        !matches!(self, Backend::Pjrt | Backend::GpuSim)
     }
 
     /// The native backend a kernel variant reports as.
@@ -53,14 +76,15 @@ impl Backend {
         }
     }
 
-    /// The kernel variant a native backend requests (PJRT has none).
+    /// The kernel variant a native backend requests (the non-native
+    /// peer backends — PJRT, GPU-sim — have none).
     pub fn variant(&self) -> Option<crate::blas::Impl> {
         match self {
             Backend::NativeNaive => Some(crate::blas::Impl::Naive),
             Backend::NativeBlocked => Some(crate::blas::Impl::Blocked),
             Backend::NativeTuned => Some(crate::blas::Impl::Tuned),
             Backend::NativeSimd => Some(crate::blas::Impl::Simd),
-            Backend::Pjrt => None,
+            Backend::Pjrt | Backend::GpuSim => None,
         }
     }
 }
@@ -313,9 +337,9 @@ mod tests {
 
     #[test]
     fn backend_names() {
-        for b in [Backend::NativeNaive, Backend::NativeBlocked,
-                  Backend::NativeTuned, Backend::NativeSimd, Backend::Pjrt] {
+        for b in Backend::ALL {
             assert_eq!(Backend::by_name(b.name()), Some(b));
+            assert_eq!(b.is_native(), b.variant().is_some());
         }
         for v in crate::blas::Impl::ALL {
             assert_eq!(Backend::for_variant(v).variant(), Some(v));

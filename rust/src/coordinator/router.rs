@@ -1,25 +1,31 @@
-//! Router: executes a request on a chosen backend under an FT policy.
+//! Router: executes pre-resolved plans on whichever backend the planner
+//! selected.
 //!
-//! Native backends run in the caller's thread (the server gives them a
-//! worker pool); the PJRT backend forwards to the executor thread. When
-//! the preferred backend cannot serve a request (PJRT artifacts are
-//! shape-specialized), the router falls back to the tuned native kernels
-//! — requests never fail for shape reasons.
+//! The router's public execution surface is exactly three entries, all
+//! plan-first: [`Router::execute_planned`] (one planned request),
+//! [`Router::execute_batch`] (a drained same-kernel batch), and the
+//! free-function [`execute_plan`] (the kernel invocation both share).
+//! Planning itself lives in [`Planner`]: the router contributes its
+//! server-side [`SelectionPolicy`] plus per-request backend health —
+//! PJRT artifacts are shape-specialized, so an unservable request gets
+//! the PJRT backend folded into the deny list before selection —
+//! and the planner picks across native, PJRT, and GPU-sim descriptors
+//! uniformly. Requests never fail for shape reasons under the default
+//! selection: the registry-order fallback rung keeps a native kernel
+//! eligible.
 //!
-//! Native dispatch is a thin lookup: the [`Planner`] resolves the
-//! request against the [`crate::coordinator::registry`] kernel table and
-//! the router executes whatever descriptor comes back. Adding a kernel,
-//! a policy, or a threaded variant means registering a descriptor — not
-//! threading a new arm through per-routine match statements.
+//! Native and GPU-sim plans run in the caller's thread (the server
+//! gives them a worker pool); a plan that selected a PJRT registry
+//! descriptor is intercepted here and forwarded to the executor thread.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::blas::{batched, Impl};
 use crate::config::Profile;
 use crate::coordinator::pjrt_backend::PjrtBackend;
-use crate::coordinator::plan::{ExecutionPlan, Planner};
+use crate::coordinator::plan::{ExecutionPlan, Planner, SelectionPolicy};
 use crate::coordinator::registry::{
     self, ExecCtx, KernelDescriptor, Scheme,
 };
@@ -39,8 +45,9 @@ pub struct Router {
     pub profile: Profile,
     /// The artifact backend, when available.
     pub pjrt: Option<PjrtBackend>,
-    /// Preferred backend for requests both sides could serve.
-    pub prefer: Backend,
+    /// Server-side selection policy every request is planned under
+    /// (request-scoped routing overlays merge onto it).
+    pub selection: SelectionPolicy,
     /// The live cluster-wide fault-injection campaign, when one is
     /// running. It lives here — on the one object every shard already
     /// shares as `Arc<Router>` — so a shard spawned by the autoscaler
@@ -59,15 +66,33 @@ pub struct Router {
 }
 
 impl Router {
-    /// A router with no PJRT backend (everything resolves native).
+    /// A router with no PJRT backend, preferring `prefer`'s kernels.
     pub fn native_only(profile: Profile, prefer: Backend) -> Router {
-        Router { profile, pjrt: None, prefer, campaign: None, pool: None }
+        Router {
+            profile,
+            pjrt: None,
+            selection: SelectionPolicy::for_backend(prefer),
+            campaign: None,
+            pool: None,
+        }
     }
 
     /// A router that may resolve requests to the PJRT artifact path.
     pub fn with_pjrt(profile: Profile, pjrt: PjrtBackend, prefer: Backend) -> Router {
-        Router { profile, pjrt: Some(pjrt), prefer, campaign: None,
-                 pool: None }
+        Router {
+            profile,
+            pjrt: Some(pjrt),
+            selection: SelectionPolicy::for_backend(prefer),
+            campaign: None,
+            pool: None,
+        }
+    }
+
+    /// Same router under an explicit selection policy (the CLI's
+    /// `--require`/`--deny` flags land here).
+    pub fn with_selection(mut self, selection: SelectionPolicy) -> Router {
+        self.selection = selection;
+        self
     }
 
     /// Same router with a live injection campaign started from `cfg`
@@ -106,38 +131,54 @@ impl Router {
         self.pool.as_ref().map(|p| pool::enter(p.clone()))
     }
 
-    /// Where would this request actually run?
-    pub fn resolve(&self, req: &BlasRequest, policy: FtPolicy) -> Backend {
-        match self.prefer {
-            Backend::Pjrt => match &self.pjrt {
-                Some(p) if p.supports(req, policy) => Backend::Pjrt,
-                _ => Backend::NativeTuned,
-            },
-            other => other,
+    /// The PJRT backend's health probe, when one is attached (feeds the
+    /// `/backends` report).
+    pub fn pjrt_health(&self) -> Option<String> {
+        self.pjrt.as_ref().map(|p| p.health())
+    }
+
+    /// The effective selection policy for one request: the router's
+    /// policy with per-request backend health folded in. PJRT artifacts
+    /// are shape- and policy-specialized, so a request the loaded
+    /// artifact set cannot serve (or any request, when no backend is
+    /// attached) sees PJRT denied — selection then falls through to the
+    /// remaining preferences instead of planning an unservable backend.
+    pub fn selection_for(&self, req: &BlasRequest, policy: FtPolicy)
+                         -> SelectionPolicy {
+        let pjrt_ok =
+            self.pjrt.as_ref().is_some_and(|p| p.supports(req, policy));
+        if pjrt_ok {
+            self.selection.clone()
+        } else {
+            self.selection.clone().with_denied(Backend::Pjrt)
         }
     }
 
-    /// The native execution plan this request would get (None on the
-    /// PJRT path, which plans per-artifact instead). Because the batcher
-    /// groups by `(routine, dim)`, one call describes a whole batch —
-    /// the CLI prints it before executing, and batch-aware scheduling
-    /// can hook in here.
+    /// The execution plan this request would get. Because the batcher
+    /// groups by kernel id, one call describes a whole batch — the CLI
+    /// prints it before executing, and batch-aware scheduling hooks in
+    /// here.
     pub fn plan(&self, req: &BlasRequest, policy: FtPolicy)
                 -> Option<ExecutionPlan> {
-        match self.resolve(req, policy).variant() {
-            Some(variant) => {
-                Planner::new(&self.profile).plan(req, variant, policy)
-            }
-            None => None,
-        }
+        Planner::new(&self.profile)
+            .plan(req, &self.selection_for(req, policy), policy)
     }
 
-    /// Execute a **pre-resolved** plan — the server's hot path. Workers
-    /// receive admission-time plans from the
+    /// Execute a **pre-resolved** plan — the hot path. Workers receive
+    /// admission-time plans from the
     /// [`crate::coordinator::plan::PlanCache`] and come here directly:
     /// no planner lookup, no registry scan, just the planned kernel.
+    /// Plans that selected a PJRT registry descriptor are forwarded to
+    /// the executor thread; everything else runs in-process.
     pub fn execute_planned(&self, plan: &ExecutionPlan, req: &BlasRequest,
                            fault: Option<Fault>) -> Result<BlasResponse> {
+        if plan.kernel.backend == Backend::Pjrt {
+            let pjrt = self.pjrt.as_ref().ok_or_else(|| {
+                anyhow!("plan selected {} but no PJRT backend is attached",
+                        plan.kernel.name)
+            })?;
+            return pjrt.execute(req, plan.policy, fault);
+        }
         let _pool = self.enter_pool();
         Ok(execute_plan(req, plan, &self.profile, fault))
     }
@@ -218,46 +259,6 @@ impl Router {
             })
             .collect()
     }
-
-    /// Execute a request under a policy with an optional planned fault.
-    ///
-    /// Compatibility shim: plans per request, then delegates to the
-    /// same [`Router::execute_planned`] hot path the server's workers
-    /// use — there is one native execution code path. The serving
-    /// pipeline resolves plans at admission instead; this entry remains
-    /// for the CLI, examples, and benches that execute outside a
-    /// server.
-    pub fn execute(&self, req: &BlasRequest, policy: FtPolicy,
-                   fault: Option<Fault>) -> Result<BlasResponse> {
-        match self.resolve(req, policy) {
-            Backend::Pjrt => self
-                .pjrt
-                .as_ref()
-                .expect("resolve() returned Pjrt without a backend")
-                .execute(req, policy, fault),
-            native => {
-                let variant = native
-                    .variant()
-                    .expect("native backend without a kernel variant");
-                // one execution code path: execute_native is the thin
-                // planner wrapper over the same execute_plan hot path
-                // the server's workers use
-                let _pool = self.enter_pool();
-                Ok(execute_native(req, variant, &self.profile, policy, fault))
-            }
-        }
-    }
-}
-
-/// Resolve a request against the registry, panicking on the impossible
-/// (the registry's totality test guarantees every shipped routine has a
-/// kernel for every policy).
-fn plan_or_panic(req: &BlasRequest, variant: Impl, profile: &Profile,
-                 policy: FtPolicy) -> ExecutionPlan {
-    Planner::new(profile).plan(req, variant, policy).unwrap_or_else(|| {
-        panic!("no registered kernel serves {}/{} under {}", req.routine(),
-               variant.name(), policy.name())
-    })
 }
 
 /// Run a resolved plan's kernel. Protection follows the hybrid strategy
@@ -283,24 +284,10 @@ pub fn execute_plan(req: &BlasRequest, plan: &ExecutionPlan,
     BlasResponse {
         result,
         ft,
-        backend: Backend::for_variant(plan.kernel.variant),
+        backend: plan.kernel.backend,
         kernel: plan.kernel.name,
         exec_seconds: t0.elapsed().as_secs_f64(),
     }
-}
-
-/// Thin compat wrapper over the planned path for callers without a
-/// [`Router`] (benches, examples, oracle comparisons): resolve the
-/// request against the registry and run the planned kernel through the
-/// same [`execute_plan`] entry the serving pipeline uses.
-pub fn execute_native(req: &BlasRequest, variant: Impl, profile: &Profile,
-                      policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
-    let plan = plan_or_panic(req, variant, profile, policy);
-    let mut resp = execute_plan(req, &plan, profile, fault);
-    // report the caller's requested variant family (protected kernels
-    // register under the tuned substrate, as before)
-    resp.backend = Backend::for_variant(variant);
-    resp
 }
 
 #[cfg(test)]
@@ -311,8 +298,19 @@ mod tests {
     use crate::util::matrix::{allclose, Matrix};
     use crate::util::rng::Rng;
 
+    /// Plan under a variant preference, then run the planned kernel —
+    /// the same two calls every out-of-server caller now makes.
+    fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+                  policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+        let sel = SelectionPolicy::for_variant(variant);
+        let plan = Planner::new(profile)
+            .plan(req, &sel, policy)
+            .expect("registry serves every shipped routine/policy");
+        execute_plan(req, &plan, profile, fault)
+    }
+
     fn oracle(req: &BlasRequest) -> BlasResponse {
-        execute_native(req, Impl::Naive, &Profile::default(), FtPolicy::None, None)
+        run_native(req, Impl::Naive, &Profile::default(), FtPolicy::None, None)
     }
 
     fn close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
@@ -364,8 +362,8 @@ mod tests {
             for req in sample_requests(&mut g.rng, n) {
                 let want = oracle(&req);
                 for v in [Impl::Blocked, Impl::Tuned] {
-                    let got = execute_native(&req, v, &Profile::default(),
-                                             FtPolicy::None, None);
+                    let got = run_native(&req, v, &Profile::default(),
+                                         FtPolicy::None, None);
                     ensure(close(&got.result, &want.result, 1e-8),
                            format!("{} [{}]", req.routine(), v.name()))?;
                 }
@@ -380,8 +378,8 @@ mod tests {
             let n = 16 + 8 * g.rng.below(4);
             for req in sample_requests(&mut g.rng, n) {
                 let want = oracle(&req);
-                let got = execute_native(&req, Impl::Tuned, &Profile::default(),
-                                         FtPolicy::Hybrid, None);
+                let got = run_native(&req, Impl::Tuned, &Profile::default(),
+                                     FtPolicy::Hybrid, None);
                 ensure(got.ft.errors_detected == 0,
                        format!("{}: spurious detection", req.routine()))?;
                 ensure(close(&got.result, &want.result, 1e-8),
@@ -408,8 +406,8 @@ mod tests {
                     j: g.rng.below(n),
                     delta: g.rng.range(10.0, 1e5),
                 };
-                let got = execute_native(&req, Impl::Tuned, &Profile::default(),
-                                         FtPolicy::Hybrid, Some(fault));
+                let got = run_native(&req, Impl::Tuned, &Profile::default(),
+                                     FtPolicy::Hybrid, Some(fault));
                 ensure(got.ft.errors_detected >= 1,
                        format!("{}: fault not detected", req.routine()))?;
                 ensure(close(&got.result, &want.result, 1e-7),
@@ -432,22 +430,58 @@ mod tests {
             c: Matrix::zeros(n, n),
         };
         let profile = Profile::default();
-        let got = execute_native(&req, Impl::Tuned, &profile,
-                                 FtPolicy::None, None);
+        let got = run_native(&req, Impl::Tuned, &profile,
+                             FtPolicy::None, None);
         assert_eq!(got.kernel, "dgemm/tuned");
-        let got = execute_native(&req, Impl::Tuned, &profile,
-                                 FtPolicy::Hybrid, None);
+        let got = run_native(&req, Impl::Tuned, &profile,
+                             FtPolicy::Hybrid, None);
         assert_eq!(got.kernel, "dgemm/abft-fused");
-        let got = execute_native(&req, Impl::Tuned,
-                                 &profile.clone().with_threads(4),
-                                 FtPolicy::Hybrid, None);
+        let got = run_native(&req, Impl::Tuned,
+                             &profile.clone().with_threads(4),
+                             FtPolicy::Hybrid, None);
         assert_eq!(got.kernel, "dgemm/abft-fused-mt");
         // Router::plan describes a request (and, since batches share a
-        // (routine, dim) key, a whole batch) without executing it
+        // kernel-id key, a whole batch) without executing it
         let router = Router::native_only(profile, Backend::NativeTuned);
         let plan = router.plan(&req, FtPolicy::Hybrid).unwrap();
         assert_eq!(plan.kernel.name, "dgemm/abft-fused");
         assert!(plan.describe().contains("dgemm/abft-fused"));
+    }
+
+    /// Capability selection across peer backends: an unavailable PJRT
+    /// backend is denied (not planned), and a GPU-sim preference selects
+    /// the simulated executor tier whose planned run matches the oracle.
+    #[test]
+    fn peer_backend_selection_and_fallback() {
+        let mut rng = Rng::new(0x6B);
+        let n = 24;
+        let req = BlasRequest::Dgemm {
+            alpha: 1.0,
+            a: Matrix::random(n, n, &mut rng),
+            b: Matrix::random(n, n, &mut rng),
+            beta: 0.0,
+            c: Matrix::zeros(n, n),
+        };
+        let want = oracle(&req);
+        // no PJRT backend attached: preference falls back to tuned
+        let router = Router::native_only(Profile::default(), Backend::Pjrt);
+        let plan = router.plan(&req, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/tuned");
+        // GPU-sim preference: the protected warp-tiled tier runs
+        let router = router
+            .with_selection(SelectionPolicy::for_backend(Backend::GpuSim));
+        let plan = router.plan(&req, FtPolicy::Hybrid).unwrap();
+        assert_eq!(plan.kernel.name, "dgemm/gpusim-wmma16");
+        let resp = router.execute_planned(&plan, &req, None).unwrap();
+        assert_eq!(resp.backend, Backend::GpuSim);
+        assert_eq!(resp.ft, FtReport::none());
+        assert!(close(&resp.result, &want.result, 1e-8));
+        // …and corrects a planned strike end to end
+        let fault = Fault { step: 0, i: 7, j: 11, delta: 4e4 };
+        let resp = router.execute_planned(&plan, &req, Some(fault)).unwrap();
+        assert!(resp.ft.errors_detected >= 1);
+        assert_eq!(resp.ft.errors_detected, resp.ft.errors_corrected);
+        assert!(close(&resp.result, &want.result, 1e-7));
     }
 
     /// One `execute_batch` call serves every item of a fused batch:
@@ -531,14 +565,14 @@ mod tests {
         };
         let want = oracle(&req);
         let profile = Profile::default();
-        let clean = execute_native(&req, Impl::Tuned, &profile,
-                                   FtPolicy::AbftWeighted, None);
+        let clean = run_native(&req, Impl::Tuned, &profile,
+                               FtPolicy::AbftWeighted, None);
         assert_eq!(clean.kernel, "dgemm/abft-weighted");
         assert_eq!(clean.ft.errors_detected, 0);
         assert!(close(&clean.result, &want.result, 1e-8));
         let fault = Fault { step: 0, i: 17, j: 31, delta: 7.5e4 };
-        let got = execute_native(&req, Impl::Tuned, &profile,
-                                 FtPolicy::AbftWeighted, Some(fault));
+        let got = run_native(&req, Impl::Tuned, &profile,
+                             FtPolicy::AbftWeighted, Some(fault));
         assert!(got.ft.errors_detected >= 1);
         assert_eq!(got.ft.errors_detected, got.ft.errors_corrected);
         assert!(close(&got.result, &want.result, 1e-7));

@@ -12,12 +12,16 @@
 //!
 //! 1. **Admission** — `submit` resolves the request's [`ExecutionPlan`]
 //!    through the shared [`PlanCache`] (memoized by routine × dim ×
-//!    policy × backend) and enqueues the job keyed by **planned kernel
-//!    id**, so requests that run the same registered kernel batch
-//!    together regardless of shape. When the profile sets an
-//!    `admission_depth`, a submission arriving at a full queue is shed
-//!    with a typed [`Error::Overloaded`] (and a `shed` count in the
-//!    ledger) instead of growing the queue without bound.
+//!    policy × selection) and enqueues the job keyed by **planned
+//!    kernel id**, so requests that run the same registered kernel
+//!    batch together regardless of shape. Every admitted job is
+//!    planned — PJRT and GPU-sim requests resolve to their own registry
+//!    descriptors — and a request no descriptor can serve is rejected
+//!    at admission with a typed [`Error::NoCandidate`] carrying the
+//!    planner's exhaustive per-descriptor diagnostics. When the profile
+//!    sets an `admission_depth`, a submission arriving at a full queue
+//!    is shed with a typed [`Error::Overloaded`] (and a `shed` count in
+//!    the ledger) instead of growing the queue without bound.
 //! 2. **Scheduling** — workers drain the oldest *admissible* group: a
 //!    thread-budget ledger debits each in-flight batch's thread grant
 //!    against the configured budget, deferring MT-kernel batches that
@@ -31,7 +35,8 @@
 //!    currency.
 //! 3. **Execution** — workers run the pre-resolved plan via
 //!    [`Router::execute_planned`]; no planner lookup happens on the hot
-//!    path. Unplanned (PJRT) jobs fall back to `Router::execute`. A
+//!    path (plans that selected the PJRT descriptor are forwarded to
+//!    the executor thread inside the router). A
 //!    drained batch of ≥2 small GEMMs whose shared plan has a
 //!    batch-fused sibling kernel
 //!    ([`crate::coordinator::registry::KernelRegistry::batched_sibling`])
@@ -55,7 +60,7 @@ use anyhow::{anyhow, Result};
 use crate::config::SloTable;
 use crate::coordinator::batcher::{Batcher, Pending};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::plan::{ExecutionPlan, PlanCache};
+use crate::coordinator::plan::{ExecutionPlan, PlanCache, Planner};
 use crate::coordinator::registry::{KernelId, KernelRegistry};
 use crate::coordinator::request::{Backend, BlasRequest, BlasResponse};
 use crate::coordinator::router::Router;
@@ -75,6 +80,12 @@ pub enum Error {
     /// queued job could never execute — reject instead of letting the
     /// client's `recv` hang on a reply that will never come.
     ShuttingDown { shard: usize },
+    /// No registered kernel satisfies the request under the effective
+    /// selection policy. `detail` is the planner's exhaustive
+    /// diagnostic: every descriptor considered and the capability each
+    /// one missed (the gateway maps this to a 400 with the text
+    /// attached).
+    NoCandidate { shard: usize, detail: String },
 }
 
 impl std::fmt::Display for Error {
@@ -87,6 +98,9 @@ impl std::fmt::Display for Error {
             ),
             Error::ShuttingDown { shard } => {
                 write!(f, "shard {shard} is shutting down")
+            }
+            Error::NoCandidate { shard, detail } => {
+                write!(f, "shard {shard}: {detail}")
             }
         }
     }
@@ -111,6 +125,10 @@ impl Error {
             Error::ShuttingDown { shard } => base
                 .field("kind", Json::Str("shutting_down".into()))
                 .field("shard", Json::Int(*shard as u64)),
+            Error::NoCandidate { shard, detail } => base
+                .field("kind", Json::Str("no_candidate".into()))
+                .field("shard", Json::Int(*shard as u64))
+                .field("detail", Json::Str(detail.clone())),
         }
     }
 }
@@ -119,15 +137,14 @@ impl Error {
 /// response, or the typed admission rejection.
 pub type Admitted = std::result::Result<Receiver<Result<BlasResponse>>, Error>;
 
-/// Scheduling key of a queued job. Planned (native) jobs group by the
-/// kernel the admission-time planner chose, and carry the plan's thread
-/// grant so the budget check needs no job inspection; unplanned (PJRT)
-/// jobs keep the `(routine, dim)` grouping that matches their
-/// shape-specialized artifacts.
+/// Scheduling key of a queued job: the kernel the admission-time
+/// planner chose (every admitted job is planned — PJRT and GPU-sim
+/// requests resolve to their own registry descriptors) plus the plan's
+/// thread grant, so the budget check needs no job inspection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-enum BatchKey {
-    Planned { kernel: KernelId, threads: u16 },
-    Direct { routine: &'static str, dim: usize },
+struct BatchKey {
+    kernel: KernelId,
+    threads: u16,
 }
 
 impl BatchKey {
@@ -135,17 +152,14 @@ impl BatchKey {
     /// size of its admission ticket against the compute pool (or, with
     /// `--no-pool`, the scoped threads its frame will spawn).
     fn thread_cost(&self) -> usize {
-        match self {
-            BatchKey::Planned { threads, .. } => (*threads).max(1) as usize,
-            BatchKey::Direct { .. } => 1,
-        }
+        self.threads.max(1) as usize
     }
 }
 
 struct Job {
     req: BlasRequest,
-    /// Admission-time plan (None on the PJRT path).
-    plan: Option<ExecutionPlan>,
+    /// Admission-time plan.
+    plan: ExecutionPlan,
     enqueued: Instant,
     reply: Sender<Result<BlasResponse>>,
 }
@@ -296,22 +310,33 @@ impl ServerHandle {
         }
     }
 
-    /// Submit with typed admission control: plans the request, then
-    /// enqueues it unless the queue is at the admission watermark.
+    /// Submit with typed admission control: plans the request under the
+    /// router's effective selection policy, then enqueues it unless the
+    /// queue is at the admission watermark. A request no registered
+    /// descriptor can serve is rejected here with
+    /// [`Error::NoCandidate`] and the planner's full diagnostics.
     pub fn try_submit(&self, req: BlasRequest) -> Admitted {
         let policy = self.shared.policy;
-        let backend = self.shared.router.resolve(&req, policy);
+        let sel = self.shared.router.selection_for(&req, policy);
         let plan = self
             .shared
             .plans
-            .resolve(req.routine(), req.dim(), policy, backend);
+            .resolve(req.routine(), req.dim(), policy, &sel);
+        let Some(plan) = plan else {
+            let detail = Planner::new(self.shared.plans.profile())
+                .select_dims(req.routine(), req.dim(), &sel, policy)
+                .expect_err("cache said no plan exists")
+                .to_string();
+            return Err(Error::NoCandidate { shard: self.shared.shard,
+                                            detail });
+        };
         self.enqueue(req, plan).map_err(|(e, _)| e)
     }
 
     /// Cluster entry: enqueue a request whose plan was already resolved
     /// by the cluster's shared cache (no shard-local planning).
     pub(crate) fn submit_planned(&self, req: BlasRequest,
-                                 plan: Option<ExecutionPlan>) -> Admitted {
+                                 plan: ExecutionPlan) -> Admitted {
         self.enqueue(req, plan).map_err(|(e, _)| e)
     }
 
@@ -319,7 +344,7 @@ impl ServerHandle {
     /// back to the caller, so retry wrappers re-submit the same value
     /// without a defensive clone per attempt.
     pub(crate) fn submit_planned_returning(
-        &self, req: BlasRequest, plan: Option<ExecutionPlan>)
+        &self, req: BlasRequest, plan: ExecutionPlan)
         -> std::result::Result<Receiver<Result<BlasResponse>>,
                                (Error, BlasRequest)> {
         self.enqueue(req, plan)
@@ -328,18 +353,12 @@ impl ServerHandle {
     /// The single enqueue path: admission watermark, batch-key
     /// derivation, push, wake. Rejections return the request unconsumed
     /// alongside the typed error.
-    fn enqueue(&self, req: BlasRequest, plan: Option<ExecutionPlan>)
+    fn enqueue(&self, req: BlasRequest, plan: ExecutionPlan)
                -> std::result::Result<Receiver<Result<BlasResponse>>,
                                       (Error, BlasRequest)> {
-        let key = match &plan {
-            Some(p) => BatchKey::Planned {
-                kernel: p.kernel_id,
-                threads: p.thread_cost() as u16,
-            },
-            None => {
-                let (routine, dim) = req.batch_key();
-                BatchKey::Direct { routine, dim }
-            }
+        let key = BatchKey {
+            kernel: plan.kernel_id,
+            threads: plan.thread_cost() as u16,
         };
         let (reply, rx) = channel();
         {
@@ -551,16 +570,12 @@ fn try_fused(shared: &Shared, router: &Router, batch: Batch,
     if batch.len() < 2 {
         return Some(batch); // nothing to fuse
     }
-    let Some(plan) = batch[0].item.plan else {
-        return Some(batch); // unplanned (PJRT) batches never fuse
-    };
+    let plan = batch[0].item.plan;
     let registry = KernelRegistry::global();
     let Some(bk) = registry.batched_sibling(plan.kernel) else {
         return Some(batch);
     };
-    if !batch.iter().all(|p| {
-        p.item.plan.is_some() && bk.admits_batch(p.item.req.dim())
-    }) {
+    if !batch.iter().all(|p| bk.admits_batch(p.item.req.dim())) {
         return Some(batch);
     }
     let bk_id = registry.id_of(bk).expect("batched kernels live in the table");
@@ -620,7 +635,6 @@ fn try_fused(shared: &Shared, router: &Router, batch: Batch,
 
 fn worker_loop(shared: Arc<Shared>) {
     let router = shared.router.clone();
-    let policy = shared.policy;
     loop {
         let (batch, cost) = {
             let mut s = shared.sched.lock().unwrap();
@@ -666,10 +680,10 @@ fn worker_loop(shared: Arc<Shared>) {
             // strikes per planned execution; otherwise the shard's own
             // planned injector fires on its call steps.
             let fault = match router.campaign() {
-                Some(campaign) => job.plan.as_ref().and_then(|p| {
-                    campaign.arm(p.kernel_id, p.kernel.scheme,
+                Some(campaign) => {
+                    campaign.arm(job.plan.kernel_id, job.plan.kernel.scheme,
                                  job.req.dim().max(1))
-                }),
+                }
                 None => {
                     let step =
                         shared.steps.fetch_add(1, Ordering::SeqCst) as usize;
@@ -687,19 +701,10 @@ fn worker_loop(shared: Arc<Shared>) {
             };
             let injected = fault.is_some() as u64;
             // SLO targets key off the executed kernel's BLAS level
-            // (plans know it; unplanned PJRT jobs fall back to the
-            // request's own level)
-            let level = match &job.plan {
-                Some(plan) => plan.kernel.level,
-                None => job.req.level(),
-            };
-            // the hot path: pre-resolved plans execute directly; only
-            // unplanned (PJRT) jobs go through the router's per-request
-            // resolution shim
-            let result = match &job.plan {
-                Some(plan) => router.execute_planned(plan, &job.req, fault),
-                None => router.execute(&job.req, policy, fault),
-            };
+            let level = job.plan.kernel.level;
+            // the hot path: every job carries its admission-time plan;
+            // PJRT-selected plans are forwarded inside the router
+            let result = router.execute_planned(&job.plan, &job.req, fault);
             match result {
                 Ok(resp) => {
                     shared.metrics.record_completion(
@@ -730,7 +735,7 @@ fn worker_loop(shared: Arc<Shared>) {
 mod tests {
     use super::*;
     use crate::config::Profile;
-    use crate::coordinator::plan::PlanCache;
+    use crate::coordinator::plan::{CapRequirement, PlanCache, SelectionPolicy};
     use crate::util::matrix::Matrix;
     use crate::util::rng::Rng;
 
@@ -890,12 +895,13 @@ mod tests {
     fn scheduler_defers_mt_batches_over_budget() {
         let profile = Profile::cascade_sim(); // threads = 4
         let cache = PlanCache::new(profile.clone());
+        let tuned = SelectionPolicy::for_backend(Backend::NativeTuned);
         let mt = cache
-            .resolve("dgemm", 96, FtPolicy::None, Backend::NativeTuned)
+            .resolve("dgemm", 96, FtPolicy::None, &tuned)
             .unwrap();
         assert_eq!(mt.kernel.name, "dgemm/tuned-mt");
         let serial = cache
-            .resolve("ddot", 256, FtPolicy::None, Backend::NativeTuned)
+            .resolve("ddot", 256, FtPolicy::None, &tuned)
             .unwrap();
         let metrics = Metrics::new();
         let mut sched = Sched {
@@ -905,13 +911,13 @@ mod tests {
             head_age: None,
         };
         let job = |plan: &ExecutionPlan, req: BlasRequest| {
-            let key = BatchKey::Planned {
+            let key = BatchKey {
                 kernel: plan.kernel_id,
                 threads: plan.thread_cost() as u16,
             };
             let (reply, _rx) = channel();
             std::mem::forget(_rx); // keep the send side alive for the test
-            (key, Job { req, plan: Some(*plan), enqueued: Instant::now(), reply })
+            (key, Job { req, plan: *plan, enqueued: Instant::now(), reply })
         };
         let mut rng = Rng::new(0xBEEF);
         let gemm = BlasRequest::Dgemm {
@@ -932,14 +938,14 @@ mod tests {
         // budget 6: in-flight 4 + MT 4 > 6 defers, + serial 1 = 5 fits
         let (batch, cost) = sched.pop_admissible(6, 4, &metrics).unwrap();
         assert_eq!(cost, 1, "serial batch must flow past the deferred MT");
-        assert!(matches!(batch[0].key, BatchKey::Planned { threads: 1, .. }));
+        assert_eq!(batch[0].key.threads, 1);
         assert_eq!(sched.in_flight_threads, 5);
         // nothing admissible for the MT batch until the ledger drains
         assert!(sched.pop_admissible(6, 4, &metrics).is_none());
         sched.in_flight_threads = 0;
         let (batch, cost) = sched.pop_admissible(6, 4, &metrics).unwrap();
         assert_eq!(cost, 4);
-        assert!(matches!(batch[0].key, BatchKey::Planned { threads: 4, .. }));
+        assert_eq!(batch[0].key.threads, 4);
         let snap = metrics.snapshot();
         // exactly one real bypass: the serial batch jumping the MT
         // group; the fruitless pass in between is not counted
@@ -956,11 +962,12 @@ mod tests {
     fn aged_head_group_reserves_the_budget() {
         let profile = Profile::cascade_sim(); // threads = 4
         let cache = PlanCache::new(profile.clone());
+        let tuned = SelectionPolicy::for_backend(Backend::NativeTuned);
         let mt = cache
-            .resolve("dgemm", 96, FtPolicy::None, Backend::NativeTuned)
+            .resolve("dgemm", 96, FtPolicy::None, &tuned)
             .unwrap();
         let serial = cache
-            .resolve("ddot", 256, FtPolicy::None, Backend::NativeTuned)
+            .resolve("ddot", 256, FtPolicy::None, &tuned)
             .unwrap();
         let metrics = Metrics::new();
         let mut sched = Sched {
@@ -969,14 +976,13 @@ mod tests {
             head_age: None,
         };
         let job = |plan: &ExecutionPlan, req: BlasRequest| {
-            let key = BatchKey::Planned {
+            let key = BatchKey {
                 kernel: plan.kernel_id,
                 threads: plan.thread_cost() as u16,
             };
             let (reply, _rx) = channel();
             std::mem::forget(_rx);
-            (key, Job { req, plan: Some(*plan), enqueued: Instant::now(),
-                        reply })
+            (key, Job { req, plan: *plan, enqueued: Instant::now(), reply })
         };
         let mut rng = Rng::new(0xA9E);
         let gemm = || BlasRequest::Dgemm {
@@ -1003,8 +1009,7 @@ mod tests {
             let (batch, cost) =
                 sched.pop_admissible(6, LIMIT, &metrics).unwrap();
             assert_eq!(cost, 1, "bypass {bypass} must drain a serial batch");
-            assert!(matches!(batch[0].key,
-                             BatchKey::Planned { threads: 1, .. }));
+            assert_eq!(batch[0].key.threads, 1);
             sched.in_flight_threads -= 1; // the serial batch completes
         }
         // ...and from now on the budget is reserved: serial batches
@@ -1016,7 +1021,7 @@ mod tests {
         sched.in_flight_threads = 0;
         let (batch, cost) = sched.pop_admissible(6, LIMIT, &metrics).unwrap();
         assert_eq!(cost, 4, "the aged MT head drains first");
-        assert!(matches!(batch[0].key, BatchKey::Planned { threads: 4, .. }));
+        assert_eq!(batch[0].key.threads, 4);
         // reservation cleared: the remaining serial traffic flows again
         let (_, cost) = sched.pop_admissible(6, LIMIT, &metrics).unwrap();
         assert_eq!(cost, 1);
@@ -1103,6 +1108,33 @@ mod tests {
         assert_eq!(m.errors_corrected, 17);
         assert_eq!(m.errors_escaped, 0);
         assert_eq!(m.injection_mode, "campaign");
+    }
+
+    /// An unsatisfiable selection policy is rejected at admission with
+    /// the planner's exhaustive diagnostics — no job is ever queued.
+    #[test]
+    fn unsatisfiable_selection_is_rejected_at_admission() {
+        let sel = SelectionPolicy {
+            require: vec![CapRequirement::Precision("f32".into())],
+            ..SelectionPolicy::default()
+        };
+        let router = Router::native_only(Profile::default(),
+                                         Backend::NativeTuned)
+            .with_selection(sel);
+        let server = Server::start(router, FtPolicy::None, 1, None, 0);
+        let handle = server.handle();
+        let req = BlasRequest::Ddot { x: vec![1.0; 8], y: vec![1.0; 8] };
+        let err = handle.try_submit(req).unwrap_err();
+        let Error::NoCandidate { shard, detail } = &err else {
+            panic!("expected NoCandidate, got {err:?}");
+        };
+        assert_eq!(*shard, 0);
+        assert!(detail.contains("no candidate kernel for ddot"));
+        assert!(detail.contains("lacks required precision=f32"));
+        let json = err.to_json().render();
+        assert!(json.contains("\"kind\":\"no_candidate\""), "{json}");
+        let m = server.shutdown();
+        assert_eq!(m.completed, 0);
     }
 
     /// The admission error is typed (clients match on it to back off)

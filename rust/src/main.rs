@@ -9,6 +9,8 @@
 //!                                          cluster (docs/PROTOCOL.md)
 //! ftblas soak [--quick] [...]              timed fault-injection campaign
 //!                                          on an elastic tier (CI gate)
+//! ftblas backends [--json]                 capability catalog: backends,
+//!                                          health, kernel descriptors
 //! ftblas bench --exp ID [--quick]          regenerate a paper table/figure
 //! ftblas bench-diff BASE.json CAND.json    gate candidate bench rows
 //!                                          against a committed baseline
@@ -28,8 +30,11 @@ use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::gateway::{self, Envelope, Gateway, GatewayConfig};
 use ftblas::coordinator::http;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
-use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
-use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::coordinator::plan::{CapRequirement, Planner, SelectionPolicy};
+use ftblas::coordinator::registry;
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResponse,
+                                   BlasResult};
+use ftblas::coordinator::router::{execute_plan, Router};
 use ftblas::coordinator::trace::{self, Burst, TraceConfig, TraceShape};
 use ftblas::ft::injector::{CampaignConfig, CampaignTarget, Fault,
                            InjectorConfig};
@@ -89,14 +94,17 @@ fn usage() -> ! {
 USAGE:
   ftblas artifacts [--profile skylake_sim|cascade_sim]
   ftblas verify    [--profile P] [--quick]
-  ftblas run --routine dgemm --n 256 [--backend tuned|naive|blocked|simd|pjrt]
+  ftblas run --routine dgemm --n 256
+             [--backend naive|blocked|tuned|simd|pjrt|gpu-sim]
              [--variant naive|blocked|tuned|simd] [--threads T]
              [--ft none|hybrid|abft-unfused|abft-weighted] [--inject]
              [--profile P]
   ftblas serve [--requests N] [--ft P] [--shards S] [--min-shards M]
              [--max-shards X] [--scale-interval MS] [--admission-depth D]
              [--workers W] [--max-batch B] [--thread-budget T] [--threads T]
-             [--vec-len N] [--mat-dim N] [--backend tuned|simd]
+             [--vec-len N] [--mat-dim N]
+             [--backend naive|blocked|tuned|simd|pjrt|gpu-sim]
+             [--require cap=value[,cap=value]] [--deny backend[,backend]]
              [--trace steady|burst|small-gemm] [--burst F]
              [--pool-workers N] [--no-pool]
              [--inject] [--profile P]
@@ -112,9 +120,16 @@ USAGE:
               --pool-workers: size of the cluster's persistent compute
               pool (default: the thread budget); --no-pool: scoped
               fork/join per kernel frame — the A/B baseline, bitwise
-              identical results)
+              identical results;
+              --backend seeds the selection ladder's preference order;
+              --require precision=f64 / scheme=S / threaded=B /
+              batched=B / feature=F constrains every plan to kernels
+              with that capability, --deny excludes whole backends —
+              together they build the tier's SelectionPolicy)
   ftblas gateway [--addr HOST:PORT] [--workers N (HTTP handler threads)]
-             [--ft P] [--backend tuned|simd] [--shards S] [--min-shards M]
+             [--ft P] [--backend naive|blocked|tuned|simd|pjrt|gpu-sim]
+             [--require cap=value[,cap=value]] [--deny backend[,backend]]
+             [--shards S] [--min-shards M]
              [--max-shards X] [--admission-depth D] [--shard-workers W]
              [--threads T] [--retry-attempts N] [--max-deadline-s S]
              [--max-dim N (envelope dim cap, default 4096 — operand
@@ -124,9 +139,13 @@ USAGE:
              [--self-check] [--out PATH] [--profile P]
              (dependency-free HTTP/1.1 front end over the elastic
               cluster — the wire contract is docs/PROTOCOL.md. POST
-              /v1/blas takes an ftblas.request.v1 envelope; GET
-              /healthz /metrics /topology /campaign serve live
-              operational state. Typed outcomes map onto status codes:
+              /v1/blas takes an ftblas.request.v1 envelope, or a v2
+              envelope whose `routing` object overlays per-request
+              backend pins / allow / deny / capability requirements on
+              the flags' SelectionPolicy; GET
+              /healthz /metrics /topology /campaign /backends serve
+              live operational state. Typed outcomes map onto status
+              codes:
               Overloaded -> 429 with Retry-After, planner no-candidate
               -> 400 with the diagnostic, deadline -> 504. --campaign
               arms a seeded injection campaign under wire load;
@@ -142,7 +161,9 @@ USAGE:
              [--min-shards M] [--max-shards X] [--admission-depth D]
              [--workers W] [--threads T] [--mat-dim N] [--vec-len N]
              [--out PATH] [--pool-workers N] [--no-pool]
-             [--trace steady|burst|small-gemm] [--backend tuned|simd]
+             [--trace steady|burst|small-gemm]
+             [--backend naive|blocked|tuned|simd|pjrt|gpu-sim]
+             [--require cap=value[,cap=value]] [--deny backend[,backend]]
              [--profile P]
              (timed, rate-controlled fault-injection campaign against an
               elastic burst trace; exits nonzero unless the tier grew,
@@ -150,8 +171,16 @@ USAGE:
               the injected/detected/corrected counts balance exactly —
               the CI reliability gate. Unless --no-pool, the gate also
               asserts the persistent compute pool woke parked workers
-              and leaked no tasks. --out writes the soak report as
-              JSON.)
+              and leaked no tasks. --backend gpu-sim soaks the
+              simulated warp executors' fused-ABFT tiers. --out writes
+              the soak report as JSON.)
+  ftblas backends [--json]
+             (capability catalog: every backend with its health probe
+              and per-kernel descriptor records — scheme, precision,
+              threading, dim caps, served policies, CPU features,
+              selection counts. --json emits the same
+              ftblas.backends.v1 document the gateway's GET /backends
+              route serves.)
   ftblas bench --exp smoke|table1|fig5|fig6|fig7|fig8a|fig8b|fig9|fig10|fig11|all
              [--quick] [--profile P]
              (--exp smoke also takes --out PATH to write its rows as JSON)
@@ -183,6 +212,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args, profile),
         "gateway" => cmd_gateway(&args, profile),
         "soak" => cmd_soak(&args, profile),
+        "backends" => cmd_backends(&args),
         "bench" => {
             let exp = args.get("exp", "all");
             let mut ctx = BenchCtx::with_artifacts(profile, args.has("quick"));
@@ -194,6 +224,88 @@ fn main() -> Result<()> {
         "bench-diff" => cmd_bench_diff(&args),
         _ => usage(),
     }
+}
+
+/// Desugar the selection flags `serve`, `soak`, and `gateway` share:
+/// `--backend` seeds the preference order, `--require
+/// cap=value[,cap=value]` adds capability requirements every plan must
+/// satisfy, and `--deny backend[,backend]` excludes whole backends.
+/// The result is the [`SelectionPolicy`] the tier's router serves.
+fn selection_args(args: &Args, cmd: &str)
+                  -> Result<(Backend, SelectionPolicy)> {
+    let name = args.get("backend", "tuned");
+    let backend = Backend::by_name(&name).ok_or_else(|| {
+        anyhow!("{cmd} --backend wants naive|blocked|tuned|simd|pjrt|\
+                 gpu-sim, got `{name}`")
+    })?;
+    let mut sel = SelectionPolicy::for_backend(backend);
+    if let Some(spec) = args.flags.get("deny") {
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let be = Backend::by_name(item).ok_or_else(|| {
+                anyhow!("--deny: unknown backend `{item}` (want naive|\
+                         blocked|tuned|simd|pjrt|gpu-sim)")
+            })?;
+            sel = sel.with_denied(be);
+        }
+    }
+    if let Some(spec) = args.flags.get("require") {
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let (key, value) = item.split_once('=').ok_or_else(|| {
+                anyhow!("--require wants cap=value (e.g. precision=f64, \
+                         scheme=abft-fused, threaded=true), got `{item}`")
+            })?;
+            sel.require.push(CapRequirement::parse(key, value)
+                .map_err(|e| anyhow!("--require: {e}"))?);
+        }
+    }
+    Ok((backend, sel))
+}
+
+/// `ftblas backends [--json]` — the capability catalog: every backend
+/// with its health probe and per-kernel descriptor records, the same
+/// `ftblas.backends.v1` document the gateway's `GET /backends` route
+/// serves (one serializer, two transports).
+fn cmd_backends(args: &Args) -> Result<()> {
+    let doc = registry::backends_json(None);
+    if args.has("json") {
+        println!("{}", doc.render());
+        return Ok(());
+    }
+    let empty: &[Json] = &[];
+    let backends = doc.get("backends").and_then(Json::as_arr)
+        .unwrap_or(empty);
+    for be in backends {
+        let kernels = be.get("kernels").and_then(Json::as_arr)
+            .unwrap_or(empty);
+        println!("{} — {} ({} kernels)",
+                 be.get("backend").and_then(Json::as_str).unwrap_or("?"),
+                 be.get("health").and_then(Json::as_str).unwrap_or("?"),
+                 kernels.len());
+        for k in kernels {
+            let field = |n: &str| k.get(n)
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            let policies = k.get("policies").and_then(Json::as_arr)
+                .unwrap_or(empty)
+                .iter()
+                .filter_map(Json::as_str)
+                .collect::<Vec<_>>()
+                .join(",");
+            // max_dim 0 = uncapped; render as "-" so the table reads as
+            // the capability it is, not a zero-sized kernel
+            let max_dim = match k.get("max_dim").and_then(Json::as_f64) {
+                Some(d) if d > 0.0 => format!("{}", d as u64),
+                _ => "-".to_string(),
+            };
+            println!("  {:<28} scheme={:<13} threaded={:<5} max_dim={:<6} \
+                      policies={}",
+                     field("name"), field("scheme"),
+                     matches!(k.get("threaded"), Some(Json::Bool(true))),
+                     max_dim, policies);
+        }
+    }
+    Ok(())
 }
 
 /// `ftblas bench-diff BASELINE CANDIDATE` — the committed-perf gate.
@@ -362,18 +474,19 @@ fn cmd_verify(profile: &Profile, quick: bool) -> Result<()> {
 
     for policy in [FtPolicy::None, FtPolicy::Hybrid] {
         for req in &reqs {
-            let backend = router.resolve(req, policy);
-            if backend != Backend::Pjrt {
+            let Some(plan) = router.plan(req, policy) else {
+                continue;
+            };
+            if plan.kernel.backend != Backend::Pjrt {
                 continue; // no artifact for this shape/policy
             }
             total += 1;
-            let want = execute_native(req, Impl::Naive, profile,
-                                      FtPolicy::None, None);
+            let want = run_native_oracle(req, profile);
             let fault = (policy.protects()
                 && !matches!(req, BlasRequest::Dasum { .. }
                              | BlasRequest::Dsyrk { .. }))
                 .then_some(Fault { step: 1, i: 7, j: 11, delta: 1e4 });
-            let got = router.execute(req, policy, fault)?;
+            let got = router.execute_planned(&plan, req, fault)?;
             let injected = fault.is_some();
             let ok = results_close(&got.result, &want.result, 1e-6)
                 && (!injected || got.ft.errors_detected >= 1);
@@ -390,6 +503,17 @@ fn cmd_verify(profile: &Profile, quick: bool) -> Result<()> {
         bail!("artifact verification failed");
     }
     Ok(())
+}
+
+/// The native reference execution `verify` checks artifacts against:
+/// plan onto the pinned naive ladder, unprotected, and run the plan —
+/// the same planned path everything else takes, just fully pinned.
+fn run_native_oracle(req: &BlasRequest, profile: &Profile) -> BlasResponse {
+    let sel = SelectionPolicy::for_variant(Impl::Naive);
+    let plan = Planner::new(profile)
+        .plan(req, &sel, FtPolicy::None)
+        .expect("the naive ladder serves every routine unprotected");
+    execute_plan(req, &plan, profile, None)
 }
 
 fn results_close(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
@@ -484,14 +608,12 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
         cfg.burst =
             Some(Burst { factor: factor.max(1.0), ..Default::default() });
     }
-    // `--backend simd` serves through the SIMD kernel ladder — under a
-    // protecting policy that is the plan whose batched sibling exists,
-    // so the small-gemm shape actually fuses
-    let backend = match args.get("backend", "tuned").as_str() {
-        "tuned" => Backend::NativeTuned,
-        "simd" => Backend::NativeSimd,
-        other => bail!("serve --backend wants tuned|simd, got `{other}`"),
-    };
+    // `--backend` seeds the tier's selection ladder: `simd` is the
+    // preference whose batched sibling exists (so the small-gemm shape
+    // actually fuses), `gpu-sim` routes protected small DGEMMs onto the
+    // simulated warp executors. `--require`/`--deny` tighten the policy
+    // every admission-time plan resolves under.
+    let (backend, selection) = selection_args(args, "serve")?;
     println!("serve: {} requests on {} (shards={}{}, workers/shard={}, \
               threads={}, max_batch={}, admission_depth={}, policy={}, \
               trace={}, backend={}, pool={})",
@@ -531,7 +653,8 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
     };
     let elastic = cluster_cfg.autoscale.is_some();
     let min_shards = profile.min_shards;
-    let router = Router::native_only(profile, backend);
+    let router =
+        Router::native_only(profile, backend).with_selection(selection);
     let cluster = Cluster::start(router, policy, cluster_cfg);
     let handle = cluster.handle();
     let retry = RetryPolicy::default();
@@ -627,16 +750,10 @@ fn cmd_serve(args: &Args, mut profile: Profile) -> Result<()> {
 fn cmd_gateway(args: &Args, mut profile: Profile) -> Result<()> {
     let policy = FtPolicy::by_name(&args.get("ft", "hybrid"))
         .ok_or_else(|| anyhow!("bad --ft"))?;
-    let backend = match args.get("backend", "tuned").as_str() {
-        "tuned" => Backend::NativeTuned,
-        "simd" => Backend::NativeSimd,
-        other => bail!("gateway --backend wants tuned|simd, got `{other}`"),
-    };
-    // planner preflights check the same variant ladder the router serves
-    let prefer = match backend {
-        Backend::NativeSimd => Impl::Simd,
-        _ => Impl::Tuned,
-    };
+    // one SelectionPolicy serves both the router and the gateway's
+    // planner preflights — the preflight must see exactly the ladder
+    // the cluster will resolve under, or the 400s would lie
+    let (backend, selection) = selection_args(args, "gateway")?;
     profile.threads = args.get_usize("threads", profile.threads)?.max(1);
     profile.workers =
         args.get_usize("shard-workers", profile.workers)?.max(1);
@@ -688,7 +805,8 @@ fn cmd_gateway(args: &Args, mut profile: Profile) -> Result<()> {
         autoscale,
         ..ClusterConfig::from_profile(&profile)
     };
-    let router = Router::native_only(profile.clone(), backend);
+    let router = Router::native_only(profile.clone(), backend)
+        .with_selection(selection.clone());
     let cluster = Cluster::start(router, policy, cluster_cfg);
     let handle = cluster.handle();
     let gcfg = GatewayConfig {
@@ -697,7 +815,7 @@ fn cmd_gateway(args: &Args, mut profile: Profile) -> Result<()> {
             attempts: args.get_usize("retry-attempts", 5)? as u32,
             ..RetryPolicy::default()
         },
-        prefer,
+        selection,
         max_deadline: std::time::Duration::from_secs(
             args.get_usize("max-deadline-s", 30)?.max(1) as u64),
         max_dim: args.get_usize("max-dim", 4096)?.max(1),
@@ -919,11 +1037,10 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
     // protected small-GEMM plans carry a batched sibling)
     let shape = TraceShape::from_name(&args.get("trace", "burst"))
         .map_err(|e| anyhow!(e))?;
-    let backend = match args.get("backend", "tuned").as_str() {
-        "tuned" => Backend::NativeTuned,
-        "simd" => Backend::NativeSimd,
-        other => bail!("soak --backend wants tuned|simd, got `{other}`"),
-    };
+    // `--backend gpu-sim` points the campaign at the simulated warp
+    // executors' fused-ABFT tiers; `--require`/`--deny` narrow the
+    // ladder further (vector routines keep their native fallback)
+    let (backend, selection) = selection_args(args, "soak")?;
     let trace_cfg = shape
         .apply(TraceConfig {
             seed: trace_seed,
@@ -954,7 +1071,8 @@ fn cmd_soak(args: &Args, mut profile: Profile) -> Result<()> {
         ..ClusterConfig::from_profile(&profile)
     };
     let min_shards = profile.min_shards;
-    let router = Router::native_only(profile, backend);
+    let router =
+        Router::native_only(profile, backend).with_selection(selection);
     let cluster = Cluster::start(router, policy, cluster_cfg);
     let handle = cluster.handle();
     let retry = RetryPolicy { attempts: 6, ..RetryPolicy::default() };
@@ -1221,10 +1339,12 @@ fn cmd_run(args: &Args, mut profile: Profile) -> Result<()> {
         Router::native_only(profile, backend)
     };
 
-    if let Some(plan) = router.plan(&req, policy) {
-        println!("plan: {}", plan.describe());
-    }
-    let resp = router.execute(&req, policy, fault)?;
+    let plan = router.plan(&req, policy).ok_or_else(|| {
+        anyhow!("no candidate kernel serves {routine} n={n} under \
+                 backend={} policy={}", backend.name(), policy.name())
+    })?;
+    println!("plan: {}", plan.describe());
+    let resp = router.execute_planned(&plan, &req, fault)?;
     println!("routine={} n={n} backend={} kernel={} policy={} took={:.3}ms",
              routine, resp.backend.name(), resp.kernel, policy.name(),
              resp.exec_seconds * 1e3);

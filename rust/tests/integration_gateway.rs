@@ -1,10 +1,12 @@
 //! Golden wire-conformance suite for the HTTP gateway
 //! (`docs/PROTOCOL.md`): every status-code mapping the protocol
 //! promises — 200 with a reproducible checksum, 400 for malformed /
-//! unknown / plan-less envelopes, 429 with `Retry-After` off a
-//! saturated cluster, 504 past the deadline — plus schema validation
-//! of the operational routes, the graceful-drain accounting, and a
-//! seeded injection campaign driven entirely through the wire.
+//! unknown / plan-less envelopes (including unsatisfiable v2 `routing`
+//! selections), 429 with `Retry-After` off a saturated cluster, 504
+//! past the deadline — plus schema validation of the operational
+//! routes (the `ftblas.backends.v1` capability inventory included),
+//! the graceful-drain accounting, and a seeded injection campaign
+//! driven entirely through the wire.
 
 use std::time::Duration;
 
@@ -309,6 +311,33 @@ fn ops_routes_validate_against_their_schemas() {
         _ => None,
     }), Some(false));
 
+    let backends = fetch(&addr, "GET", "/backends", None).unwrap();
+    assert_eq!(backends.status, 200);
+    let doc = parse(&backends.body);
+    assert_eq!(str_of(&doc, "schema"), Some(gateway::BACKENDS_SCHEMA));
+    let list = doc.get("backends").and_then(Json::as_arr).unwrap();
+    assert_eq!(list.len(), 6, "every backend is inventoried");
+    let mut kernels = 0;
+    let mut selected = 0.0;
+    for b in list {
+        assert!(str_of(b, "backend").is_some());
+        assert!(str_of(b, "health").is_some());
+        selected += b.get("selected").and_then(Json::as_f64).unwrap();
+        let ks = b.get("kernels").and_then(Json::as_arr).unwrap();
+        kernels += ks.len();
+        for k in ks {
+            for field in ["name", "routine", "scheme", "precision",
+                          "threaded", "max_dim", "policies",
+                          "cpu_features", "selected"] {
+                assert!(k.get(field).is_some(),
+                        "kernel record missing `{field}`");
+            }
+        }
+    }
+    assert!(kernels > 30, "the full registry is inventoried");
+    assert!(selected >= 1.0,
+            "the served ddot shows up in the selection counts");
+
     let missing = fetch(&addr, "GET", "/nope", None).unwrap();
     assert_eq!(missing.status, 404);
     assert!(parse(&missing.body).get("routes").is_some(),
@@ -320,6 +349,52 @@ fn ops_routes_validate_against_their_schemas() {
     assert_eq!(wrong.status, 405);
     assert_eq!(wrong.header("allow"), Some("GET"));
 
+    gw.shutdown();
+    cluster.shutdown();
+}
+
+/// The v2 `routing` overlay steers execution through the wire: a
+/// gpu-sim pin runs the simulated warp-tier executor (named in the
+/// response), the same envelope without routing rides the native tier,
+/// and an unsatisfiable selection maps to 400 carrying the planner's
+/// exhaustive per-descriptor diagnostics.
+#[test]
+fn v2_routing_pins_backends_and_rejects_unsatisfiable() {
+    let (gw, cluster, addr) = gateway_over(
+        Profile::default().with_shards(1), FtPolicy::Hybrid,
+        GatewayConfig::default());
+    let body = r#"{"schema":"ftblas.request.v2","routine":"dgemm",
+                   "dim":48,"routing":{"backend":"gpu-sim"}}"#;
+    let resp = fetch(&addr, "POST", "/v1/blas", Some(body)).unwrap();
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    let doc = parse(&resp.body);
+    assert_eq!(str_of(&doc, "backend"), Some("gpu-sim"));
+    assert_eq!(str_of(&doc, "kernel"), Some("dgemm/gpusim-wmma16"),
+               "dim 48 under hybrid lands on the 16-wide warp tier");
+    // the same envelope without routing rides the native tier
+    let resp = fetch(&addr, "POST", "/v1/blas",
+                     Some(&Envelope::new("dgemm", 48).to_json().render()))
+        .unwrap();
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    assert_eq!(str_of(&parse(&resp.body), "backend"), Some("tuned"));
+    // unsatisfiable: nothing serves f32; the 400 names the missed
+    // capability for every considered descriptor
+    let body = r#"{"schema":"ftblas.request.v2","routine":"dgemm",
+                   "dim":48,"routing":{"require":["precision=f32"]}}"#;
+    let resp = fetch(&addr, "POST", "/v1/blas", Some(body)).unwrap();
+    assert_eq!(resp.status, 400, "body: {}", resp.body);
+    assert!(resp.body.contains("no candidate kernel"),
+            "body: {}", resp.body);
+    assert!(resp.body.contains("precision=f32"), "body: {}", resp.body);
+    // a pjrt pin on a native-only cluster passes the gateway preflight
+    // (the gateway's base selection does not know the router) but is
+    // denied at cluster admission — the NoCandidate arm of the wire
+    // mapping
+    let body = r#"{"schema":"ftblas.request.v2","routine":"dgemm",
+                   "dim":48,"routing":{"backend":"pjrt"}}"#;
+    let resp = fetch(&addr, "POST", "/v1/blas", Some(body)).unwrap();
+    assert_eq!(resp.status, 400, "body: {}", resp.body);
+    assert!(resp.body.contains("no_candidate"), "body: {}", resp.body);
     gw.shutdown();
     cluster.shutdown();
 }

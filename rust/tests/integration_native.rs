@@ -4,13 +4,24 @@
 
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
-use ftblas::coordinator::request::{BlasRequest, BlasResult};
-use ftblas::coordinator::router::execute_native;
+use ftblas::coordinator::plan::{Planner, SelectionPolicy};
+use ftblas::coordinator::request::{BlasRequest, BlasResponse, BlasResult};
+use ftblas::coordinator::router::execute_plan;
 use ftblas::ft::injector::{Fault, Injector, InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::check::{check, ensure};
 use ftblas::util::matrix::{allclose, Matrix};
 use ftblas::util::rng::Rng;
+
+/// Plan onto a pinned native variant and run the plan — every direct
+/// execution in this suite goes through the planned path.
+fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+              policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, fault)
+}
 
 fn results_match(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
     match (a, b) {
@@ -67,10 +78,10 @@ fn any_single_fault_is_transparent() {
             delta: g.rng.range(1.0, 1e8),
         };
         for req in reqs {
-            let want = execute_native(&req, Impl::Naive, &profile,
-                                      FtPolicy::None, None);
-            let got = execute_native(&req, Impl::Tuned, &profile,
-                                     FtPolicy::Hybrid, Some(fault));
+            let want = run_native(&req, Impl::Naive, &profile,
+                                  FtPolicy::None, None);
+            let got = run_native(&req, Impl::Tuned, &profile,
+                                 FtPolicy::Hybrid, Some(fault));
             ensure(got.ft.errors_detected >= 1,
                    format!("{}: undetected fault {fault:?}", req.routine()))?;
             ensure(results_match(&got.result, &want.result, 1e-6),
@@ -93,8 +104,8 @@ fn protected_runs_are_deterministic() {
     let req = BlasRequest::Dgemm {
         alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
     };
-    let r1 = execute_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
-    let r2 = execute_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
+    let r1 = run_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
+    let r2 = run_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid, None);
     assert_eq!(r1.result.as_matrix().unwrap().data,
                r2.result.as_matrix().unwrap().data);
 }
@@ -109,7 +120,7 @@ fn twenty_errors_per_routine_all_corrected() {
     let l = Matrix::random_lower_triangular(n, &mut rng);
     let b = Matrix::random(n, n, &mut rng);
     let req = BlasRequest::Dtrsm { a: l, b };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let want = run_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
 
     let cfg = InjectorConfig { count: 20, ..Default::default() };
     let mut inj = Injector::plan(&cfg, 20, 16, n);
@@ -117,8 +128,8 @@ fn twenty_errors_per_routine_all_corrected() {
     for step in 0..20 {
         let fault = inj.take(step);
         assert!(fault.is_some(), "plan must strike every run");
-        let got = execute_native(&req, Impl::Tuned, &profile,
-                                 FtPolicy::Hybrid, fault);
+        let got = run_native(&req, Impl::Tuned, &profile,
+                             FtPolicy::Hybrid, fault);
         detected += got.ft.errors_detected;
         assert!(results_match(&got.result, &want.result, 1e-6),
                 "run {step}: wrong answer");
@@ -167,10 +178,10 @@ fn variant_agreement_matrix() {
         BlasRequest::Dtrmv { a: l.clone(), x: rng.normal_vec(n) },
     ];
     for req in reqs {
-        let want = execute_native(&req, Impl::Naive, &profile,
-                                  FtPolicy::None, None);
+        let want = run_native(&req, Impl::Naive, &profile,
+                              FtPolicy::None, None);
         for v in [Impl::Blocked, Impl::Tuned] {
-            let got = execute_native(&req, v, &profile, FtPolicy::None, None);
+            let got = run_native(&req, v, &profile, FtPolicy::None, None);
             assert!(results_match(&got.result, &want.result, 1e-7),
                     "{} differs under {:?}", req.routine(), v);
         }
@@ -205,10 +216,10 @@ fn unfused_policy_corrects() {
     let req = BlasRequest::Dgemm {
         alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
     };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let want = run_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
     let fault = Fault { step: 0, i: 31, j: 77, delta: 4.2e5 };
-    let got = execute_native(&req, Impl::Tuned, &profile,
-                             FtPolicy::AbftUnfused, Some(fault));
+    let got = run_native(&req, Impl::Tuned, &profile,
+                         FtPolicy::AbftUnfused, Some(fault));
     assert!(got.ft.errors_detected >= 1);
     assert!(results_match(&got.result, &want.result, 1e-6));
 }

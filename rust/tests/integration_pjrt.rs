@@ -11,12 +11,33 @@ use ftblas::blas::Impl;
 use ftblas::config::Profile;
 use ftblas::coordinator::executor::PjrtExecutor;
 use ftblas::coordinator::pjrt_backend::PjrtBackend;
-use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
-use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::coordinator::plan::{Planner, SelectionPolicy};
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResponse,
+                                   BlasResult};
+use ftblas::coordinator::router::{execute_plan, Router};
 use ftblas::ft::injector::Fault;
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::matrix::{allclose, Matrix};
 use ftblas::util::rng::Rng;
+
+/// Plan onto the pinned naive native ladder and run the plan — the
+/// oracle the artifact results are compared against.
+fn run_native(req: &BlasRequest, profile: &Profile) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(Impl::Naive),
+              FtPolicy::None)
+        .expect("the naive ladder serves every routine");
+    execute_plan(req, &plan, profile, None)
+}
+
+/// Plan under the router's PJRT-preferring selection and run the plan
+/// (the artifact path when the loaded set serves the shape).
+fn run_planned(router: &Router, req: &BlasRequest, policy: FtPolicy,
+               fault: Option<Fault>) -> BlasResponse {
+    let plan = router.plan(req, policy).expect("router always plans");
+    router.execute_planned(&plan, req, fault)
+        .expect("planned execution succeeds")
+}
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Profile::skylake_sim().artifact_path();
@@ -89,11 +110,11 @@ fn artifacts_match_native_oracle() {
         BlasRequest::Dtrsm { a: l.clone(), b: b.clone() },
     ];
     for req in reqs {
-        assert_eq!(router.resolve(&req, FtPolicy::None), Backend::Pjrt,
-                   "{} should route to PJRT", req.routine());
-        let want = execute_native(&req, Impl::Naive, &profile,
-                                  FtPolicy::None, None);
-        let got = router.execute(&req, FtPolicy::None, None).unwrap();
+        let plan = router.plan(&req, FtPolicy::None).unwrap();
+        assert_eq!(plan.kernel.backend, Backend::Pjrt,
+                   "{} should plan onto the PJRT peer", req.routine());
+        let want = run_native(&req, &profile);
+        let got = router.execute_planned(&plan, &req, None).unwrap();
         assert!(results_match(&got.result, &want.result, 1e-6),
                 "{} artifact diverges from the oracle", req.routine());
     }
@@ -113,10 +134,10 @@ fn fused_abft_corrects_online() {
     let req = BlasRequest::Dgemm {
         alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
     };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let want = run_native(&req, &profile);
     for step in 0..4 {
         let fault = Fault { step, i: 11 + step, j: 200 - step, delta: 3e5 };
-        let got = router.execute(&req, FtPolicy::Hybrid, Some(fault)).unwrap();
+        let got = run_planned(&router, &req, FtPolicy::Hybrid, Some(fault));
         assert_eq!(got.ft.errors_detected, 1, "step {step}");
         assert_eq!(got.ft.errors_corrected, 1, "step {step}");
         assert!(results_match(&got.result, &want.result, 1e-6),
@@ -134,9 +155,9 @@ fn dmr_artifacts_report_and_correct() {
     let mut rng = Rng::new(0x79);
     let x = rng.normal_vec(65536);
     let req = BlasRequest::Dscal { alpha: 3.5, x: x.clone() };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let want = run_native(&req, &profile);
     let fault = Fault { step: 0, i: 12345, j: 0, delta: 7e6 };
-    let got = router.execute(&req, FtPolicy::Hybrid, Some(fault)).unwrap();
+    let got = run_planned(&router, &req, FtPolicy::Hybrid, Some(fault));
     assert_eq!(got.ft.errors_detected, 1);
     assert!(results_match(&got.result, &want.result, 1e-9));
 }
@@ -155,9 +176,9 @@ fn unfused_policy_on_pjrt() {
     let req = BlasRequest::Dgemm {
         alpha: 1.0, a, b, beta: 0.0, c: Matrix::zeros(n, n),
     };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
+    let want = run_native(&req, &profile);
     let fault = Fault { step: 0, i: 100, j: 50, delta: 9e4 };
-    let got = router.execute(&req, FtPolicy::AbftUnfused, Some(fault)).unwrap();
+    let got = run_planned(&router, &req, FtPolicy::AbftUnfused, Some(fault));
     assert_eq!(got.ft.errors_detected, 1);
     assert!(results_match(&got.result, &want.result, 1e-6));
 }

@@ -12,10 +12,11 @@ use ftblas::blas::Impl;
 use ftblas::config::Profile;
 use ftblas::coordinator::batcher::Batcher;
 use ftblas::coordinator::cluster::{route, route_key, route_salted, salt_for};
-use ftblas::coordinator::plan::PlanCache;
+use ftblas::coordinator::plan::{PlanCache, Planner, SelectionPolicy};
 use ftblas::coordinator::registry::KernelRegistry;
-use ftblas::coordinator::request::{Backend, BlasRequest, Level};
-use ftblas::coordinator::router::{execute_native, Router};
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResponse,
+                                   Level};
+use ftblas::coordinator::router::{execute_plan, Router};
 use ftblas::coordinator::server::Server;
 use ftblas::ft::injector::{Injector, InjectorConfig};
 use ftblas::ft::policy::FtPolicy;
@@ -24,6 +25,16 @@ use ftblas::util::matrix::Matrix;
 use ftblas::util::rng::Rng;
 
 const ROUTINES: [&str; 5] = ["dscal", "ddot", "dgemv", "dgemm", "dtrsm"];
+
+/// Plan onto a pinned native variant and run the plan — the direct
+/// (serverless) executions these properties drive.
+fn run_native(req: &BlasRequest, variant: ftblas::blas::Impl,
+              profile: &Profile, policy: FtPolicy) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, None)
+}
 
 /// Random (routine, shape) key stream for the batcher.
 fn rand_key(rng: &mut Rng) -> (&'static str, usize) {
@@ -167,9 +178,12 @@ fn router_fallback_is_total() {
         ];
         for req in reqs {
             for policy in [FtPolicy::None, FtPolicy::Hybrid] {
-                ensure(router.resolve(&req, policy) == Backend::NativeTuned,
+                let plan = router.plan(&req, policy).ok_or_else(|| {
+                    "pjrt-less router must still plan".to_string()
+                })?;
+                ensure(plan.kernel.backend == Backend::NativeTuned,
                        "pjrt-less router must fall back to tuned")?;
-                let resp = router.execute(&req, policy, None)
+                let resp = router.execute_planned(&plan, &req, None)
                     .map_err(|e| e.to_string())?;
                 ensure(resp.backend == Backend::NativeTuned,
                        "executed on unexpected backend")?;
@@ -199,10 +213,10 @@ fn protection_is_transparent_when_clean() {
                                  b: Matrix::random(n, n, &mut g.rng) },
         ];
         for req in reqs {
-            let plain = execute_native(&req, Impl::Tuned, &profile,
-                                       FtPolicy::None, None);
-            let prot = execute_native(&req, Impl::Tuned, &profile,
-                                      FtPolicy::Hybrid, None);
+            let plain = run_native(&req, Impl::Tuned, &profile,
+                                   FtPolicy::None);
+            let prot = run_native(&req, Impl::Tuned, &profile,
+                                  FtPolicy::Hybrid);
             ensure(prot.ft.errors_detected == 0,
                    format!("{}: false positive", req.routine()))?;
             let close = match (&plain.result, &prot.result) {
@@ -329,10 +343,10 @@ fn shard_routing_is_deterministic() {
             // a fresh cache per resolution: memoization cannot be what
             // makes routing stable
             let cache = PlanCache::new(profile.clone());
-            let plan = cache.resolve(routine, dim, policy,
-                                     Backend::NativeTuned);
-            ensure(plan.is_some(), "native requests always plan")?;
-            Ok(route_key(plan.as_ref(), routine, dim))
+            let sel = SelectionPolicy::for_backend(Backend::NativeTuned);
+            let plan = cache.resolve(routine, dim, policy, &sel)
+                .ok_or_else(|| "native requests always plan".to_string())?;
+            Ok(route_key(&plan))
         };
         let (k1, k2) = (key(0)?, key(1)?);
         ensure(k1 == k2, format!("{routine}/{dim}: routing key unstable"))?;
@@ -446,20 +460,28 @@ fn fresh_generation_salts_change_the_slice() {
             "regrowing slot 1 must eventually claim a different slice");
 }
 
-/// Unplanned (direct) keys are shape-sensitive but still deterministic.
+/// Route keys follow the *plan*, not the request shape: the same
+/// `(routine, dim, policy)` under two selection policies that resolve
+/// to different kernels routes under different keys, and each key is
+/// exactly the planned kernel's id (there is no unplanned key space).
 #[test]
-fn direct_route_keys_are_stable_and_shape_keyed() {
-    check("cluster-routing-direct", 30, |g| {
-        let dim = 1 + g.rng.below(4096);
-        let a = route_key(None, "dgemm", dim);
-        let b = route_key(None, "dgemm", dim);
-        ensure(a == b, "direct key unstable")?;
-        ensure(a >> 63 == 1, "direct keys carry the namespace tag")?;
-        ensure(route_key(None, "dgemm", dim) != route_key(None, "dsymm", dim),
-               "routine must enter the key")?;
-        ensure(route_key(None, "dgemm", dim)
-                   != route_key(None, "dgemm", dim + 1),
-               "shape must enter the key")
+fn route_keys_are_selection_sensitive_and_id_valued() {
+    check("cluster-routing-selection", 20, |g| {
+        let profile = Profile::default();
+        let dim = [32usize, 48, 64][g.rng.below(3)];
+        let planner = Planner::new(&profile);
+        let mut keys = Vec::new();
+        for be in [Backend::NativeNaive, Backend::NativeTuned] {
+            let sel = SelectionPolicy::for_backend(be);
+            let plan = planner
+                .plan_dims("dgemm", dim, &sel, FtPolicy::None)
+                .ok_or_else(|| "native dgemm always plans".to_string())?;
+            ensure(route_key(&plan) == plan.kernel_id.0 as u64,
+                   "route key must be the planned kernel id")?;
+            keys.push(route_key(&plan));
+        }
+        ensure(keys[0] != keys[1],
+               "distinct planned kernels must route under distinct keys")
     });
 }
 

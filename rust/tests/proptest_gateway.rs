@@ -1,7 +1,8 @@
 //! Property tests on the serving plane's wire layer: the
-//! `ftblas.request.v1` envelope codec round-trips every representable
-//! request (including hostile idempotency keys that stress the JSON
-//! string escaper), and the HTTP/1.1 head parser is *total* — it never
+//! `ftblas.request.v1`/`v2` envelope codec round-trips every
+//! representable request (including hostile idempotency keys that
+//! stress the JSON string escaper and random `routing` selection
+//! overlays), and the HTTP/1.1 head parser is *total* — it never
 //! panics on arbitrary byte prefixes, truncations, or mutations, and
 //! oversized input hits the size caps with the right status code
 //! instead of buying unbounded buffering.
@@ -14,6 +15,8 @@ use ftblas::coordinator::gateway::{Envelope, ROUTINES};
 use ftblas::coordinator::http::{
     parse_head, ParseError, MAX_BODY_BYTES, MAX_HEADERS, MAX_LINE_BYTES,
 };
+use ftblas::coordinator::plan::{CapRequirement, SelectionPolicy};
+use ftblas::coordinator::request::Backend;
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::check::{check, ensure, Gen};
 use ftblas::util::json::Json;
@@ -61,6 +64,37 @@ fn random_key(rng: &mut Rng) -> String {
         .collect()
 }
 
+/// A random v2 `routing` overlay: ordered, duplicate-free backend
+/// subsets (the wire codec preserves order and the parser rejects
+/// nothing valid, so round-tripping wants canonical lists) plus a
+/// subset of a distinct requirement pool.
+fn random_routing(rng: &mut Rng) -> SelectionPolicy {
+    let mut sel = SelectionPolicy::default();
+    for be in Backend::ALL {
+        if rng.below(4) == 0 {
+            sel.prefer.push(be);
+        }
+        if rng.below(5) == 0 {
+            sel.allow.push(be);
+        }
+        if rng.below(5) == 0 {
+            sel.deny.push(be);
+        }
+    }
+    let pool = [
+        CapRequirement::Precision("f64".into()),
+        CapRequirement::Threaded(false),
+        CapRequirement::Batched(true),
+        CapRequirement::Feature("avx2".into()),
+    ];
+    for r in pool {
+        if rng.below(4) == 0 {
+            sel.require.push(r);
+        }
+    }
+    sel
+}
+
 /// A random valid envelope spanning the full field space.
 fn random_envelope(g: &mut Gen) -> Envelope {
     let routine = ROUTINES[g.rng.below(ROUTINES.len())];
@@ -83,6 +117,9 @@ fn random_envelope(g: &mut Gen) -> Envelope {
     }
     if g.rng.below(2) == 1 {
         env.idempotency_key = Some(random_key(&mut g.rng));
+    }
+    if g.rng.below(3) == 0 {
+        env.routing = Some(random_routing(&mut g.rng));
     }
     env
 }

@@ -1,7 +1,8 @@
 //! Property tests on the kernel-registry/planner subsystem:
 //!
-//! - every registry entry (routine × variant × policy × threads ∈ {1,4})
-//!   matches the naive oracle on random requests;
+//! - every in-process registry entry (routine × variant × policy ×
+//!   threads ∈ {1,4}, GPU-sim tiers included; the PJRT peer's stub
+//!   descriptors excluded) matches the naive oracle on random requests;
 //! - the planner never selects a kernel whose capability list excludes
 //!   the requested policy, and only grants threads to threaded kernels;
 //! - the MT fused-ABFT DGEMM is reachable from the serving path when the
@@ -13,15 +14,26 @@
 
 use ftblas::blas::Impl;
 use ftblas::config::Profile;
-use ftblas::coordinator::plan::{PlanCache, Planner};
+use ftblas::coordinator::plan::{PlanCache, Planner, SelectionPolicy};
 use ftblas::coordinator::registry::{ExecCtx, KernelRegistry};
-use ftblas::coordinator::request::{Backend, BlasRequest, BlasResult};
-use ftblas::coordinator::router::execute_native;
+use ftblas::coordinator::request::{Backend, BlasRequest, BlasResponse,
+                                   BlasResult};
+use ftblas::coordinator::router::execute_plan;
 use ftblas::ft::injector::Fault;
 use ftblas::ft::policy::FtPolicy;
 use ftblas::util::check::{check, ensure};
 use ftblas::util::matrix::{allclose, Matrix};
 use ftblas::util::rng::Rng;
+
+/// Plan onto a pinned native variant and run the plan — the reference
+/// executions these properties compare against.
+fn run_native(req: &BlasRequest, variant: Impl, profile: &Profile,
+              policy: FtPolicy, fault: Option<Fault>) -> BlasResponse {
+    let plan = Planner::new(profile)
+        .plan(req, &SelectionPolicy::for_variant(variant), policy)
+        .expect("the native ladder serves every routine");
+    execute_plan(req, &plan, profile, fault)
+}
 
 fn results_match(a: &BlasResult, b: &BlasResult, tol: f64) -> bool {
     match (a, b) {
@@ -110,9 +122,14 @@ fn every_entry_matches_oracle_under_claimed_policies() {
         let n = 16 + 8 * g.rng.below(4);
         let profile = Profile::default();
         for entry in reg.entries() {
+            if entry.backend == Backend::Pjrt {
+                // peer-backend descriptors execute on the PJRT engine,
+                // not in-process — their execute hooks are stubs
+                continue;
+            }
             let req = request_for(entry.routine, n, &mut g.rng);
-            let want = execute_native(&req, Impl::Naive, &profile,
-                                      FtPolicy::None, None);
+            let want = run_native(&req, Impl::Naive, &profile,
+                                  FtPolicy::None, None);
             for &policy in entry.policies {
                 for threads in [1usize, 4] {
                     let ctx = ExecCtx {
@@ -151,7 +168,8 @@ fn planner_respects_capabilities() {
         let policy = FtPolicy::ALL[g.rng.below(4)];
         let profile = Profile::default().with_threads(threads);
         let planner = Planner::new(&profile);
-        let plan = planner.plan_dims(routine, n, variant, policy);
+        let sel = SelectionPolicy::for_variant(variant);
+        let plan = planner.plan_dims(routine, n, &sel, policy);
         let plan = plan.ok_or_else(|| {
             format!("planner came up empty for {routine}/{} under {}",
                     variant.name(), policy.name())
@@ -194,10 +212,12 @@ fn plan_cache_hits_equal_fresh_planner_resolutions() {
                 let policy = FtPolicy::ALL[g.rng.below(4)];
                 let backend = [Backend::NativeNaive, Backend::NativeBlocked,
                                Backend::NativeTuned][g.rng.below(3)];
-                let cached = cache.resolve(routine, dim, policy, backend);
+                let sel = SelectionPolicy::for_backend(backend);
+                let cached = cache.resolve(routine, dim, policy, &sel);
                 resolutions += 1;
-                let fresh = Planner::new(&profile).plan_dims(
-                    routine, dim, backend.variant().unwrap(), policy);
+                let fresh =
+                    Planner::new(&profile).plan_dims(routine, dim, &sel,
+                                                     policy);
                 match (cached, fresh) {
                     (Some(c), Some(f)) => {
                         ensure(c.kernel_id == f.kernel_id,
@@ -241,11 +261,10 @@ fn mt_fused_gemm_serves_threaded_profiles() {
         beta: 0.0,
         c: Matrix::zeros(n, n),
     };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None,
-                              None);
+    let want = run_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
     let fault = Fault { step: 0, i: n / 2, j: n / 3, delta: 6e4 };
-    let resp = execute_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid,
-                              Some(fault));
+    let resp = run_native(&req, Impl::Tuned, &profile, FtPolicy::Hybrid,
+                          Some(fault));
     assert_eq!(resp.kernel, "dgemm/abft-fused-mt",
                "threaded profile must route to the MT fused kernel");
     assert!(resp.ft.errors_detected >= 1, "injected fault undetected");
@@ -267,8 +286,7 @@ fn mt_fused_gemm_merges_band_reports() {
         beta: 0.0,
         c: Matrix::zeros(n, n),
     };
-    let want = execute_native(&req, Impl::Naive, &profile, FtPolicy::None,
-                              None);
+    let want = run_native(&req, Impl::Naive, &profile, FtPolicy::None, None);
     // one strike in each thread band's row range (bands are contiguous
     // MR-aligned row slabs of ~n/threads rows)
     let band = n / threads;

@@ -1,0 +1,290 @@
+//! Property tests on the capability-selection layer (the PR-10 API):
+//!
+//! - tightening a [`SelectionPolicy`] (adding a denial, a capability
+//!   requirement, or an allowlist) never turns an unplannable key
+//!   plannable, and whatever it selects satisfies every added
+//!   constraint — candidate filtering is monotone;
+//! - selection is deterministic: fresh planners and the plan cache
+//!   agree on every `(routine, dim, policy, selection)` key, including
+//!   keys with denials and requirements;
+//! - a failed selection accounts for every registered descriptor of
+//!   the routine, each with a concrete miss reason;
+//! - pin-compat regression: under the default `--variant` selections
+//!   the planner reproduces the pre-redesign three-rung ladder
+//!   bit-identically (same kernel, same thread grant) across
+//!   routines × dims × policies × variants × thread counts × profiles.
+//!
+//! Uses the repo's seeded check harness (`util::check`) — proptest is
+//! not vendored in this offline image; see DESIGN.md §9.
+
+use ftblas::blas::Impl;
+use ftblas::config::Profile;
+use ftblas::coordinator::plan::{CapRequirement, PlanCache, Planner,
+                                SelectionPolicy};
+use ftblas::coordinator::registry::KernelRegistry;
+use ftblas::coordinator::request::Backend;
+use ftblas::ft::policy::FtPolicy;
+use ftblas::util::check::{check, ensure};
+use ftblas::util::rng::Rng;
+
+/// A random selection policy: an ordered duplicate-free preference
+/// list plus (rarely) an allowlist, denials, and requirements drawn
+/// from the parseable `cap=value` vocabulary.
+fn random_selection(rng: &mut Rng) -> SelectionPolicy {
+    let mut sel = SelectionPolicy::default();
+    for _ in 0..rng.below(4) {
+        let be = Backend::ALL[rng.below(Backend::ALL.len())];
+        if !sel.prefer.contains(&be) {
+            sel.prefer.push(be);
+        }
+    }
+    if rng.below(4) == 0 {
+        for _ in 0..1 + rng.below(3) {
+            let be = Backend::ALL[rng.below(Backend::ALL.len())];
+            if !sel.allow.contains(&be) {
+                sel.allow.push(be);
+            }
+        }
+    }
+    if rng.below(3) == 0 {
+        sel = sel.with_denied(Backend::ALL[rng.below(Backend::ALL.len())]);
+    }
+    if rng.below(3) == 0 {
+        sel.require.push(random_requirement(rng));
+    }
+    sel
+}
+
+/// One requirement from the `--require` vocabulary, all satisfiable by
+/// at least some registered descriptor.
+fn random_requirement(rng: &mut Rng) -> CapRequirement {
+    let pool = [("precision", "f64"), ("scheme", "none"),
+                ("scheme", "abft-fused"), ("scheme", "dmr"),
+                ("threaded", "true"), ("threaded", "false"),
+                ("batched", "true"), ("batched", "false"),
+                ("feature", "avx2"), ("feature", "fma")];
+    let (k, v) = pool[rng.below(pool.len())];
+    CapRequirement::parse(k, v).expect("pool entries parse")
+}
+
+/// Tighten `sel` by one random move: an extra denial, an extra
+/// requirement, or a shrunk allowlist. Every move can only remove
+/// candidates, never add them.
+fn tighten(mut sel: SelectionPolicy, rng: &mut Rng) -> SelectionPolicy {
+    match rng.below(3) {
+        0 => sel.with_denied(Backend::ALL[rng.below(Backend::ALL.len())]),
+        1 => {
+            sel.require.push(random_requirement(rng));
+            sel
+        }
+        _ => {
+            let universe: Vec<Backend> = if sel.allow.is_empty() {
+                Backend::ALL.to_vec()
+            } else {
+                sel.allow.clone()
+            };
+            sel.allow = universe
+                .into_iter()
+                .filter(|_| rng.below(2) == 0)
+                .collect();
+            if sel.allow.is_empty() {
+                // an empty allowlist means "everything": keep one entry
+                // so the move stays a strict-or-equal tightening
+                sel.allow.push(Backend::ALL[rng.below(Backend::ALL.len())]);
+            }
+            sel
+        }
+    }
+}
+
+/// Tightening a selection never turns a failing key into a success,
+/// and whatever the tightened selection picks satisfies every one of
+/// its constraints.
+#[test]
+fn constraints_only_shrink_the_candidate_set() {
+    let reg = KernelRegistry::global();
+    check("selection-monotone", 80, |g| {
+        let routines = reg.routines();
+        let routine = routines[g.rng.below(routines.len())];
+        let dim = 4 + g.rng.below(192);
+        let policy = FtPolicy::ALL[g.rng.below(FtPolicy::ALL.len())];
+        let profile = Profile::default().with_threads(1 + g.rng.below(8));
+        let planner = Planner::new(&profile);
+        let base = random_selection(&mut g.rng);
+        let tight_sel = tighten(base.clone(), &mut g.rng);
+        let loose = planner.plan_dims(routine, dim, &base, policy);
+        let tight = planner.plan_dims(routine, dim, &tight_sel, policy);
+        let Some(t) = tight else { return Ok(()) };
+        ensure(loose.is_some(),
+               format!("{routine}/{dim}: tightening revived a dead key"))?;
+        let caps = t.kernel.capabilities();
+        for r in &tight_sel.require {
+            ensure(r.satisfied_by(&caps),
+                   format!("{} violates required {}", t.kernel.name,
+                           r.describe()))?;
+        }
+        ensure(!tight_sel.deny.contains(&t.kernel.backend),
+               format!("{} planned from a denied backend", t.kernel.name))?;
+        if !tight_sel.allow.is_empty() {
+            ensure(tight_sel.allow.contains(&t.kernel.backend),
+                   format!("{} planned from outside the allowlist",
+                           t.kernel.name))?;
+        }
+        Ok(())
+    });
+}
+
+/// Selection is a pure function of `(routine, dim, policy, selection,
+/// profile)`: fresh planners agree with each other and with the plan
+/// cache, on successes and on failures alike.
+#[test]
+fn selection_is_deterministic() {
+    let reg = KernelRegistry::global();
+    check("selection-deterministic", 80, |g| {
+        let routines = reg.routines();
+        let routine = routines[g.rng.below(routines.len())];
+        let dim = 4 + g.rng.below(192);
+        let policy = FtPolicy::ALL[g.rng.below(FtPolicy::ALL.len())];
+        let profile = Profile::default().with_threads(1 + g.rng.below(8));
+        let sel = random_selection(&mut g.rng);
+        let a = Planner::new(&profile).select_dims(routine, dim, &sel, policy);
+        let b = Planner::new(&profile).select_dims(routine, dim, &sel, policy);
+        match (&a, &b) {
+            (Ok(x), Ok(y)) => {
+                ensure(x.kernel_id == y.kernel_id,
+                       format!("{routine}/{dim}: {} vs {}", x.kernel.name,
+                               y.kernel.name))?;
+                ensure(x.threads == y.threads, "thread grant flapped")?;
+            }
+            (Err(x), Err(y)) => {
+                ensure(x.considered == y.considered,
+                       "diagnostic considered-count flapped")?;
+                ensure(x.misses.len() == y.misses.len(),
+                       "diagnostic miss-count flapped")?;
+            }
+            _ => return Err(format!("{routine}/{dim}: plannability flapped")),
+        }
+        let cache = PlanCache::new(profile.clone());
+        let cached = cache.resolve(routine, dim, policy, &sel);
+        ensure(cached.map(|p| (p.kernel_id, p.threads))
+                   == a.ok().map(|p| (p.kernel_id, p.threads)),
+               format!("{routine}/{dim}: cache disagrees with the planner"))
+    });
+}
+
+/// When nothing qualifies, the [`NoCandidate`] diagnostic names every
+/// registered descriptor of the routine with a concrete miss reason —
+/// the gateway's 400 mapping depends on this being exhaustive.
+#[test]
+fn failed_selection_accounts_for_every_descriptor() {
+    let reg = KernelRegistry::global();
+    check("no-candidate-exhaustive", 40, |g| {
+        let routines = reg.routines();
+        let routine = routines[g.rng.below(routines.len())];
+        let dim = 4 + g.rng.below(192);
+        let policy = FtPolicy::ALL[g.rng.below(FtPolicy::ALL.len())];
+        let profile = Profile::default().with_threads(1 + g.rng.below(8));
+        // no registered kernel advertises avx512: selection must fail
+        let mut sel = random_selection(&mut g.rng);
+        sel.require.push(CapRequirement::parse("feature", "avx512").unwrap());
+        let err = Planner::new(&profile)
+            .select_dims(routine, dim, &sel, policy)
+            .expect_err("an unsatisfiable requirement must not plan");
+        ensure(err.considered == reg.for_routine(routine).len(),
+               format!("{routine}: considered {} of {}", err.considered,
+                       reg.for_routine(routine).len()))?;
+        ensure(err.misses.len() == err.considered,
+               "every considered descriptor needs a miss entry")?;
+        for m in &err.misses {
+            ensure(!m.missing.is_empty(),
+                   format!("{}: miss entry without a reason", m.name))?;
+        }
+        let text = err.to_string();
+        ensure(text.contains(routine),
+               "diagnostic must name the routine")?;
+        ensure(text.contains("lacks required feature=avx512"),
+               "diagnostic must name the unsatisfiable requirement")
+    });
+}
+
+/// Pin-compat regression: the pre-redesign planner walked a three-rung
+/// ladder over the native registry — (1) a threaded kernel of the
+/// requested variant above its MR floor when the profile grants
+/// threads, (2) a serial kernel of the variant, (3) any serial kernel
+/// in registration order. Under the `--variant` selections the
+/// capability planner must reproduce that ladder bit-identically; when
+/// the ladder comes up empty, anything the new planner finds must come
+/// from a peer backend the old registry did not hold.
+#[test]
+fn default_profile_plans_match_the_legacy_ladder() {
+    fn legacy_ladder(routine: &str, dim: usize, variant: Impl,
+                     profile: &Profile, policy: FtPolicy)
+                     -> Option<(&'static str, usize)> {
+        let mr = profile.gemm.mr;
+        let threads = profile.threads.max(1);
+        let be = Backend::for_variant(variant);
+        let candidates: Vec<_> = KernelRegistry::global()
+            .for_routine(routine)
+            .into_iter()
+            .filter(|k| k.backend.is_native() && k.supports(policy)
+                        && k.serves_dim(dim))
+            .collect();
+        if threads > 1 {
+            if let Some(k) = candidates.iter().find(|k| {
+                k.threaded && k.backend == be && k.admits_dim(dim, mr)
+            }) {
+                return Some((k.name, threads));
+            }
+        }
+        if let Some(k) =
+            candidates.iter().find(|k| !k.threaded && k.backend == be)
+        {
+            return Some((k.name, 1));
+        }
+        candidates.iter().find(|k| !k.threaded).map(|k| (k.name, 1))
+    }
+
+    let reg = KernelRegistry::global();
+    let mut checked = 0u64;
+    for base in [Profile::skylake_sim(), Profile::cascade_sim()] {
+        for threads in [1usize, 4] {
+            let profile = base.clone().with_threads(threads);
+            let planner = Planner::new(&profile);
+            for routine in reg.routines() {
+                for dim in [4usize, 8, 24, 48, 64, 96, 160] {
+                    for policy in FtPolicy::ALL {
+                        for variant in Impl::ALL {
+                            let want = legacy_ladder(routine, dim, variant,
+                                                     &profile, policy);
+                            let sel = SelectionPolicy::for_variant(variant);
+                            let got = planner
+                                .plan_dims(routine, dim, &sel, policy)
+                                .map(|p| (p.kernel.name, p.threads,
+                                          p.kernel.backend));
+                            match (want, got) {
+                                (Some((name, t)), got) => {
+                                    let be = reg.find(name).unwrap().backend;
+                                    assert_eq!(
+                                        got, Some((name, t, be)),
+                                        "{routine}/{dim} {policy:?} \
+                                         {variant:?} t={threads}: ladder \
+                                         drifted");
+                                    checked += 1;
+                                }
+                                (None, Some((name, _, backend))) => {
+                                    assert!(!backend.is_native(),
+                                            "{routine}/{dim} {policy:?}: new \
+                                             native plan {name} where the \
+                                             legacy ladder had none");
+                                }
+                                (None, None) => {}
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked > 2_000,
+            "pin-compat sweep degenerated: only {checked} ladder matches");
+}
